@@ -1,0 +1,18 @@
+//! Characterize sparse gradient tensors (paper §2.2, Figs 1–2, Table 1):
+//! overlap ratios, densification, skewness — on all four model profiles.
+//!
+//!   cargo run --release --example characterize
+
+use zen::figures;
+
+fn main() {
+    for t in [
+        figures::table1(),
+        figures::fig1a(),
+        figures::fig1b(),
+        figures::fig2a(),
+        figures::fig2b(),
+    ] {
+        println!("{}", t.to_markdown());
+    }
+}

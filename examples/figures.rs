@@ -1,0 +1,117 @@
+//! Regenerate every paper table and figure.
+//!
+//! Usage:
+//!   cargo run --release --example figures -- all
+//!   cargo run --release --example figures -- fig7 fig13 table1 ...
+//!   cargo run --release --example figures -- fig14      # needs artifacts
+//!
+//! Each exhibit prints as markdown and is saved to reports/<slug>.csv.
+
+use zen::cluster::LinkKind;
+use zen::figures;
+use zen::util::table::Table;
+
+fn reports_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("reports")
+}
+
+fn emit(t: Table) {
+    println!("{}", t.to_markdown());
+    match t.save_csv(&reports_dir()) {
+        Ok(p) => println!("(saved {})\n", p.display()),
+        Err(e) => eprintln!("(csv save failed: {e})"),
+    }
+}
+
+/// Fig 14 — accuracy preservation: AllReduce vs Zen vs lossy strawman.
+/// Needs `make artifacts` (runs the real trainer on the tiny shape).
+fn fig14() -> anyhow::Result<Table> {
+    use zen::coordinator::lm::{LmConfig, LmTrainer};
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut t = Table::new(
+        "Fig 14 — accuracy with lossless vs lossy synchronization",
+        &["scheme", "step", "loss", "eval accuracy"],
+    );
+    // strawman:1.2 ≈ heavy loss, strawman:16 ≈ mild loss (slot multiples
+    // of expected nnz; see DESIGN.md for the mapping to the paper's
+    // 2|G| / 8|G| memory sizes).
+    for scheme in ["allreduce", "zen", "strawman:1.2", "strawman:16"] {
+        let mut cfg = LmConfig::tiny();
+        cfg.seed = 0x14; // identical init across schemes
+        let mut trainer = LmTrainer::new(cfg, 4, scheme, LinkKind::Tcp25, &artifacts)?;
+        let log = trainer.run(120, 15, false)?;
+        for (step, acc) in &log.accuracies {
+            t.row(vec![
+                scheme.into(),
+                step.to_string(),
+                format!("{:.4}", log.losses[*step]),
+                format!("{acc:.3}"),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let want = |name: &str| args.iter().any(|a| a == name || a == "all");
+    if args.is_empty() {
+        eprintln!(
+            "usage: figures -- all | table1 table2 fig1 fig2 fig7 fig8 \
+             fig11 fig12 fig13 fig14 fig15 fig16 fig17 fig18"
+        );
+        return Ok(());
+    }
+
+    if want("table1") {
+        emit(figures::table1());
+    }
+    if want("table2") {
+        emit(figures::table2());
+    }
+    if want("fig1") {
+        emit(figures::fig1a());
+        emit(figures::fig1b());
+    }
+    if want("fig2") {
+        emit(figures::fig2a());
+        emit(figures::fig2b());
+    }
+    if want("fig7") {
+        emit(figures::fig7());
+    }
+    if want("fig8") {
+        emit(figures::fig8());
+    }
+    if want("fig11") {
+        emit(figures::fig11_12(
+            LinkKind::Tcp25,
+            "Fig 11 — training throughput, 25Gbps TCP",
+        ));
+    }
+    if want("fig12") {
+        emit(figures::fig11_12(
+            LinkKind::Rdma100,
+            "Fig 12 — training throughput, 100Gbps RDMA",
+        ));
+    }
+    if want("fig13") {
+        emit(figures::fig13());
+    }
+    if want("fig14") {
+        emit(fig14()?);
+    }
+    if want("fig15") {
+        emit(figures::fig15());
+    }
+    if want("fig16") {
+        emit(figures::fig16());
+    }
+    if want("fig17") {
+        emit(figures::fig17());
+    }
+    if want("fig18") {
+        emit(figures::fig18());
+    }
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Perf probe: break one Zen synchronization of a 100M-model-shaped
+//! gradient into phases and time each — drives the §Perf iteration log.
+//!
+//!   cargo run --release --example perf_probe
+
+use zen::hashing::{HashBitmapCodec, HierarchicalHasher};
+use zen::tensor::CooTensor;
+use zen::util::{Pcg64, Stopwatch};
+
+fn main() {
+    // Shape of one worker's embedding gradient in the paper_100m run:
+    // ~2.4k distinct rows × 512 dim ≈ 1.2M nnz over 100.7M params.
+    let dense_len = 100_663_296usize;
+    let dim = 512usize;
+    let rows = 2_400usize;
+    let workers = 8usize;
+    let n = workers;
+
+    let mut rng = Pcg64::seeded(1);
+    let make_grad = |rng: &mut Pcg64| -> CooTensor {
+        let mut row_ids = rng.sample_distinct(dense_len / dim, rows);
+        row_ids.sort_unstable();
+        let mut idx = Vec::with_capacity(rows * dim);
+        let mut val = Vec::with_capacity(rows * dim);
+        for r in row_ids {
+            for c in 0..dim {
+                idx.push((r * dim + c) as u32);
+                val.push(0.5);
+            }
+        }
+        CooTensor::from_sorted(dense_len, idx, val)
+    };
+    let sw = Stopwatch::start();
+    let inputs: Vec<CooTensor> = (0..workers).map(|_| make_grad(&mut rng)).collect();
+    println!("gen inputs        {:>8.1} ms  (nnz/worker {})", sw.elapsed() * 1e3, inputs[0].nnz());
+
+    let hasher = HierarchicalHasher::with_defaults(7, n, inputs[0].nnz());
+    let sw = Stopwatch::start();
+    let parts: Vec<_> = inputs.iter().map(|t| hasher.partition(t)).collect();
+    let hash_ms = sw.elapsed() * 1e3;
+    println!(
+        "alg1 hash x{workers}       {:>8.1} ms  ({:.1} M idx/s)",
+        hash_ms,
+        (workers * inputs[0].nnz()) as f64 / hash_ms * 1e-3
+    );
+
+    // server-side aggregation
+    let sw = Stopwatch::start();
+    let mut shards: Vec<Vec<CooTensor>> = vec![Vec::new(); n];
+    for out in parts {
+        for (p, part) in out.parts.into_iter().enumerate() {
+            shards[p].push(part);
+        }
+    }
+    let aggregated: Vec<CooTensor> = shards.iter().map(|s| CooTensor::merge_all(s)).collect();
+    println!("server merge      {:>8.1} ms", sw.elapsed() * 1e3);
+
+    // domains (one-time, amortized across the run)
+    let sw = Stopwatch::start();
+    let domains = hasher.partition_domains(dense_len);
+    println!("domains (1-time)  {:>8.1} ms", sw.elapsed() * 1e3);
+
+    // hash-bitmap pull encode
+    let sw = Stopwatch::start();
+    let payloads: Vec<_> = aggregated
+        .iter()
+        .enumerate()
+        .map(|(p, t)| HashBitmapCodec::new(&domains[p]).encode(t))
+        .collect();
+    println!("hb encode x{n}      {:>8.1} ms", sw.elapsed() * 1e3);
+
+    let sw = Stopwatch::start();
+    let decoded: Vec<CooTensor> = payloads
+        .iter()
+        .enumerate()
+        .map(|(p, pl)| HashBitmapCodec::new(&domains[p]).decode(pl, dense_len))
+        .collect();
+    println!("hb decode x{n}      {:>8.1} ms", sw.elapsed() * 1e3);
+
+    let sw = Stopwatch::start();
+    let full = CooTensor::merge_all(&decoded);
+    println!("worker merge      {:>8.1} ms  (agg nnz {})", sw.elapsed() * 1e3, full.nnz());
+}

@@ -1,0 +1,18 @@
+//! Scheme design-space comparison (paper §2.3, Table 2 + Fig 7):
+//! classify every scheme by the four dimensions and reproduce the
+//! normalized communication-time sweep on the NMT workload.
+//!
+//!   cargo run --release --example scheme_compare
+
+use zen::figures;
+
+fn main() {
+    println!("{}", figures::table2().to_markdown());
+    println!("{}", figures::fig7().to_markdown());
+    println!(
+        "Reading the sweep: AGsparse degrades linearly and crosses Dense; \
+         Sparse PS suffers the skewness ratio; OmniReduce's advantage fades \
+         as aggregation densifies its blocks; Zen (Balanced Parallelism) \
+         stays below Dense even at 128 machines — Theorem 1.2's regime."
+    );
+}

@@ -1,0 +1,115 @@
+"""AOT export: lower the L2/L1 graphs to HLO **text** artifacts.
+
+HLO text (not `.serialize()`d protos) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids that the rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Exports (under artifacts/):
+  train_step_b{B}_k{K}_d{D}_h{H}.hlo.txt   — one per model shape
+  murmur_s{S}_n{N}.hlo.txt                 — the L1 hash kernel alone
+  MANIFEST.txt                             — shapes + input orders
+
+Run via `make artifacts` (no-op when inputs are unchanged). Python never
+runs on the training path: the rust binary loads these files.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.hash import murmur_family
+from .model import train_step
+
+#: (batch, negatives, dim, hidden) shapes to export. `tiny` drives tests
+#: and CI; `paper_100m` drives the end-to-end 100M-parameter run.
+SHAPES = {
+    "tiny": (64, 4, 32, 64),
+    "paper_100m": (256, 8, 512, 512),
+}
+
+#: Hash-kernel export: (num_seeds, num_indices).
+HASH_EXPORTS = [(4, 65_536)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_train_step(out_dir: str, name: str, shape) -> str:
+    b, k, d, h = shape
+    f32 = lambda *dims: jax.ShapeDtypeStruct(dims, jnp.float32)  # noqa: E731
+    lowered = jax.jit(train_step).lower(
+        f32(b, d),  # center
+        f32(b, d),  # context
+        f32(b, k, d),  # neg
+        f32(d, h),  # w1
+        f32(h),  # b1
+        f32(h, d),  # w2
+        f32(d),  # b2
+    )
+    text = to_hlo_text(lowered)
+    fname = f"train_step_b{b}_k{k}_d{d}_h{h}.hlo.txt"
+    path = os.path.join(out_dir, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  [{name}] {fname}: {len(text)} chars")
+    return fname
+
+
+def export_murmur(out_dir: str, n_seeds: int, n_idx: int) -> str:
+    u32 = lambda *dims: jax.ShapeDtypeStruct(dims, jnp.uint32)  # noqa: E731
+    lowered = jax.jit(lambda idx, seeds: (murmur_family(idx, seeds),)).lower(
+        u32(n_idx), u32(n_seeds)
+    )
+    text = to_hlo_text(lowered)
+    fname = f"murmur_s{n_seeds}_n{n_idx}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    print(f"  [hash] {fname}: {len(text)} chars")
+    return fname
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--shapes",
+        default="all",
+        help="comma-separated shape names (tiny,paper_100m) or 'all'",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = list(SHAPES) if args.shapes == "all" else args.shapes.split(",")
+    manifest = [
+        "# zen-sync AOT artifacts",
+        "# train_step inputs: center(B,D) context(B,D) neg(B,K,D) "
+        "w1(D,H) b1(H) w2(H,D) b2(D)",
+        "# train_step outputs: loss, g_center, g_context, g_neg, "
+        "g_w1, g_b1, g_w2, g_b2",
+    ]
+    for name in names:
+        shape = SHAPES[name]
+        fname = export_train_step(args.out, name, shape)
+        manifest.append(f"{name}: {fname} shape={shape}")
+    for s, n in HASH_EXPORTS:
+        fname = export_murmur(args.out, s, n)
+        manifest.append(f"murmur: {fname} seeds={s} n={n}")
+    with open(os.path.join(args.out, "MANIFEST.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {args.out}/MANIFEST.txt")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,169 @@
+"""L1 Pallas kernel: the hashing hot-spot of Algorithm 1.
+
+The paper implements per-index MurmurHash + collision probing as a CUDA
+kernel (one thread per index, atomic writes). §Hardware-Adaptation
+(DESIGN.md): on TPU there are no per-element atomics, so we split the
+algorithm into
+
+  1. `murmur_family` — a **Pallas kernel** computing all k+1 hash values
+     for a block of indices, fully vectorized on the VPU. BlockSpec
+     tiles the index vector so each tile (block × (k+1) u32 lanes) fits
+     VMEM.
+  2. `hierarchical_partition` — k rounds of deterministic **scatter-min**
+     in jnp around the kernel: round i writes `idx` into
+     `mem[p, h_i(idx)]` with min-combining; an index that reads back its
+     own value won; losers proceed to the next round, and round-k losers
+     are compacted via cumsum into the serial region. Deterministic,
+     parallel, lossless — the same guarantees as the CUDA atomics.
+
+Pallas runs with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); the kernel structure (BlockSpec tiling, vector ops only,
+no gather/scatter inside the kernel) is what would compile for real TPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# numpy scalars (not jnp arrays: pallas kernels may not capture traced
+# constants; np.uint32 combines with uint32 arrays without promotion).
+_C1 = np.uint32(0xCC9E2D51)
+_C2 = np.uint32(0x1B873593)
+_M5 = np.uint32(5)
+_MF = np.uint32(0xE6546B64)
+_F1 = np.uint32(0x85EBCA6B)
+_F2 = np.uint32(0xC2B2AE35)
+
+#: Index block per kernel invocation. 16K u32 indices × (k+1) hash rows
+#: ≈ 16K·4B·(1+k+1) ≤ 400 KB VMEM at k = 4 — comfortably inside a
+#: TensorCore's ~16 MB VMEM with double-buffering headroom.
+BLOCK = 16_384
+
+
+def _rotl(x, r):
+    return ((x << r) | (x >> (32 - r))).astype(jnp.uint32)
+
+
+def _reduce(h, n):
+    """Lemire multiply-shift range reduction `(h * n) >> 32` — matches
+    rust `HashFamily::reduce` bit-for-bit (the perf pass replaced `%`).
+
+    Runs on host numpy: jax without x64 would silently truncate the
+    64-bit product, and this step is part of the (host-side) partition
+    orchestration, not the exported Pallas kernel.
+    """
+    h64 = np.asarray(h).astype(np.uint64)
+    return jnp.asarray(((h64 * np.uint64(n)) >> np.uint64(32)).astype(np.uint32))
+
+
+def _murmur_kernel(idx_ref, seeds_ref, out_ref):
+    """out[s, :] = murmur3_32(idx, seeds[s]) for every seed s.
+
+    Pure VPU element-wise integer ops over a (BLOCK,) tile; seeds is a
+    small replicated vector.
+    """
+    idx = idx_ref[...].astype(jnp.uint32)
+    seeds = seeds_ref[...].astype(jnp.uint32)
+    k = (idx * _C1).astype(jnp.uint32)
+    k = _rotl(k, 15)
+    k = (k * _C2).astype(jnp.uint32)
+    # broadcast over seeds: (S, BLOCK)
+    h = seeds[:, None] ^ k[None, :]
+    h = _rotl(h, 13)
+    h = (h * _M5 + _MF).astype(jnp.uint32)
+    h = h ^ np.uint32(4)
+    h = h ^ (h >> 16)
+    h = (h * _F1).astype(jnp.uint32)
+    h = h ^ (h >> 13)
+    h = (h * _F2).astype(jnp.uint32)
+    h = h ^ (h >> 16)
+    out_ref[...] = h.astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def murmur_family(indices, seeds, block=BLOCK):
+    """All seeds' murmur hashes of `indices`: shape (S, N).
+
+    Pads N up to a multiple of `block`; the pad lanes are discarded.
+    """
+    indices = jnp.asarray(indices, dtype=jnp.uint32)
+    seeds = jnp.asarray(seeds, dtype=jnp.uint32)
+    n = indices.shape[0]
+    s = seeds.shape[0]
+    padded = ((n + block - 1) // block) * block if n > 0 else block
+    idx_p = jnp.zeros((padded,), jnp.uint32).at[:n].set(indices)
+    grid = padded // block
+    out = pl.pallas_call(
+        _murmur_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((s,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((s, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((s, padded), jnp.uint32),
+        interpret=True,
+    )(idx_p, seeds)
+    return out[:, :n]
+
+
+def hierarchical_partition(indices, n_parts, n_rounds, r1, seeds):
+    """Algorithm 1 with scatter-min collision resolution (see module doc).
+
+    Args:
+      indices: uint32[N] distinct non-zero-gradient indices.
+      n_parts: number of partitions (servers) n.
+      n_rounds: probe rounds k.
+      r1: parallel memory slots per partition.
+      seeds: uint32[k+1] hash seeds (h0 first).
+
+    Returns:
+      parts: int32[N] partition of every index (== h0 % n).
+      placed_memory: uint32[n_parts, r1] parallel memory (SENTINEL=empty).
+      serial: list of n_parts uint32 arrays — the round-k losers per
+        partition (the serial memory content).
+    """
+    sentinel = jnp.uint32(0xFFFFFFFF)
+    idx = jnp.asarray(indices, dtype=jnp.uint32)
+    n = idx.shape[0]
+    h = murmur_family(idx, seeds)  # (k+1, N)
+    parts = _reduce(h[0], n_parts).astype(jnp.int32)
+
+    mem = jnp.full((n_parts * r1,), sentinel, jnp.uint32)
+    alive = jnp.ones((n,), bool)
+    for rnd in range(1, n_rounds + 1):
+        slot = _reduce(h[rnd], r1).astype(jnp.int32)
+        addr = parts * r1 + slot
+        # Deterministic winner per slot: scatter-min of the index value
+        # into a per-round scratch, adopted only by still-empty slots
+        # (occupied slots from earlier rounds must never be overwritten).
+        cand = jnp.where(alive, idx, sentinel)
+        scratch = jnp.full_like(mem, sentinel).at[addr].min(cand)
+        mem = jnp.where(mem == sentinel, scratch, mem)
+        won = alive & (mem[addr] == idx)
+        alive = alive & ~won
+    serial_mask = np.asarray(alive)
+    parts_np = np.asarray(parts)
+    idx_np = np.asarray(idx)
+    serial = [
+        np.sort(idx_np[serial_mask & (parts_np == p)]).astype(np.uint32)
+        for p in range(n_parts)
+    ]
+    return parts, mem.reshape(n_parts, r1), serial
+
+
+def extract_partitions(mem, serial, n_parts):
+    """Extraction phase (Alg 1 lines 19–23): collect each partition's
+    indices from parallel + serial memory, sorted."""
+    sentinel = np.uint32(0xFFFFFFFF)
+    mem = np.asarray(mem)
+    out = []
+    for p in range(n_parts):
+        row = mem[p]
+        occupied = row[row != sentinel]
+        merged = np.concatenate([occupied, serial[p]])
+        out.append(np.sort(merged).astype(np.uint32))
+    return out

@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: tiled matmul with a custom VJP.
+
+The MLP head of the L2 model runs its three matmul instances (forward,
+dX, dW) through this kernel so the whole train step lowers with the
+Pallas path inside. Tiling: grid over M-blocks with full K and N per
+tile — MXU-shaped (the K×N operand stays resident in VMEM across the M
+sweep; for the export shapes `128×512×4B ≈ 1 MB` per operand tile).
+
+`interpret=True` everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls; on a real TPU the same BlockSpecs compile unchanged.
+
+pallas_call has no automatic autodiff, so `matmul` carries a
+`jax.custom_vjp` whose backward pass reuses the same kernel
+(dx = g @ wᵀ, dw = xᵀ @ g).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: M-dimension tile.
+BLOCK_M = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (BLOCK_M, K) × (K, N) tile product on the MXU."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def _matmul_pallas(x, w, block_m=BLOCK_M):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = min(block_m, m)
+    padded_m = ((m + bm - 1) // bm) * bm
+    x_p = jnp.zeros((padded_m, k), x.dtype).at[:m].set(x)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(padded_m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded_m, n), jnp.float32),
+        interpret=True,
+    )(x_p, w)
+    return out[:m]
+
+
+@jax.custom_vjp
+def matmul(x, w):
+    """`x @ w` through the Pallas kernel, differentiable."""
+    return _matmul_pallas(x, w)
+
+
+def _matmul_fwd(x, w):
+    return _matmul_pallas(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    dx = _matmul_pallas(g, w.T)
+    dw = _matmul_pallas(x.T, g)
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

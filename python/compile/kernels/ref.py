@@ -1,0 +1,93 @@
+"""Pure-jnp / numpy oracles for the Pallas kernels.
+
+Everything in this file is the *correctness ground truth*: the Pallas
+kernels in hash.py / matmul.py must match these bit-for-bit (integers)
+or to float tolerance (matmuls). The murmur reference also matches the
+rust implementation in rust/src/hashing/murmur.rs — shared test vectors
+are asserted in python/tests/test_kernel.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+_C1 = np.uint32(0xCC9E2D51)
+_C2 = np.uint32(0x1B873593)
+_M5 = np.uint32(5)
+_MF = np.uint32(0xE6546B64)
+_F1 = np.uint32(0x85EBCA6B)
+_F2 = np.uint32(0xC2B2AE35)
+
+
+def _rotl32(x, r):
+    """Rotate-left for uint32 arrays."""
+    x = x.astype(jnp.uint32)
+    return ((x << r) | (x >> (32 - r))).astype(jnp.uint32)
+
+
+def murmur3_32_ref(keys, seed):
+    """MurmurHash3 x86_32 over a uint32 key array with a scalar seed.
+
+    Matches rust `zen::hashing::murmur::murmur3_32` exactly.
+    """
+    k = jnp.asarray(keys, dtype=jnp.uint32)
+    seed = jnp.uint32(seed)
+    k = (k * _C1).astype(jnp.uint32)
+    k = _rotl32(k, 15)
+    k = (k * _C2).astype(jnp.uint32)
+    h = seed ^ k
+    h = _rotl32(h, 13)
+    h = (h * _M5 + _MF).astype(jnp.uint32)
+    h = h ^ jnp.uint32(4)  # key length = 4 bytes
+    h = h ^ (h >> 16)
+    h = (h * _F1).astype(jnp.uint32)
+    h = h ^ (h >> 13)
+    h = (h * _F2).astype(jnp.uint32)
+    h = h ^ (h >> 16)
+    return h
+
+
+def murmur_family_ref(keys, seeds):
+    """Stack of murmur hashes, one row per seed: shape (len(seeds), N)."""
+    return jnp.stack([murmur3_32_ref(keys, s) for s in np.asarray(seeds)], axis=0)
+
+
+def matmul_ref(x, w):
+    """Plain jnp matmul oracle."""
+    return jnp.matmul(x, w)
+
+
+def hierarchical_partition_ref(indices, n_parts, n_rounds, r1, seeds):
+    """Numpy reference of Algorithm 1's partition assignment + probing.
+
+    Sequential and obviously correct: for each index in order, try the k
+    probe slots; on total collision append to the serial list.
+    Losslessness holds by construction. The Pallas/jnp version (hash.py)
+    replaces sequential probing with deterministic scatter-min rounds, so
+    slot *winners* can differ — tests compare the partition assignment
+    (depends only on h0, must match exactly) and losslessness.
+    """
+    idx = np.asarray(indices, dtype=np.uint32)
+    h = np.asarray(murmur_family_ref(idx, seeds))
+    # Lemire multiply-shift reduction, matching rust HashFamily::reduce.
+    parts = ((h[0].astype(np.uint64) * np.uint64(n_parts)) >> np.uint64(32)).astype(np.uint32)
+    out = [[] for _ in range(n_parts)]
+    mem = {}
+    serial = [[] for _ in range(n_parts)]
+    for i, v in enumerate(idx):
+        p = int(parts[i])
+        placed = False
+        for r in range(1, n_rounds + 1):
+            slot = int((int(h[r, i]) * r1) >> 32)
+            key = (p, slot)
+            if key not in mem:
+                mem[key] = v
+                placed = True
+                break
+        if not placed:
+            serial[p].append(int(v))
+    for (p, _), v in mem.items():
+        out[p].append(int(v))
+    for p in range(n_parts):
+        out[p].extend(serial[p])
+        out[p].sort()
+    return parts, out

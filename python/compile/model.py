@@ -1,0 +1,69 @@
+"""L2: the embedding-LM compute graph (build-time JAX, never at runtime).
+
+Skip-gram with negative sampling plus an MLP projection head — the
+Table-1 model class (huge sparse embedding table + small dense head).
+The rust coordinator gathers the embedding rows touched by the batch and
+passes *only those rows* here, so this graph is vocabulary-size-free and
+one exported artifact serves any table size; the embedding gradient that
+flows back out is exactly the sparse tensor the paper synchronizes.
+
+    hid    = tanh(center @ W1 + b1)          # Pallas matmul kernel
+    proj   = hid @ W2 + b2                   # Pallas matmul kernel
+    loss   = mean softplus(-proj·context) + mean Σ_k softplus(proj·neg_k)
+
+`train_step` returns (loss, grads...) — lowered once by aot.py.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul
+
+
+def forward_loss(center, context, neg, w1, b1, w2, b2):
+    """Scalar SGNS loss for a batch of gathered rows.
+
+    Shapes: center/context (B, D), neg (B, K, D),
+            w1 (D, H), b1 (H,), w2 (H, D), b2 (D,).
+    """
+    hid = jnp.tanh(matmul(center, w1) + b1)
+    proj = matmul(hid, w2) + b2
+    pos_logit = jnp.sum(proj * context, axis=-1)  # (B,)
+    neg_logit = jnp.einsum("bd,bkd->bk", proj, neg)  # (B, K)
+    softplus = lambda x: jnp.logaddexp(0.0, x)  # noqa: E731
+    loss_pos = jnp.mean(softplus(-pos_logit))
+    loss_neg = jnp.mean(jnp.sum(softplus(neg_logit), axis=-1))
+    return loss_pos + loss_neg
+
+
+def train_step(center, context, neg, w1, b1, w2, b2):
+    """Loss + gradients w.r.t. every input (rows and MLP parameters).
+
+    Returned tuple order is the rust-side contract
+    (rust/src/coordinator/lm.rs):
+      (loss, g_center, g_context, g_neg, g_w1, g_b1, g_w2, g_b2)
+    """
+    loss, grads = jax.value_and_grad(forward_loss, argnums=(0, 1, 2, 3, 4, 5, 6))(
+        center, context, neg, w1, b1, w2, b2
+    )
+    return (loss, *grads)
+
+
+def forward_loss_ref(center, context, neg, w1, b1, w2, b2):
+    """Oracle without the Pallas kernel (pure jnp) for pytest."""
+    hid = jnp.tanh(jnp.matmul(center, w1) + b1)
+    proj = jnp.matmul(hid, w2) + b2
+    pos_logit = jnp.sum(proj * context, axis=-1)
+    neg_logit = jnp.einsum("bd,bkd->bk", proj, neg)
+    softplus = lambda x: jnp.logaddexp(0.0, x)  # noqa: E731
+    return jnp.mean(softplus(-pos_logit)) + jnp.mean(
+        jnp.sum(softplus(neg_logit), axis=-1)
+    )
+
+
+def train_step_ref(center, context, neg, w1, b1, w2, b2):
+    """Oracle train step (pure jnp) for pytest."""
+    loss, grads = jax.value_and_grad(
+        forward_loss_ref, argnums=(0, 1, 2, 3, 4, 5, 6)
+    )(center, context, neg, w1, b1, w2, b2)
+    return (loss, *grads)

@@ -1,0 +1,61 @@
+"""Hypothesis-style randomized sweeps over the hierarchical partitioner:
+shapes, dtypes edge cases, and parity of the fastrange reduction with
+the rust implementation's shared vectors."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import hash as hash_kernel
+from compile.kernels import ref
+
+
+def test_reduce_matches_rust_semantics():
+    # (h * n) >> 32 with known values — same arithmetic as
+    # zen::hashing::murmur::HashFamily::reduce.
+    h = np.array([0, 1, 0x80000000, 0xFFFFFFFF], dtype=np.uint32)
+    out = np.asarray(hash_kernel._reduce(h, 16))
+    assert list(out) == [0, 0, 8, 15]
+    out7 = np.asarray(hash_kernel._reduce(h, 7))
+    assert list(out7) == [0, 0, 3, 6]
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_partition_sweep_lossless(seed):
+    rng = np.random.default_rng(1000 + seed)
+    n_idx = int(rng.integers(1, 5000))
+    universe = int(rng.integers(n_idx, 1_000_000))
+    indices = rng.choice(universe, size=n_idx, replace=False).astype(np.uint32)
+    n_parts = int(rng.integers(1, 17))
+    k = int(rng.integers(1, 5))
+    r1 = int(rng.integers(4, max(8, 3 * n_idx // max(n_parts, 1) + 8)))
+    seeds = rng.integers(0, 2**32, size=k + 1, dtype=np.uint32)
+    parts, mem, serial = hash_kernel.hierarchical_partition(
+        indices, n_parts, k, r1, seeds
+    )
+    got = hash_kernel.extract_partitions(mem, serial, n_parts)
+    np.testing.assert_array_equal(
+        np.sort(np.concatenate(got)), np.sort(indices)
+    )
+    # partition ids in range and consistent with the reference
+    ref_parts, _ = ref.hierarchical_partition_ref(indices, n_parts, k, r1, seeds)
+    np.testing.assert_array_equal(np.asarray(parts), ref_parts.astype(np.int32))
+
+
+def test_single_partition_degenerate():
+    indices = np.arange(100, dtype=np.uint32)
+    seeds = np.array([3, 5], dtype=np.uint32)
+    parts, mem, serial = hash_kernel.hierarchical_partition(indices, 1, 1, 256, seeds)
+    assert set(np.asarray(parts)) == {0}
+    got = hash_kernel.extract_partitions(mem, serial, 1)
+    np.testing.assert_array_equal(got[0], indices)
+
+
+def test_max_index_value():
+    # u32::MAX - 1 index must survive (sentinel is u32::MAX)
+    indices = np.array([0, 1, 2**32 - 2], dtype=np.uint32)
+    seeds = np.array([7, 9], dtype=np.uint32)
+    _, mem, serial = hash_kernel.hierarchical_partition(indices, 2, 1, 16, seeds)
+    got = hash_kernel.extract_partitions(mem, serial, 2)
+    np.testing.assert_array_equal(
+        np.sort(np.concatenate(got)), np.sort(indices)
+    )

@@ -1,0 +1,163 @@
+"""L1 kernel correctness: Pallas vs pure-jnp/numpy oracles.
+
+The murmur vectors here are shared with rust
+(rust/src/hashing/murmur.rs::murmur3_known_vectors) — both sides must
+agree bit-for-bit or worker/server partition assignments diverge.
+"""
+
+import numpy as np
+import pytest
+
+from compile.kernels import hash as hash_kernel
+from compile.kernels import matmul as matmul_kernel
+from compile.kernels import ref
+
+# ---------------------------------------------------------------------------
+# MurmurHash: shared vectors + oracle equivalence
+# ---------------------------------------------------------------------------
+
+RUST_VECTORS = [
+    # (key, seed, murmur3_32) — asserted identically in rust unit tests
+    (0, 0, 0x2362F9DE),
+    (1, 0, 0xFBF1402A),
+    (0x12345678, 0x9747B28C, 0x461A9426),
+    (42, 7, 0xDAEFE436),
+]
+
+
+def test_ref_matches_rust_vectors():
+    for key, seed, expect in RUST_VECTORS:
+        got = int(np.asarray(ref.murmur3_32_ref(np.array([key]), seed))[0])
+        assert got == expect, f"murmur({key}, {seed}) = {got:#x} != {expect:#x}"
+
+
+def test_pallas_matches_rust_vectors():
+    keys = np.array([k for k, _, _ in RUST_VECTORS], dtype=np.uint32)
+    for i, (_, seed, expect) in enumerate(RUST_VECTORS):
+        out = np.asarray(hash_kernel.murmur_family(keys, np.array([seed])))
+        assert int(out[0, i]) == expect
+
+
+@pytest.mark.parametrize("n", [1, 7, 255, 4096, 16_384, 16_385, 50_000])
+@pytest.mark.parametrize("n_seeds", [1, 4])
+def test_pallas_matches_ref_shapes(n, n_seeds):
+    """Hypothesis-style sweep over sizes incl. block boundaries."""
+    rng = np.random.default_rng(n * 31 + n_seeds)
+    keys = rng.integers(0, 2**32, size=n, dtype=np.uint32)
+    seeds = rng.integers(0, 2**32, size=n_seeds, dtype=np.uint32)
+    got = np.asarray(hash_kernel.murmur_family(keys, seeds))
+    want = np.asarray(ref.murmur_family_ref(keys, seeds))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pallas_small_block():
+    """Non-default block size exercises the grid path."""
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 2**32, size=1000, dtype=np.uint32)
+    seeds = np.array([1, 2], dtype=np.uint32)
+    got = np.asarray(hash_kernel.murmur_family(keys, seeds, block=128))
+    want = np.asarray(ref.murmur_family_ref(keys, seeds))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_empty_input():
+    out = np.asarray(hash_kernel.murmur_family(np.array([], np.uint32), np.array([5], np.uint32)))
+    assert out.shape == (1, 0)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical partition (scatter-min rounds)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_partition_lossless_and_consistent(seed):
+    rng = np.random.default_rng(seed)
+    n_idx = int(rng.integers(10, 3000))
+    universe = int(rng.integers(n_idx, 200_000))
+    indices = rng.choice(universe, size=n_idx, replace=False).astype(np.uint32)
+    n_parts = int(rng.integers(1, 12))
+    k = int(rng.integers(1, 5))
+    r1 = int(rng.integers(8, 4 * n_idx // max(n_parts, 1) + 16))
+    seeds = rng.integers(0, 2**32, size=k + 1, dtype=np.uint32)
+
+    parts, mem, serial = hash_kernel.hierarchical_partition(
+        indices, n_parts, k, r1, seeds
+    )
+    got = hash_kernel.extract_partitions(mem, serial, n_parts)
+
+    # 1. Lossless: union of partitions == input set.
+    all_got = np.sort(np.concatenate(got))
+    np.testing.assert_array_equal(all_got, np.sort(indices))
+
+    # 2. Partition assignment matches h0 exactly (== ref assignment).
+    ref_parts, ref_lists = ref.hierarchical_partition_ref(
+        indices, n_parts, k, r1, seeds
+    )
+    np.testing.assert_array_equal(np.asarray(parts), ref_parts.astype(np.int32))
+
+    # 3. Per-partition contents match the reference partitioner's
+    #    (contents depend only on h0; probing order does not move indices
+    #    across partitions).
+    for p in range(n_parts):
+        np.testing.assert_array_equal(got[p], np.array(ref_lists[p], np.uint32))
+
+
+def test_partition_balance():
+    """Theorem 2 in miniature: hashed partitions are near-uniform."""
+    rng = np.random.default_rng(7)
+    indices = rng.choice(1_000_000, size=80_000, replace=False).astype(np.uint32)
+    n_parts = 16
+    seeds = rng.integers(0, 2**32, size=4, dtype=np.uint32)
+    parts, _, _ = hash_kernel.hierarchical_partition(indices, n_parts, 3, 16_384, seeds)
+    counts = np.bincount(np.asarray(parts), minlength=n_parts)
+    imbalance = counts.max() * n_parts / counts.sum()
+    assert imbalance < 1.1, f"imbalance {imbalance}"
+
+
+def test_serial_region_takes_overflow():
+    """Tiny r1 forces serial writes, still lossless."""
+    indices = np.arange(500, dtype=np.uint32) * 7 + 3
+    seeds = np.array([11, 22, 33], dtype=np.uint32)
+    _, mem, serial = hash_kernel.hierarchical_partition(indices, 2, 2, 8, seeds)
+    got = hash_kernel.extract_partitions(mem, serial, 2)
+    assert sum(len(s) for s in serial) > 0, "expected serial-memory traffic"
+    np.testing.assert_array_equal(np.sort(np.concatenate(got)), np.sort(indices))
+
+
+# ---------------------------------------------------------------------------
+# Pallas matmul kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [(1, 1, 1), (4, 8, 16), (64, 32, 64), (128, 512, 512), (130, 33, 65), (256, 512, 512)],
+)
+def test_matmul_matches_ref(m, k, n):
+    rng = np.random.default_rng(m * 7 + k * 3 + n)
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    got = np.asarray(matmul_kernel.matmul(x, w))
+    want = np.asarray(ref.matmul_ref(x, w))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_matmul_grad_matches_jnp():
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal((32, 16)).astype(np.float32)
+    w = rng.standard_normal((16, 8)).astype(np.float32)
+
+    def f_pallas(x, w):
+        return jnp.sum(jnp.tanh(matmul_kernel.matmul(x, w)))
+
+    def f_ref(x, w):
+        return jnp.sum(jnp.tanh(jnp.matmul(x, w)))
+
+    gx_p, gw_p = jax.grad(f_pallas, argnums=(0, 1))(x, w)
+    gx_r, gw_r = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gx_p), np.asarray(gx_r), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gw_p), np.asarray(gw_r), rtol=1e-4, atol=1e-5)

@@ -1,0 +1,47 @@
+//! Bench: end-to-end — simulated training throughput per scheme
+//! (Fig 11's quantities) and, when artifacts exist, real steps/s of the
+//! AOT-compiled trainer.
+//!
+//!   cargo bench --bench bench_e2e
+
+use zen::cluster::LinkKind;
+use zen::coordinator::lm::{LmConfig, LmTrainer};
+use zen::coordinator::{SimConfig, SimDriver};
+use zen::util::timer::bench;
+use zen::workload::profiles;
+
+fn main() {
+    println!("== simulated throughput, DeepFM, 16 machines, 25Gbps ==");
+    for scheme in ["allreduce", "sparcml", "omnireduce", "sparseps", "zen"] {
+        let mut cfg = SimConfig::new(profiles::by_name("DeepFM").unwrap(), 16, scheme);
+        cfg.scale = 256;
+        cfg.iterations = 2;
+        let driver = SimDriver::new(cfg).unwrap();
+        let r = driver.run();
+        bench(
+            &format!("sim {:<11} {:>8.0} samples/s", r.scheme, r.throughput),
+            0,
+            3,
+            || {
+                std::hint::black_box(driver.run());
+            },
+        );
+    }
+
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("MANIFEST.txt").exists() {
+        println!("\n(skipping real-trainer bench: run `make artifacts`)");
+        return;
+    }
+    println!("\n== real trainer (tiny shape, 4 workers) steps/s ==");
+    for scheme in ["allreduce", "zen"] {
+        let mut t =
+            LmTrainer::new(LmConfig::tiny(), 4, scheme, LinkKind::Tcp25, &artifacts).unwrap();
+        // warm the executable
+        t.step().unwrap();
+        let mut s = bench(&format!("train step ({scheme})"), 1, 10, || {
+            std::hint::black_box(t.step().unwrap());
+        });
+        println!("  -> {:.1} steps/s", 1.0 / s.percentile(50.0));
+    }
+}

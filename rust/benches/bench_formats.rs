@@ -1,0 +1,66 @@
+//! Bench: sparse wire formats (Fig 17's quantities) — encode/decode
+//! throughput and wire size for COO, bitmap, tensor block, hash bitmap.
+//!
+//!   cargo bench --bench bench_formats
+
+use zen::hashing::{HashBitmapCodec, HierarchicalHasher};
+use zen::tensor::{Bitmap, BlockTensor, CooTensor, WireFormat};
+use zen::util::timer::bench;
+use zen::util::{human_bytes, Pcg64};
+
+fn main() {
+    let dense_len = 1 << 22; // 4M params
+    let hasher = HierarchicalHasher::with_defaults(3, 16, dense_len / 20);
+    let domains = hasher.partition_domains(dense_len);
+
+    for density_pct in [1.0f64, 10.0, 40.0] {
+        let nnz = (density_pct / 100.0 * dense_len as f64) as usize;
+        let mut rng = Pcg64::seeded(9);
+        let mut idx: Vec<u32> = rng
+            .sample_distinct(dense_len, nnz)
+            .into_iter()
+            .map(|i| i as u32)
+            .collect();
+        idx.sort_unstable();
+        let t = CooTensor::from_sorted(dense_len, idx, vec![1.0; nnz]);
+        println!(
+            "== density {density_pct}% ({nnz} nnz, dense {}) ==",
+            human_bytes((dense_len * 4) as f64)
+        );
+        println!("  wire: COO {}", human_bytes(t.wire_bytes() as f64));
+        let bm = Bitmap::from_ones(dense_len, &t.indices);
+        println!(
+            "  wire: bitmap+vals {}",
+            human_bytes((bm.wire_bytes() + nnz * 4) as f64)
+        );
+        let blocks = BlockTensor::from_coo(&t, 256);
+        println!("  wire: blocks {}", human_bytes(blocks.wire_bytes() as f64));
+        let parts = hasher.partition(&t).parts;
+        let hb_total: usize = parts
+            .iter()
+            .enumerate()
+            .map(|(p, part)| {
+                HashBitmapCodec::new(&domains[p])
+                    .encode(part)
+                    .wire_bytes()
+            })
+            .sum();
+        println!("  wire: hash bitmap {}", human_bytes(hb_total as f64));
+
+        bench("block encode", 1, 5, || {
+            std::hint::black_box(BlockTensor::from_coo(&t, 256));
+        });
+        bench("bitmap encode", 1, 5, || {
+            std::hint::black_box(Bitmap::from_ones(dense_len, &t.indices));
+        });
+        let codec = HashBitmapCodec::new(&domains[0]);
+        let payload = codec.encode(&parts[0]);
+        bench("hash-bitmap encode (1 partition)", 1, 5, || {
+            std::hint::black_box(codec.encode(&parts[0]));
+        });
+        bench("hash-bitmap decode (1 partition)", 1, 5, || {
+            std::hint::black_box(codec.decode(&payload, dense_len));
+        });
+        println!();
+    }
+}

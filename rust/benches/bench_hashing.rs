@@ -1,0 +1,90 @@
+//! Bench: Algorithm 1 (hierarchical hashing) hot path — regenerates the
+//! Fig 16 parameter study and the Fig 8 strawman trade-off, and reports
+//! the hashing throughput target from DESIGN.md §Perf.
+//!
+//!   cargo bench --bench bench_hashing
+
+use zen::hashing::{HierarchicalHasher, StrawmanHasher, ThresholdPartitioner};
+use zen::tensor::CooTensor;
+use zen::util::timer::bench;
+use zen::util::Pcg64;
+
+fn random_coo(seed: u64, dense_len: usize, nnz: usize) -> CooTensor {
+    let mut rng = Pcg64::seeded(seed);
+    let mut idx = rng.sample_distinct(dense_len, nnz);
+    idx.sort_unstable();
+    CooTensor::from_sorted(
+        dense_len,
+        idx.into_iter().map(|i| i as u32).collect(),
+        (0..nnz).map(|_| rng.next_f32() + 0.01).collect(),
+    )
+}
+
+fn main() {
+    println!("== Algorithm 1: throughput vs tensor size (n=16, k=3, r1=2nnz) ==");
+    for nnz in [10_000usize, 100_000, 1_000_000] {
+        let t = random_coo(1, nnz * 40, nnz);
+        let h = HierarchicalHasher::with_defaults(7, 16, nnz);
+        let s = bench(&format!("alg1 nnz={nnz}"), 2, 8, || {
+            std::hint::black_box(h.partition(&t));
+        });
+        let mut s = s;
+        println!(
+            "  -> {:.1} M idx/s",
+            nnz as f64 / s.percentile(50.0) / 1e6
+        );
+    }
+
+    println!("\n== Fig 16a analog: cost vs r1 multiple (nnz=500k, k=3) ==");
+    let t = random_coo(2, 20_000_000, 500_000);
+    for mult in [1usize, 2, 4, 8] {
+        let r1 = mult * t.nnz() / 16;
+        let h = HierarchicalHasher::new(7, 16, 3, r1, (r1 / 10).max(1));
+        let out = h.partition(&t);
+        bench(
+            &format!("alg1 r1={mult}x (serial={}, overflow={})", out.serial_writes, out.overflow_writes),
+            1,
+            5,
+            || {
+                std::hint::black_box(h.partition(&t));
+            },
+        );
+    }
+
+    println!("\n== Fig 16b analog: cost vs k (r1=2nnz) ==");
+    for k in [1usize, 2, 3, 4] {
+        let r1 = 2 * t.nnz() / 16;
+        let h = HierarchicalHasher::new(7, 16, k, r1, (r1 / 10).max(1));
+        let out = h.partition(&t);
+        bench(
+            &format!("alg1 k={k} (serial={})", out.serial_writes),
+            1,
+            5,
+            || {
+                std::hint::black_box(h.partition(&t));
+            },
+        );
+    }
+
+    println!("\n== Fig 8 analog: strawman memory vs cost & loss ==");
+    for mult in [1usize, 2, 8, 32] {
+        let h = StrawmanHasher::new(5, 16, mult * t.nnz());
+        let out = h.partition(&t);
+        bench(
+            &format!(
+                "strawman mem={mult}x (loss {:.1}%)",
+                out.loss_rate(t.nnz()) * 100.0
+            ),
+            1,
+            5,
+            || {
+                std::hint::black_box(h.partition(&t));
+            },
+        );
+    }
+
+    println!("\n== data-dependent thresholds (fit cost) ==");
+    bench("threshold fit nnz=500k", 1, 5, || {
+        std::hint::black_box(ThresholdPartitioner::fit(&t.indices, 16));
+    });
+}

@@ -1,0 +1,47 @@
+//! Bench: every synchronization scheme on every Table-1 workload at 16
+//! machines — wall time of the scheme implementation plus the virtual
+//! network time it charges (Fig 13's quantities).
+//!
+//!   cargo bench --bench bench_schemes
+
+use zen::cluster::{LinkKind, Network};
+use zen::schemes;
+use zen::util::timer::bench;
+use zen::workload::{profiles, GradientGen};
+
+fn main() {
+    let n = 16;
+    let net = Network::new(n, LinkKind::Tcp25);
+    for p in profiles::table1() {
+        let gen = GradientGen::new(p.scaled(256), 0xbe);
+        let inputs = gen.iteration_all(0, n);
+        println!(
+            "== {} (scaled): {} params, nnz/worker {} ==",
+            p.name,
+            inputs[0].dense_len,
+            inputs[0].nnz()
+        );
+        let mut dense_time = 0.0;
+        for scheme in schemes::all_schemes(n, 5, inputs[0].nnz()) {
+            let r = scheme.sync(&inputs, &net);
+            let virt = r.report.comm_time();
+            if scheme.name() == "AllReduce" {
+                dense_time = virt;
+            }
+            bench(
+                &format!(
+                    "{:<11} virt {:.2}ms speedup {:.2}x",
+                    scheme.name(),
+                    virt * 1e3,
+                    dense_time / virt
+                ),
+                1,
+                5,
+                || {
+                    std::hint::black_box(scheme.sync(&inputs, &net));
+                },
+            );
+        }
+        println!();
+    }
+}

@@ -1,0 +1,14 @@
+//! Analytical cost models (paper Appendix B) and the Fig 7 comparison.
+//!
+//! [`costmodel`] implements the closed-form communication-time formulas
+//! from the proofs of Theorem 1 — they drive the theory tests (the lemma
+//! orderings must hold) and the `Dense`/lower-bound reference lines.
+//! [`numeric`] generates model-profile workloads and evaluates every
+//! scheme's *actual* traffic on them, reproducing Fig 7's normalized
+//! comparison.
+
+pub mod costmodel;
+pub mod numeric;
+
+pub use costmodel::CostModel;
+pub use numeric::fig7_sweep;

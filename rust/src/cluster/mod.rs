@@ -1,0 +1,214 @@
+//! Simulated GPU cluster: topology + virtual-time network model.
+//!
+//! The paper's testbeds are 16 machines × 8 GPUs on 25 Gbps TCP or
+//! 100 Gbps RDMA, with NVLink inside a machine. We reproduce the
+//! *communication structure* exactly — every scheme really moves the
+//! bytes it claims between in-process endpoints — and charge time with
+//! the standard synchronous α–β model that the paper's own Appendix B
+//! analysis uses:
+//!
+//! `stage_time = α + max_endpoint(max(bytes_sent, bytes_recv)) · 8 / B`
+//!
+//! Full-duplex NICs, receiver/sender bottleneck at the busiest endpoint —
+//! which is precisely what makes imbalanced schemes slow (Lemma 4) and
+//! balanced ones fast.
+//!
+//! GPUs inside a machine first reduce-scatter/all-gather dense shards
+//! over NVLink (§4.1 of the paper); `intra_machine_time` charges that
+//! phase, and the inter-machine schemes then operate on per-machine
+//! tensors (whose density reflects intra-machine densification).
+
+pub mod report;
+
+pub use report::{CommReport, StageReport};
+
+/// Link presets matching the paper's two testbeds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LinkKind {
+    /// 25 Gbps Ethernet, TCP/IP (testbed 1).
+    Tcp25,
+    /// 100 Gbps, RDMA (testbed 2).
+    Rdma100,
+    /// NVLink (V100-gen: ~150 GB/s per direction aggregate).
+    NvLink,
+    /// Custom bits/s + latency.
+    Custom(u64, u64),
+}
+
+impl LinkKind {
+    /// Bandwidth in bits per second.
+    pub fn bandwidth_bps(&self) -> f64 {
+        match self {
+            LinkKind::Tcp25 => 25e9,
+            LinkKind::Rdma100 => 100e9,
+            LinkKind::NvLink => 150e9 * 8.0,
+            LinkKind::Custom(bps, _) => *bps as f64,
+        }
+    }
+
+    /// Per-stage latency α in seconds (TCP pays kernel/stack overhead;
+    /// RDMA and NVLink are in the microsecond regime).
+    pub fn latency(&self) -> f64 {
+        match self {
+            LinkKind::Tcp25 => 50e-6,
+            LinkKind::Rdma100 => 5e-6,
+            LinkKind::NvLink => 2e-6,
+            LinkKind::Custom(_, ns) => *ns as f64 * 1e-9,
+        }
+    }
+}
+
+/// Cluster shape: `machines` endpoints on the inter-machine fabric, each
+/// with `gpus_per_machine` GPUs joined by NVLink.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub machines: usize,
+    pub gpus_per_machine: usize,
+    pub inter: LinkKind,
+    pub intra: LinkKind,
+}
+
+impl Topology {
+    pub fn new(machines: usize, gpus_per_machine: usize, inter: LinkKind) -> Self {
+        Topology {
+            machines,
+            gpus_per_machine,
+            inter,
+            intra: LinkKind::NvLink,
+        }
+    }
+
+    /// Paper testbed 1: m machines × 8 V100, 25 Gbps TCP.
+    pub fn testbed_tcp(machines: usize) -> Self {
+        Self::new(machines, 8, LinkKind::Tcp25)
+    }
+
+    /// Paper testbed 2: m machines × 8 A100, 100 Gbps RDMA.
+    pub fn testbed_rdma(machines: usize) -> Self {
+        Self::new(machines, 8, LinkKind::Rdma100)
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.machines * self.gpus_per_machine
+    }
+
+    /// Time for the intra-machine dense reduce-scatter + all-gather over
+    /// NVLink (ring over g GPUs, `2(g-1)/g · bytes` each way).
+    pub fn intra_machine_time(&self, dense_bytes: u64) -> f64 {
+        let g = self.gpus_per_machine;
+        if g <= 1 {
+            return 0.0;
+        }
+        let moved = 2.0 * (g as f64 - 1.0) / g as f64 * dense_bytes as f64;
+        2.0 * (g as f64 - 1.0) * self.intra.latency() + moved * 8.0 / self.intra.bandwidth_bps()
+    }
+}
+
+/// The inter-machine network: charges virtual time per synchronous stage.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub link: LinkKind,
+    pub endpoints: usize,
+}
+
+impl Network {
+    pub fn new(endpoints: usize, link: LinkKind) -> Self {
+        assert!(endpoints >= 1);
+        Network { endpoints, link }
+    }
+
+    /// Time for one synchronous stage given per-endpoint sent/recv bytes.
+    pub fn stage_time(&self, sent: &[u64], recv: &[u64]) -> f64 {
+        assert_eq!(sent.len(), self.endpoints);
+        assert_eq!(recv.len(), self.endpoints);
+        let busiest = sent
+            .iter()
+            .zip(recv.iter())
+            .map(|(&s, &r)| s.max(r))
+            .max()
+            .unwrap_or(0);
+        if busiest == 0 {
+            return 0.0;
+        }
+        self.link.latency() + busiest as f64 * 8.0 / self.link.bandwidth_bps()
+    }
+
+    /// Build a stage report from a per-(src,dst) byte matrix
+    /// (`bytes[src][dst]`, diagonal ignored — local moves are free).
+    pub fn stage_from_matrix(&self, name: &str, bytes: &[Vec<u64>]) -> StageReport {
+        assert_eq!(bytes.len(), self.endpoints);
+        let mut sent = vec![0u64; self.endpoints];
+        let mut recv = vec![0u64; self.endpoints];
+        for (src, row) in bytes.iter().enumerate() {
+            assert_eq!(row.len(), self.endpoints);
+            for (dst, &b) in row.iter().enumerate() {
+                if src != dst {
+                    sent[src] += b;
+                    recv[dst] += b;
+                }
+            }
+        }
+        let time = self.stage_time(&sent, &recv);
+        StageReport {
+            name: name.to_string(),
+            sent,
+            recv,
+            time,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_sane() {
+        assert_eq!(LinkKind::Tcp25.bandwidth_bps(), 25e9);
+        assert_eq!(LinkKind::Rdma100.bandwidth_bps(), 100e9);
+        assert!(LinkKind::NvLink.bandwidth_bps() > LinkKind::Rdma100.bandwidth_bps());
+        assert!(LinkKind::Tcp25.latency() > LinkKind::Rdma100.latency());
+    }
+
+    #[test]
+    fn stage_time_bottleneck_endpoint() {
+        let net = Network::new(3, LinkKind::Custom(8_000_000_000, 0)); // 1 GB/s
+        // endpoint 1 receives 2 GB → 2 s
+        let t = net.stage_time(&[0, 0, 0], &[0, 2_000_000_000, 0]);
+        assert!((t - 2.0).abs() < 1e-9);
+        // balanced: 3 endpoints each receive 1 GB → 1 s (3× better than
+        // one endpoint receiving 3 GB — the Lemma 4 effect)
+        let bal = net.stage_time(&[0, 0, 0], &[1_000_000_000; 3]);
+        let imb = net.stage_time(&[0, 0, 0], &[3_000_000_000, 0, 0]);
+        assert!((imb / bal - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_stage_free() {
+        let net = Network::new(2, LinkKind::Tcp25);
+        assert_eq!(net.stage_time(&[0, 0], &[0, 0]), 0.0);
+    }
+
+    #[test]
+    fn matrix_accounting() {
+        let net = Network::new(3, LinkKind::Custom(8, 0)); // 1 B/s
+        let m = vec![
+            vec![0, 10, 20], // node 0 sends 30
+            vec![5, 0, 0],
+            vec![0, 0, 7], // diagonal ignored
+        ];
+        let st = net.stage_from_matrix("x", &m);
+        assert_eq!(st.sent, vec![30, 5, 0]);
+        assert_eq!(st.recv, vec![5, 10, 20]);
+        assert!((st.time - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn intra_machine_scales_with_gpus() {
+        let t8 = Topology::testbed_tcp(4).intra_machine_time(1 << 30);
+        let mut t1 = Topology::testbed_tcp(4);
+        t1.gpus_per_machine = 1;
+        assert_eq!(t1.intra_machine_time(1 << 30), 0.0);
+        assert!(t8 > 0.0);
+    }
+}

@@ -1,0 +1,161 @@
+//! Communication accounting: per-stage and per-synchronization reports.
+
+/// One synchronous communication stage.
+#[derive(Clone, Debug)]
+pub struct StageReport {
+    pub name: String,
+    /// Bytes sent by each endpoint in this stage.
+    pub sent: Vec<u64>,
+    /// Bytes received by each endpoint in this stage.
+    pub recv: Vec<u64>,
+    /// Virtual time charged for the stage (seconds).
+    pub time: f64,
+}
+
+impl StageReport {
+    pub fn total_bytes(&self) -> u64 {
+        self.sent.iter().sum()
+    }
+
+    fn imbalance(values: &[u64]) -> f64 {
+        let total: u64 = values.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let max = values.iter().copied().max().unwrap_or(0);
+        max as f64 * values.len() as f64 / total as f64
+    }
+
+    /// `n · max_recv / total_recv` for this stage (Definition 6 when the
+    /// stage is a Push: receivers are the servers).
+    pub fn recv_imbalance(&self) -> f64 {
+        Self::imbalance(&self.recv)
+    }
+
+    /// `n · max_sent / total_sent` (Definition 6 for Pull: the servers
+    /// are the senders).
+    pub fn sent_imbalance(&self) -> f64 {
+        Self::imbalance(&self.sent)
+    }
+}
+
+/// Full report for one synchronization of one tensor.
+#[derive(Clone, Debug, Default)]
+pub struct CommReport {
+    pub stages: Vec<StageReport>,
+    /// CPU/GPU-side computation overhead charged by the scheme
+    /// (e.g. Zen's hashing, format encode/decode), in seconds.
+    pub compute_overhead: f64,
+}
+
+impl CommReport {
+    pub fn new() -> Self {
+        CommReport::default()
+    }
+
+    pub fn push(&mut self, stage: StageReport) {
+        self.stages.push(stage);
+    }
+
+    /// Total virtual communication time (sum of synchronous stages).
+    pub fn comm_time(&self) -> f64 {
+        self.stages.iter().map(|s| s.time).sum()
+    }
+
+    /// Total synchronization time including scheme compute overhead.
+    pub fn total_time(&self) -> f64 {
+        self.comm_time() + self.compute_overhead
+    }
+
+    /// Total bytes put on the network.
+    pub fn total_bytes(&self) -> u64 {
+        self.stages.iter().map(|s| s.total_bytes()).sum()
+    }
+
+    /// Largest number of bytes received by any endpoint in any stage —
+    /// the hotspot metric that the balance dimension controls.
+    pub fn max_stage_recv(&self) -> u64 {
+        self.stages
+            .iter()
+            .flat_map(|s| s.recv.iter().copied())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Per-endpoint total received bytes across all stages.
+    pub fn recv_per_endpoint(&self) -> Vec<u64> {
+        if self.stages.is_empty() {
+            return Vec::new();
+        }
+        let n = self.stages[0].recv.len();
+        let mut out = vec![0u64; n];
+        for s in &self.stages {
+            for (o, &r) in out.iter_mut().zip(s.recv.iter()) {
+                *o += r;
+            }
+        }
+        out
+    }
+
+    /// Receive-imbalance across endpoints: `n · max_recv / total_recv`
+    /// (1.0 = perfectly balanced).
+    pub fn recv_imbalance(&self) -> f64 {
+        let per = self.recv_per_endpoint();
+        let total: u64 = per.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let max = per.iter().copied().max().unwrap_or(0);
+        max as f64 * per.len() as f64 / total as f64
+    }
+
+    /// Merge another report's stages and overhead into this one
+    /// (sequential composition, e.g. Push then Pull).
+    pub fn extend(&mut self, other: CommReport) {
+        self.stages.extend(other.stages);
+        self.compute_overhead += other.compute_overhead;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stage(name: &str, sent: Vec<u64>, recv: Vec<u64>, time: f64) -> StageReport {
+        StageReport {
+            name: name.into(),
+            sent,
+            recv,
+            time,
+        }
+    }
+
+    #[test]
+    fn totals_accumulate() {
+        let mut r = CommReport::new();
+        r.push(stage("a", vec![10, 0], vec![0, 10], 1.0));
+        r.push(stage("b", vec![0, 4], vec![4, 0], 0.5));
+        r.compute_overhead = 0.25;
+        assert_eq!(r.total_bytes(), 14);
+        assert!((r.comm_time() - 1.5).abs() < 1e-12);
+        assert!((r.total_time() - 1.75).abs() < 1e-12);
+        assert_eq!(r.max_stage_recv(), 10);
+        assert_eq!(r.recv_per_endpoint(), vec![4, 10]);
+    }
+
+    #[test]
+    fn imbalance_metric() {
+        let mut r = CommReport::new();
+        r.push(stage("a", vec![0, 0], vec![30, 10], 1.0));
+        // max 30, total 40, n=2 → 1.5
+        assert!((r.recv_imbalance() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_report_neutral() {
+        let r = CommReport::new();
+        assert_eq!(r.total_bytes(), 0);
+        assert_eq!(r.comm_time(), 0.0);
+        assert_eq!(r.recv_imbalance(), 1.0);
+    }
+}

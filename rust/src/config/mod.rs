@@ -1,0 +1,167 @@
+//! Configuration: CLI argument parsing (clap stand-in) and a
+//! TOML-subset file format ([`toml`]).
+//!
+//! The CLI supports `--key value`, `--key=value`, bare flags, and
+//! positional arguments; `--config <file>` merges a TOML document under
+//! the CLI (explicit flags win).
+
+pub mod toml;
+
+use std::collections::HashMap;
+
+/// Parsed command-line arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Self {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Merge a config-file table under the CLI options: keys already
+    /// present on the command line win. Array/boolean values are
+    /// stringified. Returns self for chaining.
+    pub fn with_config_table(mut self, doc: &toml::Document, table: &str) -> Self {
+        if let Some(t) = doc.tables.get(table) {
+            for (k, v) in t {
+                let key = k.replace('_', "-");
+                if self.options.contains_key(k) || self.options.contains_key(&key) {
+                    continue;
+                }
+                let s = match v {
+                    toml::Value::Str(s) => s.clone(),
+                    toml::Value::Int(i) => i.to_string(),
+                    toml::Value::Float(f) => f.to_string(),
+                    toml::Value::Bool(b) => b.to_string(),
+                    toml::Value::Array(_) => continue,
+                };
+                self.options.insert(key, s);
+            }
+        }
+        self
+    }
+
+    /// If `--config <path>` was given, load it and merge `table`.
+    pub fn maybe_load_config(self, table: &str) -> anyhow::Result<Self> {
+        match self.get("config").map(|s| s.to_string()) {
+            Some(path) => {
+                let doc = toml::load(std::path::Path::new(&path))?;
+                Ok(self.with_config_table(&doc, table))
+            }
+            None => Ok(self),
+        }
+    }
+
+    /// Parse a link preset name.
+    pub fn link(&self, key: &str, default: crate::cluster::LinkKind) -> crate::cluster::LinkKind {
+        match self.get(key).map(|s| s.to_ascii_lowercase()).as_deref() {
+            Some("tcp25") => crate::cluster::LinkKind::Tcp25,
+            Some("rdma100") => crate::cluster::LinkKind::Rdma100,
+            Some("nvlink") => crate::cluster::LinkKind::NvLink,
+            _ => default,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        // note: a bare token after `--flag` is consumed as its value, so
+        // positionals go before options (documented behavior).
+        let a = parse("sim file.txt --machines 16 --scheme=zen --verbose");
+        assert_eq!(a.positional, vec!["sim", "file.txt"]);
+        assert_eq!(a.get("machines"), Some("16"));
+        assert_eq!(a.get("scheme"), Some("zen"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse("--n 8 --lr 0.5");
+        assert_eq!(a.get_usize("n", 1), 8);
+        assert_eq!(a.get_f64("lr", 0.0), 0.5);
+        assert_eq!(a.get_usize("missing", 3), 3);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--fast --check");
+        assert!(a.has_flag("fast") && a.has_flag("check"));
+    }
+
+    #[test]
+    fn link_parsing() {
+        let a = parse("--link rdma100");
+        assert_eq!(
+            a.link("link", crate::cluster::LinkKind::Tcp25),
+            crate::cluster::LinkKind::Rdma100
+        );
+    }
+}

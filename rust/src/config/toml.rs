@@ -1,0 +1,297 @@
+//! Minimal TOML-subset parser for run configuration files.
+//!
+//! Supported: `[table]` headers, `key = value` with string / integer /
+//! float / boolean / homogeneous array values, `#` comments. That is
+//! exactly the subset run configs need; anything fancier errors loudly.
+//!
+//! ```toml
+//! # examples/configs/deepfm_16.toml
+//! [run]
+//! model    = "DeepFM"
+//! machines = 16
+//! scheme   = "zen"
+//! link     = "tcp25"
+//! ```
+
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: table name → key → value. Top-level keys live in
+/// the "" table.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Document {
+    pub tables: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Document {
+    pub fn get(&self, table: &str, key: &str) -> Option<&Value> {
+        self.tables.get(table).and_then(|t| t.get(key))
+    }
+
+    pub fn str_or<'a>(&'a self, table: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(table, key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn int_or(&self, table: &str, key: &str, default: i64) -> i64 {
+        self.get(table, key).and_then(|v| v.as_int()).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, table: &str, key: &str, default: f64) -> f64 {
+        self.get(table, key)
+            .and_then(|v| v.as_float())
+            .unwrap_or(default)
+    }
+}
+
+/// Parse error with line context.
+#[derive(Debug, thiserror::Error, PartialEq)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+fn err(line: usize, msg: impl Into<String>) -> ParseError {
+    ParseError {
+        line,
+        msg: msg.into(),
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(input: &str) -> Result<Document, ParseError> {
+    let mut doc = Document::default();
+    let mut current = String::new();
+    doc.tables.insert(current.clone(), BTreeMap::new());
+    for (ln, raw) in input.lines().enumerate() {
+        let line_no = ln + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(line_no, "unterminated table header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(line_no, "empty table name"));
+            }
+            current = name.to_string();
+            doc.tables.entry(current.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| err(line_no, "expected `key = value`"))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(err(line_no, "empty key"));
+        }
+        let value = parse_value(value.trim(), line_no)?;
+        let table = doc.tables.get_mut(&current).unwrap();
+        if table.insert(key.to_string(), value).is_some() {
+            return Err(err(line_no, format!("duplicate key '{key}'")));
+        }
+    }
+    Ok(doc)
+}
+
+/// Load and parse a config file.
+pub fn load(path: &std::path::Path) -> anyhow::Result<Document> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside a string starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, ParseError> {
+    if s.is_empty() {
+        return Err(err(line, "empty value"));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(line, "unterminated string"))?;
+        if inner.contains('"') {
+            return Err(err(line, "escaped quotes unsupported in the subset"));
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| err(line, "unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items: Result<Vec<Value>, _> = split_top_level(inner)
+            .into_iter()
+            .map(|item| parse_value(item.trim(), line))
+            .collect();
+        return Ok(Value::Array(items?));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(line, format!("cannot parse value '{s}'")))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_document() {
+        let doc = parse(
+            r#"
+# run configuration
+title = "demo"
+
+[run]
+model    = "DeepFM"   # the Table-1 profile
+machines = 16
+lr       = 0.5
+verbose  = true
+sizes    = [1, 2, 3]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("", "title", ""), "demo");
+        assert_eq!(doc.str_or("run", "model", ""), "DeepFM");
+        assert_eq!(doc.int_or("run", "machines", 0), 16);
+        assert_eq!(doc.float_or("run", "lr", 0.0), 0.5);
+        assert_eq!(doc.get("run", "verbose").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            doc.get("run", "sizes").unwrap(),
+            &Value::Array(vec![Value::Int(1), Value::Int(2), Value::Int(3)])
+        );
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = parse("n = 1_000_000").unwrap();
+        assert_eq!(doc.int_or("", "n", 0), 1_000_000);
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let doc = parse(r##"s = "a # b""##).unwrap();
+        assert_eq!(doc.str_or("", "s", ""), "a # b");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("x = \"unterminated").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = parse("[nope").unwrap_err();
+        assert!(e.msg.contains("unterminated table"));
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        let e = parse("a = 1\na = 2").unwrap_err();
+        assert!(e.msg.contains("duplicate"));
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = parse("m = [[1, 2], [3]]").unwrap();
+        match doc.get("", "m").unwrap() {
+            Value::Array(rows) => {
+                assert_eq!(rows.len(), 2);
+                assert_eq!(rows[0], Value::Array(vec![Value::Int(1), Value::Int(2)]));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn floats_and_negatives() {
+        let doc = parse("a = -3\nb = 2.5e-3").unwrap();
+        assert_eq!(doc.int_or("", "a", 0), -3);
+        assert!((doc.float_or("", "b", 0.0) - 2.5e-3).abs() < 1e-12);
+    }
+}

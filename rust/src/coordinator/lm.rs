@@ -1,0 +1,409 @@
+//! Real training of the embedding language model through the AOT stack.
+//!
+//! The model is skip-gram-with-negative-sampling plus an MLP projection
+//! (the Table-1 model class: a huge embedding table + a small dense
+//! head). The compute graph lives in `python/compile/model.py` (L2,
+//! calling the L1 Pallas matmul kernel) and is exported once per shape
+//! to `artifacts/train_step_b{B}_k{K}_d{D}_h{H}.hlo.txt`; this module
+//! executes it via PJRT, owns the parameter state, builds the sparse
+//! embedding gradients, synchronizes them with any [`SyncScheme`], and
+//! applies SGD.
+//!
+//! Crucially the HLO step only touches *gathered rows* — vocabulary size
+//! is a rust-side concern — so one artifact serves any table size, and
+//! the embedding gradient is natively sparse (exactly the paper's
+//! setting).
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use super::sgd;
+use crate::cluster::{LinkKind, Network};
+use crate::runtime::{lit, Executable, Runtime};
+use crate::schemes::{self, SyncScheme};
+use crate::tensor::CooTensor;
+use crate::util::{Pcg64, Zipf};
+
+/// Model/shape configuration. Must match an exported artifact.
+#[derive(Clone, Debug)]
+pub struct LmConfig {
+    pub vocab: usize,
+    pub dim: usize,
+    pub hidden: usize,
+    pub batch: usize,
+    pub negatives: usize,
+    pub zipf_theta: f64,
+    pub lr: f32,
+    pub seed: u64,
+}
+
+impl LmConfig {
+    /// Tiny shape for tests (exported by `make artifacts` alongside the
+    /// big one).
+    pub fn tiny() -> Self {
+        LmConfig {
+            vocab: 2_048,
+            dim: 32,
+            hidden: 64,
+            batch: 64,
+            negatives: 4,
+            zipf_theta: 1.05,
+            lr: 0.3,
+            seed: 0x11,
+        }
+    }
+
+    /// ~100M-parameter configuration for the end-to-end example:
+    /// 196,608 × 512 embedding (100.7M) + MLP head.
+    pub fn paper_100m() -> Self {
+        LmConfig {
+            vocab: 196_608,
+            dim: 512,
+            hidden: 512,
+            batch: 256,
+            negatives: 8,
+            zipf_theta: 1.05,
+            lr: 0.3,
+            seed: 0x100,
+        }
+    }
+
+    /// Artifact stem for this shape.
+    pub fn artifact_stem(&self) -> String {
+        format!(
+            "train_step_b{}_k{}_d{}_h{}",
+            self.batch, self.negatives, self.dim, self.hidden
+        )
+    }
+
+    pub fn emb_params(&self) -> usize {
+        self.vocab * self.dim
+    }
+
+    pub fn mlp_params(&self) -> usize {
+        self.dim * self.hidden + self.hidden + self.hidden * self.dim + self.dim
+    }
+}
+
+/// Per-iteration training statistics.
+#[derive(Clone, Debug)]
+pub struct StepStats {
+    pub loss: f32,
+    /// Virtual network time for the embedding sync this step.
+    pub emb_comm_time: f64,
+    /// Virtual network time for the dense MLP allreduce.
+    pub mlp_comm_time: f64,
+    /// Wall-clock compute time (PJRT execution, all workers).
+    pub compute_wall: f64,
+    /// Wall-clock scheme overhead (hashing etc., from the report).
+    pub scheme_overhead: f64,
+}
+
+/// Accumulated log of a run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainLog {
+    pub losses: Vec<f32>,
+    pub accuracies: Vec<(usize, f64)>, // (step, eval accuracy)
+    pub emb_comm_total: f64,
+    pub mlp_comm_total: f64,
+    pub compute_wall_total: f64,
+}
+
+/// The trainer.
+pub struct LmTrainer {
+    pub cfg: LmConfig,
+    pub workers: usize,
+    exe: Executable,
+    scheme: Box<dyn SyncScheme>,
+    net: Network,
+    // Parameters (replicated across data-parallel workers → stored once).
+    pub embedding: Vec<f32>,
+    pub w1: Vec<f32>, // (D, H) row-major
+    pub b1: Vec<f32>, // (H,)
+    pub w2: Vec<f32>, // (H, D)
+    pub b2: Vec<f32>, // (D,)
+    zipf: Zipf,
+    step_count: u64,
+}
+
+impl LmTrainer {
+    pub fn new(
+        cfg: LmConfig,
+        workers: usize,
+        scheme_name: &str,
+        link: LinkKind,
+        artifacts_dir: &std::path::Path,
+    ) -> Result<Self> {
+        let rt = Runtime::cpu()?;
+        let path = artifacts_dir.join(format!("{}.hlo.txt", cfg.artifact_stem()));
+        let exe = rt.load_hlo(&path).with_context(|| {
+            format!(
+                "loading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        // Expected per-worker nnz: (1 + 1 + K) rows per pair, B pairs.
+        let expected_rows = cfg.batch * (2 + cfg.negatives);
+        let expected_nnz = (expected_rows * cfg.dim).min(cfg.emb_params());
+        let scheme = schemes::by_name(scheme_name, workers, cfg.seed ^ 0x5eed, expected_nnz)
+            .ok_or_else(|| anyhow::anyhow!("unknown scheme '{scheme_name}'"))?;
+        let net = Network::new(workers, link);
+
+        let mut rng = Pcg64::seeded(cfg.seed);
+        let scale = 1.0 / (cfg.dim as f64).sqrt();
+        let init = |rng: &mut Pcg64, n: usize, s: f64| -> Vec<f32> {
+            (0..n).map(|_| (rng.normal() * s) as f32).collect()
+        };
+        let embedding = init(&mut rng, cfg.emb_params(), 0.1);
+        let w1 = init(&mut rng, cfg.dim * cfg.hidden, scale);
+        let b1 = vec![0.0; cfg.hidden];
+        let w2 = init(&mut rng, cfg.hidden * cfg.dim, scale);
+        let b2 = vec![0.0; cfg.dim];
+        let zipf = Zipf::new(cfg.vocab, cfg.zipf_theta);
+
+        Ok(LmTrainer {
+            cfg,
+            workers,
+            exe,
+            scheme,
+            net,
+            embedding,
+            w1,
+            b1,
+            w2,
+            b2,
+            zipf,
+
+            step_count: 0,
+        })
+    }
+
+    /// The synthetic corpus's ground-truth context for a center token:
+    /// a fixed affine permutation of the vocabulary (learnable signal).
+    fn true_context(&self, center: usize) -> usize {
+        (center * 31 + 17) % self.cfg.vocab
+    }
+
+    /// Sample one worker's batch: (center, context, negatives) token ids.
+    fn sample_batch(&self, rng: &mut Pcg64) -> (Vec<usize>, Vec<usize>, Vec<usize>) {
+        let b = self.cfg.batch;
+        let k = self.cfg.negatives;
+        let mut center = Vec::with_capacity(b);
+        let mut context = Vec::with_capacity(b);
+        let mut negs = Vec::with_capacity(b * k);
+        for _ in 0..b {
+            let c = self.zipf.sample(rng);
+            // 85% true signal, 15% noise
+            let ctx = if rng.next_f64() < 0.85 {
+                self.true_context(c)
+            } else {
+                rng.below(self.cfg.vocab as u64) as usize
+            };
+            center.push(c);
+            context.push(ctx);
+            for _ in 0..k {
+                negs.push(rng.below(self.cfg.vocab as u64) as usize);
+            }
+        }
+        (center, context, negs)
+    }
+
+    fn gather_rows(&self, tokens: &[usize]) -> Vec<f32> {
+        let d = self.cfg.dim;
+        let mut out = Vec::with_capacity(tokens.len() * d);
+        for &t in tokens {
+            out.extend_from_slice(&self.embedding[t * d..(t + 1) * d]);
+        }
+        out
+    }
+
+    /// Scatter per-slot row gradients into an accumulator keyed by token.
+    fn scatter_rows(
+        acc: &mut HashMap<u32, Vec<f32>>,
+        tokens: &[usize],
+        grads: &[f32],
+        dim: usize,
+    ) {
+        for (i, &t) in tokens.iter().enumerate() {
+            let g = &grads[i * dim..(i + 1) * dim];
+            let e = acc.entry(t as u32).or_insert_with(|| vec![0.0; dim]);
+            for (a, &v) in e.iter_mut().zip(g.iter()) {
+                *a += v;
+            }
+        }
+    }
+
+    /// Execute one data-parallel training step across all workers.
+    pub fn step(&mut self) -> Result<StepStats> {
+        let cfg = self.cfg.clone();
+        let (b, k, d, h) = (cfg.batch, cfg.negatives, cfg.dim, cfg.hidden);
+        let mut worker_grads: Vec<CooTensor> = Vec::with_capacity(self.workers);
+        let mut mlp_grad_acc = vec![0.0f32; cfg.mlp_params()];
+        let mut loss_acc = 0.0f32;
+        let compute_sw = crate::util::Stopwatch::start();
+
+        // Worker RNG streams derived from the step counter.
+        let step_seed = self
+            .cfg
+            .seed
+            .wrapping_add(self.step_count.wrapping_mul(0x9e37_79b9));
+        for w in 0..self.workers {
+            let mut rng = Pcg64::new(step_seed, w as u64 + 101);
+            let (center, context, negs) = self.sample_batch(&mut rng);
+            let inputs = [
+                lit::f32(&self.gather_rows(&center), &[b as i64, d as i64])?,
+                lit::f32(&self.gather_rows(&context), &[b as i64, d as i64])?,
+                lit::f32(&self.gather_rows(&negs), &[b as i64, k as i64, d as i64])?,
+                lit::f32(&self.w1, &[d as i64, h as i64])?,
+                lit::f32(&self.b1, &[h as i64])?,
+                lit::f32(&self.w2, &[h as i64, d as i64])?,
+                lit::f32(&self.b2, &[d as i64])?,
+            ];
+            let out = self.exe.run(&inputs)?;
+            anyhow::ensure!(out.len() == 8, "expected 8 outputs, got {}", out.len());
+            loss_acc += lit::scalar_f32(&out[0])?;
+            let g_center = lit::to_f32(&out[1])?;
+            let g_context = lit::to_f32(&out[2])?;
+            let g_neg = lit::to_f32(&out[3])?;
+
+            // Build this worker's sparse embedding gradient.
+            let mut acc: HashMap<u32, Vec<f32>> = HashMap::new();
+            Self::scatter_rows(&mut acc, &center, &g_center, d);
+            Self::scatter_rows(&mut acc, &context, &g_context, d);
+            Self::scatter_rows(&mut acc, &negs, &g_neg, d);
+            let mut rows: Vec<u32> = acc.keys().copied().collect();
+            rows.sort_unstable();
+            let mut indices = Vec::with_capacity(rows.len() * d);
+            let mut values = Vec::with_capacity(rows.len() * d);
+            for r in rows {
+                let g = &acc[&r];
+                for (c, &v) in g.iter().enumerate() {
+                    indices.push(r * d as u32 + c as u32);
+                    values.push(v);
+                }
+            }
+            worker_grads.push(CooTensor::from_sorted(cfg.emb_params(), indices, values));
+
+            // Dense MLP gradients.
+            for (slot, idx) in [(4usize, 0usize), (5, 1), (6, 2), (7, 3)] {
+                let g = lit::to_f32(&out[slot])?;
+                let off = match idx {
+                    0 => 0,
+                    1 => d * h,
+                    2 => d * h + h,
+                    _ => d * h + h + h * d,
+                };
+                sgd::accumulate(&mut mlp_grad_acc[off..off + g.len()], &g);
+            }
+        }
+        let compute_wall = compute_sw.elapsed();
+
+        // Synchronize the sparse embedding gradients.
+        let sync = self.scheme.sync(&worker_grads, &self.net);
+        let emb_comm_time = sync.report.comm_time();
+        let scheme_overhead = sync.report.compute_overhead;
+
+        // Dense allreduce time for the MLP head.
+        let nf = self.workers as f64;
+        let mlp_comm_time = if self.workers > 1 {
+            2.0 * (nf - 1.0) / nf * (cfg.mlp_params() * 4) as f64 * 8.0
+                / self.net.link.bandwidth_bps()
+        } else {
+            0.0
+        };
+
+        // Apply SGD with the aggregated gradients.
+        let scale = self.workers as f32;
+        sgd::apply_sparse(&mut self.embedding, &sync.outputs[0], cfg.lr, scale);
+        let (d_, h_) = (d, h);
+        let mut off = 0;
+        for (param, len) in [
+            (&mut self.w1, d_ * h_),
+            (&mut self.b1, h_),
+            (&mut self.w2, h_ * d_),
+            (&mut self.b2, d_),
+        ] {
+            sgd::apply_dense(param, &mlp_grad_acc[off..off + len], cfg.lr, scale);
+            off += len;
+        }
+
+        self.step_count += 1;
+        Ok(StepStats {
+            loss: loss_acc / self.workers as f32,
+            emb_comm_time,
+            mlp_comm_time,
+            compute_wall,
+            scheme_overhead,
+        })
+    }
+
+    /// Ranking accuracy on held-out pairs: fraction of centers whose true
+    /// context outscores a random token under the current parameters.
+    pub fn eval_accuracy(&mut self, samples: usize) -> f64 {
+        let d = self.cfg.dim;
+        let h = self.cfg.hidden;
+        let mut correct = 0usize;
+        let mut rng = Pcg64::new(self.cfg.seed ^ 0xe7a1, 7);
+        for _ in 0..samples {
+            let c = self.zipf.sample(&mut rng);
+            let truth = self.true_context(c);
+            let rand_tok = rng.below(self.cfg.vocab as u64) as usize;
+            // proj = tanh(e_c @ W1 + b1) @ W2 + b2
+            let e_c = &self.embedding[c * d..(c + 1) * d];
+            let mut hid = self.b1.clone();
+            for (j, hv) in hid.iter_mut().enumerate().take(h) {
+                let mut s = *hv;
+                for i in 0..d {
+                    s += e_c[i] * self.w1[i * h + j];
+                }
+                *hv = s.tanh();
+            }
+            let mut proj = self.b2.clone();
+            for (i, pv) in proj.iter_mut().enumerate().take(d) {
+                let mut s = *pv;
+                for (j, &hv) in hid.iter().enumerate() {
+                    s += hv * self.w2[j * d + i];
+                }
+                *pv = s;
+            }
+            let dot = |tok: usize| -> f32 {
+                let e = &self.embedding[tok * d..(tok + 1) * d];
+                proj.iter().zip(e.iter()).map(|(a, b)| a * b).sum()
+            };
+            if dot(truth) > dot(rand_tok) {
+                correct += 1;
+            }
+        }
+        correct as f64 / samples as f64
+    }
+
+    /// Train for `iters` steps, logging and evaluating every `log_every`.
+    pub fn run(&mut self, iters: usize, log_every: usize, verbose: bool) -> Result<TrainLog> {
+        let mut log = TrainLog::default();
+        for it in 0..iters {
+            let s = self.step()?;
+            log.losses.push(s.loss);
+            log.emb_comm_total += s.emb_comm_time;
+            log.mlp_comm_total += s.mlp_comm_time;
+            log.compute_wall_total += s.compute_wall;
+            if log_every > 0 && (it % log_every == 0 || it + 1 == iters) {
+                let acc = self.eval_accuracy(512);
+                log.accuracies.push((it, acc));
+                if verbose {
+                    println!(
+                        "step {it:4}  loss {:.4}  acc {:.3}  emb-comm {:.2}ms  compute {:.0}ms",
+                        s.loss,
+                        acc,
+                        s.emb_comm_time * 1e3,
+                        s.compute_wall * 1e3
+                    );
+                }
+            }
+        }
+        Ok(log)
+    }
+}
+
+// note: tests for LmTrainer require artifacts; they live in
+// rust/tests/train_lm_integration.rs and run after `make artifacts`.

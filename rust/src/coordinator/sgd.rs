@@ -1,0 +1,58 @@
+//! SGD application for sparse (embedding) and dense (MLP) gradients.
+
+use crate::tensor::CooTensor;
+
+/// Apply a sparse aggregated gradient: `params[idx] -= lr/scale · grad`.
+/// `scale` is the data-parallel degree (gradient averaging).
+pub fn apply_sparse(params: &mut [f32], grad: &CooTensor, lr: f32, scale: f32) {
+    debug_assert_eq!(params.len(), grad.dense_len);
+    let step = lr / scale;
+    for (&i, &g) in grad.indices.iter().zip(grad.values.iter()) {
+        params[i as usize] -= step * g;
+    }
+}
+
+/// Apply a dense aggregated gradient.
+pub fn apply_dense(params: &mut [f32], grad: &[f32], lr: f32, scale: f32) {
+    debug_assert_eq!(params.len(), grad.len());
+    let step = lr / scale;
+    for (p, &g) in params.iter_mut().zip(grad.iter()) {
+        *p -= step * g;
+    }
+}
+
+/// Element-wise accumulate `src` into `acc`.
+pub fn accumulate(acc: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(acc.len(), src.len());
+    for (a, &s) in acc.iter_mut().zip(src.iter()) {
+        *a += s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_updates_only_touched() {
+        let mut p = vec![1.0f32; 6];
+        let g = CooTensor::from_sorted(6, vec![1, 4], vec![2.0, -4.0]);
+        apply_sparse(&mut p, &g, 0.5, 2.0);
+        assert_eq!(p, vec![1.0, 0.5, 1.0, 1.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn dense_updates_all() {
+        let mut p = vec![1.0f32; 3];
+        apply_dense(&mut p, &[1.0, 2.0, 3.0], 0.1, 1.0);
+        assert!((p[0] - 0.9).abs() < 1e-6);
+        assert!((p[2] - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn accumulate_adds() {
+        let mut a = vec![1.0f32, 2.0];
+        accumulate(&mut a, &[0.5, 0.5]);
+        assert_eq!(a, vec![1.5, 2.5]);
+    }
+}

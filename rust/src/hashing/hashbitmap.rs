@@ -1,0 +1,186 @@
+//! Algorithm 2 — the hash bitmap (paper §3.2.2).
+//!
+//! After Algorithm 1, server `p` holds aggregated gradients whose indices
+//! all lie in the *partition domain* `𝕀_p = {idx | h0(idx) = p}` — a set
+//! that is identical on every worker and server (same `h0`), computed and
+//! sorted offline. The server therefore encodes "which domain members are
+//! non-zero" as a bitmap over the *positions within `𝕀_p`*, not over the
+//! whole range: size `|𝕀_p|/8` bytes, and Theorem 3 gives a constant
+//! total of `|G|/32` FP32-equivalents per worker across all servers —
+//! versus `n·|G|/32` for a naive positional bitmap.
+
+use crate::tensor::{Bitmap, CooTensor, WireFormat};
+
+/// Encoder/decoder for one partition's hash bitmap, bound to the
+/// partition domain `𝕀_p` (sorted ascending). Borrows the domain —
+/// domains are multi-megabyte at real model sizes and are computed
+/// once per (h0, |G|); cloning them per sync was the top hot-spot of
+/// the first perf pass (EXPERIMENTS.md §Perf).
+#[derive(Clone, Debug)]
+pub struct HashBitmapCodec<'a> {
+    /// Sorted domain `𝕀_p`.
+    domain: &'a [u32],
+}
+
+/// A transmitted pull payload: the hash bitmap + the non-zero values in
+/// domain order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HashBitmapPayload {
+    pub bitmap: Bitmap,
+    pub values: Vec<f32>,
+}
+
+impl WireFormat for HashBitmapPayload {
+    fn wire_bytes(&self) -> usize {
+        self.bitmap.wire_bytes() + self.values.len() * crate::tensor::BYTES_F32
+    }
+}
+
+impl<'a> HashBitmapCodec<'a> {
+    pub fn new(domain: &'a [u32]) -> Self {
+        debug_assert!(domain.windows(2).all(|w| w[0] < w[1]), "domain must be sorted");
+        HashBitmapCodec { domain }
+    }
+
+    pub fn domain(&self) -> &[u32] {
+        &self.domain
+    }
+
+    pub fn domain_len(&self) -> usize {
+        self.domain.len()
+    }
+
+    /// `hash_bitmap_encode` (Alg 2): given the aggregated sparse tensor at
+    /// this server (global indices, all members of the domain), produce
+    /// the positional bitmap over the domain + values in domain order.
+    pub fn encode(&self, t: &CooTensor) -> HashBitmapPayload {
+        let mut bitmap = Bitmap::zeros(self.domain.len());
+        let mut values = Vec::with_capacity(t.nnz());
+        // Both `t.indices` and `domain` are sorted: linear merge.
+        let mut d = 0usize;
+        for (&idx, &v) in t.indices.iter().zip(t.values.iter()) {
+            while d < self.domain.len() && self.domain[d] < idx {
+                d += 1;
+            }
+            assert!(
+                d < self.domain.len() && self.domain[d] == idx,
+                "index {idx} not in partition domain — h0 mismatch between \
+                 worker and server"
+            );
+            bitmap.set(d);
+            values.push(v);
+        }
+        HashBitmapPayload { bitmap, values }
+    }
+
+    /// `hash_bitmap_decode` (Alg 2): recover the global-index sparse
+    /// tensor from the bitmap + values.
+    pub fn decode(&self, payload: &HashBitmapPayload, dense_len: usize) -> CooTensor {
+        let positions = payload.bitmap.ones();
+        assert_eq!(positions.len(), payload.values.len());
+        let indices: Vec<u32> = positions.iter().map(|&p| self.domain[p as usize]).collect();
+        CooTensor::from_sorted(dense_len, indices, payload.values.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hashing::HierarchicalHasher;
+    use crate::tensor::BYTES_F32;
+    use crate::util::propcheck::{check, prop_assert};
+    use crate::util::Pcg64;
+
+    fn random_coo(seed: u64, dense_len: usize, nnz: usize) -> CooTensor {
+        let mut rng = Pcg64::seeded(seed);
+        let mut idx = rng.sample_distinct(dense_len, nnz);
+        idx.sort_unstable();
+        CooTensor::from_sorted(
+            dense_len,
+            idx.into_iter().map(|i| i as u32).collect(),
+            (0..nnz).map(|_| rng.next_f32() + 0.01).collect(),
+        )
+    }
+
+    #[test]
+    fn paper_worked_example() {
+        // Fig 10: |G| = 15, 3 servers, 𝕀_0 with non-zeros at {5, 7}.
+        // We reproduce the mechanics with an explicit domain.
+        let codec = HashBitmapCodec::new(&[2, 5, 7, 11, 14]);
+        let t = CooTensor::from_sorted(15, vec![5, 7], vec![0.5, 0.7]);
+        let payload = codec.encode(&t);
+        // second and third domain positions are set
+        assert_eq!(payload.bitmap.ones(), vec![1, 2]);
+        let back = codec.decode(&payload, 15);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn roundtrip_with_hierarchical_domains() {
+        let dense_len = 8_192;
+        let t = random_coo(1, dense_len, 700);
+        let n = 4;
+        let h = HierarchicalHasher::with_defaults(42, n, t.nnz());
+        let out = h.partition(&t);
+        let domains = h.partition_domains(dense_len);
+        for p in 0..n {
+            let codec = HashBitmapCodec::new(&domains[p]);
+            let payload = codec.encode(&out.parts[p]);
+            let back = codec.decode(&payload, dense_len);
+            assert_eq!(back, out.parts[p]);
+        }
+    }
+
+    #[test]
+    fn theorem3_total_bitmap_size() {
+        // Total bitmap bytes across all servers == |G|/8 bytes
+        // (= |G|/32 FP32 values), independent of n.
+        let dense_len = 4_096;
+        for n in [2usize, 4, 8, 16] {
+            let h = HierarchicalHasher::with_defaults(7, n, 100);
+            let domains = h.partition_domains(dense_len);
+            let total_bits: usize = domains.iter().map(|d| d.len()).sum();
+            assert_eq!(total_bits, dense_len);
+            let total_bytes: usize = domains
+                .iter()
+                .map(|d| Bitmap::zeros(d.len()).wire_bytes())
+                .sum();
+            // ceil rounding per server adds at most n-1 bytes
+            assert!(total_bytes >= dense_len / 8);
+            assert!(total_bytes <= dense_len / 8 + n);
+            // FP32-equivalent: |G|/32 values
+            let fp32_equiv = total_bytes as f64 / BYTES_F32 as f64;
+            assert!((fp32_equiv - dense_len as f64 / 32.0).abs() <= n as f64);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not in partition domain")]
+    fn encode_rejects_foreign_index() {
+        let codec = HashBitmapCodec::new(&[1, 3, 5]);
+        let t = CooTensor::from_sorted(10, vec![2], vec![1.0]);
+        codec.encode(&t);
+    }
+
+    #[test]
+    fn prop_roundtrip_any_subset() {
+        check(80, |g| {
+            let dom_len = g.usize_in(1, 400);
+            let domain = g.distinct_sorted_u32(dom_len, 10_000);
+            let nnz = g.usize_in(0, dom_len);
+            // choose a subset of the domain as the non-zeros
+            let mut picks: Vec<usize> = (0..dom_len).collect();
+            for i in 0..nnz {
+                let j = i + (g.u64() % (dom_len - i) as u64) as usize;
+                picks.swap(i, j);
+            }
+            let mut chosen: Vec<u32> = picks[..nnz].iter().map(|&i| domain[i]).collect();
+            chosen.sort_unstable();
+            let vals: Vec<f32> = (0..nnz).map(|_| g.f64_unit() as f32 + 0.1).collect();
+            let t = CooTensor::from_sorted(10_000, chosen, vals);
+            let codec = HashBitmapCodec::new(&domain);
+            let back = codec.decode(&codec.encode(&t), 10_000);
+            prop_assert(back == t, "hash bitmap roundtrip")
+        });
+    }
+}

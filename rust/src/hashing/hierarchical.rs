@@ -1,0 +1,333 @@
+//! Algorithm 1 — the hierarchical hashing algorithm (paper §3.1.3).
+//!
+//! Partitions the non-zero indices of a sparse tensor across `n` servers
+//! such that (Theorem 2) every partition receives `|I|/n ± O(√(|I| log n / n))`
+//! indices, with **no information loss** and **consistent assignment across
+//! workers** (the partition of an index depends only on `h0(idx)`).
+//!
+//! Memory layout per partition: `r1` parallel slots probed by `h1..hk`,
+//! then a serial region (`r2` budgeted slots, growing beyond if needed)
+//! so the implementation is lossless even when `r2` is undersized — the
+//! paper assumes `r2` is big enough; we guarantee it structurally and
+//! count overflow events so the parameter studies (Fig 16) can report
+//! them.
+//!
+//! §Hardware-Adaptation: the paper's CUDA kernel uses per-slot CAS and
+//! an `atomicAdd` cursor across a global memory. This CPU implementation
+//! is reshaped for cache behaviour (see `partition`): bucket by `h0`
+//! first, then probe each partition's private region — same mapping and
+//! guarantees, no atomics. The Pallas L1 kernel replaces CAS with
+//! deterministic scatter-min rounds (python/compile/kernels/hash.py).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+
+use super::murmur::HashFamily;
+use crate::tensor::CooTensor;
+use crate::util::ThreadPool;
+
+/// Result of hashing one worker's sparse tensor into `n` partitions.
+#[derive(Clone, Debug)]
+pub struct PartitionOutput {
+    /// Per-partition sparse tensors carrying **global** indices, sorted.
+    pub parts: Vec<CooTensor>,
+    /// Number of indices that needed the serial memory (collided in all
+    /// `k` parallel rounds).
+    pub serial_writes: usize,
+    /// Number of indices that overflowed even the serial memory.
+    pub overflow_writes: usize,
+}
+
+impl PartitionOutput {
+    /// Imbalance ratio of Push for this worker (Definition 6):
+    /// `max_j n·|I_i^j| / |I_i|`.
+    pub fn push_imbalance(&self) -> f64 {
+        let total: usize = self.parts.iter().map(|p| p.nnz()).sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let max = self.parts.iter().map(|p| p.nnz()).max().unwrap_or(0);
+        max as f64 * self.parts.len() as f64 / total as f64
+    }
+}
+
+/// Configuration + state for Algorithm 1.
+#[derive(Clone, Debug)]
+pub struct HierarchicalHasher {
+    family: HashFamily,
+    /// Number of partitions (servers) `n`.
+    pub n: usize,
+    /// Rehash rounds `k`.
+    pub k: usize,
+    /// Parallel memory slots per partition `r1`.
+    pub r1: usize,
+    /// Serial memory slots per partition `r2`.
+    pub r2: usize,
+    pool: ThreadPool,
+}
+
+impl HierarchicalHasher {
+    /// The paper's default parameterization (§4.2): `k = 3`,
+    /// `r1 = 2·|G|·d_G` (≈ 2× the expected nnz), `r2 = r1/10`.
+    pub fn with_defaults(master_seed: u64, n: usize, expected_nnz: usize) -> Self {
+        let r1_total = (2 * expected_nnz).max(64);
+        Self::new(master_seed, n, 3, r1_total / n + 1, r1_total / n / 10 + 1)
+    }
+
+    /// Explicit parameters. `r1`/`r2` are per-partition slot counts.
+    pub fn new(master_seed: u64, n: usize, k: usize, r1: usize, r2: usize) -> Self {
+        assert!(n >= 1 && k >= 1 && r1 >= 1);
+        HierarchicalHasher {
+            family: HashFamily::new(master_seed, k + 1),
+            n,
+            k,
+            r1,
+            r2,
+            pool: ThreadPool::new(),
+        }
+    }
+
+    pub fn family(&self) -> &HashFamily {
+        &self.family
+    }
+
+    /// Override the worker pool (tests / perf studies).
+    pub fn with_pool(mut self, pool: ThreadPool) -> Self {
+        self.pool = pool;
+        self
+    }
+
+    /// Run Algorithm 1 on a sparse tensor. Returns per-partition sparse
+    /// tensors over the global index space (sorted, lossless).
+    ///
+    /// CPU shaping (perf pass, EXPERIMENTS.md §Perf): the paper's GPU
+    /// kernel probes a global `n × (r1+r2)` memory with atomics from all
+    /// threads. On CPU that meant every probe missed cache in a
+    /// multi-megabyte array. We instead (1) bucket index positions by
+    /// `h0` partition in one sequential pass, then (2) probe each
+    /// partition's *private* `r1` region — which fits L2 — with plain
+    /// stores, parallelizing over partitions instead of indices. Same
+    /// mapping, same guarantees (partition assignment depends only on
+    /// h0; probe order within a partition is irrelevant), ~2× faster
+    /// single-core and contention-free multi-core.
+    pub fn partition(&self, t: &CooTensor) -> PartitionOutput {
+        let nnz = t.nnz();
+        // Phase 1: bucket (index, value) pairs by partition (the h0
+        // pass). Carrying the value keeps phase 2 entirely inside the
+        // L2-sized bucket — no random loads from the big tensor arrays.
+        let mut buckets: Vec<Vec<(u32, f32)>> = (0..self.n)
+            .map(|_| Vec::with_capacity(nnz / self.n + 16))
+            .collect();
+        for (&idx, &val) in t.indices.iter().zip(t.values.iter()) {
+            buckets[self.family.partition(idx, self.n)].push((idx, val));
+        }
+
+        // Phase 2: per-partition probing; partitions are independent.
+        let serial_count = AtomicUsize::new(0);
+        let overflow_count = AtomicUsize::new(0);
+        let results: Vec<std::sync::Mutex<Option<CooTensor>>> =
+            (0..self.n).map(|_| std::sync::Mutex::new(None)).collect();
+        let process = |p: usize| {
+            let bucket = &buckets[p];
+            // Slot value: 0 = empty, else (bucket entry index) + 1 —
+            // O(1) entry lookup at extraction, supports idx = 0.
+            let mut slots = vec![0u32; self.r1];
+            let mut serial: Vec<u32> = Vec::new();
+            for (e, &(idx, _)) in bucket.iter().enumerate() {
+                let mut placed = false;
+                for round in 1..=self.k {
+                    let q = self.family.slot(round, idx, self.r1);
+                    if slots[q] == 0 {
+                        slots[q] = e as u32 + 1;
+                        placed = true;
+                        break;
+                    }
+                }
+                if !placed {
+                    // Serial memory (lines 8–11); overflow beyond r2 is
+                    // kept too — structural losslessness.
+                    serial.push(e as u32 + 1);
+                }
+            }
+            serial_count.fetch_add(serial.len(), Ordering::Relaxed);
+            overflow_count.fetch_add(serial.len().saturating_sub(self.r2), Ordering::Relaxed);
+
+            // Extraction (lines 19–23).
+            let mut idxs: Vec<u32> = Vec::with_capacity(bucket.len());
+            let mut vals: Vec<f32> = Vec::with_capacity(bucket.len());
+            for &v in slots.iter().chain(serial.iter()) {
+                if v != 0 {
+                    let (idx, val) = bucket[(v - 1) as usize];
+                    idxs.push(idx);
+                    vals.push(val);
+                }
+            }
+            // Sort by global index so downstream merges are linear (the
+            // paper notes order is irrelevant for aggregation; we keep
+            // the COO invariant). Radix beats comparison sort here.
+            crate::util::radix::radix_sort_pairs(&mut idxs, &mut vals);
+            *results[p].lock().unwrap() =
+                Some(CooTensor::from_sorted(t.dense_len, idxs, vals));
+        };
+        if self.pool.workers() > 1 && self.n > 1 {
+            self.pool.for_ranges(self.n, |range| {
+                for p in range {
+                    process(p);
+                }
+            });
+        } else {
+            for p in 0..self.n {
+                process(p);
+            }
+        }
+        let parts: Vec<CooTensor> = results
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().unwrap())
+            .collect();
+
+        PartitionOutput {
+            parts,
+            serial_writes: serial_count.load(Ordering::Relaxed),
+            overflow_writes: overflow_count.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The set `𝕀_p = {idx ∈ [0, |G|) | h0(idx) = p}` — the index domain
+    /// of partition `p`, needed by the hash bitmap (Algorithm 2). Computed
+    /// offline once per (h0, |G|) pair, as the paper prescribes.
+    pub fn partition_domain(&self, dense_len: usize, p: usize) -> Vec<u32> {
+        (0..dense_len as u32)
+            .filter(|&idx| self.family.partition(idx, self.n) == p)
+            .collect()
+    }
+
+    /// All partition domains in one pass (cheaper than n× partition_domain).
+    pub fn partition_domains(&self, dense_len: usize) -> Vec<Vec<u32>> {
+        let mut out = vec![Vec::with_capacity(dense_len / self.n + 8); self.n];
+        for idx in 0..dense_len as u32 {
+            out[self.family.partition(idx, self.n)].push(idx);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, prop_assert};
+    use crate::util::Pcg64;
+
+    fn random_coo(seed: u64, dense_len: usize, nnz: usize) -> CooTensor {
+        let mut rng = Pcg64::seeded(seed);
+        let mut idx = rng.sample_distinct(dense_len, nnz);
+        idx.sort_unstable();
+        let vals: Vec<f32> = (0..nnz).map(|_| rng.next_f32() + 0.01).collect();
+        CooTensor::from_sorted(dense_len, idx.into_iter().map(|i| i as u32).collect(), vals)
+    }
+
+    #[test]
+    fn lossless_partitioning() {
+        let t = random_coo(1, 10_000, 800);
+        let h = HierarchicalHasher::with_defaults(42, 8, t.nnz());
+        let out = h.partition(&t);
+        assert_eq!(out.parts.len(), 8);
+        let merged = CooTensor::merge_all(&out.parts);
+        assert_eq!(merged, t, "no index/value may be lost or duplicated");
+        assert_eq!(out.overflow_writes, 0);
+    }
+
+    #[test]
+    fn lossless_under_tiny_memory() {
+        // Force heavy collisions: r1 smaller than nnz/n, r2 tiny.
+        let t = random_coo(2, 5_000, 1_000);
+        let h = HierarchicalHasher::new(7, 4, 2, 16, 4);
+        let out = h.partition(&t);
+        let merged = CooTensor::merge_all(&out.parts);
+        assert_eq!(merged, t);
+        assert!(out.serial_writes > 0, "expected serial-memory pressure");
+        assert!(out.overflow_writes > 0, "expected overflow pressure");
+    }
+
+    #[test]
+    fn assignment_consistent_across_workers() {
+        // Same index on two different workers must land in the same
+        // partition — the incomplete-aggregation hazard of §3.1.3.
+        let t1 = random_coo(3, 20_000, 1_500);
+        let t2 = random_coo(4, 20_000, 1_500);
+        let h = HierarchicalHasher::with_defaults(99, 8, 1_500);
+        let o1 = h.partition(&t1);
+        let o2 = h.partition(&t2);
+        for p in 0..8 {
+            for &idx in &o1.parts[p].indices {
+                assert_eq!(h.family().partition(idx, 8), p);
+            }
+            for &idx in &o2.parts[p].indices {
+                assert_eq!(h.family().partition(idx, 8), p);
+            }
+        }
+    }
+
+    #[test]
+    fn push_imbalance_near_one() {
+        // Theorem 2: imbalance ratio ≈ 1 + Θ(√(n log n / nnz)).
+        let t = random_coo(5, 500_000, 50_000);
+        let n = 16;
+        let h = HierarchicalHasher::with_defaults(11, n, t.nnz());
+        let out = h.partition(&t);
+        let ratio = out.push_imbalance();
+        // paper measures < 1.1 for real models; allow some slack at this nnz
+        assert!(ratio < 1.12, "push imbalance {ratio}");
+    }
+
+    #[test]
+    fn skewed_input_still_balanced() {
+        // All non-zeros concentrated in the first 2% of the range —
+        // contiguous partitioning would be maximally skewed; hashing must
+        // stay balanced (the entire point of Alg 1).
+        let mut rng = Pcg64::seeded(6);
+        let dense_len = 1_000_000;
+        let hot = dense_len / 50;
+        let mut idx: Vec<u32> = rng
+            .sample_distinct(hot, 20_000)
+            .into_iter()
+            .map(|i| i as u32)
+            .collect();
+        idx.sort_unstable();
+        let vals = vec![1.0f32; idx.len()];
+        let t = CooTensor::from_sorted(dense_len, idx, vals);
+        let h = HierarchicalHasher::with_defaults(13, 16, t.nnz());
+        let out = h.partition(&t);
+        assert!(out.push_imbalance() < 1.15, "imbalance {}", out.push_imbalance());
+    }
+
+    #[test]
+    fn partition_domains_are_disjoint_cover() {
+        let h = HierarchicalHasher::with_defaults(21, 5, 100);
+        let domains = h.partition_domains(1_000);
+        let total: usize = domains.iter().map(|d| d.len()).sum();
+        assert_eq!(total, 1_000);
+        for (p, d) in domains.iter().enumerate() {
+            assert_eq!(*d, h.partition_domain(1_000, p));
+            assert!(d.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn prop_lossless_any_shape() {
+        check(40, |g| {
+            let dense_len = g.usize_in(8, 4_000);
+            let nnz = g.usize_in(0, dense_len.min(300));
+            let idx = g.distinct_sorted_u32(nnz, dense_len as u32);
+            let vals: Vec<f32> = (0..nnz).map(|_| g.f64_unit() as f32 + 0.01).collect();
+            let t = CooTensor::from_sorted(dense_len, idx, vals);
+            let n = g.usize_in(1, 12);
+            let k = g.usize_in(1, 4);
+            let r1 = g.usize_in(1, 64);
+            let r2 = g.usize_in(0, 16).max(1);
+            let h = HierarchicalHasher::new(g.u64(), n, k, r1, r2);
+            let out = h.partition(&t);
+            let merged = CooTensor::merge_all(&out.parts);
+            prop_assert(merged == t, "lossless for any (n,k,r1,r2)")
+        });
+    }
+}

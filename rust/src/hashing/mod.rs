@@ -1,0 +1,20 @@
+//! Hashing substrate and the paper's core algorithms.
+//!
+//! - [`murmur`]: MurmurHash3 plus a seeded universal family (the paper uses
+//!   MurmurHash with per-run random seeds broadcast to all workers, §4.1).
+//! - [`hierarchical`]: Algorithm 1 — the hierarchical hashing algorithm
+//!   that realizes Balanced Parallelism with no information loss.
+//! - [`strawman`]: Algorithm 3 (lossy single-hash strawman) and the
+//!   data-dependent threshold partitioner (§3.1.2), both baselines.
+//! - [`hashbitmap`]: Algorithm 2 — the hash-bitmap index format used in
+//!   Pull (Theorem 3: constant `|G|/32` index overhead per worker).
+
+pub mod hashbitmap;
+pub mod hierarchical;
+pub mod murmur;
+pub mod strawman;
+
+pub use hashbitmap::HashBitmapCodec;
+pub use hierarchical::{HierarchicalHasher, PartitionOutput};
+pub use murmur::{murmur3_32, HashFamily};
+pub use strawman::{StrawmanHasher, ThresholdPartitioner};

@@ -1,0 +1,253 @@
+//! Baseline partitioners from §3.1.2.
+//!
+//! - [`StrawmanHasher`]: Algorithm 3 — a single universal hash writes each
+//!   index into an `n × r` memory; collisions **overwrite** and lose
+//!   gradients. Balanced, data-independent, but lossy (Fig 8b, Fig 14).
+//! - [`ThresholdPartitioner`]: the data-dependent strawman — sort the
+//!   index set periodically, pick `n-1` boundary thresholds, and reuse
+//!   them for later iterations. Balanced on the iteration it was fitted
+//!   to; drifts (imbalance 1.4–5.1 in the paper's NMT trace) afterwards.
+
+use super::murmur::HashFamily;
+use crate::tensor::CooTensor;
+
+/// Algorithm 3: lossy single-hash partitioner.
+#[derive(Clone, Debug)]
+pub struct StrawmanHasher {
+    family: HashFamily,
+    /// Partitions `n`.
+    pub n: usize,
+    /// Memory slots per partition `r`.
+    pub r: usize,
+}
+
+/// Output of the strawman: partitions plus the loss accounting.
+#[derive(Clone, Debug)]
+pub struct StrawmanOutput {
+    pub parts: Vec<CooTensor>,
+    /// Indices lost to hash collisions (overwritten).
+    pub lost: usize,
+}
+
+impl StrawmanOutput {
+    /// Fraction of non-zero gradients lost (the paper's "information
+    /// loss rate", e.g. ~15.8% at memory == tensor nnz, Fig 8b).
+    pub fn loss_rate(&self, input_nnz: usize) -> f64 {
+        if input_nnz == 0 {
+            return 0.0;
+        }
+        self.lost as f64 / input_nnz as f64
+    }
+}
+
+impl StrawmanHasher {
+    /// `r_total` is the total memory size across partitions (the paper
+    /// quotes memory in multiples of `|G|·d_G`).
+    pub fn new(master_seed: u64, n: usize, r_total: usize) -> Self {
+        assert!(n >= 1);
+        StrawmanHasher {
+            family: HashFamily::new(master_seed, 1),
+            n,
+            r: (r_total / n).max(1),
+        }
+    }
+
+    /// Run Algorithm 3. The single hash `h : ℕ → [n·r]` assigns partition
+    /// `⌊h/r⌋` and slot `h mod r`; a later index overwrites an earlier
+    /// colliding one (order is the input scan order, as on a GPU the
+    /// winner is arbitrary — losses are what matter, and they're
+    /// deterministic given the hash).
+    pub fn partition(&self, t: &CooTensor) -> StrawmanOutput {
+        let nr = self.n * self.r;
+        let mut mem: Vec<u32> = vec![0; nr]; // pos+1, 0 = empty
+        let mut occupied = 0usize;
+        for pos in 0..t.nnz() {
+            let h = self.family.hash(0, t.indices[pos]) as u64 % nr as u64;
+            let slot = &mut mem[h as usize];
+            if *slot == 0 {
+                occupied += 1;
+            }
+            *slot = pos as u32 + 1; // overwrite on collision
+        }
+        let lost = t.nnz() - occupied;
+        let mut parts = Vec::with_capacity(self.n);
+        for p in 0..self.n {
+            let mut idxs = Vec::new();
+            let mut vals = Vec::new();
+            for s in 0..self.r {
+                let v = mem[p * self.r + s];
+                if v != 0 {
+                    let pos = (v - 1) as usize;
+                    idxs.push(t.indices[pos]);
+                    vals.push(t.values[pos]);
+                }
+            }
+            let mut order: Vec<usize> = (0..idxs.len()).collect();
+            order.sort_unstable_by_key(|&i| idxs[i]);
+            parts.push(CooTensor::from_sorted(
+                t.dense_len,
+                order.iter().map(|&i| idxs[i]).collect(),
+                order.iter().map(|&i| vals[i]).collect(),
+            ));
+        }
+        StrawmanOutput { parts, lost }
+    }
+}
+
+/// Data-dependent threshold partitioner (§3.1.2 strawman).
+#[derive(Clone, Debug)]
+pub struct ThresholdPartitioner {
+    /// `n - 1` ascending index thresholds splitting the range into `n`.
+    pub thresholds: Vec<u32>,
+    pub n: usize,
+}
+
+impl ThresholdPartitioner {
+    /// Fit thresholds so that `index_set` splits into `n` equal-count
+    /// partitions. `index_set` must be sorted ascending.
+    pub fn fit(index_set: &[u32], n: usize) -> Self {
+        assert!(n >= 1);
+        debug_assert!(index_set.windows(2).all(|w| w[0] < w[1]));
+        let mut thresholds = Vec::with_capacity(n - 1);
+        for j in 1..n {
+            let pos = j * index_set.len() / n;
+            let thr = if index_set.is_empty() {
+                0
+            } else {
+                index_set[pos.min(index_set.len() - 1)]
+            };
+            thresholds.push(thr);
+        }
+        ThresholdPartitioner { thresholds, n }
+    }
+
+    /// Partition id for an index under the fitted thresholds.
+    #[inline]
+    pub fn partition_of(&self, idx: u32) -> usize {
+        self.thresholds.partition_point(|&t| t <= idx)
+    }
+
+    /// Split a sparse tensor by the fitted thresholds.
+    pub fn partition(&self, t: &CooTensor) -> Vec<CooTensor> {
+        let mut parts: Vec<(Vec<u32>, Vec<f32>)> =
+            (0..self.n).map(|_| (Vec::new(), Vec::new())).collect();
+        for (&i, &v) in t.indices.iter().zip(t.values.iter()) {
+            let p = self.partition_of(i);
+            parts[p].0.push(i);
+            parts[p].1.push(v);
+        }
+        parts
+            .into_iter()
+            .map(|(i, v)| CooTensor::from_sorted(t.dense_len, i, v))
+            .collect()
+    }
+
+    /// Push imbalance of this tensor under the fitted thresholds.
+    pub fn push_imbalance(&self, t: &CooTensor) -> f64 {
+        if t.nnz() == 0 {
+            return 1.0;
+        }
+        let parts = self.partition(t);
+        let max = parts.iter().map(|p| p.nnz()).max().unwrap();
+        max as f64 * self.n as f64 / t.nnz() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn random_coo(seed: u64, dense_len: usize, nnz: usize) -> CooTensor {
+        let mut rng = Pcg64::seeded(seed);
+        let mut idx = rng.sample_distinct(dense_len, nnz);
+        idx.sort_unstable();
+        CooTensor::from_sorted(
+            dense_len,
+            idx.into_iter().map(|i| i as u32).collect(),
+            (0..nnz).map(|_| rng.next_f32() + 0.01).collect(),
+        )
+    }
+
+    #[test]
+    fn strawman_loses_under_pressure() {
+        let t = random_coo(1, 10_000, 2_000);
+        // memory == nnz → expect ≈ 1/e ≈ 37% empty ⇒ substantial loss
+        let h = StrawmanHasher::new(5, 4, 2_000);
+        let out = h.partition(&t);
+        assert!(out.lost > 0);
+        let kept: usize = out.parts.iter().map(|p| p.nnz()).sum();
+        assert_eq!(kept + out.lost, t.nnz());
+        // loss rate in the ballpark of the birthday analysis (1 - (1-e^-1))
+        let rate = out.loss_rate(t.nnz());
+        assert!(rate > 0.15 && rate < 0.45, "loss rate {rate}");
+    }
+
+    #[test]
+    fn strawman_lossless_with_huge_memory() {
+        let t = random_coo(2, 10_000, 500);
+        let h = StrawmanHasher::new(5, 4, 4_000_000);
+        let out = h.partition(&t);
+        assert_eq!(out.lost, 0);
+        assert_eq!(CooTensor::merge_all(&out.parts), t);
+    }
+
+    #[test]
+    fn strawman_kept_entries_are_subset() {
+        let t = random_coo(3, 5_000, 1_000);
+        let h = StrawmanHasher::new(7, 4, 1_000);
+        let out = h.partition(&t);
+        let dense = t.to_dense();
+        for p in &out.parts {
+            for (&i, &v) in p.indices.iter().zip(p.values.iter()) {
+                assert_eq!(dense.values[i as usize], v);
+            }
+        }
+    }
+
+    #[test]
+    fn threshold_balanced_on_fit_iteration() {
+        let t = random_coo(4, 100_000, 10_000);
+        let part = ThresholdPartitioner::fit(&t.indices, 8);
+        let ratio = part.push_imbalance(&t);
+        assert!(ratio < 1.01, "fit-iteration imbalance {ratio}");
+    }
+
+    #[test]
+    fn threshold_drifts_on_shifted_distribution() {
+        // Fit on uniform indices, apply to a distribution concentrated in
+        // the low range — imbalance must blow up (the §3.1.2 failure mode).
+        let fit_t = random_coo(5, 100_000, 10_000);
+        let part = ThresholdPartitioner::fit(&fit_t.indices, 8);
+        let mut rng = Pcg64::seeded(6);
+        let mut idx: Vec<u32> = rng
+            .sample_distinct(12_500, 5_000)
+            .into_iter()
+            .map(|i| i as u32)
+            .collect();
+        idx.sort_unstable();
+        let shifted = CooTensor::from_sorted(100_000, idx, vec![1.0; 5_000]);
+        let ratio = part.push_imbalance(&shifted);
+        assert!(ratio > 4.0, "expected drift, got {ratio}");
+    }
+
+    #[test]
+    fn threshold_partition_is_lossless() {
+        let t = random_coo(7, 50_000, 5_000);
+        let part = ThresholdPartitioner::fit(&t.indices, 16);
+        let parts = part.partition(&t);
+        assert_eq!(CooTensor::merge_all(&parts), t);
+    }
+
+    #[test]
+    fn threshold_partition_of_contiguous() {
+        let part = ThresholdPartitioner {
+            thresholds: vec![10, 20],
+            n: 3,
+        };
+        assert_eq!(part.partition_of(5), 0);
+        assert_eq!(part.partition_of(10), 1);
+        assert_eq!(part.partition_of(19), 1);
+        assert_eq!(part.partition_of(25), 2);
+    }
+}

@@ -1,0 +1,31 @@
+//! # zen-sync
+//!
+//! A reproduction of **"Zen: Near-Optimal Sparse Tensor Synchronization
+//! for Distributed DNN Training"** (arXiv title: *Empowering Distributed
+//! Training with Sparsity-driven Data Synchronization*) as a three-layer
+//! rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)**: the distributed-training synchronization
+//!   runtime — sparse tensor formats, the hierarchical hashing algorithm
+//!   (Alg 1), the hash bitmap (Alg 2), all baseline communication schemes,
+//!   a virtual-time cluster/network simulator, and the training
+//!   coordinator that drives the AOT-compiled model.
+//! - **L2**: `python/compile/model.py` — the embedding-LM compute graph,
+//!   lowered once to HLO text and executed via [`runtime`] (PJRT CPU).
+//! - **L1**: `python/compile/kernels/` — Pallas kernels (hash mixing,
+//!   fused embedding+MLP) validated against pure-jnp oracles.
+//!
+//! See DESIGN.md for the experiment index mapping every paper table and
+//! figure to a module and a regeneration command.
+pub mod util;
+pub mod tensor;
+pub mod figures;
+pub mod hashing;
+pub mod analysis;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod runtime;
+pub mod schemes;
+pub mod wire;
+pub mod workload;

@@ -1,0 +1,124 @@
+//! `zen` — leader CLI for the synchronization runtime.
+//!
+//! Subcommands:
+//!   sim     simulate data-parallel training on a Table-1 workload
+//!   train   really train the embedding LM through the AOT stack
+//!   schemes list schemes and their Table-2 dimensions
+//!
+//! Examples:
+//!   zen sim --model DeepFM --machines 16 --scheme zen --link tcp25
+//!   zen train --shape tiny --workers 4 --scheme zen --steps 50
+//!   zen schemes
+
+use zen::cluster::LinkKind;
+use zen::config::Args;
+use zen::coordinator::lm::{LmConfig, LmTrainer};
+use zen::coordinator::{SimConfig, SimDriver};
+use zen::workload::profiles;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("sim") => cmd_sim(&args),
+        Some("train") => cmd_train(&args),
+        Some("schemes") => cmd_schemes(),
+        _ => {
+            eprintln!(
+                "usage: zen <sim|train|schemes> [--options]\n\
+                 sim:   --model LSTM|DeepFM|NMT|BERT --machines N --scheme S --link tcp25|rdma100\n\
+                 train: --shape tiny|paper_100m --workers N --scheme S --steps N"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_sim(args: &Args) -> anyhow::Result<()> {
+    let args = &args.clone().maybe_load_config("run")?;
+    let model = args.get_or("model", "DeepFM");
+    let profile = profiles::by_name(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{model}' (LSTM|DeepFM|NMT|BERT)"))?;
+    let mut cfg = SimConfig::new(
+        profile,
+        args.get_usize("machines", 16),
+        args.get_or("scheme", "zen"),
+    );
+    cfg.link = args.link("link", LinkKind::Tcp25);
+    cfg.iterations = args.get_usize("iters", 4);
+    cfg.scale = args.get_usize("scale", 64);
+    cfg.gpus_per_machine = args.get_usize("gpus", 8);
+    cfg.seed = args.get_u64("seed", 0xbeef);
+    let r = SimDriver::new(cfg.clone())?.run();
+    println!(
+        "model={} machines={} gpus/machine={} scheme={}",
+        cfg.profile.name, cfg.machines, cfg.gpus_per_machine, r.scheme
+    );
+    println!(
+        "  emb-sync {:.2}ms  mlp-sync {:.2}ms  intra {:.2}ms  compute {:.0}ms",
+        r.emb_sync_mean * 1e3,
+        r.mlp_sync_time * 1e3,
+        r.intra_time * 1e3,
+        r.compute_time * 1e3
+    );
+    if !r.push_imbalance.is_empty() {
+        println!(
+            "  push-imbalance {:.3}  pull-imbalance {:.3}",
+            r.push_imbalance.iter().sum::<f64>() / r.push_imbalance.len() as f64,
+            r.pull_imbalance.iter().sum::<f64>() / r.pull_imbalance.len() as f64
+        );
+    }
+    println!("  throughput {:.0} samples/s", r.throughput);
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let args = &args.clone().maybe_load_config("train")?;
+    let mut cfg = match args.get_or("shape", "tiny") {
+        "paper_100m" | "100m" => LmConfig::paper_100m(),
+        _ => LmConfig::tiny(),
+    };
+    cfg.lr = args.get_f64("lr", cfg.lr as f64) as f32;
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    let workers = args.get_usize("workers", 4);
+    let steps = args.get_usize("steps", 50);
+    let scheme = args.get_or("scheme", "zen");
+    let link = args.link("link", LinkKind::Tcp25);
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    println!(
+        "training {}×{} embedding ({} params) + MLP, {} workers, scheme={}",
+        cfg.vocab,
+        cfg.dim,
+        cfg.emb_params() + cfg.mlp_params(),
+        workers,
+        scheme
+    );
+    let mut t = LmTrainer::new(cfg, workers, scheme, link, &artifacts)?;
+    let log = t.run(steps, args.get_usize("log-every", 10), true)?;
+    println!(
+        "done: final loss {:.4}, total emb comm {:.1}ms (virtual), compute {:.1}s (wall)",
+        log.losses.last().copied().unwrap_or(f32::NAN),
+        log.emb_comm_total * 1e3,
+        log.compute_wall_total
+    );
+    Ok(())
+}
+
+fn cmd_schemes() -> anyhow::Result<()> {
+    println!(
+        "{:<12} {:<14} {:<12} {:<15} {:<14} format",
+        "scheme", "communication", "aggregation", "partition", "balance"
+    );
+    for s in zen::schemes::all_schemes(4, 0, 1024) {
+        let d = s.dims();
+        println!(
+            "{:<12} {:<14} {:<12} {:<15} {:<14} {}",
+            s.name(),
+            format!("{:?}", d.communication),
+            format!("{:?}", d.aggregation),
+            format!("{:?}", d.partition),
+            format!("{:?}", d.balance),
+            d.format
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,134 @@
+//! PJRT runtime — loads AOT-compiled HLO artifacts and executes them on
+//! the request path (rust only; python never runs at training time).
+//!
+//! The interchange format is **HLO text** (not serialized protos): jax
+//! ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects,
+//! while the text parser reassigns ids cleanly. `python/compile/aot.py`
+//! writes `artifacts/*.hlo.txt`; [`Runtime::load_hlo`] compiles them once
+//! per process and [`Executable::run`] executes with concrete literals.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Wraps the PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Construct the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo<P: AsRef<Path>>(&self, path: P) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| "hlo".into()),
+        })
+    }
+}
+
+/// A compiled HLO module ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened tuple outputs.
+    /// (aot.py lowers with `return_tuple=True`, so the single result is a
+    /// tuple literal that we decompose.)
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        literal
+            .to_tuple()
+            .with_context(|| format!("expected tuple output from {} — lower with return_tuple=True", self.name))
+    }
+}
+
+/// Literal construction/extraction helpers used by the coordinator.
+pub mod lit {
+    use super::*;
+
+    /// f32 literal of the given shape from a flat slice.
+    pub fn f32(values: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(n as usize == values.len(), "shape/data mismatch");
+        Ok(xla::Literal::vec1(values).reshape(dims)?)
+    }
+
+    /// i32 literal of the given shape.
+    pub fn i32(values: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(n as usize == values.len(), "shape/data mismatch");
+        Ok(xla::Literal::vec1(values).reshape(dims)?)
+    }
+
+    /// Extract a flat f32 vector.
+    pub fn to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+        Ok(l.to_vec::<f32>()?)
+    }
+
+    /// Extract a scalar f32 (rank-0 or single-element).
+    pub fn scalar_f32(l: &xla::Literal) -> Result<f32> {
+        let v = l.to_vec::<f32>()?;
+        anyhow::ensure!(v.len() == 1, "expected scalar, got {} elems", v.len());
+        Ok(v[0])
+    }
+
+    /// Extract a flat u32 vector.
+    pub fn to_u32(l: &xla::Literal) -> Result<Vec<u32>> {
+        Ok(l.to_vec::<u32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Tests that need artifacts live in rust/tests/runtime_hlo.rs
+    // (integration, after `make artifacts`). Here: client + literals only.
+    use super::*;
+
+    #[test]
+    fn cpu_client_boots() {
+        let rt = Runtime::cpu().expect("PJRT CPU client");
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = lit::f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(lit::to_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(lit::f32(&[1.0, 2.0], &[3]).is_err());
+    }
+}

@@ -1,0 +1,199 @@
+//! AGsparse — sparse all-gather (PyTorch DDP's sparse path, paper §2.3.3).
+//!
+//! Every GPU collects every other GPU's COO tensor, then aggregates
+//! locally (one-shot, Centralization). Three communication patterns are
+//! implemented, matching footnote 1 ("different implementations for
+//! AGsparse with different communication patterns"): point-to-point
+//! (default), ring, and hierarchy (recursive doubling).
+//!
+//! Traffic per GPU grows with `Σ_j nnz_j` — overlaps between tensors are
+//! transmitted in full and reduced only at the destination, which is why
+//! AGsparse degrades past ~40 GPUs in Fig 7.
+
+use super::*;
+use crate::cluster::StageReport;
+
+/// Which all-gather topology to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AgPattern {
+    PointToPoint,
+    Ring,
+    Hierarchy,
+}
+
+/// AGsparse scheme.
+#[derive(Clone, Debug)]
+pub struct AgSparse {
+    pattern: AgPattern,
+}
+
+impl AgSparse {
+    pub fn new(pattern: AgPattern) -> Self {
+        AgSparse { pattern }
+    }
+}
+
+impl SyncScheme for AgSparse {
+    fn name(&self) -> &'static str {
+        match self.pattern {
+            AgPattern::PointToPoint => "AGsparse",
+            AgPattern::Ring => "AGsparse-ring",
+            AgPattern::Hierarchy => "AGsparse-hier",
+        }
+    }
+
+    fn dims(&self) -> SchemeDims {
+        SchemeDims {
+            communication: match self.pattern {
+                AgPattern::PointToPoint => CommPattern::PointToPoint,
+                AgPattern::Ring => CommPattern::Ring,
+                AgPattern::Hierarchy => CommPattern::Hierarchy,
+            },
+            aggregation: AggPattern::OneShot,
+            partition: PartitionPattern::Centralization,
+            balance: BalancePattern::NotApplicable,
+            format: "COO",
+        }
+    }
+
+    fn sync(&self, inputs: &[CooTensor], net: &Network) -> SyncResult {
+        let n = inputs.len();
+        assert_eq!(n, net.endpoints);
+        let bytes: Vec<u64> = inputs
+            .iter()
+            .map(|t| crate::tensor::WireFormat::wire_bytes(t) as u64)
+            .collect();
+
+        let mut report = CommReport::new();
+        match self.pattern {
+            AgPattern::PointToPoint => {
+                // One stage: node i sends its tensor to all others.
+                let mut m = vec![vec![0u64; n]; n];
+                for (i, row) in m.iter_mut().enumerate() {
+                    for (j, cell) in row.iter_mut().enumerate() {
+                        if i != j {
+                            *cell = bytes[i];
+                        }
+                    }
+                }
+                report.push(net.stage_from_matrix("ag-p2p", &m));
+            }
+            AgPattern::Ring => {
+                // n-1 stages; stage s: node i forwards the tensor that
+                // originated at (i - s) mod n to (i + 1) mod n.
+                for s in 0..n.saturating_sub(1) {
+                    let mut m = vec![vec![0u64; n]; n];
+                    for i in 0..n {
+                        let origin = (i + n - s) % n;
+                        m[i][(i + 1) % n] = bytes[origin];
+                    }
+                    report.push(net.stage_from_matrix("ag-ring", &m));
+                }
+            }
+            AgPattern::Hierarchy => {
+                // Recursive doubling: stage s exchanges the 2^s tensors
+                // gathered so far with the partner at distance 2^s.
+                assert!(n.is_power_of_two(), "hierarchy pattern needs 2^k nodes");
+                let mut have: Vec<Vec<usize>> = (0..n).map(|i| vec![i]).collect();
+                let mut dist = 1;
+                while dist < n {
+                    let mut m = vec![vec![0u64; n]; n];
+                    let mut new_have = have.clone();
+                    for i in 0..n {
+                        let peer = i ^ dist;
+                        let payload: u64 = have[i].iter().map(|&t| bytes[t]).sum();
+                        m[i][peer] = payload;
+                        new_have[peer].extend(have[i].iter().copied());
+                    }
+                    for h in new_have.iter_mut() {
+                        h.sort_unstable();
+                        h.dedup();
+                    }
+                    have = new_have;
+                    report.push(net.stage_from_matrix("ag-hier", &m));
+                    dist <<= 1;
+                }
+            }
+        }
+
+        // One-shot aggregation at every node.
+        let aggregated = CooTensor::merge_all(inputs);
+        SyncResult {
+            outputs: vec![aggregated; n],
+            report,
+        }
+    }
+}
+
+#[allow(dead_code)]
+fn unused(_: StageReport) {}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::overlapping_inputs;
+    use super::*;
+    use crate::cluster::LinkKind;
+    use crate::tensor::WireFormat;
+
+    #[test]
+    fn all_patterns_correct() {
+        let inputs = overlapping_inputs(1, 4, 2000, 60, 40);
+        let net = Network::new(4, LinkKind::Tcp25);
+        for p in [AgPattern::PointToPoint, AgPattern::Ring, AgPattern::Hierarchy] {
+            let r = AgSparse::new(p).sync(&inputs, &net);
+            verify_outputs(&r, &inputs);
+        }
+    }
+
+    #[test]
+    fn p2p_traffic_is_n_minus_1_times_all() {
+        let n = 5;
+        let inputs = overlapping_inputs(2, n, 1000, 20, 20);
+        let net = Network::new(n, LinkKind::Tcp25);
+        let r = AgSparse::new(AgPattern::PointToPoint).sync(&inputs, &net);
+        let total: u64 = inputs.iter().map(|t| t.wire_bytes() as u64).sum();
+        assert_eq!(r.report.total_bytes(), (n as u64 - 1) * total);
+    }
+
+    #[test]
+    fn ring_and_p2p_same_total_traffic() {
+        let n = 4;
+        let inputs = overlapping_inputs(3, n, 1000, 30, 10);
+        let net = Network::new(n, LinkKind::Tcp25);
+        let p2p = AgSparse::new(AgPattern::PointToPoint).sync(&inputs, &net);
+        let ring = AgSparse::new(AgPattern::Ring).sync(&inputs, &net);
+        assert_eq!(p2p.report.total_bytes(), ring.report.total_bytes());
+        // but ring has n-1 sequential stages
+        assert_eq!(ring.report.stages.len(), n - 1);
+        assert_eq!(p2p.report.stages.len(), 1);
+    }
+
+    #[test]
+    fn hierarchy_gathers_everything() {
+        let n = 8;
+        let inputs = overlapping_inputs(4, n, 3000, 50, 25);
+        let net = Network::new(n, LinkKind::Tcp25);
+        let r = AgSparse::new(AgPattern::Hierarchy).sync(&inputs, &net);
+        verify_outputs(&r, &inputs);
+        assert_eq!(r.report.stages.len(), 3); // log2(8)
+    }
+
+    #[test]
+    fn traffic_does_not_shrink_with_overlap() {
+        // Centralization can't exploit overlap: identical vs disjoint
+        // tensors with equal nnz produce identical traffic.
+        let n = 4;
+        let net = Network::new(n, LinkKind::Tcp25);
+        let same = overlapping_inputs(5, n, 1000, 100, 0);
+        let r1 = AgSparse::new(AgPattern::PointToPoint).sync(&same, &net);
+        let nnz = same[0].nnz();
+        let disjoint: Vec<CooTensor> = (0..n as u32)
+            .map(|w| {
+                let idx: Vec<u32> = (0..nnz as u32).map(|i| w * nnz as u32 + i).collect();
+                CooTensor::from_sorted(1000 * n, idx, vec![1.0; nnz])
+            })
+            .collect();
+        let r2 = AgSparse::new(AgPattern::PointToPoint).sync(&disjoint, &net);
+        assert_eq!(r1.report.total_bytes(), r2.report.total_bytes());
+    }
+}

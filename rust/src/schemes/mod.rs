@@ -1,0 +1,216 @@
+//! Communication schemes for sparse tensor synchronization (paper §2.3).
+//!
+//! Every scheme implements [`SyncScheme`]: given one sparse gradient
+//! tensor per machine, it *really* moves and aggregates the data
+//! (correctness is asserted against a dense reference in tests) while
+//! charging virtual network time through [`crate::cluster::Network`] —
+//! byte-for-byte the traffic the real system would generate.
+//!
+//! The paper's four design dimensions (communication / aggregation /
+//! partition / balance, Table 2) are exposed via [`SchemeDims`] so the
+//! taxonomy table regenerates from the implementations themselves.
+
+pub mod agsparse;
+pub mod dense;
+pub mod omnireduce;
+pub mod sparcml;
+pub mod sparse_ps;
+pub mod strawman_scheme;
+pub mod zen;
+
+pub use agsparse::{AgPattern, AgSparse};
+pub use dense::DenseAllReduce;
+pub use omnireduce::OmniReduce;
+pub use sparcml::SparCml;
+pub use sparse_ps::SparsePs;
+pub use strawman_scheme::StrawmanScheme;
+pub use zen::{Zen, ZenIndexFormat};
+
+use crate::cluster::{CommReport, Network};
+use crate::tensor::CooTensor;
+
+/// Table 2 dimension values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommPattern {
+    Ring,
+    Hierarchy,
+    PointToPoint,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggPattern {
+    Incremental,
+    OneShot,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionPattern {
+    Centralization,
+    Parallelism,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BalancePattern {
+    Balanced,
+    Imbalanced,
+    NotApplicable,
+}
+
+/// A scheme's position in the design space (Table 2 row).
+#[derive(Clone, Debug)]
+pub struct SchemeDims {
+    pub communication: CommPattern,
+    pub aggregation: AggPattern,
+    pub partition: PartitionPattern,
+    pub balance: BalancePattern,
+    pub format: &'static str,
+}
+
+/// Result of synchronizing one tensor across all endpoints.
+#[derive(Clone, Debug)]
+pub struct SyncResult {
+    /// Aggregated tensor at each endpoint (must all equal the sum).
+    pub outputs: Vec<CooTensor>,
+    pub report: CommReport,
+}
+
+/// A communication scheme for synchronizing sparse gradient tensors.
+pub trait SyncScheme: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Table 2 classification.
+    fn dims(&self) -> SchemeDims;
+
+    /// Synchronize: every endpoint contributes one sparse tensor over the
+    /// same dense range; every endpoint ends with the full aggregation.
+    fn sync(&self, inputs: &[CooTensor], net: &Network) -> SyncResult;
+}
+
+/// Reference aggregation: dense element-wise sum of all inputs.
+pub fn reference_sum(inputs: &[CooTensor]) -> crate::tensor::DenseTensor {
+    assert!(!inputs.is_empty());
+    let mut acc = crate::tensor::DenseTensor::zeros(inputs[0].dense_len);
+    for t in inputs {
+        assert_eq!(t.dense_len, acc.len());
+        acc.add_coo(t);
+    }
+    acc
+}
+
+/// Assert all endpoint outputs equal the reference within float tolerance
+/// (summation order differs across schemes). Panics with context on
+/// mismatch; used by tests and the coordinator's self-check mode.
+pub fn verify_outputs(result: &SyncResult, inputs: &[CooTensor]) {
+    let reference = reference_sum(inputs);
+    for (e, out) in result.outputs.iter().enumerate() {
+        let dense = out.to_dense();
+        assert_eq!(dense.len(), reference.len(), "endpoint {e} length");
+        for i in 0..dense.len() {
+            let (a, b) = (dense.values[i], reference.values[i]);
+            let tol = 1e-5f32.max(b.abs() * 1e-5);
+            assert!(
+                (a - b).abs() <= tol,
+                "endpoint {e}, index {i}: scheme={a}, reference={b}"
+            );
+        }
+    }
+}
+
+/// Construct every scheme (for sweeps) at a given endpoint count.
+/// `zen_seed` feeds Zen's hash family.
+pub fn all_schemes(n: usize, zen_seed: u64, expected_nnz: usize) -> Vec<Box<dyn SyncScheme>> {
+    vec![
+        Box::new(DenseAllReduce::new()),
+        Box::new(AgSparse::new(AgPattern::PointToPoint)),
+        Box::new(SparCml::new()),
+        Box::new(SparsePs::new()),
+        Box::new(OmniReduce::new(crate::tensor::block::DEFAULT_BLOCK)),
+        Box::new(Zen::new(zen_seed, n, expected_nnz, ZenIndexFormat::HashBitmap)),
+    ]
+}
+
+/// Construct a scheme by CLI name. Recognized: `allreduce`/`dense`,
+/// `agsparse`, `sparcml`, `sparseps`, `omnireduce`, `zen`, `zen-coo`,
+/// `strawman:<mem_multiple>` (lossy).
+pub fn by_name(
+    name: &str,
+    n: usize,
+    seed: u64,
+    expected_nnz: usize,
+) -> Option<Box<dyn SyncScheme>> {
+    let lower = name.to_ascii_lowercase();
+    if let Some(mult) = lower.strip_prefix("strawman:") {
+        let m: f64 = mult.parse().ok()?;
+        return Some(Box::new(StrawmanScheme::new(seed, n, expected_nnz, m)));
+    }
+    Some(match lower.as_str() {
+        "allreduce" | "dense" => Box::new(DenseAllReduce::new()),
+        "agsparse" => Box::new(AgSparse::new(AgPattern::PointToPoint)),
+        "agsparse-ring" => Box::new(AgSparse::new(AgPattern::Ring)),
+        "agsparse-hier" => Box::new(AgSparse::new(AgPattern::Hierarchy)),
+        "sparcml" => Box::new(SparCml::new()),
+        "sparseps" | "sparse-ps" => Box::new(SparsePs::new()),
+        "omnireduce" => Box::new(OmniReduce::new(crate::tensor::block::DEFAULT_BLOCK)),
+        "zen" => Box::new(Zen::new(seed, n, expected_nnz, ZenIndexFormat::HashBitmap)),
+        "zen-coo" => Box::new(Zen::new(seed, n, expected_nnz, ZenIndexFormat::Coo)),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::util::Pcg64;
+
+    /// Random per-worker sparse tensors with a shared hot set (overlap)
+    /// plus private tails — the §2.2 structure in miniature.
+    pub fn overlapping_inputs(
+        seed: u64,
+        n: usize,
+        dense_len: usize,
+        shared: usize,
+        private: usize,
+    ) -> Vec<CooTensor> {
+        let mut rng = Pcg64::seeded(seed);
+        let hot: Vec<usize> = rng.sample_distinct(dense_len, shared);
+        (0..n)
+            .map(|w| {
+                let mut idx: Vec<u32> = hot.iter().map(|&i| i as u32).collect();
+                let mut priv_rng = Pcg64::new(seed ^ w as u64, 55);
+                for _ in 0..private {
+                    idx.push(priv_rng.below(dense_len as u64) as u32);
+                }
+                idx.sort_unstable();
+                idx.dedup();
+                let vals: Vec<f32> = idx
+                    .iter()
+                    .map(|_| priv_rng.next_f32() * 2.0 - 1.0)
+                    .map(|v| if v == 0.0 { 0.5 } else { v })
+                    .collect();
+                CooTensor::from_sorted(dense_len, idx, vals)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_sum_adds() {
+        let a = CooTensor::from_sorted(4, vec![0, 2], vec![1.0, 2.0]);
+        let b = CooTensor::from_sorted(4, vec![2, 3], vec![3.0, 4.0]);
+        let s = reference_sum(&[a, b]);
+        assert_eq!(s.values, vec![1.0, 0.0, 5.0, 4.0]);
+    }
+
+    #[test]
+    fn all_schemes_constructs_six() {
+        let schemes = all_schemes(4, 1, 100);
+        assert_eq!(schemes.len(), 6);
+        let names: Vec<_> = schemes.iter().map(|s| s.name()).collect();
+        assert!(names.contains(&"Zen"));
+        assert!(names.contains(&"AllReduce"));
+    }
+}

@@ -1,0 +1,170 @@
+//! SparCML — SSAR_Recursive_double (Renggli et al., paper §2.3.3).
+//!
+//! Sparse allreduce with recursive doubling: `log n` stages; at stage `s`
+//! each node exchanges its *current partial aggregate* with the partner
+//! at distance `2^s` and merges incrementally (Hierarchy, Incremental,
+//! Centralization in Table 2). Densification bites: stage-`s` payloads
+//! have density `d^(2^s)`, so overlapped gradients are shipped
+//! repeatedly — Lemma 5's slack versus Balanced Parallelism.
+//!
+//! Non-power-of-two node counts use the standard pre/post folding step:
+//! the excess nodes first send their tensor to a partner inside the
+//! power-of-two core, and receive the final aggregate back at the end.
+
+use super::*;
+
+/// SparCML SSAR recursive-doubling scheme.
+#[derive(Clone, Debug, Default)]
+pub struct SparCml;
+
+impl SparCml {
+    pub fn new() -> Self {
+        SparCml
+    }
+}
+
+impl SyncScheme for SparCml {
+    fn name(&self) -> &'static str {
+        "SparCML"
+    }
+
+    fn dims(&self) -> SchemeDims {
+        SchemeDims {
+            communication: CommPattern::Hierarchy,
+            aggregation: AggPattern::Incremental,
+            partition: PartitionPattern::Centralization,
+            balance: BalancePattern::NotApplicable,
+            format: "COO",
+        }
+    }
+
+    fn sync(&self, inputs: &[CooTensor], net: &Network) -> SyncResult {
+        let n = inputs.len();
+        assert_eq!(n, net.endpoints);
+        let mut report = CommReport::new();
+        if n == 1 {
+            return SyncResult {
+                outputs: vec![inputs[0].clone()],
+                report,
+            };
+        }
+
+        // Largest power of two ≤ n.
+        let core = 1usize << (usize::BITS - 1 - n.leading_zeros());
+        let excess = n - core;
+        // Current partial aggregate per node.
+        let mut partial: Vec<CooTensor> = inputs.to_vec();
+
+        // Pre-fold: node core+j sends its tensor to node j, which merges.
+        if excess > 0 {
+            let mut m = vec![vec![0u64; n]; n];
+            for j in 0..excess {
+                let src = core + j;
+                m[src][j] = crate::tensor::WireFormat::wire_bytes(&partial[src]) as u64;
+                let merged = partial[j].merge(&partial[src]);
+                partial[j] = merged;
+            }
+            report.push(net.stage_from_matrix("fold-in", &m));
+        }
+
+        // Recursive doubling within the core.
+        let mut dist = 1usize;
+        while dist < core {
+            let mut m = vec![vec![0u64; n]; n];
+            let snapshot = partial.clone();
+            for i in 0..core {
+                let peer = i ^ dist;
+                m[i][peer] = crate::tensor::WireFormat::wire_bytes(&snapshot[i]) as u64;
+                partial[i] = snapshot[i].merge(&snapshot[peer]);
+            }
+            report.push(net.stage_from_matrix("rec-double", &m));
+            dist <<= 1;
+        }
+
+        // Post-fold: send the final aggregate back to the excess nodes.
+        if excess > 0 {
+            let mut m = vec![vec![0u64; n]; n];
+            for j in 0..excess {
+                let dst = core + j;
+                m[j][dst] = crate::tensor::WireFormat::wire_bytes(&partial[j]) as u64;
+                partial[dst] = partial[j].clone();
+            }
+            report.push(net.stage_from_matrix("fold-out", &m));
+        }
+
+        SyncResult {
+            outputs: partial,
+            report,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::overlapping_inputs;
+    use super::*;
+    use crate::cluster::LinkKind;
+
+    #[test]
+    fn power_of_two_correct() {
+        let inputs = overlapping_inputs(1, 8, 4000, 80, 40);
+        let net = Network::new(8, LinkKind::Tcp25);
+        let r = SparCml::new().sync(&inputs, &net);
+        verify_outputs(&r, &inputs);
+        assert_eq!(r.report.stages.len(), 3);
+    }
+
+    #[test]
+    fn non_power_of_two_correct() {
+        for n in [3usize, 5, 6, 7, 12] {
+            let inputs = overlapping_inputs(n as u64, n, 2000, 40, 30);
+            let net = Network::new(n, LinkKind::Tcp25);
+            let r = SparCml::new().sync(&inputs, &net);
+            verify_outputs(&r, &inputs);
+        }
+    }
+
+    #[test]
+    fn payload_grows_with_densification() {
+        // With disjoint tensors, stage-s payload doubles every stage.
+        let n = 8;
+        let nnz = 100usize;
+        let inputs: Vec<CooTensor> = (0..n as u32)
+            .map(|w| {
+                let idx: Vec<u32> = (0..nnz as u32).map(|i| w * nnz as u32 + i).collect();
+                CooTensor::from_sorted(nnz * n, idx, vec![1.0; nnz])
+            })
+            .collect();
+        let net = Network::new(n, LinkKind::Tcp25);
+        let r = SparCml::new().sync(&inputs, &net);
+        let per_stage: Vec<u64> = r.report.stages.iter().map(|s| s.sent[0]).collect();
+        assert_eq!(per_stage.len(), 3);
+        assert_eq!(per_stage[1], per_stage[0] * 2);
+        assert_eq!(per_stage[2], per_stage[0] * 4);
+    }
+
+    #[test]
+    fn full_overlap_payload_constant() {
+        // Identical index sets: densification ratio 1, payload constant
+        // across stages — but the overlap is still shipped log n times.
+        let n = 8;
+        let idx: Vec<u32> = (0..100).collect();
+        let inputs: Vec<CooTensor> = (0..n)
+            .map(|_| CooTensor::from_sorted(1000, idx.clone(), vec![1.0; 100]))
+            .collect();
+        let net = Network::new(n, LinkKind::Tcp25);
+        let r = SparCml::new().sync(&inputs, &net);
+        let per_stage: Vec<u64> = r.report.stages.iter().map(|s| s.sent[0]).collect();
+        assert!(per_stage.windows(2).all(|w| w[0] == w[1]));
+        verify_outputs(&r, &inputs);
+    }
+
+    #[test]
+    fn single_node_noop() {
+        let inputs = overlapping_inputs(9, 1, 500, 10, 10);
+        let net = Network::new(1, LinkKind::Tcp25);
+        let r = SparCml::new().sync(&inputs, &net);
+        assert_eq!(r.report.total_bytes(), 0);
+        verify_outputs(&r, &inputs);
+    }
+}

@@ -1,0 +1,172 @@
+//! Sparse Parameter Server (paper §2.3.3).
+//!
+//! Point-to-point, one-shot, Parallelism — but the tensor is partitioned
+//! into `n` **contiguous even ranges**, so the skewed distribution of
+//! non-zero gradients (Definition 5, Fig 2) concentrates traffic on one
+//! server: Push imbalance equals the skewness ratio and Pull inherits it.
+//! Servers are colocated with workers (server `p` on machine `p`), as in
+//! BytePS-style deployments.
+
+use super::*;
+
+/// Sparse PS scheme.
+#[derive(Clone, Debug, Default)]
+pub struct SparsePs;
+
+impl SparsePs {
+    pub fn new() -> Self {
+        SparsePs
+    }
+}
+
+impl SyncScheme for SparsePs {
+    fn name(&self) -> &'static str {
+        "SparsePS"
+    }
+
+    fn dims(&self) -> SchemeDims {
+        SchemeDims {
+            communication: CommPattern::PointToPoint,
+            aggregation: AggPattern::OneShot,
+            partition: PartitionPattern::Parallelism,
+            balance: BalancePattern::Imbalanced,
+            format: "COO",
+        }
+    }
+
+    fn sync(&self, inputs: &[CooTensor], net: &Network) -> SyncResult {
+        let n = inputs.len();
+        assert_eq!(n, net.endpoints);
+        let dense_len = inputs[0].dense_len;
+        let per = crate::util::ceil_div(dense_len, n) as u32;
+
+        // Push: worker w sends contiguous partition p to server p.
+        // Payload: COO entries (4B local index + 4B value).
+        let mut push = vec![vec![0u64; n]; n];
+        // server p's received shards (including its own, free locally)
+        let mut shards: Vec<Vec<CooTensor>> = vec![Vec::with_capacity(n); n];
+        for (w, t) in inputs.iter().enumerate() {
+            for p in 0..n {
+                let lo = (p as u32 * per).min(dense_len as u32);
+                let hi = ((p as u32 + 1) * per).min(dense_len as u32);
+                let part = t.slice_range(lo, hi);
+                if w != p {
+                    push[w][p] = crate::tensor::WireFormat::wire_bytes(&part) as u64;
+                }
+                shards[p].push(part);
+            }
+        }
+        let mut report = CommReport::new();
+        report.push(net.stage_from_matrix("push", &push));
+
+        // One-shot aggregation at each server.
+        let aggregated: Vec<CooTensor> = shards
+            .iter()
+            .map(|parts| CooTensor::merge_all(parts))
+            .collect();
+
+        // Pull: server p point-to-point broadcasts its aggregated
+        // partition to every worker (existing PS implementations, App. B).
+        let mut pull = vec![vec![0u64; n]; n];
+        for (p, row) in pull.iter_mut().enumerate() {
+            let bytes = crate::tensor::WireFormat::wire_bytes(&aggregated[p]) as u64;
+            for (w, cell) in row.iter_mut().enumerate() {
+                if w != p {
+                    *cell = bytes;
+                }
+            }
+        }
+        report.push(net.stage_from_matrix("pull", &pull));
+
+        // Reassemble the full tensor at every worker.
+        let parts: Vec<(u32, CooTensor)> = aggregated
+            .iter()
+            .enumerate()
+            .map(|(p, t)| ((p as u32 * per).min(dense_len as u32), t.clone()))
+            .collect();
+        let full = CooTensor::concat_ranges(&parts, dense_len);
+        SyncResult {
+            outputs: vec![full; n],
+            report,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::overlapping_inputs;
+    use super::*;
+    use crate::cluster::LinkKind;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn correct_aggregation() {
+        let inputs = overlapping_inputs(1, 6, 3000, 70, 30);
+        let net = Network::new(6, LinkKind::Tcp25);
+        let r = SparsePs::new().sync(&inputs, &net);
+        verify_outputs(&r, &inputs);
+        assert_eq!(r.report.stages.len(), 2);
+    }
+
+    #[test]
+    fn skew_concentrates_push_on_one_server() {
+        // All non-zeros in the first 1/8 of the range → server 0 receives
+        // everything; push imbalance ≈ n.
+        let n = 8;
+        let dense_len = 8_000;
+        let mut rng = Pcg64::seeded(2);
+        let inputs: Vec<CooTensor> = (0..n)
+            .map(|_| {
+                let mut idx: Vec<u32> = rng
+                    .sample_distinct(dense_len / 8, 200)
+                    .into_iter()
+                    .map(|i| i as u32)
+                    .collect();
+                idx.sort_unstable();
+                CooTensor::from_sorted(dense_len, idx, vec![1.0; 200])
+            })
+            .collect();
+        let net = Network::new(n, LinkKind::Tcp25);
+        let r = SparsePs::new().sync(&inputs, &net);
+        let push = &r.report.stages[0];
+        let recv0 = push.recv[0];
+        let recv_rest: u64 = push.recv[1..].iter().sum();
+        assert!(recv0 > 0);
+        assert_eq!(recv_rest, 0, "all traffic should hit server 0");
+        verify_outputs(&r, &inputs);
+    }
+
+    #[test]
+    fn uniform_input_is_balanced() {
+        let n = 4;
+        let dense_len = 40_000;
+        let mut rng = Pcg64::seeded(3);
+        let inputs: Vec<CooTensor> = (0..n)
+            .map(|_| {
+                let mut idx: Vec<u32> = rng
+                    .sample_distinct(dense_len, 4_000)
+                    .into_iter()
+                    .map(|i| i as u32)
+                    .collect();
+                idx.sort_unstable();
+                CooTensor::from_sorted(dense_len, idx, vec![1.0; 4_000])
+            })
+            .collect();
+        let net = Network::new(n, LinkKind::Tcp25);
+        let r = SparsePs::new().sync(&inputs, &net);
+        assert!(r.report.recv_imbalance() < 1.15);
+    }
+
+    #[test]
+    fn payload_is_8_bytes_per_nnz() {
+        // Two workers, disjoint halves: worker 1's nnz all in partition 0.
+        let a = CooTensor::from_sorted(100, vec![0, 1, 2], vec![1.0; 3]);
+        let b = CooTensor::from_sorted(100, vec![3, 4], vec![1.0; 2]);
+        let net = Network::new(2, LinkKind::Tcp25);
+        let r = SparsePs::new().sync(&[a, b], &net);
+        // push: b sends its 2 entries (both < 50) to server 0 → 16 bytes;
+        // a sends nothing to server 1.
+        assert_eq!(r.report.stages[0].recv[0], 16);
+        assert_eq!(r.report.stages[0].recv[1], 0);
+    }
+}

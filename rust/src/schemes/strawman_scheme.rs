@@ -1,0 +1,144 @@
+//! The lossy strawman as a full synchronization scheme (§3.1.2, Alg 3).
+//!
+//! Balanced Parallelism achieved with a *single* hash function and a
+//! fixed memory: colliding indices are overwritten and their gradients
+//! silently dropped. Communication is balanced like Zen's, but the
+//! aggregate is incomplete — Fig 14 shows the accuracy cost, Fig 8 the
+//! memory/loss trade-off. Pull uses COO.
+
+use super::*;
+use crate::hashing::StrawmanHasher;
+use crate::tensor::WireFormat;
+
+/// Lossy strawman scheme with memory `mem_multiple × expected_nnz` slots.
+pub struct StrawmanScheme {
+    hasher: StrawmanHasher,
+    /// Measured info-loss of the last sync (interior mutability for the
+    /// accuracy experiment's reporting).
+    last_loss_rate: std::sync::Mutex<f64>,
+}
+
+impl StrawmanScheme {
+    pub fn new(master_seed: u64, n: usize, expected_nnz: usize, mem_multiple: f64) -> Self {
+        let slots = ((expected_nnz as f64 * mem_multiple) as usize).max(n);
+        StrawmanScheme {
+            hasher: StrawmanHasher::new(master_seed, n, slots),
+            last_loss_rate: std::sync::Mutex::new(0.0),
+        }
+    }
+
+    /// Information-loss rate measured on the most recent `sync`.
+    pub fn last_loss_rate(&self) -> f64 {
+        *self.last_loss_rate.lock().unwrap()
+    }
+}
+
+impl SyncScheme for StrawmanScheme {
+    fn name(&self) -> &'static str {
+        "Strawman-lossy"
+    }
+
+    fn dims(&self) -> SchemeDims {
+        SchemeDims {
+            communication: CommPattern::PointToPoint,
+            aggregation: AggPattern::OneShot,
+            partition: PartitionPattern::Parallelism,
+            balance: BalancePattern::Balanced,
+            format: "COO (lossy)",
+        }
+    }
+
+    fn sync(&self, inputs: &[CooTensor], net: &Network) -> SyncResult {
+        let n = inputs.len();
+        assert_eq!(n, net.endpoints);
+        assert_eq!(self.hasher.n, n);
+
+        // Push: strawman-partition (lossy) on every worker.
+        let mut push = vec![vec![0u64; n]; n];
+        let mut shards: Vec<Vec<CooTensor>> = vec![Vec::with_capacity(n); n];
+        let mut total_nnz = 0usize;
+        let mut total_lost = 0usize;
+        for (w, t) in inputs.iter().enumerate() {
+            let out = self.hasher.partition(t);
+            total_nnz += t.nnz();
+            total_lost += out.lost;
+            for (p, part) in out.parts.iter().enumerate() {
+                if w != p {
+                    push[w][p] = part.wire_bytes() as u64;
+                }
+                shards[p].push(part.clone());
+            }
+        }
+        *self.last_loss_rate.lock().unwrap() = if total_nnz == 0 {
+            0.0
+        } else {
+            total_lost as f64 / total_nnz as f64
+        };
+        let mut report = CommReport::new();
+        report.push(net.stage_from_matrix("push", &push));
+
+        let aggregated: Vec<CooTensor> = shards
+            .iter()
+            .map(|parts| CooTensor::merge_all(parts))
+            .collect();
+
+        // Pull: COO broadcast.
+        let mut pull = vec![vec![0u64; n]; n];
+        for (p, row) in pull.iter_mut().enumerate() {
+            let bytes = aggregated[p].wire_bytes() as u64;
+            for (w, cell) in row.iter_mut().enumerate() {
+                if w != p {
+                    *cell = bytes;
+                }
+            }
+        }
+        report.push(net.stage_from_matrix("pull", &pull));
+
+        let full = CooTensor::merge_all(&aggregated);
+        SyncResult {
+            outputs: vec![full; n],
+            report,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::overlapping_inputs;
+    use super::*;
+    use crate::cluster::LinkKind;
+    use crate::schemes::reference_sum;
+
+    #[test]
+    fn loses_gradients_under_small_memory() {
+        let inputs = overlapping_inputs(1, 4, 20_000, 500, 400);
+        let net = Network::new(4, LinkKind::Tcp25);
+        let s = StrawmanScheme::new(3, 4, 900, 1.0);
+        let r = s.sync(&inputs, &net);
+        assert!(s.last_loss_rate() > 0.05, "loss {}", s.last_loss_rate());
+        // outputs are a *partial* sum: every surviving entry must match
+        // some subset-sum ≤ reference count
+        let reference = reference_sum(&inputs);
+        let out = r.outputs[0].to_dense();
+        assert!(out.nnz() < reference.nnz());
+    }
+
+    #[test]
+    fn near_lossless_with_big_memory() {
+        let inputs = overlapping_inputs(2, 4, 20_000, 500, 400);
+        let net = Network::new(4, LinkKind::Tcp25);
+        let s = StrawmanScheme::new(3, 4, 900, 64.0);
+        let r = s.sync(&inputs, &net);
+        assert!(s.last_loss_rate() < 0.02, "loss {}", s.last_loss_rate());
+        let _ = r;
+    }
+
+    #[test]
+    fn communications_balanced() {
+        let inputs = overlapping_inputs(3, 8, 50_000, 1_500, 500);
+        let net = Network::new(8, LinkKind::Tcp25);
+        let s = StrawmanScheme::new(5, 8, 2_000, 8.0);
+        let r = s.sync(&inputs, &net);
+        assert!(r.report.stages[0].recv_imbalance() < 1.2);
+    }
+}

@@ -1,0 +1,152 @@
+//! Positional bitmaps (paper §3.2.1 "Bitmap") and the bit-level substrate
+//! shared with the hash bitmap (Algorithm 2).
+//!
+//! One bit per position: 1 ⇔ the gradient at that position is non-zero.
+//! Wire size is `ceil(len/8)` bytes — for a full dense range that is
+//! `|G|/32` in FP32-value units, matching the paper's accounting.
+
+use super::WireFormat;
+
+/// A fixed-length bitmap.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Bitmap {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl Bitmap {
+    pub fn zeros(len: usize) -> Self {
+        Bitmap {
+            words: vec![0u64; crate::util::ceil_div(len.max(1), 64)],
+            len,
+        }
+    }
+
+    /// Build from the set bit positions.
+    pub fn from_ones(len: usize, ones: &[u32]) -> Self {
+        let mut b = Bitmap::zeros(len);
+        for &i in ones {
+            b.set(i as usize);
+        }
+        b
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        self.words[i / 64] >> (i % 64) & 1 == 1
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Positions of set bits, ascending (word-level scan, not bit loop).
+    pub fn ones(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.count_ones());
+        for (wi, &w) in self.words.iter().enumerate() {
+            let mut w = w;
+            while w != 0 {
+                let b = w.trailing_zeros();
+                out.push((wi * 64) as u32 + b);
+                w &= w - 1;
+            }
+        }
+        out
+    }
+
+    /// Bitwise OR (set union) with another bitmap of equal length.
+    pub fn or_assign(&mut self, other: &Bitmap) {
+        assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(other.words.iter()) {
+            *a |= *b;
+        }
+    }
+
+    /// Bitwise AND count — fast overlap cardinality for Definition 3.
+    pub fn and_count(&self, other: &Bitmap) -> usize {
+        assert_eq!(self.len, other.len);
+        self.words
+            .iter()
+            .zip(other.words.iter())
+            .map(|(a, b)| (a & b).count_ones() as usize)
+            .sum()
+    }
+}
+
+impl WireFormat for Bitmap {
+    fn wire_bytes(&self) -> usize {
+        crate::util::ceil_div(self.len, 8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, prop_assert};
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut b = Bitmap::zeros(130);
+        for i in [0usize, 63, 64, 65, 129] {
+            assert!(!b.get(i));
+            b.set(i);
+            assert!(b.get(i));
+        }
+        assert_eq!(b.count_ones(), 5);
+    }
+
+    #[test]
+    fn ones_ascending() {
+        let b = Bitmap::from_ones(200, &[5, 64, 3, 199]);
+        assert_eq!(b.ones(), vec![3, 5, 64, 199]);
+    }
+
+    #[test]
+    fn or_union() {
+        let mut a = Bitmap::from_ones(100, &[1, 2]);
+        let b = Bitmap::from_ones(100, &[2, 3]);
+        a.or_assign(&b);
+        assert_eq!(a.ones(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn and_count_overlap() {
+        let a = Bitmap::from_ones(100, &[1, 2, 50]);
+        let b = Bitmap::from_ones(100, &[2, 50, 99]);
+        assert_eq!(a.and_count(&b), 2);
+    }
+
+    #[test]
+    fn wire_bytes_len_over_8() {
+        assert_eq!(Bitmap::zeros(15).wire_bytes(), 2);
+        assert_eq!(Bitmap::zeros(16).wire_bytes(), 2);
+        assert_eq!(Bitmap::zeros(17).wire_bytes(), 3);
+    }
+
+    #[test]
+    fn prop_ones_roundtrip() {
+        check(100, |g| {
+            let len = g.usize_in(1, 500);
+            let n = g.usize_in(0, len.min(64));
+            let idx = g.distinct_sorted_u32(n, len as u32);
+            let b = Bitmap::from_ones(len, &idx);
+            prop_assert(b.ones() == idx && b.count_ones() == n, "ones roundtrip")
+        });
+    }
+}

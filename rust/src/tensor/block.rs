@@ -1,0 +1,197 @@
+//! Tensor-block format (OmniReduce, paper §2.3.3 & §3.2.1).
+//!
+//! The dense tensor is split into fixed-size blocks of gradients; only
+//! *non-zero blocks* (blocks containing at least one non-zero gradient)
+//! travel. A block is addressed by one u32 block id and carries all of its
+//! gradients, zeros included — cheap indices, but padding cost when
+//! non-zeros are scattered.
+
+use super::{CooTensor, DenseTensor, WireFormat, BYTES_F32, BYTES_IDX};
+
+/// OmniReduce's default block length (gradients per block).
+pub const DEFAULT_BLOCK: usize = 256;
+
+/// A sparse tensor as a set of non-zero blocks.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockTensor {
+    pub dense_len: usize,
+    pub block_len: usize,
+    /// Ascending block ids.
+    pub block_ids: Vec<u32>,
+    /// Block payloads, each `block_len` long (tail block zero-padded),
+    /// parallel to `block_ids`.
+    pub blocks: Vec<Vec<f32>>,
+}
+
+impl BlockTensor {
+    /// Build from a dense tensor, keeping only non-zero blocks.
+    pub fn from_dense(t: &DenseTensor, block_len: usize) -> Self {
+        assert!(block_len > 0);
+        let mut block_ids = Vec::new();
+        let mut blocks = Vec::new();
+        for (bi, chunk) in t.values.chunks(block_len).enumerate() {
+            if chunk.iter().any(|&v| v != 0.0) {
+                let mut block = chunk.to_vec();
+                block.resize(block_len, 0.0);
+                block_ids.push(bi as u32);
+                blocks.push(block);
+            }
+        }
+        BlockTensor {
+            dense_len: t.len(),
+            block_len,
+            block_ids,
+            blocks,
+        }
+    }
+
+    /// Build from a COO tensor without materializing the dense vector.
+    pub fn from_coo(t: &CooTensor, block_len: usize) -> Self {
+        assert!(block_len > 0);
+        let mut block_ids: Vec<u32> = Vec::new();
+        let mut blocks: Vec<Vec<f32>> = Vec::new();
+        for (&i, &v) in t.indices.iter().zip(t.values.iter()) {
+            let bi = i as usize / block_len;
+            if block_ids.last() != Some(&(bi as u32)) {
+                block_ids.push(bi as u32);
+                blocks.push(vec![0.0; block_len]);
+            }
+            blocks.last_mut().unwrap()[i as usize % block_len] = v;
+        }
+        BlockTensor {
+            dense_len: t.dense_len,
+            block_len,
+            block_ids,
+            blocks,
+        }
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.block_ids.len()
+    }
+
+    pub fn to_dense(&self) -> DenseTensor {
+        let mut d = DenseTensor::zeros(self.dense_len);
+        for (&bi, block) in self.block_ids.iter().zip(self.blocks.iter()) {
+            let lo = bi as usize * self.block_len;
+            let hi = (lo + self.block_len).min(self.dense_len);
+            d.values[lo..hi].copy_from_slice(&block[..hi - lo]);
+        }
+        d
+    }
+
+    /// Merge-aggregate: blocks with the same id are summed element-wise.
+    pub fn merge(&self, other: &BlockTensor) -> BlockTensor {
+        assert_eq!(self.dense_len, other.dense_len);
+        assert_eq!(self.block_len, other.block_len);
+        let (mut i, mut j) = (0usize, 0usize);
+        let mut block_ids = Vec::new();
+        let mut blocks = Vec::new();
+        while i < self.num_blocks() && j < other.num_blocks() {
+            match self.block_ids[i].cmp(&other.block_ids[j]) {
+                std::cmp::Ordering::Less => {
+                    block_ids.push(self.block_ids[i]);
+                    blocks.push(self.blocks[i].clone());
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    block_ids.push(other.block_ids[j]);
+                    blocks.push(other.blocks[j].clone());
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    let mut b = self.blocks[i].clone();
+                    for (a, x) in b.iter_mut().zip(other.blocks[j].iter()) {
+                        *a += *x;
+                    }
+                    block_ids.push(self.block_ids[i]);
+                    blocks.push(b);
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        while i < self.num_blocks() {
+            block_ids.push(self.block_ids[i]);
+            blocks.push(self.blocks[i].clone());
+            i += 1;
+        }
+        while j < other.num_blocks() {
+            block_ids.push(other.block_ids[j]);
+            blocks.push(other.blocks[j].clone());
+            j += 1;
+        }
+        BlockTensor {
+            dense_len: self.dense_len,
+            block_len: self.block_len,
+            block_ids,
+            blocks,
+        }
+    }
+}
+
+impl WireFormat for BlockTensor {
+    fn wire_bytes(&self) -> usize {
+        // one block id + block_len gradients per non-zero block
+        self.num_blocks() * (BYTES_IDX + self.block_len * BYTES_F32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, prop_assert};
+
+    fn dense(vals: &[f32]) -> DenseTensor {
+        DenseTensor::from_values(vals.to_vec())
+    }
+
+    #[test]
+    fn keeps_only_nonzero_blocks() {
+        let t = dense(&[0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 2.0]);
+        let b = BlockTensor::from_dense(&t, 4);
+        assert_eq!(b.block_ids, vec![1, 2]);
+        assert_eq!(b.to_dense(), t);
+    }
+
+    #[test]
+    fn from_coo_matches_from_dense() {
+        let t = dense(&[0.0, 3.0, 0.0, 0.0, 0.0, 0.0, 0.0, 7.0, 1.0]);
+        let a = BlockTensor::from_dense(&t, 3);
+        let b = BlockTensor::from_coo(&t.to_coo(), 3);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn merge_matches_dense_add() {
+        let a = dense(&[1.0, 0.0, 0.0, 0.0, 2.0, 0.0]);
+        let bb = dense(&[0.0, 0.0, 5.0, 0.0, 2.0, 0.0]);
+        let m = BlockTensor::from_dense(&a, 2).merge(&BlockTensor::from_dense(&bb, 2));
+        let mut d = a.clone();
+        d.add_assign(&bb);
+        assert_eq!(m.to_dense(), d);
+        assert_eq!(m.num_blocks(), 3);
+    }
+
+    #[test]
+    fn wire_bytes_includes_padding() {
+        let t = dense(&[1.0, 0.0, 0.0, 0.0]);
+        let b = BlockTensor::from_dense(&t, 4);
+        // one block: 4B id + 4 * 4B values
+        assert_eq!(b.wire_bytes(), 4 + 16);
+    }
+
+    #[test]
+    fn prop_roundtrip_any_block_len() {
+        check(100, |g| {
+            let len = g.usize_in(1, 300);
+            let bl = g.usize_in(1, 64);
+            let n = g.usize_in(0, len.min(40));
+            let idx = g.distinct_sorted_u32(n, len as u32);
+            let vals: Vec<f32> = (0..n).map(|_| g.f64_unit() as f32 + 0.5).collect();
+            let coo = CooTensor::from_sorted(len, idx, vals);
+            let b = BlockTensor::from_coo(&coo, bl);
+            prop_assert(b.to_dense() == coo.to_dense(), "block roundtrip")
+        });
+    }
+}

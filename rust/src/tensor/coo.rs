@@ -1,0 +1,302 @@
+//! COO (coordinate list) sparse tensors — paper Definition 2.
+//!
+//! The canonical sparse wire format: a list of non-zero values plus the
+//! list of their u32 indices. Invariant: indices are strictly ascending,
+//! so merges are linear scans.
+
+use super::{DenseTensor, WireFormat, BYTES_F32, BYTES_IDX};
+
+/// A sparse gradient tensor in COO format over a logical dense length.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CooTensor {
+    /// Logical length of the underlying dense tensor `|G|`.
+    pub dense_len: usize,
+    /// Strictly ascending non-zero indices.
+    pub indices: Vec<u32>,
+    /// Gradient values, parallel to `indices`.
+    pub values: Vec<f32>,
+}
+
+impl CooTensor {
+    /// Build and enforce the sorted-unique invariant (sorts if needed).
+    pub fn new(dense_len: usize, indices: Vec<u32>, values: Vec<f32>) -> Self {
+        assert_eq!(indices.len(), values.len());
+        debug_assert!(indices.iter().all(|&i| (i as usize) < dense_len));
+        let mut t = CooTensor {
+            dense_len,
+            indices,
+            values,
+        };
+        if !t.is_sorted_unique() {
+            t.sort_and_combine();
+        }
+        t
+    }
+
+    /// Build from already-sorted unique indices without re-checking in
+    /// release builds (hot path).
+    pub fn from_sorted(dense_len: usize, indices: Vec<u32>, values: Vec<f32>) -> Self {
+        debug_assert!(indices.windows(2).all(|w| w[0] < w[1]));
+        CooTensor {
+            dense_len,
+            indices,
+            values,
+        }
+    }
+
+    pub fn empty(dense_len: usize) -> Self {
+        CooTensor {
+            dense_len,
+            indices: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    fn is_sorted_unique(&self) -> bool {
+        self.indices.windows(2).all(|w| w[0] < w[1])
+    }
+
+    /// Sort by index and sum duplicate entries.
+    fn sort_and_combine(&mut self) {
+        let mut pairs: Vec<(u32, f32)> = self
+            .indices
+            .iter()
+            .copied()
+            .zip(self.values.iter().copied())
+            .collect();
+        pairs.sort_unstable_by_key(|p| p.0);
+        let mut indices = Vec::with_capacity(pairs.len());
+        let mut values: Vec<f32> = Vec::with_capacity(pairs.len());
+        for (i, v) in pairs {
+            if indices.last() == Some(&i) {
+                *values.last_mut().unwrap() += v;
+            } else {
+                indices.push(i);
+                values.push(v);
+            }
+        }
+        self.indices = indices;
+        self.values = values;
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        if self.dense_len == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / self.dense_len as f64
+    }
+
+    pub fn to_dense(&self) -> DenseTensor {
+        let mut d = DenseTensor::zeros(self.dense_len);
+        for (&i, &v) in self.indices.iter().zip(self.values.iter()) {
+            d.values[i as usize] = v;
+        }
+        d
+    }
+
+    /// Merge-aggregate two sorted COO tensors (gradients with the same
+    /// index are summed) — the aggregation primitive of every scheme.
+    pub fn merge(&self, other: &CooTensor) -> CooTensor {
+        assert_eq!(self.dense_len, other.dense_len);
+        let (mut i, mut j) = (0usize, 0usize);
+        let mut indices = Vec::with_capacity(self.nnz() + other.nnz());
+        let mut values = Vec::with_capacity(self.nnz() + other.nnz());
+        while i < self.nnz() && j < other.nnz() {
+            match self.indices[i].cmp(&other.indices[j]) {
+                std::cmp::Ordering::Less => {
+                    indices.push(self.indices[i]);
+                    values.push(self.values[i]);
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    indices.push(other.indices[j]);
+                    values.push(other.values[j]);
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    indices.push(self.indices[i]);
+                    values.push(self.values[i] + other.values[j]);
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        indices.extend_from_slice(&self.indices[i..]);
+        values.extend_from_slice(&self.values[i..]);
+        indices.extend_from_slice(&other.indices[j..]);
+        values.extend_from_slice(&other.values[j..]);
+        CooTensor::from_sorted(self.dense_len, indices, values)
+    }
+
+    /// Aggregate many COO tensors with a k-way balanced reduction.
+    pub fn merge_all(tensors: &[CooTensor]) -> CooTensor {
+        assert!(!tensors.is_empty());
+        if tensors.len() == 1 {
+            return tensors[0].clone();
+        }
+        // Pairwise tree reduction keeps merge inputs balanced.
+        let mut layer: Vec<CooTensor> = tensors.to_vec();
+        while layer.len() > 1 {
+            let mut next = Vec::with_capacity(crate::util::ceil_div(layer.len(), 2));
+            let mut it = layer.chunks(2);
+            for pair in &mut it {
+                if pair.len() == 2 {
+                    next.push(pair[0].merge(&pair[1]));
+                } else {
+                    next.push(pair[0].clone());
+                }
+            }
+            layer = next;
+        }
+        layer.pop().unwrap()
+    }
+
+    /// Restrict to indices within [lo, hi), re-based to the sub-range —
+    /// the contiguous-partition primitive of Sparse PS.
+    pub fn slice_range(&self, lo: u32, hi: u32) -> CooTensor {
+        let hi = hi.max(lo);
+        let start = self.indices.partition_point(|&i| i < lo);
+        let end = self.indices.partition_point(|&i| i < hi);
+        CooTensor::from_sorted(
+            (hi - lo) as usize,
+            self.indices[start..end].iter().map(|&i| i - lo).collect(),
+            self.values[start..end].to_vec(),
+        )
+    }
+
+    /// Concatenate tensors that partition disjoint contiguous ranges back
+    /// into one tensor over the full range.
+    pub fn concat_ranges(parts: &[(u32, CooTensor)], dense_len: usize) -> CooTensor {
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        let mut sorted: Vec<&(u32, CooTensor)> = parts.iter().collect();
+        sorted.sort_by_key(|(off, _)| *off);
+        for (off, t) in sorted {
+            indices.extend(t.indices.iter().map(|&i| i + off));
+            values.extend_from_slice(&t.values);
+        }
+        CooTensor::new(dense_len, indices, values)
+    }
+}
+
+impl WireFormat for CooTensor {
+    fn wire_bytes(&self) -> usize {
+        self.nnz() * (BYTES_F32 + BYTES_IDX)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, prop_assert};
+
+    fn t(dense_len: usize, pairs: &[(u32, f32)]) -> CooTensor {
+        CooTensor::new(
+            dense_len,
+            pairs.iter().map(|p| p.0).collect(),
+            pairs.iter().map(|p| p.1).collect(),
+        )
+    }
+
+    #[test]
+    fn new_sorts_and_combines() {
+        let c = t(10, &[(5, 1.0), (2, 2.0), (5, 3.0)]);
+        assert_eq!(c.indices, vec![2, 5]);
+        assert_eq!(c.values, vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn merge_sums_overlaps() {
+        let a = t(10, &[(1, 1.0), (3, 1.0)]);
+        let b = t(10, &[(3, 2.0), (7, 5.0)]);
+        let m = a.merge(&b);
+        assert_eq!(m.indices, vec![1, 3, 7]);
+        assert_eq!(m.values, vec![1.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn merge_all_matches_dense_sum() {
+        let xs = vec![
+            t(8, &[(0, 1.0), (4, 2.0)]),
+            t(8, &[(4, 3.0)]),
+            t(8, &[(7, 1.0), (0, -1.0)]),
+        ];
+        let merged = CooTensor::merge_all(&xs);
+        let mut dense = DenseTensor::zeros(8);
+        for x in &xs {
+            dense.add_coo(x);
+        }
+        // index 0 sums to 0.0 but stays an explicit entry after merge
+        assert_eq!(merged.to_dense(), dense);
+    }
+
+    #[test]
+    fn slice_range_rebases() {
+        let a = t(12, &[(1, 1.0), (5, 2.0), (9, 3.0)]);
+        let s = a.slice_range(4, 8);
+        assert_eq!(s.dense_len, 4);
+        assert_eq!(s.indices, vec![1]);
+        assert_eq!(s.values, vec![2.0]);
+    }
+
+    #[test]
+    fn concat_ranges_roundtrip() {
+        let a = t(12, &[(1, 1.0), (5, 2.0), (9, 3.0)]);
+        let parts: Vec<(u32, CooTensor)> = (0..3)
+            .map(|p| (p * 4, a.slice_range(p * 4, (p + 1) * 4)))
+            .collect();
+        let back = CooTensor::concat_ranges(&parts, 12);
+        assert_eq!(back, a);
+    }
+
+    #[test]
+    fn wire_bytes_counts_pairs() {
+        let a = t(100, &[(1, 1.0), (5, 2.0)]);
+        assert_eq!(a.wire_bytes(), 2 * 8);
+    }
+
+    #[test]
+    fn prop_merge_equals_dense_add() {
+        check(100, |g| {
+            let len = g.usize_in(1, 200);
+            let na = g.usize_in(0, len.min(50));
+            let nb = g.usize_in(0, len.min(50));
+            let ia = g.distinct_sorted_u32(na, len as u32);
+            let ib = g.distinct_sorted_u32(nb, len as u32);
+            let va: Vec<f32> = (0..na).map(|_| g.f64_unit() as f32 + 0.1).collect();
+            let vb: Vec<f32> = (0..nb).map(|_| g.f64_unit() as f32 + 0.1).collect();
+            let a = CooTensor::from_sorted(len, ia, va);
+            let b = CooTensor::from_sorted(len, ib, vb);
+            let m = a.merge(&b);
+            let mut d = a.to_dense();
+            d.add_assign(&b.to_dense());
+            prop_assert(m.to_dense() == d, "merge == dense add")
+        });
+    }
+
+    #[test]
+    fn prop_slice_concat_identity() {
+        check(100, |g| {
+            let len = g.usize_in(4, 300);
+            let n = g.usize_in(0, len.min(40));
+            let idx = g.distinct_sorted_u32(n, len as u32);
+            let vals: Vec<f32> = (0..n).map(|_| g.f64_unit() as f32 + 0.5).collect();
+            let a = CooTensor::from_sorted(len, idx, vals);
+            let parts_n = g.usize_in(1, 8);
+            let per = crate::util::ceil_div(len, parts_n) as u32;
+            let parts: Vec<(u32, CooTensor)> = (0..parts_n as u32)
+                .map(|p| {
+                    let lo = (p * per).min(len as u32);
+                    let hi = ((p + 1) * per).min(len as u32);
+                    (lo, a.slice_range(lo, hi))
+                })
+                .collect();
+            let back = CooTensor::concat_ranges(&parts, len);
+            prop_assert(back == a, "slice+concat identity")
+        });
+    }
+}

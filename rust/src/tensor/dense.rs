@@ -1,0 +1,168 @@
+//! Dense gradient tensors (paper Definition 1).
+
+use super::{CooTensor, WireFormat, BYTES_F32};
+
+/// A dense gradient tensor: every parameter's gradient, zeros included.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseTensor {
+    pub values: Vec<f32>,
+}
+
+impl DenseTensor {
+    pub fn zeros(len: usize) -> Self {
+        DenseTensor {
+            values: vec![0.0; len],
+        }
+    }
+
+    pub fn from_values(values: Vec<f32>) -> Self {
+        DenseTensor { values }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Number of non-zero gradients.
+    pub fn nnz(&self) -> usize {
+        self.values.iter().filter(|v| **v != 0.0).count()
+    }
+
+    /// Density `d_G`: fraction of non-zero gradients (paper §2.1).
+    pub fn density(&self) -> f64 {
+        if self.values.is_empty() {
+            return 0.0;
+        }
+        self.nnz() as f64 / self.values.len() as f64
+    }
+
+    /// Indices of non-zero gradients, ascending.
+    pub fn nonzero_indices(&self) -> Vec<u32> {
+        self.values
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| **v != 0.0)
+            .map(|(i, _)| i as u32)
+            .collect()
+    }
+
+    /// Convert to COO (sorted by index).
+    pub fn to_coo(&self) -> CooTensor {
+        let mut indices = Vec::new();
+        let mut vals = Vec::new();
+        for (i, &v) in self.values.iter().enumerate() {
+            if v != 0.0 {
+                indices.push(i as u32);
+                vals.push(v);
+            }
+        }
+        CooTensor::new(self.values.len(), indices, vals)
+    }
+
+    /// In-place element-wise accumulation.
+    pub fn add_assign(&mut self, other: &DenseTensor) {
+        assert_eq!(self.len(), other.len());
+        for (a, b) in self.values.iter_mut().zip(other.values.iter()) {
+            *a += *b;
+        }
+    }
+
+    /// Scatter-add a COO tensor into this dense tensor.
+    pub fn add_coo(&mut self, coo: &CooTensor) {
+        assert_eq!(self.len(), coo.dense_len);
+        for (&i, &v) in coo.indices.iter().zip(coo.values.iter()) {
+            self.values[i as usize] += v;
+        }
+    }
+
+    /// Even contiguous split into `n` partitions (last may be shorter),
+    /// used by Sparse PS / OmniReduce partitioning and the skewness metric.
+    pub fn split_even(&self, n: usize) -> Vec<DenseTensor> {
+        assert!(n > 0);
+        let per = crate::util::ceil_div(self.len(), n);
+        (0..n)
+            .map(|i| {
+                let lo = (i * per).min(self.len());
+                let hi = ((i + 1) * per).min(self.len());
+                DenseTensor::from_values(self.values[lo..hi].to_vec())
+            })
+            .collect()
+    }
+}
+
+impl WireFormat for DenseTensor {
+    fn wire_bytes(&self) -> usize {
+        self.values.len() * BYTES_F32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> DenseTensor {
+        DenseTensor::from_values(vec![0.0, 1.0, 0.0, 2.0, 0.0, 0.0, 3.0, 0.0])
+    }
+
+    #[test]
+    fn density_and_nnz() {
+        let t = sample();
+        assert_eq!(t.nnz(), 3);
+        assert!((t.density() - 3.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nonzero_indices_sorted() {
+        assert_eq!(sample().nonzero_indices(), vec![1, 3, 6]);
+    }
+
+    #[test]
+    fn to_coo_roundtrip() {
+        let t = sample();
+        let coo = t.to_coo();
+        assert_eq!(coo.to_dense(), t);
+        assert_eq!(coo.nnz(), 3);
+    }
+
+    #[test]
+    fn add_assign_elementwise() {
+        let mut a = sample();
+        let b = sample();
+        a.add_assign(&b);
+        assert_eq!(a.values[1], 2.0);
+        assert_eq!(a.values[6], 6.0);
+        assert_eq!(a.nnz(), 3);
+    }
+
+    #[test]
+    fn add_coo_scatters() {
+        let mut a = DenseTensor::zeros(8);
+        a.add_coo(&sample().to_coo());
+        assert_eq!(a, sample());
+    }
+
+    #[test]
+    fn split_even_covers() {
+        let t = sample();
+        let parts = t.split_even(3);
+        assert_eq!(parts.len(), 3);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, t.len());
+        let rejoined: Vec<f32> = parts.iter().flat_map(|p| p.values.clone()).collect();
+        assert_eq!(rejoined, t.values);
+    }
+
+    #[test]
+    fn wire_bytes_fp32() {
+        assert_eq!(sample().wire_bytes(), 8 * 4);
+    }
+
+    #[test]
+    fn empty_density_zero() {
+        assert_eq!(DenseTensor::zeros(0).density(), 0.0);
+    }
+}

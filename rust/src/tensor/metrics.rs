@@ -1,0 +1,155 @@
+//! Sparsity metrics from paper §2.2: overlap ratio (Definition 3),
+//! densification ratio (Definition 4), skewness ratio (Definition 5).
+
+use super::{Bitmap, CooTensor};
+
+/// Overlap ratio of two index sets (Definition 3):
+/// `|I1 ∩ I2| / min(|I1|, |I2|)`.
+pub fn overlap_ratio(a: &CooTensor, b: &CooTensor) -> f64 {
+    assert_eq!(a.dense_len, b.dense_len);
+    let min = a.nnz().min(b.nnz());
+    if min == 0 {
+        return 0.0;
+    }
+    // Sorted-merge intersection count.
+    let (mut i, mut j, mut inter) = (0usize, 0usize, 0usize);
+    while i < a.nnz() && j < b.nnz() {
+        match a.indices[i].cmp(&b.indices[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                inter += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    inter as f64 / min as f64
+}
+
+/// Overlap ratio via bitmaps — used when tensors are already bitmap-encoded.
+pub fn overlap_ratio_bitmap(a: &Bitmap, b: &Bitmap) -> f64 {
+    let min = a.count_ones().min(b.count_ones());
+    if min == 0 {
+        return 0.0;
+    }
+    a.and_count(b) as f64 / min as f64
+}
+
+/// Density after aggregating `tensors` (the union of index sets over the
+/// dense length): `d_G^n`.
+pub fn aggregated_density(tensors: &[CooTensor]) -> f64 {
+    assert!(!tensors.is_empty());
+    let len = tensors[0].dense_len;
+    let mut bm = Bitmap::zeros(len);
+    for t in tensors {
+        assert_eq!(t.dense_len, len);
+        for &i in &t.indices {
+            bm.set(i as usize);
+        }
+    }
+    bm.count_ones() as f64 / len.max(1) as f64
+}
+
+/// Densification ratio `γ_G^n = d_G^n / d_G` (Definition 4), where `d_G`
+/// is the mean per-worker density.
+pub fn densification_ratio(tensors: &[CooTensor]) -> f64 {
+    assert!(!tensors.is_empty());
+    let mean_density: f64 =
+        tensors.iter().map(|t| t.density()).sum::<f64>() / tensors.len() as f64;
+    if mean_density == 0.0 {
+        return 0.0;
+    }
+    aggregated_density(tensors) / mean_density
+}
+
+/// Per-partition non-zero counts when the dense range is split evenly into
+/// `n` contiguous partitions (basis for Fig 2a's heatmap).
+pub fn partition_nnz(t: &CooTensor, n: usize) -> Vec<usize> {
+    assert!(n > 0);
+    let per = crate::util::ceil_div(t.dense_len, n) as u32;
+    let mut counts = vec![0usize; n];
+    for &i in &t.indices {
+        counts[(i / per.max(1)) as usize] += 1;
+    }
+    counts
+}
+
+/// Skewness ratio `s_G^n = max_i d_{G_i} / d_G` (Definition 5) for an even
+/// contiguous split into `n` partitions.
+pub fn skewness_ratio(t: &CooTensor, n: usize) -> f64 {
+    let d_g = t.density();
+    if d_g == 0.0 {
+        return 1.0;
+    }
+    let per = crate::util::ceil_div(t.dense_len, n) as f64;
+    partition_nnz(t, n)
+        .into_iter()
+        .map(|c| (c as f64 / per) / d_g)
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coo(len: usize, idx: &[u32]) -> CooTensor {
+        CooTensor::from_sorted(len, idx.to_vec(), vec![1.0; idx.len()])
+    }
+
+    #[test]
+    fn overlap_full_and_none() {
+        let a = coo(10, &[1, 2, 3]);
+        let b = coo(10, &[1, 2, 3, 4]);
+        assert!((overlap_ratio(&a, &b) - 1.0).abs() < 1e-12);
+        let c = coo(10, &[7, 8]);
+        assert_eq!(overlap_ratio(&a, &c), 0.0);
+    }
+
+    #[test]
+    fn overlap_partial() {
+        let a = coo(10, &[1, 2, 3, 4]);
+        let b = coo(10, &[3, 4, 5, 6]);
+        assert!((overlap_ratio(&a, &b) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlap_bitmap_matches_coo() {
+        let a = coo(64, &[1, 5, 9, 33]);
+        let b = coo(64, &[5, 9, 60]);
+        let ba = Bitmap::from_ones(64, &a.indices);
+        let bb = Bitmap::from_ones(64, &b.indices);
+        assert!((overlap_ratio(&a, &b) - overlap_ratio_bitmap(&ba, &bb)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn densification_bounds() {
+        // identical tensors: union == each, ratio 1
+        let xs = vec![coo(100, &[1, 2, 3]); 4];
+        assert!((densification_ratio(&xs) - 1.0).abs() < 1e-12);
+        // disjoint tensors: ratio == n
+        let ys: Vec<CooTensor> = (0..4u32).map(|w| coo(100, &[w * 10, w * 10 + 1])).collect();
+        assert!((densification_ratio(&ys) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skewness_uniform_is_one() {
+        // perfectly even non-zeros across 4 partitions of 8
+        let t = coo(8, &[0, 2, 4, 6]);
+        assert!((skewness_ratio(&t, 4) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skewness_concentrated() {
+        // all non-zeros in partition 0 of 4 → s = 4
+        let t = coo(8, &[0, 1]);
+        assert!((skewness_ratio(&t, 4) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partition_nnz_sums_to_nnz() {
+        let t = coo(100, &[0, 5, 49, 50, 99]);
+        let c = partition_nnz(&t, 7);
+        assert_eq!(c.iter().sum::<usize>(), 5);
+    }
+}

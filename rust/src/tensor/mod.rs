@@ -1,0 +1,46 @@
+//! Gradient tensor representations and sparsity metrics.
+//!
+//! The paper (§2.2) defines *dense tensors* (Definition 1) and *sparse
+//! tensors* (Definition 2, COO realization), plus three sparsity metrics:
+//! the overlap ratio (Definition 3), the densification ratio
+//! (Definition 4), and the skewness ratio (Definition 5). §3.2 adds three
+//! wire formats for indices — COO, tensor blocks (OmniReduce), positional
+//! bitmap — and Zen's hash bitmap (Algorithm 2, implemented in
+//! [`crate::hashing::hashbitmap`] since it depends on the hash partition).
+//!
+//! All formats implement [`WireFormat::wire_bytes`], the byte count a
+//! scheme puts on the network — the quantity every figure in the paper's
+//! evaluation ultimately measures.
+
+pub mod bitmap;
+pub mod block;
+pub mod coo;
+pub mod dense;
+pub mod metrics;
+
+pub use bitmap::Bitmap;
+pub use block::BlockTensor;
+pub use coo::CooTensor;
+pub use dense::DenseTensor;
+
+/// Bytes per FP32 gradient value.
+pub const BYTES_F32: usize = 4;
+/// Bytes per COO index (u32).
+pub const BYTES_IDX: usize = 4;
+
+/// Anything that can report its on-the-wire size.
+pub trait WireFormat {
+    /// Bytes this representation occupies when transmitted.
+    fn wire_bytes(&self) -> usize;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_are_fp32() {
+        assert_eq!(BYTES_F32, std::mem::size_of::<f32>());
+        assert_eq!(BYTES_IDX, std::mem::size_of::<u32>());
+    }
+}

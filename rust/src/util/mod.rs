@@ -1,0 +1,80 @@
+//! Self-contained utility substrate.
+//!
+//! The offline crate registry only carries the `xla` closure, so everything
+//! a framework normally pulls from crates.io (rand, rayon, criterion,
+//! proptest, serde) is implemented here from scratch: a PCG64 RNG and Zipf
+//! sampler, summary statistics, a scoped thread pool, a seeded
+//! property-testing harness, wall-clock timers, and table rendering.
+
+pub mod rng;
+pub mod stats;
+pub mod pool;
+pub mod propcheck;
+pub mod radix;
+pub mod timer;
+pub mod table;
+
+pub use pool::ThreadPool;
+pub use rng::{Pcg64, Zipf};
+pub use stats::Summary;
+pub use timer::Stopwatch;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Human-readable byte count.
+pub fn human_bytes(b: f64) -> String {
+    const UNITS: [&str; 6] = ["B", "KB", "MB", "GB", "TB", "PB"];
+    let mut v = b;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.2}{}", UNITS[u])
+}
+
+/// Human-readable duration in seconds.
+pub fn human_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(0, 3), 0);
+        assert_eq!(ceil_div(1, 1), 1);
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512.0), "512.00B");
+        assert_eq!(human_bytes(2048.0), "2.00KB");
+        assert!(human_bytes(3.5 * 1024.0 * 1024.0).ends_with("MB"));
+    }
+
+    #[test]
+    fn human_secs_units() {
+        assert!(human_secs(2e-9).ends_with("ns"));
+        assert!(human_secs(2e-5).ends_with("us"));
+        assert!(human_secs(2e-2).ends_with("ms"));
+        assert!(human_secs(2.0).ends_with('s'));
+    }
+}

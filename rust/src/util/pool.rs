@@ -1,0 +1,206 @@
+//! A scoped work-stealing-free thread pool built on std.
+//!
+//! Stands in for rayon in the hashing hot path (Algorithm 1's parallel
+//! hash phase) and in workload generation. `scoped_chunks` mirrors the
+//! `par_chunks_mut` idiom: it splits a mutable slice into contiguous
+//! chunks and runs the closure on each chunk from a worker thread.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Thread pool facade. Threads are spawned per `scope` invocation via
+/// `std::thread::scope`, which keeps lifetimes simple (no 'static bound on
+/// the work) at the cost of spawn overhead — amortized fine for the
+/// multi-megabyte tensors this library processes.
+#[derive(Clone, Debug)]
+pub struct ThreadPool {
+    workers: usize,
+}
+
+impl ThreadPool {
+    /// Pool sized to available parallelism.
+    pub fn new() -> Self {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        ThreadPool { workers }
+    }
+
+    /// Pool with an explicit worker count (min 1).
+    pub fn with_workers(workers: usize) -> Self {
+        ThreadPool {
+            workers: workers.max(1),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `f(chunk_index, chunk)` over contiguous chunks of `data`,
+    /// in parallel across the pool.
+    pub fn scoped_chunks<T: Send, F>(&self, data: &mut [T], chunk: usize, f: F)
+    where
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(chunk > 0);
+        if self.workers == 1 || data.len() <= chunk {
+            for (i, c) in data.chunks_mut(chunk).enumerate() {
+                f(i, c);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk).enumerate().collect();
+        let chunks = std::sync::Mutex::new(
+            chunks
+                .into_iter()
+                .map(Some)
+                .collect::<Vec<Option<(usize, &mut [T])>>>(),
+        );
+        std::thread::scope(|s| {
+            for _ in 0..self.workers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    let job = {
+                        let mut guard = chunks.lock().unwrap();
+                        if i >= guard.len() {
+                            return;
+                        }
+                        guard[i].take()
+                    };
+                    match job {
+                        Some((ci, c)) => f(ci, c),
+                        None => return,
+                    }
+                });
+            }
+        });
+    }
+
+    /// Parallel-for over index ranges: partitions [0, n) into `workers`
+    /// contiguous ranges and runs `f(range)` on each.
+    pub fn for_ranges<F>(&self, n: usize, f: F)
+    where
+        F: Fn(std::ops::Range<usize>) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let w = self.workers.min(n);
+        if w == 1 {
+            f(0..n);
+            return;
+        }
+        let per = crate::util::ceil_div(n, w);
+        std::thread::scope(|s| {
+            for t in 0..w {
+                let lo = t * per;
+                let hi = ((t + 1) * per).min(n);
+                if lo >= hi {
+                    break;
+                }
+                let f = &f;
+                s.spawn(move || f(lo..hi));
+            }
+        });
+    }
+
+    /// Parallel map over owned items, preserving order.
+    pub fn map<T: Send, R: Send, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        F: Fn(T) -> R + Sync,
+    {
+        if self.workers == 1 || items.len() <= 1 {
+            return items.into_iter().map(f).collect();
+        }
+        let n = items.len();
+        let slots: Vec<std::sync::Mutex<Option<T>>> =
+            items.into_iter().map(|x| std::sync::Mutex::new(Some(x))).collect();
+        let out: Vec<std::sync::Mutex<Option<R>>> =
+            (0..n).map(|_| std::sync::Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..self.workers.min(n) {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        return;
+                    }
+                    let item = slots[i].lock().unwrap().take().unwrap();
+                    *out[i].lock().unwrap() = Some(f(item));
+                });
+            }
+        });
+        out.into_iter()
+            .map(|m| m.into_inner().unwrap().unwrap())
+            .collect()
+    }
+}
+
+impl Default for ThreadPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_all() {
+        let pool = ThreadPool::with_workers(4);
+        let mut data = vec![0u32; 1003];
+        pool.scoped_chunks(&mut data, 100, |_ci, c| {
+            for v in c.iter_mut() {
+                *v += 1;
+            }
+        });
+        assert!(data.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn chunk_indices_correct() {
+        let pool = ThreadPool::with_workers(3);
+        let mut data = vec![0usize; 250];
+        pool.scoped_chunks(&mut data, 100, |ci, c| {
+            for v in c.iter_mut() {
+                *v = ci;
+            }
+        });
+        assert_eq!(data[0], 0);
+        assert_eq!(data[150], 1);
+        assert_eq!(data[249], 2);
+    }
+
+    #[test]
+    fn for_ranges_covers() {
+        let pool = ThreadPool::with_workers(4);
+        let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+        pool.for_ranges(97, |r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::with_workers(4);
+        let out = pool.map((0..100).collect::<Vec<_>>(), |x| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_fallback() {
+        let pool = ThreadPool::with_workers(1);
+        let mut data = vec![1u8; 10];
+        pool.scoped_chunks(&mut data, 3, |_, c| {
+            for v in c.iter_mut() {
+                *v = 2;
+            }
+        });
+        assert!(data.iter().all(|&v| v == 2));
+    }
+}

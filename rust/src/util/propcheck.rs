@@ -1,0 +1,238 @@
+//! Minimal property-based testing harness (proptest stand-in).
+//!
+//! Seeded generation + greedy shrinking over a recorded `Vec<u64>` draw
+//! tape. A property takes a [`Gen`] that draws values; on failure the
+//! harness shrinks the tape (halving entries, truncating) and panics with
+//! the smallest failing tape it found.
+//!
+//! Usage:
+//! ```ignore
+//! propcheck::check(200, |g| {
+//!     let n = g.usize_in(1, 64);
+//!     let xs = g.vec_u32(n, 0, 1000);
+//!     prop_assert(invariant(&xs), "invariant")
+//! });
+//! ```
+
+use super::rng::Pcg64;
+
+/// Value source for properties. Reads from a replay tape first; once the
+/// tape is exhausted, draws from a seeded RNG. Every draw is recorded so
+/// the harness can shrink the exact sequence that failed.
+pub struct Gen {
+    tape: Vec<u64>,
+    cursor: usize,
+    rng: Pcg64,
+    record: Vec<u64>,
+}
+
+impl Gen {
+    fn new(tape: Vec<u64>, seed: u64) -> Self {
+        Gen {
+            tape,
+            cursor: 0,
+            rng: Pcg64::seeded(seed),
+            record: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn draw(&mut self) -> u64 {
+        let v = if self.cursor < self.tape.len() {
+            let v = self.tape[self.cursor];
+            self.cursor += 1;
+            v
+        } else {
+            self.rng.next_u64()
+        };
+        self.record.push(v);
+        v
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.draw()
+    }
+
+    /// Inclusive-bounds usize.
+    pub fn usize_in(&mut self, lo: usize, hi_incl: usize) -> usize {
+        assert!(hi_incl >= lo);
+        lo + (self.draw() % (hi_incl - lo + 1) as u64) as usize
+    }
+
+    /// Inclusive-bounds u32.
+    pub fn u32_in(&mut self, lo: u32, hi_incl: u32) -> u32 {
+        lo + (self.draw() % (hi_incl - lo + 1) as u64) as u32
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        (self.draw() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.draw() & 1 == 1
+    }
+
+    pub fn vec_u32(&mut self, len: usize, lo: u32, hi_incl: u32) -> Vec<u32> {
+        (0..len).map(|_| self.u32_in(lo, hi_incl)).collect()
+    }
+
+    pub fn vec_f32_unit(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.f64_unit() as f32).collect()
+    }
+
+    /// Distinct sorted u32 indices in [0, bound).
+    pub fn distinct_sorted_u32(&mut self, len: usize, bound: u32) -> Vec<u32> {
+        assert!(len as u64 <= bound as u64);
+        let mut set = std::collections::BTreeSet::new();
+        // Bounded loop: when len is close to bound, fill deterministically.
+        if len * 2 >= bound as usize {
+            let mut all: Vec<u32> = (0..bound).collect();
+            // Draw-based partial shuffle for determinism under replay.
+            for i in 0..len {
+                let j = i + (self.draw() % (bound as u64 - i as u64)) as usize;
+                all.swap(i, j);
+            }
+            let mut v = all[..len].to_vec();
+            v.sort_unstable();
+            return v;
+        }
+        while set.len() < len {
+            set.insert(self.u32_in(0, bound - 1));
+        }
+        set.into_iter().collect()
+    }
+}
+
+/// Property outcome.
+pub type PropResult = Result<(), String>;
+
+/// Assert helper for property bodies.
+pub fn prop_assert(cond: bool, msg: &str) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics with the shrunk
+/// counterexample on failure. Deterministic given `seed`.
+pub fn check_seeded<F>(seed: u64, cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    for case in 0..cases {
+        let case_seed = seed
+            .wrapping_add(case as u64)
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let mut g = Gen::new(Vec::new(), case_seed);
+        if let Err(msg) = prop(&mut g) {
+            let tape = g.record.clone();
+            let (tape, msg) = shrink(&prop, tape, msg, case_seed);
+            panic!(
+                "property failed (seed={case_seed}, case={case}): {msg}\n\
+                 shrunk tape ({} draws, first 32 shown): {:?}",
+                tape.len(),
+                &tape[..tape.len().min(32)]
+            );
+        }
+    }
+}
+
+/// Run with the default seed.
+pub fn check<F>(cases: usize, prop: F)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    check_seeded(0x5eed_cafe, cases, prop)
+}
+
+fn shrink<F>(prop: &F, tape: Vec<u64>, msg: String, seed: u64) -> (Vec<u64>, String)
+where
+    F: Fn(&mut Gen) -> PropResult,
+{
+    let mut best = tape;
+    let mut best_msg = msg;
+    let mut budget = 300usize;
+    let mut improved = true;
+    while improved && budget > 0 {
+        improved = false;
+        let mut candidates: Vec<Vec<u64>> = Vec::new();
+        if best.len() > 1 {
+            candidates.push(best[..best.len() / 2].to_vec());
+            candidates.push(best[..best.len() - 1].to_vec());
+        }
+        for i in 0..best.len().min(24) {
+            if best[i] != 0 {
+                let mut t = best.clone();
+                t[i] /= 2;
+                candidates.push(t);
+                let mut t0 = best.clone();
+                t0[i] = 0;
+                candidates.push(t0);
+            }
+        }
+        for cand in candidates {
+            if budget == 0 {
+                break;
+            }
+            budget -= 1;
+            let mut g = Gen::new(cand.clone(), seed);
+            if let Err(m) = prop(&mut g) {
+                let smaller = cand.len() < best.len()
+                    || (cand.len() == best.len()
+                        && cand.iter().map(|v| *v as u128).sum::<u128>()
+                            < best.iter().map(|v| *v as u128).sum::<u128>());
+                if smaller {
+                    best = cand;
+                    best_msg = m;
+                    improved = true;
+                    break;
+                }
+            }
+        }
+    }
+    (best, best_msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(50, |g| {
+            let a = g.usize_in(0, 100);
+            let b = g.usize_in(0, 100);
+            prop_assert(a + b >= a, "monotone add")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(50, |g| {
+            let a = g.usize_in(0, 1000);
+            prop_assert(a < 500, "a < 500")
+        });
+    }
+
+    #[test]
+    fn distinct_sorted_invariants() {
+        check(50, |g| {
+            let len = g.usize_in(0, 50);
+            let v = g.distinct_sorted_u32(len, 1000);
+            let sorted = v.windows(2).all(|w| w[0] < w[1]);
+            prop_assert(sorted && v.len() == len, "sorted distinct")
+        });
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut g1 = Gen::new(Vec::new(), 99);
+        let seq: Vec<u64> = (0..32).map(|_| g1.u64()).collect();
+        let mut g2 = Gen::new(seq.clone(), 99);
+        let replayed: Vec<u64> = (0..32).map(|_| g2.u64()).collect();
+        assert_eq!(seq, replayed);
+    }
+}

@@ -1,0 +1,85 @@
+//! Wall-clock timing and a micro-benchmark runner (criterion stand-in).
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// Simple stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch {
+            start: Instant::now(),
+        }
+    }
+
+    /// Seconds elapsed since start.
+    pub fn elapsed(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Reset and return the previous elapsed seconds.
+    pub fn lap(&mut self) -> f64 {
+        let e = self.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Benchmark runner: warms up, then measures `iters` timed runs of `f`,
+/// returning the per-run timing summary in seconds. Used by all
+/// `rust/benches/*` harnesses (criterion is unavailable offline).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        s.add(t.elapsed().as_secs_f64());
+    }
+    let mut r = s.clone();
+    println!("bench {name}: {}", r.report());
+    s
+}
+
+/// Measure a single run's seconds.
+pub fn time_once<R, F: FnOnce() -> R>(f: F) -> (R, f64) {
+    let t = Instant::now();
+    let r = f();
+    (r, t.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let e = sw.lap();
+        assert!(e >= 0.001);
+        assert!(sw.elapsed() < e + 1.0);
+    }
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut count = 0u32;
+        let s = bench("noop", 2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.len(), 5);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, secs) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

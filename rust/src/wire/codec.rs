@@ -1,0 +1,467 @@
+//! Binary codecs for every synchronization payload.
+//!
+//! Format: little-endian, length-prefixed frames.
+//!
+//! ```text
+//! frame   := magic(u16) version(u8) kind(u8) body_len(u32) body
+//! ```
+//!
+//! Body layouts per message kind are documented on each variant. The
+//! encoded size of each payload equals the analytic `wire_bytes()` of
+//! the corresponding tensor format plus the fixed frame/header overhead
+//! — asserted by tests so the simulator's accounting stays honest.
+
+use crate::tensor::{Bitmap, CooTensor};
+
+const MAGIC: u16 = 0x5A45; // "ZE"
+const VERSION: u8 = 1;
+
+/// Frame header bytes: magic + version + kind + body_len.
+pub const FRAME_HEADER: usize = 2 + 1 + 1 + 4;
+
+/// Codec error.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum WireError {
+    #[error("truncated frame: need {need}, have {have}")]
+    Truncated { need: usize, have: usize },
+    #[error("bad magic {0:#06x}")]
+    BadMagic(u16),
+    #[error("unsupported version {0}")]
+    BadVersion(u8),
+    #[error("unknown message kind {0}")]
+    BadKind(u8),
+    #[error("body length mismatch: header {header}, actual {actual}")]
+    LengthMismatch { header: usize, actual: usize },
+    #[error("malformed body: {0}")]
+    Malformed(&'static str),
+}
+
+/// A synchronization message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    /// Push of a COO shard to a server.
+    /// Body: dense_len(u64) nnz(u32) indices[u32×nnz] values[f32×nnz]
+    PushCoo { from: u32, tensor: CooTensor },
+    /// Pull payload: hash bitmap over the server's partition domain +
+    /// values in domain order.
+    /// Body: server(u32) domain_len(u64) bitmap_words nnz(u32) values
+    PullHashBitmap {
+        server: u32,
+        bitmap: Bitmap,
+        values: Vec<f32>,
+    },
+    /// Pull payload in COO (Zen-COO ablation / Sparse PS).
+    PullCoo { server: u32, tensor: CooTensor },
+    /// Control: barrier/done marker used by the fabric tests.
+    Barrier { epoch: u32 },
+}
+
+impl Message {
+    fn kind(&self) -> u8 {
+        match self {
+            Message::PushCoo { .. } => 1,
+            Message::PullHashBitmap { .. } => 2,
+            Message::PullCoo { .. } => 3,
+            Message::Barrier { .. } => 4,
+        }
+    }
+}
+
+/// Encoding into a byte buffer.
+pub trait Encode {
+    fn encode(&self, out: &mut Vec<u8>);
+    fn encoded_len(&self) -> usize;
+}
+
+/// Decoding from a byte slice, returning (value, bytes consumed).
+pub trait Decode: Sized {
+    fn decode(buf: &[u8]) -> Result<(Self, usize), WireError>;
+}
+
+// -- primitive helpers -------------------------------------------------
+
+struct Writer<'a>(&'a mut Vec<u8>);
+
+impl<'a> Writer<'a> {
+    fn u16(&mut self, v: u16) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u32s(&mut self, vs: &[u32]) {
+        for v in vs {
+            self.u32(*v);
+        }
+    }
+    fn f32s(&mut self, vs: &[f32]) {
+        for v in vs {
+            self.0.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    fn u64s(&mut self, vs: &[u64]) {
+        for v in vs {
+            self.u64(*v);
+        }
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn need(&self, n: usize) -> Result<(), WireError> {
+        if self.pos + n > self.buf.len() {
+            Err(WireError::Truncated {
+                need: self.pos + n,
+                have: self.buf.len(),
+            })
+        } else {
+            Ok(())
+        }
+    }
+    fn u16(&mut self) -> Result<u16, WireError> {
+        self.need(2)?;
+        let v = u16::from_le_bytes(self.buf[self.pos..self.pos + 2].try_into().unwrap());
+        self.pos += 2;
+        Ok(v)
+    }
+    fn u8(&mut self) -> Result<u8, WireError> {
+        self.need(1)?;
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        Ok(v)
+    }
+    fn u32(&mut self) -> Result<u32, WireError> {
+        self.need(4)?;
+        let v = u32::from_le_bytes(self.buf[self.pos..self.pos + 4].try_into().unwrap());
+        self.pos += 4;
+        Ok(v)
+    }
+    fn u64(&mut self) -> Result<u64, WireError> {
+        self.need(8)?;
+        let v = u64::from_le_bytes(self.buf[self.pos..self.pos + 8].try_into().unwrap());
+        self.pos += 8;
+        Ok(v)
+    }
+    fn u32s(&mut self, n: usize) -> Result<Vec<u32>, WireError> {
+        self.need(n * 4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u32()?);
+        }
+        Ok(out)
+    }
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, WireError> {
+        self.need(n * 4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let v = f32::from_le_bytes(self.buf[self.pos..self.pos + 4].try_into().unwrap());
+            self.pos += 4;
+            out.push(v);
+        }
+        Ok(out)
+    }
+    fn u64s(&mut self, n: usize) -> Result<Vec<u64>, WireError> {
+        self.need(n * 8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u64()?);
+        }
+        Ok(out)
+    }
+}
+
+fn coo_body_len(t: &CooTensor) -> usize {
+    8 + 4 + t.nnz() * 8
+}
+
+fn write_coo(w: &mut Writer, t: &CooTensor) {
+    w.u64(t.dense_len as u64);
+    w.u32(t.nnz() as u32);
+    w.u32s(&t.indices);
+    w.f32s(&t.values);
+}
+
+fn read_coo(r: &mut Reader) -> Result<CooTensor, WireError> {
+    let dense_len = r.u64()? as usize;
+    let nnz = r.u32()? as usize;
+    let indices = r.u32s(nnz)?;
+    let values = r.f32s(nnz)?;
+    if indices.windows(2).any(|w| w[0] >= w[1]) {
+        return Err(WireError::Malformed("indices not strictly ascending"));
+    }
+    if indices.last().map(|&i| i as usize >= dense_len).unwrap_or(false) {
+        return Err(WireError::Malformed("index out of range"));
+    }
+    Ok(CooTensor::from_sorted(dense_len, indices, values))
+}
+
+impl Encode for Message {
+    fn encoded_len(&self) -> usize {
+        FRAME_HEADER
+            + match self {
+                Message::PushCoo { tensor, .. } => 4 + coo_body_len(tensor),
+                Message::PullHashBitmap { bitmap, values, .. } => {
+                    4 + 8 + crate::util::ceil_div(bitmap.len().max(1), 64) * 8 + 4 + values.len() * 4
+                }
+                Message::PullCoo { tensor, .. } => 4 + coo_body_len(tensor),
+                Message::Barrier { .. } => 4,
+            }
+    }
+
+    fn encode(&self, out: &mut Vec<u8>) {
+        let start = out.len();
+        let mut w = Writer(out);
+        w.u16(MAGIC);
+        w.u8(VERSION);
+        w.u8(self.kind());
+        w.u32(0); // body_len placeholder
+        let body_start = w.0.len();
+        match self {
+            Message::PushCoo { from, tensor } => {
+                w.u32(*from);
+                write_coo(&mut w, tensor);
+            }
+            Message::PullHashBitmap {
+                server,
+                bitmap,
+                values,
+            } => {
+                w.u32(*server);
+                w.u64(bitmap.len() as u64);
+                let words = bitmap_words(bitmap);
+                w.u64s(&words);
+                w.u32(values.len() as u32);
+                w.f32s(values);
+            }
+            Message::PullCoo { server, tensor } => {
+                w.u32(*server);
+                write_coo(&mut w, tensor);
+            }
+            Message::Barrier { epoch } => {
+                w.u32(*epoch);
+            }
+        }
+        let body_len = (out.len() - body_start) as u32;
+        out[start + 4..start + 8].copy_from_slice(&body_len.to_le_bytes());
+    }
+}
+
+impl Decode for Message {
+    fn decode(buf: &[u8]) -> Result<(Self, usize), WireError> {
+        let mut r = Reader { buf, pos: 0 };
+        let magic = r.u16()?;
+        if magic != MAGIC {
+            return Err(WireError::BadMagic(magic));
+        }
+        let version = r.u8()?;
+        if version != VERSION {
+            return Err(WireError::BadVersion(version));
+        }
+        let kind = r.u8()?;
+        let body_len = r.u32()? as usize;
+        let body_start = r.pos;
+        let msg = match kind {
+            1 => {
+                let from = r.u32()?;
+                let tensor = read_coo(&mut r)?;
+                Message::PushCoo { from, tensor }
+            }
+            2 => {
+                let server = r.u32()?;
+                let bits = r.u64()? as usize;
+                let n_words = crate::util::ceil_div(bits.max(1), 64);
+                let words = r.u64s(n_words)?;
+                let nnz = r.u32()? as usize;
+                let values = r.f32s(nnz)?;
+                let bitmap = bitmap_from_words(bits, &words);
+                if bitmap.count_ones() != nnz {
+                    return Err(WireError::Malformed("bitmap popcount != value count"));
+                }
+                Message::PullHashBitmap {
+                    server,
+                    bitmap,
+                    values,
+                }
+            }
+            3 => {
+                let server = r.u32()?;
+                let tensor = read_coo(&mut r)?;
+                Message::PullCoo { server, tensor }
+            }
+            4 => Message::Barrier { epoch: r.u32()? },
+            k => return Err(WireError::BadKind(k)),
+        };
+        let actual = r.pos - body_start;
+        if actual != body_len {
+            return Err(WireError::LengthMismatch {
+                header: body_len,
+                actual,
+            });
+        }
+        Ok((msg, r.pos))
+    }
+}
+
+fn bitmap_words(b: &Bitmap) -> Vec<u64> {
+    // reconstruct word storage through the public API
+    let mut words = vec![0u64; crate::util::ceil_div(b.len().max(1), 64)];
+    for i in b.ones() {
+        words[i as usize / 64] |= 1u64 << (i % 64);
+    }
+    words
+}
+
+fn bitmap_from_words(bits: usize, words: &[u64]) -> Bitmap {
+    let mut b = Bitmap::zeros(bits);
+    for (wi, &w) in words.iter().enumerate() {
+        let mut w = w;
+        while w != 0 {
+            let t = w.trailing_zeros() as usize;
+            let pos = wi * 64 + t;
+            if pos < bits {
+                b.set(pos);
+            }
+            w &= w - 1;
+        }
+    }
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, prop_assert};
+
+    fn roundtrip(m: &Message) -> Message {
+        let mut buf = Vec::new();
+        m.encode(&mut buf);
+        assert_eq!(buf.len(), m.encoded_len(), "encoded_len must be exact");
+        let (back, used) = Message::decode(&buf).unwrap();
+        assert_eq!(used, buf.len());
+        back
+    }
+
+    #[test]
+    fn push_coo_roundtrip() {
+        let t = CooTensor::from_sorted(100, vec![3, 40, 99], vec![1.0, -2.5, 0.125]);
+        let m = Message::PushCoo { from: 7, tensor: t };
+        assert_eq!(roundtrip(&m), m);
+    }
+
+    #[test]
+    fn pull_hash_bitmap_roundtrip() {
+        let bitmap = Bitmap::from_ones(130, &[0, 64, 129]);
+        let m = Message::PullHashBitmap {
+            server: 2,
+            bitmap,
+            values: vec![1.0, 2.0, 3.0],
+        };
+        assert_eq!(roundtrip(&m), m);
+    }
+
+    #[test]
+    fn barrier_roundtrip() {
+        let m = Message::Barrier { epoch: 42 };
+        assert_eq!(roundtrip(&m), m);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let m = Message::Barrier { epoch: 1 };
+        let mut buf = Vec::new();
+        m.encode(&mut buf);
+        buf[0] = 0;
+        assert!(matches!(Message::decode(&buf), Err(WireError::BadMagic(_))));
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let t = CooTensor::from_sorted(50, vec![1, 2], vec![1.0, 2.0]);
+        let m = Message::PushCoo { from: 0, tensor: t };
+        let mut buf = Vec::new();
+        m.encode(&mut buf);
+        for cut in [1, 5, buf.len() - 1] {
+            assert!(Message::decode(&buf[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn malformed_indices_rejected() {
+        // hand-craft a PushCoo with descending indices
+        let t = CooTensor::from_sorted(50, vec![1, 2], vec![1.0, 2.0]);
+        let m = Message::PushCoo { from: 0, tensor: t };
+        let mut buf = Vec::new();
+        m.encode(&mut buf);
+        // indices start after header(8) + from(4) + dense_len(8) + nnz(4)
+        let idx_off = FRAME_HEADER + 4 + 8 + 4;
+        buf[idx_off..idx_off + 4].copy_from_slice(&10u32.to_le_bytes());
+        buf[idx_off + 4..idx_off + 8].copy_from_slice(&3u32.to_le_bytes());
+        assert!(matches!(
+            Message::decode(&buf),
+            Err(WireError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn version_checked() {
+        let m = Message::Barrier { epoch: 1 };
+        let mut buf = Vec::new();
+        m.encode(&mut buf);
+        buf[2] = 99;
+        assert_eq!(Message::decode(&buf), Err(WireError::BadVersion(99)));
+    }
+
+    #[test]
+    fn encoded_size_matches_analytic_accounting() {
+        // PushCoo body ≈ CooTensor::wire_bytes + (frame + from + header)
+        let t = CooTensor::from_sorted(1000, (0..100).collect(), vec![1.0; 100]);
+        let m = Message::PushCoo {
+            from: 0,
+            tensor: t.clone(),
+        };
+        let overhead = FRAME_HEADER + 4 + 8 + 4;
+        assert_eq!(
+            m.encoded_len(),
+            crate::tensor::WireFormat::wire_bytes(&t) + overhead
+        );
+    }
+
+    #[test]
+    fn prop_coo_roundtrip_any_shape() {
+        check(100, |g| {
+            let len = g.usize_in(1, 2000);
+            let nnz = g.usize_in(0, len.min(200));
+            let idx = g.distinct_sorted_u32(nnz, len as u32);
+            let vals: Vec<f32> = (0..nnz).map(|_| g.f64_unit() as f32 - 0.5).collect();
+            let t = CooTensor::from_sorted(len, idx, vals);
+            let m = Message::PushCoo { from: 1, tensor: t };
+            prop_assert(roundtrip(&m) == m, "coo roundtrip")
+        });
+    }
+
+    #[test]
+    fn prop_bitmap_roundtrip_any_shape() {
+        check(100, |g| {
+            let bits = g.usize_in(1, 1500);
+            let n = g.usize_in(0, bits.min(128));
+            let ones = g.distinct_sorted_u32(n, bits as u32);
+            let bitmap = Bitmap::from_ones(bits, &ones);
+            let m = Message::PullHashBitmap {
+                server: 0,
+                bitmap,
+                values: vec![0.5; n],
+            };
+            prop_assert(roundtrip(&m) == m, "bitmap roundtrip")
+        });
+    }
+}

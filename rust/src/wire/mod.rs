@@ -1,0 +1,19 @@
+//! Wire layer: binary serialization codecs + a real message-passing
+//! transport between in-process endpoints.
+//!
+//! The scheme implementations in [`crate::schemes`] account bytes
+//! analytically; this module provides the *execution* mode — payloads
+//! are really serialized to framed byte buffers, moved through
+//! channels between worker threads, deserialized, and aggregated. The
+//! byte counts the analytic mode charges are asserted against the real
+//! encoded sizes (`rust/tests/wire_integration.rs`), closing the loop
+//! between the simulator and a deployable data plane.
+//!
+//! No serde offline, so the codecs are hand-rolled little-endian
+//! framing with explicit versioning and exhaustive roundtrip tests.
+
+pub mod codec;
+pub mod transport;
+
+pub use codec::{Decode, Encode, Message, WireError};
+pub use transport::{Endpoint, Fabric};

@@ -1,0 +1,156 @@
+//! Model profiles — paper Table 1.
+//!
+//! Gradient sizes are parameter counts; `density` is the average density
+//! of the embedding gradient tensor on one GPU. `rows × dim` factors the
+//! embedding parameter count into a vocabulary × embedding-dim shape
+//! (the paper does not publish the exact shapes; we pick representative
+//! ones — LSTM/One-Billion-Word and NMT/IWSLT vocabularies are ~800k and
+//! ~32k, DeepFM/Criteo feature tables are wide and shallow, BERT's
+//! WordPiece vocab is 30k — and scale them together with the totals).
+//! `zipf_theta` controls access skew, fitted so the measured skewness
+//! ratios land in the Fig 2b regime.
+
+/// One row of Table 1 plus the generator's structural parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelProfile {
+    pub name: &'static str,
+    pub task: &'static str,
+    pub dataset: &'static str,
+    /// Dense (MLP) gradient parameter count.
+    pub mlp_params: usize,
+    /// Embedding rows (vocabulary / feature ids).
+    pub rows: usize,
+    /// Embedding width; `emb_params = rows * dim`.
+    pub dim: usize,
+    pub batch_size: usize,
+    /// Per-GPU embedding-gradient density (Table 1).
+    pub density: f64,
+    /// Zipf exponent for row-access popularity.
+    pub zipf_theta: f64,
+}
+
+impl ModelProfile {
+    pub fn emb_params(&self) -> usize {
+        self.rows * self.dim
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.mlp_params + self.emb_params()
+    }
+
+    /// Scale the model down by `factor` (rows and MLP shrink; dim, batch,
+    /// density, skew preserved) — traffic *ratios* between schemes are
+    /// scale-invariant, so experiments run on laptop-sized tensors.
+    pub fn scaled(&self, factor: usize) -> ModelProfile {
+        assert!(factor >= 1);
+        let mut p = self.clone();
+        p.rows = (p.rows / factor).max(64);
+        p.mlp_params = (p.mlp_params / factor).max(64);
+        p
+    }
+}
+
+/// Table 1, full size.
+pub fn table1() -> Vec<ModelProfile> {
+    vec![
+        ModelProfile {
+            name: "LSTM",
+            task: "Language Modeling",
+            dataset: "One Billion Word",
+            mlp_params: 20_000_000,
+            rows: 793_470,
+            dim: 512, // 406.3M embedding params
+            batch_size: 128,
+            density: 0.0113,
+            zipf_theta: 1.1,
+        },
+        ModelProfile {
+            name: "DeepFM",
+            task: "Click-through Rate Prediction",
+            dataset: "Criteo",
+            mlp_params: 68_000_000,
+            rows: 13_375_000,
+            dim: 16, // 214M embedding params
+            batch_size: 1024,
+            density: 0.0280,
+            zipf_theta: 1.05,
+        },
+        ModelProfile {
+            name: "NMT",
+            task: "Machine Translation",
+            dataset: "IWSLT 2014 De-En",
+            mlp_params: 31_000_000,
+            rows: 218_750,
+            dim: 512, // 112M embedding params
+            batch_size: 64,
+            density: 0.0247,
+            zipf_theta: 1.0,
+        },
+        ModelProfile {
+            name: "BERT",
+            task: "Question Answering",
+            dataset: "SQuAD v1.1",
+            mlp_params: 86_000_000,
+            rows: 29_950,
+            dim: 768, // 23M embedding params
+            batch_size: 4,
+            density: 0.0106,
+            zipf_theta: 0.95,
+        },
+    ]
+}
+
+/// Table-1 profiles scaled for in-process experiments (default 1/64).
+pub fn table1_scaled(factor: usize) -> Vec<ModelProfile> {
+    table1().into_iter().map(|p| p.scaled(factor)).collect()
+}
+
+/// Look up a profile by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<ModelProfile> {
+    table1()
+        .into_iter()
+        .find(|p| p.name.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper_sizes() {
+        let t = table1();
+        assert_eq!(t.len(), 4);
+        // embedding param counts within 2% of Table 1
+        let expect = [406e6, 214e6, 112e6, 23e6];
+        for (p, e) in t.iter().zip(expect) {
+            let got = p.emb_params() as f64;
+            assert!(
+                (got - e).abs() / e < 0.02,
+                "{}: emb {got} vs paper {e}",
+                p.name
+            );
+        }
+        // densities exactly as Table 1
+        assert_eq!(t[0].density, 0.0113);
+        assert_eq!(t[1].density, 0.0280);
+        assert_eq!(t[2].density, 0.0247);
+        assert_eq!(t[3].density, 0.0106);
+    }
+
+    #[test]
+    fn scaling_preserves_density_and_dim() {
+        for p in table1() {
+            let s = p.scaled(64);
+            assert_eq!(s.density, p.density);
+            assert_eq!(s.dim, p.dim);
+            assert!(s.emb_params() < p.emb_params());
+        }
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("nmt").is_some());
+        assert!(by_name("LSTM").is_some());
+        assert!(by_name("resnet").is_none());
+    }
+}

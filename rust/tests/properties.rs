@@ -1,0 +1,145 @@
+//! Property-based integration tests over the coordinator-level
+//! invariants: any scheme × any workload shape must aggregate exactly,
+//! the hierarchical hasher must stay lossless and consistent, and the
+//! hash-bitmap codec must round-trip — all under randomized shapes.
+
+use zen::cluster::{LinkKind, Network};
+use zen::hashing::{HashBitmapCodec, HierarchicalHasher};
+use zen::schemes;
+use zen::tensor::CooTensor;
+use zen::util::propcheck::{check_seeded, prop_assert};
+
+fn random_inputs(g: &mut zen::util::propcheck::Gen, n: usize, dense_len: usize) -> Vec<CooTensor> {
+    (0..n)
+        .map(|_| {
+            let nnz = g.usize_in(0, (dense_len / 2).min(300));
+            let idx = g.distinct_sorted_u32(nnz, dense_len as u32);
+            let vals: Vec<f32> = (0..nnz)
+                .map(|_| (g.f64_unit() as f32) * 2.0 - 1.0)
+                .map(|v| if v == 0.0 { 0.25 } else { v })
+                .collect();
+            CooTensor::from_sorted(dense_len, idx, vals)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_any_scheme_any_workload_aggregates_exactly() {
+    check_seeded(0xa11, 60, |g| {
+        let n = g.usize_in(1, 9);
+        let dense_len = g.usize_in(n.max(4), 3_000);
+        let inputs = random_inputs(g, n, dense_len);
+        let net = Network::new(n, LinkKind::Tcp25);
+        let nnz = inputs[0].nnz().max(8);
+        let which = g.usize_in(0, 5);
+        let name = ["dense", "agsparse", "sparcml", "sparseps", "omnireduce", "zen"][which];
+        let scheme = schemes::by_name(name, n, g.u64(), nnz).unwrap();
+        let r = scheme.sync(&inputs, &net);
+        // exact dense-sum equivalence within float tolerance
+        let reference = schemes::reference_sum(&inputs);
+        for out in &r.outputs {
+            let d = out.to_dense();
+            for i in 0..dense_len {
+                let (a, b) = (d.values[i], reference.values[i]);
+                if (a - b).abs() > 1e-4_f32.max(b.abs() * 1e-4) {
+                    return Err(format!("{name}: idx {i} {a} != {b}"));
+                }
+            }
+        }
+        // traffic accounting sanity: no negative/overflowed byte counts
+        prop_assert(
+            r.report.total_bytes() < (dense_len as u64 + 1) * 16 * n as u64 * n as u64,
+            "traffic bounded",
+        )
+    });
+}
+
+#[test]
+fn prop_hasher_lossless_and_worker_consistent() {
+    check_seeded(0xb22, 80, |g| {
+        let dense_len = g.usize_in(16, 5_000);
+        let n = g.usize_in(1, 10);
+        let seed = g.u64();
+        let h = HierarchicalHasher::new(
+            seed,
+            n,
+            g.usize_in(1, 4),
+            g.usize_in(4, 128),
+            g.usize_in(1, 16),
+        );
+        // two "workers" with overlapping index sets
+        let a_nnz = g.usize_in(0, 200.min(dense_len));
+        let b_nnz = g.usize_in(0, 200.min(dense_len));
+        let a_idx = g.distinct_sorted_u32(a_nnz, dense_len as u32);
+        let b_idx = g.distinct_sorted_u32(b_nnz, dense_len as u32);
+        let a = CooTensor::from_sorted(dense_len, a_idx, vec![1.0; a_nnz]);
+        let b = CooTensor::from_sorted(dense_len, b_idx, vec![2.0; b_nnz]);
+        let oa = h.partition(&a);
+        let ob = h.partition(&b);
+        // lossless
+        if CooTensor::merge_all(&oa.parts) != a {
+            return Err("worker A lost data".into());
+        }
+        if CooTensor::merge_all(&ob.parts) != b {
+            return Err("worker B lost data".into());
+        }
+        // consistency: shared indices land in the same partition
+        for p in 0..n {
+            for &idx in &oa.parts[p].indices {
+                if b.indices.binary_search(&idx).is_ok() {
+                    let in_b = ob.parts[p].indices.binary_search(&idx).is_ok();
+                    if !in_b {
+                        return Err(format!("index {idx} split across partitions"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hash_bitmap_roundtrip_through_hasher() {
+    check_seeded(0xc33, 60, |g| {
+        let dense_len = g.usize_in(16, 4_000);
+        let n = g.usize_in(1, 8);
+        let h = HierarchicalHasher::with_defaults(g.u64(), n, 64);
+        let nnz = g.usize_in(0, 200.min(dense_len));
+        let idx = g.distinct_sorted_u32(nnz, dense_len as u32);
+        let t = CooTensor::from_sorted(dense_len, idx, vec![1.5; nnz]);
+        let parts = h.partition(&t).parts;
+        let domains = h.partition_domains(dense_len);
+        for p in 0..n {
+            let codec = HashBitmapCodec::new(&domains[p]);
+            let payload = codec.encode(&parts[p]);
+            if codec.decode(&payload, dense_len) != parts[p] {
+                return Err(format!("partition {p} roundtrip failed"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_zen_balanced_for_any_input_distribution() {
+    // Theorem 2 is distribution-free: even adversarially clustered
+    // indices must hash into balanced partitions.
+    check_seeded(0xd44, 30, |g| {
+        let n = 8;
+        let dense_len = 200_000;
+        // cluster all non-zeros into a random narrow window
+        let width = g.usize_in(2_000, 10_000);
+        let start = g.usize_in(0, dense_len - width);
+        let nnz = g.usize_in(1_000, width.min(4_000));
+        let mut idx = g.distinct_sorted_u32(nnz, width as u32);
+        for i in idx.iter_mut() {
+            *i += start as u32;
+        }
+        let t = CooTensor::from_sorted(dense_len, idx, vec![1.0; nnz]);
+        let h = HierarchicalHasher::with_defaults(g.u64(), n, nnz);
+        let out = h.partition(&t);
+        let imb = out.push_imbalance();
+        let bound = 1.0 + 5.0 * ((n as f64 * (n as f64).ln()) / nnz as f64).sqrt();
+        prop_assert(imb <= bound, &format!("imbalance {imb} > {bound}"))
+    });
+}

@@ -1,0 +1,112 @@
+//! Integration: the PJRT runtime loads and executes the AOT artifacts,
+//! and the numerics match expectations. Requires `make artifacts`.
+
+use zen::runtime::{lit, Runtime};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn need_artifacts() -> bool {
+    let ok = artifacts_dir().join("MANIFEST.txt").exists();
+    if !ok {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    ok
+}
+
+#[test]
+fn murmur_artifact_matches_native() {
+    if !need_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt
+        .load_hlo(artifacts_dir().join("murmur_s4_n65536.hlo.txt"))
+        .unwrap();
+    // Same seeds rust-side.
+    let seeds: Vec<u32> = vec![7, 11, 13, 17];
+    let n = 65_536usize;
+    let indices: Vec<u32> = (0..n as u32).map(|i| i.wrapping_mul(2_654_435_761)).collect();
+    let idx_lit = xla::Literal::vec1(&indices);
+    let seed_lit = xla::Literal::vec1(&seeds);
+    let out = exe.run(&[idx_lit, seed_lit]).unwrap();
+    assert_eq!(out.len(), 1);
+    let hashes = lit::to_u32(&out[0]).unwrap();
+    assert_eq!(hashes.len(), 4 * n);
+    // Spot-check against the native rust murmur at random positions.
+    for &pos in &[0usize, 1, 1000, 65_535, 70_000, 150_000] {
+        let s = pos / n;
+        let i = pos % n;
+        let expect = zen::hashing::murmur3_32(indices[i], seeds[s]);
+        assert_eq!(
+            hashes[pos], expect,
+            "mismatch at seed {s} idx {i}: jax/pallas vs rust"
+        );
+    }
+}
+
+#[test]
+fn train_step_tiny_executes_and_learns() {
+    if !need_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt
+        .load_hlo(artifacts_dir().join("train_step_b64_k4_d32_h64.hlo.txt"))
+        .unwrap();
+    let (b, k, d, h) = (64usize, 4usize, 32usize, 64usize);
+    let mut rng = zen::util::Pcg64::seeded(1);
+    let mut randn = |n: usize, s: f64| -> Vec<f32> {
+        (0..n).map(|_| (rng.normal() * s) as f32).collect()
+    };
+    let mut center = randn(b * d, 0.5);
+    let mut context = randn(b * d, 0.5);
+    let mut neg = randn(b * k * d, 0.5);
+    let mut w1 = randn(d * h, 0.2);
+    let mut b1 = vec![0.0f32; h];
+    let mut w2 = randn(h * d, 0.2);
+    let mut b2 = vec![0.0f32; d];
+
+    let mut first = None;
+    let mut last = 0.0f32;
+    for _ in 0..10 {
+        let out = exe
+            .run(&[
+                lit::f32(&center, &[b as i64, d as i64]).unwrap(),
+                lit::f32(&context, &[b as i64, d as i64]).unwrap(),
+                lit::f32(&neg, &[b as i64, k as i64, d as i64]).unwrap(),
+                lit::f32(&w1, &[d as i64, h as i64]).unwrap(),
+                lit::f32(&b1, &[h as i64]).unwrap(),
+                lit::f32(&w2, &[h as i64, d as i64]).unwrap(),
+                lit::f32(&b2, &[d as i64]).unwrap(),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 8);
+        let loss = lit::scalar_f32(&out[0]).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        first.get_or_insert(loss);
+        last = loss;
+        // SGD on every input (fixed batch: loss must fall)
+        let lr = 0.1f32;
+        let apply = |p: &mut Vec<f32>, g: &xla::Literal| {
+            let gv = lit::to_f32(g).unwrap();
+            assert_eq!(gv.len(), p.len());
+            for (a, b) in p.iter_mut().zip(gv) {
+                *a -= lr * b;
+            }
+        };
+        apply(&mut center, &out[1]);
+        apply(&mut context, &out[2]);
+        apply(&mut neg, &out[3]);
+        apply(&mut w1, &out[4]);
+        apply(&mut b1, &out[5]);
+        apply(&mut w2, &out[6]);
+        apply(&mut b2, &out[7]);
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first * 0.8,
+        "loss should fall on a fixed batch: {first} -> {last}"
+    );
+}

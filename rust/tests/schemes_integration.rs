@@ -1,0 +1,138 @@
+//! Cross-module integration: every scheme against every model workload,
+//! imbalance invariants, theorem orderings, and the Zen pipeline with
+//! hash bitmaps end-to-end.
+
+use zen::cluster::{LinkKind, Network};
+use zen::schemes::{self, verify_outputs, SyncScheme};
+use zen::tensor::metrics;
+use zen::workload::{profiles, GradientGen};
+
+fn workload(model: &str, n: usize, iter: u64) -> Vec<zen::tensor::CooTensor> {
+    GradientGen::new(profiles::by_name(model).unwrap().scaled(512), 0xabc).iteration_all(iter, n)
+}
+
+#[test]
+fn every_scheme_correct_on_every_model() {
+    for model in ["LSTM", "DeepFM", "NMT", "BERT"] {
+        let inputs = workload(model, 6, 0);
+        let net = Network::new(6, LinkKind::Tcp25);
+        let nnz = inputs[0].nnz();
+        for scheme in schemes::all_schemes(6, 3, nnz) {
+            let r = scheme.sync(&inputs, &net);
+            verify_outputs(&r, &inputs);
+        }
+    }
+}
+
+#[test]
+fn every_scheme_correct_across_iterations() {
+    // distributions drift across iterations; schemes must stay exact
+    for iter in 0..3u64 {
+        let inputs = workload("NMT", 4, iter);
+        let net = Network::new(4, LinkKind::Rdma100);
+        for scheme in schemes::all_schemes(4, iter, inputs[0].nnz()) {
+            let r = scheme.sync(&inputs, &net);
+            verify_outputs(&r, &inputs);
+        }
+    }
+}
+
+#[test]
+fn zen_beats_baselines_on_comm_time() {
+    // The headline claim, at simulation scale: Zen's virtual comm time
+    // beats the sparse baselines on embedding workloads at n = 16.
+    let inputs = workload("LSTM", 16, 0);
+    let net = Network::new(16, LinkKind::Tcp25);
+    let nnz = inputs[0].nnz();
+    let time = |name: &str| {
+        let s = schemes::by_name(name, 16, 5, nnz).unwrap();
+        s.sync(&inputs, &net).report.comm_time()
+    };
+    let zen_t = time("zen");
+    for other in ["sparcml", "omnireduce", "sparseps", "agsparse"] {
+        let t = time(other);
+        assert!(zen_t < t, "zen ({zen_t:.6}s) should beat {other} ({t:.6}s)");
+    }
+}
+
+#[test]
+fn zen_imbalance_bounded_by_theorem2() {
+    // Theorem 2 band: 1 + Θ(√(n log n / nnz)); allow 4× the Θ-constant.
+    let inputs = workload("DeepFM", 8, 0);
+    let net = Network::new(8, LinkKind::Tcp25);
+    let nnz = inputs[0].nnz();
+    let zen = schemes::by_name("zen", 8, 7, nnz).unwrap();
+    let r = zen.sync(&inputs, &net);
+    let push = r.report.stages[0].recv_imbalance();
+    let bound = 1.0 + 4.0 * ((8.0 * (8f64).ln()) / nnz as f64).sqrt();
+    assert!(push <= bound, "push imbalance {push} > theorem band {bound}");
+}
+
+#[test]
+fn sparse_ps_imbalance_tracks_skewness() {
+    // Definition 6: Sparse PS's push imbalance mirrors the skewness ratio.
+    let inputs = workload("LSTM", 8, 0);
+    let net = Network::new(8, LinkKind::Tcp25);
+    let ps = schemes::by_name("sparseps", 8, 0, 0).unwrap();
+    let r = ps.sync(&inputs, &net);
+    let push_imb = r.report.stages[0].recv_imbalance();
+    let skew: f64 = inputs
+        .iter()
+        .map(|t| metrics::skewness_ratio(t, 8))
+        .sum::<f64>()
+        / inputs.len() as f64;
+    assert!(push_imb > 1.5, "push {push_imb}");
+    assert!(skew > 1.5, "skew {skew}");
+    let ratio = push_imb / skew;
+    assert!((0.4..2.5).contains(&ratio), "push {push_imb} vs skew {skew}");
+}
+
+#[test]
+fn dense_traffic_constant_zen_traffic_scales_with_density() {
+    let sparse_in = workload("BERT", 4, 0);
+    let net = Network::new(4, LinkKind::Tcp25);
+    let dense = schemes::by_name("dense", 4, 0, 0).unwrap();
+    let d1 = dense.sync(&sparse_in, &net).report.total_bytes();
+    // denser inputs → dense unchanged, zen grows
+    let other = workload("BERT", 4, 1);
+    let denser_in: Vec<zen::tensor::CooTensor> = sparse_in
+        .iter()
+        .zip(other.iter())
+        .map(|(a, b)| a.merge(b))
+        .collect();
+    let d2 = dense.sync(&denser_in, &net).report.total_bytes();
+    assert_eq!(d1, d2);
+    let zen = schemes::by_name("zen", 4, 3, sparse_in[0].nnz()).unwrap();
+    let z1 = zen.sync(&sparse_in, &net).report.total_bytes();
+    let z2 = zen.sync(&denser_in, &net).report.total_bytes();
+    assert!(z2 as f64 > z1 as f64 * 1.4, "zen {z1} -> {z2}");
+}
+
+#[test]
+fn strawman_loss_decreases_with_memory() {
+    let inputs = workload("DeepFM", 4, 0);
+    let net = Network::new(4, LinkKind::Tcp25);
+    let nnz = inputs[0].nnz();
+    let mut last_loss = f64::INFINITY;
+    for mult in [1.0, 4.0, 16.0] {
+        let s = zen::schemes::StrawmanScheme::new(9, 4, nnz, mult);
+        let _ = s.sync(&inputs, &net);
+        let loss = s.last_loss_rate();
+        assert!(
+            loss <= last_loss + 1e-9,
+            "loss should fall with memory: {last_loss} -> {loss} at {mult}"
+        );
+        last_loss = loss;
+    }
+    assert!(last_loss < 0.05, "16× memory should be near-lossless");
+}
+
+#[test]
+fn single_machine_all_schemes_trivial() {
+    let inputs = workload("NMT", 1, 0);
+    let net = Network::new(1, LinkKind::Tcp25);
+    for scheme in schemes::all_schemes(1, 0, inputs[0].nnz()) {
+        let r = scheme.sync(&inputs, &net);
+        verify_outputs(&r, &inputs);
+    }
+}

@@ -1,0 +1,113 @@
+//! End-to-end training integration (needs `make artifacts`): the real
+//! AOT-compiled train step under different synchronization schemes.
+//!
+//! Key invariant: since Zen is *lossless*, training under Zen must be
+//! numerically indistinguishable from AllReduce (same loss trajectory),
+//! while the lossy strawman diverges — the Fig 14 claim as a test.
+
+use zen::cluster::LinkKind;
+use zen::coordinator::lm::{LmConfig, LmTrainer};
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_dir().join("MANIFEST.txt").exists();
+    if !ok {
+        eprintln!("skipping: run `make artifacts` first");
+    }
+    ok
+}
+
+fn run_losses(scheme: &str, steps: usize) -> Vec<f32> {
+    let mut cfg = LmConfig::tiny();
+    cfg.seed = 0x7e57;
+    let mut t = LmTrainer::new(cfg, 4, scheme, LinkKind::Tcp25, &artifacts_dir()).unwrap();
+    t.run(steps, 0, false).unwrap().losses
+}
+
+#[test]
+fn zen_matches_allreduce_loss_trajectory() {
+    if !have_artifacts() {
+        return;
+    }
+    let zen = run_losses("zen", 12);
+    let dense = run_losses("allreduce", 12);
+    for (i, (a, b)) in zen.iter().zip(dense.iter()).enumerate() {
+        let tol = 1e-3_f32.max(b.abs() * 1e-3);
+        assert!(
+            (a - b).abs() < tol,
+            "step {i}: zen {a} vs allreduce {b} — lossless schemes must agree"
+        );
+    }
+}
+
+#[test]
+fn sparcml_and_omnireduce_also_match() {
+    if !have_artifacts() {
+        return;
+    }
+    let dense = run_losses("allreduce", 6);
+    for scheme in ["sparcml", "omnireduce", "sparseps", "agsparse"] {
+        let other = run_losses(scheme, 6);
+        for (i, (a, b)) in other.iter().zip(dense.iter()).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-3_f32.max(b.abs() * 1e-3),
+                "{scheme} step {i}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn lossy_strawman_diverges_from_allreduce() {
+    if !have_artifacts() {
+        return;
+    }
+    let dense = run_losses("allreduce", 12);
+    let lossy = run_losses("strawman:1.2", 12);
+    // the trajectories must measurably differ (gradients were dropped)
+    let diverged = dense
+        .iter()
+        .zip(lossy.iter())
+        .any(|(a, b)| (a - b).abs() > 1e-3_f32.max(a.abs() * 1e-3));
+    assert!(diverged, "strawman with heavy loss should not match exactly");
+}
+
+#[test]
+fn training_reduces_loss_and_improves_accuracy() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = LmConfig::tiny();
+    cfg.seed = 0x900d;
+    let mut t = LmTrainer::new(cfg, 4, "zen", LinkKind::Tcp25, &artifacts_dir()).unwrap();
+    let acc0 = t.eval_accuracy(512);
+    let log = t.run(60, 0, false).unwrap();
+    let acc1 = t.eval_accuracy(512);
+    let first = log.losses.first().copied().unwrap();
+    let last = log.losses.last().copied().unwrap();
+    assert!(last < first, "loss must fall: {first} -> {last}");
+    assert!(acc1 > acc0 + 0.05, "accuracy must rise: {acc0} -> {acc1}");
+}
+
+#[test]
+fn comm_time_zen_below_allreduce_at_scale() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut mk = |scheme: &str| -> f64 {
+        let mut cfg = LmConfig::tiny();
+        cfg.seed = 0x5ca1e;
+        let mut t =
+            LmTrainer::new(cfg, 8, scheme, LinkKind::Tcp25, &artifacts_dir()).unwrap();
+        t.step().unwrap().emb_comm_time
+    };
+    let zen = mk("zen");
+    let dense = mk("allreduce");
+    assert!(
+        zen < dense,
+        "zen emb comm {zen} should be below allreduce {dense}"
+    );
+}
