@@ -1,11 +1,19 @@
 //! Perf probe: break one Zen synchronization of a 100M-model-shaped
 //! gradient into phases and time each — drives the §Perf iteration log.
+//! A second section probes the pipelined multi-tensor engine: bucket
+//! count, wall time of the concurrent bucket syncs, and the virtual
+//! serialized vs overlapped iteration times.
 //!
 //!   cargo run --release --example perf_probe
 
+use zen::cluster::{LinkKind, Network};
+use zen::coordinator::compute_time_per_iter;
+use zen::engine::{EngineConfig, SyncEngine};
 use zen::hashing::{HashBitmapCodec, HierarchicalHasher};
+use zen::schemes;
 use zen::tensor::CooTensor;
 use zen::util::{Pcg64, Stopwatch};
+use zen::workload::{profiles, GradientGen};
 
 fn main() {
     // Shape of one worker's embedding gradient in the paper_100m run:
@@ -80,4 +88,32 @@ fn main() {
     let sw = Stopwatch::start();
     let full = CooTensor::merge_all(&decoded);
     println!("worker merge      {:>8.1} ms  (agg nnz {})", sw.elapsed() * 1e3, full.nnz());
+
+    // --- multi-tensor engine probe: LSTM layers, 8 machines ---
+    println!("\n== engine probe: LSTM (scaled 64), {n} machines, 256KB buckets ==");
+    let profile = profiles::by_name("LSTM").unwrap().scaled(64);
+    let gen = GradientGen::new(profile, 2);
+    let specs = gen.layer_specs(4, 8);
+    let sw = Stopwatch::start();
+    let layers = gen.layer_iteration_all(&specs, 0, n);
+    println!("gen {} layers x{n}  {:>8.1} ms", specs.len(), sw.elapsed() * 1e3);
+    let net = Network::new(n, LinkKind::Tcp25);
+    let engine = SyncEngine::new(EngineConfig::new(
+        256 * 1024,
+        compute_time_per_iter("LSTM"),
+    ));
+    for scheme_name in ["zen", "allreduce"] {
+        let scheme = schemes::by_name(scheme_name, n, 7, gen.expected_nnz()).unwrap();
+        let run = engine.run(&specs, &layers, scheme.as_ref(), &net, |r| r.comm_time());
+        println!(
+            "{:<10} buckets {:>2}  sync wall {:>7.1} ms  virt serialized {:>7.2} ms  \
+             overlapped {:>7.2} ms  ({:.2}x)",
+            scheme.name(),
+            run.buckets.len(),
+            run.wall_time * 1e3,
+            run.serialized_time * 1e3,
+            run.overlapped_time * 1e3,
+            run.speedup()
+        );
+    }
 }

@@ -1,0 +1,69 @@
+//! Bench: the pipelined multi-tensor sync engine — serialized vs
+//! overlapped iteration time for Zen and DenseAllReduce on the LSTM and
+//! BERT profiles at 16 machines, so the speedup of overlap × bucketing ×
+//! scheme choice is directly readable from one run.
+//!
+//!   cargo bench --bench bench_engine
+
+use zen::cluster::{LinkKind, Network};
+use zen::coordinator::compute_time_per_iter;
+use zen::engine::{EngineConfig, SyncEngine};
+use zen::schemes;
+use zen::util::human_bytes;
+use zen::util::timer::bench;
+use zen::workload::{profiles, GradientGen};
+
+fn main() {
+    let machines = 16;
+    let net = Network::new(machines, LinkKind::Tcp25);
+    for model in ["LSTM", "BERT"] {
+        let profile = profiles::by_name(model).unwrap().scaled(256);
+        let gen = GradientGen::new(profile, 0xeb);
+        let specs = gen.layer_specs(4, 8);
+        let layers = gen.layer_iteration_all(&specs, 0, machines);
+        let compute = compute_time_per_iter(model);
+        let engine = SyncEngine::new(EngineConfig::new(256 * 1024, compute));
+        println!(
+            "== {model} @ {machines} machines: {} layers, compute {:.0}ms ==",
+            specs.len(),
+            compute * 1e3
+        );
+        for scheme_name in ["zen", "allreduce"] {
+            let scheme = schemes::by_name(
+                scheme_name,
+                machines,
+                0x5eed,
+                gen.expected_nnz().max(64),
+            )
+            .unwrap();
+            let run = engine.run(&specs, &layers, scheme.as_ref(), &net, |r| r.comm_time());
+            println!(
+                "{model} {:<10} serialized {:>8.2} ms   overlapped {:>8.2} ms   \
+                 speedup {:.2}x   ({} buckets, {} on the wire)",
+                scheme.name(),
+                run.serialized_time * 1e3,
+                run.overlapped_time * 1e3,
+                run.speedup(),
+                run.buckets.len(),
+                human_bytes(run.total_bytes as f64)
+            );
+            assert!(
+                run.overlapped_time < run.serialized_time,
+                "{model}/{scheme_name}: overlap must strictly beat the serialized \
+                 schedule ({} vs {})",
+                run.overlapped_time,
+                run.serialized_time
+            );
+            bench(&format!("engine {model} {scheme_name}"), 1, 5, || {
+                std::hint::black_box(engine.run(
+                    &specs,
+                    &layers,
+                    scheme.as_ref(),
+                    &net,
+                    |r| r.comm_time(),
+                ));
+            });
+        }
+        println!();
+    }
+}

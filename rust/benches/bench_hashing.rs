@@ -42,7 +42,10 @@ fn main() {
         let h = HierarchicalHasher::new(7, 16, 3, r1, (r1 / 10).max(1));
         let out = h.partition(&t);
         bench(
-            &format!("alg1 r1={mult}x (serial={}, overflow={})", out.serial_writes, out.overflow_writes),
+            &format!(
+                "alg1 r1={mult}x (serial={}, overflow={})",
+                out.serial_writes, out.overflow_writes
+            ),
             1,
             5,
             || {

@@ -20,7 +20,7 @@
 
 pub mod report;
 
-pub use report::{CommReport, StageReport};
+pub use report::{CommReport, StageReport, Timeline, TimelineEntry, TimelineJob};
 
 /// Link presets matching the paper's two testbeds.
 #[derive(Clone, Copy, Debug, PartialEq)]

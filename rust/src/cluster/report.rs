@@ -117,6 +117,93 @@ impl CommReport {
     }
 }
 
+/// A communication job waiting to be placed on the shared link:
+/// it becomes `ready` at a virtual time (its gradients exist from that
+/// point on) and occupies the link for `duration` seconds.
+#[derive(Clone, Debug)]
+pub struct TimelineJob {
+    pub label: String,
+    /// Virtual time at which the payload is ready to transmit.
+    pub ready: f64,
+    /// Link occupancy (seconds of virtual communication time).
+    pub duration: f64,
+    /// Bytes this job puts on the network (reporting only).
+    pub bytes: u64,
+}
+
+/// One scheduled interval on the shared inter-machine link.
+#[derive(Clone, Debug)]
+pub struct TimelineEntry {
+    pub label: String,
+    pub ready: f64,
+    pub start: f64,
+    pub finish: f64,
+    pub bytes: u64,
+}
+
+/// Virtual-time schedule of communication jobs overlapping one compute
+/// pass — the accounting behind the engine's serialized-vs-overlapped
+/// iteration times. Jobs share a single full-duplex fabric, so they run
+/// back-to-back in order; job *k* starts at `max(ready_k, finish_{k-1})`.
+#[derive(Clone, Debug, Default)]
+pub struct Timeline {
+    pub entries: Vec<TimelineEntry>,
+    /// Modeled compute (backward-pass) time the jobs overlap with.
+    pub compute_time: f64,
+}
+
+impl Timeline {
+    /// Greedy in-order schedule of `jobs` against a `compute_time`-long
+    /// compute pass.
+    pub fn schedule(compute_time: f64, jobs: &[TimelineJob]) -> Timeline {
+        let mut entries = Vec::with_capacity(jobs.len());
+        let mut cursor = 0.0f64;
+        for job in jobs {
+            let start = job.ready.max(cursor);
+            let finish = start + job.duration;
+            cursor = finish;
+            entries.push(TimelineEntry {
+                label: job.label.clone(),
+                ready: job.ready,
+                start,
+                finish,
+                bytes: job.bytes,
+            });
+        }
+        Timeline {
+            entries,
+            compute_time,
+        }
+    }
+
+    /// Total communication time (sum of link occupancy).
+    pub fn comm_time(&self) -> f64 {
+        self.entries.iter().map(|e| e.finish - e.start).sum()
+    }
+
+    /// Iteration time without overlap: compute, then every job in turn.
+    pub fn serialized_time(&self) -> f64 {
+        self.compute_time + self.comm_time()
+    }
+
+    /// Iteration time with overlap: the pipeline's makespan.
+    pub fn overlapped_time(&self) -> f64 {
+        let last = self.entries.last().map(|e| e.finish).unwrap_or(0.0);
+        last.max(self.compute_time)
+    }
+
+    /// Communication time hidden behind compute, clamped at 0 (a job
+    /// whose `ready` lies beyond `compute_time` can push the makespan
+    /// past the serialized schedule).
+    pub fn hidden_time(&self) -> f64 {
+        (self.serialized_time() - self.overlapped_time()).max(0.0)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.entries.iter().map(|e| e.bytes).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,5 +244,50 @@ mod tests {
         assert_eq!(r.total_bytes(), 0);
         assert_eq!(r.comm_time(), 0.0);
         assert_eq!(r.recv_imbalance(), 1.0);
+    }
+
+    fn job(label: &str, ready: f64, duration: f64) -> TimelineJob {
+        TimelineJob {
+            label: label.into(),
+            ready,
+            duration,
+            bytes: 100,
+        }
+    }
+
+    #[test]
+    fn timeline_overlap_hides_early_jobs() {
+        // compute = 1.0; job a ready at 0.5 (dur 0.2), b ready at 1.0
+        // (dur 0.3): a hides fully, finish = 1.3 vs serialized 1.5.
+        let t = Timeline::schedule(1.0, &[job("a", 0.5, 0.2), job("b", 1.0, 0.3)]);
+        assert!((t.serialized_time() - 1.5).abs() < 1e-12);
+        assert!((t.overlapped_time() - 1.3).abs() < 1e-12);
+        assert!((t.hidden_time() - 0.2).abs() < 1e-12);
+        assert_eq!(t.total_bytes(), 200);
+    }
+
+    #[test]
+    fn timeline_link_is_sequential() {
+        // Two jobs ready at once: the second waits for the link.
+        let t = Timeline::schedule(0.0, &[job("a", 0.0, 0.4), job("b", 0.0, 0.4)]);
+        assert!((t.entries[1].start - 0.4).abs() < 1e-12);
+        assert!((t.overlapped_time() - 0.8).abs() < 1e-12);
+        // nothing to hide without compute
+        assert!(t.hidden_time().abs() < 1e-12);
+    }
+
+    #[test]
+    fn timeline_no_jobs_is_pure_compute() {
+        let t = Timeline::schedule(0.7, &[]);
+        assert!((t.overlapped_time() - 0.7).abs() < 1e-12);
+        assert!((t.serialized_time() - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timeline_overlapped_never_exceeds_serialized() {
+        let jobs = [job("a", 0.2, 0.5), job("b", 0.6, 0.1), job("c", 1.0, 0.4)];
+        let t = Timeline::schedule(1.0, &jobs);
+        assert!(t.overlapped_time() <= t.serialized_time() + 1e-12);
+        assert!(t.overlapped_time() >= t.compute_time);
     }
 }

@@ -81,12 +81,19 @@ impl Document {
 }
 
 /// Parse error with line context.
-#[derive(Debug, thiserror::Error, PartialEq)]
-#[error("config parse error at line {line}: {msg}")]
+#[derive(Debug, PartialEq)]
 pub struct ParseError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 fn err(line: usize, msg: impl Into<String>) -> ParseError {
     ParseError {

@@ -32,6 +32,30 @@ pub fn compute_time_per_iter(profile_name: &str) -> f64 {
     }
 }
 
+/// Multi-tensor pipeline options: when set, the simulation synchronizes
+/// the model as per-layer gradients through [`crate::engine::SyncEngine`]
+/// (bucketing + compute/communication overlap) instead of one blocking
+/// `sync()` of the flat tensor.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// Bucket close threshold in bytes **at the scaled tensor size**.
+    pub bucket_bytes: usize,
+    /// Dense (MLP) layers the head is split into.
+    pub dense_layers: usize,
+    /// Contiguous row shards the embedding is split into.
+    pub emb_shards: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            bucket_bytes: 256 * 1024,
+            dense_layers: 4,
+            emb_shards: 8,
+        }
+    }
+}
+
 /// Configuration for a simulated data-parallel training run.
 #[derive(Clone, Debug)]
 pub struct SimConfig {
@@ -47,6 +71,9 @@ pub struct SimConfig {
     pub scheme: String,
     pub iterations: usize,
     pub seed: u64,
+    /// `Some` → pipelined multi-tensor engine; `None` → the classic
+    /// one-blocking-sync path.
+    pub pipeline: Option<PipelineConfig>,
 }
 
 impl SimConfig {
@@ -60,6 +87,7 @@ impl SimConfig {
             scheme: scheme.to_string(),
             iterations: 4,
             seed: 0xbeef,
+            pipeline: None,
         }
     }
 }
@@ -68,9 +96,13 @@ impl SimConfig {
 #[derive(Clone, Debug)]
 pub struct SimResult {
     pub scheme: String,
-    /// Full-size per-iteration embedding sync time (virtual seconds).
+    /// Full-size per-iteration gradient sync time (virtual seconds).
+    /// Flat mode: the embedding tensor's sync. Engine mode: total bucket
+    /// communication, which also covers any dense layers in the plan.
     pub emb_sync_times: Vec<f64>,
-    /// Full-size per-iteration dense (MLP) sync time.
+    /// Full-size per-iteration dense (MLP) ring-allreduce time. Zero in
+    /// engine mode when the plan's dense layers fold the MLP into
+    /// buckets (`emb_sync_times` then carries that cost).
     pub mlp_sync_time: f64,
     /// Intra-machine (NVLink) phase time.
     pub intra_time: f64,
@@ -85,6 +117,12 @@ pub struct SimResult {
     pub throughput: f64,
     /// Mean embedding sync time.
     pub emb_sync_mean: f64,
+    /// Engine mode only: mean full-size iteration time when every bucket
+    /// sync runs after compute (compute + intra + all bucket comm).
+    pub engine_serialized: Option<f64>,
+    /// Engine mode only: mean full-size iteration time with
+    /// compute/communication overlap (the pipeline makespan + intra).
+    pub engine_overlapped: Option<f64>,
 }
 
 impl SimResult {
@@ -104,6 +142,12 @@ pub struct SimDriver {
 
 impl SimDriver {
     pub fn new(cfg: SimConfig) -> anyhow::Result<Self> {
+        if let Some(p) = &cfg.pipeline {
+            anyhow::ensure!(
+                p.emb_shards >= 1,
+                "pipeline needs at least one embedding shard (--emb-shards)"
+            );
+        }
         let scaled = cfg.profile.scaled(cfg.scale);
         let gen = GradientGen::new(scaled, cfg.seed);
         let scheme = schemes::by_name(
@@ -125,6 +169,19 @@ impl SimDriver {
     /// Bytes scale factor from the simulated tensor to the full model.
     fn scale_factor(&self) -> f64 {
         self.cfg.profile.emb_params() as f64 / self.gen.profile.emb_params() as f64
+    }
+
+    /// Ring-allreduce time for the full-size dense MLP gradients —
+    /// shared by the flat path and the no-dense-layers pipelined path so
+    /// the two stay comparable.
+    fn mlp_allreduce_time(&self) -> f64 {
+        let n = self.cfg.machines;
+        if n <= 1 {
+            return 0.0;
+        }
+        let mlp_bytes = (self.cfg.profile.mlp_params * 4) as f64;
+        let nf = n as f64;
+        2.0 * (nf - 1.0) / nf * mlp_bytes * 8.0 / self.cfg.link.bandwidth_bps()
     }
 
     /// Rescale a stage-structured report to full tensor size:
@@ -154,6 +211,15 @@ impl SimDriver {
 
     /// Run the simulation.
     pub fn run(&self) -> SimResult {
+        match self.cfg.pipeline.clone() {
+            Some(p) => self.run_pipelined(&p),
+            None => self.run_flat(),
+        }
+    }
+
+    /// Classic path: one blocking `sync()` of the flat embedding tensor
+    /// per iteration.
+    fn run_flat(&self) -> SimResult {
         let n = self.cfg.machines;
         let g = self.cfg.gpus_per_machine;
         let net = Network::new(n, self.cfg.link);
@@ -185,13 +251,7 @@ impl SimDriver {
         }
 
         // Dense MLP gradients always go through ring allreduce.
-        let mlp_bytes = (self.cfg.profile.mlp_params * 4) as f64;
-        let nf = n as f64;
-        let mlp_sync_time = if n > 1 {
-            2.0 * (nf - 1.0) / nf * mlp_bytes * 8.0 / self.cfg.link.bandwidth_bps()
-        } else {
-            0.0
-        };
+        let mlp_sync_time = self.mlp_allreduce_time();
         let intra_time = self
             .topo
             .intra_machine_time((self.cfg.profile.emb_params() * 4) as u64);
@@ -212,6 +272,96 @@ impl SimDriver {
             pull_imbalance: pull_imb,
             throughput,
             emb_sync_mean,
+            engine_serialized: None,
+            engine_overlapped: None,
+        }
+    }
+
+    /// Engine path: per-layer gradients through the pipelined
+    /// multi-tensor engine (bucketing + compute/communication overlap).
+    /// The engine covers the dense head layers too, so the separate
+    /// analytic MLP allreduce charge is zero here.
+    fn run_pipelined(&self, p: &PipelineConfig) -> SimResult {
+        let n = self.cfg.machines;
+        let g = self.cfg.gpus_per_machine;
+        let net = Network::new(n, self.cfg.link);
+        let specs = self.gen.layer_specs(p.dense_layers, p.emb_shards);
+        let compute_time = compute_time_per_iter(self.cfg.profile.name);
+        let engine = crate::engine::SyncEngine::new(crate::engine::EngineConfig::new(
+            p.bucket_bytes,
+            compute_time,
+        ));
+
+        let mut emb_sync_times = Vec::with_capacity(self.cfg.iterations);
+        let mut serialized = Vec::with_capacity(self.cfg.iterations);
+        let mut overlapped = Vec::with_capacity(self.cfg.iterations);
+        for it in 0..self.cfg.iterations as u64 {
+            // Machine-level layer tensors: aggregate each layer over the
+            // machine's g GPUs (intra-machine NVLink phase, densification
+            // included) — the per-layer analog of the flat path.
+            let machine_layers: Vec<Vec<crate::tensor::CooTensor>> = (0..n)
+                .map(|m| {
+                    // Transpose [gpu][layer] -> [layer][gpu] by moving the
+                    // tensors (they dominate the sim's data volume).
+                    let mut by_layer: Vec<Vec<crate::tensor::CooTensor>> =
+                        (0..specs.len()).map(|_| Vec::with_capacity(g)).collect();
+                    for gi in 0..g {
+                        let gpu_layers = self.gen.layer_iteration(&specs, it, m * g + gi);
+                        for (l, t) in gpu_layers.into_iter().enumerate() {
+                            by_layer[l].push(t);
+                        }
+                    }
+                    by_layer
+                        .into_iter()
+                        .map(|shards| crate::tensor::CooTensor::merge_all(&shards))
+                        .collect()
+                })
+                .collect();
+            let run = engine.run(&specs, &machine_layers, self.scheme.as_ref(), &net, |r| {
+                self.full_size_time(r)
+            });
+            if it == 0 && !self.cfg.scheme.starts_with("strawman") {
+                crate::engine::verify_layer_outputs(&run, &machine_layers);
+            }
+            let comm_total: f64 = run.buckets.iter().map(|b| b.comm_time).sum();
+            emb_sync_times.push(comm_total);
+            serialized.push(run.serialized_time);
+            overlapped.push(run.overlapped_time);
+        }
+
+        // With dense layers in the plan the engine synchronizes the MLP
+        // gradients too (no separate analytic charge); with none, the
+        // MLP still goes through the flat path's ring allreduce.
+        let mlp_sync_time = if p.dense_layers == 0 {
+            self.mlp_allreduce_time()
+        } else {
+            0.0
+        };
+        // Same intra-machine charge as the flat path (embedding bytes),
+        // so flat-vs-pipelined iteration times differ only in what the
+        // engine actually changes: the inter-machine schedule.
+        let intra_time = self
+            .topo
+            .intra_machine_time((self.cfg.profile.emb_params() * 4) as u64);
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+        let emb_sync_mean = mean(&emb_sync_times);
+        let engine_serialized = intra_time + mlp_sync_time + mean(&serialized);
+        let engine_overlapped = intra_time + mlp_sync_time + mean(&overlapped);
+        let throughput =
+            (n * g * self.cfg.profile.batch_size) as f64 / engine_overlapped;
+
+        SimResult {
+            scheme: self.scheme.name().to_string(),
+            emb_sync_times,
+            mlp_sync_time,
+            intra_time,
+            compute_time,
+            push_imbalance: Vec::new(),
+            pull_imbalance: Vec::new(),
+            throughput,
+            emb_sync_mean,
+            engine_serialized: Some(engine_serialized),
+            engine_overlapped: Some(engine_overlapped),
         }
     }
 }
@@ -269,5 +419,70 @@ mod tests {
         let t4 = SimDriver::new(cfg("zen", 4)).unwrap().run().throughput;
         let t8 = SimDriver::new(cfg("zen", 8)).unwrap().run().throughput;
         assert!(t8 > t4, "t8 {t8} vs t4 {t4}");
+    }
+
+    #[test]
+    fn flat_path_reports_no_engine_times() {
+        let r = SimDriver::new(cfg("zen", 4)).unwrap().run();
+        assert!(r.engine_serialized.is_none());
+        assert!(r.engine_overlapped.is_none());
+    }
+
+    fn pipelined_cfg(scheme: &str, machines: usize) -> SimConfig {
+        let mut c = cfg(scheme, machines);
+        c.iterations = 1;
+        c.pipeline = Some(PipelineConfig {
+            bucket_bytes: 64 * 1024,
+            dense_layers: 3,
+            emb_shards: 4,
+        });
+        c
+    }
+
+    #[test]
+    fn pipelined_overlap_beats_serialized() {
+        for scheme in ["zen", "allreduce"] {
+            let r = SimDriver::new(pipelined_cfg(scheme, 4)).unwrap().run();
+            let ser = r.engine_serialized.expect("engine mode");
+            let over = r.engine_overlapped.expect("engine mode");
+            assert!(
+                over < ser,
+                "{scheme}: overlapped {over} should beat serialized {ser}"
+            );
+            assert!(r.mlp_sync_time == 0.0, "engine folds the MLP in");
+            assert!(r.throughput > 0.0);
+        }
+    }
+
+    #[test]
+    fn pipelined_without_dense_layers_still_charges_mlp() {
+        let mut c = pipelined_cfg("zen", 4);
+        c.pipeline.as_mut().unwrap().dense_layers = 0;
+        let r = SimDriver::new(c).unwrap().run();
+        assert!(
+            r.mlp_sync_time > 0.0,
+            "no dense layers in the plan -> MLP must still be charged"
+        );
+    }
+
+    #[test]
+    fn pipelined_zero_shards_rejected() {
+        let mut c = pipelined_cfg("zen", 4);
+        c.pipeline.as_mut().unwrap().emb_shards = 0;
+        assert!(SimDriver::new(c).is_err());
+    }
+
+    #[test]
+    fn pipelined_zen_beats_pipelined_allreduce() {
+        // Scheme choice still dominates: Zen's buckets ship sparse
+        // payloads, so its pipeline drains faster than dense allreduce.
+        let zen = SimDriver::new(pipelined_cfg("zen", 8)).unwrap().run();
+        let dense = SimDriver::new(pipelined_cfg("allreduce", 8)).unwrap().run();
+        assert!(
+            zen.engine_overlapped.unwrap() < dense.engine_overlapped.unwrap(),
+            "zen {:?} vs allreduce {:?}",
+            zen.engine_overlapped,
+            dense.engine_overlapped
+        );
     }
 }

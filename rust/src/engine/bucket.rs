@@ -1,0 +1,204 @@
+//! Gradient bucketing (DDP-style): pack consecutive layers into
+//! size-capped buckets whose gradients travel as one concatenated
+//! sparse tensor.
+//!
+//! Buckets follow backward-completion order, so a bucket is ready to
+//! transmit as soon as its *last* member layer's gradient exists —
+//! exactly how PyTorch DDP overlaps allreduce with backward. Small
+//! layers amortize per-sync latency by sharing a bucket; a threshold
+//! smaller than a single layer degenerates to per-layer synchronization
+//! (every bucket still holds at least one layer).
+
+use crate::tensor::CooTensor;
+use crate::workload::LayerSpec;
+
+/// A contiguous run of layers synchronized as one tensor.
+#[derive(Clone, Debug)]
+pub struct Bucket {
+    /// Indices into the layer-spec list.
+    pub layers: std::ops::Range<usize>,
+    /// Offset of each member layer inside the concatenated tensor,
+    /// parallel to `layers`.
+    pub offsets: Vec<usize>,
+    /// Dense length of the concatenated bucket tensor.
+    pub dense_len: usize,
+    /// Estimated wire payload of the bucket (sum of member estimates).
+    pub est_bytes: usize,
+    /// Fraction of backward compute done when the whole bucket is ready
+    /// (the max over members = the last member, specs being ordered).
+    pub ready_frac: f64,
+}
+
+impl Bucket {
+    pub fn label(&self, specs: &[LayerSpec]) -> String {
+        let first = &specs[self.layers.start].name;
+        if self.layers.len() == 1 {
+            first.clone()
+        } else {
+            format!("{first}..{}", specs[self.layers.end - 1].name)
+        }
+    }
+}
+
+/// Greedy size-capped bucketing over layers in backward-completion
+/// order. A bucket closes once its estimated payload reaches
+/// `bucket_bytes`; `est_bytes[l]` is the caller's per-layer wire
+/// estimate (typically the max COO payload across machines).
+pub fn plan_buckets(specs: &[LayerSpec], est_bytes: &[usize], bucket_bytes: usize) -> Vec<Bucket> {
+    assert_eq!(specs.len(), est_bytes.len());
+    let mut buckets = Vec::new();
+    let mut start = 0usize;
+    let mut offsets = Vec::new();
+    let mut dense_len = 0usize;
+    let mut est = 0usize;
+    for (l, spec) in specs.iter().enumerate() {
+        offsets.push(dense_len);
+        dense_len += spec.params;
+        est += est_bytes[l];
+        if est >= bucket_bytes || l + 1 == specs.len() {
+            buckets.push(Bucket {
+                layers: start..l + 1,
+                offsets: std::mem::take(&mut offsets),
+                dense_len,
+                est_bytes: est,
+                ready_frac: spec.ready_frac,
+            });
+            start = l + 1;
+            dense_len = 0;
+            est = 0;
+        }
+    }
+    buckets
+}
+
+/// Concatenate one machine's member-layer tensors into the bucket
+/// tensor (indices shifted by the member offsets).
+pub fn concat_layers(bucket: &Bucket, layer_tensors: &[CooTensor]) -> CooTensor {
+    let mut indices = Vec::new();
+    let mut values = Vec::new();
+    for (slot, l) in bucket.layers.clone().enumerate() {
+        let off = bucket.offsets[slot] as u32;
+        let t = &layer_tensors[l];
+        indices.extend(t.indices.iter().map(|&i| i + off));
+        values.extend_from_slice(&t.values);
+    }
+    CooTensor::from_sorted(bucket.dense_len, indices, values)
+}
+
+/// Split an aggregated bucket tensor back into per-layer tensors
+/// (inverse of [`concat_layers`]). `specs` supplies per-layer lengths.
+pub fn split_layers(bucket: &Bucket, specs: &[LayerSpec], t: &CooTensor) -> Vec<CooTensor> {
+    assert_eq!(t.dense_len, bucket.dense_len);
+    bucket
+        .layers
+        .clone()
+        .enumerate()
+        .map(|(slot, l)| {
+            let lo = bucket.offsets[slot] as u32;
+            let hi = lo + specs[l].params as u32;
+            t.slice_range(lo, hi)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::LayerKind;
+
+    fn spec(name: &str, params: usize, frac: f64) -> LayerSpec {
+        LayerSpec {
+            name: name.into(),
+            params,
+            kind: LayerKind::Dense,
+            ready_frac: frac,
+        }
+    }
+
+    fn specs3() -> Vec<LayerSpec> {
+        vec![
+            spec("a", 10, 0.25),
+            spec("b", 20, 0.50),
+            spec("c", 5, 1.00),
+        ]
+    }
+
+    #[test]
+    fn huge_threshold_gives_single_bucket() {
+        let s = specs3();
+        let b = plan_buckets(&s, &[80, 160, 40], usize::MAX);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].layers, 0..3);
+        assert_eq!(b[0].dense_len, 35);
+        assert_eq!(b[0].offsets, vec![0, 10, 30]);
+        assert!((b[0].ready_frac - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tiny_threshold_gives_per_layer_buckets() {
+        let s = specs3();
+        let b = plan_buckets(&s, &[80, 160, 40], 1);
+        assert_eq!(b.len(), 3);
+        for (i, bk) in b.iter().enumerate() {
+            assert_eq!(bk.layers, i..i + 1);
+            assert_eq!(bk.offsets, vec![0]);
+            assert_eq!(bk.dense_len, s[i].params);
+        }
+    }
+
+    #[test]
+    fn threshold_packs_greedily() {
+        let s = specs3();
+        // 80 + 160 crosses 200 → close; c alone in the tail bucket.
+        let b = plan_buckets(&s, &[80, 160, 40], 200);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0].layers, 0..2);
+        assert_eq!(b[0].est_bytes, 240);
+        assert_eq!(b[1].layers, 2..3);
+        assert!((b[0].ready_frac - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn buckets_partition_all_layers() {
+        let s: Vec<LayerSpec> = (0..17)
+            .map(|i| spec(&format!("l{i}"), i + 1, (i + 1) as f64 / 17.0))
+            .collect();
+        let est: Vec<usize> = s.iter().map(|x| x.params * 8).collect();
+        let b = plan_buckets(&s, &est, 50);
+        let mut covered = Vec::new();
+        for bk in &b {
+            covered.extend(bk.layers.clone());
+        }
+        assert_eq!(covered, (0..17).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn concat_split_roundtrip() {
+        let s = specs3();
+        let b = plan_buckets(&s, &[1, 1, 1], usize::MAX);
+        let layers = vec![
+            CooTensor::from_sorted(10, vec![2, 9], vec![1.0, 2.0]),
+            CooTensor::from_sorted(20, vec![0, 19], vec![3.0, 4.0]),
+            CooTensor::empty(5),
+        ];
+        let cat = concat_layers(&b[0], &layers);
+        assert_eq!(cat.indices, vec![2, 9, 10, 29]);
+        let back = split_layers(&b[0], &s, &cat);
+        assert_eq!(back, layers);
+    }
+
+    #[test]
+    fn zero_param_layer_is_harmless() {
+        let s = vec![spec("empty", 0, 0.5), spec("tail", 4, 1.0)];
+        let b = plan_buckets(&s, &[0, 32], usize::MAX);
+        assert_eq!(b.len(), 1);
+        let layers = vec![
+            CooTensor::empty(0),
+            CooTensor::from_sorted(4, vec![1], vec![5.0]),
+        ];
+        let cat = concat_layers(&b[0], &layers);
+        assert_eq!(cat.indices, vec![1]);
+        let back = split_layers(&b[0], &s, &cat);
+        assert_eq!(back, layers);
+    }
+}

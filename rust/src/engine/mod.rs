@@ -1,0 +1,346 @@
+//! Multi-tensor synchronization engine: bucketing + compute/communication
+//! overlap on top of any [`SyncScheme`].
+//!
+//! The schemes in [`crate::schemes`] synchronize *one* tensor with one
+//! blocking `sync()` call. Real models have many gradient tensors that
+//! become available one by one as the backward pass walks output → input
+//! (the DAG model of synchronous SGD), and production data-parallel
+//! stacks (PyTorch DDP, Ok-Topk's pipelined sparse allreduce) exploit
+//! that: small tensors are packed into size-capped **buckets**, and a
+//! bucket's communication starts as soon as its backward slice finishes
+//! — overlapping communication with the remainder of the backward pass.
+//!
+//! [`SyncEngine`] reproduces that pipeline in virtual time:
+//!
+//! 1. [`bucket::plan_buckets`] packs the per-layer gradients
+//!    ([`crate::workload::LayerSpec`]) into buckets up to a configurable
+//!    byte threshold;
+//! 2. every bucket is synchronized with the *same* scheme `sync()` the
+//!    single-tensor path uses (bucket-level reuse — Zen, AllReduce,
+//!    SparCML, … all work unchanged), concurrently on a
+//!    [`crate::util::ThreadPool`];
+//! 3. a [`Timeline`] charges virtual time twice: **serialized** (compute,
+//!    then every bucket in turn — the one-blocking-`sync()` baseline)
+//!    and **overlapped** (bucket *k*'s communication may start at
+//!    `compute_time × ready_frac_k`, buckets share the link in order).
+//!
+//! The spread between the two is the pipelining win the engine exists to
+//! measure; `benches/bench_engine.rs` sweeps it over schemes × models.
+
+pub mod bucket;
+
+pub use bucket::{plan_buckets, Bucket};
+
+use crate::cluster::{CommReport, Network, Timeline, TimelineJob};
+use crate::schemes::SyncScheme;
+use crate::tensor::{CooTensor, WireFormat};
+use crate::util::ThreadPool;
+use crate::workload::LayerSpec;
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Bucket close threshold in estimated wire bytes (DDP's
+    /// `bucket_cap_mb` analog). `usize::MAX` → one bucket for the whole
+    /// model; `0`/smaller-than-a-layer → one bucket per layer.
+    pub bucket_bytes: usize,
+    /// Modeled backward-pass time for one iteration (virtual seconds);
+    /// layer readiness is `compute_time × ready_frac`.
+    pub compute_time: f64,
+}
+
+impl EngineConfig {
+    pub fn new(bucket_bytes: usize, compute_time: f64) -> Self {
+        assert!(compute_time >= 0.0);
+        EngineConfig {
+            bucket_bytes,
+            compute_time,
+        }
+    }
+}
+
+/// Per-bucket outcome of one engine run.
+#[derive(Clone, Debug)]
+pub struct BucketOutcome {
+    pub label: String,
+    /// Indices into the layer-spec list.
+    pub layers: std::ops::Range<usize>,
+    /// Bytes this bucket's sync put on the network.
+    pub bytes: u64,
+    /// Virtual communication time charged for this bucket.
+    pub comm_time: f64,
+    /// Full communication report from the scheme.
+    pub report: CommReport,
+}
+
+/// Result of synchronizing a whole model's gradient tensors.
+#[derive(Clone, Debug)]
+pub struct EngineRun {
+    pub buckets: Vec<BucketOutcome>,
+    /// The overlapped schedule (per-bucket ready/start/finish).
+    pub timeline: Timeline,
+    /// Iteration time without overlap: compute + Σ bucket comm.
+    pub serialized_time: f64,
+    /// Iteration time with overlap: the pipeline makespan.
+    pub overlapped_time: f64,
+    /// Total bytes on the network across all buckets.
+    pub total_bytes: u64,
+    /// Aggregated per-layer gradients (identical at every machine).
+    pub layer_outputs: Vec<CooTensor>,
+    /// Wall-clock seconds the engine spent executing bucket syncs.
+    pub wall_time: f64,
+}
+
+impl EngineRun {
+    /// Serialized / overlapped — ≥ 1, the pipelining win.
+    pub fn speedup(&self) -> f64 {
+        if self.overlapped_time == 0.0 {
+            1.0
+        } else {
+            self.serialized_time / self.overlapped_time
+        }
+    }
+}
+
+/// The pipelined multi-tensor synchronization engine.
+pub struct SyncEngine {
+    pub cfg: EngineConfig,
+    pool: ThreadPool,
+}
+
+impl SyncEngine {
+    pub fn new(cfg: EngineConfig) -> Self {
+        // Bucket syncs are themselves internally parallel (Zen's hasher
+        // runs on its own pool), so cap the outer fan-out at a few
+        // concurrent buckets to avoid core oversubscription while still
+        // overlapping bucket work. Override with `with_pool`.
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        SyncEngine {
+            cfg,
+            pool: ThreadPool::with_workers(cores.min(4)),
+        }
+    }
+
+    /// Override the worker pool (tests / perf studies).
+    pub fn with_pool(mut self, pool: ThreadPool) -> Self {
+        self.pool = pool;
+        self
+    }
+
+    /// Synchronize one iteration's per-layer gradients.
+    ///
+    /// `per_worker_layers[w][l]` is machine `w`'s gradient for layer `l`
+    /// (see [`crate::workload::GradientGen::layer_iteration_all`]);
+    /// `time_of` converts a bucket's [`CommReport`] into virtual seconds
+    /// (identity: `|r| r.comm_time()`; the simulator passes its
+    /// full-model rescaling instead).
+    pub fn run<F>(
+        &self,
+        specs: &[LayerSpec],
+        per_worker_layers: &[Vec<CooTensor>],
+        scheme: &dyn SyncScheme,
+        net: &Network,
+        time_of: F,
+    ) -> EngineRun
+    where
+        F: Fn(&CommReport) -> f64 + Sync,
+    {
+        let n = per_worker_layers.len();
+        assert!(n >= 1, "need at least one machine");
+        assert_eq!(n, net.endpoints);
+        for worker in per_worker_layers {
+            assert_eq!(worker.len(), specs.len(), "one tensor per layer");
+        }
+        for spec in specs {
+            assert!(
+                spec.ready_frac > 0.0 && spec.ready_frac <= 1.0,
+                "layer '{}': ready_frac {} outside (0, 1]",
+                spec.name,
+                spec.ready_frac
+            );
+        }
+
+        // Per-layer wire estimate: the largest COO payload any machine
+        // would ship for that layer (drives bucket packing only).
+        let est_bytes: Vec<usize> = (0..specs.len())
+            .map(|l| {
+                per_worker_layers
+                    .iter()
+                    .map(|w| w[l].wire_bytes())
+                    .max()
+                    .unwrap_or(0)
+            })
+            .collect();
+        let buckets = plan_buckets(specs, &est_bytes, self.cfg.bucket_bytes);
+
+        // Synchronize every bucket with the shared scheme, concurrently.
+        let sw = crate::util::Stopwatch::start();
+        let synced: Vec<(Bucket, crate::schemes::SyncResult)> =
+            self.pool.map(buckets, |b| {
+                let inputs: Vec<CooTensor> = per_worker_layers
+                    .iter()
+                    .map(|w| bucket::concat_layers(&b, w))
+                    .collect();
+                let result = scheme.sync(&inputs, net);
+                (b, result)
+            });
+        let wall_time = sw.elapsed();
+
+        // Charge virtual time and build the overlap schedule.
+        let mut outcomes = Vec::with_capacity(synced.len());
+        let mut jobs = Vec::with_capacity(synced.len());
+        let mut layer_outputs: Vec<Option<CooTensor>> = vec![None; specs.len()];
+        let mut total_bytes = 0u64;
+        for (b, result) in synced {
+            let comm_time = time_of(&result.report);
+            let bytes = result.report.total_bytes();
+            total_bytes += bytes;
+            let label = b.label(specs);
+            jobs.push(TimelineJob {
+                label: label.clone(),
+                ready: self.cfg.compute_time * b.ready_frac,
+                duration: comm_time,
+                bytes,
+            });
+            // Every endpoint holds the same aggregate; unbucket machine
+            // 0's copy back into per-layer outputs.
+            for (l, t) in b
+                .layers
+                .clone()
+                .zip(bucket::split_layers(&b, specs, &result.outputs[0]))
+            {
+                layer_outputs[l] = Some(t);
+            }
+            outcomes.push(BucketOutcome {
+                label,
+                layers: b.layers.clone(),
+                bytes,
+                comm_time,
+                report: result.report,
+            });
+        }
+        let timeline = Timeline::schedule(self.cfg.compute_time, &jobs);
+        let serialized_time = timeline.serialized_time();
+        let overlapped_time = timeline.overlapped_time();
+
+        EngineRun {
+            buckets: outcomes,
+            timeline,
+            serialized_time,
+            overlapped_time,
+            total_bytes,
+            layer_outputs: layer_outputs.into_iter().map(|t| t.unwrap()).collect(),
+            wall_time,
+        }
+    }
+}
+
+/// Assert every per-layer engine output equals the dense reference sum
+/// of that layer's inputs (the engine-level analog of
+/// [`crate::schemes::verify_outputs`]).
+pub fn verify_layer_outputs(run: &EngineRun, per_worker_layers: &[Vec<CooTensor>]) {
+    for (l, out) in run.layer_outputs.iter().enumerate() {
+        let inputs: Vec<CooTensor> = per_worker_layers.iter().map(|w| w[l].clone()).collect();
+        let reference = crate::schemes::reference_sum(&inputs);
+        crate::schemes::assert_matches_reference(out, &reference, &format!("layer {l}"));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::LinkKind;
+    use crate::schemes;
+    use crate::workload::{profiles, GradientGen};
+
+    fn small_gen() -> GradientGen {
+        GradientGen::new(profiles::by_name("NMT").unwrap().scaled(1024), 0xe6)
+    }
+
+    fn run_engine(
+        scheme_name: &str,
+        machines: usize,
+        bucket_bytes: usize,
+        compute: f64,
+    ) -> (EngineRun, Vec<Vec<CooTensor>>) {
+        let gen = small_gen();
+        let specs = gen.layer_specs(3, 4);
+        let layers = gen.layer_iteration_all(&specs, 0, machines);
+        let scheme =
+            schemes::by_name(scheme_name, machines, 0x5eed, gen.expected_nnz().max(64)).unwrap();
+        let net = Network::new(machines, LinkKind::Tcp25);
+        let engine = SyncEngine::new(EngineConfig::new(bucket_bytes, compute));
+        let run = engine.run(&specs, &layers, scheme.as_ref(), &net, |r| r.comm_time());
+        (run, layers)
+    }
+
+    #[test]
+    fn engine_aggregates_exactly_per_layer() {
+        for scheme in ["zen", "allreduce", "sparcml", "omnireduce"] {
+            let (run, layers) = run_engine(scheme, 4, 64 * 1024, 0.05);
+            verify_layer_outputs(&run, &layers);
+        }
+    }
+
+    #[test]
+    fn overlapped_strictly_below_serialized() {
+        // ≥ 2 buckets and the first one ready before compute ends →
+        // strict pipelining win for any scheme.
+        for scheme in ["zen", "allreduce"] {
+            let (run, _) = run_engine(scheme, 4, 16 * 1024, 0.05);
+            assert!(run.buckets.len() >= 2, "want multiple buckets");
+            assert!(
+                run.overlapped_time < run.serialized_time,
+                "{scheme}: overlapped {} !< serialized {}",
+                run.overlapped_time,
+                run.serialized_time
+            );
+            assert!(run.speedup() > 1.0);
+        }
+    }
+
+    #[test]
+    fn single_bucket_matches_flat_sync_time() {
+        // One bucket for the whole model: serialized == compute + one
+        // sync of the concatenated tensor.
+        let (run, _) = run_engine("zen", 4, usize::MAX, 0.05);
+        assert_eq!(run.buckets.len(), 1);
+        let total_comm: f64 = run.buckets.iter().map(|b| b.comm_time).sum();
+        assert!((run.serialized_time - (0.05 + total_comm)).abs() < 1e-12);
+        // a lone bucket ready at compute end cannot overlap
+        assert!((run.overlapped_time - run.serialized_time).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_layer_buckets_when_threshold_tiny() {
+        let (run, layers) = run_engine("zen", 4, 1, 0.05);
+        let num_layers = layers[0].len();
+        assert_eq!(run.buckets.len(), num_layers);
+        verify_layer_outputs(&run, &layers);
+    }
+
+    #[test]
+    fn single_machine_is_trivial_but_exact() {
+        let (run, layers) = run_engine("zen", 1, 32 * 1024, 0.05);
+        verify_layer_outputs(&run, &layers);
+        assert_eq!(run.total_bytes, 0, "one machine moves nothing");
+        assert!((run.overlapped_time - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timeline_and_outcomes_agree() {
+        let (run, _) = run_engine("allreduce", 4, 16 * 1024, 0.1);
+        assert_eq!(run.timeline.entries.len(), run.buckets.len());
+        let sum: f64 = run.buckets.iter().map(|b| b.comm_time).sum();
+        assert!((run.timeline.comm_time() - sum).abs() < 1e-9);
+        assert_eq!(run.timeline.total_bytes(), run.total_bytes);
+        // buckets keep backward order: ready times monotone
+        assert!(run
+            .timeline
+            .entries
+            .windows(2)
+            .all(|w| w[0].ready <= w[1].ready));
+    }
+}

@@ -43,7 +43,7 @@ impl<'a> HashBitmapCodec<'a> {
     }
 
     pub fn domain(&self) -> &[u32] {
-        &self.domain
+        self.domain
     }
 
     pub fn domain_len(&self) -> usize {

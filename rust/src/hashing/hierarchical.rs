@@ -21,7 +21,6 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-
 use super::murmur::HashFamily;
 use crate::tensor::CooTensor;
 use crate::util::ThreadPool;

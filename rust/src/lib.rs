@@ -15,17 +15,18 @@
 //! - **L1**: `python/compile/kernels/` — Pallas kernels (hash mixing,
 //!   fused embedding+MLP) validated against pure-jnp oracles.
 //!
-//! See DESIGN.md for the experiment index mapping every paper table and
-//! figure to a module and a regeneration command.
-pub mod util;
-pub mod tensor;
-pub mod figures;
-pub mod hashing;
+//! See DESIGN.md (repository root) for the experiment index mapping every
+//! paper table and figure to a module and a regeneration command.
 pub mod analysis;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod engine;
+pub mod figures;
+pub mod hashing;
 pub mod runtime;
 pub mod schemes;
+pub mod tensor;
+pub mod util;
 pub mod wire;
 pub mod workload;

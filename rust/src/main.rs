@@ -7,13 +7,14 @@
 //!
 //! Examples:
 //!   zen sim --model DeepFM --machines 16 --scheme zen --link tcp25
+//!   zen sim --model LSTM --machines 16 --scheme zen --pipeline --bucket-kb 256
 //!   zen train --shape tiny --workers 4 --scheme zen --steps 50
 //!   zen schemes
 
 use zen::cluster::LinkKind;
 use zen::config::Args;
 use zen::coordinator::lm::{LmConfig, LmTrainer};
-use zen::coordinator::{SimConfig, SimDriver};
+use zen::coordinator::{PipelineConfig, SimConfig, SimDriver};
 use zen::workload::profiles;
 
 fn main() -> anyhow::Result<()> {
@@ -48,13 +49,39 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     cfg.scale = args.get_usize("scale", 64);
     cfg.gpus_per_machine = args.get_usize("gpus", 8);
     cfg.seed = args.get_u64("seed", 0xbeef);
+    // `--pipeline` may arrive as a bare flag or as `--pipeline=<bool>`;
+    // an explicit false wins over the sub-option shorthands.
+    let pipeline_requested = match args.get("pipeline") {
+        Some(v) => !matches!(v.to_ascii_lowercase().as_str(), "false" | "0" | "no" | "off"),
+        None => {
+            args.has_flag("pipeline")
+                || ["bucket-kb", "dense-layers", "emb-shards"]
+                    .iter()
+                    .any(|k| args.get(k).is_some())
+        }
+    };
+    if pipeline_requested {
+        let d = PipelineConfig::default();
+        cfg.pipeline = Some(PipelineConfig {
+            bucket_bytes: args.get_usize("bucket-kb", d.bucket_bytes / 1024) * 1024,
+            dense_layers: args.get_usize("dense-layers", d.dense_layers),
+            emb_shards: args.get_usize("emb-shards", d.emb_shards),
+        });
+    }
     let r = SimDriver::new(cfg.clone())?.run();
     println!(
         "model={} machines={} gpus/machine={} scheme={}",
         cfg.profile.name, cfg.machines, cfg.gpus_per_machine, r.scheme
     );
+    // In engine mode the first column is all-bucket communication (it
+    // includes dense layers folded into buckets), not embedding-only.
+    let sync_label = if cfg.pipeline.is_some() {
+        "bucket-comm"
+    } else {
+        "emb-sync"
+    };
     println!(
-        "  emb-sync {:.2}ms  mlp-sync {:.2}ms  intra {:.2}ms  compute {:.0}ms",
+        "  {sync_label} {:.2}ms  mlp-sync {:.2}ms  intra {:.2}ms  compute {:.0}ms",
         r.emb_sync_mean * 1e3,
         r.mlp_sync_time * 1e3,
         r.intra_time * 1e3,
@@ -65,6 +92,14 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
             "  push-imbalance {:.3}  pull-imbalance {:.3}",
             r.push_imbalance.iter().sum::<f64>() / r.push_imbalance.len() as f64,
             r.pull_imbalance.iter().sum::<f64>() / r.pull_imbalance.len() as f64
+        );
+    }
+    if let (Some(ser), Some(over)) = (r.engine_serialized, r.engine_overlapped) {
+        println!(
+            "  pipeline: serialized {:.2}ms  overlapped {:.2}ms  ({:.2}x from overlap)",
+            ser * 1e3,
+            over * 1e3,
+            ser / over
         );
     }
     println!("  throughput {:.0} samples/s", r.throughput);

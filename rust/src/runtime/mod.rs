@@ -6,108 +6,239 @@
 //! while the text parser reassigns ids cleanly. `python/compile/aot.py`
 //! writes `artifacts/*.hlo.txt`; [`Runtime::load_hlo`] compiles them once
 //! per process and [`Executable::run`] executes with concrete literals.
+//!
+//! The real PJRT client sits behind the `xla` cargo feature (the `xla`
+//! bindings crate is absent from the offline registry). Without the
+//! feature this module compiles a **stub**: the [`lit`] literal helpers
+//! are fully functional (host-side vectors + shapes), while
+//! [`Runtime::cpu`] and [`Executable::run`] return errors — so every
+//! consumer (trainer, examples, benches) compiles and degrades
+//! gracefully at run time.
 
-use std::path::Path;
+#[cfg(feature = "xla")]
+mod pjrt {
+    use std::path::Path;
 
-use anyhow::{Context, Result};
+    use anyhow::{Context, Result};
 
-/// Wraps the PJRT CPU client.
-pub struct Runtime {
-    client: xla::PjRtClient,
+    /// Wraps the PJRT CPU client.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+    }
+
+    impl Runtime {
+        /// Construct the CPU PJRT client.
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Runtime { client })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load an HLO-text artifact and compile it.
+        pub fn load_hlo<P: AsRef<Path>>(&self, path: P) -> Result<Executable> {
+            let path = path.as_ref();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            Ok(Executable {
+                exe,
+                name: path
+                    .file_stem()
+                    .map(|s| s.to_string_lossy().into_owned())
+                    .unwrap_or_else(|| "hlo".into()),
+            })
+        }
+    }
+
+    /// A compiled HLO module ready to execute.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        pub name: String,
+    }
+
+    impl Executable {
+        /// Execute with literal inputs; returns the flattened tuple outputs.
+        /// (aot.py lowers with `return_tuple=True`, so the single result is a
+        /// tuple literal that we decompose.)
+        pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            let result = self
+                .exe
+                .execute::<xla::Literal>(inputs)
+                .with_context(|| format!("executing {}", self.name))?;
+            let literal = result[0][0]
+                .to_literal_sync()
+                .context("fetching result literal")?;
+            literal.to_tuple().with_context(|| {
+                format!(
+                    "expected tuple output from {} — lower with return_tuple=True",
+                    self.name
+                )
+            })
+        }
+    }
+
+    /// Literal construction/extraction helpers used by the coordinator.
+    pub mod lit {
+        use super::*;
+
+        /// f32 literal of the given shape from a flat slice.
+        pub fn f32(values: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+            let n: i64 = dims.iter().product();
+            anyhow::ensure!(n as usize == values.len(), "shape/data mismatch");
+            Ok(xla::Literal::vec1(values).reshape(dims)?)
+        }
+
+        /// i32 literal of the given shape.
+        pub fn i32(values: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+            let n: i64 = dims.iter().product();
+            anyhow::ensure!(n as usize == values.len(), "shape/data mismatch");
+            Ok(xla::Literal::vec1(values).reshape(dims)?)
+        }
+
+        /// Extract a flat f32 vector.
+        pub fn to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+            Ok(l.to_vec::<f32>()?)
+        }
+
+        /// Extract a scalar f32 (rank-0 or single-element).
+        pub fn scalar_f32(l: &xla::Literal) -> Result<f32> {
+            let v = l.to_vec::<f32>()?;
+            anyhow::ensure!(v.len() == 1, "expected scalar, got {} elems", v.len());
+            Ok(v[0])
+        }
+
+        /// Extract a flat u32 vector.
+        pub fn to_u32(l: &xla::Literal) -> Result<Vec<u32>> {
+            Ok(l.to_vec::<u32>()?)
+        }
+    }
 }
 
-impl Runtime {
-    /// Construct the CPU PJRT client.
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client })
+#[cfg(feature = "xla")]
+pub use pjrt::{lit, Executable, Runtime};
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use std::path::Path;
+
+    use anyhow::Result;
+
+    const UNAVAILABLE: &str =
+        "zen was built without the `xla` feature; the PJRT runtime is unavailable \
+         (add the `xla` crate and rebuild with `--features xla`)";
+
+    /// Host-side literal: a shape plus typed flat data. Mirrors the subset
+    /// of `xla::Literal` the coordinator constructs and extracts.
+    #[derive(Clone, Debug, PartialEq)]
+    pub struct Literal {
+        pub dims: Vec<i64>,
+        pub data: LiteralData,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// Typed storage behind a stub [`Literal`].
+    #[derive(Clone, Debug, PartialEq)]
+    pub enum LiteralData {
+        F32(Vec<f32>),
+        I32(Vec<i32>),
+        U32(Vec<u32>),
     }
 
-    /// Load an HLO-text artifact and compile it.
-    pub fn load_hlo<P: AsRef<Path>>(&self, path: P) -> Result<Executable> {
-        let path = path.as_ref();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Executable {
-            exe,
-            name: path
-                .file_stem()
-                .map(|s| s.to_string_lossy().into_owned())
-                .unwrap_or_else(|| "hlo".into()),
-        })
+    /// Stub runtime: construction always fails with a clear message.
+    pub struct Runtime;
+
+    impl Runtime {
+        pub fn cpu() -> Result<Self> {
+            Err(anyhow::anyhow!("{UNAVAILABLE}"))
+        }
+
+        pub fn platform(&self) -> String {
+            "stub".to_string()
+        }
+
+        pub fn load_hlo<P: AsRef<Path>>(&self, path: P) -> Result<Executable> {
+            Err(anyhow::anyhow!(
+                "cannot load {}: {UNAVAILABLE}",
+                path.as_ref().display()
+            ))
+        }
+    }
+
+    /// Stub executable (never constructed; methods exist for type-compat).
+    pub struct Executable {
+        pub name: String,
+    }
+
+    impl Executable {
+        pub fn run(&self, _inputs: &[Literal]) -> Result<Vec<Literal>> {
+            Err(anyhow::anyhow!("cannot execute {}: {UNAVAILABLE}", self.name))
+        }
+    }
+
+    /// Literal construction/extraction helpers used by the coordinator.
+    /// Fully functional in the stub (host vectors only).
+    pub mod lit {
+        use super::*;
+
+        fn checked(dims: &[i64], len: usize) -> Result<()> {
+            let n: i64 = dims.iter().product();
+            anyhow::ensure!(n as usize == len, "shape/data mismatch");
+            Ok(())
+        }
+
+        /// f32 literal of the given shape from a flat slice.
+        pub fn f32(values: &[f32], dims: &[i64]) -> Result<Literal> {
+            checked(dims, values.len())?;
+            Ok(Literal {
+                dims: dims.to_vec(),
+                data: LiteralData::F32(values.to_vec()),
+            })
+        }
+
+        /// i32 literal of the given shape.
+        pub fn i32(values: &[i32], dims: &[i64]) -> Result<Literal> {
+            checked(dims, values.len())?;
+            Ok(Literal {
+                dims: dims.to_vec(),
+                data: LiteralData::I32(values.to_vec()),
+            })
+        }
+
+        /// Extract a flat f32 vector.
+        pub fn to_f32(l: &Literal) -> Result<Vec<f32>> {
+            match &l.data {
+                LiteralData::F32(v) => Ok(v.clone()),
+                other => Err(anyhow::anyhow!("literal is not f32: {other:?}")),
+            }
+        }
+
+        /// Extract a scalar f32 (rank-0 or single-element).
+        pub fn scalar_f32(l: &Literal) -> Result<f32> {
+            let v = to_f32(l)?;
+            anyhow::ensure!(v.len() == 1, "expected scalar, got {} elems", v.len());
+            Ok(v[0])
+        }
+
+        /// Extract a flat u32 vector.
+        pub fn to_u32(l: &Literal) -> Result<Vec<u32>> {
+            match &l.data {
+                LiteralData::U32(v) => Ok(v.clone()),
+                other => Err(anyhow::anyhow!("literal is not u32: {other:?}")),
+            }
+        }
     }
 }
 
-/// A compiled HLO module ready to execute.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
-
-impl Executable {
-    /// Execute with literal inputs; returns the flattened tuple outputs.
-    /// (aot.py lowers with `return_tuple=True`, so the single result is a
-    /// tuple literal that we decompose.)
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let result = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("executing {}", self.name))?;
-        let literal = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        literal
-            .to_tuple()
-            .with_context(|| format!("expected tuple output from {} — lower with return_tuple=True", self.name))
-    }
-}
-
-/// Literal construction/extraction helpers used by the coordinator.
-pub mod lit {
-    use super::*;
-
-    /// f32 literal of the given shape from a flat slice.
-    pub fn f32(values: &[f32], dims: &[i64]) -> Result<xla::Literal> {
-        let n: i64 = dims.iter().product();
-        anyhow::ensure!(n as usize == values.len(), "shape/data mismatch");
-        Ok(xla::Literal::vec1(values).reshape(dims)?)
-    }
-
-    /// i32 literal of the given shape.
-    pub fn i32(values: &[i32], dims: &[i64]) -> Result<xla::Literal> {
-        let n: i64 = dims.iter().product();
-        anyhow::ensure!(n as usize == values.len(), "shape/data mismatch");
-        Ok(xla::Literal::vec1(values).reshape(dims)?)
-    }
-
-    /// Extract a flat f32 vector.
-    pub fn to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
-        Ok(l.to_vec::<f32>()?)
-    }
-
-    /// Extract a scalar f32 (rank-0 or single-element).
-    pub fn scalar_f32(l: &xla::Literal) -> Result<f32> {
-        let v = l.to_vec::<f32>()?;
-        anyhow::ensure!(v.len() == 1, "expected scalar, got {} elems", v.len());
-        Ok(v[0])
-    }
-
-    /// Extract a flat u32 vector.
-    pub fn to_u32(l: &xla::Literal) -> Result<Vec<u32>> {
-        Ok(l.to_vec::<u32>()?)
-    }
-}
+#[cfg(not(feature = "xla"))]
+pub use stub::{lit, Executable, Literal, LiteralData, Runtime};
 
 #[cfg(test)]
 mod tests {
@@ -115,10 +246,18 @@ mod tests {
     // (integration, after `make artifacts`). Here: client + literals only.
     use super::*;
 
+    #[cfg(feature = "xla")]
     #[test]
     fn cpu_client_boots() {
         let rt = Runtime::cpu().expect("PJRT CPU client");
         assert!(!rt.platform().is_empty());
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_runtime_errors_clearly() {
+        let err = Runtime::cpu().err().expect("stub must not boot");
+        assert!(err.to_string().contains("xla"), "{err}");
     }
 
     #[test]

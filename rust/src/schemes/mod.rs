@@ -97,22 +97,34 @@ pub fn reference_sum(inputs: &[CooTensor]) -> crate::tensor::DenseTensor {
     acc
 }
 
-/// Assert all endpoint outputs equal the reference within float tolerance
-/// (summation order differs across schemes). Panics with context on
-/// mismatch; used by tests and the coordinator's self-check mode.
+/// Assert one aggregated tensor equals the dense reference within float
+/// tolerance (summation order differs across schemes); `what` labels
+/// the failing site. Shared by [`verify_outputs`] and the engine's
+/// per-layer verifier ([`crate::engine::verify_layer_outputs`]).
+pub fn assert_matches_reference(
+    out: &CooTensor,
+    reference: &crate::tensor::DenseTensor,
+    what: &str,
+) {
+    let dense = out.to_dense();
+    assert_eq!(dense.len(), reference.len(), "{what} length");
+    for i in 0..dense.len() {
+        let (a, b) = (dense.values[i], reference.values[i]);
+        let tol = 1e-5f32.max(b.abs() * 1e-5);
+        assert!(
+            (a - b).abs() <= tol,
+            "{what}, index {i}: got {a}, reference {b}"
+        );
+    }
+}
+
+/// Assert all endpoint outputs equal the reference within float tolerance.
+/// Panics with context on mismatch; used by tests and the coordinator's
+/// self-check mode.
 pub fn verify_outputs(result: &SyncResult, inputs: &[CooTensor]) {
     let reference = reference_sum(inputs);
     for (e, out) in result.outputs.iter().enumerate() {
-        let dense = out.to_dense();
-        assert_eq!(dense.len(), reference.len(), "endpoint {e} length");
-        for i in 0..dense.len() {
-            let (a, b) = (dense.values[i], reference.values[i]);
-            let tol = 1e-5f32.max(b.abs() * 1e-5);
-            assert!(
-                (a - b).abs() <= tol,
-                "endpoint {e}, index {i}: scheme={a}, reference={b}"
-            );
-        }
+        assert_matches_reference(out, &reference, &format!("endpoint {e}"));
     }
 }
 

@@ -6,13 +6,13 @@
 //! sampler, summary statistics, a scoped thread pool, a seeded
 //! property-testing harness, wall-clock timers, and table rendering.
 
-pub mod rng;
-pub mod stats;
 pub mod pool;
 pub mod propcheck;
 pub mod radix;
-pub mod timer;
+pub mod rng;
+pub mod stats;
 pub mod table;
+pub mod timer;
 
 pub use pool::ThreadPool;
 pub use rng::{Pcg64, Zipf};
@@ -23,7 +23,7 @@ pub use timer::Stopwatch;
 #[inline]
 pub fn ceil_div(a: usize, b: usize) -> usize {
     debug_assert!(b > 0);
-    (a + b - 1) / b
+    a.div_ceil(b)
 }
 
 /// Human-readable byte count.

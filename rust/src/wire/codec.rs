@@ -20,21 +20,34 @@ const VERSION: u8 = 1;
 pub const FRAME_HEADER: usize = 2 + 1 + 1 + 4;
 
 /// Codec error.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum WireError {
-    #[error("truncated frame: need {need}, have {have}")]
     Truncated { need: usize, have: usize },
-    #[error("bad magic {0:#06x}")]
     BadMagic(u16),
-    #[error("unsupported version {0}")]
     BadVersion(u8),
-    #[error("unknown message kind {0}")]
     BadKind(u8),
-    #[error("body length mismatch: header {header}, actual {actual}")]
     LengthMismatch { header: usize, actual: usize },
-    #[error("malformed body: {0}")]
     Malformed(&'static str),
 }
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { need, have } => {
+                write!(f, "truncated frame: need {need}, have {have}")
+            }
+            WireError::BadMagic(m) => write!(f, "bad magic {m:#06x}"),
+            WireError::BadVersion(v) => write!(f, "unsupported version {v}"),
+            WireError::BadKind(k) => write!(f, "unknown message kind {k}"),
+            WireError::LengthMismatch { header, actual } => {
+                write!(f, "body length mismatch: header {header}, actual {actual}")
+            }
+            WireError::Malformed(msg) => write!(f, "malformed body: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
 
 /// A synchronization message.
 #[derive(Clone, Debug, PartialEq)]
@@ -82,7 +95,7 @@ pub trait Decode: Sized {
 
 struct Writer<'a>(&'a mut Vec<u8>);
 
-impl<'a> Writer<'a> {
+impl Writer<'_> {
     fn u16(&mut self, v: u16) {
         self.0.extend_from_slice(&v.to_le_bytes());
     }
@@ -117,7 +130,7 @@ struct Reader<'a> {
     pos: usize,
 }
 
-impl<'a> Reader<'a> {
+impl Reader<'_> {
     fn need(&self, n: usize) -> Result<(), WireError> {
         if self.pos + n > self.buf.len() {
             Err(WireError::Truncated {
@@ -211,7 +224,8 @@ impl Encode for Message {
             + match self {
                 Message::PushCoo { tensor, .. } => 4 + coo_body_len(tensor),
                 Message::PullHashBitmap { bitmap, values, .. } => {
-                    4 + 8 + crate::util::ceil_div(bitmap.len().max(1), 64) * 8 + 4 + values.len() * 4
+                    let words = crate::util::ceil_div(bitmap.len().max(1), 64);
+                    4 + 8 + words * 8 + 4 + values.len() * 4
                 }
                 Message::PullCoo { tensor, .. } => 4 + coo_body_len(tensor),
                 Message::Barrier { .. } => 4,

@@ -25,6 +25,34 @@ pub use profiles::{table1, ModelProfile};
 use crate::tensor::CooTensor;
 use crate::util::{Pcg64, Zipf};
 
+/// What kind of gradient a [`LayerSpec`] produces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Dense (MLP / head) gradient — every parameter non-zero.
+    Dense,
+    /// A contiguous shard of embedding rows `[row_lo, row_hi)`.
+    EmbeddingShard { row_lo: usize, row_hi: usize },
+}
+
+/// One layer of the model's gradient, in backward-completion order.
+///
+/// Real frameworks surface gradients tensor-by-tensor as the backward
+/// pass walks from the output towards the input; `ready_frac` models
+/// that: the fraction of the backward pass completed when this layer's
+/// gradient is available for synchronization. The engine
+/// ([`crate::engine`]) uses it to start bucket communication *before*
+/// the full backward pass has finished.
+#[derive(Clone, Debug)]
+pub struct LayerSpec {
+    pub name: String,
+    /// Parameters in this layer (the dense length of its gradient).
+    pub params: usize,
+    pub kind: LayerKind,
+    /// Fraction of backward compute done when this gradient is ready,
+    /// in (0, 1]; monotone non-decreasing across the spec list.
+    pub ready_frac: f64,
+}
+
 /// Deterministic sparse-gradient generator for one model profile.
 pub struct GradientGen {
     pub profile: ModelProfile,
@@ -85,6 +113,100 @@ impl GradientGen {
     /// Expected non-zeros per worker tensor.
     pub fn expected_nnz(&self) -> usize {
         (self.profile.density * self.profile.emb_params() as f64) as usize
+    }
+
+    /// Decompose the profile into per-layer gradients in
+    /// backward-completion order: the dense head layers finish first
+    /// (they sit near the output), then the embedding shards (the input
+    /// layer's gradient completes last). `ready_frac` is spaced evenly
+    /// across the layer list — a linear backward-cost model, documented
+    /// in DESIGN.md §Substitutions.
+    pub fn layer_specs(&self, dense_layers: usize, emb_shards: usize) -> Vec<LayerSpec> {
+        assert!(emb_shards >= 1, "the embedding needs at least one shard");
+        let total = dense_layers + emb_shards;
+        let mut specs = Vec::with_capacity(total);
+        let mlp = self.profile.mlp_params;
+        for i in 0..dense_layers {
+            let lo = i * mlp / dense_layers;
+            let hi = (i + 1) * mlp / dense_layers;
+            specs.push(LayerSpec {
+                name: format!("mlp{i}"),
+                params: hi - lo,
+                kind: LayerKind::Dense,
+                ready_frac: (i + 1) as f64 / total as f64,
+            });
+        }
+        let rows = self.profile.rows;
+        for s in 0..emb_shards {
+            let row_lo = s * rows / emb_shards;
+            let row_hi = (s + 1) * rows / emb_shards;
+            specs.push(LayerSpec {
+                name: format!("emb{s}"),
+                params: (row_hi - row_lo) * self.profile.dim,
+                kind: LayerKind::EmbeddingShard { row_lo, row_hi },
+                ready_frac: (dense_layers + s + 1) as f64 / total as f64,
+            });
+        }
+        specs
+    }
+
+    /// One worker's per-layer gradient tensors for `specs`. Embedding
+    /// shards are exact row-range slices of the flat [`iteration`]
+    /// tensor (so the multi-tensor path aggregates to the same values as
+    /// the single-tensor path); dense layers get synthetic dense
+    /// gradients from a per-(iteration, worker, layer) RNG stream.
+    ///
+    /// [`iteration`]: GradientGen::iteration
+    pub fn layer_iteration(
+        &self,
+        specs: &[LayerSpec],
+        iteration: u64,
+        worker: usize,
+    ) -> Vec<CooTensor> {
+        let flat = self.iteration(iteration, worker);
+        let dim = self.profile.dim as u32;
+        specs
+            .iter()
+            .enumerate()
+            .map(|(li, spec)| match spec.kind {
+                LayerKind::EmbeddingShard { row_lo, row_hi } => {
+                    flat.slice_range(row_lo as u32 * dim, row_hi as u32 * dim)
+                }
+                LayerKind::Dense => {
+                    let mut rng = Pcg64::new(
+                        self.seed
+                            ^ iteration.wrapping_mul(0x517c_c1b7_2722_0a95)
+                            ^ ((li as u64 + 1) << 17),
+                        worker as u64 + 1,
+                    );
+                    let indices: Vec<u32> = (0..spec.params as u32).collect();
+                    let values: Vec<f32> = (0..spec.params)
+                        .map(|_| {
+                            let v = rng.normal_ms(0.0, 0.02) as f32;
+                            if v == 0.0 {
+                                1e-4
+                            } else {
+                                v
+                            }
+                        })
+                        .collect();
+                    CooTensor::from_sorted(spec.params, indices, values)
+                }
+            })
+            .collect()
+    }
+
+    /// One iteration's per-layer tensors for all `n` workers:
+    /// `out[worker][layer]`.
+    pub fn layer_iteration_all(
+        &self,
+        specs: &[LayerSpec],
+        iteration: u64,
+        n: usize,
+    ) -> Vec<Vec<CooTensor>> {
+        (0..n)
+            .map(|w| self.layer_iteration(specs, iteration, w))
+            .collect()
     }
 }
 
@@ -212,5 +334,64 @@ mod tests {
         let g = GradientGen::new(small_profile(), 11);
         let t = g.iteration(0, 0);
         assert_eq!(t.nnz() % small_profile().dim, 0);
+    }
+
+    #[test]
+    fn layer_specs_cover_the_model() {
+        let g = GradientGen::new(small_profile(), 13);
+        let specs = g.layer_specs(3, 4);
+        assert_eq!(specs.len(), 7);
+        let p = small_profile();
+        let dense_total: usize = specs
+            .iter()
+            .filter(|s| s.kind == LayerKind::Dense)
+            .map(|s| s.params)
+            .sum();
+        assert_eq!(dense_total, p.mlp_params);
+        let emb_total: usize = specs
+            .iter()
+            .filter(|s| matches!(s.kind, LayerKind::EmbeddingShard { .. }))
+            .map(|s| s.params)
+            .sum();
+        assert_eq!(emb_total, p.emb_params());
+        // ready fractions are monotone and end at 1.0
+        assert!(specs.windows(2).all(|w| w[0].ready_frac <= w[1].ready_frac));
+        assert!((specs.last().unwrap().ready_frac - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn embedding_shards_reassemble_to_flat_tensor() {
+        let g = GradientGen::new(small_profile(), 17);
+        let specs = g.layer_specs(0, 4);
+        let layers = g.layer_iteration(&specs, 2, 1);
+        let flat = g.iteration(2, 1);
+        let mut offset = 0u32;
+        let parts: Vec<(u32, CooTensor)> = layers
+            .into_iter()
+            .map(|t| {
+                let off = offset;
+                offset += t.dense_len as u32;
+                (off, t)
+            })
+            .collect();
+        let back = CooTensor::concat_ranges(&parts, flat.dense_len);
+        assert_eq!(back, flat);
+    }
+
+    #[test]
+    fn dense_layers_are_dense_and_deterministic() {
+        let g = GradientGen::new(small_profile(), 19);
+        let specs = g.layer_specs(2, 1);
+        let a = g.layer_iteration(&specs, 0, 0);
+        let b = g.layer_iteration(&specs, 0, 0);
+        assert_eq!(a, b);
+        for (spec, t) in specs.iter().zip(a.iter()) {
+            if spec.kind == LayerKind::Dense {
+                assert_eq!(t.nnz(), spec.params, "dense layer fully non-zero");
+            }
+        }
+        // different workers draw different dense gradients
+        let c = g.layer_iteration(&specs, 0, 1);
+        assert_ne!(a[0], c[0]);
     }
 }

@@ -1,5 +1,8 @@
 //! Integration: the PJRT runtime loads and executes the AOT artifacts,
-//! and the numerics match expectations. Requires `make artifacts`.
+//! and the numerics match expectations. Requires `make artifacts` and a
+//! build with the `xla` feature (the whole file is gated on it — without
+//! the feature the runtime is a stub and there is nothing to test here).
+#![cfg(feature = "xla")]
 
 use zen::runtime::{lit, Runtime};
 

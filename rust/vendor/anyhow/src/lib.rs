@@ -1,0 +1,210 @@
+//! Std-only stand-in for the `anyhow` crate, vendored because the offline
+//! crate registry carries no crates.io closure.
+//!
+//! Implements exactly the subset the `zen` crate uses: [`Error`],
+//! [`Result`], the [`anyhow!`] / [`bail!`] / [`ensure!`] macros, and the
+//! [`Context`] extension trait for `Result` and `Option`. The coherence
+//! trick that lets `.context()` work both on `Result<_, E: std::error::Error>`
+//! and on `Result<_, anyhow::Error>` mirrors upstream anyhow: [`Error`]
+//! deliberately does *not* implement `std::error::Error`, and a private
+//! helper trait is implemented for both families.
+
+use std::fmt;
+
+/// A type-erased error: a message plus an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from anything printable.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            msg: message.to_string(),
+            source: None,
+        }
+    }
+
+    /// Construct from a concrete error, keeping it as the source.
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(error: E) -> Self {
+        Error {
+            msg: error.to_string(),
+            source: Some(Box::new(error)),
+        }
+    }
+
+    /// Wrap with higher-level context (rendered as `context: cause`).
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error {
+            msg: format!("{context}: {}", self.msg),
+            source: self.source,
+        }
+    }
+
+    /// The root cause, if a concrete source error was preserved.
+    pub fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.source
+            .as_deref()
+            .map(|e| e as &(dyn std::error::Error + 'static))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> anyhow::Result<()>` prints through Debug; make it
+        // read like a message, with the source chain appended.
+        write!(f, "{}", self.msg)?;
+        let mut cause = self.source();
+        while let Some(c) = cause {
+            write!(f, "\n\ncaused by: {c}")?;
+            cause = c.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with a defaulted error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+mod private {
+    /// Sealed conversion into [`super::Error`], implemented for every
+    /// `std::error::Error` and for `Error` itself. The two impls do not
+    /// overlap because `Error` never implements `std::error::Error`.
+    pub trait IntoError {
+        fn into_error(self) -> super::Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> super::Error {
+            super::Error::new(self)
+        }
+    }
+
+    impl IntoError for super::Error {
+        fn into_error(self) -> super::Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(|| ...)`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: private::IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_io() -> Result<u32> {
+        let v = "12x".parse::<u32>()?; // std error converts via `?`
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = parse_io().unwrap_err();
+        assert!(e.to_string().contains("invalid digit"));
+        assert!(e.source().is_some());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("while rendering").unwrap_err();
+        assert!(e.to_string().starts_with("while rendering: "));
+
+        let none: Option<u32> = None;
+        let e = none.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+    }
+
+    #[test]
+    fn context_chains_on_anyhow_error() {
+        let base: Result<()> = Err(anyhow!("inner {}", 7));
+        let e = base.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner 7");
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn check(x: u32) -> Result<u32> {
+            ensure!(x < 10, "too big: {x}");
+            if x == 3 {
+                bail!("unlucky {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(check(2).unwrap(), 2);
+        assert_eq!(check(3).unwrap_err().to_string(), "unlucky 3");
+        assert_eq!(check(12).unwrap_err().to_string(), "too big: 12");
+    }
+
+    #[test]
+    fn debug_renders_chain() {
+        let e = parse_io().unwrap_err().context("loading config");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("loading config"));
+        assert!(dbg.contains("caused by"));
+    }
+}
