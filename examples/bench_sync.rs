@@ -1,0 +1,398 @@
+//! Reproducible perf trajectory: the scheme × density × machines grid
+//! plus the Zen partition+encode microbench, emitted as machine-readable
+//! `BENCH_PR2.json` so every future PR is measured against this one.
+//!
+//!   cargo run --release --example bench_sync -- [--tiny] [--iters K] [--out PATH]
+//!
+//! - `--tiny`: CI smoke configuration (small tensors, few iterations).
+//! - `--iters K`: timed iterations per cell (median reported).
+//! - `--out PATH`: output JSON path (default `BENCH_PR2.json`).
+//!
+//! The microbench section records, in the same file, the pre-refactor
+//! baseline (allocating `partition` + `encode` per iteration, fresh
+//! buffers each time — the PR-1 hot path) and the scratch-arena path
+//! (`partition_into` + `encode_into` + reused frame buffer), so the
+//! speedup claim of ISSUE 2 is re-measurable on any machine.
+
+use zen::cluster::{LinkKind, Network};
+use zen::hashing::{HashBitmapCodec, HashBitmapPayload, HierarchicalHasher, PartitionScratch};
+use zen::schemes::{self, SyncScratch};
+use zen::tensor::CooTensor;
+use zen::util::{Pcg64, Stopwatch, Summary};
+use zen::wire::encode_pull_hash_bitmap;
+
+struct Config {
+    tiny: bool,
+    iters: usize,
+    warmup: usize,
+    out: String,
+}
+
+fn parse_args() -> Config {
+    let mut cfg = Config {
+        tiny: false,
+        iters: 7,
+        warmup: 2,
+        out: "BENCH_PR2.json".to_string(),
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--tiny" => {
+                cfg.tiny = true;
+                cfg.iters = 3;
+                cfg.warmup = 1;
+            }
+            "--iters" => {
+                cfg.iters = args
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .expect("--iters needs a positive integer");
+            }
+            "--out" => {
+                cfg.out = args.next().expect("--out needs a path");
+            }
+            other => panic!("unknown argument {other}"),
+        }
+    }
+    cfg
+}
+
+fn random_inputs(seed: u64, n: usize, dense_len: usize, density: f64) -> Vec<CooTensor> {
+    let nnz = ((dense_len as f64 * density) as usize).clamp(1, dense_len);
+    let mut rng = Pcg64::seeded(seed);
+    (0..n)
+        .map(|_| {
+            let mut idx: Vec<u32> = rng
+                .sample_distinct(dense_len, nnz)
+                .into_iter()
+                .map(|i| i as u32)
+                .collect();
+            idx.sort_unstable();
+            let vals: Vec<f32> = (0..nnz).map(|_| rng.next_f32() * 2.0 - 0.99).collect();
+            CooTensor::from_sorted(dense_len, idx, vals)
+        })
+        .collect()
+}
+
+fn median_ns<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let sw = Stopwatch::start();
+        f();
+        s.add(sw.elapsed() * 1e9);
+    }
+    s.median()
+}
+
+fn json_f(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.1}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn main() {
+    let cfg = parse_args();
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"pr\": 2,\n");
+    json.push_str(&format!(
+        "  \"config\": {{\"tiny\": {}, \"iters\": {}, \"warmup\": {}}},\n",
+        cfg.tiny, cfg.iters, cfg.warmup
+    ));
+
+    // ---- Microbench: Zen hash partition + hash-bitmap encode --------
+    // baseline = a faithful re-creation of the pre-refactor (PR 1)
+    //            algorithm, embedded below in `mod baseline` (fresh
+    //            Vec-of-pairs buckets, Mutex-collected results, 16-bit
+    //            radix with fresh 512 KiB count tables, per-element
+    //            frame writes) — so the recorded speedup always compares
+    //            against the code this PR replaced, not against itself;
+    // scratch  = the arena path (reused buffers, bulk frame writes).
+    // Both run on a single-worker pool: the comparison isolates the
+    // allocation/codec work; the thread-parallel win shows up in the
+    // grid section (default pools).
+    let (dense_len, density, n) = if cfg.tiny {
+        (1 << 14, 0.02, 4)
+    } else {
+        (1 << 20, 0.01, 8)
+    };
+    let micro_inputs = random_inputs(7, 1, dense_len, density);
+    let t = &micro_inputs[0];
+    let hasher = HierarchicalHasher::with_defaults(42, n, t.nnz())
+        .with_pool(zen::util::ThreadPool::with_workers(1));
+    let domains = hasher.partition_domains(dense_len);
+    let codecs: Vec<HashBitmapCodec> = domains.iter().map(|d| HashBitmapCodec::new(d)).collect();
+
+    let baseline_ns = median_ns(cfg.warmup, cfg.iters, || {
+        let parts = baseline::partition(&hasher, t);
+        for (p, part) in parts.iter().enumerate() {
+            let (bitmap, values) = baseline::encode(&domains[p], part);
+            let frame = baseline::frame_pull(p as u32, &bitmap, &values);
+            std::hint::black_box(frame.len());
+        }
+    });
+
+    let mut scratch = PartitionScratch::new();
+    let mut payload = HashBitmapPayload::default();
+    let mut frame: Vec<u8> = Vec::new();
+    let scratch_ns = median_ns(cfg.warmup, cfg.iters, || {
+        hasher.partition_into(t, &mut scratch);
+        frame.clear();
+        for (p, codec) in codecs.iter().enumerate() {
+            codec.encode_into(scratch.part(p), &mut payload);
+            encode_pull_hash_bitmap(p as u32, &payload.bitmap, &payload.values, &mut frame);
+        }
+        std::hint::black_box(frame.len());
+    });
+
+    // Cross-check: the two paths must produce identical partitions.
+    {
+        let base = baseline::partition(&hasher, t);
+        let mut check = PartitionScratch::new();
+        hasher.partition_into(t, &mut check);
+        for (p, b) in base.iter().enumerate() {
+            assert_eq!(check.part(p).indices, &b.indices[..], "partition {p} diverged");
+        }
+    }
+
+    let speedup = baseline_ns / scratch_ns;
+    println!(
+        "microbench zen_partition_encode: baseline {:.2} ms, scratch {:.2} ms, speedup {:.2}x",
+        baseline_ns / 1e6,
+        scratch_ns / 1e6,
+        speedup
+    );
+    json.push_str("  \"microbench\": {\n");
+    json.push_str("    \"name\": \"zen_partition_encode\",\n");
+    json.push_str(&format!(
+        "    \"machines\": {n}, \"dense_len\": {dense_len}, \"nnz\": {},\n",
+        t.nnz()
+    ));
+    json.push_str(&format!(
+        "    \"baseline_ns_median\": {}, \"scratch_ns_median\": {}, \"speedup\": {}\n",
+        json_f(baseline_ns),
+        json_f(scratch_ns),
+        if speedup.is_finite() {
+            format!("{speedup:.3}")
+        } else {
+            "null".to_string()
+        }
+    ));
+    json.push_str("  },\n");
+
+    // ---- Grid: scheme × density × machines --------------------------
+    let grid_dense_len = if cfg.tiny { 1 << 13 } else { 1 << 18 };
+    let densities: &[f64] = if cfg.tiny {
+        &[0.01]
+    } else {
+        &[0.001, 0.01, 0.05]
+    };
+    let machine_counts: &[usize] = if cfg.tiny { &[4] } else { &[4, 8] };
+    let scheme_names = [
+        "zen",
+        "zen-coo",
+        "sparseps",
+        "omnireduce",
+        "sparcml",
+        "agsparse",
+        "dense",
+    ];
+
+    json.push_str("  \"grid\": [\n");
+    let mut rows: Vec<String> = Vec::new();
+    for &machines in machine_counts {
+        for &density in densities {
+            let inputs = random_inputs(1000 + machines as u64, machines, grid_dense_len, density);
+            let net = Network::new(machines, LinkKind::Tcp25);
+            let nnz = inputs[0].nnz();
+            for name in scheme_names {
+                let scheme = schemes::by_name(name, machines, 0x5eed, nnz).unwrap();
+                let mut scratch = SyncScratch::new();
+                let mut bytes = 0u64;
+                let mut compute_overhead = 0.0f64;
+                let ns = median_ns(cfg.warmup, cfg.iters, || {
+                    let r = scheme.sync_with(&inputs, &net, &mut scratch);
+                    bytes = r.report.total_bytes();
+                    compute_overhead = r.report.compute_overhead;
+                    std::hint::black_box(r.outputs.len());
+                });
+                println!(
+                    "{:<12} m={machines} d={density:<6} {:>10.1} us/iter  {:>12} B/iter",
+                    scheme.name(),
+                    ns / 1e3,
+                    bytes
+                );
+                rows.push(format!(
+                    "    {{\"scheme\": \"{}\", \"machines\": {machines}, \"density\": {density}, \
+                     \"dense_len\": {grid_dense_len}, \"nnz_per_worker\": {nnz}, \
+                     \"ns_per_iter_median\": {}, \"bytes_per_iter\": {bytes}, \
+                     \"compute_overhead_s\": {:.9}}}",
+                    scheme.name(),
+                    json_f(ns),
+                    compute_overhead
+                ));
+            }
+        }
+    }
+    json.push_str(&rows.join(",\n"));
+    json.push_str("\n  ]\n}\n");
+
+    std::fs::write(&cfg.out, &json).expect("write bench json");
+    println!("wrote {}", cfg.out);
+    // A measurement tool, not a gate: on tiny/noisy runs the microbench
+    // can jitter below 1.0x — flag it loudly, but exit 0 so the JSON
+    // this run exists to record is never discarded.
+    if speedup.is_nan() || speedup <= 1.0 {
+        eprintln!(
+            "warning: scratch path not faster than baseline ({speedup:.2}x) — \
+             noisy run or perf regression; compare BENCH_*.json across runs"
+        );
+    }
+}
+
+/// Faithful re-creation of the pre-refactor (PR 1) hot path, frozen
+/// here so `BENCH_*.json` always records the speedup against the code
+/// this PR replaced — the library's `partition()`/`encode()` wrappers
+/// now run the new algorithm internally, so benchmarking them would
+/// compare the refactor against itself. Kept behavior-identical:
+/// fresh `Vec<(u32, f32)>` buckets per call, fresh `r1` slot arrays,
+/// `Mutex<Option<_>>`-collected partition results, a 16-bit-digit LSD
+/// radix sort allocating its two 256 KiB count tables per call, fresh
+/// bitmap + value vectors per encode, and per-element little-endian
+/// frame writes.
+mod baseline {
+    use std::sync::Mutex;
+
+    use zen::hashing::HierarchicalHasher;
+    use zen::tensor::{Bitmap, CooTensor};
+
+    pub fn partition(h: &HierarchicalHasher, t: &CooTensor) -> Vec<CooTensor> {
+        let n = h.n;
+        let nnz = t.nnz();
+        let mut buckets: Vec<Vec<(u32, f32)>> = (0..n)
+            .map(|_| Vec::with_capacity(nnz / n + 16))
+            .collect();
+        for (&idx, &val) in t.indices.iter().zip(t.values.iter()) {
+            buckets[h.family().partition(idx, n)].push((idx, val));
+        }
+        let results: Vec<Mutex<Option<CooTensor>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        for (p, bucket) in buckets.iter().enumerate() {
+            let mut slots = vec![0u32; h.r1];
+            let mut serial: Vec<u32> = Vec::new();
+            for (e, &(idx, _)) in bucket.iter().enumerate() {
+                let mut placed = false;
+                for round in 1..=h.k {
+                    let q = h.family().slot(round, idx, h.r1);
+                    if slots[q] == 0 {
+                        slots[q] = e as u32 + 1;
+                        placed = true;
+                        break;
+                    }
+                }
+                if !placed {
+                    serial.push(e as u32 + 1);
+                }
+            }
+            let mut idxs: Vec<u32> = Vec::with_capacity(bucket.len());
+            let mut vals: Vec<f32> = Vec::with_capacity(bucket.len());
+            for &v in slots.iter().chain(serial.iter()) {
+                if v != 0 {
+                    let (idx, val) = bucket[(v - 1) as usize];
+                    idxs.push(idx);
+                    vals.push(val);
+                }
+            }
+            radix_sort_pairs_16bit(&mut idxs, &mut vals);
+            *results[p].lock().unwrap() = Some(CooTensor::from_sorted(t.dense_len, idxs, vals));
+        }
+        results
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().unwrap())
+            .collect()
+    }
+
+    fn radix_sort_pairs_16bit(keys: &mut Vec<u32>, vals: &mut Vec<f32>) {
+        let n = keys.len();
+        if n <= 64 {
+            let mut pairs: Vec<(u32, f32)> =
+                keys.iter().copied().zip(vals.iter().copied()).collect();
+            pairs.sort_unstable_by_key(|p| p.0);
+            for (i, (k, v)) in pairs.into_iter().enumerate() {
+                keys[i] = k;
+                vals[i] = v;
+            }
+            return;
+        }
+        let mut kbuf = vec![0u32; n];
+        let mut vbuf = vec![0f32; n];
+        for pass in 0..2 {
+            let shift = pass * 16;
+            let mut counts = vec![0u32; 1 << 16];
+            for &k in keys.iter() {
+                counts[((k >> shift) & 0xFFFF) as usize] += 1;
+            }
+            if counts.iter().any(|&c| c as usize == n) {
+                continue;
+            }
+            let mut offsets = vec![0u32; 1 << 16];
+            let mut acc = 0u32;
+            for (o, &c) in offsets.iter_mut().zip(counts.iter()) {
+                *o = acc;
+                acc += c;
+            }
+            for i in 0..n {
+                let b = ((keys[i] >> shift) & 0xFFFF) as usize;
+                let dst = offsets[b] as usize;
+                offsets[b] += 1;
+                kbuf[dst] = keys[i];
+                vbuf[dst] = vals[i];
+            }
+            std::mem::swap(keys, &mut kbuf);
+            std::mem::swap(vals, &mut vbuf);
+        }
+    }
+
+    pub fn encode(domain: &[u32], t: &CooTensor) -> (Bitmap, Vec<f32>) {
+        let mut bitmap = Bitmap::zeros(domain.len());
+        let mut values = Vec::with_capacity(t.nnz());
+        let mut d = 0usize;
+        for (&idx, &v) in t.indices.iter().zip(t.values.iter()) {
+            while d < domain.len() && domain[d] < idx {
+                d += 1;
+            }
+            assert!(d < domain.len() && domain[d] == idx, "index outside domain");
+            bitmap.set(d);
+            values.push(v);
+        }
+        (bitmap, values)
+    }
+
+    pub fn frame_pull(server: u32, bitmap: &Bitmap, values: &[f32]) -> Vec<u8> {
+        // Pre-refactor writer: fresh buffer, per-element appends.
+        let mut out = Vec::new();
+        out.extend_from_slice(&0x5A45u16.to_le_bytes());
+        out.push(1); // version
+        out.push(2); // kind
+        let len_at = out.len();
+        out.extend_from_slice(&0u32.to_le_bytes());
+        let body_start = out.len();
+        out.extend_from_slice(&server.to_le_bytes());
+        out.extend_from_slice(&(bitmap.len() as u64).to_le_bytes());
+        for w in bitmap.words() {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out.extend_from_slice(&(values.len() as u32).to_le_bytes());
+        for v in values {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        let body_len = (out.len() - body_start) as u32;
+        out[len_at..len_at + 4].copy_from_slice(&body_len.to_le_bytes());
+        out
+    }
+}

@@ -21,7 +21,7 @@ use anyhow::{Context, Result};
 use super::sgd;
 use crate::cluster::{LinkKind, Network};
 use crate::runtime::{lit, Executable, Runtime};
-use crate::schemes::{self, SyncScheme};
+use crate::schemes::{self, SyncScheme, SyncScratch};
 use crate::tensor::CooTensor;
 use crate::util::{Pcg64, Zipf};
 
@@ -125,6 +125,9 @@ pub struct LmTrainer {
     pub b2: Vec<f32>, // (D,)
     zipf: Zipf,
     step_count: u64,
+    /// Reused sync working memory — steps after the first reuse the
+    /// warmed partition/payload buffers (scratch-arena layer).
+    scratch: SyncScratch,
 }
 
 impl LmTrainer {
@@ -176,6 +179,7 @@ impl LmTrainer {
             zipf,
 
             step_count: 0,
+            scratch: SyncScratch::new(),
         })
     }
 
@@ -299,8 +303,9 @@ impl LmTrainer {
         }
         let compute_wall = compute_sw.elapsed();
 
-        // Synchronize the sparse embedding gradients.
-        let sync = self.scheme.sync(&worker_grads, &self.net);
+        // Synchronize the sparse embedding gradients (reused scratch —
+        // steady-state steps don't pay allocator noise in the sync).
+        let sync = self.scheme.sync_with(&worker_grads, &self.net, &mut self.scratch);
         let emb_comm_time = sync.report.comm_time();
         let scheme_overhead = sync.report.compute_overhead;
 

@@ -14,7 +14,7 @@ pub mod lm;
 pub mod sgd;
 
 use crate::cluster::{LinkKind, Network, Topology};
-use crate::schemes::{self, SyncScheme};
+use crate::schemes::{self, SyncScheme, SyncScratch};
 use crate::workload::{GradientGen, ModelProfile};
 
 /// Per-model compute time for one iteration on one 8-GPU machine
@@ -226,6 +226,10 @@ impl SimDriver {
         let mut emb_sync_times = Vec::with_capacity(self.cfg.iterations);
         let mut push_imb = Vec::new();
         let mut pull_imb = Vec::new();
+        // One scratch for the whole run: iterations after the first
+        // reuse warmed buffers, so the compute charge in the reported
+        // stages reflects the algorithm, not the allocator.
+        let mut scratch = SyncScratch::new();
 
         for it in 0..self.cfg.iterations as u64 {
             // Each machine's tensor = aggregate of its g GPUs (the
@@ -238,7 +242,7 @@ impl SimDriver {
                     crate::tensor::CooTensor::merge_all(&per_gpu)
                 })
                 .collect();
-            let result = self.scheme.sync(&inputs, &net);
+            let result = self.scheme.sync_with(&inputs, &net, &mut scratch);
             // Correctness self-check on the first iteration.
             if it == 0 && !self.cfg.scheme.starts_with("strawman") {
                 schemes::verify_outputs(&result, &inputs);

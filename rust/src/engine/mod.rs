@@ -32,9 +32,9 @@ pub mod bucket;
 pub use bucket::{plan_buckets, Bucket};
 
 use crate::cluster::{CommReport, Network, Timeline, TimelineJob};
-use crate::schemes::SyncScheme;
+use crate::schemes::{SyncScheme, SyncScratch};
 use crate::tensor::{CooTensor, WireFormat};
-use crate::util::ThreadPool;
+use crate::util::{ScratchPool, ThreadPool};
 use crate::workload::LayerSpec;
 
 /// Engine configuration.
@@ -106,6 +106,12 @@ impl EngineRun {
 pub struct SyncEngine {
     pub cfg: EngineConfig,
     pool: ThreadPool,
+    /// Per-bucket sync scratch: each in-flight bucket checks out its own
+    /// [`SyncScratch`], so concurrent bucket syncs never contend on (or
+    /// corrupt) shared working memory, and iterating callers reuse the
+    /// warmed buffers across `run` calls — the engine-level piece of the
+    /// scratch-arena layer.
+    scratch: ScratchPool<SyncScratch>,
 }
 
 impl SyncEngine {
@@ -120,6 +126,7 @@ impl SyncEngine {
         SyncEngine {
             cfg,
             pool: ThreadPool::with_workers(cores.min(4)),
+            scratch: ScratchPool::new(),
         }
     }
 
@@ -183,7 +190,8 @@ impl SyncEngine {
                     .iter()
                     .map(|w| bucket::concat_layers(&b, w))
                     .collect();
-                let result = scheme.sync(&inputs, net);
+                let mut scratch = self.scratch.acquire();
+                let result = scheme.sync_with(&inputs, net, &mut scratch);
                 (b, result)
             });
         let wall_time = sw.elapsed();

@@ -9,7 +9,7 @@
 //! total of `|G|/32` FP32-equivalents per worker across all servers —
 //! versus `n·|G|/32` for a naive positional bitmap.
 
-use crate::tensor::{Bitmap, CooTensor, WireFormat};
+use crate::tensor::{Bitmap, CooSlice, CooTensor, WireFormat};
 
 /// Encoder/decoder for one partition's hash bitmap, bound to the
 /// partition domain `𝕀_p` (sorted ascending). Borrows the domain —
@@ -23,8 +23,9 @@ pub struct HashBitmapCodec<'a> {
 }
 
 /// A transmitted pull payload: the hash bitmap + the non-zero values in
-/// domain order.
-#[derive(Clone, Debug, PartialEq)]
+/// domain order. Reusable: [`HashBitmapCodec::encode_into`] resets and
+/// refills an existing payload without reallocating.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct HashBitmapPayload {
     pub bitmap: Bitmap,
     pub values: Vec<f32>,
@@ -53,9 +54,22 @@ impl<'a> HashBitmapCodec<'a> {
     /// `hash_bitmap_encode` (Alg 2): given the aggregated sparse tensor at
     /// this server (global indices, all members of the domain), produce
     /// the positional bitmap over the domain + values in domain order.
+    ///
+    /// Allocating convenience wrapper over
+    /// [`encode_into`](HashBitmapCodec::encode_into).
     pub fn encode(&self, t: &CooTensor) -> HashBitmapPayload {
-        let mut bitmap = Bitmap::zeros(self.domain.len());
-        let mut values = Vec::with_capacity(t.nnz());
+        let mut payload = HashBitmapPayload::default();
+        self.encode_into(t.as_slice(), &mut payload);
+        payload
+    }
+
+    /// `hash_bitmap_encode` into a reused payload: the bitmap's word
+    /// buffer and the value vector are cleared and refilled in place —
+    /// zero heap allocations once `out` has warmed to steady-state size.
+    pub fn encode_into(&self, t: CooSlice<'_>, out: &mut HashBitmapPayload) {
+        out.bitmap.reset(self.domain.len());
+        out.values.clear();
+        out.values.reserve(t.nnz());
         // Both `t.indices` and `domain` are sorted: linear merge.
         let mut d = 0usize;
         for (&idx, &v) in t.indices.iter().zip(t.values.iter()) {
@@ -67,19 +81,43 @@ impl<'a> HashBitmapCodec<'a> {
                 "index {idx} not in partition domain — h0 mismatch between \
                  worker and server"
             );
-            bitmap.set(d);
-            values.push(v);
+            out.bitmap.set(d);
+            out.values.push(v);
         }
-        HashBitmapPayload { bitmap, values }
     }
 
     /// `hash_bitmap_decode` (Alg 2): recover the global-index sparse
     /// tensor from the bitmap + values.
+    ///
+    /// Allocating convenience wrapper over
+    /// [`decode_into`](HashBitmapCodec::decode_into).
     pub fn decode(&self, payload: &HashBitmapPayload, dense_len: usize) -> CooTensor {
-        let positions = payload.bitmap.ones();
-        assert_eq!(positions.len(), payload.values.len());
-        let indices: Vec<u32> = positions.iter().map(|&p| self.domain[p as usize]).collect();
-        CooTensor::from_sorted(dense_len, indices, payload.values.clone())
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        self.decode_into(payload, &mut indices, &mut values);
+        CooTensor::from_sorted(dense_len, indices, values)
+    }
+
+    /// `hash_bitmap_decode` into reused index/value buffers (cleared
+    /// first) — the zero-allocation steady-state decode path. Output
+    /// indices are global and ascending, values parallel to them.
+    pub fn decode_into(
+        &self,
+        payload: &HashBitmapPayload,
+        indices: &mut Vec<u32>,
+        values: &mut Vec<f32>,
+    ) {
+        indices.clear();
+        values.clear();
+        indices.reserve(payload.values.len());
+        values.reserve(payload.values.len());
+        payload.bitmap.for_each_one(|pos| indices.push(self.domain[pos]));
+        assert_eq!(
+            indices.len(),
+            payload.values.len(),
+            "bitmap popcount must match value count"
+        );
+        values.extend_from_slice(&payload.values);
     }
 }
 
@@ -151,6 +189,31 @@ mod tests {
             // FP32-equivalent: |G|/32 values
             let fp32_equiv = total_bytes as f64 / BYTES_F32 as f64;
             assert!((fp32_equiv - dense_len as f64 / 32.0).abs() <= n as f64);
+        }
+    }
+
+    #[test]
+    fn scratch_payload_reuse_matches_allocating_path() {
+        // One payload + one pair of decode buffers reused across
+        // domains of different sizes must match the allocating path.
+        let mut payload = HashBitmapPayload::default();
+        let mut dec_idx = Vec::new();
+        let mut dec_val = Vec::new();
+        let dense_len = 8_192;
+        for (seed, nnz, n) in [(5u64, 900usize, 4usize), (6, 40, 2), (7, 1_200, 8)] {
+            let t = random_coo(seed, dense_len, nnz);
+            let h = HierarchicalHasher::with_defaults(31, n, t.nnz());
+            let out = h.partition(&t);
+            let domains = h.partition_domains(dense_len);
+            for p in 0..n {
+                let codec = HashBitmapCodec::new(&domains[p]);
+                let fresh = codec.encode(&out.parts[p]);
+                codec.encode_into(out.parts[p].as_slice(), &mut payload);
+                assert_eq!(payload, fresh, "seed {seed} p {p}");
+                codec.decode_into(&payload, &mut dec_idx, &mut dec_val);
+                assert_eq!(dec_idx, out.parts[p].indices);
+                assert_eq!(dec_val, out.parts[p].values);
+            }
         }
     }
 

@@ -19,10 +19,9 @@
 //! guarantees, no atomics. The Pallas L1 kernel replaces CAS with
 //! deterministic scatter-min rounds (python/compile/kernels/hash.py).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-
 use super::murmur::HashFamily;
-use crate::tensor::CooTensor;
+use crate::tensor::{CooSlice, CooTensor};
+use crate::util::radix::RadixScratch;
 use crate::util::ThreadPool;
 
 /// Result of hashing one worker's sparse tensor into `n` partitions.
@@ -41,12 +40,109 @@ impl PartitionOutput {
     /// Imbalance ratio of Push for this worker (Definition 6):
     /// `max_j n·|I_i^j| / |I_i|`.
     pub fn push_imbalance(&self) -> f64 {
-        let total: usize = self.parts.iter().map(|p| p.nnz()).sum();
-        if total == 0 {
-            return 1.0;
+        imbalance_of_sizes(self.parts.iter().map(|p| p.nnz()))
+    }
+}
+
+/// `n · max / total` over per-partition sizes (Definition 6); 1.0 for
+/// an all-empty run. Shared by the owned and scratch partition paths.
+fn imbalance_of_sizes<I: Iterator<Item = usize>>(sizes: I) -> f64 {
+    let (mut total, mut max, mut n) = (0usize, 0usize, 0usize);
+    for s in sizes {
+        total += s;
+        max = max.max(s);
+        n += 1;
+    }
+    if total == 0 {
+        1.0
+    } else {
+        max as f64 * n as f64 / total as f64
+    }
+}
+
+/// Reusable working memory for [`HierarchicalHasher::partition_into`]:
+/// one [`PartitionShard`] per partition, each owning its h0 bucket, probe
+/// slots, serial memory, sorted output buffers, and radix-sort scratch.
+///
+/// Shards are `Send` and mutually disjoint, so phase 2 distributes
+/// contiguous shard runs across the thread pool with plain `&mut` access
+/// — no atomics, no result mutexes. After `partition_into` returns, the
+/// partitions are readable as zero-copy [`CooSlice`]s via
+/// [`part`](PartitionScratch::part) until the next call. All buffers are
+/// cleared (never shrunk) between calls: steady-state repartitioning of
+/// a stable workload performs zero heap allocations.
+#[derive(Debug, Default)]
+pub struct PartitionScratch {
+    shards: Vec<PartitionShard>,
+    dense_len: usize,
+}
+
+/// One partition's private working memory (see [`PartitionScratch`]).
+#[derive(Debug, Default)]
+pub struct PartitionShard {
+    /// Phase-1 h0 bucket: (index, value) pairs, parallel arrays.
+    bucket_idx: Vec<u32>,
+    bucket_val: Vec<f32>,
+    /// Parallel probe slots: 0 = empty, else bucket entry index + 1.
+    slots: Vec<u32>,
+    /// Serial memory: bucket entry indices + 1.
+    serial: Vec<u32>,
+    /// Extracted partition, sorted by global index.
+    out_idx: Vec<u32>,
+    out_val: Vec<f32>,
+    sort: RadixScratch,
+    serial_writes: usize,
+    overflow_writes: usize,
+}
+
+impl PartitionScratch {
+    pub fn new() -> Self {
+        PartitionScratch::default()
+    }
+
+    /// Prepare for a run with `n` partitions and `r1` probe slots each.
+    fn reset(&mut self, n: usize, r1: usize, dense_len: usize) {
+        self.dense_len = dense_len;
+        self.shards.resize_with(n, PartitionShard::default);
+        for shard in self.shards.iter_mut() {
+            shard.bucket_idx.clear();
+            shard.bucket_val.clear();
+            shard.slots.clear();
+            shard.slots.resize(r1, 0);
+            shard.serial.clear();
+            shard.out_idx.clear();
+            shard.out_val.clear();
+            shard.serial_writes = 0;
+            shard.overflow_writes = 0;
         }
-        let max = self.parts.iter().map(|p| p.nnz()).max().unwrap_or(0);
-        max as f64 * self.parts.len() as f64 / total as f64
+    }
+
+    /// Number of partitions produced by the last `partition_into`.
+    pub fn num_parts(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Partition `p` of the last run, as a zero-copy view (sorted global
+    /// indices over the input's dense length).
+    pub fn part(&self, p: usize) -> CooSlice<'_> {
+        let shard = &self.shards[p];
+        CooSlice::new(self.dense_len, &shard.out_idx, &shard.out_val)
+    }
+
+    /// Indices that needed the serial memory across all partitions.
+    pub fn serial_writes(&self) -> usize {
+        self.shards.iter().map(|s| s.serial_writes).sum()
+    }
+
+    /// Indices that overflowed even the `r2` serial budget.
+    pub fn overflow_writes(&self) -> usize {
+        self.shards.iter().map(|s| s.overflow_writes).sum()
+    }
+
+    /// Imbalance ratio of Push for this run (Definition 6), matching
+    /// [`PartitionOutput::push_imbalance`].
+    pub fn push_imbalance(&self) -> f64 {
+        imbalance_of_sizes(self.shards.iter().map(|s| s.out_idx.len()))
     }
 }
 
@@ -99,45 +195,76 @@ impl HierarchicalHasher {
     /// Run Algorithm 1 on a sparse tensor. Returns per-partition sparse
     /// tensors over the global index space (sorted, lossless).
     ///
+    /// Allocating convenience wrapper over [`partition_into`]; tests,
+    /// figures, and one-shot callers use this, the sync hot path passes
+    /// a reused [`PartitionScratch`] instead.
+    ///
+    /// [`partition_into`]: HierarchicalHasher::partition_into
+    pub fn partition(&self, t: &CooTensor) -> PartitionOutput {
+        let mut scratch = PartitionScratch::new();
+        self.partition_into(t, &mut scratch);
+        let serial_writes = scratch.serial_writes();
+        let overflow_writes = scratch.overflow_writes();
+        let parts = scratch
+            .shards
+            .drain(..)
+            .map(|mut s| {
+                CooTensor::from_sorted(
+                    t.dense_len,
+                    std::mem::take(&mut s.out_idx),
+                    std::mem::take(&mut s.out_val),
+                )
+            })
+            .collect();
+        PartitionOutput {
+            parts,
+            serial_writes,
+            overflow_writes,
+        }
+    }
+
+    /// Run Algorithm 1 into a reused [`PartitionScratch`] —
+    /// allocation-free at steady state (every buffer is `clear()`ed and
+    /// refilled; capacities persist across calls).
+    ///
     /// CPU shaping (perf pass, EXPERIMENTS.md §Perf): the paper's GPU
     /// kernel probes a global `n × (r1+r2)` memory with atomics from all
     /// threads. On CPU that meant every probe missed cache in a
-    /// multi-megabyte array. We instead (1) bucket index positions by
-    /// `h0` partition in one sequential pass, then (2) probe each
+    /// multi-megabyte array. We instead (1) bucket (index, value) pairs
+    /// by `h0` partition in one sequential pass, then (2) probe each
     /// partition's *private* `r1` region — which fits L2 — with plain
-    /// stores, parallelizing over partitions instead of indices. Same
-    /// mapping, same guarantees (partition assignment depends only on
-    /// h0; probe order within a partition is irrelevant), ~2× faster
-    /// single-core and contention-free multi-core.
-    pub fn partition(&self, t: &CooTensor) -> PartitionOutput {
-        let nnz = t.nnz();
+    /// stores, parallelizing over partition shards instead of indices.
+    /// Same mapping, same guarantees (partition assignment depends only
+    /// on h0; probe order within a partition is irrelevant). Each worker
+    /// thread owns a disjoint contiguous run of shards
+    /// ([`ThreadPool::scoped_chunks`]), so phase 2 needs no atomics and
+    /// no locks, and the per-shard serial/overflow tallies are merged
+    /// after the join.
+    pub fn partition_into(&self, t: &CooTensor, scratch: &mut PartitionScratch) {
+        scratch.reset(self.n, self.r1, t.dense_len);
+
         // Phase 1: bucket (index, value) pairs by partition (the h0
         // pass). Carrying the value keeps phase 2 entirely inside the
-        // L2-sized bucket — no random loads from the big tensor arrays.
-        let mut buckets: Vec<Vec<(u32, f32)>> = (0..self.n)
-            .map(|_| Vec::with_capacity(nnz / self.n + 16))
-            .collect();
+        // L2-sized shard — no random loads from the big tensor arrays.
+        let h0 = self.family.partitioner(self.n);
         for (&idx, &val) in t.indices.iter().zip(t.values.iter()) {
-            buckets[self.family.partition(idx, self.n)].push((idx, val));
+            let shard = &mut scratch.shards[h0.partition(idx)];
+            shard.bucket_idx.push(idx);
+            shard.bucket_val.push(val);
         }
 
-        // Phase 2: per-partition probing; partitions are independent.
-        let serial_count = AtomicUsize::new(0);
-        let overflow_count = AtomicUsize::new(0);
-        let results: Vec<std::sync::Mutex<Option<CooTensor>>> =
-            (0..self.n).map(|_| std::sync::Mutex::new(None)).collect();
-        let process = |p: usize| {
-            let bucket = &buckets[p];
+        // Phase 2: per-shard probing; shards are independent.
+        let (k, r1, r2) = (self.k, self.r1, self.r2);
+        let family = &self.family;
+        let process = |shard: &mut PartitionShard| {
             // Slot value: 0 = empty, else (bucket entry index) + 1 —
             // O(1) entry lookup at extraction, supports idx = 0.
-            let mut slots = vec![0u32; self.r1];
-            let mut serial: Vec<u32> = Vec::new();
-            for (e, &(idx, _)) in bucket.iter().enumerate() {
+            for (e, &idx) in shard.bucket_idx.iter().enumerate() {
                 let mut placed = false;
-                for round in 1..=self.k {
-                    let q = self.family.slot(round, idx, self.r1);
-                    if slots[q] == 0 {
-                        slots[q] = e as u32 + 1;
+                for round in 1..=k {
+                    let q = family.slot(round, idx, r1);
+                    if shard.slots[q] == 0 {
+                        shard.slots[q] = e as u32 + 1;
                         placed = true;
                         break;
                     }
@@ -145,49 +272,40 @@ impl HierarchicalHasher {
                 if !placed {
                     // Serial memory (lines 8–11); overflow beyond r2 is
                     // kept too — structural losslessness.
-                    serial.push(e as u32 + 1);
+                    shard.serial.push(e as u32 + 1);
                 }
             }
-            serial_count.fetch_add(serial.len(), Ordering::Relaxed);
-            overflow_count.fetch_add(serial.len().saturating_sub(self.r2), Ordering::Relaxed);
+            shard.serial_writes = shard.serial.len();
+            shard.overflow_writes = shard.serial.len().saturating_sub(r2);
 
             // Extraction (lines 19–23).
-            let mut idxs: Vec<u32> = Vec::with_capacity(bucket.len());
-            let mut vals: Vec<f32> = Vec::with_capacity(bucket.len());
-            for &v in slots.iter().chain(serial.iter()) {
+            for &v in shard.slots.iter().chain(shard.serial.iter()) {
                 if v != 0 {
-                    let (idx, val) = bucket[(v - 1) as usize];
-                    idxs.push(idx);
-                    vals.push(val);
+                    let e = (v - 1) as usize;
+                    shard.out_idx.push(shard.bucket_idx[e]);
+                    shard.out_val.push(shard.bucket_val[e]);
                 }
             }
             // Sort by global index so downstream merges are linear (the
             // paper notes order is irrelevant for aggregation; we keep
             // the COO invariant). Radix beats comparison sort here.
-            crate::util::radix::radix_sort_pairs(&mut idxs, &mut vals);
-            *results[p].lock().unwrap() =
-                Some(CooTensor::from_sorted(t.dense_len, idxs, vals));
+            crate::util::radix::radix_sort_pairs_with(
+                &mut shard.out_idx,
+                &mut shard.out_val,
+                &mut shard.sort,
+            );
         };
         if self.pool.workers() > 1 && self.n > 1 {
-            self.pool.for_ranges(self.n, |range| {
-                for p in range {
-                    process(p);
+            let per = crate::util::ceil_div(self.n, self.pool.workers());
+            self.pool.scoped_chunks(&mut scratch.shards, per, |_, chunk| {
+                for shard in chunk.iter_mut() {
+                    process(shard);
                 }
             });
         } else {
-            for p in 0..self.n {
-                process(p);
+            for shard in scratch.shards.iter_mut() {
+                process(shard);
             }
-        }
-        let parts: Vec<CooTensor> = results
-            .into_iter()
-            .map(|m| m.into_inner().unwrap().unwrap())
-            .collect();
-
-        PartitionOutput {
-            parts,
-            serial_writes: serial_count.load(Ordering::Relaxed),
-            overflow_writes: overflow_count.load(Ordering::Relaxed),
         }
     }
 
@@ -203,8 +321,9 @@ impl HierarchicalHasher {
     /// All partition domains in one pass (cheaper than n× partition_domain).
     pub fn partition_domains(&self, dense_len: usize) -> Vec<Vec<u32>> {
         let mut out = vec![Vec::with_capacity(dense_len / self.n + 8); self.n];
+        let h0 = self.family.partitioner(self.n);
         for idx in 0..dense_len as u32 {
-            out[self.family.partition(idx, self.n)].push(idx);
+            out[h0.partition(idx)].push(idx);
         }
         out
     }
@@ -308,6 +427,50 @@ mod tests {
         for (p, d) in domains.iter().enumerate() {
             assert_eq!(*d, h.partition_domain(1_000, p));
             assert!(d.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn scratch_path_matches_allocating_path() {
+        // One scratch reused across different tensors, hasher shapes,
+        // and partition counts must never leak state between runs.
+        let mut scratch = PartitionScratch::new();
+        for (seed, dense_len, nnz, n) in [
+            (10u64, 20_000usize, 1_500usize, 8usize),
+            (11, 500, 60, 3),
+            (12, 40_000, 3_000, 16),
+            (13, 1_000, 0, 4),
+            (14, 20_000, 1_500, 8),
+        ] {
+            let t = random_coo(seed, dense_len, nnz);
+            let h = HierarchicalHasher::with_defaults(77, n, nnz.max(16));
+            let owned = h.partition(&t);
+            h.partition_into(&t, &mut scratch);
+            assert_eq!(scratch.num_parts(), n);
+            assert_eq!(scratch.serial_writes(), owned.serial_writes);
+            assert_eq!(scratch.overflow_writes(), owned.overflow_writes);
+            assert!((scratch.push_imbalance() - owned.push_imbalance()).abs() < 1e-12);
+            for p in 0..n {
+                let view = scratch.part(p);
+                assert_eq!(view.indices, &owned.parts[p].indices[..]);
+                assert_eq!(view.values, &owned.parts[p].values[..]);
+                assert_eq!(view.dense_len, dense_len);
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_lossless_under_memory_pressure() {
+        let mut scratch = PartitionScratch::new();
+        let h = HierarchicalHasher::new(7, 4, 2, 16, 4);
+        for seed in 0..4u64 {
+            let t = random_coo(seed + 20, 5_000, 1_000);
+            h.partition_into(&t, &mut scratch);
+            let parts: Vec<CooTensor> = (0..4).map(|p| scratch.part(p).to_tensor()).collect();
+            let merged = CooTensor::merge_all(&parts);
+            assert_eq!(merged, t, "seed {seed}");
+            assert!(scratch.serial_writes() > 0);
+            assert!(scratch.overflow_writes() > 0);
         }
     }
 

@@ -14,7 +14,7 @@ pub mod hierarchical;
 pub mod murmur;
 pub mod strawman;
 
-pub use hashbitmap::HashBitmapCodec;
-pub use hierarchical::{HierarchicalHasher, PartitionOutput};
-pub use murmur::{murmur3_32, HashFamily};
+pub use hashbitmap::{HashBitmapCodec, HashBitmapPayload};
+pub use hierarchical::{HierarchicalHasher, PartitionOutput, PartitionScratch};
+pub use murmur::{murmur3_32, HashFamily, Partitioner};
 pub use strawman::{StrawmanHasher, ThresholdPartitioner};

@@ -85,11 +85,38 @@ impl HashFamily {
         Self::reduce(self.hash(0, idx), n)
     }
 
+    /// A value-captured `h0` partitioner for per-index hot loops
+    /// (Algorithm 1 phase 1, domain construction): holds the seed and
+    /// `n` by value so the inner loop carries no `seeds[0]` slice load /
+    /// bounds check per element.
+    #[inline]
+    pub fn partitioner(&self, n: usize) -> Partitioner {
+        Partitioner {
+            seed: self.seeds[0],
+            n,
+        }
+    }
+
     /// `h_i` for i ≥ 1: slot probe in [0, r).
     #[inline]
     pub fn slot(&self, round: usize, idx: u32, r: usize) -> usize {
         debug_assert!(round >= 1 && round < self.seeds.len());
         Self::reduce(self.hash(round, idx), r)
+    }
+}
+
+/// Standalone `h0` evaluator produced by [`HashFamily::partitioner`] —
+/// agrees bit-for-bit with [`HashFamily::partition`].
+#[derive(Clone, Copy, Debug)]
+pub struct Partitioner {
+    seed: u32,
+    n: usize,
+}
+
+impl Partitioner {
+    #[inline]
+    pub fn partition(&self, idx: u32) -> usize {
+        HashFamily::reduce(murmur3_32(idx, self.seed), self.n)
     }
 }
 
@@ -149,6 +176,17 @@ mod tests {
         for &c in &counts {
             let dev = (c as f64 - expect).abs() / expect;
             assert!(dev < 0.04, "partition deviation {dev}");
+        }
+    }
+
+    #[test]
+    fn partitioner_agrees_with_family() {
+        let f = HashFamily::new(17, 4);
+        for n in [1usize, 2, 7, 16] {
+            let p = f.partitioner(n);
+            for idx in (0..50_000u32).step_by(97) {
+                assert_eq!(p.partition(idx), f.partition(idx, n));
+            }
         }
     }
 

@@ -56,7 +56,12 @@ impl SyncScheme for AgSparse {
         }
     }
 
-    fn sync(&self, inputs: &[CooTensor], net: &Network) -> SyncResult {
+    fn sync_with(
+        &self,
+        inputs: &[CooTensor],
+        net: &Network,
+        _scratch: &mut SyncScratch,
+    ) -> SyncResult {
         let n = inputs.len();
         assert_eq!(n, net.endpoints);
         let bytes: Vec<u64> = inputs

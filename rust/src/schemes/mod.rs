@@ -27,6 +27,7 @@ pub use strawman_scheme::StrawmanScheme;
 pub use zen::{Zen, ZenIndexFormat};
 
 use crate::cluster::{CommReport, Network};
+use crate::hashing::{HashBitmapPayload, PartitionScratch};
 use crate::tensor::CooTensor;
 
 /// Table 2 dimension values.
@@ -74,6 +75,33 @@ pub struct SyncResult {
     pub report: CommReport,
 }
 
+/// Reusable working memory for one in-flight `sync_with` call — the
+/// scheme-level scratch arena (see [`crate::util::arena`]).
+///
+/// One `SyncScratch` serves one concurrent synchronization at a time;
+/// the engine checks one out per in-flight bucket from a
+/// [`crate::util::ScratchPool`] so concurrent bucket syncs never
+/// contend. Schemes use the fields they need (Zen uses all of them;
+/// byte-accounting schemes ignore it) and must leave the scratch in a
+/// reusable state — every buffer is cleared by its consumer on the next
+/// call, so no cross-call cleanup is required.
+#[derive(Default)]
+pub struct SyncScratch {
+    /// Algorithm-1 scratch, one per worker input (grown on demand).
+    pub partitions: Vec<PartitionScratch>,
+    /// Hash-bitmap pull payload, reused across servers.
+    pub payload: HashBitmapPayload,
+    /// Hash-bitmap decode output buffers.
+    pub decode_indices: Vec<u32>,
+    pub decode_values: Vec<f32>,
+}
+
+impl SyncScratch {
+    pub fn new() -> Self {
+        SyncScratch::default()
+    }
+}
+
 /// A communication scheme for synchronizing sparse gradient tensors.
 pub trait SyncScheme: Send + Sync {
     fn name(&self) -> &'static str;
@@ -83,7 +111,23 @@ pub trait SyncScheme: Send + Sync {
 
     /// Synchronize: every endpoint contributes one sparse tensor over the
     /// same dense range; every endpoint ends with the full aggregation.
-    fn sync(&self, inputs: &[CooTensor], net: &Network) -> SyncResult;
+    ///
+    /// Convenience entry point with throwaway scratch; hot loops call
+    /// [`sync_with`](SyncScheme::sync_with) with a reused
+    /// [`SyncScratch`] instead.
+    fn sync(&self, inputs: &[CooTensor], net: &Network) -> SyncResult {
+        self.sync_with(inputs, net, &mut SyncScratch::new())
+    }
+
+    /// Synchronize using caller-provided scratch memory. Implementations
+    /// must be oblivious to the scratch's previous contents, and callers
+    /// must not share one scratch across concurrent `sync_with` calls.
+    fn sync_with(
+        &self,
+        inputs: &[CooTensor],
+        net: &Network,
+        scratch: &mut SyncScratch,
+    ) -> SyncResult;
 }
 
 /// Reference aggregation: dense element-wise sum of all inputs.

@@ -34,7 +34,12 @@ impl SyncScheme for SparsePs {
         }
     }
 
-    fn sync(&self, inputs: &[CooTensor], net: &Network) -> SyncResult {
+    fn sync_with(
+        &self,
+        inputs: &[CooTensor],
+        net: &Network,
+        _scratch: &mut SyncScratch,
+    ) -> SyncResult {
         let n = inputs.len();
         assert_eq!(n, net.endpoints);
         let dense_len = inputs[0].dense_len;

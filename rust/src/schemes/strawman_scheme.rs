@@ -48,7 +48,12 @@ impl SyncScheme for StrawmanScheme {
         }
     }
 
-    fn sync(&self, inputs: &[CooTensor], net: &Network) -> SyncResult {
+    fn sync_with(
+        &self,
+        inputs: &[CooTensor],
+        net: &Network,
+        _scratch: &mut SyncScratch,
+    ) -> SyncResult {
         let n = inputs.len();
         assert_eq!(n, net.endpoints);
         assert_eq!(self.hasher.n, n);

@@ -13,12 +13,13 @@
 //! FP32-equivalents. The COO-Pull variant exists for the Fig 18 ablation,
 //! and a naive positional bitmap variant for Fig 17's comparison.
 
-use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::*;
 use crate::hashing::{HashBitmapCodec, HierarchicalHasher};
-use crate::tensor::WireFormat;
+use crate::tensor::{CooSlice, WireFormat};
+use crate::util::OnceMap;
 
 /// Which index representation Pull uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -32,13 +33,31 @@ pub enum ZenIndexFormat {
     NaiveBitmap,
 }
 
+/// Capacity of the lock-free tier of the per-scheme domain cache:
+/// distinct `dense_len`s one Zen instance is asked to sync. The engine
+/// produces one dense length per bucket; 64 covers every workload in
+/// the repo with headroom. Keys beyond capacity are still cached in a
+/// mutex-guarded overflow tier — never recomputed per sync.
+const DOMAIN_CACHE_CAPACITY: usize = 64;
+
 /// The Zen synchronization scheme.
 pub struct Zen {
     hasher: HierarchicalHasher,
     format: ZenIndexFormat,
     /// Partition domains keyed by dense_len (computed offline per h0,
-    /// exactly as the paper prescribes for Algorithm 2).
-    domains: Mutex<HashMap<usize, Arc<Vec<Vec<u32>>>>>,
+    /// exactly as the paper prescribes for Algorithm 2). A lock-free
+    /// insert-once snapshot table: readers pay a few atomic loads and an
+    /// `Arc` clone — the `Mutex<HashMap>` this replaces serialized every
+    /// concurrent bucket sync on one lock (perf pass, ISSUE 2).
+    domains: OnceMap<Arc<Vec<Vec<u32>>>>,
+    /// Overflow tier once the fixed table fills (> 64 distinct
+    /// dense_lens, e.g. a bucket plan with many buckets): still cached —
+    /// never recomputed per sync — but behind a lock, matching the old
+    /// `Mutex<HashMap>` cost only for these rare extra keys.
+    domains_overflow: Mutex<Vec<(usize, Arc<Vec<Vec<u32>>>)>>,
+    /// How many times partition domains were actually computed — the
+    /// exactly-once-per-(dense_len, seed) regression hook.
+    domain_computes: AtomicUsize,
     /// Charge the measured hashing wall time into the report.
     pub charge_compute: bool,
 }
@@ -47,12 +66,10 @@ impl Zen {
     /// `n`: number of partitions (= machines). Paper defaults (§4.2):
     /// k = 3, r1 = 2·E[nnz], r2 = r1/10.
     pub fn new(master_seed: u64, n: usize, expected_nnz: usize, format: ZenIndexFormat) -> Self {
-        Zen {
-            hasher: HierarchicalHasher::with_defaults(master_seed, n, expected_nnz),
+        Self::with_hasher(
+            HierarchicalHasher::with_defaults(master_seed, n, expected_nnz),
             format,
-            domains: Mutex::new(HashMap::new()),
-            charge_compute: true,
-        }
+        )
     }
 
     /// Build from an explicit hasher (parameter studies).
@@ -60,7 +77,9 @@ impl Zen {
         Zen {
             hasher,
             format,
-            domains: Mutex::new(HashMap::new()),
+            domains: OnceMap::with_capacity(DOMAIN_CACHE_CAPACITY),
+            domains_overflow: Mutex::new(Vec::new()),
+            domain_computes: AtomicUsize::new(0),
             charge_compute: true,
         }
     }
@@ -69,12 +88,32 @@ impl Zen {
         &self.hasher
     }
 
+    /// Number of times this instance computed partition domains from
+    /// scratch. With the snapshot cache this equals the number of
+    /// distinct `dense_len`s synced (the hash seed is fixed per
+    /// instance), regardless of sync count or concurrency.
+    pub fn domain_compute_count(&self) -> usize {
+        self.domain_computes.load(Ordering::Relaxed)
+    }
+
     fn domains_for(&self, dense_len: usize) -> Arc<Vec<Vec<u32>>> {
-        let mut cache = self.domains.lock().unwrap();
-        cache
-            .entry(dense_len)
-            .or_insert_with(|| Arc::new(self.hasher.partition_domains(dense_len)))
-            .clone()
+        if let Some(d) = self.domains.get_or_init(dense_len, || {
+            self.domain_computes.fetch_add(1, Ordering::Relaxed);
+            Arc::new(self.hasher.partition_domains(dense_len))
+        }) {
+            return d.clone();
+        }
+        // Fast table full of other dense_lens: the overflow tier still
+        // caches (compute under the lock, after a re-check, so
+        // exactly-once holds here too).
+        let mut overflow = self.domains_overflow.lock().unwrap();
+        if let Some((_, d)) = overflow.iter().find(|(k, _)| *k == dense_len) {
+            return d.clone();
+        }
+        self.domain_computes.fetch_add(1, Ordering::Relaxed);
+        let d = Arc::new(self.hasher.partition_domains(dense_len));
+        overflow.push((dense_len, d.clone()));
+        d
     }
 }
 
@@ -101,29 +140,41 @@ impl SyncScheme for Zen {
         }
     }
 
-    fn sync(&self, inputs: &[CooTensor], net: &Network) -> SyncResult {
+    fn sync_with(
+        &self,
+        inputs: &[CooTensor],
+        net: &Network,
+        scratch: &mut SyncScratch,
+    ) -> SyncResult {
         let n = inputs.len();
         assert_eq!(n, net.endpoints);
         assert_eq!(self.hasher.n, n, "Zen hasher partitions must equal endpoints");
         let dense_len = inputs[0].dense_len;
 
-        // --- Push: hash-partition on every worker (Alg 1), send COO. ---
+        // --- Push: hash-partition on every worker (Alg 1) into reused
+        // per-worker scratch. Partitions stay as zero-copy views until
+        // aggregation — the partition→encode→decode leg is
+        // allocation-free; the aggregation step below still materializes
+        // the n owned server aggregates (they become the sync outputs).
         let sw = crate::util::Stopwatch::start();
-        let partitioned: Vec<crate::hashing::PartitionOutput> =
-            inputs.iter().map(|t| self.hasher.partition(t)).collect();
+        if scratch.partitions.len() < n {
+            scratch
+                .partitions
+                .resize_with(n, crate::hashing::PartitionScratch::new);
+        }
+        for (t, ps) in inputs.iter().zip(scratch.partitions.iter_mut()) {
+            self.hasher.partition_into(t, ps);
+        }
         // Workers hash in parallel in the real system; charge the max.
         let hash_time = sw.elapsed() / n as f64;
 
+        let partitions = &scratch.partitions[..n];
         let mut push = vec![vec![0u64; n]; n];
-        let mut shards: Vec<Vec<CooTensor>> = vec![Vec::with_capacity(n); n];
-        // Move partitions into the server shards (cloning them doubled
-        // the per-sync allocation traffic — perf pass §L3).
-        for (w, out) in partitioned.into_iter().enumerate() {
-            for (p, part) in out.parts.into_iter().enumerate() {
+        for (w, ps) in partitions.iter().enumerate() {
+            for (p, row_cell) in push[w].iter_mut().enumerate() {
                 if w != p {
-                    push[w][p] = part.wire_bytes() as u64;
+                    *row_cell = ps.part(p).wire_bytes() as u64;
                 }
-                shards[p].push(part);
             }
         }
         let mut report = CommReport::new();
@@ -132,10 +183,15 @@ impl SyncScheme for Zen {
         }
         report.push(net.stage_from_matrix("push", &push));
 
-        // --- One-shot aggregation at each server. ---
-        let aggregated: Vec<CooTensor> = shards
-            .iter()
-            .map(|parts| CooTensor::merge_all(parts))
+        // --- One-shot aggregation at each server: server p merges every
+        // worker's partition-p view straight out of the scratch.
+        let mut views: Vec<CooSlice<'_>> = Vec::with_capacity(n);
+        let aggregated: Vec<CooTensor> = (0..n)
+            .map(|p| {
+                views.clear();
+                views.extend(partitions.iter().map(|ps| ps.part(p)));
+                CooTensor::merge_all_slices(&views)
+            })
             .collect();
 
         // --- Pull: broadcast each server's aggregate. ---
@@ -144,19 +200,32 @@ impl SyncScheme for Zen {
             ZenIndexFormat::HashBitmap => {
                 let domains = self.domains_for(dense_len);
                 let sw = crate::util::Stopwatch::start();
+                let payload = &mut scratch.payload;
                 let bytes: Vec<u64> = aggregated
                     .iter()
                     .enumerate()
                     .map(|(p, t)| {
                         let codec = HashBitmapCodec::new(&domains[p]);
-                        let payload = codec.encode(t);
-                        // decode on a worker to validate the codec path
-                        debug_assert_eq!(&codec.decode(&payload, dense_len), t);
+                        codec.encode_into(t.as_slice(), payload);
                         payload.wire_bytes() as u64
                     })
                     .collect();
                 if self.charge_compute {
                     report.compute_overhead += sw.elapsed() / n as f64;
+                }
+                // Decode on a worker to validate the codec path (debug
+                // builds only; outside the timed region).
+                #[cfg(debug_assertions)]
+                for (p, t) in aggregated.iter().enumerate() {
+                    let codec = HashBitmapCodec::new(&domains[p]);
+                    codec.encode_into(t.as_slice(), payload);
+                    codec.decode_into(
+                        payload,
+                        &mut scratch.decode_indices,
+                        &mut scratch.decode_values,
+                    );
+                    debug_assert_eq!(scratch.decode_indices, t.indices);
+                    debug_assert_eq!(scratch.decode_values, t.values);
                 }
                 bytes
             }
@@ -289,6 +358,78 @@ mod tests {
             let bitmap_part = (n - 1) as u64 * (dense_len as u64 / 8);
             assert!(per_worker >= bitmap_part);
         }
+    }
+
+    #[test]
+    fn domains_computed_exactly_once_per_dense_len() {
+        // Regression for the Mutex<HashMap> → OnceMap swap: repeated
+        // syncs at one (dense_len, seed) must compute domains once, a
+        // second dense_len exactly one more time, and reusing scratch
+        // across syncs must not change the answer.
+        let zen = Zen::new(7, 4, 200, ZenIndexFormat::HashBitmap);
+        let net = Network::new(4, LinkKind::Tcp25);
+        let inputs_a = overlapping_inputs(1, 4, 4096, 120, 60);
+        let inputs_b = overlapping_inputs(2, 4, 8192, 100, 50);
+        assert_eq!(zen.domain_compute_count(), 0);
+        let mut scratch = SyncScratch::new();
+        for _ in 0..5 {
+            let r = zen.sync_with(&inputs_a, &net, &mut scratch);
+            verify_outputs(&r, &inputs_a);
+        }
+        assert_eq!(zen.domain_compute_count(), 1, "one compute per dense_len");
+        for _ in 0..3 {
+            zen.sync_with(&inputs_b, &net, &mut scratch);
+        }
+        assert_eq!(zen.domain_compute_count(), 2);
+        zen.sync_with(&inputs_a, &net, &mut scratch);
+        assert_eq!(zen.domain_compute_count(), 2, "cache hit on revisit");
+    }
+
+    #[test]
+    fn domains_still_cached_beyond_fast_table_capacity() {
+        // More distinct dense_lens than the lock-free table holds: the
+        // overflow tier must keep caching (exactly one compute per
+        // dense_len across repeated rounds), not regress to
+        // recompute-per-sync.
+        let n = 2;
+        let zen = Zen::new(5, n, 16, ZenIndexFormat::HashBitmap);
+        let net = Network::new(n, LinkKind::Tcp25);
+        let distinct = 70; // > DOMAIN_CACHE_CAPACITY
+        for round in 0..2 {
+            for i in 0..distinct {
+                let dense_len = 64 + i * 8;
+                let inputs: Vec<CooTensor> = (0..n)
+                    .map(|w| {
+                        let idx = vec![w as u32, 32 + w as u32];
+                        CooTensor::from_sorted(dense_len, idx, vec![1.0, 2.0])
+                    })
+                    .collect();
+                zen.sync(&inputs, &net);
+            }
+            assert_eq!(
+                zen.domain_compute_count(),
+                distinct,
+                "round {round}: one compute per distinct dense_len"
+            );
+        }
+    }
+
+    #[test]
+    fn domains_computed_exactly_once_under_concurrent_syncs() {
+        // Eight threads race the first sync of one dense_len; the
+        // OnceMap must run the domain computation exactly once.
+        let zen = Zen::new(13, 4, 150, ZenIndexFormat::HashBitmap);
+        let net = Network::new(4, LinkKind::Tcp25);
+        let inputs = overlapping_inputs(3, 4, 4096, 80, 40);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    let r = zen.sync(&inputs, &net);
+                    verify_outputs(&r, &inputs);
+                });
+            }
+        });
+        assert_eq!(zen.domain_compute_count(), 1);
     }
 
     #[test]

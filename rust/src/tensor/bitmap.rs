@@ -31,6 +31,42 @@ impl Bitmap {
         b
     }
 
+    /// Build from little-endian u64 word storage (the wire layout used
+    /// by [`crate::wire::codec`]). `bytes` must hold exactly
+    /// `ceil(len.max(1)/64)` words; bits beyond `len` are masked off, so
+    /// a forged frame cannot smuggle out-of-range positions in.
+    pub fn from_le_bytes(len: usize, bytes: &[u8]) -> Self {
+        let n = crate::util::ceil_div(len.max(1), 64);
+        assert_eq!(bytes.len(), n * 8, "word count must match bit length");
+        let mut words: Vec<u64> = bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        if len == 0 {
+            words[0] = 0;
+        } else if len % 64 != 0 {
+            words[n - 1] &= (1u64 << (len % 64)) - 1;
+        }
+        Bitmap { words, len }
+    }
+
+    /// Reinitialize in place to an all-zero bitmap of `len` bits,
+    /// reusing the word buffer (allocation-free once the buffer has
+    /// grown to the steady-state length).
+    pub fn reset(&mut self, len: usize) {
+        let n = crate::util::ceil_div(len.max(1), 64);
+        self.words.clear();
+        self.words.resize(n, 0);
+        self.len = len;
+    }
+
+    /// The u64 word storage (little-endian bit order within words) —
+    /// lets the wire codec bulk-copy the bitmap without re-deriving
+    /// words from `ones()`.
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
     pub fn len(&self) -> usize {
         self.len
     }
@@ -59,15 +95,23 @@ impl Bitmap {
     /// Positions of set bits, ascending (word-level scan, not bit loop).
     pub fn ones(&self) -> Vec<u32> {
         let mut out = Vec::with_capacity(self.count_ones());
+        self.for_each_one(|i| out.push(i as u32));
+        out
+    }
+
+    /// Visit the set bit positions in ascending order without
+    /// materializing them — the allocation-free sibling of `ones()`,
+    /// used by the hash-bitmap decode hot path.
+    #[inline]
+    pub fn for_each_one<F: FnMut(usize)>(&self, mut f: F) {
         for (wi, &w) in self.words.iter().enumerate() {
             let mut w = w;
             while w != 0 {
-                let b = w.trailing_zeros();
-                out.push((wi * 64) as u32 + b);
+                let b = w.trailing_zeros() as usize;
+                f(wi * 64 + b);
                 w &= w - 1;
             }
         }
-        out
     }
 
     /// Bitwise OR (set union) with another bitmap of equal length.
@@ -86,6 +130,15 @@ impl Bitmap {
             .zip(other.words.iter())
             .map(|(a, b)| (a & b).count_ones() as usize)
             .sum()
+    }
+}
+
+impl Default for Bitmap {
+    /// An empty bitmap laid out identically to `Bitmap::zeros(0)` (one
+    /// zero word), so default-constructed scratch payloads compare equal
+    /// to constructed ones.
+    fn default() -> Self {
+        Bitmap::zeros(0)
     }
 }
 
@@ -137,6 +190,47 @@ mod tests {
         assert_eq!(Bitmap::zeros(15).wire_bytes(), 2);
         assert_eq!(Bitmap::zeros(16).wire_bytes(), 2);
         assert_eq!(Bitmap::zeros(17).wire_bytes(), 3);
+    }
+
+    #[test]
+    fn reset_reuses_and_clears() {
+        let mut b = Bitmap::from_ones(100, &[1, 64, 99]);
+        b.reset(130);
+        assert_eq!(b.len(), 130);
+        assert_eq!(b.count_ones(), 0, "reset must clear stale bits");
+        b.set(129);
+        assert_eq!(b.ones(), vec![129]);
+        b.reset(5);
+        assert_eq!(b, Bitmap::zeros(5));
+    }
+
+    #[test]
+    fn le_bytes_words_roundtrip() {
+        for len in [0usize, 1, 63, 64, 65, 130, 500] {
+            let ones: Vec<u32> = (0..len as u32).filter(|i| i % 7 == 3).collect();
+            let b = Bitmap::from_ones(len, &ones);
+            let bytes: Vec<u8> = b.words().iter().flat_map(|w| w.to_le_bytes()).collect();
+            let back = Bitmap::from_le_bytes(len, &bytes);
+            assert_eq!(back, b, "len {len}");
+        }
+    }
+
+    #[test]
+    fn le_bytes_masks_out_of_range_bits() {
+        // All-ones words with len = 10: bits 10..64 must be dropped.
+        let bytes = [0xFFu8; 8];
+        let b = Bitmap::from_le_bytes(10, &bytes);
+        assert_eq!(b.count_ones(), 10);
+        let z = Bitmap::from_le_bytes(0, &bytes);
+        assert_eq!(z.count_ones(), 0);
+    }
+
+    #[test]
+    fn for_each_one_matches_ones() {
+        let b = Bitmap::from_ones(200, &[5, 64, 3, 199]);
+        let mut seen = Vec::new();
+        b.for_each_one(|i| seen.push(i as u32));
+        assert_eq!(seen, b.ones());
     }
 
     #[test]

@@ -17,6 +17,48 @@ pub struct CooTensor {
     pub values: Vec<f32>,
 }
 
+/// A borrowed view of a COO tensor: the zero-copy currency of the
+/// scratch-arena hot path. [`PartitionScratch`] hands out its partitions
+/// as `CooSlice`s so the Zen sync loop can size wire payloads, encode
+/// hash bitmaps, and merge aggregates without materializing owned
+/// tensors per iteration.
+///
+/// [`PartitionScratch`]: crate::hashing::hierarchical::PartitionScratch
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CooSlice<'a> {
+    pub dense_len: usize,
+    /// Strictly ascending non-zero indices.
+    pub indices: &'a [u32],
+    /// Gradient values, parallel to `indices`.
+    pub values: &'a [f32],
+}
+
+impl<'a> CooSlice<'a> {
+    pub fn new(dense_len: usize, indices: &'a [u32], values: &'a [f32]) -> Self {
+        debug_assert_eq!(indices.len(), values.len());
+        debug_assert!(indices.windows(2).all(|w| w[0] < w[1]));
+        CooSlice {
+            dense_len,
+            indices,
+            values,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Same accounting as [`CooTensor`]'s [`WireFormat`] impl.
+    pub fn wire_bytes(&self) -> usize {
+        self.nnz() * (BYTES_F32 + BYTES_IDX)
+    }
+
+    /// Materialize an owned tensor (allocates; off the hot path).
+    pub fn to_tensor(self) -> CooTensor {
+        CooTensor::from_sorted(self.dense_len, self.indices.to_vec(), self.values.to_vec())
+    }
+}
+
 impl CooTensor {
     /// Build and enforce the sorted-unique invariant (sorts if needed).
     pub fn new(dense_len: usize, indices: Vec<u32>, values: Vec<f32>) -> Self {
@@ -101,35 +143,19 @@ impl CooTensor {
     /// Merge-aggregate two sorted COO tensors (gradients with the same
     /// index are summed) — the aggregation primitive of every scheme.
     pub fn merge(&self, other: &CooTensor) -> CooTensor {
-        assert_eq!(self.dense_len, other.dense_len);
-        let (mut i, mut j) = (0usize, 0usize);
         let mut indices = Vec::with_capacity(self.nnz() + other.nnz());
         let mut values = Vec::with_capacity(self.nnz() + other.nnz());
-        while i < self.nnz() && j < other.nnz() {
-            match self.indices[i].cmp(&other.indices[j]) {
-                std::cmp::Ordering::Less => {
-                    indices.push(self.indices[i]);
-                    values.push(self.values[i]);
-                    i += 1;
-                }
-                std::cmp::Ordering::Greater => {
-                    indices.push(other.indices[j]);
-                    values.push(other.values[j]);
-                    j += 1;
-                }
-                std::cmp::Ordering::Equal => {
-                    indices.push(self.indices[i]);
-                    values.push(self.values[i] + other.values[j]);
-                    i += 1;
-                    j += 1;
-                }
-            }
-        }
-        indices.extend_from_slice(&self.indices[i..]);
-        values.extend_from_slice(&self.values[i..]);
-        indices.extend_from_slice(&other.indices[j..]);
-        values.extend_from_slice(&other.values[j..]);
+        merge_into(self.as_slice(), other.as_slice(), &mut indices, &mut values);
         CooTensor::from_sorted(self.dense_len, indices, values)
+    }
+
+    /// Borrowed view of this tensor (zero-copy hot-path currency).
+    pub fn as_slice(&self) -> CooSlice<'_> {
+        CooSlice {
+            dense_len: self.dense_len,
+            indices: &self.indices,
+            values: &self.values,
+        }
     }
 
     /// Aggregate many COO tensors with a k-way balanced reduction.
@@ -138,21 +164,33 @@ impl CooTensor {
         if tensors.len() == 1 {
             return tensors[0].clone();
         }
-        // Pairwise tree reduction keeps merge inputs balanced.
-        let mut layer: Vec<CooTensor> = tensors.to_vec();
-        while layer.len() > 1 {
-            let mut next = Vec::with_capacity(crate::util::ceil_div(layer.len(), 2));
-            let mut it = layer.chunks(2);
-            for pair in &mut it {
-                if pair.len() == 2 {
-                    next.push(pair[0].merge(&pair[1]));
-                } else {
-                    next.push(pair[0].clone());
-                }
-            }
-            layer = next;
+        merge_tree(tensors.to_vec())
+    }
+
+    /// Aggregate many borrowed COO views with the same balanced tree
+    /// reduction as [`merge_all`](CooTensor::merge_all), without first
+    /// materializing owned inputs — the aggregation step of the
+    /// scratch-path Zen sync (server `p` merges every worker's
+    /// partition-`p` view straight out of the partition scratch).
+    pub fn merge_all_slices(parts: &[CooSlice<'_>]) -> CooTensor {
+        assert!(!parts.is_empty());
+        if parts.len() == 1 {
+            return parts[0].to_tensor();
         }
-        layer.pop().unwrap()
+        // First round: merge view pairs into owned tensors, then tree.
+        let mut layer: Vec<CooTensor> = Vec::with_capacity(crate::util::ceil_div(parts.len(), 2));
+        let mut it = parts.chunks(2);
+        for pair in &mut it {
+            if pair.len() == 2 {
+                let mut indices = Vec::with_capacity(pair[0].nnz() + pair[1].nnz());
+                let mut values = Vec::with_capacity(pair[0].nnz() + pair[1].nnz());
+                merge_into(pair[0], pair[1], &mut indices, &mut values);
+                layer.push(CooTensor::from_sorted(pair[0].dense_len, indices, values));
+            } else {
+                layer.push(pair[0].to_tensor());
+            }
+        }
+        merge_tree(layer)
     }
 
     /// Restrict to indices within [lo, hi), re-based to the sub-range —
@@ -187,6 +225,63 @@ impl WireFormat for CooTensor {
     fn wire_bytes(&self) -> usize {
         self.nnz() * (BYTES_F32 + BYTES_IDX)
     }
+}
+
+/// Pairwise balanced tree reduction over owned tensors — the shared
+/// tail of [`CooTensor::merge_all`] and [`CooTensor::merge_all_slices`].
+fn merge_tree(mut layer: Vec<CooTensor>) -> CooTensor {
+    assert!(!layer.is_empty());
+    while layer.len() > 1 {
+        let mut next = Vec::with_capacity(crate::util::ceil_div(layer.len(), 2));
+        let mut it = layer.chunks(2);
+        for pair in &mut it {
+            if pair.len() == 2 {
+                next.push(pair[0].merge(&pair[1]));
+            } else {
+                next.push(pair[0].clone());
+            }
+        }
+        layer = next;
+    }
+    layer.pop().unwrap()
+}
+
+/// Linear merge of two sorted COO views into caller-owned output
+/// buffers (cleared first; gradients at equal indices are summed).
+/// The borrowed-buffer primitive behind [`CooTensor::merge`] and
+/// [`CooTensor::merge_all_slices`]: with warmed buffers it performs no
+/// allocation.
+pub fn merge_into(a: CooSlice<'_>, b: CooSlice<'_>, indices: &mut Vec<u32>, values: &mut Vec<f32>) {
+    assert_eq!(a.dense_len, b.dense_len);
+    indices.clear();
+    values.clear();
+    indices.reserve(a.nnz() + b.nnz());
+    values.reserve(a.nnz() + b.nnz());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.nnz() && j < b.nnz() {
+        match a.indices[i].cmp(&b.indices[j]) {
+            std::cmp::Ordering::Less => {
+                indices.push(a.indices[i]);
+                values.push(a.values[i]);
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                indices.push(b.indices[j]);
+                values.push(b.values[j]);
+                j += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                indices.push(a.indices[i]);
+                values.push(a.values[i] + b.values[j]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    indices.extend_from_slice(&a.indices[i..]);
+    values.extend_from_slice(&a.values[i..]);
+    indices.extend_from_slice(&b.indices[j..]);
+    values.extend_from_slice(&b.values[j..]);
 }
 
 #[cfg(test)]
@@ -257,6 +352,48 @@ mod tests {
     fn wire_bytes_counts_pairs() {
         let a = t(100, &[(1, 1.0), (5, 2.0)]);
         assert_eq!(a.wire_bytes(), 2 * 8);
+    }
+
+    #[test]
+    fn merge_all_slices_matches_merge_all() {
+        let xs = vec![
+            t(16, &[(0, 1.0), (4, 2.0), (9, 1.5)]),
+            t(16, &[(4, 3.0), (15, 1.0)]),
+            t(16, &[(7, 1.0), (0, -1.0)]),
+            t(16, &[]),
+            t(16, &[(9, 0.5)]),
+        ];
+        let views: Vec<CooSlice> = xs.iter().map(|x| x.as_slice()).collect();
+        let from_views = CooTensor::merge_all_slices(&views);
+        let from_owned = CooTensor::merge_all(&xs);
+        assert_eq!(from_views.to_dense(), from_owned.to_dense());
+        // single view: plain copy-out
+        let one = CooTensor::merge_all_slices(&views[..1]);
+        assert_eq!(one, xs[0]);
+    }
+
+    #[test]
+    fn merge_into_reuses_buffers() {
+        let a = t(10, &[(1, 1.0), (3, 1.0)]);
+        let b = t(10, &[(3, 2.0), (7, 5.0)]);
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        merge_into(a.as_slice(), b.as_slice(), &mut idx, &mut val);
+        assert_eq!(idx, vec![1, 3, 7]);
+        assert_eq!(val, vec![1.0, 3.0, 5.0]);
+        // second merge into the same buffers: previous contents cleared
+        merge_into(b.as_slice(), b.as_slice(), &mut idx, &mut val);
+        assert_eq!(idx, vec![3, 7]);
+        assert_eq!(val, vec![4.0, 10.0]);
+    }
+
+    #[test]
+    fn slice_view_accounting_matches_owned() {
+        let a = t(100, &[(1, 1.0), (5, 2.0)]);
+        let v = a.as_slice();
+        assert_eq!(v.nnz(), 2);
+        assert_eq!(v.wire_bytes(), a.wire_bytes());
+        assert_eq!(v.to_tensor(), a);
     }
 
     #[test]

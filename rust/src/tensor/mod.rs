@@ -20,7 +20,7 @@ pub mod metrics;
 
 pub use bitmap::Bitmap;
 pub use block::BlockTensor;
-pub use coo::CooTensor;
+pub use coo::{merge_into, CooSlice, CooTensor};
 pub use dense::DenseTensor;
 
 /// Bytes per FP32 gradient value.

@@ -1,0 +1,243 @@
+//! Scratch-arena substrate for the allocation-free hot path.
+//!
+//! The first perf passes showed the partition→encode→decode pipeline
+//! spending more wall time in the allocator than in the algorithm: every
+//! simulated iteration rebuilt the same `Vec`s from scratch. This module
+//! supplies the two generic building blocks that fix it:
+//!
+//! - [`ScratchPool`] — a checkout pool of reusable scratch objects. A
+//!   caller [`acquire`](ScratchPool::acquire)s one per concurrent unit of
+//!   work (the engine: one per in-flight bucket sync), mutates it freely,
+//!   and the guard returns it on drop. After warm-up the pool serves
+//!   every checkout from recycled objects whose internal buffers have
+//!   already grown to steady-state capacity — zero allocations per
+//!   iteration.
+//! - [`OnceMap`] — a fixed-capacity, insert-once map with **lock-free
+//!   reads** (an `OnceLock` probe table). It replaces the
+//!   `Mutex<HashMap>` that previously guarded Zen's partition-domain
+//!   cache: domains are computed exactly once per key and every
+//!   subsequent lookup is a handful of atomic loads, so concurrent
+//!   bucket syncs never contend on a lock.
+//!
+//! Domain-specific scratch types build on these:
+//! [`crate::hashing::hierarchical::PartitionScratch`],
+//! [`crate::util::radix::RadixScratch`], and
+//! [`crate::schemes::SyncScratch`].
+
+use std::ops::{Deref, DerefMut};
+use std::sync::{Mutex, OnceLock};
+
+/// A checkout pool of reusable scratch objects.
+///
+/// `acquire()` pops a recycled object (or creates a fresh `T::default()`
+/// when the pool is dry); the returned guard hands the object back on
+/// drop. The pool never shrinks: steady-state acquire/release cycles
+/// perform no allocation beyond what `T`'s own buffers do.
+pub struct ScratchPool<T> {
+    free: Mutex<Vec<T>>,
+}
+
+impl<T: Default> ScratchPool<T> {
+    pub fn new() -> Self {
+        ScratchPool {
+            free: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Check out one scratch object; it returns to the pool when the
+    /// guard drops.
+    pub fn acquire(&self) -> ScratchGuard<'_, T> {
+        let item = self.free.lock().unwrap().pop().unwrap_or_default();
+        ScratchGuard {
+            pool: self,
+            item: Some(item),
+        }
+    }
+
+    /// Number of idle objects currently parked in the pool.
+    pub fn idle(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+impl<T: Default> Default for ScratchPool<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// RAII checkout handle for a [`ScratchPool`] object.
+pub struct ScratchGuard<'a, T: Default> {
+    pool: &'a ScratchPool<T>,
+    item: Option<T>,
+}
+
+impl<T: Default> Deref for ScratchGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.item.as_ref().expect("scratch present until drop")
+    }
+}
+
+impl<T: Default> DerefMut for ScratchGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.item.as_mut().expect("scratch present until drop")
+    }
+}
+
+impl<T: Default> Drop for ScratchGuard<'_, T> {
+    fn drop(&mut self) {
+        if let Some(item) = self.item.take() {
+            self.pool.free.lock().unwrap().push(item);
+        }
+    }
+}
+
+/// A fixed-capacity insert-once map from `usize` keys to values, with
+/// lock-free reads.
+///
+/// Implementation: an open-addressed probe table of
+/// `OnceLock<(key, value)>` slots. A hit is a few atomic loads; a miss
+/// runs the init closure under the slot's one-time initialization (so a
+/// value is computed **exactly once per key**, even under racing
+/// readers — `OnceLock` blocks the losers until the winner's value is
+/// ready, and a loser's closure is never run). Entries are immutable and
+/// never evicted; `get_or_init` returns `None` only when the table is
+/// full of other keys, in which case the caller falls back to its own
+/// slow path (e.g. Zen keeps a mutex-guarded overflow tier).
+pub struct OnceMap<V> {
+    slots: Box<[OnceLock<(usize, V)>]>,
+}
+
+impl<V> OnceMap<V> {
+    /// A table with room for `capacity` distinct keys (min 1).
+    pub fn with_capacity(capacity: usize) -> Self {
+        OnceMap {
+            slots: (0..capacity.max(1)).map(|_| OnceLock::new()).collect(),
+        }
+    }
+
+    /// Look up `key`, initializing it with `init` on first touch.
+    /// Returns `None` iff the table is full of other keys.
+    pub fn get_or_init<F: FnOnce() -> V>(&self, key: usize, init: F) -> Option<&V> {
+        let cap = self.slots.len();
+        // Fibonacci-hash start slot; linear probe from there.
+        let start = (key.wrapping_mul(0x9e37_79b9_7f4a_7c15) >> 7) % cap;
+        let mut init = Some(init);
+        for i in 0..cap {
+            let slot = &self.slots[(start + i) % cap];
+            let entry = slot.get_or_init(|| {
+                let f = init.take().expect("init consumed only when run");
+                (key, f())
+            });
+            if entry.0 == key {
+                return Some(&entry.1);
+            }
+        }
+        None
+    }
+
+    /// Lock-free read-only lookup.
+    pub fn get(&self, key: usize) -> Option<&V> {
+        let cap = self.slots.len();
+        let start = (key.wrapping_mul(0x9e37_79b9_7f4a_7c15) >> 7) % cap;
+        for i in 0..cap {
+            match self.slots[(start + i) % cap].get() {
+                Some((k, v)) if *k == key => return Some(v),
+                Some(_) => continue,
+                None => return None,
+            }
+        }
+        None
+    }
+
+    /// Number of occupied slots.
+    pub fn len(&self) -> usize {
+        self.slots.iter().filter(|s| s.get().is_some()).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_recycles_objects() {
+        let pool: ScratchPool<Vec<u32>> = ScratchPool::new();
+        {
+            let mut a = pool.acquire();
+            a.extend_from_slice(&[1, 2, 3]);
+        } // returned with capacity ≥ 3
+        assert_eq!(pool.idle(), 1);
+        let b = pool.acquire();
+        assert!(b.capacity() >= 3, "recycled object keeps its capacity");
+        assert_eq!(pool.idle(), 0);
+    }
+
+    #[test]
+    fn pool_grows_under_concurrent_checkout() {
+        let pool: ScratchPool<Vec<u8>> = ScratchPool::new();
+        let a = pool.acquire();
+        let b = pool.acquire();
+        drop(a);
+        drop(b);
+        assert_eq!(pool.idle(), 2);
+    }
+
+    #[test]
+    fn once_map_initializes_exactly_once() {
+        let map: OnceMap<u64> = OnceMap::with_capacity(8);
+        let computes = AtomicUsize::new(0);
+        for _ in 0..5 {
+            let v = map
+                .get_or_init(42, || {
+                    computes.fetch_add(1, Ordering::Relaxed);
+                    4200
+                })
+                .unwrap();
+            assert_eq!(*v, 4200);
+        }
+        assert_eq!(computes.load(Ordering::Relaxed), 1);
+        assert_eq!(map.get(42), Some(&4200));
+        assert_eq!(map.get(43), None);
+    }
+
+    #[test]
+    fn once_map_distinct_keys_coexist() {
+        let map: OnceMap<usize> = OnceMap::with_capacity(16);
+        for k in 0..16 {
+            assert_eq!(map.get_or_init(k * 1000, || k), Some(&k));
+        }
+        for k in 0..16 {
+            assert_eq!(map.get(k * 1000), Some(&k));
+        }
+        assert_eq!(map.len(), 16);
+        // 17th distinct key: table full → caller falls back
+        assert_eq!(map.get_or_init(99_999, || 99), None);
+    }
+
+    #[test]
+    fn once_map_exactly_once_under_racing_threads() {
+        let map: OnceMap<usize> = OnceMap::with_capacity(4);
+        static COMPUTES: AtomicUsize = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    let v = map
+                        .get_or_init(7, || {
+                            COMPUTES.fetch_add(1, Ordering::Relaxed);
+                            777
+                        })
+                        .unwrap();
+                    assert_eq!(*v, 777);
+                });
+            }
+        });
+        assert_eq!(COMPUTES.load(Ordering::Relaxed), 1);
+    }
+}

@@ -6,6 +6,7 @@
 //! sampler, summary statistics, a scoped thread pool, a seeded
 //! property-testing harness, wall-clock timers, and table rendering.
 
+pub mod arena;
 pub mod pool;
 pub mod propcheck;
 pub mod radix;
@@ -14,6 +15,7 @@ pub mod stats;
 pub mod table;
 pub mod timer;
 
+pub use arena::{OnceMap, ScratchPool};
 pub use pool::ThreadPool;
 pub use rng::{Pcg64, Zipf};
 pub use stats::Summary;

@@ -2,51 +2,83 @@
 //!
 //! The hierarchical hasher's extraction phase sorts each partition's
 //! (index, gradient) pairs; comparison sorting was ~30% of Algorithm 1's
-//! wall time in the first perf pass. Two 16-bit passes with counting
-//! buckets are ~3–4× faster at the 10⁵–10⁶ element sizes partitions hit.
+//! wall time in the first perf pass. Up to four 8-bit passes with
+//! counting buckets, skipping any pass whose keys all share one bucket —
+//! tensor indices under 2²⁴ take at most three scatter passes, and the
+//! 256-entry count tables keep a [`RadixScratch`] at ~2 KiB so one can
+//! be embedded per partition shard without the resident-memory blowup a
+//! 16-bit digit (two 256 KiB tables each) would cost at
+//! workers × partitions scale.
+
+/// Reusable buffers for [`radix_sort_pairs_with`]. After the first sort
+/// at steady-state size, subsequent sorts perform no heap allocation —
+/// part of the scratch-arena layer (see [`crate::util::arena`]).
+#[derive(Debug, Default)]
+pub struct RadixScratch {
+    kbuf: Vec<u32>,
+    vbuf: Vec<f32>,
+    counts: Vec<u32>,
+    offsets: Vec<u32>,
+}
 
 /// Sort `keys`/`vals` in tandem by ascending key. Stable. O(n) extra.
 pub fn radix_sort_pairs(keys: &mut Vec<u32>, vals: &mut Vec<f32>) {
+    radix_sort_pairs_with(keys, vals, &mut RadixScratch::default());
+}
+
+/// Sort `keys`/`vals` in tandem by ascending key, reusing `scratch`'s
+/// buffers. Stable; allocation-free once the scratch has warmed up to
+/// the working-set size.
+pub fn radix_sort_pairs_with(keys: &mut Vec<u32>, vals: &mut Vec<f32>, scratch: &mut RadixScratch) {
     let n = keys.len();
     debug_assert_eq!(n, vals.len());
     if n <= 64 {
-        // tiny partitions: insertion-style via sort_unstable on pairs
-        let mut pairs: Vec<(u32, f32)> = keys.iter().copied().zip(vals.iter().copied()).collect();
-        pairs.sort_unstable_by_key(|p| p.0);
-        for (i, (k, v)) in pairs.into_iter().enumerate() {
-            keys[i] = k;
-            vals[i] = v;
+        // Tiny partitions: in-place insertion sort — no temporaries at
+        // all, and faster than a counting pass at this size.
+        for i in 1..n {
+            let mut j = i;
+            while j > 0 && keys[j - 1] > keys[j] {
+                keys.swap(j - 1, j);
+                vals.swap(j - 1, j);
+                j -= 1;
+            }
         }
         return;
     }
-    let mut kbuf = vec![0u32; n];
-    let mut vbuf = vec![0f32; n];
-    // pass 1: low 16 bits; pass 2: high 16 bits
-    for pass in 0..2 {
-        let shift = pass * 16;
-        let mut counts = vec![0u32; 1 << 16];
+    const RADIX_BITS: usize = 8;
+    const BUCKETS: usize = 1 << RADIX_BITS;
+    const MASK: u32 = (BUCKETS - 1) as u32;
+    // Size-only resize (no clear): every scatter pass overwrites all n
+    // slots before they are read, so stale contents are never observed.
+    scratch.kbuf.resize(n, 0);
+    scratch.vbuf.resize(n, 0.0);
+    scratch.counts.resize(BUCKETS, 0);
+    scratch.offsets.resize(BUCKETS, 0);
+    // One pass per byte, least-significant first.
+    for pass in 0..4 {
+        let shift = pass * RADIX_BITS;
+        scratch.counts.fill(0);
         for &k in keys.iter() {
-            counts[((k >> shift) & 0xFFFF) as usize] += 1;
+            scratch.counts[((k >> shift) & MASK) as usize] += 1;
         }
         // skip a pass whose keys are all in one bucket
-        if counts.iter().any(|&c| c as usize == n) {
+        if scratch.counts.iter().any(|&c| c as usize == n) {
             continue;
         }
-        let mut offsets = vec![0u32; 1 << 16];
         let mut acc = 0u32;
-        for (o, &c) in offsets.iter_mut().zip(counts.iter()) {
+        for (o, &c) in scratch.offsets.iter_mut().zip(scratch.counts.iter()) {
             *o = acc;
             acc += c;
         }
         for i in 0..n {
-            let b = ((keys[i] >> shift) & 0xFFFF) as usize;
-            let dst = offsets[b] as usize;
-            offsets[b] += 1;
-            kbuf[dst] = keys[i];
-            vbuf[dst] = vals[i];
+            let b = ((keys[i] >> shift) & MASK) as usize;
+            let dst = scratch.offsets[b] as usize;
+            scratch.offsets[b] += 1;
+            scratch.kbuf[dst] = keys[i];
+            scratch.vbuf[dst] = vals[i];
         }
-        std::mem::swap(keys, &mut kbuf);
-        std::mem::swap(vals, &mut vbuf);
+        std::mem::swap(keys, &mut scratch.kbuf);
+        std::mem::swap(vals, &mut scratch.vbuf);
     }
 }
 
@@ -73,12 +105,29 @@ mod tests {
 
     #[test]
     fn low_bits_only_fast_path() {
-        // all keys < 65536 → second pass skipped
+        // all keys < 65536 → the two high-byte passes are skipped
         let mut keys: Vec<u32> = (0..10_000u32).rev().collect();
         let mut vals: Vec<f32> = keys.iter().map(|&k| -(k as f32)).collect();
         radix_sort_pairs(&mut keys, &mut vals);
         assert!(keys.windows(2).all(|w| w[0] <= w[1]));
         assert_eq!(vals[0], 0.0);
+    }
+
+    #[test]
+    fn scratch_reuse_across_sizes_and_shapes() {
+        // One scratch serving shrinking, growing, and low-bit workloads
+        // must never leak state between sorts.
+        let mut scratch = RadixScratch::default();
+        for (seed, n) in [(1u64, 5_000usize), (2, 100), (3, 80_000), (4, 63), (5, 70_000)] {
+            let mut rng = Pcg64::seeded(seed);
+            let mut keys: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+            let mut vals: Vec<f32> = keys.iter().map(|&k| k as f32 * 0.25).collect();
+            radix_sort_pairs_with(&mut keys, &mut vals, &mut scratch);
+            assert!(keys.windows(2).all(|w| w[0] <= w[1]), "n={n}");
+            for (k, v) in keys.iter().zip(vals.iter()) {
+                assert_eq!(*v, *k as f32 * 0.25);
+            }
+        }
     }
 
     #[test]

@@ -15,5 +15,7 @@
 pub mod codec;
 pub mod transport;
 
-pub use codec::{Decode, Encode, Message, WireError};
+pub use codec::{
+    encode_pull_hash_bitmap, encode_push_coo, Decode, Encode, Message, WireError,
+};
 pub use transport::{Endpoint, Fabric};

@@ -1,0 +1,128 @@
+//! Acceptance gate for the scratch-arena layer (ISSUE 2): after warm-up,
+//! the partition → hash-bitmap-encode → frame-write → decode pipeline of
+//! a repeated workload must perform **zero heap allocations** per
+//! iteration — the measured compute charge then reflects the algorithm,
+//! not the allocator.
+//!
+//! Method: a counting `#[global_allocator]` wrapping the system
+//! allocator. This file holds exactly one `#[test]` so no sibling test
+//! thread can allocate concurrently and pollute the counter. The hasher
+//! runs on a single-worker pool: thread spawning allocates by design,
+//! and the scoped pool is PR-gated separately for correctness — the
+//! zero-allocation claim is about the algorithmic hot path.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use zen::hashing::{HashBitmapCodec, HashBitmapPayload, HierarchicalHasher, PartitionScratch};
+use zen::tensor::CooTensor;
+use zen::util::{Pcg64, ThreadPool};
+use zen::wire::{encode_pull_hash_bitmap, encode_push_coo};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocations() -> usize {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+#[test]
+fn partition_encode_decode_is_allocation_free_after_warmup() {
+    let n = 8;
+    let dense_len = 100_000;
+    let nnz = 6_000;
+    let mut rng = Pcg64::seeded(42);
+    let mut idx: Vec<u32> = rng
+        .sample_distinct(dense_len, nnz)
+        .into_iter()
+        .map(|i| i as u32)
+        .collect();
+    idx.sort_unstable();
+    let vals: Vec<f32> = (0..nnz).map(|_| rng.next_f32() + 0.01).collect();
+    let t = CooTensor::from_sorted(dense_len, idx, vals);
+
+    let hasher = HierarchicalHasher::with_defaults(7, n, t.nnz())
+        .with_pool(ThreadPool::with_workers(1));
+    let domains = hasher.partition_domains(dense_len);
+    let codecs: Vec<HashBitmapCodec> = domains.iter().map(|d| HashBitmapCodec::new(d)).collect();
+
+    let mut scratch = PartitionScratch::new();
+    let mut payload = HashBitmapPayload::default();
+    let mut dec_idx: Vec<u32> = Vec::new();
+    let mut dec_val: Vec<f32> = Vec::new();
+    let mut frame: Vec<u8> = Vec::new();
+
+    let iteration = |scratch: &mut PartitionScratch,
+                         payload: &mut HashBitmapPayload,
+                         dec_idx: &mut Vec<u32>,
+                         dec_val: &mut Vec<f32>,
+                         frame: &mut Vec<u8>| {
+        hasher.partition_into(&t, scratch);
+        frame.clear();
+        let mut decoded = 0usize;
+        for (p, codec) in codecs.iter().enumerate() {
+            let part = scratch.part(p);
+            encode_push_coo(0, part.dense_len, part.indices, part.values, frame);
+            codec.encode_into(part, payload);
+            encode_pull_hash_bitmap(p as u32, &payload.bitmap, &payload.values, frame);
+            codec.decode_into(payload, dec_idx, dec_val);
+            decoded += dec_idx.len();
+        }
+        decoded
+    };
+
+    // Warm-up: buffers grow to steady-state capacity, domains exist.
+    let mut warm_total = 0;
+    for _ in 0..3 {
+        warm_total = iteration(
+            &mut scratch,
+            &mut payload,
+            &mut dec_idx,
+            &mut dec_val,
+            &mut frame,
+        );
+    }
+    assert_eq!(warm_total, t.nnz(), "pipeline must be lossless");
+
+    // Steady state: zero heap allocations across 10 full iterations.
+    let before = allocations();
+    let mut total = 0;
+    for _ in 0..10 {
+        total += iteration(
+            &mut scratch,
+            &mut payload,
+            &mut dec_idx,
+            &mut dec_val,
+            &mut frame,
+        );
+    }
+    let after = allocations();
+    assert_eq!(total, 10 * t.nnz());
+    assert_eq!(
+        after - before,
+        0,
+        "partition→encode→decode steady state must not allocate"
+    );
+}

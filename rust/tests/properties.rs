@@ -121,6 +121,58 @@ fn prop_hash_bitmap_roundtrip_through_hasher() {
 }
 
 #[test]
+fn prop_hasher_lossless_and_theorem2_bound_across_n() {
+    // ISSUE 2: losslessness (union of partitions == input, no
+    // duplicates) and the Theorem-2 balance bound
+    // `1 + O(√(n log n / nnz))` must hold for every server count the
+    // paper evaluates, across uniform, clustered, and strided non-zero
+    // patterns — exercised through the scratch path so the reused
+    // buffers are covered at integration level too.
+    use zen::hashing::PartitionScratch;
+    // RefCell: check_seeded takes Fn, and the scratch must persist
+    // across cases to prove reuse never leaks state between runs.
+    let scratch = std::cell::RefCell::new(PartitionScratch::new());
+    for n in [2usize, 4, 8, 16] {
+        check_seeded(0xe55 + n as u64, 12, |g| {
+            let dense_len = g.usize_in(60_000, 250_000);
+            let nnz = g.usize_in(3_000, 10_000);
+            let idx: Vec<u32> = match g.usize_in(0, 2) {
+                // uniform over the full range
+                0 => g.distinct_sorted_u32(nnz, dense_len as u32),
+                // clustered into the hot 4% prefix (skewness, Fig 2)
+                1 => g.distinct_sorted_u32(nnz, (dense_len / 25).max(nnz) as u32),
+                // strided (embedding-row structure): every 16th index
+                _ => {
+                    let set: std::collections::BTreeSet<u32> =
+                        (0..nnz as u32).map(|i| i * 16 % dense_len as u32).collect();
+                    set.into_iter().collect()
+                }
+            };
+            let nnz = idx.len();
+            let vals: Vec<f32> = (0..nnz).map(|i| i as f32 * 0.5 + 1.0).collect();
+            let t = CooTensor::from_sorted(dense_len, idx, vals);
+            let h = HierarchicalHasher::with_defaults(g.u64(), n, nnz);
+            let mut scratch = scratch.borrow_mut();
+            h.partition_into(&t, &mut scratch);
+            // losslessness: union of partitions == input, no dup, no loss
+            let parts: Vec<CooTensor> = (0..n).map(|p| scratch.part(p).to_tensor()).collect();
+            let total: usize = parts.iter().map(|p| p.nnz()).sum();
+            if total != t.nnz() {
+                return Err(format!("n={n}: {total} nnz after partition vs {}", t.nnz()));
+            }
+            if CooTensor::merge_all(&parts) != t {
+                return Err(format!("n={n}: partition union != input"));
+            }
+            // Theorem 2 balance bound (constant 5 covers multinomial
+            // max-deviation slack at these nnz)
+            let imb = scratch.push_imbalance();
+            let bound = 1.0 + 5.0 * ((n as f64 * (n as f64).ln()) / nnz as f64).sqrt();
+            prop_assert(imb <= bound, &format!("n={n}: imbalance {imb} > {bound}"))
+        });
+    }
+}
+
+#[test]
 fn prop_zen_balanced_for_any_input_distribution() {
     // Theorem 2 is distribution-free: even adversarially clustered
     // indices must hash into balanced partitions.
