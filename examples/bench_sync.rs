@@ -16,7 +16,7 @@
 
 use zen::cluster::{LinkKind, Network};
 use zen::hashing::{HashBitmapCodec, HashBitmapPayload, HierarchicalHasher, PartitionScratch};
-use zen::schemes::{self, SyncScratch};
+use zen::schemes::{self, SyncScheme, SyncScratch};
 use zen::tensor::CooTensor;
 use zen::util::{Pcg64, Stopwatch, Summary};
 use zen::wire::encode_pull_hash_bitmap;

@@ -1,0 +1,172 @@
+//! Transport-overhead trajectory: every scheme over every transport
+//! backend, emitted as machine-readable `BENCH_PR3.json` so the cost of
+//! moving real frames (channel) and real sockets (tcp) versus the
+//! virtual-time simulator is re-measurable on any machine.
+//!
+//!   cargo run --release --example bench_transport -- [--tiny] [--iters K] [--out PATH]
+//!
+//! - `--tiny`: CI smoke configuration (small tensors, few iterations).
+//! - `--iters K`: timed iterations per cell (median reported).
+//! - `--out PATH`: output JSON path (default `BENCH_PR3.json`).
+//!
+//! Payload sizes are deliberately modest: the TCP backend is driven by a
+//! single orchestrating thread, so per-frame payloads must stay well
+//! below the kernel socket buffer.
+
+use zen::cluster::{LinkKind, Network};
+use zen::schemes::{self, SyncScheme, SyncScratch};
+use zen::util::{Stopwatch, Summary};
+use zen::wire::{make_transport, TransportKind};
+use zen::workload::random_uniform_inputs as random_inputs;
+
+struct Config {
+    tiny: bool,
+    iters: usize,
+    warmup: usize,
+    out: String,
+}
+
+fn parse_args() -> Config {
+    let mut cfg = Config {
+        tiny: false,
+        iters: 7,
+        warmup: 2,
+        out: "BENCH_PR3.json".to_string(),
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--tiny" => {
+                cfg.tiny = true;
+                cfg.iters = 3;
+                cfg.warmup = 1;
+            }
+            "--iters" => {
+                cfg.iters = args
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .expect("--iters needs a positive integer");
+            }
+            "--out" => {
+                cfg.out = args.next().expect("--out needs a path");
+            }
+            other => panic!("unknown argument {other}"),
+        }
+    }
+    cfg
+}
+
+fn median_ns<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let sw = Stopwatch::start();
+        f();
+        s.add(sw.elapsed() * 1e9);
+    }
+    s.median()
+}
+
+fn json_f(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.1}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn main() {
+    let cfg = parse_args();
+    let machines = 4;
+    let (dense_len, density) = if cfg.tiny {
+        (1 << 12, 0.02)
+    } else {
+        (1 << 14, 0.02)
+    };
+    let inputs = random_inputs(0x9137, machines, dense_len, density);
+    let net = Network::new(machines, LinkKind::Tcp25);
+    let nnz = inputs[0].nnz();
+    let scheme_names = [
+        "zen",
+        "zen-coo",
+        "sparseps",
+        "omnireduce",
+        "sparcml",
+        "agsparse",
+        "strawman:8",
+        "dense",
+    ];
+    let backends = [TransportKind::Sim, TransportKind::Channel, TransportKind::Tcp];
+
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"pr\": 3,\n");
+    json.push_str(&format!(
+        "  \"config\": {{\"tiny\": {}, \"iters\": {}, \"warmup\": {}, \
+         \"machines\": {machines}, \"dense_len\": {dense_len}, \"density\": {density}}},\n",
+        cfg.tiny, cfg.iters, cfg.warmup
+    ));
+    json.push_str("  \"grid\": [\n");
+
+    let mut rows: Vec<String> = Vec::new();
+    for name in scheme_names {
+        let scheme = schemes::by_name(name, machines, 0x5eed, nnz).unwrap();
+        let mut sim_ns = f64::NAN;
+        for kind in backends {
+            // One transport per cell, reused across iterations (the TCP
+            // mesh persists; take_report resets per sync).
+            let mut tx = match make_transport(kind, &net) {
+                Ok(tx) => tx,
+                Err(e) => {
+                    eprintln!("{name}/{}: backend unavailable ({e})", kind.name());
+                    rows.push(format!(
+                        "    {{\"scheme\": \"{}\", \"transport\": \"{}\", \
+                         \"ns_per_iter_median\": null, \"bytes_per_iter\": null, \
+                         \"overhead_vs_sim\": null}}",
+                        scheme.name(),
+                        kind.name()
+                    ));
+                    continue;
+                }
+            };
+            let mut scratch = SyncScratch::new();
+            let mut bytes = 0u64;
+            let ns = median_ns(cfg.warmup, cfg.iters, || {
+                let r = scheme.sync_transport(&inputs, tx.as_mut(), &mut scratch);
+                bytes = r.report.total_bytes();
+                std::hint::black_box(r.outputs.len());
+            });
+            if kind == TransportKind::Sim {
+                sim_ns = ns;
+            }
+            let overhead = ns / sim_ns;
+            println!(
+                "{:<14} {:<8} {:>10.1} us/iter  {:>12} B/iter  ({:.2}x vs sim)",
+                scheme.name(),
+                kind.name(),
+                ns / 1e3,
+                bytes,
+                overhead
+            );
+            rows.push(format!(
+                "    {{\"scheme\": \"{}\", \"transport\": \"{}\", \
+                 \"ns_per_iter_median\": {}, \"bytes_per_iter\": {bytes}, \
+                 \"overhead_vs_sim\": {}}}",
+                scheme.name(),
+                kind.name(),
+                json_f(ns),
+                if overhead.is_finite() {
+                    format!("{overhead:.3}")
+                } else {
+                    "null".to_string()
+                }
+            ));
+        }
+    }
+    json.push_str(&rows.join(",\n"));
+    json.push_str("\n  ]\n}\n");
+    std::fs::write(&cfg.out, &json).expect("write bench json");
+    println!("wrote {}", cfg.out);
+}

@@ -10,7 +10,7 @@ use zen::cluster::{LinkKind, Network};
 use zen::coordinator::compute_time_per_iter;
 use zen::engine::{EngineConfig, SyncEngine};
 use zen::hashing::{HashBitmapCodec, HierarchicalHasher};
-use zen::schemes;
+use zen::schemes::{self, SyncScheme};
 use zen::tensor::CooTensor;
 use zen::util::{Pcg64, Stopwatch};
 use zen::workload::{profiles, GradientGen};

@@ -4,7 +4,7 @@
 //!   cargo run --release --example quickstart
 
 use zen::cluster::{LinkKind, Network};
-use zen::schemes::{self, verify_outputs};
+use zen::schemes::{self, verify_outputs, SyncScheme};
 use zen::util::human_bytes;
 use zen::workload::{profiles, GradientGen};
 

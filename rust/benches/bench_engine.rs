@@ -8,7 +8,7 @@
 use zen::cluster::{LinkKind, Network};
 use zen::coordinator::compute_time_per_iter;
 use zen::engine::{EngineConfig, SyncEngine};
-use zen::schemes;
+use zen::schemes::{self, SyncScheme};
 use zen::util::human_bytes;
 use zen::util::timer::bench;
 use zen::workload::{profiles, GradientGen};

@@ -5,7 +5,7 @@
 //!   cargo bench --bench bench_schemes
 
 use zen::cluster::{LinkKind, Network};
-use zen::schemes;
+use zen::schemes::{self, SyncScheme};
 use zen::util::timer::bench;
 use zen::workload::{profiles, GradientGen};
 

@@ -121,6 +121,21 @@ impl Args {
             _ => default,
         }
     }
+
+    /// Parse a transport backend name (`sim`, `channel`, `tcp`). Unlike
+    /// [`link`](Args::link), an unknown value is an error — silently
+    /// simulating when the user asked for real frames would be wrong.
+    pub fn transport(
+        &self,
+        key: &str,
+        default: crate::wire::TransportKind,
+    ) -> anyhow::Result<crate::wire::TransportKind> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => crate::wire::TransportKind::parse(v)
+                .ok_or_else(|| anyhow::anyhow!("unknown transport '{v}' (sim|channel|tcp)")),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -163,5 +178,22 @@ mod tests {
             a.link("link", crate::cluster::LinkKind::Tcp25),
             crate::cluster::LinkKind::Rdma100
         );
+    }
+
+    #[test]
+    fn transport_parsing() {
+        use crate::wire::TransportKind;
+        let a = parse("--transport channel");
+        assert_eq!(
+            a.transport("transport", TransportKind::Sim).unwrap(),
+            TransportKind::Channel
+        );
+        assert_eq!(
+            parse("").transport("transport", TransportKind::Sim).unwrap(),
+            TransportKind::Sim
+        );
+        assert!(parse("--transport warp")
+            .transport("transport", TransportKind::Sim)
+            .is_err());
     }
 }

@@ -24,6 +24,7 @@ use crate::runtime::{lit, Executable, Runtime};
 use crate::schemes::{self, SyncScheme, SyncScratch};
 use crate::tensor::CooTensor;
 use crate::util::{Pcg64, Zipf};
+use crate::wire::{Transport, TransportKind};
 
 /// Model/shape configuration. Must match an exported artifact.
 #[derive(Clone, Debug)]
@@ -128,14 +129,38 @@ pub struct LmTrainer {
     /// Reused sync working memory — steps after the first reuse the
     /// warmed partition/payload buffers (scratch-arena layer).
     scratch: SyncScratch,
+    /// Data plane the scheme's protocol runs over, built once per
+    /// trainer (a TCP mesh persists across steps).
+    transport: Box<dyn Transport>,
 }
 
 impl LmTrainer {
+    /// Construct with the default virtual-time transport.
     pub fn new(
         cfg: LmConfig,
         workers: usize,
         scheme_name: &str,
         link: LinkKind,
+        artifacts_dir: &std::path::Path,
+    ) -> Result<Self> {
+        Self::with_transport(
+            cfg,
+            workers,
+            scheme_name,
+            link,
+            TransportKind::Sim,
+            artifacts_dir,
+        )
+    }
+
+    /// Construct with an explicit transport backend
+    /// (`zen train --transport sim|channel|tcp`).
+    pub fn with_transport(
+        cfg: LmConfig,
+        workers: usize,
+        scheme_name: &str,
+        link: LinkKind,
+        transport: TransportKind,
         artifacts_dir: &std::path::Path,
     ) -> Result<Self> {
         let rt = Runtime::cpu()?;
@@ -152,6 +177,27 @@ impl LmTrainer {
         let scheme = schemes::by_name(scheme_name, workers, cfg.seed ^ 0x5eed, expected_nnz)
             .ok_or_else(|| anyhow::anyhow!("unknown scheme '{scheme_name}'"))?;
         let net = Network::new(workers, link);
+        if matches!(transport, TransportKind::Tcp) {
+            // Scheme-aware worst-frame estimate (see SimDriver::new);
+            // the runtime per-stream budget stays authoritative.
+            let lower = scheme_name.to_ascii_lowercase();
+            let est_payload = if lower == "allreduce" || lower == "dense" || lower == "omnireduce" {
+                crate::util::ceil_div(cfg.emb_params(), workers) * 4
+            } else if lower == "sparcml" || lower.starts_with("agsparse") {
+                expected_nnz.saturating_mul(workers).min(cfg.emb_params()) * 8
+            } else {
+                expected_nnz * 8
+            };
+            let est_frame = est_payload + 64;
+            anyhow::ensure!(
+                est_frame <= crate::wire::MAX_TCP_INFLIGHT_BYTES,
+                "estimated worst gradient frame for scheme '{scheme_name}' is \
+                 ~{est_frame} B, over the tcp loopback budget ({} B) — use a \
+                 smaller shape or --transport channel",
+                crate::wire::MAX_TCP_INFLIGHT_BYTES
+            );
+        }
+        let transport = crate::wire::make_transport(transport, &net)?;
 
         let mut rng = Pcg64::seeded(cfg.seed);
         let scale = 1.0 / (cfg.dim as f64).sqrt();
@@ -180,6 +226,7 @@ impl LmTrainer {
 
             step_count: 0,
             scratch: SyncScratch::new(),
+            transport,
         })
     }
 
@@ -304,8 +351,11 @@ impl LmTrainer {
         let compute_wall = compute_sw.elapsed();
 
         // Synchronize the sparse embedding gradients (reused scratch —
-        // steady-state steps don't pay allocator noise in the sync).
-        let sync = self.scheme.sync_with(&worker_grads, &self.net, &mut self.scratch);
+        // steady-state steps don't pay allocator noise in the sync) over
+        // the trainer's transport backend.
+        let sync = self
+            .scheme
+            .sync_transport(&worker_grads, self.transport.as_mut(), &mut self.scratch);
         let emb_comm_time = sync.report.comm_time();
         let scheme_overhead = sync.report.compute_overhead;
 

@@ -15,6 +15,7 @@ pub mod sgd;
 
 use crate::cluster::{LinkKind, Network, Topology};
 use crate::schemes::{self, SyncScheme, SyncScratch};
+use crate::wire::TransportKind;
 use crate::workload::{GradientGen, ModelProfile};
 
 /// Per-model compute time for one iteration on one 8-GPU machine
@@ -74,6 +75,10 @@ pub struct SimConfig {
     /// `Some` → pipelined multi-tensor engine; `None` → the classic
     /// one-blocking-sync path.
     pub pipeline: Option<PipelineConfig>,
+    /// Data plane the schemes run over: virtual-time sim (default),
+    /// real-frames channel fabric, or loopback TCP sockets
+    /// (`zen sim --transport sim|channel|tcp`).
+    pub transport: TransportKind,
 }
 
 impl SimConfig {
@@ -88,6 +93,7 @@ impl SimConfig {
             iterations: 4,
             seed: 0xbeef,
             pipeline: None,
+            transport: TransportKind::Sim,
         }
     }
 }
@@ -147,9 +153,50 @@ impl SimDriver {
                 p.emb_shards >= 1,
                 "pipeline needs at least one embedding shard (--emb-shards)"
             );
+            anyhow::ensure!(
+                cfg.transport != TransportKind::Tcp,
+                "engine mode builds one socket mesh per bucket — use \
+                 --transport sim|channel with --pipeline, or drop --pipeline"
+            );
         }
         let scaled = cfg.profile.scaled(cfg.scale);
         let gen = GradientGen::new(scaled, cfg.seed);
+        if cfg.transport == TransportKind::Tcp {
+            // TCP is the only fallible backend. Fail fast with a clean
+            // error, not a mid-run panic: (1) sockets must be available,
+            // (2) the worst-case frame (a full machine tensor, what
+            // AGsparse/SparCML ship) must fit the per-stream budget.
+            drop(crate::wire::make_transport(
+                cfg.transport,
+                &Network::new(cfg.machines, cfg.link),
+            )?);
+            // Worst-case per-stream bytes are scheme-dependent:
+            // point-to-point schemes ship at most one machine tensor per
+            // frame; SparCML/AGsparse ship densified aggregates (up to
+            // the union of all machines); the dense ring and OmniReduce
+            // ship positional chunks of the range. The estimate is
+            // conservative guidance — the runtime per-stream budget
+            // stays authoritative.
+            let machine_nnz = gen.expected_nnz() * cfg.gpus_per_machine.min(4);
+            let dense_len = gen.profile.emb_params();
+            let lower = cfg.scheme.to_ascii_lowercase();
+            let est_payload = if lower == "allreduce" || lower == "dense" || lower == "omnireduce" {
+                crate::util::ceil_div(dense_len, cfg.machines) * 4
+            } else if lower == "sparcml" || lower.starts_with("agsparse") {
+                machine_nnz.saturating_mul(cfg.machines).min(dense_len) * 8
+            } else {
+                machine_nnz * 8
+            };
+            let est_frame = est_payload + 64;
+            anyhow::ensure!(
+                est_frame <= crate::wire::MAX_TCP_INFLIGHT_BYTES,
+                "estimated worst frame for scheme '{}' is ~{est_frame} B, over the \
+                 tcp loopback budget ({} B) — raise --scale (smaller tensors) or \
+                 use --transport channel",
+                cfg.scheme,
+                crate::wire::MAX_TCP_INFLIGHT_BYTES
+            );
+        }
         let scheme = schemes::by_name(
             &cfg.scheme,
             cfg.machines,
@@ -228,8 +275,14 @@ impl SimDriver {
         let mut pull_imb = Vec::new();
         // One scratch for the whole run: iterations after the first
         // reuse warmed buffers, so the compute charge in the reported
-        // stages reflects the algorithm, not the allocator.
+        // stages reflects the algorithm, not the allocator. The
+        // transport is likewise built once (a TCP mesh persists across
+        // iterations) and reset by each sync's `take_report`.
         let mut scratch = SyncScratch::new();
+        // Constructibility was validated in `new`; a failure here is a
+        // transient environment change mid-run.
+        let mut tx = crate::wire::make_transport(self.cfg.transport, &net)
+            .expect("sim transport setup (validated at construction)");
 
         for it in 0..self.cfg.iterations as u64 {
             // Each machine's tensor = aggregate of its g GPUs (the
@@ -242,7 +295,9 @@ impl SimDriver {
                     crate::tensor::CooTensor::merge_all(&per_gpu)
                 })
                 .collect();
-            let result = self.scheme.sync_with(&inputs, &net, &mut scratch);
+            let result = self
+                .scheme
+                .sync_transport(&inputs, tx.as_mut(), &mut scratch);
             // Correctness self-check on the first iteration.
             if it == 0 && !self.cfg.scheme.starts_with("strawman") {
                 schemes::verify_outputs(&result, &inputs);
@@ -291,10 +346,10 @@ impl SimDriver {
         let net = Network::new(n, self.cfg.link);
         let specs = self.gen.layer_specs(p.dense_layers, p.emb_shards);
         let compute_time = compute_time_per_iter(self.cfg.profile.name);
-        let engine = crate::engine::SyncEngine::new(crate::engine::EngineConfig::new(
-            p.bucket_bytes,
-            compute_time,
-        ));
+        let engine = crate::engine::SyncEngine::new(
+            crate::engine::EngineConfig::new(p.bucket_bytes, compute_time)
+                .with_transport(self.cfg.transport),
+        );
 
         let mut emb_sync_times = Vec::with_capacity(self.cfg.iterations);
         let mut serialized = Vec::with_capacity(self.cfg.iterations);
@@ -417,6 +472,18 @@ mod tests {
     }
 
     #[test]
+    fn channel_transport_run_matches_sim() {
+        // `--transport channel`: the same protocol over real frames must
+        // charge identical virtual time (bytes are the only time input).
+        let sim = SimDriver::new(cfg("zen", 4)).unwrap().run();
+        let mut c = cfg("zen", 4);
+        c.transport = TransportKind::Channel;
+        let chan = SimDriver::new(c).unwrap().run();
+        assert_eq!(sim.emb_sync_times, chan.emb_sync_times);
+        assert_eq!(sim.throughput, chan.throughput);
+    }
+
+    #[test]
     fn throughput_scales_with_machines() {
         // More machines: more samples/s (communication grows slower than
         // aggregate batch for Zen).
@@ -473,6 +540,15 @@ mod tests {
     fn pipelined_zero_shards_rejected() {
         let mut c = pipelined_cfg("zen", 4);
         c.pipeline.as_mut().unwrap().emb_shards = 0;
+        assert!(SimDriver::new(c).is_err());
+    }
+
+    #[test]
+    fn pipelined_tcp_rejected() {
+        // Engine mode would build one socket mesh per bucket; the
+        // combination is refused with a clean error at construction.
+        let mut c = pipelined_cfg("zen", 4);
+        c.transport = TransportKind::Tcp;
         assert!(SimDriver::new(c).is_err());
     }
 

@@ -15,10 +15,12 @@
 //! 1. [`bucket::plan_buckets`] packs the per-layer gradients
 //!    ([`crate::workload::LayerSpec`]) into buckets up to a configurable
 //!    byte threshold;
-//! 2. every bucket is synchronized with the *same* scheme `sync()` the
+//! 2. every bucket is synchronized with the *same* scheme protocol the
 //!    single-tensor path uses (bucket-level reuse — Zen, AllReduce,
 //!    SparCML, … all work unchanged), concurrently on a
-//!    [`crate::util::ThreadPool`];
+//!    [`crate::util::ThreadPool`], over the transport backend selected
+//!    by [`EngineConfig::transport`] (virtual-time sim, real-frames
+//!    channel, or loopback TCP);
 //! 3. a [`Timeline`] charges virtual time twice: **serialized** (compute,
 //!    then every bucket in turn — the one-blocking-`sync()` baseline)
 //!    and **overlapped** (bucket *k*'s communication may start at
@@ -35,6 +37,7 @@ use crate::cluster::{CommReport, Network, Timeline, TimelineJob};
 use crate::schemes::{SyncScheme, SyncScratch};
 use crate::tensor::{CooTensor, WireFormat};
 use crate::util::{ScratchPool, ThreadPool};
+use crate::wire::TransportKind;
 use crate::workload::LayerSpec;
 
 /// Engine configuration.
@@ -47,6 +50,12 @@ pub struct EngineConfig {
     /// Modeled backward-pass time for one iteration (virtual seconds);
     /// layer readiness is `compute_time × ready_frac`.
     pub compute_time: f64,
+    /// Data plane every bucket sync runs over: the virtual-time
+    /// simulator (default), the real-frames channel fabric, or loopback
+    /// TCP. Each in-flight bucket gets its own transport instance —
+    /// cheap for sim/channel; for TCP this opens a fresh socket mesh
+    /// per bucket, so prefer the flat (`SimDriver`) path for TCP runs.
+    pub transport: TransportKind,
 }
 
 impl EngineConfig {
@@ -55,7 +64,14 @@ impl EngineConfig {
         EngineConfig {
             bucket_bytes,
             compute_time,
+            transport: TransportKind::Sim,
         }
+    }
+
+    /// Select the data plane (builder style).
+    pub fn with_transport(mut self, transport: TransportKind) -> Self {
+        self.transport = transport;
+        self
     }
 }
 
@@ -183,6 +199,8 @@ impl SyncEngine {
         let buckets = plan_buckets(specs, &est_bytes, self.cfg.bucket_bytes);
 
         // Synchronize every bucket with the shared scheme, concurrently.
+        // Each in-flight bucket runs over its own transport instance of
+        // the configured backend (transports are single-sync state).
         let sw = crate::util::Stopwatch::start();
         let synced: Vec<(Bucket, crate::schemes::SyncResult)> =
             self.pool.map(buckets, |b| {
@@ -191,7 +209,9 @@ impl SyncEngine {
                     .map(|w| bucket::concat_layers(&b, w))
                     .collect();
                 let mut scratch = self.scratch.acquire();
-                let result = scheme.sync_with(&inputs, net, &mut scratch);
+                let mut tx = crate::wire::make_transport(self.cfg.transport, net)
+                    .expect("engine transport setup");
+                let result = scheme.sync_transport(&inputs, tx.as_mut(), &mut scratch);
                 (b, result)
             });
         let wall_time = sw.elapsed();
@@ -335,6 +355,36 @@ mod tests {
         verify_layer_outputs(&run, &layers);
         assert_eq!(run.total_bytes, 0, "one machine moves nothing");
         assert!((run.overlapped_time - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn channel_transport_equals_sim_per_bucket() {
+        // The engine's transport selector: running every bucket sync
+        // over real frames must reproduce the simulator's outputs and
+        // byte accounting exactly.
+        let gen = small_gen();
+        let specs = gen.layer_specs(3, 4);
+        let layers = gen.layer_iteration_all(&specs, 0, 4);
+        let scheme = schemes::by_name("zen", 4, 0x5eed, gen.expected_nnz().max(64)).unwrap();
+        let net = Network::new(4, LinkKind::Tcp25);
+        let sim = SyncEngine::new(EngineConfig::new(16 * 1024, 0.05)).run(
+            &specs,
+            &layers,
+            scheme.as_ref(),
+            &net,
+            |r| r.comm_time(),
+        );
+        let chan_cfg =
+            EngineConfig::new(16 * 1024, 0.05).with_transport(crate::wire::TransportKind::Channel);
+        let chan = SyncEngine::new(chan_cfg).run(&specs, &layers, scheme.as_ref(), &net, |r| {
+            r.comm_time()
+        });
+        assert_eq!(sim.total_bytes, chan.total_bytes);
+        assert_eq!(sim.buckets.len(), chan.buckets.len());
+        for (a, b) in sim.buckets.iter().zip(chan.buckets.iter()) {
+            assert_eq!(a.bytes, b.bytes, "bucket {}", a.label);
+        }
+        verify_layer_outputs(&chan, &layers);
     }
 
     #[test]

@@ -10,7 +10,7 @@ use crate::analysis::numeric::{fig7_sweep, fig7_table};
 use crate::cluster::LinkKind;
 use crate::coordinator::{compute_time_per_iter, SimConfig, SimDriver};
 use crate::hashing::{HierarchicalHasher, StrawmanHasher};
-use crate::schemes;
+use crate::schemes::{self, SyncScheme};
 use crate::tensor::{metrics, BlockTensor, CooTensor, WireFormat};
 use crate::util::stats::Histogram;
 use crate::util::table::Table;

@@ -8,6 +8,8 @@
 //! Examples:
 //!   zen sim --model DeepFM --machines 16 --scheme zen --link tcp25
 //!   zen sim --model LSTM --machines 16 --scheme zen --pipeline --bucket-kb 256
+//!   zen sim --model DeepFM --machines 8 --scheme zen --transport channel
+//!   zen sim --model DeepFM --machines 4 --gpus 1 --scale 2048 --transport tcp
 //!   zen train --shape tiny --workers 4 --scheme zen --steps 50
 //!   zen schemes
 
@@ -15,6 +17,7 @@ use zen::cluster::LinkKind;
 use zen::config::Args;
 use zen::coordinator::lm::{LmConfig, LmTrainer};
 use zen::coordinator::{PipelineConfig, SimConfig, SimDriver};
+use zen::wire::TransportKind;
 use zen::workload::profiles;
 
 fn main() -> anyhow::Result<()> {
@@ -27,7 +30,9 @@ fn main() -> anyhow::Result<()> {
             eprintln!(
                 "usage: zen <sim|train|schemes> [--options]\n\
                  sim:   --model LSTM|DeepFM|NMT|BERT --machines N --scheme S --link tcp25|rdma100\n\
-                 train: --shape tiny|paper_100m --workers N --scheme S --steps N"
+                        --transport sim|channel|tcp\n\
+                 train: --shape tiny|paper_100m --workers N --scheme S --steps N\n\
+                        --transport sim|channel|tcp"
             );
             Ok(())
         }
@@ -49,6 +54,7 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     cfg.scale = args.get_usize("scale", 64);
     cfg.gpus_per_machine = args.get_usize("gpus", 8);
     cfg.seed = args.get_u64("seed", 0xbeef);
+    cfg.transport = args.transport("transport", TransportKind::Sim)?;
     // `--pipeline` may arrive as a bare flag or as `--pipeline=<bool>`;
     // an explicit false wins over the sub-option shorthands.
     let pipeline_requested = match args.get("pipeline") {
@@ -70,8 +76,12 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     }
     let r = SimDriver::new(cfg.clone())?.run();
     println!(
-        "model={} machines={} gpus/machine={} scheme={}",
-        cfg.profile.name, cfg.machines, cfg.gpus_per_machine, r.scheme
+        "model={} machines={} gpus/machine={} scheme={} transport={}",
+        cfg.profile.name,
+        cfg.machines,
+        cfg.gpus_per_machine,
+        r.scheme,
+        cfg.transport.name()
     );
     // In engine mode the first column is all-bucket communication (it
     // includes dense layers folded into buckets), not embedding-only.
@@ -118,16 +128,18 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let steps = args.get_usize("steps", 50);
     let scheme = args.get_or("scheme", "zen");
     let link = args.link("link", LinkKind::Tcp25);
+    let transport = args.transport("transport", TransportKind::Sim)?;
     let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     println!(
-        "training {}×{} embedding ({} params) + MLP, {} workers, scheme={}",
+        "training {}×{} embedding ({} params) + MLP, {} workers, scheme={}, transport={}",
         cfg.vocab,
         cfg.dim,
         cfg.emb_params() + cfg.mlp_params(),
         workers,
-        scheme
+        scheme,
+        transport.name()
     );
-    let mut t = LmTrainer::new(cfg, workers, scheme, link, &artifacts)?;
+    let mut t = LmTrainer::with_transport(cfg, workers, scheme, link, transport, &artifacts)?;
     let log = t.run(steps, args.get_usize("log-every", 10), true)?;
     println!(
         "done: final loss {:.4}, total emb comm {:.1}ms (virtual), compute {:.1}s (wall)",
@@ -139,6 +151,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_schemes() -> anyhow::Result<()> {
+    use zen::schemes::SyncScheme;
     println!(
         "{:<12} {:<14} {:<12} {:<15} {:<14} format",
         "scheme", "communication", "aggregation", "partition", "balance"

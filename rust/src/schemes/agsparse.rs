@@ -4,14 +4,14 @@
 //! locally (one-shot, Centralization). Three communication patterns are
 //! implemented, matching footnote 1 ("different implementations for
 //! AGsparse with different communication patterns"): point-to-point
-//! (default), ring, and hierarchy (recursive doubling).
+//! (default), ring, and hierarchy (recursive doubling) — each expressed
+//! as `PushCoo` frames over the transport.
 //!
 //! Traffic per GPU grows with `Σ_j nnz_j` — overlaps between tensors are
 //! transmitted in full and reduced only at the destination, which is why
 //! AGsparse degrades past ~40 GPUs in Fig 7.
 
 use super::*;
-use crate::cluster::StageReport;
 
 /// Which all-gather topology to use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -56,82 +56,99 @@ impl SyncScheme for AgSparse {
         }
     }
 
-    fn sync_with(
+    fn sync_transport(
         &self,
         inputs: &[CooTensor],
-        net: &Network,
+        tx: &mut dyn Transport,
         _scratch: &mut SyncScratch,
     ) -> SyncResult {
         let n = inputs.len();
-        assert_eq!(n, net.endpoints);
-        let bytes: Vec<u64> = inputs
-            .iter()
-            .map(|t| crate::tensor::WireFormat::wire_bytes(t) as u64)
-            .collect();
+        assert_eq!(n, tx.endpoints());
 
-        let mut report = CommReport::new();
-        match self.pattern {
+        let outputs = match self.pattern {
             AgPattern::PointToPoint => {
-                // One stage: node i sends its tensor to all others.
-                let mut m = vec![vec![0u64; n]; n];
-                for (i, row) in m.iter_mut().enumerate() {
-                    for (j, cell) in row.iter_mut().enumerate() {
-                        if i != j {
-                            *cell = bytes[i];
+                // One stage: node i broadcasts its tensor to all others.
+                for (i, t) in inputs.iter().enumerate() {
+                    for j in 0..n {
+                        if j != i {
+                            tx.send(i, j, push_frame(i, t)).expect("ag-p2p send");
                         }
                     }
                 }
-                report.push(net.stage_from_matrix("ag-p2p", &m));
+                let mut outputs = Vec::with_capacity(n);
+                for j in 0..n {
+                    let mut got = Vec::with_capacity(n - 1);
+                    for _ in 0..n.saturating_sub(1) {
+                        got.push(expect_push(tx.recv(j).expect("ag-p2p recv")).1);
+                    }
+                    outputs.push(merge_with_own(&got, &inputs[j]));
+                }
+                tx.end_stage("ag-p2p").expect("ag-p2p stage");
+                outputs
             }
             AgPattern::Ring => {
-                // n-1 stages; stage s: node i forwards the tensor that
-                // originated at (i - s) mod n to (i + 1) mod n.
+                // n−1 stages; stage s: node i forwards the tensor that
+                // originated at (i − s) mod n to (i + 1) mod n.
+                let mut received: Vec<Vec<CooTensor>> =
+                    (0..n).map(|_| Vec::with_capacity(n - 1)).collect();
                 for s in 0..n.saturating_sub(1) {
-                    let mut m = vec![vec![0u64; n]; n];
                     for i in 0..n {
                         let origin = (i + n - s) % n;
-                        m[i][(i + 1) % n] = bytes[origin];
+                        let t = if s == 0 {
+                            &inputs[i]
+                        } else {
+                            received[i].last().expect("ring holds the last tensor")
+                        };
+                        tx.send(i, (i + 1) % n, push_frame(origin, t))
+                            .expect("ag-ring send");
                     }
-                    report.push(net.stage_from_matrix("ag-ring", &m));
+                    for (i, store) in received.iter_mut().enumerate() {
+                        let (from, t) = expect_push(tx.recv(i).expect("ag-ring recv"));
+                        assert_eq!(from as usize, (i + n - 1 - s) % n, "ring origin");
+                        store.push(t);
+                    }
+                    tx.end_stage("ag-ring").expect("ag-ring stage");
                 }
+                (0..n)
+                    .map(|i| merge_with_own(&received[i], &inputs[i]))
+                    .collect()
             }
             AgPattern::Hierarchy => {
                 // Recursive doubling: stage s exchanges the 2^s tensors
-                // gathered so far with the partner at distance 2^s.
+                // gathered so far with the partner at distance 2^s (the
+                // exchanged sets are disjoint blocks, so no dedup).
                 assert!(n.is_power_of_two(), "hierarchy pattern needs 2^k nodes");
-                let mut have: Vec<Vec<usize>> = (0..n).map(|i| vec![i]).collect();
+                let mut sets: Vec<Vec<CooTensor>> =
+                    inputs.iter().map(|t| vec![t.clone()]).collect();
                 let mut dist = 1;
                 while dist < n {
-                    let mut m = vec![vec![0u64; n]; n];
-                    let mut new_have = have.clone();
-                    for i in 0..n {
+                    for (i, set) in sets.iter().enumerate() {
                         let peer = i ^ dist;
-                        let payload: u64 = have[i].iter().map(|&t| bytes[t]).sum();
-                        m[i][peer] = payload;
-                        new_have[peer].extend(have[i].iter().copied());
+                        for t in set {
+                            tx.send(i, peer, push_frame(i, t)).expect("ag-hier send");
+                        }
                     }
-                    for h in new_have.iter_mut() {
-                        h.sort_unstable();
-                        h.dedup();
+                    for i in 0..n {
+                        for _ in 0..dist {
+                            let t = expect_push(tx.recv(i).expect("ag-hier recv")).1;
+                            sets[i].push(t);
+                        }
                     }
-                    have = new_have;
-                    report.push(net.stage_from_matrix("ag-hier", &m));
+                    tx.end_stage("ag-hier").expect("ag-hier stage");
                     dist <<= 1;
                 }
+                sets.into_iter()
+                    .map(|set| CooTensor::merge_all(&set))
+                    .collect()
             }
-        }
+        };
 
-        // One-shot aggregation at every node.
-        let aggregated = CooTensor::merge_all(inputs);
         SyncResult {
-            outputs: vec![aggregated; n],
-            report,
+            outputs,
+            report: tx.take_report(),
         }
     }
 }
-
-#[allow(dead_code)]
-fn unused(_: StageReport) {}
 
 #[cfg(test)]
 mod tests {
@@ -139,6 +156,7 @@ mod tests {
     use super::*;
     use crate::cluster::LinkKind;
     use crate::tensor::WireFormat;
+    use crate::wire::codec::COO_FRAME_OVERHEAD;
 
     #[test]
     fn all_patterns_correct() {
@@ -157,20 +175,23 @@ mod tests {
         let net = Network::new(n, LinkKind::Tcp25);
         let r = AgSparse::new(AgPattern::PointToPoint).sync(&inputs, &net);
         let total: u64 = inputs.iter().map(|t| t.wire_bytes() as u64).sum();
-        assert_eq!(r.report.total_bytes(), (n as u64 - 1) * total);
+        let framing = (n * COO_FRAME_OVERHEAD) as u64;
+        assert_eq!(r.report.total_bytes(), (n as u64 - 1) * (total + framing));
     }
 
     #[test]
     fn ring_and_p2p_same_total_traffic() {
+        // Same payloads, same n(n−1) frame count — only the stage
+        // structure differs.
         let n = 4;
         let inputs = overlapping_inputs(3, n, 1000, 30, 10);
         let net = Network::new(n, LinkKind::Tcp25);
         let p2p = AgSparse::new(AgPattern::PointToPoint).sync(&inputs, &net);
         let ring = AgSparse::new(AgPattern::Ring).sync(&inputs, &net);
         assert_eq!(p2p.report.total_bytes(), ring.report.total_bytes());
-        // but ring has n-1 sequential stages
         assert_eq!(ring.report.stages.len(), n - 1);
         assert_eq!(p2p.report.stages.len(), 1);
+        verify_outputs(&ring, &inputs);
     }
 
     #[test]

@@ -1,12 +1,18 @@
 //! Dense ring AllReduce — the paper's `Dense` baseline (Horovod/NCCL).
 //!
 //! Ring reduce-scatter (n−1 stages) + ring all-gather (n−1 stages); each
-//! node moves `M/n` dense values per stage, `2(n−1)/n · M` in total —
-//! the textbook bandwidth-optimal dense collective (paper footnote 2:
-//! Ring, incremental aggregation, Parallelism, Balanced).
+//! node moves one dense chunk of ≈`M/n` values per stage, `2(n−1)/n · M`
+//! in total — the textbook bandwidth-optimal dense collective (paper
+//! footnote 2: Ring, incremental aggregation, Parallelism, Balanced).
+//!
+//! The protocol executes for real over the transport: chunks of dense
+//! values travel as `DenseChunk` frames and are incrementally reduced at
+//! each hop. Only one chunk per node is ever materialized (the in-flight
+//! accumulator), so the full `n × M` dense expansion the first perf pass
+//! removed never comes back.
 
 use super::*;
-use crate::tensor::BYTES_F32;
+use crate::wire::Message;
 
 /// Dense Ring-AllReduce.
 #[derive(Clone, Debug, Default)]
@@ -15,6 +21,16 @@ pub struct DenseAllReduce;
 impl DenseAllReduce {
     pub fn new() -> Self {
         DenseAllReduce
+    }
+}
+
+/// Scatter-add the entries of `t` within `[lo, hi)` into `dst`
+/// (indexed relative to `lo`).
+fn add_range(t: &CooTensor, lo: u32, hi: u32, dst: &mut [f32]) {
+    let start = t.indices.partition_point(|&i| i < lo);
+    let end = t.indices.partition_point(|&i| i < hi);
+    for (&i, &v) in t.indices[start..end].iter().zip(&t.values[start..end]) {
+        dst[(i - lo) as usize] += v;
     }
 }
 
@@ -33,59 +49,110 @@ impl SyncScheme for DenseAllReduce {
         }
     }
 
-    fn sync_with(
+    fn sync_transport(
         &self,
         inputs: &[CooTensor],
-        net: &Network,
+        tx: &mut dyn Transport,
         _scratch: &mut SyncScratch,
     ) -> SyncResult {
         let n = inputs.len();
-        assert_eq!(n, net.endpoints);
+        assert_eq!(n, tx.endpoints());
         let dense_len = inputs[0].dense_len;
-
-        // Ring reduce-scatter + all-gather accounting. Dense payloads are
-        // data-independent, so we charge the exact stage structure without
-        // materializing n dense copies (the first perf pass found the
-        // 8×|G| dense materialization dominated large-model steps) and
-        // aggregate once via sparse scatter-add.
-        let shard_bytes = (crate::util::ceil_div(dense_len, n) * BYTES_F32) as u64;
-        let mut report = CommReport::new();
-        if n > 1 {
-            for _s in 0..n - 1 {
-                report.push(StageSpec::uniform(net, "reduce-scatter", shard_bytes));
-            }
-            for _s in 0..n - 1 {
-                report.push(StageSpec::uniform(net, "all-gather", shard_bytes));
-            }
+        if n == 1 {
+            let out = reference_sum(inputs).to_coo();
+            return SyncResult {
+                outputs: vec![out],
+                report: tx.take_report(),
+            };
         }
 
-        let sum = reference_sum(inputs);
-        let out = sum.to_coo();
+        // Chunk c covers [lo(c), hi(c)); chunks partition the range, so
+        // every stage moves exactly `dense_len` values across the ring.
+        let per = crate::util::ceil_div(dense_len, n);
+        let lo = |c: usize| (c * per).min(dense_len);
+        let hi = |c: usize| ((c + 1) * per).min(dense_len);
+
+        // --- Ring reduce-scatter: at step s node i forwards the partial
+        // sum of chunk (i − s) mod n and folds its own contribution into
+        // the chunk it receives from its predecessor.
+        let mut cur: Vec<Vec<f32>> = (0..n)
+            .map(|i| {
+                let mut acc = vec![0.0f32; hi(i) - lo(i)];
+                add_range(&inputs[i], lo(i) as u32, hi(i) as u32, &mut acc);
+                acc
+            })
+            .collect();
+        for s in 0..n - 1 {
+            for (i, chunk) in cur.iter().enumerate() {
+                let c = (i + n - s) % n;
+                tx.send(
+                    i,
+                    (i + 1) % n,
+                    FrameRef::DenseChunk {
+                        from: i as u32,
+                        offset: lo(c) as u64,
+                        values: chunk,
+                    },
+                )
+                .expect("allreduce reduce-scatter send");
+            }
+            for (i, slot) in cur.iter_mut().enumerate() {
+                let c = (i + n - 1 - s) % n;
+                match tx.recv(i).expect("allreduce reduce-scatter recv") {
+                    Message::DenseChunk {
+                        offset, mut values, ..
+                    } => {
+                        assert_eq!(offset as usize, lo(c), "ring chunk out of order");
+                        assert_eq!(values.len(), hi(c) - lo(c));
+                        add_range(&inputs[i], lo(c) as u32, hi(c) as u32, &mut values);
+                        *slot = values;
+                    }
+                    other => panic!("unexpected frame during reduce-scatter: {other:?}"),
+                }
+            }
+            tx.end_stage("reduce-scatter").expect("reduce-scatter stage");
+        }
+
+        // Node i now holds the fully reduced chunk (i + 1) mod n.
+        // --- Ring all-gather: circulate the reduced chunks; node 0
+        // assembles the aggregate every endpoint ends up with.
+        let mut full = vec![0.0f32; dense_len];
+        let first = 1 % n;
+        full[lo(first)..hi(first)].copy_from_slice(&cur[0]);
+        for s in 0..n - 1 {
+            for (i, chunk) in cur.iter().enumerate() {
+                let c = (i + 1 + n - s) % n;
+                tx.send(
+                    i,
+                    (i + 1) % n,
+                    FrameRef::DenseChunk {
+                        from: i as u32,
+                        offset: lo(c) as u64,
+                        values: chunk,
+                    },
+                )
+                .expect("allreduce all-gather send");
+            }
+            for (i, slot) in cur.iter_mut().enumerate() {
+                let c = (i + n - s) % n;
+                match tx.recv(i).expect("allreduce all-gather recv") {
+                    Message::DenseChunk { offset, values, .. } => {
+                        assert_eq!(offset as usize, lo(c), "ring chunk out of order");
+                        if i == 0 {
+                            full[lo(c)..hi(c)].copy_from_slice(&values);
+                        }
+                        *slot = values;
+                    }
+                    other => panic!("unexpected frame during all-gather: {other:?}"),
+                }
+            }
+            tx.end_stage("all-gather").expect("all-gather stage");
+        }
+
+        let out = crate::tensor::DenseTensor::from_values(full).to_coo();
         SyncResult {
             outputs: vec![out; n],
-            report,
-        }
-    }
-}
-
-/// Helper: a stage where every endpoint sends and receives the same
-/// number of bytes (balanced ring stages).
-pub(crate) struct StageSpec;
-
-impl StageSpec {
-    pub(crate) fn uniform(
-        net: &Network,
-        name: &str,
-        bytes_per_endpoint: u64,
-    ) -> crate::cluster::StageReport {
-        let sent = vec![bytes_per_endpoint; net.endpoints];
-        let recv = vec![bytes_per_endpoint; net.endpoints];
-        let time = net.stage_time(&sent, &recv);
-        crate::cluster::StageReport {
-            name: name.to_string(),
-            sent,
-            recv,
-            time,
+            report: tx.take_report(),
         }
     }
 }
@@ -95,6 +162,8 @@ mod tests {
     use super::super::testutil::overlapping_inputs;
     use super::*;
     use crate::cluster::LinkKind;
+    use crate::tensor::BYTES_F32;
+    use crate::wire::codec::DENSE_CHUNK_OVERHEAD;
 
     #[test]
     fn correct_aggregation() {
@@ -106,15 +175,31 @@ mod tests {
 
     #[test]
     fn traffic_matches_formula() {
-        // total bytes = n · 2(n-1) · M/n · 4  = 2(n-1) · M · 4
+        // Each of the 2(n−1) stages moves every chunk exactly once
+        // (chunks partition the range): M·4 payload bytes + n framed
+        // chunk headers per stage.
         let n = 8;
         let m = 4096;
         let inputs = overlapping_inputs(2, n, m, 10, 10);
         let net = Network::new(n, LinkKind::Tcp25);
         let r = DenseAllReduce::new().sync(&inputs, &net);
-        let expect = (2 * (n - 1) * m * BYTES_F32) as u64;
-        assert_eq!(r.report.total_bytes(), expect);
+        let per_stage = (m * BYTES_F32 + n * DENSE_CHUNK_OVERHEAD) as u64;
+        assert_eq!(r.report.total_bytes(), 2 * (n as u64 - 1) * per_stage);
         assert_eq!(r.report.stages.len(), 2 * (n - 1));
+    }
+
+    #[test]
+    fn uneven_range_still_exact() {
+        // dense_len not divisible by n: tail chunks shrink/empty, but the
+        // chunks still partition the range and the aggregate is exact.
+        let n = 5;
+        let inputs = overlapping_inputs(7, n, 1013, 40, 20);
+        let net = Network::new(n, LinkKind::Tcp25);
+        let r = DenseAllReduce::new().sync(&inputs, &net);
+        verify_outputs(&r, &inputs);
+        let payload: u64 = r.report.total_bytes()
+            - (2 * (n as u64 - 1)) * (n * DENSE_CHUNK_OVERHEAD) as u64;
+        assert_eq!(payload, 2 * (n as u64 - 1) * (1013 * BYTES_F32) as u64);
     }
 
     #[test]

@@ -1,10 +1,16 @@
 //! Communication schemes for sparse tensor synchronization (paper §2.3).
 //!
 //! Every scheme implements [`SyncScheme`]: given one sparse gradient
-//! tensor per machine, it *really* moves and aggregates the data
-//! (correctness is asserted against a dense reference in tests) while
-//! charging virtual network time through [`crate::cluster::Network`] —
-//! byte-for-byte the traffic the real system would generate.
+//! tensor per machine, it expresses its protocol as explicit send/recv
+//! of [`crate::wire::codec`] frames over a pluggable
+//! [`Transport`](crate::wire::Transport) — the same code path runs the
+//! virtual-time simulator ([`crate::wire::SimTransport`], the default
+//! under [`SyncScheme::sync_with`]), the real-frames mpsc fabric
+//! ([`crate::wire::ChannelTransport`]), and loopback TCP sockets
+//! ([`crate::wire::TcpTransport`]). Byte accounting is observed by the
+//! transport, not hand-maintained per scheme, so the [`CommReport`] a
+//! scheme returns is byte-for-byte the traffic its frames put on the
+//! data plane (frame headers included).
 //!
 //! The paper's four design dimensions (communication / aggregation /
 //! partition / balance, Table 2) are exposed via [`SchemeDims`] so the
@@ -28,7 +34,8 @@ pub use zen::{Zen, ZenIndexFormat};
 
 use crate::cluster::{CommReport, Network};
 use crate::hashing::{HashBitmapPayload, PartitionScratch};
-use crate::tensor::CooTensor;
+use crate::tensor::{CooSlice, CooTensor};
+use crate::wire::{FrameRef, SimTransport, Transport};
 
 /// Table 2 dimension values.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -81,10 +88,11 @@ pub struct SyncResult {
 /// One `SyncScratch` serves one concurrent synchronization at a time;
 /// the engine checks one out per in-flight bucket from a
 /// [`crate::util::ScratchPool`] so concurrent bucket syncs never
-/// contend. Schemes use the fields they need (Zen uses all of them;
-/// byte-accounting schemes ignore it) and must leave the scratch in a
-/// reusable state — every buffer is cleared by its consumer on the next
-/// call, so no cross-call cleanup is required.
+/// contend. Schemes use the fields they need (Zen the partition and
+/// payload buffers, OmniReduce the block staging; the COO-only schemes
+/// ignore it) and must leave the scratch in a reusable state — every
+/// buffer is cleared by its consumer on the next call, so no cross-call
+/// cleanup is required.
 #[derive(Default)]
 pub struct SyncScratch {
     /// Algorithm-1 scratch, one per worker input (grown on demand).
@@ -94,12 +102,71 @@ pub struct SyncScratch {
     /// Hash-bitmap decode output buffers.
     pub decode_indices: Vec<u32>,
     pub decode_values: Vec<f32>,
+    /// Flattened block payload staging (OmniReduce's `Blocks` frames).
+    pub block_values: Vec<f32>,
 }
 
 impl SyncScratch {
     pub fn new() -> Self {
         SyncScratch::default()
     }
+}
+
+/// Borrow a COO tensor as a `PushCoo` frame from worker `from`.
+pub(crate) fn push_frame(from: usize, t: &CooTensor) -> FrameRef<'_> {
+    FrameRef::PushCoo {
+        from: from as u32,
+        dense_len: t.dense_len,
+        indices: &t.indices,
+        values: &t.values,
+    }
+}
+
+/// Borrow a COO view as a `PushCoo` frame from worker `from`.
+pub(crate) fn push_frame_slice(from: usize, t: CooSlice<'_>) -> FrameRef<'_> {
+    FrameRef::PushCoo {
+        from: from as u32,
+        dense_len: t.dense_len,
+        indices: t.indices,
+        values: t.values,
+    }
+}
+
+/// Borrow a COO tensor as a `PullCoo` frame from server `server`.
+pub(crate) fn pull_frame(server: usize, t: &CooTensor) -> FrameRef<'_> {
+    FrameRef::PullCoo {
+        server: server as u32,
+        dense_len: t.dense_len,
+        indices: &t.indices,
+        values: &t.values,
+    }
+}
+
+/// Unwrap a received frame as a `PushCoo`; panic with context otherwise
+/// (a wrong kind mid-protocol is a scheme bug, not recoverable input).
+pub(crate) fn expect_push(msg: crate::wire::Message) -> (u32, CooTensor) {
+    match msg {
+        crate::wire::Message::PushCoo { from, tensor } => (from, tensor),
+        other => panic!("expected PushCoo, got {other:?}"),
+    }
+}
+
+/// Unwrap a received frame as a `PullCoo`; panic with context otherwise.
+pub(crate) fn expect_pull_coo(msg: crate::wire::Message) -> (u32, CooTensor) {
+    match msg {
+        crate::wire::Message::PullCoo { server, tensor } => (server, tensor),
+        other => panic!("expected PullCoo, got {other:?}"),
+    }
+}
+
+/// Merge received pieces with a node's own aggregate through borrowed
+/// views — no clone of the owned tensors (the worker-side assembly step
+/// of the push/pull schemes).
+pub(crate) fn merge_with_own(pieces: &[CooTensor], own: &CooTensor) -> CooTensor {
+    let mut views: Vec<CooSlice<'_>> = Vec::with_capacity(pieces.len() + 1);
+    views.extend(pieces.iter().map(|t| t.as_slice()));
+    views.push(own.as_slice());
+    CooTensor::merge_all_slices(&views)
 }
 
 /// A communication scheme for synchronizing sparse gradient tensors.
@@ -119,13 +186,32 @@ pub trait SyncScheme: Send + Sync {
         self.sync_with(inputs, net, &mut SyncScratch::new())
     }
 
-    /// Synchronize using caller-provided scratch memory. Implementations
-    /// must be oblivious to the scratch's previous contents, and callers
-    /// must not share one scratch across concurrent `sync_with` calls.
+    /// Synchronize over the virtual-time simulator backend
+    /// ([`SimTransport`] charging `net`'s α–β model) with caller-provided
+    /// scratch memory. Implementations must be oblivious to the
+    /// scratch's previous contents, and callers must not share one
+    /// scratch across concurrent calls.
     fn sync_with(
         &self,
         inputs: &[CooTensor],
         net: &Network,
+        scratch: &mut SyncScratch,
+    ) -> SyncResult {
+        let mut tx = SimTransport::new(net.clone());
+        self.sync_transport(inputs, &mut tx, scratch)
+    }
+
+    /// Execute the scheme's protocol over an explicit transport backend
+    /// — the one implementation every scheme provides. The scheme sends
+    /// and receives real [`crate::wire::codec`] frames; the transport
+    /// observes the bytes and produces the [`CommReport`] uniformly.
+    ///
+    /// Panics on transport failure (an in-flight synchronization cannot
+    /// recover from a torn-down data plane) and on protocol violations.
+    fn sync_transport(
+        &self,
+        inputs: &[CooTensor],
+        tx: &mut dyn Transport,
         scratch: &mut SyncScratch,
     ) -> SyncResult;
 }

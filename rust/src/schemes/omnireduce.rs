@@ -2,13 +2,15 @@
 //!
 //! Workers split the tensor into contiguous even partitions (one per
 //! aggregator) and transmit only *non-zero blocks* of each partition
-//! (block id + all `b` gradients of the block). No per-gradient indices —
-//! cheaper than COO at moderate density — but still contiguous
-//! partitioning, so it inherits Sparse PS's skew-driven imbalance, and
-//! dense-after-aggregation partitions degenerate to near-dense traffic.
+//! (block id + all `b` gradients of the block) as `Blocks` frames. No
+//! per-gradient indices — cheaper than COO at moderate density — but
+//! still contiguous partitioning, so it inherits Sparse PS's
+//! skew-driven imbalance, and dense-after-aggregation partitions
+//! degenerate to near-dense traffic.
 
 use super::*;
-use crate::tensor::{BlockTensor, WireFormat};
+use crate::tensor::BlockTensor;
+use crate::wire::{FrameRef, Message};
 
 /// OmniReduce scheme with a configurable block length.
 #[derive(Clone, Debug)]
@@ -20,6 +22,52 @@ impl OmniReduce {
     pub fn new(block_len: usize) -> Self {
         assert!(block_len > 0);
         OmniReduce { block_len }
+    }
+}
+
+/// Frame a block tensor: ids borrowed, blocks flattened into `buf`.
+fn send_block_tensor(
+    tx: &mut dyn Transport,
+    src: usize,
+    dst: usize,
+    from: usize,
+    bt: &BlockTensor,
+    buf: &mut Vec<f32>,
+) {
+    buf.clear();
+    for block in &bt.blocks {
+        buf.extend_from_slice(block);
+    }
+    tx.send(
+        src,
+        dst,
+        FrameRef::Blocks {
+            from: from as u32,
+            dense_len: bt.dense_len as u64,
+            block_len: bt.block_len as u32,
+            block_ids: &bt.block_ids,
+            values: &buf[..],
+        },
+    )
+    .expect("omnireduce send");
+}
+
+fn expect_blocks(msg: Message, block_len: usize) -> (u32, BlockTensor) {
+    match msg {
+        Message::Blocks {
+            from,
+            dense_len,
+            block_len: bl,
+            block_ids,
+            values,
+        } => {
+            assert_eq!(bl as usize, block_len, "block length mismatch");
+            (
+                from,
+                BlockTensor::from_wire_parts(dense_len as usize, block_len, block_ids, values),
+            )
+        }
+        other => panic!("omnireduce expected Blocks, got {other:?}"),
     }
 }
 
@@ -38,72 +86,101 @@ impl SyncScheme for OmniReduce {
         }
     }
 
-    fn sync_with(
+    fn sync_transport(
         &self,
         inputs: &[CooTensor],
-        net: &Network,
-        _scratch: &mut SyncScratch,
+        tx: &mut dyn Transport,
+        scratch: &mut SyncScratch,
     ) -> SyncResult {
         let n = inputs.len();
-        assert_eq!(n, net.endpoints);
+        assert_eq!(n, tx.endpoints());
         let dense_len = inputs[0].dense_len;
         let per = crate::util::ceil_div(dense_len, n) as u32;
+        let lo = |p: usize| (p as u32 * per).min(dense_len as u32);
+        let hi = |p: usize| ((p as u32 + 1) * per).min(dense_len as u32);
 
-        // Push: block-encode each contiguous partition.
-        let mut push = vec![vec![0u64; n]; n];
-        let mut shards: Vec<Vec<BlockTensor>> = vec![Vec::with_capacity(n); n];
+        // Push: block-encode each contiguous partition; only non-empty
+        // block sets are framed.
+        let mut own: Vec<Option<BlockTensor>> = (0..n).map(|_| None).collect();
+        let mut expected = vec![0usize; n];
         for (w, t) in inputs.iter().enumerate() {
             for p in 0..n {
-                let lo = (p as u32 * per).min(dense_len as u32);
-                let hi = ((p as u32 + 1) * per).min(dense_len as u32);
-                let part = t.slice_range(lo, hi);
+                let part = t.slice_range(lo(p), hi(p));
                 let blocks = BlockTensor::from_coo(&part, self.block_len);
-                if w != p {
-                    push[w][p] = blocks.wire_bytes() as u64;
+                if w == p {
+                    own[p] = Some(blocks);
+                } else if blocks.num_blocks() > 0 {
+                    send_block_tensor(tx, w, p, w, &blocks, &mut scratch.block_values);
+                    expected[p] += 1;
                 }
-                shards[p].push(blocks);
             }
         }
-        let mut report = CommReport::new();
-        report.push(net.stage_from_matrix("push", &push));
 
         // One-shot aggregation at each aggregator (block merge).
-        let aggregated: Vec<BlockTensor> = shards
-            .iter()
-            .map(|parts| {
-                let mut acc = parts[0].clone();
-                for p in &parts[1..] {
-                    acc = acc.merge(p);
-                }
-                acc
-            })
-            .collect();
+        let mut aggregated: Vec<BlockTensor> = Vec::with_capacity(n);
+        for p in 0..n {
+            let mut acc = own[p].take().expect("own block shard present");
+            for _ in 0..expected[p] {
+                let (_, bt) = expect_blocks(
+                    tx.recv(p).expect("omnireduce push recv"),
+                    self.block_len,
+                );
+                acc = acc.merge(&bt);
+            }
+            aggregated.push(acc);
+        }
+        tx.end_stage("push").expect("push stage");
 
-        // Pull: aggregator p broadcasts its aggregated block tensor.
-        let mut pull = vec![vec![0u64; n]; n];
-        for (p, row) in pull.iter_mut().enumerate() {
-            let bytes = aggregated[p].wire_bytes() as u64;
-            for (w, cell) in row.iter_mut().enumerate() {
+        // Pull: aggregator p broadcasts its aggregated block tensor —
+        // flattened once per aggregator, then framed to every recipient
+        // from the same borrowed staging buffer.
+        let mut expected = vec![0usize; n];
+        for (p, agg) in aggregated.iter().enumerate() {
+            if agg.num_blocks() == 0 {
+                continue;
+            }
+            scratch.block_values.clear();
+            for block in &agg.blocks {
+                scratch.block_values.extend_from_slice(block);
+            }
+            for w in 0..n {
                 if w != p {
-                    *cell = bytes;
+                    tx.send(
+                        p,
+                        w,
+                        FrameRef::Blocks {
+                            from: p as u32,
+                            dense_len: agg.dense_len as u64,
+                            block_len: agg.block_len as u32,
+                            block_ids: &agg.block_ids,
+                            values: &scratch.block_values,
+                        },
+                    )
+                    .expect("omnireduce pull send");
+                    expected[w] += 1;
                 }
             }
         }
-        report.push(net.stage_from_matrix("pull", &pull));
 
         // Reassemble at every worker.
-        let parts: Vec<(u32, CooTensor)> = aggregated
-            .iter()
-            .enumerate()
-            .map(|(p, bt)| {
-                let off = (p as u32 * per).min(dense_len as u32);
-                (off, bt.to_dense().to_coo())
-            })
-            .collect();
-        let full = CooTensor::concat_ranges(&parts, dense_len);
+        let mut outputs = Vec::with_capacity(n);
+        for w in 0..n {
+            let mut parts: Vec<(u32, CooTensor)> = Vec::with_capacity(n);
+            parts.push((lo(w), aggregated[w].to_dense().to_coo()));
+            for _ in 0..expected[w] {
+                let (from, bt) = expect_blocks(
+                    tx.recv(w).expect("omnireduce pull recv"),
+                    self.block_len,
+                );
+                parts.push((lo(from as usize), bt.to_dense().to_coo()));
+            }
+            outputs.push(CooTensor::concat_ranges(&parts, dense_len));
+        }
+        tx.end_stage("pull").expect("pull stage");
+
         SyncResult {
-            outputs: vec![full; n],
-            report,
+            outputs,
+            report: tx.take_report(),
         }
     }
 }

@@ -2,10 +2,11 @@
 //!
 //! Sparse allreduce with recursive doubling: `log n` stages; at stage `s`
 //! each node exchanges its *current partial aggregate* with the partner
-//! at distance `2^s` and merges incrementally (Hierarchy, Incremental,
-//! Centralization in Table 2). Densification bites: stage-`s` payloads
-//! have density `d^(2^s)`, so overlapped gradients are shipped
-//! repeatedly — Lemma 5's slack versus Balanced Parallelism.
+//! at distance `2^s` (a `PushCoo` frame each way) and merges
+//! incrementally (Hierarchy, Incremental, Centralization in Table 2).
+//! Densification bites: stage-`s` payloads have density `d^(2^s)`, so
+//! overlapped gradients are shipped repeatedly — Lemma 5's slack versus
+//! Balanced Parallelism.
 //!
 //! Non-power-of-two node counts use the standard pre/post folding step:
 //! the excess nodes first send their tensor to a partner inside the
@@ -38,19 +39,18 @@ impl SyncScheme for SparCml {
         }
     }
 
-    fn sync_with(
+    fn sync_transport(
         &self,
         inputs: &[CooTensor],
-        net: &Network,
+        tx: &mut dyn Transport,
         _scratch: &mut SyncScratch,
     ) -> SyncResult {
         let n = inputs.len();
-        assert_eq!(n, net.endpoints);
-        let mut report = CommReport::new();
+        assert_eq!(n, tx.endpoints());
         if n == 1 {
             return SyncResult {
                 outputs: vec![inputs[0].clone()],
-                report,
+                report: tx.take_report(),
             };
         }
 
@@ -62,44 +62,51 @@ impl SyncScheme for SparCml {
 
         // Pre-fold: node core+j sends its tensor to node j, which merges.
         if excess > 0 {
-            let mut m = vec![vec![0u64; n]; n];
             for j in 0..excess {
                 let src = core + j;
-                m[src][j] = crate::tensor::WireFormat::wire_bytes(&partial[src]) as u64;
-                let merged = partial[j].merge(&partial[src]);
-                partial[j] = merged;
+                tx.send(src, j, push_frame(src, &partial[src]))
+                    .expect("sparcml fold-in send");
             }
-            report.push(net.stage_from_matrix("fold-in", &m));
+            for j in 0..excess {
+                let (_, t) = expect_push(tx.recv(j).expect("sparcml fold-in recv"));
+                partial[j] = partial[j].merge(&t);
+            }
+            tx.end_stage("fold-in").expect("fold-in stage");
         }
 
-        // Recursive doubling within the core.
+        // Recursive doubling within the core: all sends of a stage leave
+        // before any merge, so partners exchange the same snapshot.
         let mut dist = 1usize;
         while dist < core {
-            let mut m = vec![vec![0u64; n]; n];
-            let snapshot = partial.clone();
-            for i in 0..core {
-                let peer = i ^ dist;
-                m[i][peer] = crate::tensor::WireFormat::wire_bytes(&snapshot[i]) as u64;
-                partial[i] = snapshot[i].merge(&snapshot[peer]);
+            for (i, t) in partial.iter().enumerate().take(core) {
+                tx.send(i, i ^ dist, push_frame(i, t))
+                    .expect("sparcml rec-double send");
             }
-            report.push(net.stage_from_matrix("rec-double", &m));
+            for i in 0..core {
+                let (from, t) = expect_push(tx.recv(i).expect("sparcml rec-double recv"));
+                assert_eq!(from as usize, i ^ dist, "recursive-doubling partner");
+                partial[i] = partial[i].merge(&t);
+            }
+            tx.end_stage("rec-double").expect("rec-double stage");
             dist <<= 1;
         }
 
         // Post-fold: send the final aggregate back to the excess nodes.
         if excess > 0 {
-            let mut m = vec![vec![0u64; n]; n];
             for j in 0..excess {
-                let dst = core + j;
-                m[j][dst] = crate::tensor::WireFormat::wire_bytes(&partial[j]) as u64;
-                partial[dst] = partial[j].clone();
+                tx.send(j, core + j, push_frame(j, &partial[j]))
+                    .expect("sparcml fold-out send");
             }
-            report.push(net.stage_from_matrix("fold-out", &m));
+            for j in 0..excess {
+                let (_, t) = expect_push(tx.recv(core + j).expect("sparcml fold-out recv"));
+                partial[core + j] = t;
+            }
+            tx.end_stage("fold-out").expect("fold-out stage");
         }
 
         SyncResult {
             outputs: partial,
-            report,
+            report: tx.take_report(),
         }
     }
 }
@@ -109,6 +116,7 @@ mod tests {
     use super::super::testutil::overlapping_inputs;
     use super::*;
     use crate::cluster::LinkKind;
+    use crate::wire::codec::COO_FRAME_OVERHEAD;
 
     #[test]
     fn power_of_two_correct() {
@@ -131,7 +139,8 @@ mod tests {
 
     #[test]
     fn payload_grows_with_densification() {
-        // With disjoint tensors, stage-s payload doubles every stage.
+        // With disjoint tensors, the stage-s COO payload (frame overhead
+        // excluded) doubles every stage.
         let n = 8;
         let nnz = 100usize;
         let inputs: Vec<CooTensor> = (0..n as u32)
@@ -142,10 +151,15 @@ mod tests {
             .collect();
         let net = Network::new(n, LinkKind::Tcp25);
         let r = SparCml::new().sync(&inputs, &net);
-        let per_stage: Vec<u64> = r.report.stages.iter().map(|s| s.sent[0]).collect();
-        assert_eq!(per_stage.len(), 3);
-        assert_eq!(per_stage[1], per_stage[0] * 2);
-        assert_eq!(per_stage[2], per_stage[0] * 4);
+        let payload: Vec<u64> = r
+            .report
+            .stages
+            .iter()
+            .map(|s| s.sent[0] - COO_FRAME_OVERHEAD as u64)
+            .collect();
+        assert_eq!(payload.len(), 3);
+        assert_eq!(payload[1], payload[0] * 2);
+        assert_eq!(payload[2], payload[0] * 4);
     }
 
     #[test]

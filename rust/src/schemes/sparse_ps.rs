@@ -6,6 +6,11 @@
 //! server: Push imbalance equals the skewness ratio and Pull inherits it.
 //! Servers are colocated with workers (server `p` on machine `p`), as in
 //! BytePS-style deployments.
+//!
+//! Push ships each worker's non-empty range slices as `PushCoo` frames
+//! (range-local indices); Pull broadcasts each server's aggregated
+//! partition as `PullCoo` frames. Empty payloads are never framed — a
+//! partition that holds no non-zeros generates no traffic at all.
 
 use super::*;
 
@@ -34,65 +39,76 @@ impl SyncScheme for SparsePs {
         }
     }
 
-    fn sync_with(
+    fn sync_transport(
         &self,
         inputs: &[CooTensor],
-        net: &Network,
+        tx: &mut dyn Transport,
         _scratch: &mut SyncScratch,
     ) -> SyncResult {
         let n = inputs.len();
-        assert_eq!(n, net.endpoints);
+        assert_eq!(n, tx.endpoints());
         let dense_len = inputs[0].dense_len;
         let per = crate::util::ceil_div(dense_len, n) as u32;
+        let lo = |p: usize| (p as u32 * per).min(dense_len as u32);
+        let hi = |p: usize| ((p as u32 + 1) * per).min(dense_len as u32);
 
-        // Push: worker w sends contiguous partition p to server p.
-        // Payload: COO entries (4B local index + 4B value).
-        let mut push = vec![vec![0u64; n]; n];
-        // server p's received shards (including its own, free locally)
-        let mut shards: Vec<Vec<CooTensor>> = vec![Vec::with_capacity(n); n];
+        // Push: worker w frames contiguous partition p to server p.
+        let mut own: Vec<Option<CooTensor>> = (0..n).map(|_| None).collect();
+        let mut expected = vec![0usize; n];
         for (w, t) in inputs.iter().enumerate() {
             for p in 0..n {
-                let lo = (p as u32 * per).min(dense_len as u32);
-                let hi = ((p as u32 + 1) * per).min(dense_len as u32);
-                let part = t.slice_range(lo, hi);
-                if w != p {
-                    push[w][p] = crate::tensor::WireFormat::wire_bytes(&part) as u64;
+                let part = t.slice_range(lo(p), hi(p));
+                if w == p {
+                    own[p] = Some(part);
+                } else if part.nnz() > 0 {
+                    tx.send(w, p, push_frame(w, &part)).expect("sparse-ps push");
+                    expected[p] += 1;
                 }
-                shards[p].push(part);
             }
         }
-        let mut report = CommReport::new();
-        report.push(net.stage_from_matrix("push", &push));
 
         // One-shot aggregation at each server.
-        let aggregated: Vec<CooTensor> = shards
-            .iter()
-            .map(|parts| CooTensor::merge_all(parts))
-            .collect();
+        let mut aggregated: Vec<CooTensor> = Vec::with_capacity(n);
+        for p in 0..n {
+            let mut shards = vec![own[p].take().expect("own shard present")];
+            for _ in 0..expected[p] {
+                shards.push(expect_push(tx.recv(p).expect("sparse-ps push recv")).1);
+            }
+            aggregated.push(CooTensor::merge_all(&shards));
+        }
+        tx.end_stage("push").expect("push stage");
 
         // Pull: server p point-to-point broadcasts its aggregated
         // partition to every worker (existing PS implementations, App. B).
-        let mut pull = vec![vec![0u64; n]; n];
-        for (p, row) in pull.iter_mut().enumerate() {
-            let bytes = crate::tensor::WireFormat::wire_bytes(&aggregated[p]) as u64;
-            for (w, cell) in row.iter_mut().enumerate() {
+        let mut expected = vec![0usize; n];
+        for (p, agg) in aggregated.iter().enumerate() {
+            if agg.nnz() == 0 {
+                continue;
+            }
+            for w in 0..n {
                 if w != p {
-                    *cell = bytes;
+                    tx.send(p, w, pull_frame(p, agg)).expect("sparse-ps pull");
+                    expected[w] += 1;
                 }
             }
         }
-        report.push(net.stage_from_matrix("pull", &pull));
 
         // Reassemble the full tensor at every worker.
-        let parts: Vec<(u32, CooTensor)> = aggregated
-            .iter()
-            .enumerate()
-            .map(|(p, t)| ((p as u32 * per).min(dense_len as u32), t.clone()))
-            .collect();
-        let full = CooTensor::concat_ranges(&parts, dense_len);
+        let mut outputs = Vec::with_capacity(n);
+        for w in 0..n {
+            let mut parts: Vec<(u32, CooTensor)> = Vec::with_capacity(n);
+            parts.push((lo(w), aggregated[w].clone()));
+            for _ in 0..expected[w] {
+                let (server, tensor) = expect_pull_coo(tx.recv(w).expect("sparse-ps pull recv"));
+                parts.push((lo(server as usize), tensor));
+            }
+            outputs.push(CooTensor::concat_ranges(&parts, dense_len));
+        }
+        tx.end_stage("pull").expect("pull stage");
+
         SyncResult {
-            outputs: vec![full; n],
-            report,
+            outputs,
+            report: tx.take_report(),
         }
     }
 }
@@ -103,6 +119,7 @@ mod tests {
     use super::*;
     use crate::cluster::LinkKind;
     use crate::util::Pcg64;
+    use crate::wire::codec::COO_FRAME_OVERHEAD;
 
     #[test]
     fn correct_aggregation() {
@@ -163,15 +180,19 @@ mod tests {
     }
 
     #[test]
-    fn payload_is_8_bytes_per_nnz() {
+    fn payload_is_8_bytes_per_nnz_plus_frame() {
         // Two workers, disjoint halves: worker 1's nnz all in partition 0.
         let a = CooTensor::from_sorted(100, vec![0, 1, 2], vec![1.0; 3]);
         let b = CooTensor::from_sorted(100, vec![3, 4], vec![1.0; 2]);
         let net = Network::new(2, LinkKind::Tcp25);
         let r = SparsePs::new().sync(&[a, b], &net);
-        // push: b sends its 2 entries (both < 50) to server 0 → 16 bytes;
-        // a sends nothing to server 1.
-        assert_eq!(r.report.stages[0].recv[0], 16);
+        // push: b frames its 2 entries (both < 50) to server 0 → 16 B of
+        // COO payload + one frame of overhead; a has nothing for
+        // server 1, so no frame at all.
+        assert_eq!(
+            r.report.stages[0].recv[0],
+            16 + COO_FRAME_OVERHEAD as u64
+        );
         assert_eq!(r.report.stages[0].recv[1], 0);
     }
 }

@@ -4,11 +4,11 @@
 //! fixed memory: colliding indices are overwritten and their gradients
 //! silently dropped. Communication is balanced like Zen's, but the
 //! aggregate is incomplete — Fig 14 shows the accuracy cost, Fig 8 the
-//! memory/loss trade-off. Pull uses COO.
+//! memory/loss trade-off. Push ships the surviving hash partitions as
+//! `PushCoo` frames; Pull uses COO broadcast.
 
 use super::*;
 use crate::hashing::StrawmanHasher;
-use crate::tensor::WireFormat;
 
 /// Lossy strawman scheme with memory `mem_multiple × expected_nnz` slots.
 pub struct StrawmanScheme {
@@ -48,30 +48,33 @@ impl SyncScheme for StrawmanScheme {
         }
     }
 
-    fn sync_with(
+    fn sync_transport(
         &self,
         inputs: &[CooTensor],
-        net: &Network,
+        tx: &mut dyn Transport,
         _scratch: &mut SyncScratch,
     ) -> SyncResult {
         let n = inputs.len();
-        assert_eq!(n, net.endpoints);
+        assert_eq!(n, tx.endpoints());
         assert_eq!(self.hasher.n, n);
 
-        // Push: strawman-partition (lossy) on every worker.
-        let mut push = vec![vec![0u64; n]; n];
-        let mut shards: Vec<Vec<CooTensor>> = vec![Vec::with_capacity(n); n];
+        // Push: strawman-partition (lossy) on every worker; frame every
+        // non-empty foreign partition.
+        let mut own: Vec<Option<CooTensor>> = (0..n).map(|_| None).collect();
+        let mut expected = vec![0usize; n];
         let mut total_nnz = 0usize;
         let mut total_lost = 0usize;
         for (w, t) in inputs.iter().enumerate() {
             let out = self.hasher.partition(t);
             total_nnz += t.nnz();
             total_lost += out.lost;
-            for (p, part) in out.parts.iter().enumerate() {
-                if w != p {
-                    push[w][p] = part.wire_bytes() as u64;
+            for (p, part) in out.parts.into_iter().enumerate() {
+                if p == w {
+                    own[w] = Some(part);
+                } else if part.nnz() > 0 {
+                    tx.send(w, p, push_frame(w, &part)).expect("strawman push");
+                    expected[p] += 1;
                 }
-                shards[p].push(part.clone());
             }
         }
         *self.last_loss_rate.lock().unwrap() = if total_nnz == 0 {
@@ -79,30 +82,43 @@ impl SyncScheme for StrawmanScheme {
         } else {
             total_lost as f64 / total_nnz as f64
         };
-        let mut report = CommReport::new();
-        report.push(net.stage_from_matrix("push", &push));
 
-        let aggregated: Vec<CooTensor> = shards
-            .iter()
-            .map(|parts| CooTensor::merge_all(parts))
-            .collect();
+        let mut aggregated: Vec<CooTensor> = Vec::with_capacity(n);
+        for p in 0..n {
+            let mut shards = vec![own[p].take().expect("own shard present")];
+            for _ in 0..expected[p] {
+                shards.push(expect_push(tx.recv(p).expect("strawman push recv")).1);
+            }
+            aggregated.push(CooTensor::merge_all(&shards));
+        }
+        tx.end_stage("push").expect("push stage");
 
-        // Pull: COO broadcast.
-        let mut pull = vec![vec![0u64; n]; n];
-        for (p, row) in pull.iter_mut().enumerate() {
-            let bytes = aggregated[p].wire_bytes() as u64;
-            for (w, cell) in row.iter_mut().enumerate() {
+        // Pull: COO broadcast of each server's (disjoint) aggregate.
+        let mut expected = vec![0usize; n];
+        for (p, agg) in aggregated.iter().enumerate() {
+            if agg.nnz() == 0 {
+                continue;
+            }
+            for w in 0..n {
                 if w != p {
-                    *cell = bytes;
+                    tx.send(p, w, pull_frame(p, agg)).expect("strawman pull");
+                    expected[w] += 1;
                 }
             }
         }
-        report.push(net.stage_from_matrix("pull", &pull));
+        let mut outputs = Vec::with_capacity(n);
+        for w in 0..n {
+            let mut pieces: Vec<CooTensor> = Vec::with_capacity(expected[w]);
+            for _ in 0..expected[w] {
+                pieces.push(expect_pull_coo(tx.recv(w).expect("strawman pull recv")).1);
+            }
+            outputs.push(merge_with_own(&pieces, &aggregated[w]));
+        }
+        tx.end_stage("pull").expect("pull stage");
 
-        let full = CooTensor::merge_all(&aggregated);
         SyncResult {
-            outputs: vec![full; n],
-            report,
+            outputs,
+            report: tx.take_report(),
         }
     }
 }

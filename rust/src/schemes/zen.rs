@@ -17,9 +17,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use super::*;
-use crate::hashing::{HashBitmapCodec, HierarchicalHasher};
-use crate::tensor::{CooSlice, WireFormat};
+use crate::hashing::{HashBitmapCodec, HashBitmapPayload, HierarchicalHasher};
 use crate::util::OnceMap;
+use crate::wire::Message;
 
 /// Which index representation Pull uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -140,22 +140,21 @@ impl SyncScheme for Zen {
         }
     }
 
-    fn sync_with(
+    fn sync_transport(
         &self,
         inputs: &[CooTensor],
-        net: &Network,
+        tx: &mut dyn Transport,
         scratch: &mut SyncScratch,
     ) -> SyncResult {
         let n = inputs.len();
-        assert_eq!(n, net.endpoints);
+        assert_eq!(n, tx.endpoints());
         assert_eq!(self.hasher.n, n, "Zen hasher partitions must equal endpoints");
         let dense_len = inputs[0].dense_len;
 
         // --- Push: hash-partition on every worker (Alg 1) into reused
-        // per-worker scratch. Partitions stay as zero-copy views until
-        // aggregation — the partition→encode→decode leg is
-        // allocation-free; the aggregation step below still materializes
-        // the n owned server aggregates (they become the sync outputs).
+        // per-worker scratch, then frame each foreign partition straight
+        // out of its zero-copy view — the send side never materializes
+        // owned tensors.
         let sw = crate::util::Stopwatch::start();
         if scratch.partitions.len() < n {
             scratch
@@ -169,91 +168,155 @@ impl SyncScheme for Zen {
         let hash_time = sw.elapsed() / n as f64;
 
         let partitions = &scratch.partitions[..n];
-        let mut push = vec![vec![0u64; n]; n];
         for (w, ps) in partitions.iter().enumerate() {
-            for (p, row_cell) in push[w].iter_mut().enumerate() {
-                if w != p {
-                    *row_cell = ps.part(p).wire_bytes() as u64;
+            for p in 0..n {
+                if p != w {
+                    tx.send(w, p, push_frame_slice(w, ps.part(p)))
+                        .expect("zen push send");
                 }
             }
         }
-        let mut report = CommReport::new();
-        if self.charge_compute {
-            report.compute_overhead += hash_time;
-        }
-        report.push(net.stage_from_matrix("push", &push));
 
-        // --- One-shot aggregation at each server: server p merges every
-        // worker's partition-p view straight out of the scratch.
+        // --- One-shot aggregation at each server: server p merges its
+        // own partition-p view with the n−1 shards it received.
+        let mut received: Vec<Vec<CooTensor>> = Vec::with_capacity(n);
+        for p in 0..n {
+            let mut got = Vec::with_capacity(n - 1);
+            for _ in 0..n.saturating_sub(1) {
+                got.push(expect_push(tx.recv(p).expect("zen push recv")).1);
+            }
+            received.push(got);
+        }
         let mut views: Vec<CooSlice<'_>> = Vec::with_capacity(n);
         let aggregated: Vec<CooTensor> = (0..n)
             .map(|p| {
                 views.clear();
-                views.extend(partitions.iter().map(|ps| ps.part(p)));
+                views.push(partitions[p].part(p));
+                views.extend(received[p].iter().map(|t| t.as_slice()));
                 CooTensor::merge_all_slices(&views)
             })
             .collect();
+        tx.end_stage("push").expect("zen push stage");
 
-        // --- Pull: broadcast each server's aggregate. ---
-        let pull_payload_bytes: Vec<u64> = match self.format {
-            ZenIndexFormat::Coo => aggregated.iter().map(|t| t.wire_bytes() as u64).collect(),
+        // --- Pull: broadcast each server's aggregate in the configured
+        // index format; every worker decodes what it receives and merges
+        // the (disjoint) aggregated partitions.
+        let mut enc_time = 0.0f64;
+        let outputs: Vec<CooTensor> = match self.format {
+            ZenIndexFormat::Coo => {
+                for (p, agg) in aggregated.iter().enumerate() {
+                    for w in 0..n {
+                        if w != p {
+                            tx.send(p, w, pull_frame(p, agg)).expect("zen pull send");
+                        }
+                    }
+                }
+                let mut outputs = Vec::with_capacity(n);
+                for w in 0..n {
+                    let mut pieces: Vec<CooTensor> = Vec::with_capacity(n - 1);
+                    for _ in 0..n.saturating_sub(1) {
+                        pieces.push(expect_pull_coo(tx.recv(w).expect("zen pull recv")).1);
+                    }
+                    outputs.push(merge_with_own(&pieces, &aggregated[w]));
+                }
+                outputs
+            }
             ZenIndexFormat::HashBitmap => {
                 let domains = self.domains_for(dense_len);
-                let sw = crate::util::Stopwatch::start();
-                let payload = &mut scratch.payload;
-                let bytes: Vec<u64> = aggregated
-                    .iter()
-                    .enumerate()
-                    .map(|(p, t)| {
-                        let codec = HashBitmapCodec::new(&domains[p]);
-                        codec.encode_into(t.as_slice(), payload);
-                        payload.wire_bytes() as u64
-                    })
-                    .collect();
-                if self.charge_compute {
-                    report.compute_overhead += sw.elapsed() / n as f64;
-                }
-                // Decode on a worker to validate the codec path (debug
-                // builds only; outside the timed region).
-                #[cfg(debug_assertions)]
-                for (p, t) in aggregated.iter().enumerate() {
+                for (p, agg) in aggregated.iter().enumerate() {
                     let codec = HashBitmapCodec::new(&domains[p]);
-                    codec.encode_into(t.as_slice(), payload);
-                    codec.decode_into(
-                        payload,
-                        &mut scratch.decode_indices,
-                        &mut scratch.decode_values,
-                    );
-                    debug_assert_eq!(scratch.decode_indices, t.indices);
-                    debug_assert_eq!(scratch.decode_values, t.values);
+                    let sw = crate::util::Stopwatch::start();
+                    codec.encode_into(agg.as_slice(), &mut scratch.payload);
+                    enc_time += sw.elapsed();
+                    for w in 0..n {
+                        if w != p {
+                            tx.send(
+                                p,
+                                w,
+                                FrameRef::PullHashBitmap {
+                                    server: p as u32,
+                                    bitmap: &scratch.payload.bitmap,
+                                    values: &scratch.payload.values,
+                                },
+                            )
+                            .expect("zen pull send");
+                        }
+                    }
                 }
-                bytes
+                let mut outputs = Vec::with_capacity(n);
+                for w in 0..n {
+                    let mut pieces: Vec<CooTensor> = Vec::with_capacity(n - 1);
+                    for _ in 0..n.saturating_sub(1) {
+                        match tx.recv(w).expect("zen pull recv") {
+                            Message::PullHashBitmap {
+                                server,
+                                bitmap,
+                                values,
+                            } => {
+                                let codec = HashBitmapCodec::new(&domains[server as usize]);
+                                let payload = HashBitmapPayload { bitmap, values };
+                                pieces.push(codec.decode(&payload, dense_len));
+                            }
+                            other => panic!("zen pull expected PullHashBitmap, got {other:?}"),
+                        }
+                    }
+                    outputs.push(merge_with_own(&pieces, &aggregated[w]));
+                }
+                outputs
             }
-            ZenIndexFormat::NaiveBitmap => aggregated
-                .iter()
-                .map(|t| {
-                    // bitmap over the WHOLE range + values
-                    (crate::util::ceil_div(dense_len, 8)
-                        + t.nnz() * crate::tensor::BYTES_F32) as u64
-                })
-                .collect(),
+            ZenIndexFormat::NaiveBitmap => {
+                // Naive positional bitmap over the WHOLE range + values
+                // (§3.2.1's strawman: n·|G|/32 total, Fig 17).
+                for (p, agg) in aggregated.iter().enumerate() {
+                    let sw = crate::util::Stopwatch::start();
+                    scratch.payload.bitmap.reset(dense_len);
+                    for &i in &agg.indices {
+                        scratch.payload.bitmap.set(i as usize);
+                    }
+                    enc_time += sw.elapsed();
+                    for w in 0..n {
+                        if w != p {
+                            tx.send(
+                                p,
+                                w,
+                                FrameRef::PullHashBitmap {
+                                    server: p as u32,
+                                    bitmap: &scratch.payload.bitmap,
+                                    values: &agg.values,
+                                },
+                            )
+                            .expect("zen pull send");
+                        }
+                    }
+                }
+                let mut outputs = Vec::with_capacity(n);
+                for w in 0..n {
+                    let mut pieces: Vec<CooTensor> = Vec::with_capacity(n - 1);
+                    for _ in 0..n.saturating_sub(1) {
+                        match tx.recv(w).expect("zen pull recv") {
+                            Message::PullHashBitmap { bitmap, values, .. } => {
+                                // positions are global indices directly
+                                pieces.push(CooTensor::from_sorted(
+                                    dense_len,
+                                    bitmap.ones(),
+                                    values,
+                                ));
+                            }
+                            other => panic!("zen pull expected PullHashBitmap, got {other:?}"),
+                        }
+                    }
+                    outputs.push(merge_with_own(&pieces, &aggregated[w]));
+                }
+                outputs
+            }
         };
-        let mut pull = vec![vec![0u64; n]; n];
-        for (p, row) in pull.iter_mut().enumerate() {
-            for (w, cell) in row.iter_mut().enumerate() {
-                if w != p {
-                    *cell = pull_payload_bytes[p];
-                }
-            }
-        }
-        report.push(net.stage_from_matrix("pull", &pull));
+        tx.end_stage("pull").expect("zen pull stage");
 
-        // Workers merge the (disjoint) aggregated partitions.
-        let full = CooTensor::merge_all(&aggregated);
-        SyncResult {
-            outputs: vec![full; n],
-            report,
+        let mut report = tx.take_report();
+        if self.charge_compute {
+            report.compute_overhead += hash_time + enc_time / n as f64;
         }
+        SyncResult { outputs, report }
     }
 }
 

@@ -66,6 +66,27 @@ impl BlockTensor {
         }
     }
 
+    /// Rebuild from wire parts: ascending block ids plus the
+    /// concatenated block payloads (`block_len` values per id) — the
+    /// layout of a `Blocks` frame ([`crate::wire::codec`]).
+    pub fn from_wire_parts(
+        dense_len: usize,
+        block_len: usize,
+        block_ids: Vec<u32>,
+        values: Vec<f32>,
+    ) -> Self {
+        assert!(block_len > 0);
+        assert_eq!(values.len(), block_ids.len() * block_len);
+        debug_assert!(block_ids.windows(2).all(|w| w[0] < w[1]));
+        let blocks = values.chunks(block_len).map(|c| c.to_vec()).collect();
+        BlockTensor {
+            dense_len,
+            block_len,
+            block_ids,
+            blocks,
+        }
+    }
+
     pub fn num_blocks(&self) -> usize {
         self.block_ids.len()
     }
@@ -179,6 +200,16 @@ mod tests {
         let b = BlockTensor::from_dense(&t, 4);
         // one block: 4B id + 4 * 4B values
         assert_eq!(b.wire_bytes(), 4 + 16);
+    }
+
+    #[test]
+    fn from_wire_parts_roundtrip() {
+        let t = dense(&[0.0, 3.0, 0.0, 0.0, 0.0, 0.0, 0.0, 7.0, 1.0]);
+        let b = BlockTensor::from_dense(&t, 3);
+        let flat: Vec<f32> = b.blocks.iter().flatten().copied().collect();
+        let back =
+            BlockTensor::from_wire_parts(b.dense_len, b.block_len, b.block_ids.clone(), flat);
+        assert_eq!(back, b);
     }
 
     #[test]

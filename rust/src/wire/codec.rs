@@ -19,9 +19,32 @@ const VERSION: u8 = 1;
 /// Frame header bytes: magic + version + kind + body_len.
 pub const FRAME_HEADER: usize = 2 + 1 + 1 + 4;
 
+/// Fixed per-frame bytes a COO frame (`PushCoo`/`PullCoo`) adds on top
+/// of its 8·nnz payload: header + from/server(4) + dense_len(8) + nnz(4).
+pub const COO_FRAME_OVERHEAD: usize = FRAME_HEADER + 4 + 8 + 4;
+
+/// Fixed per-frame bytes of a `DenseChunk` on top of its 4·count payload:
+/// header + from(4) + offset(8) + count(4).
+pub const DENSE_CHUNK_OVERHEAD: usize = FRAME_HEADER + 4 + 8 + 4;
+
+/// Fixed per-frame bytes of a `Blocks` frame on top of its
+/// `nblocks·(4 + 4·block_len)` payload: header + from(4) + dense_len(8)
+/// + block_len(4) + nblocks(4).
+pub const BLOCKS_FRAME_OVERHEAD: usize = FRAME_HEADER + 4 + 8 + 4 + 4;
+
+/// Fixed per-frame bytes of a `PullHashBitmap` on top of its bitmap
+/// words + 4·nnz values: header + server(4) + domain_len(8) + nnz(4).
+/// (The bitmap itself is u64-word padded: `ceil(bits/64)·8` bytes on the
+/// wire versus the byte-granular `ceil(bits/8)` analytic size.)
+pub const HASH_BITMAP_FRAME_OVERHEAD: usize = FRAME_HEADER + 4 + 8 + 4;
+
 /// Reject pull-bitmap frames claiming more than 2^40 bits (128 GiB of
 /// words) before sizing any buffer from the untrusted length field.
 const MAX_BITMAP_BITS: u64 = 1 << 40;
+
+/// Reject block frames claiming more than 2^32 gradient values (16 GiB)
+/// before multiplying the two untrusted u32 size fields.
+const MAX_BLOCK_VALUES: u64 = 1 << 32;
 
 /// Codec error.
 #[derive(Debug, PartialEq)]
@@ -32,6 +55,12 @@ pub enum WireError {
     BadKind(u8),
     LengthMismatch { header: usize, actual: usize },
     Malformed(&'static str),
+    /// The peer endpoint is gone: its channel hung up, its socket closed,
+    /// or it was explicitly disconnected. Distinct from [`Malformed`]
+    /// (which means the bytes arrived but could not be decoded).
+    ///
+    /// [`Malformed`]: WireError::Malformed
+    Disconnected,
 }
 
 impl std::fmt::Display for WireError {
@@ -47,6 +76,7 @@ impl std::fmt::Display for WireError {
                 write!(f, "body length mismatch: header {header}, actual {actual}")
             }
             WireError::Malformed(msg) => write!(f, "malformed body: {msg}"),
+            WireError::Disconnected => write!(f, "peer endpoint disconnected"),
         }
     }
 }
@@ -69,6 +99,29 @@ pub enum Message {
     },
     /// Pull payload in COO (Zen-COO ablation / Sparse PS).
     PullCoo { server: u32, tensor: CooTensor },
+    /// A contiguous run of dense gradient values — the shard currency of
+    /// ring collectives (dense reduce-scatter / all-gather).
+    /// Body: from(u32) offset(u64) count(u32) values[f32×count]
+    DenseChunk {
+        from: u32,
+        /// Start of the run within the dense range.
+        offset: u64,
+        values: Vec<f32>,
+    },
+    /// Non-zero blocks of a contiguous partition (OmniReduce's format):
+    /// one u32 id plus all `block_len` gradients per block.
+    /// Body: from(u32) dense_len(u64) block_len(u32) nblocks(u32)
+    ///       block_ids[u32×nblocks] values[f32×nblocks·block_len]
+    Blocks {
+        from: u32,
+        /// Dense length of the (partition-local) range the blocks tile.
+        dense_len: u64,
+        block_len: u32,
+        /// Ascending block ids.
+        block_ids: Vec<u32>,
+        /// Concatenated block payloads, `block_len` values per id.
+        values: Vec<f32>,
+    },
     /// Control: barrier/done marker used by the fabric tests.
     Barrier { epoch: u32 },
 }
@@ -204,10 +257,6 @@ impl Reader<'_> {
     }
 }
 
-fn coo_body_len(t: &CooTensor) -> usize {
-    8 + 4 + t.nnz() * 8
-}
-
 fn write_coo_parts(w: &mut Writer, dense_len: usize, indices: &[u32], values: &[f32]) {
     debug_assert_eq!(indices.len(), values.len());
     w.u64(dense_len as u64);
@@ -232,41 +281,228 @@ fn read_coo(r: &mut Reader) -> Result<CooTensor, WireError> {
 
 impl Encode for Message {
     fn encoded_len(&self) -> usize {
-        FRAME_HEADER
-            + match self {
-                Message::PushCoo { tensor, .. } => 4 + coo_body_len(tensor),
-                Message::PullHashBitmap { bitmap, values, .. } => {
-                    let words = crate::util::ceil_div(bitmap.len().max(1), 64);
-                    4 + 8 + words * 8 + 4 + values.len() * 4
-                }
-                Message::PullCoo { tensor, .. } => 4 + coo_body_len(tensor),
-                Message::Barrier { .. } => 4,
-            }
+        self.as_frame().encoded_len()
     }
 
     fn encode(&self, out: &mut Vec<u8>) {
+        self.as_frame().encode(out)
+    }
+}
+
+impl Message {
+    /// Borrow this message as a [`FrameRef`] (the encoders' currency).
+    pub fn as_frame(&self) -> FrameRef<'_> {
         match self {
-            Message::PushCoo { from, tensor } => encode_push_coo(
-                *from,
-                tensor.dense_len,
-                &tensor.indices,
-                &tensor.values,
-                out,
-            ),
+            Message::PushCoo { from, tensor } => FrameRef::PushCoo {
+                from: *from,
+                dense_len: tensor.dense_len,
+                indices: &tensor.indices,
+                values: &tensor.values,
+            },
             Message::PullHashBitmap {
                 server,
                 bitmap,
                 values,
-            } => encode_pull_hash_bitmap(*server, bitmap, values, out),
-            Message::PullCoo { server, tensor } => {
+            } => FrameRef::PullHashBitmap {
+                server: *server,
+                bitmap,
+                values,
+            },
+            Message::PullCoo { server, tensor } => FrameRef::PullCoo {
+                server: *server,
+                dense_len: tensor.dense_len,
+                indices: &tensor.indices,
+                values: &tensor.values,
+            },
+            Message::DenseChunk {
+                from,
+                offset,
+                values,
+            } => FrameRef::DenseChunk {
+                from: *from,
+                offset: *offset,
+                values,
+            },
+            Message::Blocks {
+                from,
+                dense_len,
+                block_len,
+                block_ids,
+                values,
+            } => FrameRef::Blocks {
+                from: *from,
+                dense_len: *dense_len,
+                block_len: *block_len,
+                block_ids,
+                values,
+            },
+            Message::Barrier { epoch } => FrameRef::Barrier { epoch: *epoch },
+        }
+    }
+}
+
+/// A borrowed view of a [`Message`] — what schemes hand to
+/// [`crate::wire::Transport::send`]. Frames are built from slices the
+/// caller already owns (partition views, reused payload buffers), so
+/// sending never clones tensor data: `SimTransport` only reads
+/// [`encoded_len`](FrameRef::encoded_len), the byte-moving backends
+/// encode straight from the borrows.
+#[derive(Clone, Copy, Debug)]
+pub enum FrameRef<'a> {
+    PushCoo {
+        from: u32,
+        dense_len: usize,
+        indices: &'a [u32],
+        values: &'a [f32],
+    },
+    PullHashBitmap {
+        server: u32,
+        bitmap: &'a Bitmap,
+        values: &'a [f32],
+    },
+    PullCoo {
+        server: u32,
+        dense_len: usize,
+        indices: &'a [u32],
+        values: &'a [f32],
+    },
+    DenseChunk {
+        from: u32,
+        offset: u64,
+        values: &'a [f32],
+    },
+    Blocks {
+        from: u32,
+        dense_len: u64,
+        block_len: u32,
+        block_ids: &'a [u32],
+        values: &'a [f32],
+    },
+    Barrier {
+        epoch: u32,
+    },
+}
+
+impl FrameRef<'_> {
+    /// Exact size of the encoded frame (header included). Asserted equal
+    /// to `encode`'s output length by the codec tests — this is the byte
+    /// matrix `SimTransport` observes.
+    pub fn encoded_len(&self) -> usize {
+        FRAME_HEADER
+            + match self {
+                FrameRef::PushCoo { indices, .. } => 4 + 8 + 4 + indices.len() * 8,
+                FrameRef::PullHashBitmap { bitmap, values, .. } => {
+                    let words = crate::util::ceil_div(bitmap.len().max(1), 64);
+                    4 + 8 + words * 8 + 4 + values.len() * 4
+                }
+                FrameRef::PullCoo { indices, .. } => 4 + 8 + 4 + indices.len() * 8,
+                FrameRef::DenseChunk { values, .. } => 4 + 8 + 4 + values.len() * 4,
+                FrameRef::Blocks {
+                    block_ids, values, ..
+                } => 4 + 8 + 4 + 4 + block_ids.len() * 4 + values.len() * 4,
+                FrameRef::Barrier { .. } => 4,
+            }
+    }
+
+    /// Append the encoded frame to `out` (cleared by the caller when the
+    /// buffer is reused).
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        match *self {
+            FrameRef::PushCoo {
+                from,
+                dense_len,
+                indices,
+                values,
+            } => encode_push_coo(from, dense_len, indices, values, out),
+            FrameRef::PullHashBitmap {
+                server,
+                bitmap,
+                values,
+            } => encode_pull_hash_bitmap(server, bitmap, values, out),
+            FrameRef::PullCoo {
+                server,
+                dense_len,
+                indices,
+                values,
+            } => {
                 frame(out, 3, |w| {
-                    w.u32(*server);
-                    write_coo_parts(w, tensor.dense_len, &tensor.indices, &tensor.values);
+                    w.u32(server);
+                    write_coo_parts(w, dense_len, indices, values);
                 });
             }
-            Message::Barrier { epoch } => {
-                frame(out, 4, |w| w.u32(*epoch));
+            FrameRef::DenseChunk {
+                from,
+                offset,
+                values,
+            } => encode_dense_chunk(from, offset, values, out),
+            FrameRef::Blocks {
+                from,
+                dense_len,
+                block_len,
+                block_ids,
+                values,
+            } => encode_blocks(from, dense_len, block_len, block_ids, values, out),
+            FrameRef::Barrier { epoch } => {
+                frame(out, 4, |w| w.u32(epoch));
             }
+        }
+    }
+
+    /// Materialize an owned [`Message`] (the in-process loopback path of
+    /// `SimTransport`: sender and receiver share an address space, so the
+    /// payload is cloned instead of serialized).
+    pub fn to_message(&self) -> Message {
+        match *self {
+            FrameRef::PushCoo {
+                from,
+                dense_len,
+                indices,
+                values,
+            } => Message::PushCoo {
+                from,
+                tensor: CooTensor::from_sorted(dense_len, indices.to_vec(), values.to_vec()),
+            },
+            FrameRef::PullHashBitmap {
+                server,
+                bitmap,
+                values,
+            } => Message::PullHashBitmap {
+                server,
+                bitmap: bitmap.clone(),
+                values: values.to_vec(),
+            },
+            FrameRef::PullCoo {
+                server,
+                dense_len,
+                indices,
+                values,
+            } => Message::PullCoo {
+                server,
+                tensor: CooTensor::from_sorted(dense_len, indices.to_vec(), values.to_vec()),
+            },
+            FrameRef::DenseChunk {
+                from,
+                offset,
+                values,
+            } => Message::DenseChunk {
+                from,
+                offset,
+                values: values.to_vec(),
+            },
+            FrameRef::Blocks {
+                from,
+                dense_len,
+                block_len,
+                block_ids,
+                values,
+            } => Message::Blocks {
+                from,
+                dense_len,
+                block_len,
+                block_ids: block_ids.to_vec(),
+                values: values.to_vec(),
+            },
+            FrameRef::Barrier { epoch } => Message::Barrier { epoch },
         }
     }
 }
@@ -317,6 +553,38 @@ pub fn encode_pull_hash_bitmap(server: u32, bitmap: &Bitmap, values: &[f32], out
     });
 }
 
+/// Append a `DenseChunk` frame from a borrowed value run — the shard
+/// writer of the dense ring collectives.
+pub fn encode_dense_chunk(from: u32, offset: u64, values: &[f32], out: &mut Vec<u8>) {
+    frame(out, 5, |w| {
+        w.u32(from);
+        w.u64(offset);
+        w.u32(values.len() as u32);
+        w.f32s(values);
+    });
+}
+
+/// Append a `Blocks` frame from borrowed block ids + concatenated block
+/// values (`block_len` values per id) — OmniReduce's wire format.
+pub fn encode_blocks(
+    from: u32,
+    dense_len: u64,
+    block_len: u32,
+    block_ids: &[u32],
+    values: &[f32],
+    out: &mut Vec<u8>,
+) {
+    debug_assert_eq!(values.len(), block_ids.len() * block_len as usize);
+    frame(out, 6, |w| {
+        w.u32(from);
+        w.u64(dense_len);
+        w.u32(block_len);
+        w.u32(block_ids.len() as u32);
+        w.u32s(block_ids);
+        w.f32s(values);
+    });
+}
+
 impl Decode for Message {
     fn decode(buf: &[u8]) -> Result<(Self, usize), WireError> {
         let mut r = Reader { buf, pos: 0 };
@@ -363,6 +631,48 @@ impl Decode for Message {
                 Message::PullCoo { server, tensor }
             }
             4 => Message::Barrier { epoch: r.u32()? },
+            5 => {
+                let from = r.u32()?;
+                let offset = r.u64()?;
+                let count = r.u32()? as usize;
+                let values = r.f32s(count)?;
+                Message::DenseChunk {
+                    from,
+                    offset,
+                    values,
+                }
+            }
+            6 => {
+                let from = r.u32()?;
+                let dense_len = r.u64()?;
+                let block_len = r.u32()?;
+                if block_len == 0 {
+                    return Err(WireError::Malformed("zero block length"));
+                }
+                let nblocks = r.u32()? as usize;
+                // Bound the value count before sizing anything from the
+                // two untrusted u32s (their product can overflow).
+                if nblocks as u64 * block_len as u64 > MAX_BLOCK_VALUES {
+                    return Err(WireError::Malformed("implausible block payload"));
+                }
+                let block_ids = r.u32s(nblocks)?;
+                if block_ids.windows(2).any(|w| w[0] >= w[1]) {
+                    return Err(WireError::Malformed("block ids not strictly ascending"));
+                }
+                if let Some(&last) = block_ids.last() {
+                    if last as u64 * block_len as u64 >= dense_len {
+                        return Err(WireError::Malformed("block id out of range"));
+                    }
+                }
+                let values = r.f32s(nblocks * block_len as usize)?;
+                Message::Blocks {
+                    from,
+                    dense_len,
+                    block_len,
+                    block_ids,
+                    values,
+                }
+            }
             k => return Err(WireError::BadKind(k)),
         };
         let actual = r.pos - body_start;
@@ -627,6 +937,117 @@ mod tests {
             m.encoded_len(),
             crate::tensor::WireFormat::wire_bytes(&t) + overhead
         );
+    }
+
+    #[test]
+    fn dense_chunk_roundtrips_and_sizes_exactly() {
+        for count in [0usize, 1, STAGE_ELEMS, 777] {
+            let m = Message::DenseChunk {
+                from: 3,
+                offset: 1 << 33,
+                values: (0..count).map(|i| i as f32 * 0.25 - 1.0).collect(),
+            };
+            assert_eq!(roundtrip(&m), m, "count {count}");
+            assert_eq!(m.encoded_len(), DENSE_CHUNK_OVERHEAD + count * 4);
+        }
+    }
+
+    #[test]
+    fn blocks_roundtrips_and_sizes_exactly() {
+        for (bl, ids) in [(4u32, vec![]), (4, vec![0u32]), (3, vec![1, 5, 9]), (1, vec![0, 2])] {
+            let values: Vec<f32> = (0..ids.len() * bl as usize).map(|i| i as f32 + 0.5).collect();
+            let m = Message::Blocks {
+                from: 1,
+                dense_len: 64,
+                block_len: bl,
+                block_ids: ids.clone(),
+                values,
+            };
+            assert_eq!(roundtrip(&m), m, "bl {bl}");
+            assert_eq!(
+                m.encoded_len(),
+                BLOCKS_FRAME_OVERHEAD + ids.len() * (4 + bl as usize * 4)
+            );
+        }
+    }
+
+    #[test]
+    fn blocks_validation_rejects_malformed() {
+        let good = Message::Blocks {
+            from: 0,
+            dense_len: 64,
+            block_len: 4,
+            block_ids: vec![1, 2],
+            values: vec![0.5; 8],
+        };
+        let mut buf = Vec::new();
+        good.encode(&mut buf);
+        // descending ids
+        let ids_off = FRAME_HEADER + 4 + 8 + 4 + 4;
+        let mut bad = buf.clone();
+        bad[ids_off..ids_off + 4].copy_from_slice(&9u32.to_le_bytes());
+        assert!(matches!(Message::decode(&bad), Err(WireError::Malformed(_))));
+        // id beyond the dense range (id·block_len ≥ dense_len)
+        let mut bad = buf.clone();
+        bad[ids_off + 4..ids_off + 8].copy_from_slice(&16u32.to_le_bytes());
+        assert!(matches!(Message::decode(&bad), Err(WireError::Malformed(_))));
+        // zero block length
+        let bl_off = FRAME_HEADER + 4 + 8;
+        let mut bad = buf.clone();
+        bad[bl_off..bl_off + 4].copy_from_slice(&0u32.to_le_bytes());
+        assert!(matches!(Message::decode(&bad), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn frame_ref_is_identical_to_owned_encode() {
+        // as_frame().encode / encoded_len / to_message must be exact
+        // inverses of the owned Message paths for every kind.
+        let msgs = vec![
+            Message::PushCoo {
+                from: 2,
+                tensor: CooTensor::from_sorted(40, vec![1, 7], vec![0.5, -1.0]),
+            },
+            Message::PullHashBitmap {
+                server: 1,
+                bitmap: Bitmap::from_ones(70, &[3, 69]),
+                values: vec![1.0, 2.0],
+            },
+            Message::PullCoo {
+                server: 0,
+                tensor: CooTensor::empty(9),
+            },
+            Message::DenseChunk {
+                from: 4,
+                offset: 12,
+                values: vec![9.0; 5],
+            },
+            Message::Blocks {
+                from: 5,
+                dense_len: 32,
+                block_len: 8,
+                block_ids: vec![0, 3],
+                values: vec![0.25; 16],
+            },
+            Message::Barrier { epoch: 77 },
+        ];
+        for m in msgs {
+            let fr = m.as_frame();
+            let mut via_ref = Vec::new();
+            fr.encode(&mut via_ref);
+            let mut via_msg = Vec::new();
+            m.encode(&mut via_msg);
+            assert_eq!(via_ref, via_msg);
+            assert_eq!(fr.encoded_len(), via_msg.len());
+            assert_eq!(fr.to_message(), m);
+        }
+    }
+
+    #[test]
+    fn disconnected_error_covered() {
+        let e = WireError::Disconnected;
+        assert!(e.to_string().contains("disconnected"), "{e}");
+        assert!(std::error::Error::source(&e).is_none());
+        assert_eq!(e, WireError::Disconnected);
     }
 
     #[test]

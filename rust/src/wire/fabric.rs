@@ -1,0 +1,328 @@
+//! In-process message fabric: one mailbox per endpoint, mpsc channels,
+//! per-endpoint byte counters.
+//!
+//! This is the byte-moving substrate of
+//! [`ChannelTransport`](crate::wire::ChannelTransport): worker threads
+//! (or a single orchestrating thread) exchange real encoded frames. The
+//! byte counters must agree with the transport-observed accounting of
+//! [`crate::schemes`] (asserted by the wire/parity integration tests),
+//! and `Fabric::execute_zen_push_pull` runs Zen's full
+//! push/aggregate/pull round with one real thread per endpoint as a
+//! reference deployment of the protocol.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use super::codec::{Decode, Encode, Message, WireError};
+use crate::hashing::{HashBitmapCodec, HierarchicalHasher};
+use crate::tensor::CooTensor;
+
+/// Shared byte counters per endpoint.
+#[derive(Debug, Default)]
+pub struct Counters {
+    pub sent: AtomicU64,
+    pub recv: AtomicU64,
+}
+
+/// One endpoint's handle: its inbox + senders to everyone.
+pub struct Endpoint {
+    pub id: usize,
+    inbox: Receiver<Vec<u8>>,
+    peers: Vec<Sender<Vec<u8>>>,
+    counters: Arc<Vec<Counters>>,
+}
+
+impl Endpoint {
+    /// Encode and send a message to `dst`.
+    pub fn send(&self, dst: usize, msg: &Message) -> Result<(), WireError> {
+        let mut buf = Vec::with_capacity(msg.encoded_len());
+        msg.encode(&mut buf);
+        self.send_owned(dst, buf)
+    }
+
+    /// Send an already-encoded frame to `dst`, transferring ownership of
+    /// the buffer into the channel (the transport layer's entry point —
+    /// one encode, one move, no re-copy).
+    pub fn send_owned(&self, dst: usize, frame: Vec<u8>) -> Result<(), WireError> {
+        let len = frame.len() as u64;
+        self.peers
+            .get(dst)
+            .ok_or(WireError::Disconnected)?
+            .send(frame)
+            .map_err(|_| WireError::Disconnected)?;
+        self.counters[self.id].sent.fetch_add(len, Ordering::Relaxed);
+        self.counters[dst].recv.fetch_add(len, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Block until one message arrives; decode it. Fails with
+    /// [`WireError::Disconnected`] once every sender to this inbox is
+    /// gone.
+    pub fn recv(&self) -> Result<Message, WireError> {
+        let buf = self.inbox.recv().map_err(|_| WireError::Disconnected)?;
+        let (msg, _) = Message::decode(&buf)?;
+        Ok(msg)
+    }
+
+    /// Non-blocking receive: `Ok(None)` when the inbox is currently
+    /// empty, [`WireError::Disconnected`] when every sender is gone.
+    pub fn try_recv(&self) -> Result<Option<Message>, WireError> {
+        use std::sync::mpsc::TryRecvError;
+        match self.inbox.try_recv() {
+            Ok(buf) => {
+                let (msg, _) = Message::decode(&buf)?;
+                Ok(Some(msg))
+            }
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(WireError::Disconnected),
+        }
+    }
+
+    /// Receive exactly `n` messages.
+    pub fn recv_n(&self, n: usize) -> Result<Vec<Message>, WireError> {
+        (0..n).map(|_| self.recv()).collect()
+    }
+
+    /// Drop this endpoint's senders: subsequent `send`s fail with
+    /// [`WireError::Disconnected`], and peers whose every other sender is
+    /// also gone observe `Disconnected` on `recv`.
+    pub fn disconnect(&mut self) {
+        self.peers.clear();
+    }
+}
+
+/// The fabric: constructs all endpoints and owns the counters.
+pub struct Fabric {
+    pub n: usize,
+    counters: Arc<Vec<Counters>>,
+}
+
+impl Fabric {
+    /// Build a fully connected fabric of `n` endpoints.
+    pub fn new(n: usize) -> (Fabric, Vec<Endpoint>) {
+        let counters: Arc<Vec<Counters>> =
+            Arc::new((0..n).map(|_| Counters::default()).collect());
+        let mut senders = Vec::with_capacity(n);
+        let mut receivers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel::<Vec<u8>>();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        let endpoints = receivers
+            .into_iter()
+            .enumerate()
+            .map(|(id, inbox)| Endpoint {
+                id,
+                inbox,
+                peers: senders.clone(),
+                counters: counters.clone(),
+            })
+            .collect();
+        (Fabric { n, counters }, endpoints)
+    }
+
+    pub fn sent_bytes(&self, endpoint: usize) -> u64 {
+        self.counters[endpoint].sent.load(Ordering::Relaxed)
+    }
+
+    pub fn recv_bytes(&self, endpoint: usize) -> u64 {
+        self.counters[endpoint].recv.load(Ordering::Relaxed)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        (0..self.n).map(|e| self.sent_bytes(e)).sum()
+    }
+
+    /// Execute Zen's push/aggregate/pull protocol over the real fabric:
+    /// every endpoint is both worker and server. Returns each worker's
+    /// aggregated tensor. This is the reference deployment of the
+    /// protocol the analytic scheme models.
+    pub fn execute_zen_push_pull(
+        endpoints: Vec<Endpoint>,
+        inputs: Vec<CooTensor>,
+        hasher: &HierarchicalHasher,
+    ) -> Vec<CooTensor> {
+        let n = endpoints.len();
+        assert_eq!(inputs.len(), n);
+        assert_eq!(hasher.n, n);
+        let dense_len = inputs[0].dense_len;
+        let domains = Arc::new(hasher.partition_domains(dense_len));
+
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(n);
+            for (ep, tensor) in endpoints.into_iter().zip(inputs.into_iter()) {
+                let domains = domains.clone();
+                let hasher = hasher.clone();
+                handles.push(s.spawn(move || {
+                    let me = ep.id;
+                    // -- Push: partition and send shard p to server p.
+                    let parts = hasher.partition(&tensor).parts;
+                    let mut own_shard = None;
+                    for (p, part) in parts.into_iter().enumerate() {
+                        if p == me {
+                            own_shard = Some(part);
+                        } else {
+                            ep.send(
+                                p,
+                                &Message::PushCoo {
+                                    from: me as u32,
+                                    tensor: part,
+                                },
+                            )
+                            .unwrap();
+                        }
+                    }
+                    // -- Server role: receive n-1 shards, aggregate.
+                    // A fast peer may already be in its Pull phase, so
+                    // out-of-phase Pull messages are stashed, not errors.
+                    let mut shards = vec![own_shard.unwrap()];
+                    let mut stashed_pulls = Vec::new();
+                    while shards.len() < n {
+                        match ep.recv().unwrap() {
+                            Message::PushCoo { tensor, .. } => shards.push(tensor),
+                            pull @ Message::PullHashBitmap { .. } => stashed_pulls.push(pull),
+                            other => panic!("unexpected during push: {other:?}"),
+                        }
+                    }
+                    let aggregated = CooTensor::merge_all(&shards);
+                    // -- Pull: broadcast my aggregate as a hash bitmap.
+                    let codec = HashBitmapCodec::new(&domains[me]);
+                    let payload = codec.encode(&aggregated);
+                    for w in 0..n {
+                        if w != me {
+                            ep.send(
+                                w,
+                                &Message::PullHashBitmap {
+                                    server: me as u32,
+                                    bitmap: payload.bitmap.clone(),
+                                    values: payload.values.clone(),
+                                },
+                            )
+                            .unwrap();
+                        }
+                    }
+                    // -- Worker role: decode n-1 pulls + my own
+                    // (stashed ones first, then the channel).
+                    let mut pieces = vec![aggregated];
+                    let decode_pull = |msg: Message, pieces: &mut Vec<CooTensor>| match msg {
+                        Message::PullHashBitmap {
+                            server,
+                            bitmap,
+                            values,
+                        } => {
+                            let codec = HashBitmapCodec::new(&domains[server as usize]);
+                            let payload =
+                                crate::hashing::hashbitmap::HashBitmapPayload { bitmap, values };
+                            pieces.push(codec.decode(&payload, dense_len));
+                        }
+                        other => panic!("unexpected during pull: {other:?}"),
+                    };
+                    let stashed = stashed_pulls.len();
+                    for msg in stashed_pulls {
+                        decode_pull(msg, &mut pieces);
+                    }
+                    for _ in 0..(n - 1 - stashed) {
+                        let msg = ep.recv().unwrap();
+                        decode_pull(msg, &mut pieces);
+                    }
+                    CooTensor::merge_all(&pieces)
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn point_to_point_delivery() {
+        let (fabric, eps) = Fabric::new(2);
+        let m = Message::Barrier { epoch: 9 };
+        eps[0].send(1, &m).unwrap();
+        assert_eq!(eps[1].recv().unwrap(), m);
+        assert!(fabric.sent_bytes(0) > 0);
+        assert_eq!(fabric.sent_bytes(0), fabric.recv_bytes(1));
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let (fabric, eps) = Fabric::new(3);
+        for _ in 0..5 {
+            eps[0].send(2, &Message::Barrier { epoch: 0 }).unwrap();
+        }
+        let one = Message::Barrier { epoch: 0 }.encoded_len() as u64;
+        assert_eq!(fabric.sent_bytes(0), 5 * one);
+        assert_eq!(fabric.recv_bytes(2), 5 * one);
+        assert_eq!(fabric.recv_bytes(1), 0);
+    }
+
+    #[test]
+    fn hung_up_peer_is_disconnected_not_malformed() {
+        let (_fabric, mut eps) = Fabric::new(2);
+        let gone = eps.remove(1);
+        drop(gone);
+        let err = eps[0].send(1, &Message::Barrier { epoch: 0 }).unwrap_err();
+        assert_eq!(err, WireError::Disconnected);
+        assert!(err.to_string().contains("disconnected"));
+    }
+
+    #[test]
+    fn disconnect_tears_down_both_directions() {
+        let (_fabric, mut eps) = Fabric::new(2);
+        // Sever every sender: both explicit disconnects, so endpoint 0's
+        // inbox has no live senders left.
+        eps[0].disconnect();
+        eps[1].disconnect();
+        assert_eq!(
+            eps[0].send(1, &Message::Barrier { epoch: 0 }),
+            Err(WireError::Disconnected)
+        );
+        assert_eq!(eps[0].recv(), Err(WireError::Disconnected));
+        assert_eq!(eps[0].try_recv(), Err(WireError::Disconnected));
+    }
+
+    #[test]
+    fn try_recv_empty_vs_delivered() {
+        let (_fabric, eps) = Fabric::new(2);
+        assert_eq!(eps[1].try_recv().unwrap(), None);
+        eps[0].send(1, &Message::Barrier { epoch: 5 }).unwrap();
+        assert_eq!(
+            eps[1].try_recv().unwrap(),
+            Some(Message::Barrier { epoch: 5 })
+        );
+        assert_eq!(eps[1].try_recv().unwrap(), None);
+    }
+
+    #[test]
+    fn zen_protocol_over_real_fabric() {
+        use crate::util::Pcg64;
+        let n = 4;
+        let dense_len = 5_000;
+        let mut rng = Pcg64::seeded(3);
+        let inputs: Vec<CooTensor> = (0..n)
+            .map(|_| {
+                let mut idx: Vec<u32> = rng
+                    .sample_distinct(dense_len, 400)
+                    .into_iter()
+                    .map(|i| i as u32)
+                    .collect();
+                idx.sort_unstable();
+                CooTensor::from_sorted(dense_len, idx, vec![1.0; 400])
+            })
+            .collect();
+        let hasher = HierarchicalHasher::with_defaults(11, n, 400);
+        let (fabric, eps) = Fabric::new(n);
+        let outputs = Fabric::execute_zen_push_pull(eps, inputs.clone(), &hasher);
+        // every endpoint ends with the exact reference aggregation
+        let reference = crate::schemes::reference_sum(&inputs);
+        for out in &outputs {
+            assert_eq!(out.to_dense(), reference);
+        }
+        assert!(fabric.total_bytes() > 0);
+    }
+}

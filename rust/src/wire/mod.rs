@@ -1,21 +1,29 @@
-//! Wire layer: binary serialization codecs + a real message-passing
-//! transport between in-process endpoints.
+//! Wire layer: binary codecs, the pluggable [`Transport`] data plane,
+//! and the in-process message [`Fabric`].
 //!
-//! The scheme implementations in [`crate::schemes`] account bytes
-//! analytically; this module provides the *execution* mode — payloads
-//! are really serialized to framed byte buffers, moved through
-//! channels between worker threads, deserialized, and aggregated. The
-//! byte counts the analytic mode charges are asserted against the real
-//! encoded sizes (`rust/tests/wire_integration.rs`), closing the loop
-//! between the simulator and a deployable data plane.
+//! Every synchronization scheme in [`crate::schemes`] runs its protocol
+//! over a `dyn Transport`: [`SimTransport`] charges virtual α–β time
+//! from the byte matrix it observes (the simulator mode),
+//! [`ChannelTransport`] moves real encoded frames through mpsc channels,
+//! and [`TcpTransport`] moves them through loopback sockets. One code
+//! path, three data planes — sim-vs-channel byte parity per stage is
+//! asserted for every scheme by `rust/tests/transport_parity.rs`, which
+//! is what lets the repo keep a single source of truth for byte
+//! accounting.
 //!
 //! No serde offline, so the codecs are hand-rolled little-endian
 //! framing with explicit versioning and exhaustive roundtrip tests.
 
 pub mod codec;
+pub mod fabric;
 pub mod transport;
 
 pub use codec::{
-    encode_pull_hash_bitmap, encode_push_coo, Decode, Encode, Message, WireError,
+    encode_blocks, encode_dense_chunk, encode_pull_hash_bitmap, encode_push_coo, Decode, Encode,
+    FrameRef, Message, WireError,
 };
-pub use transport::{Endpoint, Fabric};
+pub use fabric::{Endpoint, Fabric};
+pub use transport::{
+    make_transport, ChannelTransport, SimTransport, TcpTransport, Transport, TransportKind,
+    MAX_TCP_INFLIGHT_BYTES,
+};

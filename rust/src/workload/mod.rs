@@ -25,6 +25,32 @@ pub use profiles::{table1, ModelProfile};
 use crate::tensor::CooTensor;
 use crate::util::{Pcg64, Zipf};
 
+/// Uniform random per-worker sparse tensors at a given density —
+/// structureless inputs (no Zipf skew, no row blocks) shared by the
+/// transport parity tests and the transport benches so both exercise
+/// the exact same workload.
+pub fn random_uniform_inputs(
+    seed: u64,
+    n: usize,
+    dense_len: usize,
+    density: f64,
+) -> Vec<CooTensor> {
+    let nnz = ((dense_len as f64 * density) as usize).clamp(1, dense_len);
+    let mut rng = Pcg64::seeded(seed);
+    (0..n)
+        .map(|_| {
+            let mut idx: Vec<u32> = rng
+                .sample_distinct(dense_len, nnz)
+                .into_iter()
+                .map(|i| i as u32)
+                .collect();
+            idx.sort_unstable();
+            let vals: Vec<f32> = (0..nnz).map(|_| rng.next_f32() * 2.0 - 0.99).collect();
+            CooTensor::from_sorted(dense_len, idx, vals)
+        })
+        .collect()
+}
+
 /// What kind of gradient a [`LayerSpec`] produces.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LayerKind {

@@ -1,16 +1,17 @@
-//! Wire integration: the real message fabric and the analytic scheme
-//! accounting must agree — same aggregation result, and the real
-//! encoded byte counts match the simulator's charges up to the fixed
-//! per-message framing overhead.
+//! Wire integration: the real message fabric and the transport-observed
+//! scheme accounting must agree — same aggregation result and, now that
+//! every scheme charges framed bytes, *exactly* the same byte counts.
+//! Plus the fabric-level satellites: concurrent interleaved frames with
+//! exact counters, and `Disconnected` error coverage.
 
 use zen::cluster::{LinkKind, Network};
 use zen::hashing::HierarchicalHasher;
 use zen::schemes::{self, SyncScheme};
-use zen::wire::codec::FRAME_HEADER;
-use zen::wire::Fabric;
+use zen::tensor::CooTensor;
+use zen::wire::{Encode, Fabric, Message, WireError};
 use zen::workload::{profiles, GradientGen};
 
-fn inputs(n: usize) -> Vec<zen::tensor::CooTensor> {
+fn inputs(n: usize) -> Vec<CooTensor> {
     GradientGen::new(profiles::by_name("NMT").unwrap().scaled(1024), 0xfab).iteration_all(0, n)
 }
 
@@ -19,12 +20,12 @@ fn fabric_aggregation_matches_analytic_scheme() {
     let n = 4;
     let ins = inputs(n);
     let nnz = ins[0].nnz();
-    // analytic
+    // orchestrated scheme (sim transport)
     let zen_scheme = schemes::by_name("zen", n, 0x1234, nnz).unwrap();
     let net = Network::new(n, LinkKind::Tcp25);
     let analytic = zen_scheme.sync(&ins, &net);
-    // real fabric, same hash family seed
-    let hasher = HierarchicalHasher::with_defaults(0x1234 , n, nnz);
+    // real fabric, one thread per endpoint, same hash family seed
+    let hasher = HierarchicalHasher::with_defaults(0x1234, n, nnz);
     let (_fabric, eps) = Fabric::new(n);
     let real = Fabric::execute_zen_push_pull(eps, ins.clone(), &hasher);
     let reference = schemes::reference_sum(&ins);
@@ -38,36 +39,24 @@ fn fabric_aggregation_matches_analytic_scheme() {
 }
 
 #[test]
-fn fabric_bytes_match_analytic_accounting_up_to_framing() {
+fn fabric_bytes_match_scheme_accounting_exactly() {
+    // Byte accounting now has one source of truth: the frames. The
+    // threaded fabric deployment and the transport-driven scheme must
+    // therefore agree byte-for-byte, not merely up to framing.
     let n = 4;
     let ins = inputs(n);
     let nnz = ins[0].nnz();
     let seed = 0x77aa;
 
-    // Analytic: Zen scheme push+pull byte totals (no compute charge).
     let mut zen_scheme = schemes::Zen::new(seed, n, nnz, schemes::ZenIndexFormat::HashBitmap);
     zen_scheme.charge_compute = false;
     let net = Network::new(n, LinkKind::Tcp25);
-    let analytic_bytes = zen_scheme.sync(&ins, &net).report.total_bytes();
+    let scheme_bytes = zen_scheme.sync(&ins, &net).report.total_bytes();
 
-    // Real fabric with the same hasher.
     let hasher = HierarchicalHasher::with_defaults(seed, n, nnz);
     let (fabric, eps) = Fabric::new(n);
     let _ = Fabric::execute_zen_push_pull(eps, ins.clone(), &hasher);
-    let real_bytes = fabric.total_bytes();
-
-    // Per-message overhead: push = frame + from + dense_len + nnz;
-    // pull = frame + server + domain_len + value-count. Bitmap word
-    // padding (u64 words vs byte-exact accounting) adds ≤ 7 bytes per
-    // pull message.
-    let messages = (n * (n - 1) * 2) as u64;
-    let per_msg_overhead = (FRAME_HEADER + 4 + 8 + 4) as u64;
-    let lo = analytic_bytes;
-    let hi = analytic_bytes + messages * (per_msg_overhead + 8);
-    assert!(
-        (lo..=hi).contains(&real_bytes),
-        "real {real_bytes} outside [{lo}, {hi}]"
-    );
+    assert_eq!(fabric.total_bytes(), scheme_bytes);
 }
 
 #[test]
@@ -83,4 +72,99 @@ fn fabric_per_endpoint_balance() {
     let max = *recv.iter().max().unwrap();
     let imbalance = max as f64 * n as f64 / total as f64;
     assert!(imbalance < 1.15, "real-fabric receive imbalance {imbalance}");
+}
+
+#[test]
+fn fabric_concurrent_interleaved_frames_counters_exact() {
+    // N endpoint threads, each interleaving sends of differently-sized
+    // frames to every peer with receives of (n−1)·k frames. The shared
+    // counters must come out exact and symmetric — no lost or
+    // double-counted bytes under concurrency.
+    let n = 6;
+    let rounds = 25;
+    // endpoint e ships tensors with e+1 non-zeros → per-sender frame size
+    let frame_len = |e: usize| -> u64 {
+        Message::PushCoo {
+            from: e as u32,
+            tensor: CooTensor::from_sorted(
+                64,
+                (0..=e as u32).collect(),
+                vec![1.0; e + 1],
+            ),
+        }
+        .encoded_len() as u64
+    };
+    let (fabric, eps) = Fabric::new(n);
+    std::thread::scope(|s| {
+        for ep in eps {
+            s.spawn(move || {
+                let me = ep.id;
+                let msg = Message::PushCoo {
+                    from: me as u32,
+                    tensor: CooTensor::from_sorted(
+                        64,
+                        (0..=me as u32).collect(),
+                        vec![1.0; me + 1],
+                    ),
+                };
+                let mut received = 0usize;
+                for _ in 0..rounds {
+                    for dst in 0..n {
+                        if dst != me {
+                            ep.send(dst, &msg).unwrap();
+                        }
+                        // interleave: drain anything already delivered
+                        while let Some(m) = ep.try_recv().unwrap() {
+                            assert!(matches!(m, Message::PushCoo { .. }));
+                            received += 1;
+                        }
+                    }
+                }
+                while received < rounds * (n - 1) {
+                    let m = ep.recv().unwrap();
+                    assert!(matches!(m, Message::PushCoo { .. }));
+                    received += 1;
+                }
+                // nothing extra may arrive beyond the expected count
+                assert_eq!(received, rounds * (n - 1));
+            });
+        }
+    });
+    let mut total_sent = 0u64;
+    let mut total_recv = 0u64;
+    for e in 0..n {
+        let expect_sent = rounds as u64 * (n as u64 - 1) * frame_len(e);
+        let expect_recv: u64 = (0..n)
+            .filter(|&o| o != e)
+            .map(|o| rounds as u64 * frame_len(o))
+            .sum();
+        assert_eq!(fabric.sent_bytes(e), expect_sent, "sent[{e}]");
+        assert_eq!(fabric.recv_bytes(e), expect_recv, "recv[{e}]");
+        total_sent += fabric.sent_bytes(e);
+        total_recv += fabric.recv_bytes(e);
+    }
+    assert_eq!(total_sent, total_recv, "fabric totals must be symmetric");
+    assert_eq!(fabric.total_bytes(), total_sent);
+}
+
+#[test]
+fn disconnection_maps_to_disconnected_error() {
+    // Send side: the receiving endpoint is dropped.
+    let (_fabric, mut eps) = Fabric::new(3);
+    let victim = eps.remove(2);
+    drop(victim);
+    let err = eps[0]
+        .send(2, &Message::Barrier { epoch: 1 })
+        .expect_err("send to a hung-up peer must fail");
+    assert_eq!(err, WireError::Disconnected);
+    assert_eq!(err.to_string(), "peer endpoint disconnected");
+    assert!(std::error::Error::source(&err).is_none());
+
+    // Recv side: every sender to an inbox is gone.
+    let (_fabric, mut eps) = Fabric::new(2);
+    for ep in eps.iter_mut() {
+        ep.disconnect();
+    }
+    assert_eq!(eps[0].recv(), Err(WireError::Disconnected));
+    assert_eq!(eps[1].try_recv(), Err(WireError::Disconnected));
 }
