@@ -1,0 +1,164 @@
+//! Planner trajectory: the auto-planner versus every fixed scheme on
+//! each Table-1 workload, emitted as machine-readable `BENCH_PR4.json`
+//! so the planner's headline claim — per-bucket scheme choice beats
+//! the best single fixed scheme — is re-measurable on any machine.
+//!
+//!   cargo run --release --example bench_planner -- [--tiny] [--iters K] [--out PATH]
+//!
+//! Each workload runs the pipelined engine path (dense head buckets +
+//! embedding shard buckets) once per scheme in
+//! `schemes::PLANNER_CANDIDATES`, then with `--scheme auto`; the metric
+//! is the mean total bucket communication time per iteration
+//! (`SimResult::emb_sync_mean`, full-size virtual seconds). The JSON
+//! records auto vs best-fixed vs worst-fixed plus auto's per-bucket
+//! plan (chosen scheme, predicted and measured time), and CI uploads
+//! it to the `bench-trajectory` artifact next to BENCH_PR2/PR3.
+
+use zen::coordinator::{PipelineConfig, SimConfig, SimDriver};
+use zen::schemes::PLANNER_CANDIDATES;
+use zen::workload::profiles;
+
+struct Config {
+    tiny: bool,
+    iters: usize,
+    out: String,
+}
+
+fn parse_args() -> Config {
+    let mut cfg = Config {
+        tiny: false,
+        iters: 2,
+        out: "BENCH_PR4.json".to_string(),
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--tiny" => {
+                cfg.tiny = true;
+                cfg.iters = 1;
+            }
+            "--iters" => {
+                cfg.iters = args
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .expect("--iters needs a positive integer");
+            }
+            "--out" => {
+                cfg.out = args.next().expect("--out needs a path");
+            }
+            other => panic!("unknown argument {other}"),
+        }
+    }
+    cfg
+}
+
+fn sim(
+    model: &str,
+    scheme: &str,
+    machines: usize,
+    scale: usize,
+    iters: usize,
+) -> zen::coordinator::SimResult {
+    let mut cfg = SimConfig::new(profiles::by_name(model).unwrap(), machines, scheme);
+    cfg.scale = scale;
+    cfg.iterations = iters;
+    cfg.gpus_per_machine = 2;
+    cfg.pipeline = Some(PipelineConfig {
+        bucket_bytes: 64 * 1024,
+        dense_layers: 3,
+        emb_shards: 4,
+    });
+    SimDriver::new(cfg).expect("bench config").run()
+}
+
+fn main() {
+    let cfg = parse_args();
+    let (models, machines, scale): (&[&str], usize, usize) = if cfg.tiny {
+        (&["DeepFM", "LSTM"], 8, 1024)
+    } else {
+        (&["LSTM", "DeepFM", "NMT", "BERT"], 16, 512)
+    };
+
+    let mut rows: Vec<String> = Vec::new();
+    let mut auto_wins = 0usize;
+    for model in models {
+        let mut fixed: Vec<(String, f64)> = Vec::new();
+        for scheme in PLANNER_CANDIDATES {
+            let r = sim(model, scheme, machines, scale, cfg.iters);
+            fixed.push((r.scheme.clone(), r.emb_sync_mean));
+        }
+        let auto = sim(model, "auto", machines, scale, cfg.iters);
+        let (best_name, best) = fixed
+            .iter()
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .cloned()
+            .unwrap();
+        let (worst_name, worst) = fixed
+            .iter()
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+            .cloned()
+            .unwrap();
+        let auto_le_best = auto.emb_sync_mean <= best;
+        auto_wins += auto_le_best as usize;
+        println!(
+            "{model:<8} auto {:>9.3}ms | best fixed {best_name:<10} {:>9.3}ms | \
+             worst fixed {worst_name:<10} {:>9.3}ms | auto<=best: {auto_le_best}",
+            auto.emb_sync_mean * 1e3,
+            best * 1e3,
+            worst * 1e3
+        );
+        for p in &auto.plan {
+            println!(
+                "    {:<14} {:<12} predicted {:>9.3}ms  measured {:>9.3}ms",
+                p.label,
+                p.scheme,
+                p.predicted.unwrap_or(f64::NAN) * 1e3,
+                p.measured * 1e3
+            );
+        }
+        let plan_json: Vec<String> = auto
+            .plan
+            .iter()
+            .map(|p| {
+                // `null`, never `NaN` — NaN is not valid JSON.
+                let predicted = p
+                    .predicted
+                    .map(|v| format!("{v:.6e}"))
+                    .unwrap_or_else(|| "null".to_string());
+                format!(
+                    "{{\"bucket\": \"{}\", \"scheme\": \"{}\", \"predicted_s\": {predicted}, \
+                     \"measured_s\": {:.6e}}}",
+                    p.label, p.scheme, p.measured
+                )
+            })
+            .collect();
+        let fixed_json: Vec<String> = fixed
+            .iter()
+            .map(|(name, t)| format!("{{\"scheme\": \"{name}\", \"sync_s\": {t:.6e}}}"))
+            .collect();
+        rows.push(format!(
+            "    {{\"model\": \"{model}\", \"machines\": {machines}, \
+             \"auto_sync_s\": {:.6e}, \"best_fixed\": \"{best_name}\", \
+             \"best_fixed_sync_s\": {best:.6e}, \"worst_fixed\": \"{worst_name}\", \
+             \"worst_fixed_sync_s\": {worst:.6e}, \"auto_le_best_fixed\": {auto_le_best},\n     \
+             \"plan\": [{}],\n     \"fixed\": [{}]}}",
+            auto.emb_sync_mean,
+            plan_json.join(", "),
+            fixed_json.join(", ")
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"pr\": 4,\n  \"config\": {{\"tiny\": {}, \"iters\": {}, \"machines\": {machines}, \
+         \"scale\": {scale}}},\n  \"auto_wins\": {auto_wins},\n  \"workloads\": [\n{}\n  ]\n}}\n",
+        cfg.tiny,
+        cfg.iters,
+        rows.join(",\n")
+    );
+    std::fs::write(&cfg.out, &json).expect("write bench json");
+    println!("wrote {} (auto <= best fixed on {auto_wins}/{} workloads)", cfg.out, models.len());
+    assert!(
+        auto_wins >= 1,
+        "acceptance: the planner must match or beat the best fixed scheme on at least one workload"
+    );
+}

@@ -57,8 +57,8 @@ fn main() -> anyhow::Result<()> {
     let want = |name: &str| args.iter().any(|a| a == name || a == "all");
     if args.is_empty() {
         eprintln!(
-            "usage: figures -- all | table1 table2 fig1 fig2 fig7 fig8 \
-             fig11 fig12 fig13 fig14 fig15 fig16 fig17 fig18"
+            "usage: figures -- all | table1 table2 fig1 fig2 fig7 fig7m fig8 \
+             fig11 fig12 fig13 fig14 fig15 fig16 fig17 fig18 figp"
         );
         return Ok(());
     }
@@ -79,6 +79,16 @@ fn main() -> anyhow::Result<()> {
     }
     if want("fig7") {
         emit(figures::fig7());
+    }
+    if want("fig7m") {
+        // Fig 7 re-derived from measured stats: cost-model predictions
+        // next to transport-measured times, both normalized to Dense.
+        emit(figures::fig7_measured());
+    }
+    if want("figp") {
+        // Planner crossover map — the decision surface behind
+        // `zen sim --scheme auto`.
+        emit(figures::planner_crossover());
     }
     if want("fig8") {
         emit(figures::fig8());

@@ -10,6 +10,7 @@ use zen::cluster::{LinkKind, Network};
 use zen::coordinator::compute_time_per_iter;
 use zen::engine::{EngineConfig, SyncEngine};
 use zen::hashing::{HashBitmapCodec, HierarchicalHasher};
+use zen::planner::FixedPlanner;
 use zen::schemes::{self, SyncScheme};
 use zen::tensor::CooTensor;
 use zen::util::{Pcg64, Stopwatch};
@@ -103,12 +104,13 @@ fn main() {
         compute_time_per_iter("LSTM"),
     ));
     for scheme_name in ["zen", "allreduce"] {
-        let scheme = schemes::by_name(scheme_name, n, 7, gen.expected_nnz()).unwrap();
-        let run = engine.run(&specs, &layers, scheme.as_ref(), &net, |r| r.comm_time());
+        let planner =
+            FixedPlanner::new(schemes::by_name(scheme_name, n, 7, gen.expected_nnz()).unwrap());
+        let run = engine.run(&specs, &layers, &planner, &net, |r| r.comm_time());
         println!(
             "{:<10} buckets {:>2}  sync wall {:>7.1} ms  virt serialized {:>7.2} ms  \
              overlapped {:>7.2} ms  ({:.2}x)",
-            scheme.name(),
+            planner.scheme().name(),
             run.buckets.len(),
             run.wall_time * 1e3,
             run.serialized_time * 1e3,

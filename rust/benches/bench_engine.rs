@@ -8,6 +8,7 @@
 use zen::cluster::{LinkKind, Network};
 use zen::coordinator::compute_time_per_iter;
 use zen::engine::{EngineConfig, SyncEngine};
+use zen::planner::FixedPlanner;
 use zen::schemes::{self, SyncScheme};
 use zen::util::human_bytes;
 use zen::util::timer::bench;
@@ -29,18 +30,15 @@ fn main() {
             compute * 1e3
         );
         for scheme_name in ["zen", "allreduce"] {
-            let scheme = schemes::by_name(
-                scheme_name,
-                machines,
-                0x5eed,
-                gen.expected_nnz().max(64),
-            )
-            .unwrap();
-            let run = engine.run(&specs, &layers, scheme.as_ref(), &net, |r| r.comm_time());
+            let planner = FixedPlanner::new(
+                schemes::by_name(scheme_name, machines, 0x5eed, gen.expected_nnz().max(64))
+                    .unwrap(),
+            );
+            let run = engine.run(&specs, &layers, &planner, &net, |r| r.comm_time());
             println!(
                 "{model} {:<10} serialized {:>8.2} ms   overlapped {:>8.2} ms   \
                  speedup {:.2}x   ({} buckets, {} on the wire)",
-                scheme.name(),
+                planner.scheme().name(),
                 run.serialized_time * 1e3,
                 run.overlapped_time * 1e3,
                 run.speedup(),
@@ -55,13 +53,9 @@ fn main() {
                 run.serialized_time
             );
             bench(&format!("engine {model} {scheme_name}"), 1, 5, || {
-                std::hint::black_box(engine.run(
-                    &specs,
-                    &layers,
-                    scheme.as_ref(),
-                    &net,
-                    |r| r.comm_time(),
-                ));
+                std::hint::black_box(engine.run(&specs, &layers, &planner, &net, |r| {
+                    r.comm_time()
+                }));
             });
         }
         println!();

@@ -9,6 +9,13 @@
 //! `d(j)` — expected density of the aggregate of `j` workers' tensors
 //! (`d(1) = d_G`), and `s(n)` — skewness ratio of one worker's tensor at
 //! `n` partitions.
+//!
+//! Beyond the paper's formulas this model also carries an optional
+//! per-stage latency term `α` ([`CostModel::with_latency`]): each
+//! synchronous stage costs `α` on top of its bandwidth term, exactly
+//! like [`crate::cluster::Network::stage_time`]. The planner
+//! ([`crate::planner`]) needs it — at small bucket sizes the stage
+//! count, not the byte volume, decides the argmin.
 
 /// Sparsity statistics provider for a workload.
 pub trait SparsityStats {
@@ -16,6 +23,22 @@ pub trait SparsityStats {
     fn agg_density(&self, j: usize) -> f64;
     /// Skewness ratio at `n` partitions (Definition 5).
     fn skewness(&self, n: usize) -> f64;
+    /// Fraction of length-`block_len` blocks that contain at least one
+    /// non-zero of the `j`-aggregate (OmniReduce's traffic driver).
+    /// Default: [`independent_block_density`]; measured implementations
+    /// override it (clustered non-zeros touch far fewer blocks than
+    /// independence predicts).
+    fn block_density(&self, j: usize, block_len: usize) -> f64 {
+        independent_block_density(self.agg_density(j), block_len)
+    }
+}
+
+/// Independent-position approximation of the non-zero-block share:
+/// `1 − (1 − d)^block_len` — the one definition shared by the
+/// [`SparsityStats`] default and any measured implementation's fallback
+/// for unprofiled block lengths.
+pub fn independent_block_density(d: f64, block_len: usize) -> f64 {
+    1.0 - (1.0 - d).powi(block_len as i32)
 }
 
 /// Closed-form scheme times for a dense tensor of `m` values on `n`
@@ -24,6 +47,9 @@ pub struct CostModel<'a, S: SparsityStats> {
     pub m: f64,
     pub n: usize,
     pub bandwidth_values: f64,
+    /// Per-stage latency α in seconds (0 = the paper's pure-bandwidth
+    /// accounting).
+    pub alpha: f64,
     pub stats: &'a S,
 }
 
@@ -34,12 +60,88 @@ impl<'a, S: SparsityStats> CostModel<'a, S> {
             m,
             n,
             bandwidth_values,
+            alpha: 0.0,
             stats,
         }
     }
 
+    /// Add the α–β model's per-stage latency to every formula (builder
+    /// style). `stage_count` documents each scheme's stage structure.
+    pub fn with_latency(mut self, alpha: f64) -> Self {
+        assert!(alpha >= 0.0);
+        self.alpha = alpha;
+        self
+    }
+
     fn nf(&self) -> f64 {
         self.n as f64
+    }
+
+    /// Latency charge for `stages` synchronous stages (0 when `n == 1`:
+    /// a single machine never touches the network).
+    fn lat(&self, stages: usize) -> f64 {
+        if self.n <= 1 {
+            0.0
+        } else {
+            self.alpha * stages as f64
+        }
+    }
+
+    /// Number of synchronous stages each planner candidate executes at
+    /// this `n` — mirrors the actual `sync_transport` protocols, which
+    /// is what [`crate::cluster::Network::stage_time`] charges α for.
+    pub fn stage_count(&self, scheme: &str) -> Option<usize> {
+        let n = self.n;
+        // Arithmetic-safe stand-in for degenerate n (the result is
+        // clamped to 0 below anyway); keeps the name-validating match
+        // free of usize underflow even for a hand-built model with
+        // n < 2 that bypassed `new`'s assert.
+        let nn = n.max(2);
+        let stages = match scheme {
+            // ring reduce-scatter + ring all-gather
+            "allreduce" | "dense" => 2 * (nn - 1),
+            // one-shot point-to-point broadcast
+            "agsparse" => 1,
+            "agsparse-ring" => nn - 1,
+            "agsparse-hier" => nn.next_power_of_two().trailing_zeros() as usize,
+            // fold-in + recursive doubling + fold-out
+            "sparcml" => {
+                let core = largest_pow2_at_most(nn);
+                let folds = if core == nn { 0 } else { 2 };
+                core.trailing_zeros() as usize + folds
+            }
+            // push + pull
+            "sparseps" | "sparse-ps" | "omnireduce" | "zen" | "zen-coo" => 2,
+            _ => return None,
+        };
+        // A single machine executes no network stage at all, whatever
+        // the protocol's shape — but an unknown name is still an error.
+        Some(if n <= 1 { 0 } else { stages })
+    }
+
+    /// Predicted synchronization time for a planner candidate by its
+    /// [`crate::schemes::by_name`] name — bandwidth term + α·stages.
+    /// `block_len` parameterizes the OmniReduce formula; `None` for
+    /// names without a closed form (lossy strawman). One machine moves
+    /// nothing, whatever the formula says (Zen's `M/32` bitmap constant
+    /// in particular does not vanish with the `(n−1)` factors).
+    pub fn time_for(&self, scheme: &str, block_len: usize) -> Option<f64> {
+        if self.n <= 1 {
+            // Validate the name anyway so typos stay loud.
+            self.stage_count(scheme)?;
+            return Some(0.0);
+        }
+        let bw = match scheme {
+            "allreduce" | "dense" => self.dense(),
+            "agsparse" | "agsparse-ring" | "agsparse-hier" => self.agsparse(),
+            "sparcml" => self.sparcml(),
+            "sparseps" | "sparse-ps" => self.sparse_ps(),
+            "omnireduce" => self.omnireduce(block_len),
+            "zen-coo" => self.balanced_parallelism(),
+            "zen" => self.zen(),
+            _ => return None,
+        };
+        Some(bw + self.lat(self.stage_count(scheme)?))
     }
 
     /// Ring AllReduce over the dense tensor: `2(n−1)/n · M / B`.
@@ -53,15 +155,41 @@ impl<'a, S: SparsityStats> CostModel<'a, S> {
         (self.nf() - 1.0) * 2.0 * d * self.m / self.bandwidth_values
     }
 
-    /// SparCML SSAR recursive doubling: stage `i` ships the aggregate of
-    /// `2^i` tensors (density `d^{2^i}`) as COO both ways:
-    /// `Σ_i 2·d^{2^i}·M / B`.
+    /// SparCML SSAR recursive doubling, generalized to arbitrary `n`.
+    ///
+    /// Power-of-two `n = 2^k`: stage `i` ships the aggregate of `2^i`
+    /// tensors (density `d^{2^i}`) as COO both ways — `Σ_i 2·d^{2^i}·M/B`
+    /// (the Appendix-B closed form, kept as the test oracle below).
+    ///
+    /// Other `n`: the scheme folds the `n − core` excess nodes into the
+    /// largest power-of-two `core` first and broadcasts the final
+    /// aggregate back (exactly what [`crate::schemes::SparCml`]
+    /// executes), so the model adds one `2·d(1)` fold-in stage and one
+    /// `2·d(n)` fold-out stage, and the busiest core node at doubling
+    /// stage `i` ships an aggregate of up to `2^{i+1}` inputs.
     pub fn sparcml(&self) -> f64 {
-        assert!(self.n.is_power_of_two(), "SSAR formula needs 2^k nodes");
-        let stages = self.n.trailing_zeros() as usize;
-        (0..stages)
-            .map(|i| 2.0 * self.stats.agg_density(1 << i) * self.m / self.bandwidth_values)
-            .sum()
+        if self.n <= 1 {
+            return 0.0;
+        }
+        let core = largest_pow2_at_most(self.n);
+        let excess = self.n - core;
+        let per = |j: usize| 2.0 * self.stats.agg_density(j) * self.m / self.bandwidth_values;
+        let mut t = 0.0;
+        if excess > 0 {
+            t += per(1); // fold-in: excess nodes ship their own tensor
+        }
+        for i in 0..core.trailing_zeros() as usize {
+            let j = if excess > 0 {
+                (1usize << (i + 1)).min(self.n)
+            } else {
+                1usize << i
+            };
+            t += per(j);
+        }
+        if excess > 0 {
+            t += per(self.n); // fold-out: full aggregate back to excess
+        }
+        t
     }
 
     /// Sparse PS (point-to-point pull): `2(n−1)(d_G + d_G^n)·s^n·M/n/B`
@@ -71,6 +199,20 @@ impl<'a, S: SparsityStats> CostModel<'a, S> {
         let dn = self.stats.agg_density(self.n);
         let s = self.stats.skewness(self.n);
         2.0 * (self.nf() - 1.0) * (d1 + dn) * s * self.m / self.nf() / self.bandwidth_values
+    }
+
+    /// OmniReduce: contiguous even partitions, non-zero *blocks* shipped
+    /// as (id + `block_len` values) — `(1 + 1/b)` value units per block
+    /// slot. The busiest aggregator owns the hottest partition, whose
+    /// block share is approximated as `min(1, s^n · blocks(d))`:
+    /// `(n−1)·M/n·(1+1/b)·(blocks(d_G)·s + blocks(d_G^n)·s)/B`.
+    pub fn omnireduce(&self, block_len: usize) -> f64 {
+        assert!(block_len > 0);
+        let s = self.stats.skewness(self.n);
+        let push = (self.stats.block_density(1, block_len) * s).min(1.0);
+        let pull = (self.stats.block_density(self.n, block_len) * s).min(1.0);
+        let unit = 1.0 + 1.0 / block_len as f64;
+        (self.nf() - 1.0) * self.m / self.nf() * unit * (push + pull) / self.bandwidth_values
     }
 
     /// Balanced Parallelism with COO (the hypothetical optimum of Fig 7):
@@ -99,6 +241,11 @@ impl<'a, S: SparsityStats> CostModel<'a, S> {
         let d = self.stats.agg_density(self.n.saturating_sub(1).max(1));
         d * self.m / self.bandwidth_values
     }
+}
+
+/// Largest power of two ≤ `n` (`n ≥ 1`).
+fn largest_pow2_at_most(n: usize) -> usize {
+    1usize << (usize::BITS - 1 - n.leading_zeros())
 }
 
 /// An analytic stats model: densification follows the independent-union
@@ -152,6 +299,16 @@ mod tests {
         (cm.dense(), cm.zen())
     }
 
+    /// The Appendix-B power-of-two closed form, kept verbatim as the
+    /// oracle the generalized `sparcml` must reproduce at `n = 2^k`.
+    fn sparcml_pow2_oracle<S: SparsityStats>(m: f64, n: usize, bw: f64, stats: &S) -> f64 {
+        assert!(n.is_power_of_two());
+        let stages = n.trailing_zeros() as usize;
+        (0..stages)
+            .map(|i| 2.0 * stats.agg_density(1 << i) * m / bw)
+            .sum()
+    }
+
     #[test]
     fn lemma4_balanced_beats_sparse_ps() {
         let s = stats();
@@ -174,6 +331,95 @@ mod tests {
                 "n={n}: BP must beat SparCML when overlapped"
             );
         }
+    }
+
+    #[test]
+    fn sparcml_matches_pow2_closed_form() {
+        let s = stats();
+        for n in [1usize, 2, 4, 8, 16, 32, 128] {
+            let cm = CostModel::new(112e6, n, 25e9 / 32.0, &s);
+            let oracle = if n == 1 {
+                0.0
+            } else {
+                sparcml_pow2_oracle(112e6, n, 25e9 / 32.0, &s)
+            };
+            assert!(
+                (cm.sparcml() - oracle).abs() < 1e-12,
+                "n={n}: generalized {} vs closed form {oracle}",
+                cm.sparcml()
+            );
+        }
+    }
+
+    #[test]
+    fn sparcml_non_pow2_no_panic_and_bracketed() {
+        // The planner evaluates every candidate at arbitrary n (the old
+        // hard assert panicked on n = 6). The generalized stage sum must
+        // be finite and sit between the two adjacent power-of-two costs'
+        // natural bounds: at least the core's closed form, and at most
+        // the core's plus the two fold stages at extreme densities.
+        let s = stats();
+        for n in [3usize, 5, 6, 7, 12, 100] {
+            let cm = CostModel::new(112e6, n, 25e9 / 32.0, &s);
+            let t = cm.sparcml();
+            assert!(t.is_finite() && t > 0.0, "n={n}: {t}");
+            let core = 1usize << (usize::BITS - 1 - n.leading_zeros());
+            let core_t = sparcml_pow2_oracle(112e6, core, 25e9 / 32.0, &s);
+            assert!(t > core_t, "n={n}: folds must add cost over core {core}");
+            let bound = core_t
+                + 2.0 * (s.agg_density(1) + s.agg_density(n)) * 112e6 / (25e9 / 32.0)
+                + 2.0 * (s.agg_density(2 * core.min(n)) - s.agg_density(1)).abs() * 112e6
+                    / (25e9 / 32.0)
+                    * core.trailing_zeros() as f64;
+            assert!(t <= bound * 1.0001, "n={n}: {t} vs bound {bound}");
+        }
+    }
+
+    #[test]
+    fn latency_term_counts_stages() {
+        let s = stats();
+        let alpha = 1e-3;
+        let cm0 = CostModel::new(1e6, 8, 25e9 / 32.0, &s);
+        let cm1 = CostModel::new(1e6, 8, 25e9 / 32.0, &s).with_latency(alpha);
+        for scheme in ["allreduce", "agsparse", "sparcml", "sparseps", "omnireduce", "zen-coo", "zen"]
+        {
+            let stages = cm1.stage_count(scheme).unwrap();
+            let d = cm1.time_for(scheme, 256).unwrap() - cm0.time_for(scheme, 256).unwrap();
+            assert!(
+                (d - alpha * stages as f64).abs() < 1e-12,
+                "{scheme}: latency delta {d} for {stages} stages"
+            );
+        }
+        // one machine: everything is free, latency included
+        let cm_solo = CostModel::new(1e6, 1, 25e9 / 32.0, &s).with_latency(alpha);
+        assert_eq!(cm_solo.time_for("zen", 256), Some(0.0));
+    }
+
+    #[test]
+    fn omnireduce_interpolates_between_dense_and_coo() {
+        // Scattered non-zeros (independent positions): at block_len 256
+        // and density 1%, nearly every block is non-zero → OmniReduce
+        // approaches the dense cost ballpark; at block_len 1 it becomes
+        // a COO-like 2-units-per-nnz scheme and beats it.
+        let s = AnalyticStats {
+            d1: 0.01,
+            freshness: 1.0,
+            skew: 1.0,
+        };
+        let cm = CostModel::new(1e8, 8, 25e9 / 32.0, &s);
+        let coarse = cm.omnireduce(256);
+        let fine = cm.omnireduce(1);
+        assert!(fine < coarse, "fine blocks {fine} vs coarse {coarse}");
+        assert!(coarse > cm.dense() * 0.5, "coarse ≈ dense regime");
+        assert!(fine < cm.dense(), "b=1 ships only non-zeros");
+    }
+
+    #[test]
+    fn block_density_default_monotone() {
+        let s = stats();
+        let b64 = s.block_density(1, 64);
+        let b256 = s.block_density(1, 256);
+        assert!(s.agg_density(1) <= b64 && b64 <= b256 && b256 <= 1.0);
     }
 
     #[test]

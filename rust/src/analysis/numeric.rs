@@ -12,43 +12,13 @@
 
 use crate::cluster::{LinkKind, Network};
 use crate::schemes::{self, SyncScheme};
-use crate::tensor::metrics;
 use crate::util::table::Table;
 use crate::workload::{GradientGen, ModelProfile};
 
-/// Measured sparsity statistics of a generated workload, which also
-/// implement [`super::costmodel::SparsityStats`] for the closed forms.
-pub struct MeasuredStats {
-    agg_density: Vec<f64>, // index j-1 → d^j
-    skew: std::collections::HashMap<usize, f64>,
-}
-
-impl MeasuredStats {
-    pub fn from_tensors(tensors: &[crate::tensor::CooTensor], parts: &[usize]) -> Self {
-        let mut agg_density = Vec::with_capacity(tensors.len());
-        for j in 1..=tensors.len() {
-            agg_density.push(metrics::aggregated_density(&tensors[..j]));
-        }
-        let mut skew = std::collections::HashMap::new();
-        for &p in parts {
-            skew.insert(p, metrics::skewness_ratio(&tensors[0], p));
-        }
-        MeasuredStats { agg_density, skew }
-    }
-}
-
-impl super::costmodel::SparsityStats for MeasuredStats {
-    fn agg_density(&self, j: usize) -> f64 {
-        self.agg_density[(j - 1).min(self.agg_density.len() - 1)]
-    }
-
-    fn skewness(&self, n: usize) -> f64 {
-        *self
-            .skew
-            .get(&n)
-            .unwrap_or(&self.skew.values().copied().fold(1.0, f64::max))
-    }
-}
+/// Measured sparsity statistics now live in the planner subsystem
+/// (incremental unions, block shares, deterministic profiles) — the
+/// historical `analysis::numeric::MeasuredStats` path stays importable.
+pub use crate::planner::MeasuredStats;
 
 /// One Fig 7 data point: scheme communication times normalized to Dense.
 #[derive(Clone, Debug)]

@@ -122,6 +122,27 @@ impl Args {
         }
     }
 
+    /// Parse a ratio-valued option (e.g. `--replan-threshold 0.25`):
+    /// must parse as a float inside `[0, 1]`. Unlike the defaulting
+    /// getters, a present-but-invalid value is an error — a planner
+    /// silently running with hysteresis 0 because "0.2.5" failed to
+    /// parse would be wrong.
+    pub fn ratio(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                let x: f64 = v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--{key} wants a number in [0, 1], got '{v}'"))?;
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&x),
+                    "--{key} must be within [0, 1], got {x}"
+                );
+                Ok(x)
+            }
+        }
+    }
+
     /// Parse a transport backend name (`sim`, `channel`, `tcp`). Unlike
     /// [`link`](Args::link), an unknown value is an error — silently
     /// simulating when the user asked for real frames would be wrong.
@@ -178,6 +199,14 @@ mod tests {
             a.link("link", crate::cluster::LinkKind::Tcp25),
             crate::cluster::LinkKind::Rdma100
         );
+    }
+
+    #[test]
+    fn ratio_parsing() {
+        assert_eq!(parse("--hys 0.4").ratio("hys", 0.25).unwrap(), 0.4);
+        assert_eq!(parse("").ratio("hys", 0.25).unwrap(), 0.25);
+        assert!(parse("--hys 1.5").ratio("hys", 0.25).is_err());
+        assert!(parse("--hys nope").ratio("hys", 0.25).is_err());
     }
 
     #[test]

@@ -6,8 +6,9 @@
 //! calling the L1 Pallas matmul kernel) and is exported once per shape
 //! to `artifacts/train_step_b{B}_k{K}_d{D}_h{H}.hlo.txt`; this module
 //! executes it via PJRT, owns the parameter state, builds the sparse
-//! embedding gradients, synchronizes them with any [`SyncScheme`], and
-//! applies SGD.
+//! embedding gradients, synchronizes them with the scheme its
+//! [`Planner`] picks (fixed by name, or cost-model-driven via
+//! `--scheme auto`), and applies SGD.
 //!
 //! Crucially the HLO step only touches *gathered rows* — vocabulary size
 //! is a rust-side concern — so one artifact serves any table size, and
@@ -20,8 +21,9 @@ use anyhow::{Context, Result};
 
 use super::sgd;
 use crate::cluster::{LinkKind, Network};
+use crate::planner::{self, PlanConfig, Planner};
 use crate::runtime::{lit, Executable, Runtime};
-use crate::schemes::{self, SyncScheme, SyncScratch};
+use crate::schemes::{SyncScheme, SyncScratch};
 use crate::tensor::CooTensor;
 use crate::util::{Pcg64, Zipf};
 use crate::wire::{Transport, TransportKind};
@@ -37,6 +39,9 @@ pub struct LmConfig {
     pub zipf_theta: f64,
     pub lr: f32,
     pub seed: u64,
+    /// Density-drift hysteresis for `--scheme auto` (see
+    /// [`PlanConfig::replan_threshold`]; ignored by fixed schemes).
+    pub replan_threshold: f64,
 }
 
 impl LmConfig {
@@ -52,6 +57,7 @@ impl LmConfig {
             zipf_theta: 1.05,
             lr: 0.3,
             seed: 0x11,
+            replan_threshold: PlanConfig::default().replan_threshold,
         }
     }
 
@@ -67,6 +73,7 @@ impl LmConfig {
             zipf_theta: 1.05,
             lr: 0.3,
             seed: 0x100,
+            replan_threshold: PlanConfig::default().replan_threshold,
         }
     }
 
@@ -91,6 +98,10 @@ impl LmConfig {
 #[derive(Clone, Debug)]
 pub struct StepStats {
     pub loss: f32,
+    /// Display name of the scheme that synchronized this step's
+    /// embedding gradients (constant for fixed schemes; `--scheme auto`
+    /// may re-plan when the measured density drifts).
+    pub scheme: &'static str,
     /// Virtual network time for the embedding sync this step.
     pub emb_comm_time: f64,
     /// Virtual network time for the dense MLP allreduce.
@@ -116,7 +127,9 @@ pub struct LmTrainer {
     pub cfg: LmConfig,
     pub workers: usize,
     exe: Executable,
-    scheme: Box<dyn SyncScheme>,
+    /// Chooses the embedding-sync scheme per step: fixed for a named
+    /// scheme, cost-model-driven for `auto`.
+    planner: Box<dyn Planner>,
     net: Network,
     // Parameters (replicated across data-parallel workers → stored once).
     pub embedding: Vec<f32>,
@@ -174,20 +187,34 @@ impl LmTrainer {
         // Expected per-worker nnz: (1 + 1 + K) rows per pair, B pairs.
         let expected_rows = cfg.batch * (2 + cfg.negatives);
         let expected_nnz = (expected_rows * cfg.dim).min(cfg.emb_params());
-        let scheme = schemes::by_name(scheme_name, workers, cfg.seed ^ 0x5eed, expected_nnz)
-            .ok_or_else(|| anyhow::anyhow!("unknown scheme '{scheme_name}'"))?;
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&cfg.replan_threshold),
+            "replan threshold {} outside [0, 1]",
+            cfg.replan_threshold
+        );
+        let plan_cfg = PlanConfig {
+            replan_threshold: cfg.replan_threshold,
+            ..PlanConfig::default()
+        };
+        let planner = planner::by_name(
+            scheme_name,
+            workers,
+            cfg.seed ^ 0x5eed,
+            expected_nnz,
+            plan_cfg,
+        )
+        .ok_or_else(|| anyhow::anyhow!("unknown scheme '{scheme_name}' (or 'auto')"))?;
         let net = Network::new(workers, link);
         if matches!(transport, TransportKind::Tcp) {
-            // Scheme-aware worst-frame estimate (see SimDriver::new);
-            // the runtime per-stream budget stays authoritative.
-            let lower = scheme_name.to_ascii_lowercase();
-            let est_payload = if lower == "allreduce" || lower == "dense" || lower == "omnireduce" {
-                crate::util::ceil_div(cfg.emb_params(), workers) * 4
-            } else if lower == "sparcml" || lower.starts_with("agsparse") {
-                expected_nnz.saturating_mul(workers).min(cfg.emb_params()) * 8
-            } else {
-                expected_nnz * 8
-            };
+            // Scheme-aware worst-frame estimate, shared with
+            // SimDriver::new; the runtime per-stream budget stays
+            // authoritative.
+            let est_payload = super::tcp_worst_frame_estimate(
+                scheme_name,
+                cfg.emb_params(),
+                expected_nnz,
+                workers,
+            );
             let est_frame = est_payload + 64;
             anyhow::ensure!(
                 est_frame <= crate::wire::MAX_TCP_INFLIGHT_BYTES,
@@ -215,7 +242,7 @@ impl LmTrainer {
             cfg,
             workers,
             exe,
-            scheme,
+            planner,
             net,
             embedding,
             w1,
@@ -350,12 +377,19 @@ impl LmTrainer {
         }
         let compute_wall = compute_sw.elapsed();
 
-        // Synchronize the sparse embedding gradients (reused scratch —
-        // steady-state steps don't pay allocator noise in the sync) over
-        // the trainer's transport backend.
-        let sync = self
-            .scheme
-            .sync_transport(&worker_grads, self.transport.as_mut(), &mut self.scratch);
+        // Plan, then synchronize the sparse embedding gradients (reused
+        // scratch — steady-state steps don't pay allocator noise in the
+        // sync) over the trainer's transport backend. Fixed schemes make
+        // plan() a constant; `auto` serves its cached plan unless the
+        // measured gradient density drifted past the hysteresis.
+        let planned = self
+            .planner
+            .plan("embedding", &worker_grads, self.net.link);
+        let sync = planned.scheme.sync_transport(
+            &worker_grads,
+            self.transport.as_mut(),
+            &mut self.scratch,
+        );
         let emb_comm_time = sync.report.comm_time();
         let scheme_overhead = sync.report.compute_overhead;
 
@@ -386,6 +420,7 @@ impl LmTrainer {
         self.step_count += 1;
         Ok(StepStats {
             loss: loss_acc / self.workers as f32,
+            scheme: planned.scheme.name(),
             emb_comm_time,
             mlp_comm_time,
             compute_wall,
@@ -447,11 +482,13 @@ impl LmTrainer {
                 log.accuracies.push((it, acc));
                 if verbose {
                     println!(
-                        "step {it:4}  loss {:.4}  acc {:.3}  emb-comm {:.2}ms  compute {:.0}ms",
+                        "step {it:4}  loss {:.4}  acc {:.3}  emb-comm {:.2}ms  compute {:.0}ms  \
+                         [{}]",
                         s.loss,
                         acc,
                         s.emb_comm_time * 1e3,
-                        s.compute_wall * 1e3
+                        s.compute_wall * 1e3,
+                        s.scheme
                     );
                 }
             }

@@ -14,6 +14,7 @@ pub mod lm;
 pub mod sgd;
 
 use crate::cluster::{LinkKind, Network, Topology};
+use crate::planner::{self, PlanConfig, Planner};
 use crate::schemes::{self, SyncScheme, SyncScratch};
 use crate::wire::TransportKind;
 use crate::workload::{GradientGen, ModelProfile};
@@ -30,6 +31,37 @@ pub fn compute_time_per_iter(profile_name: &str) -> f64 {
         "NMT" => 0.18,
         "BERT" => 0.15,
         _ => 0.15,
+    }
+}
+
+/// Conservative worst-frame payload estimate (bytes, excluding the
+/// frame header) for the up-front TCP in-flight check — shared by
+/// [`SimDriver`] and [`lm::LmTrainer`] so the two paths cannot drift.
+/// `per_node_nnz` is the expected non-zeros of one endpoint's tensor;
+/// `auto` takes the worst case across every planner candidate (a
+/// dense-chunk frame can exceed the densified COO one at low density).
+/// That is deliberately stricter than the scheme auto would *probably*
+/// pick: a density drift can legally re-plan onto any candidate
+/// mid-run, and an up-front rejection with guidance beats a mid-run
+/// transport panic. Workloads rejected under `auto` still run any
+/// fixed sparse scheme over TCP, or `auto` over `--transport channel`.
+pub(crate) fn tcp_worst_frame_estimate(
+    scheme: &str,
+    dense_len: usize,
+    per_node_nnz: usize,
+    endpoints: usize,
+) -> usize {
+    let lower = scheme.to_ascii_lowercase();
+    let dense_est = crate::util::ceil_div(dense_len, endpoints) * 4;
+    let densified_est = per_node_nnz.saturating_mul(endpoints).min(dense_len) * 8;
+    if lower == "allreduce" || lower == "dense" || lower == "omnireduce" {
+        dense_est
+    } else if lower == "sparcml" || lower.starts_with("agsparse") {
+        densified_est
+    } else if lower == "auto" {
+        dense_est.max(densified_est)
+    } else {
+        per_node_nnz * 8
     }
 }
 
@@ -68,8 +100,12 @@ pub struct SimConfig {
     pub machines: usize,
     pub gpus_per_machine: usize,
     pub link: LinkKind,
-    /// Scheme name (see [`schemes::by_name`]).
+    /// Scheme name (see [`schemes::by_name`]) or `auto` for the
+    /// cost-model planner ([`crate::planner::CostPlanner`]).
     pub scheme: String,
+    /// Relative measured-density drift that invalidates a cached plan
+    /// (`--scheme auto` only; see [`PlanConfig::replan_threshold`]).
+    pub replan_threshold: f64,
     pub iterations: usize,
     pub seed: u64,
     /// `Some` → pipelined multi-tensor engine; `None` → the classic
@@ -90,6 +126,7 @@ impl SimConfig {
             gpus_per_machine: 8,
             link: LinkKind::Tcp25,
             scheme: scheme.to_string(),
+            replan_threshold: PlanConfig::default().replan_threshold,
             iterations: 4,
             seed: 0xbeef,
             pipeline: None,
@@ -98,10 +135,39 @@ impl SimConfig {
     }
 }
 
+/// One bucket's row in the reported synchronization plan: which scheme
+/// the planner chose and how its prediction compared to what the
+/// transport actually measured — mispredictions are visible numbers.
+#[derive(Clone, Debug)]
+pub struct BucketPlanReport {
+    /// Bucket label (`embedding` for the flat path).
+    pub label: String,
+    /// Display name of the executed scheme.
+    pub scheme: &'static str,
+    /// Cost-model prediction rescaled to full model size (seconds);
+    /// `None` under a fixed scheme (nothing was predicted).
+    pub predicted: Option<f64>,
+    /// Transport-measured full-size virtual time (seconds).
+    pub measured: f64,
+}
+
+impl BucketPlanReport {
+    /// measured / predicted (> 1 = cost model optimistic), if predicted.
+    pub fn misprediction(&self) -> Option<f64> {
+        planner::misprediction_ratio(self.measured, self.predicted)
+    }
+}
+
 /// Result of a simulated run.
 #[derive(Clone, Debug)]
 pub struct SimResult {
+    /// Scheme label: the fixed scheme's display name, or `auto` (see
+    /// `plan` for the per-bucket choices).
     pub scheme: String,
+    /// The synchronization plan executed on the first iteration: one row
+    /// per bucket (flat mode: the single `embedding` row) with predicted
+    /// vs transport-measured time.
+    pub plan: Vec<BucketPlanReport>,
     /// Full-size per-iteration gradient sync time (virtual seconds).
     /// Flat mode: the embedding tensor's sync. Engine mode: total bucket
     /// communication, which also covers any dense layers in the plan.
@@ -142,7 +208,7 @@ impl SimResult {
 pub struct SimDriver {
     pub cfg: SimConfig,
     gen: GradientGen,
-    scheme: Box<dyn SyncScheme>,
+    planner: Box<dyn Planner>,
     topo: Topology,
 }
 
@@ -179,14 +245,8 @@ impl SimDriver {
             // stays authoritative.
             let machine_nnz = gen.expected_nnz() * cfg.gpus_per_machine.min(4);
             let dense_len = gen.profile.emb_params();
-            let lower = cfg.scheme.to_ascii_lowercase();
-            let est_payload = if lower == "allreduce" || lower == "dense" || lower == "omnireduce" {
-                crate::util::ceil_div(dense_len, cfg.machines) * 4
-            } else if lower == "sparcml" || lower.starts_with("agsparse") {
-                machine_nnz.saturating_mul(cfg.machines).min(dense_len) * 8
-            } else {
-                machine_nnz * 8
-            };
+            let est_payload =
+                tcp_worst_frame_estimate(&cfg.scheme, dense_len, machine_nnz, cfg.machines);
             let est_frame = est_payload + 64;
             anyhow::ensure!(
                 est_frame <= crate::wire::MAX_TCP_INFLIGHT_BYTES,
@@ -197,18 +257,28 @@ impl SimDriver {
                 crate::wire::MAX_TCP_INFLIGHT_BYTES
             );
         }
-        let scheme = schemes::by_name(
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&cfg.replan_threshold),
+            "replan threshold {} outside [0, 1]",
+            cfg.replan_threshold
+        );
+        let plan_cfg = PlanConfig {
+            replan_threshold: cfg.replan_threshold,
+            ..PlanConfig::default()
+        };
+        let planner = planner::by_name(
             &cfg.scheme,
             cfg.machines,
             cfg.seed ^ 0x5eed,
             gen.expected_nnz() * cfg.gpus_per_machine.min(4),
+            plan_cfg,
         )
-        .ok_or_else(|| anyhow::anyhow!("unknown scheme '{}'", cfg.scheme))?;
+        .ok_or_else(|| anyhow::anyhow!("unknown scheme '{}' (or 'auto')", cfg.scheme))?;
         let topo = Topology::new(cfg.machines, cfg.gpus_per_machine, cfg.link);
         Ok(SimDriver {
             cfg,
             gen,
-            scheme,
+            planner,
             topo,
         })
     }
@@ -264,8 +334,8 @@ impl SimDriver {
         }
     }
 
-    /// Classic path: one blocking `sync()` of the flat embedding tensor
-    /// per iteration.
+    /// Classic path: one blocking sync of the flat embedding tensor per
+    /// iteration — a single planner "bucket" labeled `embedding`.
     fn run_flat(&self) -> SimResult {
         let n = self.cfg.machines;
         let g = self.cfg.gpus_per_machine;
@@ -273,6 +343,7 @@ impl SimDriver {
         let mut emb_sync_times = Vec::with_capacity(self.cfg.iterations);
         let mut push_imb = Vec::new();
         let mut pull_imb = Vec::new();
+        let mut plan: Vec<BucketPlanReport> = Vec::new();
         // One scratch for the whole run: iterations after the first
         // reuse warmed buffers, so the compute charge in the reported
         // stages reflects the algorithm, not the allocator. The
@@ -288,21 +359,32 @@ impl SimDriver {
             // Each machine's tensor = aggregate of its g GPUs (the
             // intra-machine NVLink phase), densification included.
             let inputs: Vec<crate::tensor::CooTensor> = (0..n)
-                .map(|m| {
-                    let per_gpu: Vec<crate::tensor::CooTensor> = (0..g)
-                        .map(|gi| self.gen.iteration(it, m * g + gi))
-                        .collect();
-                    crate::tensor::CooTensor::merge_all(&per_gpu)
-                })
+                .map(|m| self.gen.machine_iteration(it, m, g))
                 .collect();
-            let result = self
+            // Steady-state plan() is a cached lookup plus a mean-density
+            // scan; only warm-up (or a density drift past the
+            // hysteresis) profiles and re-ranks.
+            let planned = self.planner.plan("embedding", &inputs, net.link);
+            let result = planned
                 .scheme
                 .sync_transport(&inputs, tx.as_mut(), &mut scratch);
             // Correctness self-check on the first iteration.
             if it == 0 && !self.cfg.scheme.starts_with("strawman") {
                 schemes::verify_outputs(&result, &inputs);
             }
-            emb_sync_times.push(self.full_size_time(&result.report));
+            let measured = self.full_size_time(&result.report);
+            if it == 0 {
+                plan.push(BucketPlanReport {
+                    label: "embedding".to_string(),
+                    scheme: planned.scheme.name(),
+                    predicted: planned
+                        .plan
+                        .as_ref()
+                        .map(|p| p.predicted_at_scale(self.scale_factor())),
+                    measured,
+                });
+            }
+            emb_sync_times.push(measured);
             if result.report.stages.len() == 2 {
                 push_imb.push(result.report.stages[0].recv_imbalance());
                 pull_imb.push(result.report.stages[1].sent_imbalance());
@@ -322,7 +404,8 @@ impl SimDriver {
             (n * g * self.cfg.profile.batch_size) as f64 / iter_time;
 
         SimResult {
-            scheme: self.scheme.name().to_string(),
+            scheme: self.planner.scheme_label(),
+            plan,
             emb_sync_times,
             mlp_sync_time,
             intra_time,
@@ -354,6 +437,7 @@ impl SimDriver {
         let mut emb_sync_times = Vec::with_capacity(self.cfg.iterations);
         let mut serialized = Vec::with_capacity(self.cfg.iterations);
         let mut overlapped = Vec::with_capacity(self.cfg.iterations);
+        let mut plan: Vec<BucketPlanReport> = Vec::new();
         for it in 0..self.cfg.iterations as u64 {
             // Machine-level layer tensors: aggregate each layer over the
             // machine's g GPUs (intra-machine NVLink phase, densification
@@ -376,11 +460,27 @@ impl SimDriver {
                         .collect()
                 })
                 .collect();
-            let run = engine.run(&specs, &machine_layers, self.scheme.as_ref(), &net, |r| {
+            let run = engine.run(&specs, &machine_layers, self.planner.as_ref(), &net, |r| {
                 self.full_size_time(r)
             });
             if it == 0 && !self.cfg.scheme.starts_with("strawman") {
                 crate::engine::verify_layer_outputs(&run, &machine_layers);
+            }
+            if it == 0 {
+                // Per-bucket plan report: the engine's comm_time already
+                // went through full_size_time; rescale the prediction's
+                // bandwidth part the same way (latency is size-free).
+                let scale = self.scale_factor();
+                plan = run
+                    .buckets
+                    .iter()
+                    .map(|b| BucketPlanReport {
+                        label: b.label.clone(),
+                        scheme: b.scheme,
+                        predicted: b.plan.as_ref().map(|p| p.predicted_at_scale(scale)),
+                        measured: b.comm_time,
+                    })
+                    .collect();
             }
             let comm_total: f64 = run.buckets.iter().map(|b| b.comm_time).sum();
             emb_sync_times.push(comm_total);
@@ -410,7 +510,8 @@ impl SimDriver {
             (n * g * self.cfg.profile.batch_size) as f64 / engine_overlapped;
 
         SimResult {
-            scheme: self.scheme.name().to_string(),
+            scheme: self.planner.scheme_label(),
+            plan,
             emb_sync_times,
             mlp_sync_time,
             intra_time,
@@ -549,6 +650,52 @@ mod tests {
         // combination is refused with a clean error at construction.
         let mut c = pipelined_cfg("zen", 4);
         c.transport = TransportKind::Tcp;
+        assert!(SimDriver::new(c).is_err());
+    }
+
+    #[test]
+    fn auto_scheme_flat_reports_plan() {
+        let r = SimDriver::new(cfg("auto", 8)).unwrap().run();
+        assert_eq!(r.scheme, "auto");
+        assert_eq!(r.plan.len(), 1, "flat mode: one embedding bucket");
+        let p = &r.plan[0];
+        assert_eq!(p.label, "embedding");
+        assert!(!p.scheme.is_empty());
+        let predicted = p.predicted.expect("auto mode predicts");
+        assert!(predicted > 0.0 && p.measured > 0.0);
+        // The cost model must land in the measured ballpark (COO bytes,
+        // bitmap constants, and α stages are all modeled): a large
+        // misprediction here means measurement and model diverged.
+        let mis = p.misprediction().unwrap();
+        assert!((0.3..=3.0).contains(&mis), "measured/predicted = {mis}");
+    }
+
+    #[test]
+    fn auto_pipelined_mixes_and_competes_with_best_fixed() {
+        let auto = SimDriver::new(pipelined_cfg("auto", 8)).unwrap().run();
+        assert_eq!(auto.scheme, "auto");
+        assert!(auto.plan.len() >= 2, "multiple buckets planned");
+        for p in &auto.plan {
+            assert!(p.predicted.is_some(), "bucket {} unpredicted", p.label);
+        }
+        // The planner's whole point: per-bucket choice must at least
+        // match the best single fixed scheme on this workload (dense
+        // head buckets and sparse embedding buckets want different
+        // schemes). Small tolerance for cost-model error on near-ties.
+        let zen = SimDriver::new(pipelined_cfg("zen", 8)).unwrap().run();
+        let dense = SimDriver::new(pipelined_cfg("allreduce", 8)).unwrap().run();
+        let best = zen.emb_sync_mean.min(dense.emb_sync_mean);
+        assert!(
+            auto.emb_sync_mean <= best * 1.05,
+            "auto {} vs best fixed {best}",
+            auto.emb_sync_mean
+        );
+    }
+
+    #[test]
+    fn replan_threshold_validated() {
+        let mut c = cfg("auto", 4);
+        c.replan_threshold = 1.5;
         assert!(SimDriver::new(c).is_err());
     }
 

@@ -1,5 +1,6 @@
 //! Multi-tensor synchronization engine: bucketing + compute/communication
-//! overlap on top of any [`SyncScheme`].
+//! overlap on top of any [`crate::schemes::SyncScheme`], with scheme
+//! choice delegated to a [`Planner`] per bucket.
 //!
 //! The schemes in [`crate::schemes`] synchronize *one* tensor with one
 //! blocking `sync()` call. Real models have many gradient tensors that
@@ -15,11 +16,16 @@
 //! 1. [`bucket::plan_buckets`] packs the per-layer gradients
 //!    ([`crate::workload::LayerSpec`]) into buckets up to a configurable
 //!    byte threshold;
-//! 2. every bucket is synchronized with the *same* scheme protocol the
-//!    single-tensor path uses (bucket-level reuse — Zen, AllReduce,
-//!    SparCML, … all work unchanged), concurrently on a
-//!    [`crate::util::ThreadPool`], over the transport backend selected
-//!    by [`EngineConfig::transport`] (virtual-time sim, real-frames
+//! 2. every bucket asks the [`Planner`] which scheme to run — a
+//!    [`crate::planner::FixedPlanner`] reproduces the classic
+//!    one-scheme-everywhere behavior, a
+//!    [`crate::planner::CostPlanner`] (`--scheme auto`) picks the
+//!    cost-model argmin per bucket from its measured sparsity — then
+//!    synchronizes with the *same* scheme protocol the single-tensor
+//!    path uses (bucket-level reuse — Zen, AllReduce, SparCML, … all
+//!    work unchanged), concurrently on a [`crate::util::ThreadPool`],
+//!    over the transport backend selected by
+//!    [`EngineConfig::transport`] (virtual-time sim, real-frames
 //!    channel, or loopback TCP);
 //! 3. a [`Timeline`] charges virtual time twice: **serialized** (compute,
 //!    then every bucket in turn — the one-blocking-`sync()` baseline)
@@ -34,6 +40,7 @@ pub mod bucket;
 pub use bucket::{plan_buckets, Bucket};
 
 use crate::cluster::{CommReport, Network, Timeline, TimelineJob};
+use crate::planner::Planner;
 use crate::schemes::{SyncScheme, SyncScratch};
 use crate::tensor::{CooTensor, WireFormat};
 use crate::util::{ScratchPool, ThreadPool};
@@ -81,12 +88,38 @@ pub struct BucketOutcome {
     pub label: String,
     /// Indices into the layer-spec list.
     pub layers: std::ops::Range<usize>,
+    /// Display name of the scheme the planner chose for this bucket.
+    pub scheme: &'static str,
+    /// The full plan behind the choice (ranked costs, measured stats,
+    /// bandwidth/latency split for rescaling); `None` under a fixed
+    /// planner.
+    pub plan: Option<std::sync::Arc<crate::planner::BucketPlan>>,
+    /// Cost-model prediction for this bucket at engine scale (seconds);
+    /// `None` under a fixed planner (nothing was predicted).
+    pub predicted_time: Option<f64>,
+    /// Whether this run computed a fresh plan for the bucket (warm-up /
+    /// post-drift) rather than serving the planner's cache.
+    pub replanned: bool,
     /// Bytes this bucket's sync put on the network.
     pub bytes: u64,
-    /// Virtual communication time charged for this bucket.
+    /// Virtual communication time charged for this bucket (through the
+    /// caller's `time_of` rescaling).
     pub comm_time: f64,
+    /// Transport-measured virtual time at engine scale — the number the
+    /// cost-model prediction is judged against
+    /// ([`BucketOutcome::misprediction`]).
+    pub raw_comm_time: f64,
     /// Full communication report from the scheme.
     pub report: CommReport,
+}
+
+impl BucketOutcome {
+    /// Transport-measured / predicted time at engine scale: > 1 means
+    /// the cost model was optimistic, < 1 pessimistic, `None` under a
+    /// fixed planner.
+    pub fn misprediction(&self) -> Option<f64> {
+        crate::planner::misprediction_ratio(self.raw_comm_time, self.predicted_time)
+    }
 }
 
 /// Result of synchronizing a whole model's gradient tensors.
@@ -128,6 +161,13 @@ pub struct SyncEngine {
     /// warmed buffers across `run` calls — the engine-level piece of the
     /// scratch-arena layer.
     scratch: ScratchPool<SyncScratch>,
+    /// Bucket plan frozen after the first `run` (keyed by a spec-list
+    /// fingerprint), exactly like DDP rebuilds its buckets once. Without
+    /// this, per-iteration wire-size estimates oscillating around the
+    /// byte threshold would flip bucket boundaries — and with them the
+    /// labels the [`Planner`] keys its cache on, silently degrading
+    /// O(warm-up) profiling to O(iterations).
+    buckets: std::sync::Mutex<Option<(Vec<(String, usize)>, Vec<Bucket>)>>,
 }
 
 impl SyncEngine {
@@ -143,6 +183,7 @@ impl SyncEngine {
             cfg,
             pool: ThreadPool::with_workers(cores.min(4)),
             scratch: ScratchPool::new(),
+            buckets: std::sync::Mutex::new(None),
         }
     }
 
@@ -156,6 +197,8 @@ impl SyncEngine {
     ///
     /// `per_worker_layers[w][l]` is machine `w`'s gradient for layer `l`
     /// (see [`crate::workload::GradientGen::layer_iteration_all`]);
+    /// `planner` chooses each bucket's scheme (wrap a single scheme in
+    /// [`crate::planner::FixedPlanner`] for the classic behavior);
     /// `time_of` converts a bucket's [`CommReport`] into virtual seconds
     /// (identity: `|r| r.comm_time()`; the simulator passes its
     /// full-model rescaling instead).
@@ -163,7 +206,7 @@ impl SyncEngine {
         &self,
         specs: &[LayerSpec],
         per_worker_layers: &[Vec<CooTensor>],
-        scheme: &dyn SyncScheme,
+        planner: &dyn Planner,
         net: &Network,
         time_of: F,
     ) -> EngineRun
@@ -185,35 +228,70 @@ impl SyncEngine {
             );
         }
 
-        // Per-layer wire estimate: the largest COO payload any machine
-        // would ship for that layer (drives bucket packing only).
-        let est_bytes: Vec<usize> = (0..specs.len())
-            .map(|l| {
-                per_worker_layers
+        // Bucket plan, frozen on first use for this spec list (DDP
+        // semantics: buckets are built once, from the first iteration's
+        // sizes). Stable buckets mean stable labels, which is what lets
+        // a cost planner's per-label cache stay O(warm-up).
+        let matches_specs = |fp: &[(String, usize)]| {
+            fp.len() == specs.len()
+                && fp
                     .iter()
-                    .map(|w| w[l].wire_bytes())
-                    .max()
-                    .unwrap_or(0)
-            })
-            .collect();
-        let buckets = plan_buckets(specs, &est_bytes, self.cfg.bucket_bytes);
+                    .zip(specs.iter())
+                    .all(|((name, params), sp)| *name == sp.name && *params == sp.params)
+        };
+        let buckets = {
+            let mut cached = self.buckets.lock().unwrap();
+            match cached.as_ref() {
+                Some((fp, b)) if matches_specs(fp) => b.clone(),
+                _ => {
+                    // Per-layer wire estimate: the largest COO payload
+                    // any machine would ship for that layer (drives
+                    // bucket packing only).
+                    let est_bytes: Vec<usize> = (0..specs.len())
+                        .map(|l| {
+                            per_worker_layers
+                                .iter()
+                                .map(|w| w[l].wire_bytes())
+                                .max()
+                                .unwrap_or(0)
+                        })
+                        .collect();
+                    let b = plan_buckets(specs, &est_bytes, self.cfg.bucket_bytes);
+                    let fingerprint: Vec<(String, usize)> = specs
+                        .iter()
+                        .map(|sp| (sp.name.clone(), sp.params))
+                        .collect();
+                    *cached = Some((fingerprint, b.clone()));
+                    b
+                }
+            }
+        };
 
-        // Synchronize every bucket with the shared scheme, concurrently.
-        // Each in-flight bucket runs over its own transport instance of
-        // the configured backend (transports are single-sync state).
+        // Plan and synchronize every bucket, concurrently. The planner
+        // sees each bucket's actual per-machine tensors (cost planners
+        // measure them; cached plans make that O(warm-up)); each
+        // in-flight bucket runs over its own transport instance of the
+        // configured backend (transports are single-sync state).
         let sw = crate::util::Stopwatch::start();
-        let synced: Vec<(Bucket, crate::schemes::SyncResult)> =
-            self.pool.map(buckets, |b| {
-                let inputs: Vec<CooTensor> = per_worker_layers
-                    .iter()
-                    .map(|w| bucket::concat_layers(&b, w))
-                    .collect();
-                let mut scratch = self.scratch.acquire();
-                let mut tx = crate::wire::make_transport(self.cfg.transport, net)
-                    .expect("engine transport setup");
-                let result = scheme.sync_transport(&inputs, tx.as_mut(), &mut scratch);
-                (b, result)
-            });
+        type Synced = (
+            Bucket,
+            crate::planner::PlannedSync,
+            crate::schemes::SyncResult,
+        );
+        let synced: Vec<Synced> = self.pool.map(buckets, |b| {
+            let inputs: Vec<CooTensor> = per_worker_layers
+                .iter()
+                .map(|w| bucket::concat_layers(&b, w))
+                .collect();
+            let planned = planner.plan(&b.label(specs), &inputs, net.link);
+            let mut scratch = self.scratch.acquire();
+            let mut tx = crate::wire::make_transport(self.cfg.transport, net)
+                .expect("engine transport setup");
+            let result = planned
+                .scheme
+                .sync_transport(&inputs, tx.as_mut(), &mut scratch);
+            (b, planned, result)
+        });
         let wall_time = sw.elapsed();
 
         // Charge virtual time and build the overlap schedule.
@@ -221,7 +299,7 @@ impl SyncEngine {
         let mut jobs = Vec::with_capacity(synced.len());
         let mut layer_outputs: Vec<Option<CooTensor>> = vec![None; specs.len()];
         let mut total_bytes = 0u64;
-        for (b, result) in synced {
+        for (b, planned, result) in synced {
             let comm_time = time_of(&result.report);
             let bytes = result.report.total_bytes();
             total_bytes += bytes;
@@ -244,8 +322,13 @@ impl SyncEngine {
             outcomes.push(BucketOutcome {
                 label,
                 layers: b.layers.clone(),
+                scheme: planned.scheme.name(),
+                predicted_time: planned.plan.as_ref().map(|p| p.predicted_time),
+                plan: planned.plan,
+                replanned: planned.replanned,
                 bytes,
                 comm_time,
+                raw_comm_time: result.report.comm_time(),
                 report: result.report,
             });
         }
@@ -280,11 +363,16 @@ pub fn verify_layer_outputs(run: &EngineRun, per_worker_layers: &[Vec<CooTensor>
 mod tests {
     use super::*;
     use crate::cluster::LinkKind;
+    use crate::planner::{CostPlanner, FixedPlanner, PlanConfig};
     use crate::schemes;
     use crate::workload::{profiles, GradientGen};
 
     fn small_gen() -> GradientGen {
         GradientGen::new(profiles::by_name("NMT").unwrap().scaled(1024), 0xe6)
+    }
+
+    fn fixed(scheme_name: &str, machines: usize, expected_nnz: usize) -> FixedPlanner {
+        FixedPlanner::new(schemes::by_name(scheme_name, machines, 0x5eed, expected_nnz).unwrap())
     }
 
     fn run_engine(
@@ -296,11 +384,10 @@ mod tests {
         let gen = small_gen();
         let specs = gen.layer_specs(3, 4);
         let layers = gen.layer_iteration_all(&specs, 0, machines);
-        let scheme =
-            schemes::by_name(scheme_name, machines, 0x5eed, gen.expected_nnz().max(64)).unwrap();
+        let planner = fixed(scheme_name, machines, gen.expected_nnz().max(64));
         let net = Network::new(machines, LinkKind::Tcp25);
         let engine = SyncEngine::new(EngineConfig::new(bucket_bytes, compute));
-        let run = engine.run(&specs, &layers, scheme.as_ref(), &net, |r| r.comm_time());
+        let run = engine.run(&specs, &layers, &planner, &net, |r| r.comm_time());
         (run, layers)
     }
 
@@ -365,26 +452,62 @@ mod tests {
         let gen = small_gen();
         let specs = gen.layer_specs(3, 4);
         let layers = gen.layer_iteration_all(&specs, 0, 4);
-        let scheme = schemes::by_name("zen", 4, 0x5eed, gen.expected_nnz().max(64)).unwrap();
+        let planner = fixed("zen", 4, gen.expected_nnz().max(64));
         let net = Network::new(4, LinkKind::Tcp25);
         let sim = SyncEngine::new(EngineConfig::new(16 * 1024, 0.05)).run(
             &specs,
             &layers,
-            scheme.as_ref(),
+            &planner,
             &net,
             |r| r.comm_time(),
         );
         let chan_cfg =
             EngineConfig::new(16 * 1024, 0.05).with_transport(crate::wire::TransportKind::Channel);
-        let chan = SyncEngine::new(chan_cfg).run(&specs, &layers, scheme.as_ref(), &net, |r| {
-            r.comm_time()
-        });
+        let chan =
+            SyncEngine::new(chan_cfg).run(&specs, &layers, &planner, &net, |r| r.comm_time());
         assert_eq!(sim.total_bytes, chan.total_bytes);
         assert_eq!(sim.buckets.len(), chan.buckets.len());
         for (a, b) in sim.buckets.iter().zip(chan.buckets.iter()) {
             assert_eq!(a.bytes, b.bytes, "bucket {}", a.label);
         }
         verify_layer_outputs(&chan, &layers);
+    }
+
+    #[test]
+    fn auto_planner_mixes_schemes_per_bucket() {
+        // Per-layer buckets over a model with one fully dense head layer
+        // and sparse embedding shards: the cost planner must pick the
+        // ring allreduce for the dense bucket and a sparse scheme for
+        // the embedding buckets — the heterogeneity a fixed scheme
+        // cannot express. Zero-latency link so the argmin is pure
+        // bandwidth (deterministic at this scale).
+        let machines = 4;
+        let gen = small_gen();
+        let specs = gen.layer_specs(1, 2);
+        let layers = gen.layer_iteration_all(&specs, 0, machines);
+        let planner = CostPlanner::new(
+            machines,
+            0x5eed,
+            gen.expected_nnz().max(64),
+            PlanConfig::default(),
+        );
+        let net = Network::new(machines, LinkKind::Custom(25_000_000_000, 0));
+        let engine = SyncEngine::new(EngineConfig::new(1, 0.05));
+        let run = engine.run(&specs, &layers, &planner, &net, |r| r.comm_time());
+        verify_layer_outputs(&run, &layers);
+        assert_eq!(run.buckets.len(), specs.len(), "per-layer buckets");
+        assert_eq!(run.buckets[0].scheme, "AllReduce", "dense head bucket");
+        for b in &run.buckets[1..] {
+            assert_ne!(b.scheme, "AllReduce", "sparse bucket {}", b.label);
+            assert!(b.predicted_time.is_some());
+            assert!(b.misprediction().unwrap().is_finite());
+            assert!(b.replanned, "first run plans every bucket");
+        }
+        assert_eq!(planner.profile_count(), specs.len());
+        // second iteration: every plan served from cache
+        let again = engine.run(&specs, &layers, &planner, &net, |r| r.comm_time());
+        assert!(again.buckets.iter().all(|b| !b.replanned));
+        assert_eq!(planner.profile_count(), specs.len(), "O(warm-up) profiling");
     }
 
     #[test]

@@ -7,11 +7,19 @@
 //!
 //! Examples:
 //!   zen sim --model DeepFM --machines 16 --scheme zen --link tcp25
+//!   zen sim --model DeepFM --machines 16 --scheme auto --pipeline
 //!   zen sim --model LSTM --machines 16 --scheme zen --pipeline --bucket-kb 256
 //!   zen sim --model DeepFM --machines 8 --scheme zen --transport channel
 //!   zen sim --model DeepFM --machines 4 --gpus 1 --scale 2048 --transport tcp
-//!   zen train --shape tiny --workers 4 --scheme zen --steps 50
+//!   zen train --shape tiny --workers 4 --scheme auto --steps 50
 //!   zen schemes
+//!
+//! `--scheme auto` hands scheme choice to the cost-model planner: each
+//! bucket's sparsity is measured, the Appendix-B cost model ranks all
+//! seven lossless schemes, and the argmin runs — with the per-bucket
+//! plan (predicted vs transport-measured time) printed so a
+//! misprediction is visible. `--replan-threshold R` tunes the density
+//! hysteresis (default 0.25).
 
 use zen::cluster::LinkKind;
 use zen::config::Args;
@@ -29,10 +37,11 @@ fn main() -> anyhow::Result<()> {
         _ => {
             eprintln!(
                 "usage: zen <sim|train|schemes> [--options]\n\
-                 sim:   --model LSTM|DeepFM|NMT|BERT --machines N --scheme S --link tcp25|rdma100\n\
-                        --transport sim|channel|tcp\n\
-                 train: --shape tiny|paper_100m --workers N --scheme S --steps N\n\
-                        --transport sim|channel|tcp"
+                 sim:   --model LSTM|DeepFM|NMT|BERT --machines N --scheme S|auto\n\
+                        --link tcp25|rdma100 --transport sim|channel|tcp\n\
+                        --replan-threshold R (auto hysteresis, default 0.25)\n\
+                 train: --shape tiny|paper_100m --workers N --scheme S|auto --steps N\n\
+                        --transport sim|channel|tcp --replan-threshold R"
             );
             Ok(())
         }
@@ -55,6 +64,7 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     cfg.gpus_per_machine = args.get_usize("gpus", 8);
     cfg.seed = args.get_u64("seed", 0xbeef);
     cfg.transport = args.transport("transport", TransportKind::Sim)?;
+    cfg.replan_threshold = args.ratio("replan-threshold", cfg.replan_threshold)?;
     // `--pipeline` may arrive as a bare flag or as `--pipeline=<bool>`;
     // an explicit false wins over the sub-option shorthands.
     let pipeline_requested = match args.get("pipeline") {
@@ -112,6 +122,32 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
             ser / over
         );
     }
+    // The executed synchronization plan: one row per bucket with the
+    // chosen scheme and predicted vs transport-measured time, so
+    // cost-model mispredictions are printed, not hidden. Fixed schemes
+    // predict nothing — their output stays exactly as before the
+    // planner existed.
+    if r.plan.iter().any(|p| p.predicted.is_some()) {
+        println!("  plan:");
+        for p in &r.plan {
+            match (p.predicted, p.misprediction()) {
+                (Some(pred), Some(mis)) => println!(
+                    "    {:<14} {:<12} predicted {:>8.3}ms  measured {:>8.3}ms  (x{:.2})",
+                    p.label,
+                    p.scheme,
+                    pred * 1e3,
+                    p.measured * 1e3,
+                    mis
+                ),
+                _ => println!(
+                    "    {:<14} {:<12} measured {:>8.3}ms",
+                    p.label,
+                    p.scheme,
+                    p.measured * 1e3
+                ),
+            }
+        }
+    }
     println!("  throughput {:.0} samples/s", r.throughput);
     Ok(())
 }
@@ -124,6 +160,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     };
     cfg.lr = args.get_f64("lr", cfg.lr as f64) as f32;
     cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.replan_threshold = args.ratio("replan-threshold", cfg.replan_threshold)?;
     let workers = args.get_usize("workers", 4);
     let steps = args.get_usize("steps", 50);
     let scheme = args.get_or("scheme", "zen");

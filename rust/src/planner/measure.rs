@@ -1,0 +1,322 @@
+//! Measurement: per-workload sparsity statistics from real gradients.
+//!
+//! [`MeasuredStats`] is the measured implementation of
+//! [`SparsityStats`] the cost model consumes: aggregate densities
+//! `d(j)` from incremental bitmap unions of the profiled tensors,
+//! skewness `s(n)` from contiguous-partition counts (Definition 5,
+//! averaged over workers), and the non-zero *block* share OmniReduce's
+//! formula needs — measured, because clustered non-zeros (embedding
+//! rows) touch far fewer blocks than the independence approximation
+//! predicts.
+//!
+//! Profiling one bucket is `O(n · nnz)` — cheap, but not free — so the
+//! planner ([`super::CostPlanner`]) computes a `MeasuredStats` once per
+//! bucket during warm-up and caches it behind a density-drift
+//! hysteresis check; steady-state iterations only pay a mean-density
+//! scan. [`MeasuredStats::from_tensors`] itself is deterministic: the
+//! same tensors always produce identical stats (asserted by
+//! `rust/tests/planner_integration.rs`).
+
+use crate::analysis::costmodel::SparsityStats;
+use crate::tensor::{metrics, Bitmap, CooTensor};
+use crate::workload::GradientGen;
+
+/// Measured sparsity statistics of one workload (or one bucket of one).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MeasuredStats {
+    /// Mean per-worker density of the profiled tensors.
+    pub d1: f64,
+    /// `agg[j-1]` = density of the union of the first `j` tensors.
+    agg: Vec<f64>,
+    /// `(partitions, skewness)` at each profiled partition count.
+    skew: Vec<(usize, f64)>,
+    /// `(block_len, share[j-1])` — fraction of `block_len`-blocks with
+    /// ≥ 1 non-zero in the `j`-aggregate (union prefixes), per profiled
+    /// block length.
+    blocks: Vec<(usize, Vec<f64>)>,
+    /// `(block_len, share)` — *mean per-worker* non-zero-block share,
+    /// the `j = 1` value (a union prefix would be worker 0 alone, which
+    /// misrepresents heterogeneous workers exactly like `agg[0]` would
+    /// for `d1`).
+    block_d1: Vec<(usize, f64)>,
+}
+
+impl MeasuredStats {
+    /// Profile one set of per-worker tensors. `parts` lists the
+    /// partition counts to measure skewness at (the planner passes the
+    /// machine count); `block_lens` the block lengths to measure the
+    /// non-zero-block share at (the planner passes its OmniReduce block
+    /// length).
+    pub fn from_tensors(tensors: &[CooTensor], parts: &[usize], block_lens: &[usize]) -> Self {
+        assert!(!tensors.is_empty());
+        let len = tensors[0].dense_len;
+        let n = tensors.len();
+
+        // Incremental unions: one pass over each tensor's indices keeps
+        // the whole d(1..n) profile O(n · nnz).
+        let mut union = Bitmap::zeros(len.max(1));
+        let mut block_union: Vec<(usize, Bitmap)> = block_lens
+            .iter()
+            .map(|&b| {
+                assert!(b > 0, "block length must be positive");
+                (b, Bitmap::zeros(crate::util::ceil_div(len, b).max(1)))
+            })
+            .collect();
+        let mut agg = Vec::with_capacity(n);
+        let mut blocks: Vec<(usize, Vec<f64>)> = block_lens
+            .iter()
+            .map(|&b| (b, Vec::with_capacity(n)))
+            .collect();
+        // Per-worker block shares (for the j = 1 mean): one scratch
+        // bitmap per block length, reset per worker.
+        let mut worker_blocks: Vec<(usize, Bitmap, f64)> = block_lens
+            .iter()
+            .map(|&b| (b, Bitmap::zeros(crate::util::ceil_div(len, b).max(1)), 0.0))
+            .collect();
+        for t in tensors {
+            assert_eq!(t.dense_len, len, "profiled tensors must share a range");
+            for (_, bm, _) in worker_blocks.iter_mut() {
+                let nblocks = bm.len();
+                bm.reset(nblocks);
+            }
+            for &i in &t.indices {
+                union.set(i as usize);
+                for (b, bm) in block_union.iter_mut() {
+                    bm.set(i as usize / *b);
+                }
+                for (b, bm, _) in worker_blocks.iter_mut() {
+                    bm.set(i as usize / *b);
+                }
+            }
+            agg.push(union.count_ones() as f64 / len.max(1) as f64);
+            for ((b, bm), (_, shares)) in block_union.iter().zip(blocks.iter_mut()) {
+                let nblocks = crate::util::ceil_div(len, *b).max(1);
+                shares.push(bm.count_ones() as f64 / nblocks as f64);
+            }
+            for (b, bm, acc) in worker_blocks.iter_mut() {
+                let nblocks = crate::util::ceil_div(len, *b).max(1);
+                *acc += bm.count_ones() as f64 / nblocks as f64;
+            }
+        }
+        let block_d1: Vec<(usize, f64)> = worker_blocks
+            .into_iter()
+            .map(|(b, _, acc)| (b, acc / n as f64))
+            .collect();
+
+        let d1 = tensors.iter().map(|t| t.density()).sum::<f64>() / n as f64;
+        let skew = parts
+            .iter()
+            .map(|&p| {
+                let mean = tensors
+                    .iter()
+                    .map(|t| metrics::skewness_ratio(t, p))
+                    .sum::<f64>()
+                    / n as f64;
+                (p, mean)
+            })
+            .collect();
+
+        MeasuredStats {
+            d1,
+            agg,
+            skew,
+            blocks,
+            block_d1,
+        }
+    }
+
+    /// Profile a generated workload: average `from_tensors` over
+    /// `iterations` sampled iterations of `machines` workers — the
+    /// O(warm-up) measurement pass the planner and the measured-Fig-7
+    /// exhibit share.
+    pub fn profile_workload(
+        gen: &GradientGen,
+        machines: usize,
+        iterations: usize,
+        block_lens: &[usize],
+    ) -> Self {
+        assert!(iterations >= 1);
+        let runs: Vec<MeasuredStats> = (0..iterations as u64)
+            .map(|it| Self::from_tensors(&gen.iteration_all(it, machines), &[machines], block_lens))
+            .collect();
+        Self::average(&runs)
+    }
+
+    /// Element-wise mean of several profiles (all must share the same
+    /// shape: same worker count, partition counts, block lengths).
+    pub fn average(runs: &[MeasuredStats]) -> Self {
+        assert!(!runs.is_empty());
+        let k = runs.len() as f64;
+        let mut out = runs[0].clone();
+        for r in &runs[1..] {
+            // Full shape check up front — a silently truncated zip would
+            // average mismatched profiles into plausible-looking garbage.
+            assert_eq!(r.agg.len(), out.agg.len(), "profiles must share shape");
+            assert_eq!(r.skew.len(), out.skew.len(), "skew shapes differ");
+            assert_eq!(r.blocks.len(), out.blocks.len(), "block shapes differ");
+            assert_eq!(
+                r.block_d1.len(),
+                out.block_d1.len(),
+                "block_d1 shapes differ"
+            );
+            for (o, v) in out.agg.iter_mut().zip(r.agg.iter()) {
+                *o += v;
+            }
+            for ((p, o), (q, v)) in out.skew.iter_mut().zip(r.skew.iter()) {
+                assert_eq!(p, q);
+                *o += v;
+            }
+            for ((b, os), (c, vs)) in out.blocks.iter_mut().zip(r.blocks.iter()) {
+                assert_eq!(b, c);
+                for (o, v) in os.iter_mut().zip(vs.iter()) {
+                    *o += v;
+                }
+            }
+            for ((b, o), (c, v)) in out.block_d1.iter_mut().zip(r.block_d1.iter()) {
+                assert_eq!(b, c);
+                *o += v;
+            }
+            out.d1 += r.d1;
+        }
+        out.d1 /= k;
+        out.agg.iter_mut().for_each(|v| *v /= k);
+        out.skew.iter_mut().for_each(|(_, v)| *v /= k);
+        out.blocks
+            .iter_mut()
+            .for_each(|(_, vs)| vs.iter_mut().for_each(|v| *v /= k));
+        out.block_d1.iter_mut().for_each(|(_, v)| *v /= k);
+        out
+    }
+
+    /// Number of workers the stats were profiled over.
+    pub fn profiled_workers(&self) -> usize {
+        self.agg.len()
+    }
+}
+
+impl SparsityStats for MeasuredStats {
+    fn agg_density(&self, j: usize) -> f64 {
+        assert!(j >= 1, "aggregate of at least one tensor");
+        // d(1) is the *mean* per-worker density, not worker 0's alone —
+        // with heterogeneous workers (a frozen worker among active
+        // ones) the union-prefix value agg[0] would misrepresent the
+        // per-worker push terms every formula scales by d(1). Larger
+        // aggregates come from the measured union prefixes, floored at
+        // d(1) so the profile stays monotone even when the prefix order
+        // starts with atypically sparse workers.
+        if j == 1 {
+            return self.d1;
+        }
+        // Beyond the profiled worker count the union is clamped at the
+        // last measurement (the planner always profiles j up to n).
+        self.agg[(j - 1).min(self.agg.len() - 1)].max(self.d1)
+    }
+
+    fn skewness(&self, n: usize) -> f64 {
+        // Exact measurement if present, else the nearest profiled
+        // partition count (skewness varies slowly in log n — Fig 2b).
+        self.skew
+            .iter()
+            .min_by_key(|(p, _)| p.abs_diff(n))
+            .map(|&(_, s)| s)
+            .unwrap_or(1.0)
+    }
+
+    fn block_density(&self, j: usize, block_len: usize) -> f64 {
+        match self.blocks.iter().find(|(b, _)| *b == block_len) {
+            Some((_, shares)) => {
+                // Same shape as agg_density: j = 1 is the mean
+                // per-worker share; union prefixes (floored at it) for
+                // larger aggregates.
+                let d1 = self
+                    .block_d1
+                    .iter()
+                    .find(|(b, _)| *b == block_len)
+                    .map(|&(_, s)| s)
+                    .unwrap_or(0.0);
+                if j == 1 {
+                    d1
+                } else {
+                    shares[(j - 1).min(shares.len() - 1)].max(d1)
+                }
+            }
+            // Unprofiled block length: independence approximation.
+            None => {
+                crate::analysis::costmodel::independent_block_density(
+                    self.agg_density(j),
+                    block_len,
+                )
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::random_uniform_inputs;
+
+    #[test]
+    fn unions_monotone_and_match_metrics() {
+        let inputs = random_uniform_inputs(1, 6, 4096, 0.03);
+        let s = MeasuredStats::from_tensors(&inputs, &[6], &[64]);
+        let mut prev = 0.0;
+        for j in 1..=6 {
+            let d = s.agg_density(j);
+            assert!(d >= prev && d <= 1.0, "j={j}");
+            prev = d;
+        }
+        // the full union must equal the metrics-module measurement
+        let full = metrics::aggregated_density(&inputs);
+        assert!((s.agg_density(6) - full).abs() < 1e-12);
+        // clamped beyond the profiled count
+        assert_eq!(s.agg_density(60), s.agg_density(6));
+    }
+
+    #[test]
+    fn clustered_blocks_beat_independence() {
+        // 64-wide runs of non-zeros: measured block share at b=64 is far
+        // below the independent-position approximation.
+        let dense_len = 1 << 16;
+        let idx: Vec<u32> = (0..16u32).flat_map(|r| (0..64).map(move |c| r * 4096 + c)).collect();
+        let t = CooTensor::from_sorted(dense_len, idx.clone(), vec![1.0; idx.len()]);
+        let s = MeasuredStats::from_tensors(&[t], &[4], &[64]);
+        let independent = 1.0 - (1.0 - s.agg_density(1)).powi(64);
+        assert!(
+            s.block_density(1, 64) < independent * 0.5,
+            "measured {} vs independent {independent}",
+            s.block_density(1, 64)
+        );
+        // unprofiled block length falls back to the approximation
+        assert!(s.block_density(1, 128) > 0.0);
+    }
+
+    #[test]
+    fn deterministic_and_average_identity() {
+        let inputs = random_uniform_inputs(7, 4, 2048, 0.05);
+        let a = MeasuredStats::from_tensors(&inputs, &[4], &[256]);
+        let b = MeasuredStats::from_tensors(&inputs, &[4], &[256]);
+        assert_eq!(a, b, "profiling must be deterministic");
+        let avg = MeasuredStats::average(&[a.clone(), b]);
+        assert!((avg.d1 - a.d1).abs() < 1e-15);
+        assert_eq!(avg.profiled_workers(), 4);
+    }
+
+    #[test]
+    fn skewness_nearest_fallback() {
+        let inputs = random_uniform_inputs(3, 2, 2048, 0.05);
+        let s = MeasuredStats::from_tensors(&inputs, &[4, 16], &[64]);
+        assert_eq!(s.skewness(4), s.skewness(5), "nearest profiled count");
+        assert_eq!(s.skewness(16), s.skewness(64));
+    }
+
+    #[test]
+    fn empty_tensors_profile_cleanly() {
+        let t = vec![CooTensor::empty(1024); 3];
+        let s = MeasuredStats::from_tensors(&t, &[3], &[64]);
+        assert_eq!(s.d1, 0.0);
+        assert_eq!(s.agg_density(3), 0.0);
+        assert_eq!(s.block_density(2, 64), 0.0);
+        assert_eq!(s.skewness(3), 1.0, "all-zero skewness is neutral");
+    }
+}

@@ -1,0 +1,333 @@
+//! Plan-driven synchronization: measure → plan → execute.
+//!
+//! The paper's headline contribution is the *design-space exploration*:
+//! no single scheme wins everywhere — the optimum depends on density,
+//! densification, skew, machine count, and tensor size (Fig 7). This
+//! subsystem turns that observation into a first-class mechanism:
+//!
+//! 1. **Measure** ([`measure::MeasuredStats`]): profile real per-worker
+//!    gradients — aggregate densities `d(j)` via incremental bitmap
+//!    unions, skewness `s(n)` from contiguous partition counts, and the
+//!    non-zero-block share — once per bucket, cached.
+//! 2. **Plan** ([`plan::plan_bucket`]): evaluate the Appendix-B
+//!    [`crate::analysis::CostModel`] (with the α–β latency term) for
+//!    all seven candidates in [`crate::schemes::PLANNER_CANDIDATES`]
+//!    and emit the argmin as a [`BucketPlan`], with the full ranked
+//!    cost table kept for auditing.
+//! 3. **Execute** ([`Planner`]): [`crate::engine::SyncEngine::run`],
+//!    `SimDriver`, and `LmTrainer` consume a `dyn Planner` instead of a
+//!    single scheme. [`FixedPlanner`] preserves the old single-scheme
+//!    behavior verbatim; [`CostPlanner`] (`--scheme auto`) picks per
+//!    bucket, re-planning only when the measured density drifts past
+//!    [`PlanConfig::replan_threshold`] (hysteresis), so profiling costs
+//!    O(warm-up), not O(every iteration).
+//!
+//! Every execution reports predicted *and* transport-measured time per
+//! bucket, so a misprediction is a visible number, never silent.
+
+pub mod measure;
+pub mod plan;
+
+pub use measure::MeasuredStats;
+pub use plan::{
+    misprediction_ratio, plan_bucket, rank_candidates, BucketPlan, PlanConfig, SchemeCost,
+};
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::cluster::LinkKind;
+use crate::schemes::{self, SyncScheme};
+use crate::tensor::CooTensor;
+
+/// The outcome of planning one synchronization: which scheme to run and
+/// (for cost-driven planners) the audit trail behind the choice.
+pub struct PlannedSync {
+    /// The scheme to execute the synchronization with.
+    pub scheme: Arc<dyn SyncScheme>,
+    /// The plan that chose it; `None` for [`FixedPlanner`].
+    pub plan: Option<Arc<BucketPlan>>,
+    /// Whether this call computed a fresh plan (profiling + argmin)
+    /// rather than serving the cached one.
+    pub replanned: bool,
+}
+
+/// Chooses the synchronization scheme for each bucket of gradients.
+///
+/// Called from inside the engine's concurrent bucket loop, so
+/// implementations must be `Sync`; `plan` takes the bucket's actual
+/// per-machine tensors so cost-driven planners can measure them.
+pub trait Planner: Send + Sync {
+    /// Planner identity for logs (`fixed:Zen`, `auto`).
+    fn name(&self) -> String;
+
+    /// Label results are reported under — the scheme's display name for
+    /// fixed planners (preserving pre-planner output), `auto` otherwise.
+    fn scheme_label(&self) -> String;
+
+    /// Plan the synchronization of one bucket. `label` keys the plan
+    /// cache (stable across iterations); `inputs` holds one tensor per
+    /// machine; `link` is the link of the `Network` the caller will
+    /// execute on — cost planners price against it, so planning and
+    /// execution can never disagree on bandwidth or latency.
+    fn plan(&self, label: &str, inputs: &[CooTensor], link: LinkKind) -> PlannedSync;
+}
+
+/// The pre-planner behavior as a `Planner`: every bucket runs the same
+/// scheme, nothing is measured.
+pub struct FixedPlanner {
+    scheme: Arc<dyn SyncScheme>,
+}
+
+impl FixedPlanner {
+    pub fn new(scheme: Box<dyn SyncScheme>) -> Self {
+        FixedPlanner {
+            scheme: Arc::from(scheme),
+        }
+    }
+
+    /// The wrapped scheme.
+    pub fn scheme(&self) -> &dyn SyncScheme {
+        self.scheme.as_ref()
+    }
+}
+
+impl Planner for FixedPlanner {
+    fn name(&self) -> String {
+        format!("fixed:{}", self.scheme.name())
+    }
+
+    fn scheme_label(&self) -> String {
+        self.scheme.name().to_string()
+    }
+
+    fn plan(&self, _label: &str, _inputs: &[CooTensor], _link: LinkKind) -> PlannedSync {
+        PlannedSync {
+            scheme: self.scheme.clone(),
+            plan: None,
+            replanned: false,
+        }
+    }
+}
+
+/// The cost-model planner behind `--scheme auto`: one scheme instance
+/// per candidate, one cached [`BucketPlan`] per bucket label, density
+/// hysteresis deciding when to re-profile.
+pub struct CostPlanner {
+    cfg: PlanConfig,
+    /// Machine count the candidate schemes were constructed for.
+    n: usize,
+    /// Candidate schemes keyed by their [`schemes::by_name`] name, in
+    /// [`schemes::PLANNER_CANDIDATES`] order.
+    candidates: Vec<(&'static str, Arc<dyn SyncScheme>)>,
+    /// Cached plan per bucket label.
+    cache: Mutex<HashMap<String, Arc<BucketPlan>>>,
+    /// How many full profile-and-plan passes ran — the O(warm-up)
+    /// regression hook (steady state must not grow this).
+    profiles: AtomicUsize,
+}
+
+impl CostPlanner {
+    /// Build the planner and all its candidate schemes. `seed` and
+    /// `expected_nnz` parameterize the hash-based candidates exactly as
+    /// [`schemes::by_name`] does.
+    pub fn new(n: usize, seed: u64, expected_nnz: usize, cfg: PlanConfig) -> Self {
+        let candidates = schemes::PLANNER_CANDIDATES
+            .iter()
+            .map(|&name| {
+                // The executed candidate must match what the cost model
+                // priced: OmniReduce is block-length-parameterized, and
+                // `by_name` would pin it to DEFAULT_BLOCK regardless of
+                // the configured `block_len`.
+                let scheme: Box<dyn SyncScheme> = if name == "omnireduce" {
+                    Box::new(schemes::OmniReduce::new(cfg.block_len))
+                } else {
+                    schemes::by_name(name, n, seed, expected_nnz)
+                        .expect("planner candidates are constructible by name")
+                };
+                (name, Arc::from(scheme))
+            })
+            .collect();
+        CostPlanner {
+            cfg,
+            n,
+            candidates,
+            cache: Mutex::new(HashMap::new()),
+            profiles: AtomicUsize::new(0),
+        }
+    }
+
+    /// Number of full profile-and-plan passes performed so far.
+    pub fn profile_count(&self) -> usize {
+        self.profiles.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of every cached bucket plan (reporting).
+    pub fn plans(&self) -> Vec<Arc<BucketPlan>> {
+        let mut v: Vec<Arc<BucketPlan>> =
+            self.cache.lock().unwrap().values().cloned().collect();
+        v.sort_by(|a, b| a.label.cmp(&b.label));
+        v
+    }
+
+    /// The planner's configuration.
+    pub fn config(&self) -> &PlanConfig {
+        &self.cfg
+    }
+
+    fn scheme_for(&self, name: &str) -> Arc<dyn SyncScheme> {
+        self.candidates
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, s)| s.clone())
+            .expect("plans only choose known candidates")
+    }
+}
+
+impl Planner for CostPlanner {
+    fn name(&self) -> String {
+        "auto".to_string()
+    }
+
+    fn scheme_label(&self) -> String {
+        "auto".to_string()
+    }
+
+    fn plan(&self, label: &str, inputs: &[CooTensor], link: LinkKind) -> PlannedSync {
+        assert!(!inputs.is_empty());
+        let n = inputs.len();
+        // The candidates (Zen's hasher in particular) were built for a
+        // fixed machine count; pricing one n and executing another would
+        // fail deep inside a scheme instead of at the plan boundary.
+        assert_eq!(
+            n, self.n,
+            "CostPlanner built for {} machines asked to plan for {n}",
+            self.n
+        );
+        // The cheap per-iteration measurement: mean density only.
+        let d1 = inputs.iter().map(|t| t.density()).sum::<f64>() / n as f64;
+
+        if let Some(cached) = self.cache.lock().unwrap().get(label).cloned() {
+            let drift = if cached.planned_d1 > 0.0 {
+                (d1 - cached.planned_d1).abs() / cached.planned_d1
+            } else if d1 > 0.0 {
+                f64::INFINITY
+            } else {
+                0.0
+            };
+            // A plan priced for a different link is stale regardless of
+            // density (the caller may rebuild its Network between runs).
+            if drift <= self.cfg.replan_threshold && cached.planned_link == link {
+                return PlannedSync {
+                    scheme: self.scheme_for(cached.chosen),
+                    plan: Some(cached),
+                    replanned: false,
+                };
+            }
+        }
+
+        // Warm-up (or post-drift) path: full profile + argmin. Computed
+        // outside the cache lock — concurrent buckets have distinct
+        // labels, so no duplicated work in practice.
+        let stats = MeasuredStats::from_tensors(inputs, &[n], &[self.cfg.block_len]);
+        let m = inputs[0].dense_len as f64;
+        let plan = Arc::new(plan_bucket(label, m, n, link, &self.cfg, stats));
+        self.profiles.fetch_add(1, Ordering::Relaxed);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(label.to_string(), plan.clone());
+        PlannedSync {
+            scheme: self.scheme_for(plan.chosen),
+            plan: Some(plan),
+            replanned: true,
+        }
+    }
+}
+
+/// Construct a planner by CLI name: `auto` → [`CostPlanner`]; any
+/// [`schemes::by_name`] name → [`FixedPlanner`] around that scheme.
+pub fn by_name(
+    name: &str,
+    n: usize,
+    seed: u64,
+    expected_nnz: usize,
+    cfg: PlanConfig,
+) -> Option<Box<dyn Planner>> {
+    if name.eq_ignore_ascii_case("auto") {
+        Some(Box::new(CostPlanner::new(n, seed, expected_nnz, cfg)))
+    } else {
+        schemes::by_name(name, n, seed, expected_nnz)
+            .map(|s| Box::new(FixedPlanner::new(s)) as Box<dyn Planner>)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::random_uniform_inputs;
+
+    #[test]
+    fn fixed_planner_is_transparent() {
+        let scheme = schemes::by_name("zen", 4, 7, 256).unwrap();
+        let p = FixedPlanner::new(scheme);
+        assert_eq!(p.scheme_label(), "Zen");
+        assert_eq!(p.name(), "fixed:Zen");
+        let inputs = random_uniform_inputs(1, 4, 1024, 0.05);
+        let planned = p.plan("anything", &inputs, LinkKind::Tcp25);
+        assert_eq!(planned.scheme.name(), "Zen");
+        assert!(planned.plan.is_none());
+        assert!(!planned.replanned);
+    }
+
+    #[test]
+    fn auto_planner_caches_per_label() {
+        let p = CostPlanner::new(4, 7, 256, PlanConfig::default());
+        let inputs = random_uniform_inputs(2, 4, 4096, 0.03);
+        let a = p.plan("bucket0", &inputs, LinkKind::Tcp25);
+        assert!(a.replanned);
+        assert_eq!(p.profile_count(), 1);
+        let b = p.plan("bucket0", &inputs, LinkKind::Tcp25);
+        assert!(!b.replanned, "same density → cached plan");
+        assert_eq!(p.profile_count(), 1, "profiling is O(warm-up)");
+        assert_eq!(
+            a.plan.as_ref().unwrap().chosen,
+            b.plan.as_ref().unwrap().chosen
+        );
+        // a different link invalidates the cached plan (re-priced)
+        let c = p.plan("bucket0", &inputs, LinkKind::Rdma100);
+        assert!(c.replanned, "new link → stale plan");
+        assert_eq!(p.profile_count(), 2);
+        // a different bucket label profiles once more
+        p.plan("bucket1", &inputs, LinkKind::Tcp25);
+        assert_eq!(p.profile_count(), 3);
+        assert_eq!(p.plans().len(), 2);
+    }
+
+    #[test]
+    fn density_drift_triggers_replan() {
+        let p = CostPlanner::new(4, 7, 256, PlanConfig::default());
+        let sparse = random_uniform_inputs(3, 4, 4096, 0.01);
+        p.plan("b", &sparse, LinkKind::Tcp25);
+        assert_eq!(p.profile_count(), 1);
+        // within hysteresis: no re-plan
+        let nudged = random_uniform_inputs(4, 4, 4096, 0.011);
+        p.plan("b", &nudged, LinkKind::Tcp25);
+        assert_eq!(p.profile_count(), 1);
+        // 4× density: outside hysteresis → re-profile and re-plan
+        let denser = random_uniform_inputs(5, 4, 4096, 0.04);
+        let r = p.plan("b", &denser, LinkKind::Tcp25);
+        assert!(r.replanned);
+        assert_eq!(p.profile_count(), 2);
+    }
+
+    #[test]
+    fn by_name_resolves_auto_and_fixed() {
+        let auto = by_name("auto", 4, 1, 64, PlanConfig::default()).unwrap();
+        assert_eq!(auto.scheme_label(), "auto");
+        let fixed = by_name("sparcml", 4, 1, 64, PlanConfig::default()).unwrap();
+        assert_eq!(fixed.scheme_label(), "SparCML");
+        assert!(by_name("warp-drive", 4, 1, 64, PlanConfig::default()).is_none());
+    }
+}

@@ -1,0 +1,232 @@
+//! Planning: cost-model argmin over the candidate schemes, per bucket.
+//!
+//! [`plan_bucket`] evaluates the Appendix-B [`CostModel`] for every
+//! candidate in [`crate::schemes::PLANNER_CANDIDATES`] — given the
+//! bucket's dense length, the machine count, the link's bandwidth and
+//! per-stage latency, and a [`SparsityStats`] — and emits the argmin as
+//! a [`BucketPlan`]. The plan keeps the full ranked cost table and the
+//! stats it was derived from, so mispredictions are inspectable, and it
+//! records the density it was planned at for the hysteresis check in
+//! [`super::CostPlanner`].
+
+use crate::analysis::costmodel::{CostModel, SparsityStats};
+use crate::cluster::LinkKind;
+
+use super::measure::MeasuredStats;
+
+/// Planner configuration. Deliberately *without* a link: the cost model
+/// always prices against the link of the `Network` the caller is about
+/// to execute on (threaded through [`super::Planner::plan`]), so
+/// planning and execution cannot silently disagree on bandwidth or
+/// latency.
+#[derive(Clone, Debug)]
+pub struct PlanConfig {
+    /// Relative drift of measured mean density that invalidates a cached
+    /// plan: re-plan only when `|d − d_planned| / d_planned` exceeds
+    /// this (hysteresis; 0 = re-plan whenever the density moves at all).
+    pub replan_threshold: f64,
+    /// Block length the OmniReduce candidate is costed (and profiled) at.
+    pub block_len: usize,
+}
+
+impl Default for PlanConfig {
+    fn default() -> Self {
+        PlanConfig {
+            replan_threshold: 0.25,
+            block_len: crate::tensor::block::DEFAULT_BLOCK,
+        }
+    }
+}
+
+/// One candidate's predicted synchronization time.
+#[derive(Clone, Debug)]
+pub struct SchemeCost {
+    /// [`crate::schemes::by_name`] name.
+    pub scheme: &'static str,
+    /// Predicted time in seconds (bandwidth + latency terms).
+    pub time: f64,
+}
+
+/// The plan for one bucket: the chosen scheme plus everything needed to
+/// audit the choice.
+#[derive(Clone, Debug)]
+pub struct BucketPlan {
+    /// Bucket label the plan was made for.
+    pub label: String,
+    /// Chosen scheme ([`crate::schemes::by_name`] name) — the argmin.
+    pub chosen: &'static str,
+    /// Predicted time of the chosen scheme (seconds).
+    pub predicted_time: f64,
+    /// Bandwidth part of the prediction — the piece that rescales with
+    /// tensor size (`predicted_time = predicted_bw + predicted_alpha`).
+    pub predicted_bw: f64,
+    /// Latency part of the prediction (α × stages; size-invariant).
+    pub predicted_alpha: f64,
+    /// Every candidate's prediction, sorted ascending by time.
+    pub costs: Vec<SchemeCost>,
+    /// Mean per-worker density the plan was derived at (hysteresis
+    /// anchor).
+    pub planned_d1: f64,
+    /// Link the plan was priced against — a cached plan is only valid
+    /// for the network it was made for.
+    pub planned_link: LinkKind,
+    /// The measured statistics that drove the prediction.
+    pub stats: MeasuredStats,
+}
+
+/// measured / predicted (> 1 = cost model optimistic): the one
+/// misprediction definition shared by every reporting surface
+/// (`engine::BucketOutcome`, `coordinator::BucketPlanReport`). `None`
+/// when nothing was predicted; 1.0 (neutral) for a zero prediction.
+pub fn misprediction_ratio(measured: f64, predicted: Option<f64>) -> Option<f64> {
+    predicted.map(|p| if p > 0.0 { measured / p } else { 1.0 })
+}
+
+impl BucketPlan {
+    /// Prediction for the bucket rescaled to `scale ×` the planned
+    /// tensor size: bandwidth scales, latency does not — the planner's
+    /// twin of `SimDriver::full_size_time`.
+    pub fn predicted_at_scale(&self, scale: f64) -> f64 {
+        self.predicted_bw * scale + self.predicted_alpha
+    }
+
+    /// The runner-up candidate (second-smallest predicted time), if any.
+    pub fn runner_up(&self) -> Option<&SchemeCost> {
+        self.costs.get(1)
+    }
+}
+
+/// Evaluate the cost model for every planner candidate and return the
+/// ranked cost table (ascending). `m` is the bucket's dense length in
+/// values.
+pub fn rank_candidates<S: SparsityStats>(
+    m: f64,
+    n: usize,
+    link: LinkKind,
+    block_len: usize,
+    stats: &S,
+) -> Vec<SchemeCost> {
+    let bandwidth_values = link.bandwidth_bps() / 32.0;
+    let cm = CostModel::new(m, n, bandwidth_values, stats).with_latency(link.latency());
+    let mut costs: Vec<SchemeCost> = crate::schemes::PLANNER_CANDIDATES
+        .iter()
+        .map(|&name| SchemeCost {
+            scheme: name,
+            time: cm
+                .time_for(name, block_len)
+                .expect("every planner candidate has a closed form"),
+        })
+        .collect();
+    costs.sort_by(|a, b| a.time.total_cmp(&b.time));
+    costs
+}
+
+/// Plan one bucket from measured statistics: the cost-model argmin over
+/// all candidates (priced for `link`), packaged with its audit trail.
+pub fn plan_bucket(
+    label: &str,
+    m: f64,
+    n: usize,
+    link: LinkKind,
+    cfg: &PlanConfig,
+    stats: MeasuredStats,
+) -> BucketPlan {
+    let costs = rank_candidates(m, n, link, cfg.block_len, &stats);
+    let best = costs.first().expect("non-empty candidate list");
+    let chosen = best.scheme;
+    let predicted_time = best.time;
+    // Split the winning prediction into its rescalable and fixed parts.
+    let bandwidth_values = link.bandwidth_bps() / 32.0;
+    let cm = CostModel::new(m, n, bandwidth_values, &stats);
+    let predicted_bw = cm
+        .time_for(chosen, cfg.block_len)
+        .expect("chosen candidate has a closed form");
+    let predicted_alpha = predicted_time - predicted_bw;
+    BucketPlan {
+        label: label.to_string(),
+        chosen,
+        predicted_time,
+        predicted_bw,
+        predicted_alpha,
+        costs,
+        planned_d1: stats.d1,
+        planned_link: link,
+        stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::random_uniform_inputs;
+
+    fn measured(n: usize, density: f64) -> MeasuredStats {
+        let inputs = random_uniform_inputs(0x91a4, n, 1 << 14, density);
+        MeasuredStats::from_tensors(&inputs, &[n], &[crate::tensor::block::DEFAULT_BLOCK])
+    }
+
+    #[test]
+    fn ranks_every_candidate_ascending() {
+        let stats = measured(8, 0.02);
+        let plan =
+            plan_bucket("b0", (1 << 14) as f64, 8, LinkKind::Tcp25, &PlanConfig::default(), stats);
+        assert_eq!(plan.costs.len(), crate::schemes::PLANNER_CANDIDATES.len());
+        assert!(plan
+            .costs
+            .windows(2)
+            .all(|w| w[0].time <= w[1].time));
+        assert_eq!(plan.chosen, plan.costs[0].scheme);
+        assert!((plan.predicted_time - plan.predicted_bw - plan.predicted_alpha).abs() < 1e-15);
+        assert!(plan.runner_up().is_some());
+    }
+
+    #[test]
+    fn dense_bucket_chooses_allreduce() {
+        // Fully dense inputs: the ring allreduce's 2(n−1)/n factor beats
+        // every index-carrying scheme on pure bandwidth. Zero-latency
+        // link: at small m the per-stage α otherwise lets the 2-stage
+        // OmniReduce (whose full-density traffic is within 1/b of dense)
+        // edge out the 2(n−1)-stage ring — a real crossover, but not the
+        // one under test here.
+        let m = 1 << 16;
+        let dense: Vec<crate::tensor::CooTensor> = (0..4)
+            .map(|_| {
+                crate::tensor::CooTensor::from_sorted(
+                    m,
+                    (0..m as u32).collect(),
+                    vec![1.0; m],
+                )
+            })
+            .collect();
+        let stats = MeasuredStats::from_tensors(&dense, &[4], &[256]);
+        let link = LinkKind::Custom(25_000_000_000, 0);
+        let plan = plan_bucket("dense", m as f64, 4, link, &PlanConfig::default(), stats);
+        assert_eq!(plan.chosen, "allreduce");
+        assert_eq!(plan.planned_link, link);
+    }
+
+    #[test]
+    fn sparse_bucket_avoids_allreduce() {
+        let stats = measured(8, 0.01);
+        let plan = plan_bucket(
+            "sparse",
+            (1 << 22) as f64,
+            8,
+            LinkKind::Tcp25,
+            &PlanConfig::default(),
+            stats,
+        );
+        assert_ne!(plan.chosen, "allreduce", "1% density must go sparse");
+    }
+
+    #[test]
+    fn scale_split_reconstructs_prediction() {
+        let stats = measured(4, 0.05);
+        let plan =
+            plan_bucket("b", (1 << 14) as f64, 4, LinkKind::Tcp25, &PlanConfig::default(), stats);
+        assert!((plan.predicted_at_scale(1.0) - plan.predicted_time).abs() < 1e-15);
+        let doubled = plan.predicted_at_scale(2.0);
+        assert!(doubled > plan.predicted_time);
+        assert!((doubled - (2.0 * plan.predicted_bw + plan.predicted_alpha)).abs() < 1e-15);
+    }
+}

@@ -271,9 +271,26 @@ pub fn all_schemes(n: usize, zen_seed: u64, expected_nnz: usize) -> Vec<Box<dyn 
     ]
 }
 
+/// The lossless scheme names the cost-model planner ranks — one per
+/// Appendix-B closed form ([`crate::analysis::CostModel::time_for`]).
+/// `crate::planner::CostPlanner` instantiates each via [`by_name`]; the
+/// lossy strawman is excluded (a planner must never trade gradients
+/// away silently).
+pub const PLANNER_CANDIDATES: [&str; 7] = [
+    "allreduce",
+    "agsparse",
+    "sparcml",
+    "sparseps",
+    "omnireduce",
+    "zen-coo",
+    "zen",
+];
+
 /// Construct a scheme by CLI name. Recognized: `allreduce`/`dense`,
 /// `agsparse`, `sparcml`, `sparseps`, `omnireduce`, `zen`, `zen-coo`,
-/// `strawman:<mem_multiple>` (lossy).
+/// `strawman:<mem_multiple>` (lossy). `auto` is *not* a scheme — it is
+/// resolved one level up by `crate::planner::by_name` into a
+/// cost-model-driven per-bucket choice among [`PLANNER_CANDIDATES`].
 pub fn by_name(
     name: &str,
     n: usize,
@@ -345,6 +362,15 @@ mod tests {
         let b = CooTensor::from_sorted(4, vec![2, 3], vec![3.0, 4.0]);
         let s = reference_sum(&[a, b]);
         assert_eq!(s.values, vec![1.0, 0.0, 5.0, 4.0]);
+    }
+
+    #[test]
+    fn planner_candidates_all_constructible() {
+        for name in PLANNER_CANDIDATES {
+            let s = by_name(name, 6, 1, 128)
+                .unwrap_or_else(|| panic!("candidate '{name}' must construct"));
+            assert!(!s.name().is_empty());
+        }
     }
 
     #[test]

@@ -136,6 +136,19 @@ impl GradientGen {
         (0..n).map(|w| self.iteration(iteration, w)).collect()
     }
 
+    /// One *machine's* tensor at `iteration`: the merge of its `gpus`
+    /// colocated workers' tensors — the intra-machine NVLink aggregation
+    /// phase, densification included. Worker ids are
+    /// `machine·gpus .. (machine+1)·gpus`, matching
+    /// [`iteration_all`](GradientGen::iteration_all)'s numbering.
+    pub fn machine_iteration(&self, iteration: u64, machine: usize, gpus: usize) -> CooTensor {
+        assert!(gpus >= 1);
+        let per_gpu: Vec<CooTensor> = (0..gpus)
+            .map(|g| self.iteration(iteration, machine * gpus + g))
+            .collect();
+        CooTensor::merge_all(&per_gpu)
+    }
+
     /// Expected non-zeros per worker tensor.
     pub fn expected_nnz(&self) -> usize {
         (self.profile.density * self.profile.emb_params() as f64) as usize
@@ -353,6 +366,16 @@ mod tests {
         assert!(s > 2.0, "skewness {s}");
         let counts = metrics::partition_nnz(&t, 8);
         assert!(counts[0] > counts[7], "head partition should dominate");
+    }
+
+    #[test]
+    fn machine_iteration_merges_gpu_tensors() {
+        let g = GradientGen::new(small_profile(), 21);
+        let machine = g.machine_iteration(0, 1, 3);
+        let per_gpu = vec![g.iteration(0, 3), g.iteration(0, 4), g.iteration(0, 5)];
+        assert_eq!(machine, CooTensor::merge_all(&per_gpu));
+        // single-GPU machines degenerate to the worker tensor
+        assert_eq!(g.machine_iteration(2, 0, 1), g.iteration(2, 0));
     }
 
     #[test]

@@ -5,10 +5,15 @@
 
 use zen::cluster::{LinkKind, Network};
 use zen::engine::{verify_layer_outputs, EngineConfig, SyncEngine};
+use zen::planner::FixedPlanner;
 use zen::schemes::{self, reference_sum};
 use zen::tensor::CooTensor;
 use zen::util::Pcg64;
 use zen::workload::{LayerKind, LayerSpec};
+
+fn fixed(name: &str, machines: usize, seed: u64, expected_nnz: usize) -> FixedPlanner {
+    FixedPlanner::new(schemes::by_name(name, machines, seed, expected_nnz).unwrap())
+}
 
 fn spec(name: &str, params: usize, frac: f64) -> LayerSpec {
     LayerSpec {
@@ -58,8 +63,8 @@ fn check_all_schemes(
     let net = Network::new(machines, LinkKind::Tcp25);
     let eng = engine(bucket_bytes);
     for name in ["zen", "allreduce", "sparcml", "sparseps", "omnireduce", "agsparse"] {
-        let scheme = schemes::by_name(name, machines, 0x11, 256).unwrap();
-        let run = eng.run(specs, layers, scheme.as_ref(), &net, |r| r.comm_time());
+        let planner = fixed(name, machines, 0x11, 256);
+        let run = eng.run(specs, layers, &planner, &net, |r| r.comm_time());
         verify_layer_outputs(&run, layers);
         // belt and braces: re-derive the reference here as well
         for (l, out) in run.layer_outputs.iter().enumerate() {
@@ -91,8 +96,8 @@ fn empty_layer_tensors_sync_to_zero() {
     check_all_schemes(machines, &specs, &layers, 512);
     // and explicitly: the frozen layer aggregates to all-zero
     let net = Network::new(machines, LinkKind::Tcp25);
-    let scheme = schemes::by_name("zen", machines, 0x11, 256).unwrap();
-    let run = engine(512).run(&specs, &layers, scheme.as_ref(), &net, |r| r.comm_time());
+    let planner = fixed("zen", machines, 0x11, 256);
+    let run = engine(512).run(&specs, &layers, &planner, &net, |r| r.comm_time());
     assert_eq!(run.layer_outputs[1].nnz(), 0);
     assert_eq!(run.layer_outputs[2].dense_len, 0);
 }
@@ -103,8 +108,8 @@ fn single_bucket_holds_whole_model() {
     let machines = 4;
     let layers = random_layers(2, machines, &specs);
     let net = Network::new(machines, LinkKind::Tcp25);
-    let scheme = schemes::by_name("zen", machines, 0x22, 512).unwrap();
-    let run = engine(usize::MAX).run(&specs, &layers, scheme.as_ref(), &net, |r| r.comm_time());
+    let planner = fixed("zen", machines, 0x22, 512);
+    let run = engine(usize::MAX).run(&specs, &layers, &planner, &net, |r| r.comm_time());
     assert_eq!(run.buckets.len(), 1, "one bucket for the whole model");
     verify_layer_outputs(&run, &layers);
     check_all_schemes(machines, &specs, &layers, usize::MAX);
@@ -116,9 +121,9 @@ fn threshold_smaller_than_one_layer_degenerates_to_per_layer() {
     let machines = 3;
     let layers = random_layers(3, machines, &specs);
     let net = Network::new(machines, LinkKind::Tcp25);
-    let scheme = schemes::by_name("zen", machines, 0x33, 256).unwrap();
+    let planner = fixed("zen", machines, 0x33, 256);
     // 1-byte threshold: smaller than any layer's payload
-    let run = engine(1).run(&specs, &layers, scheme.as_ref(), &net, |r| r.comm_time());
+    let run = engine(1).run(&specs, &layers, &planner, &net, |r| r.comm_time());
     assert_eq!(run.buckets.len(), specs.len(), "one bucket per layer");
     verify_layer_outputs(&run, &layers);
     check_all_schemes(machines, &specs, &layers, 1);
@@ -129,8 +134,8 @@ fn one_machine_topology_is_exact_and_free() {
     let specs = vec![spec("a", 300, 0.5), spec("b", 100, 1.0)];
     let layers = random_layers(4, 1, &specs);
     let net = Network::new(1, LinkKind::Tcp25);
-    let scheme = schemes::by_name("zen", 1, 0x44, 128).unwrap();
-    let run = engine(1024).run(&specs, &layers, scheme.as_ref(), &net, |r| r.comm_time());
+    let planner = fixed("zen", 1, 0x44, 128);
+    let run = engine(1024).run(&specs, &layers, &planner, &net, |r| r.comm_time());
     verify_layer_outputs(&run, &layers);
     assert_eq!(run.total_bytes, 0, "nothing crosses the network");
     check_all_schemes(1, &specs, &layers, 1024);

@@ -1,0 +1,120 @@
+//! Planner integration: crossover correctness and measurement caching.
+//!
+//! Crossover correctness is the planner's contract: on a grid of
+//! synthetic densities × machine counts, the scheme the cost model
+//! ranks first must be (close to) the scheme with the smallest
+//! *transport-observed* communication time. "Close to" tolerates
+//! near-ties — at some grid cells two schemes are within a few percent
+//! and header-level effects decide the measured order — but a planner
+//! that picks a scheme measurably slower than the best by more than
+//! the tie margin fails.
+
+use zen::cluster::{LinkKind, Network};
+use zen::planner::{plan_bucket, CostPlanner, MeasuredStats, PlanConfig, Planner};
+use zen::schemes::{self, SyncScheme, SyncScratch, PLANNER_CANDIDATES};
+use zen::tensor::block::DEFAULT_BLOCK;
+use zen::workload::random_uniform_inputs;
+
+/// Transport-observed comm time of one candidate on `inputs`.
+fn measured_time(name: &str, inputs: &[zen::tensor::CooTensor], net: &Network) -> f64 {
+    let n = inputs.len();
+    let nnz = inputs.iter().map(|t| t.nnz()).max().unwrap_or(1).max(1);
+    let scheme = schemes::by_name(name, n, 0x5eed, nnz).unwrap();
+    let r = scheme.sync_with(inputs, net, &mut SyncScratch::new());
+    r.report.comm_time()
+}
+
+#[test]
+fn cost_model_argmin_tracks_transport_measured_best() {
+    let dense_len = 1 << 14;
+    let link = LinkKind::Tcp25;
+    let cfg = PlanConfig::default();
+    for machines in [2usize, 4, 8] {
+        for density in [0.002f64, 0.02, 0.15] {
+            let inputs =
+                random_uniform_inputs(0xc405 ^ machines as u64, machines, dense_len, density);
+            let stats = MeasuredStats::from_tensors(&inputs, &[machines], &[DEFAULT_BLOCK]);
+            let plan = plan_bucket("cell", dense_len as f64, machines, link, &cfg, stats);
+
+            let net = Network::new(machines, link);
+            let measured: Vec<(&str, f64)> = PLANNER_CANDIDATES
+                .iter()
+                .map(|&name| (name, measured_time(name, &inputs, &net)))
+                .collect();
+            let (best_name, best_time) = measured
+                .iter()
+                .min_by(|a, b| a.1.total_cmp(&b.1))
+                .copied()
+                .unwrap();
+            let (_, chosen_time) = measured
+                .iter()
+                .find(|(name, _)| *name == plan.chosen)
+                .copied()
+                .unwrap();
+            assert!(
+                chosen_time <= best_time * 1.35,
+                "n={machines} d={density}: planner chose {} ({chosen_time:.2e}s), \
+                 measured best is {best_name} ({best_time:.2e}s) — beyond tie margin.\n\
+                 ranked: {:?}",
+                plan.chosen,
+                plan.costs
+                    .iter()
+                    .map(|c| (c.scheme, c.time))
+                    .collect::<Vec<_>>()
+            );
+        }
+    }
+}
+
+#[test]
+fn non_power_of_two_machines_plan_without_panic() {
+    // The old CostModel::sparcml asserted 2^k nodes; the planner must
+    // rank every candidate at n = 6 (and the choice must execute).
+    let machines = 6;
+    let inputs = random_uniform_inputs(0x6666, machines, 1 << 13, 0.02);
+    let planner = CostPlanner::new(machines, 0x5eed, 256, PlanConfig::default());
+    let planned = planner.plan("n6", &inputs, LinkKind::Tcp25);
+    let plan = planned.plan.expect("auto always plans");
+    assert_eq!(plan.costs.len(), PLANNER_CANDIDATES.len());
+    assert!(plan.costs.iter().all(|c| c.time.is_finite()));
+    let net = Network::new(machines, LinkKind::Tcp25);
+    let r = planned
+        .scheme
+        .sync_with(&inputs, &net, &mut SyncScratch::new());
+    schemes::verify_outputs(&r, &inputs);
+}
+
+#[test]
+fn repeated_profiling_returns_identical_stats() {
+    // MeasuredStats caching contract, both halves: (1) profiling the
+    // same tensors twice yields value-identical stats; (2) the planner
+    // serves the *same* cached stats object across iterations instead
+    // of re-profiling.
+    let inputs = random_uniform_inputs(0xcace, 4, 1 << 13, 0.03);
+    let a = MeasuredStats::from_tensors(&inputs, &[4], &[DEFAULT_BLOCK]);
+    let b = MeasuredStats::from_tensors(&inputs, &[4], &[DEFAULT_BLOCK]);
+    assert_eq!(a, b, "profiling is deterministic");
+
+    let planner = CostPlanner::new(4, 0x5eed, 256, PlanConfig::default());
+    let first = planner.plan("bucket", &inputs, LinkKind::Tcp25).plan.unwrap();
+    let second = planner.plan("bucket", &inputs, LinkKind::Tcp25).plan.unwrap();
+    assert!(
+        std::sync::Arc::ptr_eq(&first, &second),
+        "cached plan (and its stats) must be the same object"
+    );
+    assert_eq!(first.stats, a, "cached stats equal a fresh profile");
+    assert_eq!(planner.profile_count(), 1, "no re-profiling at steady state");
+}
+
+#[test]
+fn hysteresis_zero_replans_on_any_drift() {
+    let cfg = PlanConfig {
+        replan_threshold: 0.0,
+        ..PlanConfig::default()
+    };
+    let planner = CostPlanner::new(4, 0x5eed, 256, cfg);
+    planner.plan("b", &random_uniform_inputs(1, 4, 4096, 0.020), LinkKind::Tcp25);
+    // ~10% denser: outside a zero threshold, inside the default 0.25
+    planner.plan("b", &random_uniform_inputs(2, 4, 4096, 0.022), LinkKind::Tcp25);
+    assert_eq!(planner.profile_count(), 2, "zero hysteresis re-plans");
+}
