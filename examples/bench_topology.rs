@@ -1,0 +1,126 @@
+//! Topology trajectory: flat vs topology-aware auto planning, emitted
+//! as machine-readable `BENCH_PR5.json` so the tentpole's claim — the
+//! planner picks different (and better) schemes once it can see the
+//! two-level cluster — is re-measurable on any machine.
+//!
+//!   cargo run --release --example bench_topology -- [--tiny] [--out PATH]
+//!
+//! Each workload is planned twice with the cost planner: once against a
+//! flat mesh over the inter link, once against the real 4×2 two-level
+//! topology (10× faster intra-node links). Both chosen schemes then
+//! *execute* on the two-level transport, and the JSON records the
+//! per-link-class measured times — `topo_aware_le_flat` is the
+//! acceptance signal CI uploads to the bench-trajectory artifact.
+
+use zen::cluster::{LinkClass, LinkKind, Network, Topology};
+use zen::planner::{CostPlanner, PlanConfig, Planner};
+use zen::schemes::{SyncScheme, SyncScratch};
+use zen::tensor::CooTensor;
+use zen::workload::{group_clustered_inputs, random_uniform_inputs};
+
+struct Config {
+    tiny: bool,
+    out: String,
+}
+
+fn parse_args() -> Config {
+    let mut cfg = Config {
+        tiny: false,
+        out: "BENCH_PR5.json".to_string(),
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--tiny" => cfg.tiny = true,
+            "--out" => cfg.out = args.next().expect("--out needs a path"),
+            other => panic!("unknown argument {other}"),
+        }
+    }
+    cfg
+}
+
+/// Measured comm time (plus per-class split) of one scheme on `net`.
+fn run(
+    scheme: &std::sync::Arc<dyn SyncScheme>,
+    inputs: &[CooTensor],
+    net: &Network,
+) -> (f64, [f64; 2]) {
+    let r = scheme.sync_with(inputs, net, &mut SyncScratch::new());
+    (r.report.comm_time(), r.report.time_by_class())
+}
+
+fn main() {
+    let cfg = parse_args();
+    let dense_len = if cfg.tiny { 1 << 16 } else { 1 << 20 };
+    let (nodes, ranks) = (4usize, 2usize);
+    let n = nodes * ranks;
+    let inter = LinkKind::Custom(25_000_000_000, 0);
+    let intra = LinkKind::Custom(250_000_000_000, 0);
+    let flat = Topology::flat(n, inter);
+    let two_level = Topology::two_level(nodes, ranks, intra, inter);
+    let net = Network::with_topology(two_level.clone());
+
+    let workloads: Vec<(&str, Vec<CooTensor>)> = vec![
+        (
+            "group-clustered",
+            group_clustered_inputs(0x5e7, 2, n / 2, dense_len, 0.01),
+        ),
+        ("uniform", random_uniform_inputs(0x5e8, n, dense_len, 0.01)),
+        (
+            "node-clustered",
+            group_clustered_inputs(0x5e9, nodes, ranks, dense_len, 0.02),
+        ),
+    ];
+
+    let mut rows: Vec<String> = Vec::new();
+    let mut wins = 0usize;
+    for (name, inputs) in &workloads {
+        // Two independent planners so the caches cannot leak choices.
+        let flat_planner = CostPlanner::new(n, 0xbe, 4096, PlanConfig::default());
+        let topo_planner = CostPlanner::new(n, 0xbe, 4096, PlanConfig::default());
+        let flat_pick = flat_planner.plan("bucket", inputs, &flat);
+        let topo_pick = topo_planner.plan("bucket", inputs, &two_level);
+        let flat_scheme = flat_pick.plan.as_ref().unwrap().chosen;
+        let topo_scheme = topo_pick.plan.as_ref().unwrap().chosen;
+        // Both choices execute on the *real* (two-level) fabric.
+        let (t_flat, _) = run(&flat_pick.scheme, inputs, &net);
+        let (t_topo, by_class) = run(&topo_pick.scheme, inputs, &net);
+        let le = t_topo <= t_flat * 1.0001;
+        wins += le as usize;
+        println!(
+            "{name:<16} flat-plan {flat_scheme:<10} {:>9.3}ms | topo-plan {topo_scheme:<10} \
+             {:>9.3}ms (intra {:.3}ms inter {:.3}ms) | topo<=flat: {le}",
+            t_flat * 1e3,
+            t_topo * 1e3,
+            by_class[LinkClass::Intra.idx()] * 1e3,
+            by_class[LinkClass::Inter.idx()] * 1e3,
+        );
+        rows.push(format!(
+            "    {{\"workload\": \"{name}\", \"flat_choice\": \"{flat_scheme}\", \
+             \"topo_choice\": \"{topo_scheme}\", \"flat_choice_s\": {t_flat:.6e}, \
+             \"topo_choice_s\": {t_topo:.6e}, \"topo_intra_s\": {:.6e}, \
+             \"topo_inter_s\": {:.6e}, \"topo_aware_le_flat\": {le}}}",
+            by_class[0], by_class[1]
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"pr\": 5,\n  \"config\": {{\"tiny\": {}, \"dense_len\": {dense_len}, \
+         \"topology\": \"{}x{}\", \"inter_gbps\": 25, \"intra_gbps\": 250}},\n  \
+         \"topo_wins\": {wins},\n  \"workloads\": [\n{}\n  ]\n}}\n",
+        cfg.tiny,
+        nodes,
+        ranks,
+        rows.join(",\n")
+    );
+    std::fs::write(&cfg.out, &json).expect("write bench json");
+    println!(
+        "wrote {} (topology-aware plan <= flat plan on {wins}/{} workloads)",
+        cfg.out,
+        workloads.len()
+    );
+    assert!(
+        wins >= 1,
+        "acceptance: topology-aware planning must match or beat flat planning somewhere"
+    );
+}

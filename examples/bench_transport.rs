@@ -134,7 +134,9 @@ fn main() {
             let mut scratch = SyncScratch::new();
             let mut bytes = 0u64;
             let ns = median_ns(cfg.warmup, cfg.iters, || {
-                let r = scheme.sync_transport(&inputs, tx.as_mut(), &mut scratch);
+                let r = scheme
+                    .sync_transport(&inputs, tx.as_mut(), &mut scratch)
+                    .expect("bench sync");
                 bytes = r.report.total_bytes();
                 std::hint::black_box(r.outputs.len());
             });

@@ -58,7 +58,7 @@ fn main() -> anyhow::Result<()> {
     if args.is_empty() {
         eprintln!(
             "usage: figures -- all | table1 table2 fig1 fig2 fig7 fig7m fig8 \
-             fig11 fig12 fig13 fig14 fig15 fig16 fig17 fig18 figp"
+             fig11 fig12 fig13 fig14 fig15 fig16 fig17 fig18 figp figt"
         );
         return Ok(());
     }
@@ -89,6 +89,11 @@ fn main() -> anyhow::Result<()> {
         // Planner crossover map — the decision surface behind
         // `zen sim --scheme auto`.
         emit(figures::planner_crossover());
+    }
+    if want("figt") {
+        // Topology crossover — where two-level pricing flips the
+        // planner onto a hierarchical scheme (`--topology 4x2`).
+        emit(figures::topology_crossover());
     }
     if want("fig8") {
         emit(figures::fig8());

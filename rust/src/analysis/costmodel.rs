@@ -16,6 +16,18 @@
 //! like [`crate::cluster::Network::stage_time`]. The planner
 //! ([`crate::planner`]) needs it — at small bucket sizes the stage
 //! count, not the byte volume, decides the argmin.
+//!
+//! With [`CostModel::with_topology`] the model prices *per link class*
+//! on a two-level cluster ([`crate::cluster::Topology`]): each stage's
+//! busiest-endpoint load is split into its intra-node and inter-node
+//! shares, each class pays its own α–β, and the stage costs the max of
+//! the two (parallel physical links) — mirroring what the classed
+//! transports measure. Hierarchical variants price the inter-node
+//! stages separately: SparCML's and AGsparse-hier's first doubling
+//! exchanges are node-local when partners are co-located, which is what
+//! produces the hierarchy crossovers a flat mesh cannot see.
+
+use crate::util::largest_pow2_at_most;
 
 /// Sparsity statistics provider for a workload.
 pub trait SparsityStats {
@@ -41,6 +53,78 @@ pub fn independent_block_density(d: f64, block_len: usize) -> f64 {
     1.0 - (1.0 - d).powi(block_len as i32)
 }
 
+/// Two-level pricing parameters: the cost-model view of a
+/// [`crate::cluster::Topology`], with bandwidths already converted to
+/// FP32 values/s.
+#[derive(Clone, Copy, Debug)]
+pub struct TopoCost {
+    pub nodes: usize,
+    pub ranks_per_node: usize,
+    pub intra_alpha: f64,
+    pub intra_bandwidth_values: f64,
+    pub inter_alpha: f64,
+    pub inter_bandwidth_values: f64,
+}
+
+impl TopoCost {
+    /// Convert a cluster topology into pricing parameters.
+    pub fn from_topology(t: &crate::cluster::Topology) -> TopoCost {
+        TopoCost {
+            nodes: t.nodes,
+            ranks_per_node: t.ranks_per_node,
+            intra_alpha: t.intra.latency(),
+            intra_bandwidth_values: t.intra.bandwidth_bps() / 32.0,
+            inter_alpha: t.inter.latency(),
+            inter_bandwidth_values: t.inter.bandwidth_bps() / 32.0,
+        }
+    }
+
+    /// Copy with both latency terms zeroed (bandwidth-only pricing —
+    /// the rescalable part of a prediction).
+    pub fn without_latency(mut self) -> TopoCost {
+        self.intra_alpha = 0.0;
+        self.inter_alpha = 0.0;
+        self
+    }
+
+    /// A flat topology behaves like the single-link model: no pair of
+    /// ranks shares a node.
+    pub fn is_flat(&self) -> bool {
+        self.ranks_per_node <= 1
+    }
+
+    fn node_of(&self, rank: usize) -> usize {
+        rank / self.ranks_per_node
+    }
+}
+
+/// A candidate's predicted time split by link class. `total` is what
+/// the classed transports charge (per-stage max over classes); `intra`
+/// and `inter` sum each class's α–β times alone, so
+/// `max(intra, inter) <= total <= intra + inter`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ClassedTime {
+    pub total: f64,
+    pub intra: f64,
+    pub inter: f64,
+}
+
+/// One stage's busiest-endpoint load per link class, in value units.
+#[derive(Clone, Copy, Debug, Default)]
+struct StageLoad {
+    intra: f64,
+    inter: f64,
+}
+
+impl StageLoad {
+    fn inter_only(units: f64) -> StageLoad {
+        StageLoad {
+            intra: 0.0,
+            inter: units,
+        }
+    }
+}
+
 /// Closed-form scheme times for a dense tensor of `m` values on `n`
 /// machines with `bandwidth_values` values/s.
 pub struct CostModel<'a, S: SparsityStats> {
@@ -50,6 +134,10 @@ pub struct CostModel<'a, S: SparsityStats> {
     /// Per-stage latency α in seconds (0 = the paper's pure-bandwidth
     /// accounting).
     pub alpha: f64,
+    /// Two-level pricing, when the workload runs on a non-flat
+    /// topology. `bandwidth_values`/`alpha` should then equal the
+    /// inter-class parameters (the planner guarantees it).
+    topo: Option<TopoCost>,
     pub stats: &'a S,
 }
 
@@ -61,6 +149,7 @@ impl<'a, S: SparsityStats> CostModel<'a, S> {
             n,
             bandwidth_values,
             alpha: 0.0,
+            topo: None,
             stats,
         }
     }
@@ -71,6 +160,21 @@ impl<'a, S: SparsityStats> CostModel<'a, S> {
         assert!(alpha >= 0.0);
         self.alpha = alpha;
         self
+    }
+
+    /// Price per link class on a two-level topology (builder style). A
+    /// flat `TopoCost` is accepted and ignored, so callers can pass the
+    /// execution topology unconditionally.
+    pub fn with_topology(mut self, topo: TopoCost) -> Self {
+        self.topo = Some(topo);
+        self
+    }
+
+    /// The active two-level pricing, if any (flat topologies price
+    /// identically to the single-link model, so they take the flat
+    /// path — keeping every historical prediction bit-identical).
+    fn topo_active(&self) -> Option<TopoCost> {
+        self.topo.filter(|t| !t.is_flat() && self.n > 1)
     }
 
     fn nf(&self) -> f64 {
@@ -103,7 +207,15 @@ impl<'a, S: SparsityStats> CostModel<'a, S> {
             // one-shot point-to-point broadcast
             "agsparse" => 1,
             "agsparse-ring" => nn - 1,
-            "agsparse-hier" => nn.next_power_of_two().trailing_zeros() as usize,
+            // doubling over the pow-2 core, plus fold-in/out when n is
+            // not a power of two (mirrors `schemes::AgSparse`'s folded
+            // schedule — the old ceil(log2 n) assumed a pow-2-only
+            // protocol that used to panic elsewhere).
+            "agsparse-hier" => {
+                let core = largest_pow2_at_most(nn);
+                let folds = if core == nn { 0 } else { 2 };
+                core.trailing_zeros() as usize + folds
+            }
             // fold-in + recursive doubling + fold-out
             "sparcml" => {
                 let core = largest_pow2_at_most(nn);
@@ -120,12 +232,22 @@ impl<'a, S: SparsityStats> CostModel<'a, S> {
     }
 
     /// Predicted synchronization time for a planner candidate by its
-    /// [`crate::schemes::by_name`] name — bandwidth term + α·stages.
+    /// [`crate::schemes::by_name`] name — bandwidth term + α·stages on a
+    /// flat network, per-class max-over-links pricing when a two-level
+    /// topology is configured ([`with_topology`](CostModel::with_topology)).
     /// `block_len` parameterizes the OmniReduce formula; `None` for
     /// names without a closed form (lossy strawman). One machine moves
     /// nothing, whatever the formula says (Zen's `M/32` bitmap constant
     /// in particular does not vanish with the `(n−1)` factors).
     pub fn time_for(&self, scheme: &str, block_len: usize) -> Option<f64> {
+        if self.topo_active().is_some() {
+            return self.time_for_by_class(scheme, block_len).map(|c| c.total);
+        }
+        self.time_for_flat(scheme, block_len)
+    }
+
+    /// The flat single-link prediction (the historical path, unchanged).
+    fn time_for_flat(&self, scheme: &str, block_len: usize) -> Option<f64> {
         if self.n <= 1 {
             // Validate the name anyway so typos stay loud.
             self.stage_count(scheme)?;
@@ -133,7 +255,8 @@ impl<'a, S: SparsityStats> CostModel<'a, S> {
         }
         let bw = match scheme {
             "allreduce" | "dense" => self.dense(),
-            "agsparse" | "agsparse-ring" | "agsparse-hier" => self.agsparse(),
+            "agsparse" | "agsparse-ring" => self.agsparse(),
+            "agsparse-hier" => self.agsparse_hier(),
             "sparcml" => self.sparcml(),
             "sparseps" | "sparse-ps" => self.sparse_ps(),
             "omnireduce" => self.omnireduce(block_len),
@@ -142,6 +265,144 @@ impl<'a, S: SparsityStats> CostModel<'a, S> {
             _ => return None,
         };
         Some(bw + self.lat(self.stage_count(scheme)?))
+    }
+
+    /// Predicted time split by link class (`[intra, inter]` sums plus
+    /// the per-stage-max total the transports charge). On a flat model
+    /// everything is inter-class, so `total == inter` and `intra == 0`.
+    pub fn time_for_by_class(&self, scheme: &str, block_len: usize) -> Option<ClassedTime> {
+        if self.n <= 1 {
+            self.stage_count(scheme)?;
+            return Some(ClassedTime::default());
+        }
+        match self.topo_active() {
+            Some(t) => {
+                let loads = self.stage_loads(scheme, block_len, &t)?;
+                Some(classed_total(&loads, &t))
+            }
+            None => {
+                let total = self.time_for_flat(scheme, block_len)?;
+                Some(ClassedTime {
+                    total,
+                    intra: 0.0,
+                    inter: total,
+                })
+            }
+        }
+    }
+
+    /// Per-stage busiest-endpoint loads of a candidate, split by link
+    /// class, under topology `t` — the classed twin of the flat closed
+    /// forms. The per-scheme structure mirrors each `sync_transport`
+    /// protocol: p2p transfers split a rank's `n−1` peers into `g−1`
+    /// co-located and `n−g` remote ones; doubling exchanges are
+    /// node-local while the partner distance stays below the node size.
+    fn stage_loads(&self, scheme: &str, block_len: usize, t: &TopoCost) -> Option<Vec<StageLoad>> {
+        let n = self.n;
+        let nf = self.nf();
+        let g = t.ranks_per_node.min(n).max(1);
+        let remote = (n - g) as f64;
+        let local = (g - 1) as f64;
+        let d = |j: usize| self.stats.agg_density(j);
+        // A per-peer p2p transfer of `units` per peer: the busiest rank
+        // talks to g−1 co-located and n−g remote peers.
+        let split = |units_per_peer: f64| StageLoad {
+            intra: local * units_per_peer,
+            inter: remote * units_per_peer,
+        };
+        let loads = match scheme {
+            "allreduce" | "dense" => {
+                // Ring of dense chunks: every stage, boundary ranks
+                // cross nodes while interior neighbors stay local.
+                let chunk = self.m / nf;
+                let per_stage = StageLoad {
+                    intra: if g > 1 { chunk } else { 0.0 },
+                    inter: if n > g { chunk } else { 0.0 },
+                };
+                vec![per_stage; 2 * (n - 1)]
+            }
+            "agsparse" => vec![split(2.0 * d(1) * self.m)],
+            "agsparse-ring" => {
+                let u = 2.0 * d(1) * self.m;
+                let per_stage = StageLoad {
+                    intra: if g > 1 { u } else { 0.0 },
+                    inter: if n > g { u } else { 0.0 },
+                };
+                vec![per_stage; n - 1]
+            }
+            "agsparse-hier" => {
+                let core = largest_pow2_at_most(n);
+                let excess = n - core;
+                let u1 = 2.0 * d(1) * self.m;
+                let mut loads = Vec::new();
+                if excess > 0 {
+                    loads.push(fold_load(t, core, excess, u1));
+                }
+                for s in 0..core.trailing_zeros() as usize {
+                    let set = if excess > 0 {
+                        (1usize << (s + 1)).min(n)
+                    } else {
+                        1usize << s
+                    };
+                    loads.push(doubling_load(1 << s, g, set as f64 * u1));
+                }
+                if excess > 0 {
+                    loads.push(fold_load(t, core, excess, 2.0 * d(n) * self.m));
+                }
+                loads
+            }
+            "sparcml" => {
+                let core = largest_pow2_at_most(n);
+                let excess = n - core;
+                let per = |j: usize| 2.0 * d(j) * self.m;
+                let mut loads = Vec::new();
+                if excess > 0 {
+                    loads.push(fold_load(t, core, excess, per(1)));
+                }
+                for i in 0..core.trailing_zeros() as usize {
+                    let j = if excess > 0 {
+                        (1usize << (i + 1)).min(n)
+                    } else {
+                        1usize << i
+                    };
+                    loads.push(doubling_load(1 << i, g, per(j)));
+                }
+                if excess > 0 {
+                    loads.push(fold_load(t, core, excess, per(n)));
+                }
+                loads
+            }
+            "sparseps" | "sparse-ps" => {
+                let s = self.stats.skewness(n);
+                vec![
+                    split(2.0 * d(1) * s * self.m / nf),
+                    split(2.0 * d(n) * s * self.m / nf),
+                ]
+            }
+            "omnireduce" => {
+                assert!(block_len > 0);
+                let s = self.stats.skewness(n);
+                let unit = 1.0 + 1.0 / block_len as f64;
+                let push = (self.stats.block_density(1, block_len) * s).min(1.0);
+                let pull = (self.stats.block_density(n, block_len) * s).min(1.0);
+                vec![
+                    split(self.m / nf * unit * push),
+                    split(self.m / nf * unit * pull),
+                ]
+            }
+            "zen-coo" => vec![
+                split(2.0 * d(1) * self.m / nf),
+                split(2.0 * d(n) * self.m / nf),
+            ],
+            "zen" => vec![
+                split(2.0 * d(1) * self.m / nf),
+                // Hash-bitmap pull: per-peer values + the per-partition
+                // bitmap (|domain_p| ≈ M/n bits = M/32/n value units).
+                split((d(n) * self.m + self.m / 32.0) / nf),
+            ],
+            _ => return None,
+        };
+        Some(loads)
     }
 
     /// Ring AllReduce over the dense tensor: `2(n−1)/n · M / B`.
@@ -153,6 +414,35 @@ impl<'a, S: SparsityStats> CostModel<'a, S> {
     pub fn agsparse(&self) -> f64 {
         let d = self.stats.agg_density(1);
         (self.nf() - 1.0) * 2.0 * d * self.m / self.bandwidth_values
+    }
+
+    /// AGsparse with the folded recursive-doubling schedule: identical
+    /// to [`agsparse`](CostModel::agsparse) at `n = 2^k` (the doubling
+    /// sum telescopes to `n−1` tensors), plus one fold-in of a raw
+    /// tensor and one fold-out of the full aggregate otherwise.
+    pub fn agsparse_hier(&self) -> f64 {
+        if self.n <= 1 {
+            return 0.0;
+        }
+        let core = largest_pow2_at_most(self.n);
+        let excess = self.n - core;
+        let u1 = 2.0 * self.stats.agg_density(1) * self.m / self.bandwidth_values;
+        let mut t = 0.0;
+        if excess > 0 {
+            t += u1;
+        }
+        for s in 0..core.trailing_zeros() as usize {
+            let set = if excess > 0 {
+                (1usize << (s + 1)).min(self.n)
+            } else {
+                1usize << s
+            };
+            t += set as f64 * u1;
+        }
+        if excess > 0 {
+            t += 2.0 * self.stats.agg_density(self.n) * self.m / self.bandwidth_values;
+        }
+        t
     }
 
     /// SparCML SSAR recursive doubling, generalized to arbitrary `n`.
@@ -243,9 +533,65 @@ impl<'a, S: SparsityStats> CostModel<'a, S> {
     }
 }
 
-/// Largest power of two ≤ `n` (`n ≥ 1`).
-fn largest_pow2_at_most(n: usize) -> usize {
-    1usize << (usize::BITS - 1 - n.leading_zeros())
+/// Sum a stage-load list into per-class times + the per-stage-max total.
+fn classed_total(loads: &[StageLoad], t: &TopoCost) -> ClassedTime {
+    let mut out = ClassedTime::default();
+    for l in loads {
+        let ti = if l.intra > 0.0 {
+            t.intra_alpha + l.intra / t.intra_bandwidth_values
+        } else {
+            0.0
+        };
+        let te = if l.inter > 0.0 {
+            t.inter_alpha + l.inter / t.inter_bandwidth_values
+        } else {
+            0.0
+        };
+        out.intra += ti;
+        out.inter += te;
+        out.total += ti.max(te);
+    }
+    out
+}
+
+/// Class split of one recursive-doubling exchange at partner distance
+/// `dist` with `g` ranks per node: node-local while `dist < g` (the
+/// standard aligned placement needs `g` to be a power of two), cross-
+/// node beyond. Non-pow-2 node sizes mix both classes in one stage —
+/// priced conservatively with the full load on each.
+fn doubling_load(dist: usize, g: usize, units: f64) -> StageLoad {
+    if g <= 1 {
+        StageLoad::inter_only(units)
+    } else if g.is_power_of_two() {
+        if dist < g {
+            StageLoad {
+                intra: units,
+                inter: 0.0,
+            }
+        } else {
+            StageLoad::inter_only(units)
+        }
+    } else {
+        StageLoad {
+            intra: units,
+            inter: units,
+        }
+    }
+}
+
+/// Class split of a fold stage: pair `(j, core + j)` for each excess
+/// rank, classified by actual placement. Fold pairs are disjoint, so
+/// the busiest endpoint of each active class carries exactly `units`.
+fn fold_load(t: &TopoCost, core: usize, excess: usize, units: f64) -> StageLoad {
+    let mut l = StageLoad::default();
+    for j in 0..excess {
+        if t.ranks_per_node > 1 && t.node_of(j) == t.node_of(core + j) {
+            l.intra = units;
+        } else {
+            l.inter = units;
+        }
+    }
+    l
 }
 
 /// An analytic stats model: densification follows the independent-union
@@ -363,7 +709,7 @@ mod tests {
             let cm = CostModel::new(112e6, n, 25e9 / 32.0, &s);
             let t = cm.sparcml();
             assert!(t.is_finite() && t > 0.0, "n={n}: {t}");
-            let core = 1usize << (usize::BITS - 1 - n.leading_zeros());
+            let core = largest_pow2_at_most(n);
             let core_t = sparcml_pow2_oracle(112e6, core, 25e9 / 32.0, &s);
             assert!(t > core_t, "n={n}: folds must add cost over core {core}");
             let bound = core_t
@@ -393,6 +739,171 @@ mod tests {
         // one machine: everything is free, latency included
         let cm_solo = CostModel::new(1e6, 1, 25e9 / 32.0, &s).with_latency(alpha);
         assert_eq!(cm_solo.time_for("zen", 256), Some(0.0));
+    }
+
+    /// Group-clustered stats: workers 0..n/2 share one support, workers
+    /// n/2..n another of equal size — d(j) stays at d1 through the first
+    /// half and doubles only once the second group joins. The
+    /// placement-correlated sparsity of locality-sharded loaders.
+    struct GroupStats {
+        d1: f64,
+        n: usize,
+    }
+
+    impl SparsityStats for GroupStats {
+        fn agg_density(&self, j: usize) -> f64 {
+            if j <= self.n / 2 {
+                self.d1
+            } else {
+                2.0 * self.d1
+            }
+        }
+        fn skewness(&self, _n: usize) -> f64 {
+            1.1
+        }
+    }
+
+    fn topo_4x2(inter_bw: f64) -> TopoCost {
+        TopoCost {
+            nodes: 4,
+            ranks_per_node: 2,
+            intra_alpha: 0.0,
+            intra_bandwidth_values: inter_bw * 10.0,
+            inter_alpha: 0.0,
+            inter_bandwidth_values: inter_bw,
+        }
+    }
+
+    #[test]
+    fn flat_topology_prices_identically() {
+        let s = stats();
+        let flat = TopoCost {
+            nodes: 8,
+            ranks_per_node: 1,
+            intra_alpha: 1e-6,
+            intra_bandwidth_values: 1e12,
+            inter_alpha: 50e-6,
+            inter_bandwidth_values: 25e9 / 32.0,
+        };
+        let plain = CostModel::new(1e7, 8, 25e9 / 32.0, &s).with_latency(50e-6);
+        let with_topo = CostModel::new(1e7, 8, 25e9 / 32.0, &s)
+            .with_latency(50e-6)
+            .with_topology(flat);
+        let all = [
+            "allreduce",
+            "agsparse",
+            "agsparse-hier",
+            "sparcml",
+            "sparseps",
+            "omnireduce",
+            "zen-coo",
+            "zen",
+        ];
+        for scheme in all {
+            assert_eq!(
+                plain.time_for(scheme, 256),
+                with_topo.time_for(scheme, 256),
+                "{scheme}: a flat topology must not change the prediction"
+            );
+            let c = with_topo.time_for_by_class(scheme, 256).unwrap();
+            assert_eq!(c.intra, 0.0, "{scheme}");
+            assert_eq!(c.total, c.inter, "{scheme}");
+        }
+    }
+
+    #[test]
+    fn classed_times_bracket_total() {
+        let s = stats();
+        let cm = CostModel::new(1e7, 8, 25e9 / 32.0, &s).with_topology(topo_4x2(25e9 / 32.0));
+        let all = [
+            "allreduce",
+            "agsparse",
+            "agsparse-hier",
+            "sparcml",
+            "sparseps",
+            "omnireduce",
+            "zen-coo",
+            "zen",
+        ];
+        for scheme in all {
+            let c = cm.time_for_by_class(scheme, 256).unwrap();
+            assert!(c.total.is_finite() && c.total > 0.0, "{scheme}: {c:?}");
+            assert!(
+                c.total + 1e-15 >= c.intra.max(c.inter),
+                "{scheme}: total below a class sum ({c:?})"
+            );
+            assert!(
+                c.total <= c.intra + c.inter + 1e-15,
+                "{scheme}: total beyond the class sums ({c:?})"
+            );
+            assert_eq!(cm.time_for(scheme, 256), Some(c.total), "{scheme}");
+        }
+    }
+
+    #[test]
+    fn doubling_first_stage_is_node_local() {
+        // At 4×2, SparCML's dist-1 exchange is co-located: its inter
+        // share must only price the dist-2 and dist-4 stages — strictly
+        // below the flat prediction's three full-rate stages.
+        let s = GroupStats { d1: 0.01, n: 8 };
+        let bw = 25e9 / 32.0;
+        let flat = CostModel::new(1e7, 8, bw, &s);
+        let topo = CostModel::new(1e7, 8, bw, &s).with_topology(topo_4x2(bw));
+        let c = topo.time_for_by_class("sparcml", 256).unwrap();
+        // inter prices d(2) + d(4) = 2·d1 aggregates; flat prices
+        // d(1) + d(2) + d(4) = 3·d1.
+        let expect_inter = 2.0 * (s.agg_density(2) + s.agg_density(4)) * 1e7 / bw;
+        assert!((c.inter - expect_inter).abs() < expect_inter * 1e-9, "{c:?}");
+        assert!(c.intra > 0.0, "dist-1 stage rides the intra link");
+        assert!(c.total < flat.time_for("sparcml", 256).unwrap());
+    }
+
+    #[test]
+    fn hierarchy_crossover_under_group_clustered_sparsity() {
+        // The tentpole's decision flip: with group-clustered sparsity
+        // (d(2) = d(4) = d(1), d(8) = 2·d(1)) the flat mesh prefers
+        // Balanced Parallelism (zen-coo: 5.25·d1·M vs SparCML's 6·d1·M),
+        // but on 4×2 with 10× slower inter-node links SparCML's
+        // node-local first stage drops its inter volume to 4·d1·M,
+        // below zen-coo's 4.5·d1·M — the hierarchy wins.
+        let s = GroupStats { d1: 0.01, n: 8 };
+        let bw = 25e9 / 32.0;
+        let flat = CostModel::new(1e7, 8, bw, &s);
+        let topo = CostModel::new(1e7, 8, bw, &s).with_topology(topo_4x2(bw));
+        assert!(
+            flat.time_for("zen-coo", 256).unwrap() < flat.time_for("sparcml", 256).unwrap(),
+            "flat: balanced parallelism wins"
+        );
+        assert!(
+            topo.time_for("sparcml", 256).unwrap() < topo.time_for("zen-coo", 256).unwrap(),
+            "two-level: the hierarchical scheme wins"
+        );
+    }
+
+    #[test]
+    fn agsparse_hier_matches_p2p_at_pow2_and_adds_folds() {
+        let s = stats();
+        for n in [2usize, 4, 8, 16] {
+            let cm = CostModel::new(1e7, n, 25e9 / 32.0, &s);
+            assert!(
+                (cm.agsparse_hier() - cm.agsparse()).abs() < 1e-12,
+                "n={n}: pow-2 doubling telescopes to the p2p volume"
+            );
+        }
+        for n in [3usize, 5, 6, 12] {
+            let cm = CostModel::new(1e7, n, 25e9 / 32.0, &s);
+            let t = cm.agsparse_hier();
+            assert!(t.is_finite() && t > cm.agsparse() * 0.5, "n={n}");
+            assert!(
+                t > CostModel::new(1e7, largest_pow2_at_most(n), 25e9 / 32.0, &s).agsparse(),
+                "n={n}: folds add cost over the core"
+            );
+            assert_eq!(
+                cm.stage_count("agsparse-hier").unwrap(),
+                largest_pow2_at_most(n).trailing_zeros() as usize + 2,
+                "n={n}"
+            );
+        }
     }
 
     #[test]

@@ -10,5 +10,5 @@
 pub mod costmodel;
 pub mod numeric;
 
-pub use costmodel::CostModel;
+pub use costmodel::{ClassedTime, CostModel, TopoCost};
 pub use numeric::fig7_sweep;

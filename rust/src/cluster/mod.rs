@@ -13,14 +13,24 @@
 //! which is precisely what makes imbalanced schemes slow (Lemma 4) and
 //! balanced ones fast.
 //!
-//! GPUs inside a machine first reduce-scatter/all-gather dense shards
-//! over NVLink (§4.1 of the paper); `intra_machine_time` charges that
-//! phase, and the inter-machine schemes then operate on per-machine
-//! tensors (whose density reflects intra-machine densification).
+//! Two placements of the GPUs are supported:
+//!
+//! - **Flat** ([`Network::new`]): endpoints are machines; GPUs inside a
+//!   machine first reduce-scatter/all-gather dense shards over NVLink
+//!   (§4.1) — [`Topology::intra_machine_time`] charges that phase — and
+//!   the inter-machine schemes operate on per-machine tensors.
+//! - **Two-level** ([`Network::with_topology`]): endpoints are ranks
+//!   placed on nodes by a [`Topology`]; each synchronous stage is
+//!   charged *per link class* — frames between co-located ranks ride
+//!   the intra-node link, cross-node frames the fabric, and the stage
+//!   costs the max of the two classes (they are physically parallel
+//!   links). [`StageReport`] keeps the per-class split.
 
 pub mod report;
+pub mod topology;
 
-pub use report::{CommReport, StageReport, Timeline, TimelineEntry, TimelineJob};
+pub use report::{ClassStage, CommReport, StageReport, Timeline, TimelineEntry, TimelineJob};
+pub use topology::{LinkClass, Topology, LINK_CLASSES};
 
 /// Link presets matching the paper's two testbeds.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -31,7 +41,7 @@ pub enum LinkKind {
     Rdma100,
     /// NVLink (V100-gen: ~150 GB/s per direction aggregate).
     NvLink,
-    /// Custom bits/s + latency.
+    /// Custom bits/s + latency (ns).
     Custom(u64, u64),
 }
 
@@ -58,66 +68,55 @@ impl LinkKind {
     }
 }
 
-/// Cluster shape: `machines` endpoints on the inter-machine fabric, each
-/// with `gpus_per_machine` GPUs joined by NVLink.
-#[derive(Clone, Debug)]
-pub struct Topology {
-    pub machines: usize,
-    pub gpus_per_machine: usize,
-    pub inter: LinkKind,
-    pub intra: LinkKind,
-}
-
-impl Topology {
-    pub fn new(machines: usize, gpus_per_machine: usize, inter: LinkKind) -> Self {
-        Topology {
-            machines,
-            gpus_per_machine,
-            inter,
-            intra: LinkKind::NvLink,
-        }
-    }
-
-    /// Paper testbed 1: m machines × 8 V100, 25 Gbps TCP.
-    pub fn testbed_tcp(machines: usize) -> Self {
-        Self::new(machines, 8, LinkKind::Tcp25)
-    }
-
-    /// Paper testbed 2: m machines × 8 A100, 100 Gbps RDMA.
-    pub fn testbed_rdma(machines: usize) -> Self {
-        Self::new(machines, 8, LinkKind::Rdma100)
-    }
-
-    pub fn total_gpus(&self) -> usize {
-        self.machines * self.gpus_per_machine
-    }
-
-    /// Time for the intra-machine dense reduce-scatter + all-gather over
-    /// NVLink (ring over g GPUs, `2(g-1)/g · bytes` each way).
-    pub fn intra_machine_time(&self, dense_bytes: u64) -> f64 {
-        let g = self.gpus_per_machine;
-        if g <= 1 {
-            return 0.0;
-        }
-        let moved = 2.0 * (g as f64 - 1.0) / g as f64 * dense_bytes as f64;
-        2.0 * (g as f64 - 1.0) * self.intra.latency() + moved * 8.0 / self.intra.bandwidth_bps()
-    }
-}
-
-/// The inter-machine network: charges virtual time per synchronous stage.
+/// The network under a synchronization: endpoint count + placement.
+/// `link` is the inter-node (fabric) link — the historical single
+/// global pair — and `topo` carries the full per-class placement the
+/// transports charge time with (flat unless built via
+/// [`with_topology`](Network::with_topology)).
 #[derive(Clone, Debug)]
 pub struct Network {
     pub link: LinkKind,
     pub endpoints: usize,
+    pub topo: Topology,
 }
 
 impl Network {
+    /// Flat network: every endpoint pair crosses `link`.
     pub fn new(endpoints: usize, link: LinkKind) -> Self {
         assert!(endpoints >= 1);
-        Network { endpoints, link }
+        Network {
+            endpoints,
+            link,
+            topo: Topology::flat(endpoints, link),
+        }
     }
 
-    /// Time for one synchronous stage given per-endpoint sent/recv bytes.
+    /// Two-level network: one endpoint per rank of `topo`, traffic
+    /// charged per link class.
+    pub fn with_topology(topo: Topology) -> Self {
+        let endpoints = topo.endpoints();
+        assert!(endpoints >= 1);
+        Network {
+            endpoints,
+            link: topo.inter,
+            topo,
+        }
+    }
+
+    /// α–β time of one link class given its busiest endpoint's bytes
+    /// (0 when the class carried nothing — an idle link charges no α).
+    pub fn class_time(&self, class: LinkClass, busiest_bytes: u64) -> f64 {
+        if busiest_bytes == 0 {
+            return 0.0;
+        }
+        let link = self.topo.link_of(class);
+        link.latency() + busiest_bytes as f64 * 8.0 / link.bandwidth_bps()
+    }
+
+    /// Time for one synchronous stage given per-endpoint sent/recv bytes,
+    /// charged entirely to the inter link (the flat model's accounting;
+    /// classed callers use [`class_time`](Network::class_time) per class
+    /// and take the max).
     pub fn stage_time(&self, sent: &[u64], recv: &[u64]) -> f64 {
         assert_eq!(sent.len(), self.endpoints);
         assert_eq!(recv.len(), self.endpoints);
@@ -134,26 +133,48 @@ impl Network {
     }
 
     /// Build a stage report from a per-(src,dst) byte matrix
-    /// (`bytes[src][dst]`, diagonal ignored — local moves are free).
+    /// (`bytes[src][dst]`, diagonal ignored — local moves are free),
+    /// classifying every pair against the topology.
     pub fn stage_from_matrix(&self, name: &str, bytes: &[Vec<u64>]) -> StageReport {
         assert_eq!(bytes.len(), self.endpoints);
-        let mut sent = vec![0u64; self.endpoints];
-        let mut recv = vec![0u64; self.endpoints];
+        let n = self.endpoints;
+        let mut sent = vec![0u64; n];
+        let mut recv = vec![0u64; n];
+        let mut class_sent = [vec![0u64; n], vec![0u64; n]];
+        let mut class_recv = [vec![0u64; n], vec![0u64; n]];
         for (src, row) in bytes.iter().enumerate() {
-            assert_eq!(row.len(), self.endpoints);
+            assert_eq!(row.len(), n);
             for (dst, &b) in row.iter().enumerate() {
                 if src != dst {
                     sent[src] += b;
                     recv[dst] += b;
+                    let c = self.topo.class_of(src, dst).idx();
+                    class_sent[c][src] += b;
+                    class_recv[c][dst] += b;
                 }
             }
         }
-        let time = self.stage_time(&sent, &recv);
+        let classes = LINK_CLASSES.map(|class| {
+            let c = class.idx();
+            let busiest = class_sent[c]
+                .iter()
+                .zip(class_recv[c].iter())
+                .map(|(&s, &r)| s.max(r))
+                .max()
+                .unwrap_or(0);
+            ClassStage {
+                bytes: class_sent[c].iter().sum(),
+                busiest,
+                time: self.class_time(class, busiest),
+            }
+        });
+        let time = classes[0].time.max(classes[1].time);
         StageReport {
             name: name.to_string(),
             sent,
             recv,
             time,
+            classes,
         }
     }
 }
@@ -201,14 +222,51 @@ mod tests {
         assert_eq!(st.sent, vec![30, 5, 0]);
         assert_eq!(st.recv, vec![5, 10, 20]);
         assert!((st.time - 30.0).abs() < 1e-9);
+        // flat: everything lands in the inter class
+        assert_eq!(st.classes[LinkClass::Intra.idx()].bytes, 0);
+        assert_eq!(st.classes[LinkClass::Inter.idx()].bytes, 35);
+        assert_eq!(st.classes[LinkClass::Inter.idx()].busiest, 30);
     }
 
     #[test]
-    fn intra_machine_scales_with_gpus() {
-        let t8 = Topology::testbed_tcp(4).intra_machine_time(1 << 30);
-        let mut t1 = Topology::testbed_tcp(4);
-        t1.gpus_per_machine = 1;
-        assert_eq!(t1.intra_machine_time(1 << 30), 0.0);
-        assert!(t8 > 0.0);
+    fn classed_matrix_splits_by_placement() {
+        // 2 nodes × 2 ranks; intra 10× the inter bandwidth, zero α.
+        let topo = Topology::two_level(
+            2,
+            2,
+            LinkKind::Custom(80, 0), // 10 B/s
+            LinkKind::Custom(8, 0),  // 1 B/s
+        );
+        let net = Network::with_topology(topo);
+        // 0→1 co-located (100 B), 0→2 cross-node (40 B).
+        let m = vec![
+            vec![0, 100, 40, 0],
+            vec![0; 4],
+            vec![0; 4],
+            vec![0; 4],
+        ];
+        let st = net.stage_from_matrix("mixed", &m);
+        let intra = &st.classes[LinkClass::Intra.idx()];
+        let inter = &st.classes[LinkClass::Inter.idx()];
+        assert_eq!(intra.bytes, 100);
+        assert_eq!(inter.bytes, 40);
+        assert_eq!(intra.busiest, 100);
+        assert_eq!(inter.busiest, 40);
+        // classes run in parallel: intra 100/10 = 10 s, inter 40/1 = 40 s
+        assert!((intra.time - 10.0).abs() < 1e-9);
+        assert!((inter.time - 40.0).abs() < 1e-9);
+        assert!((st.time - 40.0).abs() < 1e-9, "stage = max over classes");
+        // total sent/recv vectors are class-agnostic
+        assert_eq!(st.sent, vec![140, 0, 0, 0]);
+        assert_eq!(st.recv, vec![0, 100, 40, 0]);
     }
+
+    #[test]
+    fn idle_class_charges_no_latency() {
+        let topo = Topology::two_level(2, 2, LinkKind::NvLink, LinkKind::Tcp25);
+        let net = Network::with_topology(topo);
+        assert_eq!(net.class_time(LinkClass::Intra, 0), 0.0);
+        assert!(net.class_time(LinkClass::Inter, 1) > 0.0);
+    }
+
 }

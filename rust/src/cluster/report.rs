@@ -1,18 +1,63 @@
 //! Communication accounting: per-stage and per-synchronization reports.
 
+use super::topology::{LinkClass, LINK_CLASSES};
+
+/// One link class's share of a stage: total bytes it carried, the
+/// busiest endpoint's bytes on it, and its α–β time. The stage's time
+/// is the max over classes (parallel physical links); a flat network
+/// puts everything in the inter class.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClassStage {
+    /// Total bytes moved on this class in the stage.
+    pub bytes: u64,
+    /// Busiest endpoint's `max(sent, recv)` on this class.
+    pub busiest: u64,
+    /// α–β time of this class (0 when it carried nothing).
+    pub time: f64,
+}
+
 /// One synchronous communication stage.
 #[derive(Clone, Debug)]
 pub struct StageReport {
     pub name: String,
-    /// Bytes sent by each endpoint in this stage.
+    /// Bytes sent by each endpoint in this stage (all classes).
     pub sent: Vec<u64>,
-    /// Bytes received by each endpoint in this stage.
+    /// Bytes received by each endpoint in this stage (all classes).
     pub recv: Vec<u64>,
-    /// Virtual time charged for the stage (seconds).
+    /// Virtual time charged for the stage (seconds) — the max over the
+    /// per-class times in `classes`.
     pub time: f64,
+    /// Per-link-class split, indexed by [`LinkClass::idx`]
+    /// (`[intra, inter]`).
+    pub classes: [ClassStage; 2],
 }
 
 impl StageReport {
+    /// Build a flat-network stage: all traffic on the inter class —
+    /// the historical constructor for code and tests that never split
+    /// by placement.
+    pub fn flat(name: &str, sent: Vec<u64>, recv: Vec<u64>, time: f64) -> StageReport {
+        let busiest = sent
+            .iter()
+            .zip(recv.iter())
+            .map(|(&s, &r)| s.max(r))
+            .max()
+            .unwrap_or(0);
+        let mut classes = [ClassStage::default(); 2];
+        classes[LinkClass::Inter.idx()] = ClassStage {
+            bytes: sent.iter().sum(),
+            busiest,
+            time,
+        };
+        StageReport {
+            name: name.to_string(),
+            sent,
+            recv,
+            time,
+            classes,
+        }
+    }
+
     pub fn total_bytes(&self) -> u64 {
         self.sent.iter().sum()
     }
@@ -107,6 +152,30 @@ impl CommReport {
         }
         let max = per.iter().copied().max().unwrap_or(0);
         max as f64 * per.len() as f64 / total as f64
+    }
+
+    /// Total bytes per link class across all stages (`[intra, inter]`).
+    pub fn bytes_by_class(&self) -> [u64; 2] {
+        let mut out = [0u64; 2];
+        for s in &self.stages {
+            for c in LINK_CLASSES {
+                out[c.idx()] += s.classes[c.idx()].bytes;
+            }
+        }
+        out
+    }
+
+    /// Virtual time per link class across all stages (`[intra, inter]`).
+    /// The sums can each be below [`comm_time`](CommReport::comm_time):
+    /// a stage charges the max over its classes, not their sum.
+    pub fn time_by_class(&self) -> [f64; 2] {
+        let mut out = [0f64; 2];
+        for s in &self.stages {
+            for c in LINK_CLASSES {
+                out[c.idx()] += s.classes[c.idx()].time;
+            }
+        }
+        out
     }
 
     /// Merge another report's stages and overhead into this one
@@ -209,12 +278,7 @@ mod tests {
     use super::*;
 
     fn stage(name: &str, sent: Vec<u64>, recv: Vec<u64>, time: f64) -> StageReport {
-        StageReport {
-            name: name.into(),
-            sent,
-            recv,
-            time,
-        }
+        StageReport::flat(name, sent, recv, time)
     }
 
     #[test]
@@ -228,6 +292,21 @@ mod tests {
         assert!((r.total_time() - 1.75).abs() < 1e-12);
         assert_eq!(r.max_stage_recv(), 10);
         assert_eq!(r.recv_per_endpoint(), vec![4, 10]);
+        // flat stages land entirely in the inter class
+        assert_eq!(r.bytes_by_class(), [0, 14]);
+        let by_class = r.time_by_class();
+        assert_eq!(by_class[LinkClass::Intra.idx()], 0.0);
+        assert!((by_class[LinkClass::Inter.idx()] - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flat_stage_records_class_busiest() {
+        let s = StageReport::flat("a", vec![10, 0], vec![0, 10], 1.0);
+        let inter = &s.classes[LinkClass::Inter.idx()];
+        assert_eq!(inter.bytes, 10);
+        assert_eq!(inter.busiest, 10);
+        assert_eq!(inter.time, 1.0);
+        assert_eq!(s.classes[LinkClass::Intra.idx()].bytes, 0);
     }
 
     #[test]

@@ -1,0 +1,321 @@
+//! Two-level cluster topology: rank placement + per-link-class α–β.
+//!
+//! Real clusters are not flat meshes: ranks inside one node talk over
+//! NVLink-class links an order of magnitude faster than the inter-node
+//! fabric. [`Topology`] captures that as a two-level model — `nodes`
+//! nodes of `ranks_per_node` ranks each — with its own [`LinkKind`]
+//! per [`LinkClass`]. Every layer that used a single global α–β pair
+//! now prices per class:
+//!
+//! - the transports charge a stage as the *max* over classes of that
+//!   class's α–β time (classes are physically parallel links),
+//! - [`crate::cluster::StageReport`] splits observed bytes and time by
+//!   class,
+//! - [`crate::analysis::CostModel::with_topology`] prices each scheme's
+//!   stage structure per class, which is what lets the planner pick
+//!   different winners for intra-heavy vs inter-heavy placements.
+//!
+//! The same struct doubles as the classic "machines × GPUs" cluster
+//! shape (the paper's testbeds): [`Topology::intra_machine_time`]
+//! charges the per-machine NVLink reduce-scatter/all-gather phase the
+//! flat simulation path pre-aggregates with.
+
+use super::LinkKind;
+
+/// Which physical link a frame crosses: node-local or cross-node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LinkClass {
+    /// Both endpoints share a node (NVLink-class).
+    Intra = 0,
+    /// The endpoints sit on different nodes (network fabric).
+    Inter = 1,
+}
+
+/// Both classes, in index order (`class as usize`).
+pub const LINK_CLASSES: [LinkClass; 2] = [LinkClass::Intra, LinkClass::Inter];
+
+impl LinkClass {
+    /// Stable array index (`[intra, inter]`).
+    pub fn idx(&self) -> usize {
+        *self as usize
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LinkClass::Intra => "intra",
+            LinkClass::Inter => "inter",
+        }
+    }
+}
+
+/// Cluster shape: `nodes` nodes × `ranks_per_node` ranks, with one
+/// link preset per class. Rank `r` lives on node `r / ranks_per_node`.
+///
+/// A *flat* topology (`ranks_per_node == 1`) reproduces the historical
+/// single-link model exactly: every pair of endpoints crosses the
+/// inter-node link, and the intra link never carries traffic.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Topology {
+    pub nodes: usize,
+    pub ranks_per_node: usize,
+    /// Node-local link (NVLink in the paper's testbeds).
+    pub intra: LinkKind,
+    /// Cross-node link (the 25 Gbps TCP / 100 Gbps RDMA fabric).
+    pub inter: LinkKind,
+}
+
+impl Topology {
+    /// The historical model: every endpoint is its own node, all
+    /// traffic crosses `link`.
+    pub fn flat(endpoints: usize, link: LinkKind) -> Self {
+        Topology {
+            nodes: endpoints,
+            ranks_per_node: 1,
+            intra: link,
+            inter: link,
+        }
+    }
+
+    /// A two-level topology with explicit per-class links.
+    pub fn two_level(
+        nodes: usize,
+        ranks_per_node: usize,
+        intra: LinkKind,
+        inter: LinkKind,
+    ) -> Self {
+        assert!(nodes >= 1 && ranks_per_node >= 1);
+        Topology {
+            nodes,
+            ranks_per_node,
+            intra,
+            inter,
+        }
+    }
+
+    /// Classic cluster shape (machines × GPUs on NVLink) for the flat
+    /// simulation path, where machines are the fabric endpoints.
+    pub fn new(machines: usize, gpus_per_machine: usize, inter: LinkKind) -> Self {
+        Topology {
+            nodes: machines,
+            ranks_per_node: gpus_per_machine,
+            intra: LinkKind::NvLink,
+            inter,
+        }
+    }
+
+    /// Paper testbed 1: m machines × 8 V100, 25 Gbps TCP.
+    pub fn testbed_tcp(machines: usize) -> Self {
+        Self::new(machines, 8, LinkKind::Tcp25)
+    }
+
+    /// Paper testbed 2: m machines × 8 A100, 100 Gbps RDMA.
+    pub fn testbed_rdma(machines: usize) -> Self {
+        Self::new(machines, 8, LinkKind::Rdma100)
+    }
+
+    /// Total ranks (the endpoint count of a topology-aware fabric).
+    pub fn endpoints(&self) -> usize {
+        self.nodes * self.ranks_per_node
+    }
+
+    /// Alias of [`endpoints`](Topology::endpoints) for the classic
+    /// machines-×-GPUs reading.
+    pub fn total_gpus(&self) -> usize {
+        self.endpoints()
+    }
+
+    /// Node a rank lives on.
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.ranks_per_node
+    }
+
+    /// Link class of the (a, b) endpoint pair.
+    pub fn class_of(&self, a: usize, b: usize) -> LinkClass {
+        if self.ranks_per_node > 1 && self.node_of(a) == self.node_of(b) {
+            LinkClass::Intra
+        } else {
+            LinkClass::Inter
+        }
+    }
+
+    /// Link preset of a class.
+    pub fn link_of(&self, class: LinkClass) -> LinkKind {
+        match class {
+            LinkClass::Intra => self.intra,
+            LinkClass::Inter => self.inter,
+        }
+    }
+
+    /// Whether this behaves like the historical single-link model
+    /// (every pair of endpoints crosses the inter link).
+    pub fn is_flat(&self) -> bool {
+        self.ranks_per_node <= 1
+    }
+
+    /// Time for the intra-machine dense reduce-scatter + all-gather over
+    /// the intra link (ring over g ranks, `2(g-1)/g · bytes` each way) —
+    /// the pre-aggregation phase of the flat simulation path.
+    pub fn intra_machine_time(&self, dense_bytes: u64) -> f64 {
+        let g = self.ranks_per_node;
+        if g <= 1 {
+            return 0.0;
+        }
+        let moved = 2.0 * (g as f64 - 1.0) / g as f64 * dense_bytes as f64;
+        2.0 * (g as f64 - 1.0) * self.intra.latency() + moved * 8.0 / self.intra.bandwidth_bps()
+    }
+
+    /// Parse a CLI topology spec: `NxG` or `N×G`, optionally followed by
+    /// per-class link parameters `:ia,ib/ea,eb` — intra then inter, each
+    /// as `alpha_us,gbps`. Without the suffix the intra link defaults to
+    /// NVLink and the inter link to `default_inter`.
+    ///
+    /// Examples: `4x2`, `4x2:2,300/50,25` (2 µs / 300 Gbps inside a
+    /// node, 50 µs / 25 Gbps between nodes).
+    pub fn parse(spec: &str, default_inter: LinkKind) -> Result<Topology, String> {
+        let (shape, links) = match spec.split_once(':') {
+            Some((s, l)) => (s, Some(l)),
+            None => (spec, None),
+        };
+        let (n, g) = shape
+            .split_once(['x', 'X', '×'])
+            .ok_or_else(|| format!("topology '{spec}': want NxG, e.g. 4x2"))?;
+        let nodes: usize = n
+            .trim()
+            .parse()
+            .map_err(|_| format!("topology '{spec}': bad node count '{n}'"))?;
+        let ranks: usize = g
+            .trim()
+            .parse()
+            .map_err(|_| format!("topology '{spec}': bad ranks-per-node '{g}'"))?;
+        if nodes == 0 || ranks == 0 {
+            return Err(format!("topology '{spec}': counts must be >= 1"));
+        }
+        let (intra, inter) = match links {
+            None => (LinkKind::NvLink, default_inter),
+            Some(l) => {
+                let (a, b) = l.split_once('/').ok_or_else(|| {
+                    format!("topology '{spec}': link suffix wants intra/inter, e.g. 2,300/50,25")
+                })?;
+                (parse_link(a, spec)?, parse_link(b, spec)?)
+            }
+        };
+        Ok(Topology::two_level(nodes, ranks, intra, inter))
+    }
+
+    /// Human-readable shape + link summary for logs.
+    pub fn describe(&self) -> String {
+        let link = |l: LinkKind| {
+            format!(
+                "{:.0}us/{:.0}Gbps",
+                l.latency() * 1e6,
+                l.bandwidth_bps() / 1e9
+            )
+        };
+        format!(
+            "{}x{} (intra {}, inter {})",
+            self.nodes,
+            self.ranks_per_node,
+            link(self.intra),
+            link(self.inter)
+        )
+    }
+}
+
+/// Parse one `alpha_us,gbps` pair into a custom link.
+fn parse_link(pair: &str, spec: &str) -> Result<LinkKind, String> {
+    let (alpha, gbps) = pair
+        .split_once(',')
+        .ok_or_else(|| format!("topology '{spec}': link wants alpha_us,gbps, got '{pair}'"))?;
+    let alpha_us: f64 = alpha
+        .trim()
+        .parse()
+        .map_err(|_| format!("topology '{spec}': bad latency '{alpha}' (µs)"))?;
+    let gbps: f64 = gbps
+        .trim()
+        .parse()
+        .map_err(|_| format!("topology '{spec}': bad bandwidth '{gbps}' (Gbps)"))?;
+    let bps = (gbps * 1e9) as u64;
+    // Validate the *converted* value: a sub-1-bps spec would truncate
+    // to 0 and turn every α–β time into +inf instead of an error.
+    if alpha_us < 0.0 || bps == 0 {
+        return Err(format!(
+            "topology '{spec}': latency must be >= 0 and bandwidth at least 1 bps"
+        ));
+    }
+    Ok(LinkKind::Custom(bps, (alpha_us * 1e3) as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_and_classes() {
+        let t = Topology::two_level(4, 2, LinkKind::NvLink, LinkKind::Tcp25);
+        assert_eq!(t.endpoints(), 8);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(5), 2);
+        assert_eq!(t.class_of(0, 1), LinkClass::Intra);
+        assert_eq!(t.class_of(1, 2), LinkClass::Inter);
+        assert_eq!(t.class_of(6, 7), LinkClass::Intra);
+        assert_eq!(t.link_of(LinkClass::Intra), LinkKind::NvLink);
+        assert_eq!(t.link_of(LinkClass::Inter), LinkKind::Tcp25);
+        assert!(!t.is_flat());
+    }
+
+    #[test]
+    fn flat_topology_is_all_inter() {
+        let t = Topology::flat(4, LinkKind::Tcp25);
+        assert!(t.is_flat());
+        for a in 0..4 {
+            for b in 0..4 {
+                if a != b {
+                    assert_eq!(t.class_of(a, b), LinkClass::Inter, "{a}-{b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parse_shapes_and_links() {
+        let t = Topology::parse("4x2", LinkKind::Tcp25).unwrap();
+        assert_eq!((t.nodes, t.ranks_per_node), (4, 2));
+        assert_eq!(t.intra, LinkKind::NvLink);
+        assert_eq!(t.inter, LinkKind::Tcp25);
+
+        let t = Topology::parse("2×8:2,300/50,25", LinkKind::Rdma100).unwrap();
+        assert_eq!((t.nodes, t.ranks_per_node), (2, 8));
+        assert_eq!(t.intra, LinkKind::Custom(300_000_000_000, 2_000));
+        assert_eq!(t.inter, LinkKind::Custom(25_000_000_000, 50_000));
+        assert!((t.intra.latency() - 2e-6).abs() < 1e-12);
+        assert!((t.inter.bandwidth_bps() - 25e9).abs() < 1.0);
+
+        for bad in [
+            "4",
+            "0x2",
+            "4x0",
+            "4x2:1,2",
+            "4x2:a,b/c,d",
+            "4x2:1,-2/3,4",
+            // sub-1-bps bandwidth would truncate to Custom(0, _)
+            "4x2:1,1e-10/3,4",
+        ] {
+            assert!(Topology::parse(bad, LinkKind::Tcp25).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn describe_mentions_shape() {
+        let t = Topology::parse("4x2", LinkKind::Tcp25).unwrap();
+        assert!(t.describe().starts_with("4x2"));
+    }
+
+    #[test]
+    fn intra_machine_scales_with_gpus() {
+        let t8 = Topology::testbed_tcp(4).intra_machine_time(1 << 30);
+        let mut t1 = Topology::testbed_tcp(4);
+        t1.ranks_per_node = 1;
+        assert_eq!(t1.intra_machine_time(1 << 30), 0.0);
+        assert!(t8 > 0.0);
+    }
+}

@@ -143,6 +143,25 @@ impl Args {
         }
     }
 
+    /// Parse a `--topology NxG[:ia,ib/ea,eb]` option into a two-level
+    /// [`crate::cluster::Topology`] (see [`crate::cluster::Topology::parse`]).
+    /// `default_inter` is the inter-node link when the spec names none
+    /// (the CLI passes `--link`'s value). A present-but-invalid spec is
+    /// an error — silently simulating a flat mesh when the user asked
+    /// for a hierarchy would be wrong.
+    pub fn topology(
+        &self,
+        key: &str,
+        default_inter: crate::cluster::LinkKind,
+    ) -> anyhow::Result<Option<crate::cluster::Topology>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => crate::cluster::Topology::parse(v, default_inter)
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{key}: {e}")),
+        }
+    }
+
     /// Parse a transport backend name (`sim`, `channel`, `tcp`). Unlike
     /// [`link`](Args::link), an unknown value is an error — silently
     /// simulating when the user asked for real frames would be wrong.
@@ -207,6 +226,22 @@ mod tests {
         assert_eq!(parse("").ratio("hys", 0.25).unwrap(), 0.25);
         assert!(parse("--hys 1.5").ratio("hys", 0.25).is_err());
         assert!(parse("--hys nope").ratio("hys", 0.25).is_err());
+    }
+
+    #[test]
+    fn topology_parsing() {
+        use crate::cluster::LinkKind;
+        let a = parse("--topology 4x2");
+        let t = a.topology("topology", LinkKind::Tcp25).unwrap().unwrap();
+        assert_eq!((t.nodes, t.ranks_per_node), (4, 2));
+        assert_eq!(t.inter, LinkKind::Tcp25);
+        assert!(parse("")
+            .topology("topology", LinkKind::Tcp25)
+            .unwrap()
+            .is_none());
+        assert!(parse("--topology nonsense")
+            .topology("topology", LinkKind::Tcp25)
+            .is_err());
     }
 
     #[test]

@@ -20,7 +20,7 @@ use std::collections::HashMap;
 use anyhow::{Context, Result};
 
 use super::sgd;
-use crate::cluster::{LinkKind, Network};
+use crate::cluster::{LinkKind, Network, Topology};
 use crate::planner::{self, PlanConfig, Planner};
 use crate::runtime::{lit, Executable, Runtime};
 use crate::schemes::{SyncScheme, SyncScratch};
@@ -167,7 +167,7 @@ impl LmTrainer {
     }
 
     /// Construct with an explicit transport backend
-    /// (`zen train --transport sim|channel|tcp`).
+    /// (`zen train --transport sim|channel|tcp`) on a flat network.
     pub fn with_transport(
         cfg: LmConfig,
         workers: usize,
@@ -176,6 +176,26 @@ impl LmTrainer {
         transport: TransportKind,
         artifacts_dir: &std::path::Path,
     ) -> Result<Self> {
+        Self::with_topology(
+            cfg,
+            scheme_name,
+            Topology::flat(workers, link),
+            transport,
+            artifacts_dir,
+        )
+    }
+
+    /// Construct on an explicit topology (`zen train --topology NxG`):
+    /// one worker per rank, per-link-class α–β accounting, and a
+    /// planner that prices candidates against the placement.
+    pub fn with_topology(
+        cfg: LmConfig,
+        scheme_name: &str,
+        topo: Topology,
+        transport: TransportKind,
+        artifacts_dir: &std::path::Path,
+    ) -> Result<Self> {
+        let workers = topo.endpoints();
         let rt = Runtime::cpu()?;
         let path = artifacts_dir.join(format!("{}.hlo.txt", cfg.artifact_stem()));
         let exe = rt.load_hlo(&path).with_context(|| {
@@ -204,7 +224,7 @@ impl LmTrainer {
             plan_cfg,
         )
         .ok_or_else(|| anyhow::anyhow!("unknown scheme '{scheme_name}' (or 'auto')"))?;
-        let net = Network::new(workers, link);
+        let net = Network::with_topology(topo);
         if matches!(transport, TransportKind::Tcp) {
             // Scheme-aware worst-frame estimate, shared with
             // SimDriver::new; the runtime per-stream budget stays
@@ -384,12 +404,13 @@ impl LmTrainer {
         // measured gradient density drifted past the hysteresis.
         let planned = self
             .planner
-            .plan("embedding", &worker_grads, self.net.link);
-        let sync = planned.scheme.sync_transport(
-            &worker_grads,
-            self.transport.as_mut(),
-            &mut self.scratch,
-        );
+            .plan("embedding", &worker_grads, &self.net.topo);
+        let sync = planned
+            .scheme
+            .sync_transport(&worker_grads, self.transport.as_mut(), &mut self.scratch)
+            .map_err(|e| {
+                anyhow::anyhow!("step {}: embedding gradient sync failed: {e}", self.step_count)
+            })?;
         let emb_comm_time = sync.report.comm_time();
         let scheme_overhead = sync.report.compute_overhead;
 

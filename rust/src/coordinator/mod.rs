@@ -13,7 +13,7 @@
 pub mod lm;
 pub mod sgd;
 
-use crate::cluster::{LinkKind, Network, Topology};
+use crate::cluster::{LinkClass, LinkKind, Network, Topology, LINK_CLASSES};
 use crate::planner::{self, PlanConfig, Planner};
 use crate::schemes::{self, SyncScheme, SyncScratch};
 use crate::wire::TransportKind;
@@ -100,6 +100,13 @@ pub struct SimConfig {
     pub machines: usize,
     pub gpus_per_machine: usize,
     pub link: LinkKind,
+    /// Two-level placement (`zen sim --topology NxG[:links]`): when set,
+    /// every rank of the topology is a fabric endpoint with its own
+    /// per-GPU gradient, frames between co-located ranks ride the
+    /// intra-node link, and the α–β charge is per link class. `None`
+    /// keeps the classic flat model (machines are endpoints, GPUs
+    /// pre-aggregate over NVLink analytically).
+    pub topology: Option<Topology>,
     /// Scheme name (see [`schemes::by_name`]) or `auto` for the
     /// cost-model planner ([`crate::planner::CostPlanner`]).
     pub scheme: String,
@@ -125,6 +132,7 @@ impl SimConfig {
             machines,
             gpus_per_machine: 8,
             link: LinkKind::Tcp25,
+            topology: None,
             scheme: scheme.to_string(),
             replan_threshold: PlanConfig::default().replan_threshold,
             iterations: 4,
@@ -137,7 +145,8 @@ impl SimConfig {
 
 /// One bucket's row in the reported synchronization plan: which scheme
 /// the planner chose and how its prediction compared to what the
-/// transport actually measured — mispredictions are visible numbers.
+/// transport actually measured — mispredictions are visible numbers,
+/// split by link class on two-level topologies.
 #[derive(Clone, Debug)]
 pub struct BucketPlanReport {
     /// Bucket label (`embedding` for the flat path).
@@ -149,6 +158,14 @@ pub struct BucketPlanReport {
     pub predicted: Option<f64>,
     /// Transport-measured full-size virtual time (seconds).
     pub measured: f64,
+    /// Cost-model prediction per link class (`[intra, inter]`,
+    /// full-size seconds); `None` under a fixed scheme. Flat runs
+    /// predict `[0, predicted]`.
+    pub predicted_by_class: Option<[f64; 2]>,
+    /// Transport-measured full-size time per link class (`[intra,
+    /// inter]` — each class's α–β sum alone; the stage charge is their
+    /// max, so the two entries need not add up to `measured`).
+    pub measured_by_class: [f64; 2],
 }
 
 impl BucketPlanReport {
@@ -209,7 +226,12 @@ pub struct SimDriver {
     pub cfg: SimConfig,
     gen: GradientGen,
     planner: Box<dyn Planner>,
+    /// Machines-×-GPUs shape of the flat path (NVLink pre-aggregation).
     topo: Topology,
+    /// Topology of the synchronization fabric itself: flat over
+    /// `machines` endpoints, or `cfg.topology` with one endpoint per
+    /// rank.
+    sync_topo: Topology,
 }
 
 impl SimDriver {
@@ -225,8 +247,27 @@ impl SimDriver {
                  --transport sim|channel with --pipeline, or drop --pipeline"
             );
         }
+        let sync_topo = match &cfg.topology {
+            Some(t) => {
+                anyhow::ensure!(
+                    t.endpoints() >= 1,
+                    "topology must place at least one rank"
+                );
+                t.clone()
+            }
+            None => Topology::flat(cfg.machines, cfg.link),
+        };
+        let endpoints = sync_topo.endpoints();
         let scaled = cfg.profile.scaled(cfg.scale);
         let gen = GradientGen::new(scaled, cfg.seed);
+        // Expected per-endpoint non-zeros: a machine aggregate on the
+        // flat path, a single GPU's tensor when every rank is an
+        // endpoint of an explicit topology.
+        let endpoint_nnz = if cfg.topology.is_some() {
+            gen.expected_nnz()
+        } else {
+            gen.expected_nnz() * cfg.gpus_per_machine.min(4)
+        };
         if cfg.transport == TransportKind::Tcp {
             // TCP is the only fallible backend. Fail fast with a clean
             // error, not a mid-run panic: (1) sockets must be available,
@@ -234,7 +275,7 @@ impl SimDriver {
             // AGsparse/SparCML ship) must fit the per-stream budget.
             drop(crate::wire::make_transport(
                 cfg.transport,
-                &Network::new(cfg.machines, cfg.link),
+                &Network::with_topology(sync_topo.clone()),
             )?);
             // Worst-case per-stream bytes are scheme-dependent:
             // point-to-point schemes ship at most one machine tensor per
@@ -243,10 +284,9 @@ impl SimDriver {
             // ship positional chunks of the range. The estimate is
             // conservative guidance — the runtime per-stream budget
             // stays authoritative.
-            let machine_nnz = gen.expected_nnz() * cfg.gpus_per_machine.min(4);
             let dense_len = gen.profile.emb_params();
             let est_payload =
-                tcp_worst_frame_estimate(&cfg.scheme, dense_len, machine_nnz, cfg.machines);
+                tcp_worst_frame_estimate(&cfg.scheme, dense_len, endpoint_nnz, endpoints);
             let est_frame = est_payload + 64;
             anyhow::ensure!(
                 est_frame <= crate::wire::MAX_TCP_INFLIGHT_BYTES,
@@ -268,9 +308,9 @@ impl SimDriver {
         };
         let planner = planner::by_name(
             &cfg.scheme,
-            cfg.machines,
+            endpoints,
             cfg.seed ^ 0x5eed,
-            gen.expected_nnz() * cfg.gpus_per_machine.min(4),
+            endpoint_nnz,
             plan_cfg,
         )
         .ok_or_else(|| anyhow::anyhow!("unknown scheme '{}' (or 'auto')", cfg.scheme))?;
@@ -280,7 +320,46 @@ impl SimDriver {
             gen,
             planner,
             topo,
+            sync_topo,
         })
+    }
+
+    /// Endpoint count of the synchronization fabric (machines on the
+    /// flat path, total ranks under an explicit topology).
+    fn endpoints(&self) -> usize {
+        self.sync_topo.endpoints()
+    }
+
+    /// One endpoint's gradient for an iteration: a machine's g-GPU
+    /// aggregate on the flat path (NVLink pre-aggregation), one GPU's
+    /// tensor when ranks are endpoints.
+    fn rank_tensor(&self, it: u64, rank: usize) -> crate::tensor::CooTensor {
+        if self.cfg.topology.is_some() {
+            self.gen.machine_iteration(it, rank, 1)
+        } else {
+            self.gen
+                .machine_iteration(it, rank, self.cfg.gpus_per_machine)
+        }
+    }
+
+    /// Analytic NVLink pre-aggregation charge — zero under an explicit
+    /// topology, where the transport itself prices intra-node frames.
+    fn intra_phase_time(&self) -> f64 {
+        if self.cfg.topology.is_some() {
+            0.0
+        } else {
+            self.topo
+                .intra_machine_time((self.cfg.profile.emb_params() * 4) as u64)
+        }
+    }
+
+    /// Total GPUs contributing samples per iteration.
+    fn sample_gpus(&self) -> usize {
+        if self.cfg.topology.is_some() {
+            self.endpoints()
+        } else {
+            self.cfg.machines * self.cfg.gpus_per_machine
+        }
     }
 
     /// Bytes scale factor from the simulated tensor to the full model.
@@ -290,40 +369,56 @@ impl SimDriver {
 
     /// Ring-allreduce time for the full-size dense MLP gradients —
     /// shared by the flat path and the no-dense-layers pipelined path so
-    /// the two stay comparable.
+    /// the two stay comparable. Priced on the inter link: the dense
+    /// ring's bandwidth term is dominated by the node-boundary hops.
     fn mlp_allreduce_time(&self) -> f64 {
-        let n = self.cfg.machines;
+        let n = self.endpoints();
         if n <= 1 {
             return 0.0;
         }
         let mlp_bytes = (self.cfg.profile.mlp_params * 4) as f64;
         let nf = n as f64;
-        2.0 * (nf - 1.0) / nf * mlp_bytes * 8.0 / self.cfg.link.bandwidth_bps()
+        2.0 * (nf - 1.0) / nf * mlp_bytes * 8.0 / self.sync_topo.inter.bandwidth_bps()
+    }
+
+    /// Full-size α–β time of one link class in one stage (0 when the
+    /// class carried nothing): `α_c + busiest_c·scale·8/B_c`.
+    fn full_class_time(&self, stage: &crate::cluster::StageReport, class: LinkClass) -> f64 {
+        let busiest = stage.classes[class.idx()].busiest;
+        if busiest == 0 {
+            return 0.0;
+        }
+        let link = self.sync_topo.link_of(class);
+        link.latency() + busiest as f64 * self.scale_factor() * 8.0 / link.bandwidth_bps()
     }
 
     /// Rescale a stage-structured report to full tensor size:
-    /// `t_full = Σ_stages (α + busiest·scale·8/B)`.
+    /// `t_full = Σ_stages max_class(α_c + busiest_c·scale·8/B_c)` — on a
+    /// flat network everything is inter-class and this reduces to the
+    /// historical single-link rescaling exactly.
     fn full_size_time(&self, report: &crate::cluster::CommReport) -> f64 {
-        let scale = self.scale_factor();
-        let link = self.cfg.link;
         report
             .stages
             .iter()
             .map(|s| {
-                let busiest = s
-                    .sent
+                LINK_CLASSES
                     .iter()
-                    .zip(s.recv.iter())
-                    .map(|(&a, &b)| a.max(b))
-                    .max()
-                    .unwrap_or(0);
-                if busiest == 0 {
-                    0.0
-                } else {
-                    link.latency() + busiest as f64 * scale * 8.0 / link.bandwidth_bps()
-                }
+                    .map(|&c| self.full_class_time(s, c))
+                    .fold(0.0, f64::max)
             })
             .sum()
+    }
+
+    /// Per-link-class full-size α–β sums (`[intra, inter]`) — the
+    /// measured side of the plan table's per-class rows.
+    fn full_size_time_by_class(&self, report: &crate::cluster::CommReport) -> [f64; 2] {
+        let mut out = [0f64; 2];
+        for s in &report.stages {
+            for c in LINK_CLASSES {
+                out[c.idx()] += self.full_class_time(s, c);
+            }
+        }
+        out
     }
 
     /// Run the simulation.
@@ -337,9 +432,8 @@ impl SimDriver {
     /// Classic path: one blocking sync of the flat embedding tensor per
     /// iteration — a single planner "bucket" labeled `embedding`.
     fn run_flat(&self) -> SimResult {
-        let n = self.cfg.machines;
-        let g = self.cfg.gpus_per_machine;
-        let net = Network::new(n, self.cfg.link);
+        let n = self.endpoints();
+        let net = Network::with_topology(self.sync_topo.clone());
         let mut emb_sync_times = Vec::with_capacity(self.cfg.iterations);
         let mut push_imb = Vec::new();
         let mut pull_imb = Vec::new();
@@ -356,32 +450,44 @@ impl SimDriver {
             .expect("sim transport setup (validated at construction)");
 
         for it in 0..self.cfg.iterations as u64 {
-            // Each machine's tensor = aggregate of its g GPUs (the
-            // intra-machine NVLink phase), densification included.
-            let inputs: Vec<crate::tensor::CooTensor> = (0..n)
-                .map(|m| self.gen.machine_iteration(it, m, g))
-                .collect();
+            // Flat path: each machine's tensor = aggregate of its g
+            // GPUs (the intra-machine NVLink phase), densification
+            // included. Topology mode: each rank's own GPU tensor.
+            let inputs: Vec<crate::tensor::CooTensor> =
+                (0..n).map(|m| self.rank_tensor(it, m)).collect();
             // Steady-state plan() is a cached lookup plus a mean-density
             // scan; only warm-up (or a density drift past the
             // hysteresis) profiles and re-ranks.
-            let planned = self.planner.plan("embedding", &inputs, net.link);
+            let planned = self.planner.plan("embedding", &inputs, &net.topo);
             let result = planned
                 .scheme
-                .sync_transport(&inputs, tx.as_mut(), &mut scratch);
+                .sync_transport(&inputs, tx.as_mut(), &mut scratch)
+                .unwrap_or_else(|e| {
+                    panic!(
+                        "embedding sync failed on the {} transport: {e}",
+                        self.cfg.transport.name()
+                    )
+                });
             // Correctness self-check on the first iteration.
             if it == 0 && !self.cfg.scheme.starts_with("strawman") {
                 schemes::verify_outputs(&result, &inputs);
             }
             let measured = self.full_size_time(&result.report);
             if it == 0 {
+                let scale = self.scale_factor();
                 plan.push(BucketPlanReport {
                     label: "embedding".to_string(),
                     scheme: planned.scheme.name(),
                     predicted: planned
                         .plan
                         .as_ref()
-                        .map(|p| p.predicted_at_scale(self.scale_factor())),
+                        .map(|p| p.predicted_at_scale(scale)),
                     measured,
+                    predicted_by_class: planned
+                        .plan
+                        .as_ref()
+                        .map(|p| p.predicted_class_at_scale(scale)),
+                    measured_by_class: self.full_size_time_by_class(&result.report),
                 });
             }
             emb_sync_times.push(measured);
@@ -393,15 +499,13 @@ impl SimDriver {
 
         // Dense MLP gradients always go through ring allreduce.
         let mlp_sync_time = self.mlp_allreduce_time();
-        let intra_time = self
-            .topo
-            .intra_machine_time((self.cfg.profile.emb_params() * 4) as u64);
+        let intra_time = self.intra_phase_time();
         let compute_time = compute_time_per_iter(self.cfg.profile.name);
         let emb_sync_mean =
             emb_sync_times.iter().sum::<f64>() / emb_sync_times.len().max(1) as f64;
         let iter_time = compute_time + intra_time + mlp_sync_time + emb_sync_mean;
         let throughput =
-            (n * g * self.cfg.profile.batch_size) as f64 / iter_time;
+            (self.sample_gpus() * self.cfg.profile.batch_size) as f64 / iter_time;
 
         SimResult {
             scheme: self.planner.scheme_label(),
@@ -424,9 +528,9 @@ impl SimDriver {
     /// The engine covers the dense head layers too, so the separate
     /// analytic MLP allreduce charge is zero here.
     fn run_pipelined(&self, p: &PipelineConfig) -> SimResult {
-        let n = self.cfg.machines;
+        let n = self.endpoints();
         let g = self.cfg.gpus_per_machine;
-        let net = Network::new(n, self.cfg.link);
+        let net = Network::with_topology(self.sync_topo.clone());
         let specs = self.gen.layer_specs(p.dense_layers, p.emb_shards);
         let compute_time = compute_time_per_iter(self.cfg.profile.name);
         let engine = crate::engine::SyncEngine::new(
@@ -439,27 +543,36 @@ impl SimDriver {
         let mut overlapped = Vec::with_capacity(self.cfg.iterations);
         let mut plan: Vec<BucketPlanReport> = Vec::new();
         for it in 0..self.cfg.iterations as u64 {
-            // Machine-level layer tensors: aggregate each layer over the
-            // machine's g GPUs (intra-machine NVLink phase, densification
-            // included) — the per-layer analog of the flat path.
-            let machine_layers: Vec<Vec<crate::tensor::CooTensor>> = (0..n)
-                .map(|m| {
-                    // Transpose [gpu][layer] -> [layer][gpu] by moving the
-                    // tensors (they dominate the sim's data volume).
-                    let mut by_layer: Vec<Vec<crate::tensor::CooTensor>> =
-                        (0..specs.len()).map(|_| Vec::with_capacity(g)).collect();
-                    for gi in 0..g {
-                        let gpu_layers = self.gen.layer_iteration(&specs, it, m * g + gi);
-                        for (l, t) in gpu_layers.into_iter().enumerate() {
-                            by_layer[l].push(t);
+            // Per-endpoint layer tensors. Flat path: aggregate each
+            // layer over the machine's g GPUs (intra-machine NVLink
+            // phase, densification included). Topology mode: every rank
+            // is one GPU, so its layers ship unaggregated and the
+            // transport prices the node-local traffic.
+            let machine_layers: Vec<Vec<crate::tensor::CooTensor>> = if self.cfg.topology.is_some()
+            {
+                (0..n)
+                    .map(|rank| self.gen.layer_iteration(&specs, it, rank))
+                    .collect()
+            } else {
+                (0..n)
+                    .map(|m| {
+                        // Transpose [gpu][layer] -> [layer][gpu] by moving
+                        // the tensors (they dominate the sim's data volume).
+                        let mut by_layer: Vec<Vec<crate::tensor::CooTensor>> =
+                            (0..specs.len()).map(|_| Vec::with_capacity(g)).collect();
+                        for gi in 0..g {
+                            let gpu_layers = self.gen.layer_iteration(&specs, it, m * g + gi);
+                            for (l, t) in gpu_layers.into_iter().enumerate() {
+                                by_layer[l].push(t);
+                            }
                         }
-                    }
-                    by_layer
-                        .into_iter()
-                        .map(|shards| crate::tensor::CooTensor::merge_all(&shards))
-                        .collect()
-                })
-                .collect();
+                        by_layer
+                            .into_iter()
+                            .map(|shards| crate::tensor::CooTensor::merge_all(&shards))
+                            .collect()
+                    })
+                    .collect()
+            };
             let run = engine.run(&specs, &machine_layers, self.planner.as_ref(), &net, |r| {
                 self.full_size_time(r)
             });
@@ -479,6 +592,11 @@ impl SimDriver {
                         scheme: b.scheme,
                         predicted: b.plan.as_ref().map(|p| p.predicted_at_scale(scale)),
                         measured: b.comm_time,
+                        predicted_by_class: b
+                            .plan
+                            .as_ref()
+                            .map(|p| p.predicted_class_at_scale(scale)),
+                        measured_by_class: self.full_size_time_by_class(&b.report),
                     })
                     .collect();
             }
@@ -499,15 +617,13 @@ impl SimDriver {
         // Same intra-machine charge as the flat path (embedding bytes),
         // so flat-vs-pipelined iteration times differ only in what the
         // engine actually changes: the inter-machine schedule.
-        let intra_time = self
-            .topo
-            .intra_machine_time((self.cfg.profile.emb_params() * 4) as u64);
+        let intra_time = self.intra_phase_time();
         let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
         let emb_sync_mean = mean(&emb_sync_times);
         let engine_serialized = intra_time + mlp_sync_time + mean(&serialized);
         let engine_overlapped = intra_time + mlp_sync_time + mean(&overlapped);
         let throughput =
-            (n * g * self.cfg.profile.batch_size) as f64 / engine_overlapped;
+            (self.sample_gpus() * self.cfg.profile.batch_size) as f64 / engine_overlapped;
 
         SimResult {
             scheme: self.planner.scheme_label(),
@@ -697,6 +813,73 @@ mod tests {
         let mut c = cfg("auto", 4);
         c.replan_threshold = 1.5;
         assert!(SimDriver::new(c).is_err());
+    }
+
+    fn topology_cfg(scheme: &str) -> SimConfig {
+        let mut c = cfg(scheme, 4);
+        // 4 machines × 2 GPUs become 8 ranks on a 4×2 two-level fabric.
+        c.topology = Some(Topology::two_level(
+            4,
+            2,
+            LinkKind::NvLink,
+            LinkKind::Tcp25,
+        ));
+        c
+    }
+
+    #[test]
+    fn topology_run_splits_time_by_class() {
+        let r = SimDriver::new(topology_cfg("zen")).unwrap().run();
+        assert!(r.throughput > 0.0);
+        assert_eq!(r.intra_time, 0.0, "transport prices intra traffic");
+        let p = &r.plan[0];
+        let [intra, inter] = p.measured_by_class;
+        assert!(
+            intra > 0.0 && inter > 0.0,
+            "both link classes must carry traffic on 4x2 ({:?})",
+            p.measured_by_class
+        );
+        // NVLink inside the node, TCP between: the fabric dominates.
+        assert!(inter > intra, "intra {intra} vs inter {inter}");
+        assert!((p.measured - intra.max(inter)).abs() <= p.measured * 0.5 + 1e-12);
+    }
+
+    #[test]
+    fn flat_run_reports_inter_only() {
+        let r = SimDriver::new(cfg("zen", 4)).unwrap().run();
+        let p = &r.plan[0];
+        assert_eq!(p.measured_by_class[LinkClass::Intra.idx()], 0.0);
+        assert!(
+            (p.measured_by_class[LinkClass::Inter.idx()] - p.measured).abs()
+                < p.measured * 1e-9 + 1e-15
+        );
+    }
+
+    #[test]
+    fn topology_auto_plans_per_class() {
+        let r = SimDriver::new(topology_cfg("auto")).unwrap().run();
+        assert_eq!(r.scheme, "auto");
+        let p = &r.plan[0];
+        let classes = p.predicted_by_class.expect("auto predicts per class");
+        assert!(classes[LinkClass::Inter.idx()] > 0.0);
+        // The per-class prediction must be in the measured ballpark on
+        // the dominant (inter) class.
+        let mis = p.measured_by_class[1] / classes[1].max(1e-12);
+        assert!((0.2..=5.0).contains(&mis), "inter measured/predicted {mis}");
+    }
+
+    #[test]
+    fn topology_pipelined_runs() {
+        let mut c = topology_cfg("zen");
+        c.iterations = 1;
+        c.pipeline = Some(PipelineConfig {
+            bucket_bytes: 64 * 1024,
+            dense_layers: 2,
+            emb_shards: 3,
+        });
+        let r = SimDriver::new(c).unwrap().run();
+        assert!(r.engine_overlapped.unwrap() > 0.0);
+        assert!(r.plan.iter().any(|p| p.measured_by_class[0] > 0.0));
     }
 
     #[test]

@@ -283,13 +283,23 @@ impl SyncEngine {
                 .iter()
                 .map(|w| bucket::concat_layers(&b, w))
                 .collect();
-            let planned = planner.plan(&b.label(specs), &inputs, net.link);
+            let planned = planner.plan(&b.label(specs), &inputs, &net.topo);
             let mut scratch = self.scratch.acquire();
             let mut tx = crate::wire::make_transport(self.cfg.transport, net)
                 .expect("engine transport setup");
+            // The engine owns both ends of its in-process transports, so
+            // a mid-sync wire error here is unrecoverable state, not a
+            // flaky peer — fail loudly with the bucket context.
             let result = planned
                 .scheme
-                .sync_transport(&inputs, tx.as_mut(), &mut scratch);
+                .sync_transport(&inputs, tx.as_mut(), &mut scratch)
+                .unwrap_or_else(|e| {
+                    panic!(
+                        "bucket '{}' sync failed on the {} transport: {e}",
+                        b.label(specs),
+                        self.cfg.transport.name()
+                    )
+                });
             (b, planned, result)
         });
         let wall_time = sw.elapsed();

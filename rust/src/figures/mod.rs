@@ -8,7 +8,7 @@
 
 use crate::analysis::costmodel::CostModel;
 use crate::analysis::numeric::{fig7_sweep, fig7_table};
-use crate::cluster::{LinkKind, Network};
+use crate::cluster::{LinkKind, Network, Topology};
 use crate::coordinator::{compute_time_per_iter, SimConfig, SimDriver};
 use crate::hashing::{HierarchicalHasher, StrawmanHasher};
 use crate::planner::{rank_candidates, MeasuredStats};
@@ -17,7 +17,9 @@ use crate::tensor::{metrics, BlockTensor, CooTensor, WireFormat};
 use crate::util::stats::Histogram;
 use crate::util::table::Table;
 use crate::util::{Pcg64, Stopwatch};
-use crate::workload::{profiles, random_uniform_inputs, GradientGen, ModelProfile};
+use crate::workload::{
+    group_clustered_inputs, profiles, random_uniform_inputs, GradientGen, ModelProfile,
+};
 
 /// Default scale-down for figure workloads (documented in DESIGN.md).
 pub const FIG_SCALE: usize = 256;
@@ -406,10 +408,11 @@ pub fn planner_crossover() -> Table {
     let block = crate::tensor::block::DEFAULT_BLOCK;
     for density in [0.0005f64, 0.002, 0.01, 0.05, 0.2, 0.5] {
         for machines in [2usize, 4, 8, 16, 32, 64] {
-            let inputs = random_uniform_inputs(SEED ^ machines as u64, machines, dense_len, density);
+            let inputs =
+                random_uniform_inputs(SEED ^ machines as u64, machines, dense_len, density);
             let stats = MeasuredStats::from_tensors(&inputs, &[machines], &[block]);
-            let costs =
-                rank_candidates(dense_len as f64, machines, LinkKind::Tcp25, block, &stats);
+            let topo = Topology::flat(machines, LinkKind::Tcp25);
+            let costs = rank_candidates(dense_len as f64, machines, &topo, block, &stats);
             let best = &costs[0];
             let second = &costs[1];
             t.row(vec![
@@ -471,6 +474,59 @@ pub fn fig7_measured_for(profile: &ModelProfile, machine_counts: &[usize], seed:
                 format!("{:.3}", predicted / dense_time),
                 format!("{:.3}", measured / dense_time),
                 format!("{:.2}", measured / predicted.max(1e-12)),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig T1 (beyond the paper) — the hierarchy crossover under
+/// heterogeneous links: the planner's chosen scheme per (sparsity
+/// structure × topology). Group-clustered workers (co-located ranks
+/// share their gradient support) make SparCML's node-local first
+/// doubling stage a genuine win once inter-node links are 10× slower —
+/// a flip the flat mesh cannot see. Uniform workers keep Balanced
+/// Parallelism on top everywhere.
+pub fn topology_crossover() -> Table {
+    let mut t = Table::new(
+        "Fig T1 — planner choice per sparsity structure × topology (4 nodes × 2 ranks)",
+        &["workload", "topology", "chosen", "predicted ms", "runner-up", "margin"],
+    );
+    let dense_len = 1 << 18;
+    let block = crate::tensor::block::DEFAULT_BLOCK;
+    let nodes = 4usize;
+    let ranks = 2usize;
+    let n = nodes * ranks;
+    // Zero-latency links isolate the bandwidth crossover; the inter
+    // fabric is 10× slower than the intra-node link.
+    let inter = LinkKind::Custom(25_000_000_000, 0);
+    let intra = LinkKind::Custom(250_000_000_000, 0);
+    let topos = [
+        ("flat", Topology::flat(n, inter)),
+        ("4x2 two-level", Topology::two_level(nodes, ranks, intra, inter)),
+    ];
+    let workloads: [(&str, Vec<crate::tensor::CooTensor>); 2] = [
+        (
+            // Two rack-level groups of 4 ranks each (nodes 0-1 / 2-3
+            // share one support): d(2)=d(4)=d(1), d(8)=2·d(1).
+            "group-clustered",
+            group_clustered_inputs(SEED, 2, n / 2, dense_len, 0.01),
+        ),
+        ("uniform", random_uniform_inputs(SEED ^ 0x70, n, dense_len, 0.01)),
+    ];
+    for (wname, inputs) in &workloads {
+        let stats = MeasuredStats::from_tensors(inputs, &[n], &[block]);
+        for (tname, topo) in &topos {
+            let costs = rank_candidates(dense_len as f64, n, topo, block, &stats);
+            let best = &costs[0];
+            let second = &costs[1];
+            t.row(vec![
+                (*wname).into(),
+                (*tname).into(),
+                best.scheme.to_string(),
+                format!("{:.4}", best.time * 1e3),
+                second.scheme.to_string(),
+                format!("{:.2}x", second.time / best.time.max(1e-12)),
             ]);
         }
     }
@@ -585,6 +641,32 @@ mod tests {
                 row[0]
             );
         }
+    }
+
+    #[test]
+    fn topology_crossover_flips_to_hierarchy() {
+        let t = topology_crossover();
+        let cell = |w: &str, topo: &str| {
+            t.rows
+                .iter()
+                .find(|r| r[0] == w && r[1] == topo)
+                .unwrap_or_else(|| panic!("missing cell {w}/{topo}"))[2]
+                .clone()
+        };
+        let flat = cell("group-clustered", "flat");
+        let hier = cell("group-clustered", "4x2 two-level");
+        let is_hier = |name: &str| {
+            let s = schemes::by_name(name, 8, 1, 64).expect("chosen scheme constructs");
+            s.dims().communication == schemes::CommPattern::Hierarchy
+        };
+        assert!(
+            !is_hier(&flat),
+            "flat mesh must pick a non-hierarchical scheme, got {flat}"
+        );
+        assert!(
+            is_hier(&hier),
+            "two-level 10x-slower-inter must pick a hierarchical scheme, got {hier}"
+        );
     }
 
     #[test]

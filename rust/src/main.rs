@@ -8,6 +8,7 @@
 //! Examples:
 //!   zen sim --model DeepFM --machines 16 --scheme zen --link tcp25
 //!   zen sim --model DeepFM --machines 16 --scheme auto --pipeline
+//!   zen sim --model DeepFM --scheme auto --topology 4x2:2,300/50,25
 //!   zen sim --model LSTM --machines 16 --scheme zen --pipeline --bucket-kb 256
 //!   zen sim --model DeepFM --machines 8 --scheme zen --transport channel
 //!   zen sim --model DeepFM --machines 4 --gpus 1 --scale 2048 --transport tcp
@@ -20,6 +21,13 @@
 //! plan (predicted vs transport-measured time) printed so a
 //! misprediction is visible. `--replan-threshold R` tunes the density
 //! hysteresis (default 0.25).
+//!
+//! `--topology NxG[:ia,ib/ea,eb]` replaces the flat mesh with a
+//! two-level cluster: N nodes × G ranks, per-link-class α–β (each pair
+//! as latency_µs,Gbps — intra then inter; defaults NVLink / `--link`).
+//! Every rank becomes a fabric endpoint, co-located frames ride the
+//! intra link, the planner prices candidates per class, and the plan
+//! table reports predicted vs measured time per link class.
 
 use zen::cluster::LinkKind;
 use zen::config::Args;
@@ -39,9 +47,10 @@ fn main() -> anyhow::Result<()> {
                 "usage: zen <sim|train|schemes> [--options]\n\
                  sim:   --model LSTM|DeepFM|NMT|BERT --machines N --scheme S|auto\n\
                         --link tcp25|rdma100 --transport sim|channel|tcp\n\
+                        --topology NxG[:ia,ib/ea,eb] (two-level cluster)\n\
                         --replan-threshold R (auto hysteresis, default 0.25)\n\
                  train: --shape tiny|paper_100m --workers N --scheme S|auto --steps N\n\
-                        --transport sim|channel|tcp --replan-threshold R"
+                        --transport sim|channel|tcp --topology NxG --replan-threshold R"
             );
             Ok(())
         }
@@ -65,6 +74,13 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     cfg.seed = args.get_u64("seed", 0xbeef);
     cfg.transport = args.transport("transport", TransportKind::Sim)?;
     cfg.replan_threshold = args.ratio("replan-threshold", cfg.replan_threshold)?;
+    if let Some(t) = args.topology("topology", cfg.link)? {
+        // The topology defines the fabric: machines/gpus follow it so
+        // throughput and reporting stay consistent.
+        cfg.machines = t.nodes;
+        cfg.gpus_per_machine = t.ranks_per_node;
+        cfg.topology = Some(t);
+    }
     // `--pipeline` may arrive as a bare flag or as `--pipeline=<bool>`;
     // an explicit false wins over the sub-option shorthands.
     let pipeline_requested = match args.get("pipeline") {
@@ -93,6 +109,9 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
         r.scheme,
         cfg.transport.name()
     );
+    if let Some(t) = &cfg.topology {
+        println!("  topology {}", t.describe());
+    }
     // In engine mode the first column is all-bucket communication (it
     // includes dense layers folded into buckets), not embedding-only.
     let sync_label = if cfg.pipeline.is_some() {
@@ -129,6 +148,7 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     // planner existed.
     if r.plan.iter().any(|p| p.predicted.is_some()) {
         println!("  plan:");
+        let two_level = cfg.topology.as_ref().map(|t| !t.is_flat()).unwrap_or(false);
         for p in &r.plan {
             match (p.predicted, p.misprediction()) {
                 (Some(pred), Some(mis)) => println!(
@@ -146,6 +166,26 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
                     p.measured * 1e3
                 ),
             }
+            // Per-link-class split: the predicted-vs-measured row for
+            // each physical link of the two-level cluster.
+            if two_level {
+                let [m_intra, m_inter] = p.measured_by_class;
+                match p.predicted_by_class {
+                    Some([p_intra, p_inter]) => println!(
+                        "      intra predicted {:>8.3}ms measured {:>8.3}ms | \
+                         inter predicted {:>8.3}ms measured {:>8.3}ms",
+                        p_intra * 1e3,
+                        m_intra * 1e3,
+                        p_inter * 1e3,
+                        m_inter * 1e3
+                    ),
+                    None => println!(
+                        "      intra measured {:>8.3}ms | inter measured {:>8.3}ms",
+                        m_intra * 1e3,
+                        m_inter * 1e3
+                    ),
+                }
+            }
         }
     }
     println!("  throughput {:.0} samples/s", r.throughput);
@@ -161,22 +201,28 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.lr = args.get_f64("lr", cfg.lr as f64) as f32;
     cfg.seed = args.get_u64("seed", cfg.seed);
     cfg.replan_threshold = args.ratio("replan-threshold", cfg.replan_threshold)?;
-    let workers = args.get_usize("workers", 4);
     let steps = args.get_usize("steps", 50);
     let scheme = args.get_or("scheme", "zen");
     let link = args.link("link", LinkKind::Tcp25);
     let transport = args.transport("transport", TransportKind::Sim)?;
+    // `--topology NxG` overrides `--workers`: one worker per rank.
+    let topo = match args.topology("topology", link)? {
+        Some(t) => t,
+        None => zen::cluster::Topology::flat(args.get_usize("workers", 4), link),
+    };
+    let workers = topo.endpoints();
     let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     println!(
-        "training {}×{} embedding ({} params) + MLP, {} workers, scheme={}, transport={}",
+        "training {}×{} embedding ({} params) + MLP, {} workers ({}), scheme={}, transport={}",
         cfg.vocab,
         cfg.dim,
         cfg.emb_params() + cfg.mlp_params(),
         workers,
+        topo.describe(),
         scheme,
         transport.name()
     );
-    let mut t = LmTrainer::with_transport(cfg, workers, scheme, link, transport, &artifacts)?;
+    let mut t = LmTrainer::with_topology(cfg, scheme, topo, transport, &artifacts)?;
     let log = t.run(steps, args.get_usize("log-every", 10), true)?;
     println!(
         "done: final loss {:.4}, total emb comm {:.1}ms (virtual), compute {:.1}s (wall)",

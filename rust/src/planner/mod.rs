@@ -37,7 +37,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::cluster::LinkKind;
+use crate::cluster::Topology;
 use crate::schemes::{self, SyncScheme};
 use crate::tensor::CooTensor;
 
@@ -68,10 +68,11 @@ pub trait Planner: Send + Sync {
 
     /// Plan the synchronization of one bucket. `label` keys the plan
     /// cache (stable across iterations); `inputs` holds one tensor per
-    /// machine; `link` is the link of the `Network` the caller will
-    /// execute on — cost planners price against it, so planning and
-    /// execution can never disagree on bandwidth or latency.
-    fn plan(&self, label: &str, inputs: &[CooTensor], link: LinkKind) -> PlannedSync;
+    /// machine; `topo` is the topology of the `Network` the caller will
+    /// execute on — cost planners price against its per-class links, so
+    /// planning and execution can never disagree on bandwidth, latency,
+    /// or placement.
+    fn plan(&self, label: &str, inputs: &[CooTensor], topo: &Topology) -> PlannedSync;
 }
 
 /// The pre-planner behavior as a `Planner`: every bucket runs the same
@@ -102,7 +103,7 @@ impl Planner for FixedPlanner {
         self.scheme.name().to_string()
     }
 
-    fn plan(&self, _label: &str, _inputs: &[CooTensor], _link: LinkKind) -> PlannedSync {
+    fn plan(&self, _label: &str, _inputs: &[CooTensor], _topo: &Topology) -> PlannedSync {
         PlannedSync {
             scheme: self.scheme.clone(),
             plan: None,
@@ -194,7 +195,7 @@ impl Planner for CostPlanner {
         "auto".to_string()
     }
 
-    fn plan(&self, label: &str, inputs: &[CooTensor], link: LinkKind) -> PlannedSync {
+    fn plan(&self, label: &str, inputs: &[CooTensor], topo: &Topology) -> PlannedSync {
         assert!(!inputs.is_empty());
         let n = inputs.len();
         // The candidates (Zen's hasher in particular) were built for a
@@ -216,9 +217,10 @@ impl Planner for CostPlanner {
             } else {
                 0.0
             };
-            // A plan priced for a different link is stale regardless of
-            // density (the caller may rebuild its Network between runs).
-            if drift <= self.cfg.replan_threshold && cached.planned_link == link {
+            // A plan priced for a different topology (links or rank
+            // placement) is stale regardless of density (the caller may
+            // rebuild its Network between runs).
+            if drift <= self.cfg.replan_threshold && cached.planned_topo == *topo {
                 return PlannedSync {
                     scheme: self.scheme_for(cached.chosen),
                     plan: Some(cached),
@@ -232,7 +234,7 @@ impl Planner for CostPlanner {
         // labels, so no duplicated work in practice.
         let stats = MeasuredStats::from_tensors(inputs, &[n], &[self.cfg.block_len]);
         let m = inputs[0].dense_len as f64;
-        let plan = Arc::new(plan_bucket(label, m, n, link, &self.cfg, stats));
+        let plan = Arc::new(plan_bucket(label, m, n, topo, &self.cfg, stats));
         self.profiles.fetch_add(1, Ordering::Relaxed);
         self.cache
             .lock()
@@ -266,6 +268,7 @@ pub fn by_name(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::LinkKind;
     use crate::workload::random_uniform_inputs;
 
     #[test]
@@ -275,7 +278,7 @@ mod tests {
         assert_eq!(p.scheme_label(), "Zen");
         assert_eq!(p.name(), "fixed:Zen");
         let inputs = random_uniform_inputs(1, 4, 1024, 0.05);
-        let planned = p.plan("anything", &inputs, LinkKind::Tcp25);
+        let planned = p.plan("anything", &inputs, &Topology::flat(4, LinkKind::Tcp25));
         assert_eq!(planned.scheme.name(), "Zen");
         assert!(planned.plan.is_none());
         assert!(!planned.replanned);
@@ -285,10 +288,11 @@ mod tests {
     fn auto_planner_caches_per_label() {
         let p = CostPlanner::new(4, 7, 256, PlanConfig::default());
         let inputs = random_uniform_inputs(2, 4, 4096, 0.03);
-        let a = p.plan("bucket0", &inputs, LinkKind::Tcp25);
+        let tcp = Topology::flat(4, LinkKind::Tcp25);
+        let a = p.plan("bucket0", &inputs, &tcp);
         assert!(a.replanned);
         assert_eq!(p.profile_count(), 1);
-        let b = p.plan("bucket0", &inputs, LinkKind::Tcp25);
+        let b = p.plan("bucket0", &inputs, &tcp);
         assert!(!b.replanned, "same density → cached plan");
         assert_eq!(p.profile_count(), 1, "profiling is O(warm-up)");
         assert_eq!(
@@ -296,28 +300,34 @@ mod tests {
             b.plan.as_ref().unwrap().chosen
         );
         // a different link invalidates the cached plan (re-priced)
-        let c = p.plan("bucket0", &inputs, LinkKind::Rdma100);
+        let c = p.plan("bucket0", &inputs, &Topology::flat(4, LinkKind::Rdma100));
         assert!(c.replanned, "new link → stale plan");
         assert_eq!(p.profile_count(), 2);
-        // a different bucket label profiles once more
-        p.plan("bucket1", &inputs, LinkKind::Tcp25);
+        // so does a different placement of the same endpoints
+        let hier = Topology::two_level(2, 2, LinkKind::NvLink, LinkKind::Rdma100);
+        let d = p.plan("bucket0", &inputs, &hier);
+        assert!(d.replanned, "new placement → stale plan");
         assert_eq!(p.profile_count(), 3);
+        // a different bucket label profiles once more
+        p.plan("bucket1", &inputs, &tcp);
+        assert_eq!(p.profile_count(), 4);
         assert_eq!(p.plans().len(), 2);
     }
 
     #[test]
     fn density_drift_triggers_replan() {
         let p = CostPlanner::new(4, 7, 256, PlanConfig::default());
+        let tcp = Topology::flat(4, LinkKind::Tcp25);
         let sparse = random_uniform_inputs(3, 4, 4096, 0.01);
-        p.plan("b", &sparse, LinkKind::Tcp25);
+        p.plan("b", &sparse, &tcp);
         assert_eq!(p.profile_count(), 1);
         // within hysteresis: no re-plan
         let nudged = random_uniform_inputs(4, 4, 4096, 0.011);
-        p.plan("b", &nudged, LinkKind::Tcp25);
+        p.plan("b", &nudged, &tcp);
         assert_eq!(p.profile_count(), 1);
         // 4× density: outside hysteresis → re-profile and re-plan
         let denser = random_uniform_inputs(5, 4, 4096, 0.04);
-        let r = p.plan("b", &denser, LinkKind::Tcp25);
+        let r = p.plan("b", &denser, &tcp);
         assert!(r.replanned);
         assert_eq!(p.profile_count(), 2);
     }

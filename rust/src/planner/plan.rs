@@ -2,23 +2,26 @@
 //!
 //! [`plan_bucket`] evaluates the Appendix-B [`CostModel`] for every
 //! candidate in [`crate::schemes::PLANNER_CANDIDATES`] — given the
-//! bucket's dense length, the machine count, the link's bandwidth and
-//! per-stage latency, and a [`SparsityStats`] — and emits the argmin as
-//! a [`BucketPlan`]. The plan keeps the full ranked cost table and the
-//! stats it was derived from, so mispredictions are inspectable, and it
-//! records the density it was planned at for the hysteresis check in
-//! [`super::CostPlanner`].
+//! bucket's dense length, the machine count, the execution
+//! [`Topology`] (per-link-class bandwidth and per-stage latency), and
+//! a [`SparsityStats`] — and emits the argmin as a [`BucketPlan`]. The
+//! plan keeps the full ranked cost table and the stats it was derived
+//! from, so mispredictions are inspectable, and it records the density
+//! it was planned at for the hysteresis check in
+//! [`super::CostPlanner`]. On a two-level topology the candidates are
+//! priced per link class, so the argmin can flip toward hierarchical
+//! schemes exactly where slow inter-node links make them win.
 
-use crate::analysis::costmodel::{CostModel, SparsityStats};
-use crate::cluster::LinkKind;
+use crate::analysis::costmodel::{ClassedTime, CostModel, SparsityStats, TopoCost};
+use crate::cluster::{LinkClass, Topology};
 
 use super::measure::MeasuredStats;
 
-/// Planner configuration. Deliberately *without* a link: the cost model
-/// always prices against the link of the `Network` the caller is about
-/// to execute on (threaded through [`super::Planner::plan`]), so
-/// planning and execution cannot silently disagree on bandwidth or
-/// latency.
+/// Planner configuration. Deliberately *without* a link or topology:
+/// the cost model always prices against the [`Topology`] of the
+/// `Network` the caller is about to execute on (threaded through
+/// [`super::Planner::plan`]), so planning and execution cannot silently
+/// disagree on bandwidth, latency, or rank placement.
 #[derive(Clone, Debug)]
 pub struct PlanConfig {
     /// Relative drift of measured mean density that invalidates a cached
@@ -62,14 +65,22 @@ pub struct BucketPlan {
     pub predicted_bw: f64,
     /// Latency part of the prediction (α × stages; size-invariant).
     pub predicted_alpha: f64,
+    /// Per-link-class bandwidth part of the prediction (`[intra,
+    /// inter]`; the flat model predicts `[0, predicted_bw]`). Each
+    /// class's value is the sum of that class's per-stage α–β times
+    /// with α zeroed, so it rescales with tensor size like
+    /// `predicted_bw`.
+    pub predicted_class_bw: [f64; 2],
+    /// Per-link-class latency part (`[intra, inter]`; size-invariant).
+    pub predicted_class_alpha: [f64; 2],
     /// Every candidate's prediction, sorted ascending by time.
     pub costs: Vec<SchemeCost>,
     /// Mean per-worker density the plan was derived at (hysteresis
     /// anchor).
     pub planned_d1: f64,
-    /// Link the plan was priced against — a cached plan is only valid
-    /// for the network it was made for.
-    pub planned_link: LinkKind,
+    /// Topology the plan was priced against — a cached plan is only
+    /// valid for the placement and links it was made for.
+    pub planned_topo: Topology,
     /// The measured statistics that drove the prediction.
     pub stats: MeasuredStats,
 }
@@ -90,24 +101,49 @@ impl BucketPlan {
         self.predicted_bw * scale + self.predicted_alpha
     }
 
+    /// Per-link-class prediction at `scale ×` the planned tensor size
+    /// (`[intra, inter]`), the classed twin of
+    /// [`predicted_at_scale`](BucketPlan::predicted_at_scale).
+    pub fn predicted_class_at_scale(&self, scale: f64) -> [f64; 2] {
+        [
+            self.predicted_class_bw[0] * scale + self.predicted_class_alpha[0],
+            self.predicted_class_bw[1] * scale + self.predicted_class_alpha[1],
+        ]
+    }
+
     /// The runner-up candidate (second-smallest predicted time), if any.
     pub fn runner_up(&self) -> Option<&SchemeCost> {
         self.costs.get(1)
     }
 }
 
+/// Build the cost model a bucket is priced with: inter-class bandwidth
+/// and latency as the base α–β pair, plus per-class pricing when the
+/// topology is two-level. One constructor for ranking and splitting, so
+/// the two can never disagree.
+fn cost_model<'a, S: SparsityStats>(
+    m: f64,
+    n: usize,
+    topo: &Topology,
+    stats: &'a S,
+) -> CostModel<'a, S> {
+    CostModel::new(m, n, topo.inter.bandwidth_bps() / 32.0, stats)
+        .with_latency(topo.inter.latency())
+        .with_topology(TopoCost::from_topology(topo))
+}
+
 /// Evaluate the cost model for every planner candidate and return the
 /// ranked cost table (ascending). `m` is the bucket's dense length in
-/// values.
+/// values; `topo` is the execution topology (flat via
+/// [`Topology::flat`] reproduces the historical single-link ranking).
 pub fn rank_candidates<S: SparsityStats>(
     m: f64,
     n: usize,
-    link: LinkKind,
+    topo: &Topology,
     block_len: usize,
     stats: &S,
 ) -> Vec<SchemeCost> {
-    let bandwidth_values = link.bandwidth_bps() / 32.0;
-    let cm = CostModel::new(m, n, bandwidth_values, stats).with_latency(link.latency());
+    let cm = cost_model(m, n, topo, stats);
     let mut costs: Vec<SchemeCost> = crate::schemes::PLANNER_CANDIDATES
         .iter()
         .map(|&name| SchemeCost {
@@ -122,35 +158,44 @@ pub fn rank_candidates<S: SparsityStats>(
 }
 
 /// Plan one bucket from measured statistics: the cost-model argmin over
-/// all candidates (priced for `link`), packaged with its audit trail.
+/// all candidates (priced for `topo`), packaged with its audit trail.
 pub fn plan_bucket(
     label: &str,
     m: f64,
     n: usize,
-    link: LinkKind,
+    topo: &Topology,
     cfg: &PlanConfig,
     stats: MeasuredStats,
 ) -> BucketPlan {
-    let costs = rank_candidates(m, n, link, cfg.block_len, &stats);
+    let costs = rank_candidates(m, n, topo, cfg.block_len, &stats);
     let best = costs.first().expect("non-empty candidate list");
     let chosen = best.scheme;
     let predicted_time = best.time;
-    // Split the winning prediction into its rescalable and fixed parts.
-    let bandwidth_values = link.bandwidth_bps() / 32.0;
-    let cm = CostModel::new(m, n, bandwidth_values, &stats);
-    let predicted_bw = cm
-        .time_for(chosen, cfg.block_len)
+    // Split the winning prediction into its rescalable and fixed parts,
+    // total and per class: re-price with every α zeroed, the remainder
+    // is latency.
+    let full: ClassedTime = cost_model(m, n, topo, &stats)
+        .time_for_by_class(chosen, cfg.block_len)
         .expect("chosen candidate has a closed form");
-    let predicted_alpha = predicted_time - predicted_bw;
+    let bw_only: ClassedTime = CostModel::new(m, n, topo.inter.bandwidth_bps() / 32.0, &stats)
+        .with_topology(TopoCost::from_topology(topo).without_latency())
+        .time_for_by_class(chosen, cfg.block_len)
+        .expect("chosen candidate has a closed form");
+    debug_assert_eq!(LinkClass::Intra.idx(), 0);
     BucketPlan {
         label: label.to_string(),
         chosen,
         predicted_time,
-        predicted_bw,
-        predicted_alpha,
+        predicted_bw: bw_only.total,
+        predicted_alpha: predicted_time - bw_only.total,
+        predicted_class_bw: [bw_only.intra, bw_only.inter],
+        predicted_class_alpha: [
+            (full.intra - bw_only.intra).max(0.0),
+            (full.inter - bw_only.inter).max(0.0),
+        ],
         costs,
         planned_d1: stats.d1,
-        planned_link: link,
+        planned_topo: topo.clone(),
         stats,
     }
 }
@@ -158,6 +203,7 @@ pub fn plan_bucket(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::LinkKind;
     use crate::workload::random_uniform_inputs;
 
     fn measured(n: usize, density: f64) -> MeasuredStats {
@@ -168,8 +214,9 @@ mod tests {
     #[test]
     fn ranks_every_candidate_ascending() {
         let stats = measured(8, 0.02);
+        let topo = Topology::flat(8, LinkKind::Tcp25);
         let plan =
-            plan_bucket("b0", (1 << 14) as f64, 8, LinkKind::Tcp25, &PlanConfig::default(), stats);
+            plan_bucket("b0", (1 << 14) as f64, 8, &topo, &PlanConfig::default(), stats);
         assert_eq!(plan.costs.len(), crate::schemes::PLANNER_CANDIDATES.len());
         assert!(plan
             .costs
@@ -199,10 +246,13 @@ mod tests {
             })
             .collect();
         let stats = MeasuredStats::from_tensors(&dense, &[4], &[256]);
-        let link = LinkKind::Custom(25_000_000_000, 0);
-        let plan = plan_bucket("dense", m as f64, 4, link, &PlanConfig::default(), stats);
+        let topo = Topology::flat(4, LinkKind::Custom(25_000_000_000, 0));
+        let plan = plan_bucket("dense", m as f64, 4, &topo, &PlanConfig::default(), stats);
         assert_eq!(plan.chosen, "allreduce");
-        assert_eq!(plan.planned_link, link);
+        assert_eq!(plan.planned_topo, topo);
+        // flat plans put the whole prediction in the inter class
+        assert_eq!(plan.predicted_class_bw[0], 0.0);
+        assert!((plan.predicted_class_bw[1] - plan.predicted_bw).abs() < 1e-15);
     }
 
     #[test]
@@ -212,7 +262,7 @@ mod tests {
             "sparse",
             (1 << 22) as f64,
             8,
-            LinkKind::Tcp25,
+            &Topology::flat(8, LinkKind::Tcp25),
             &PlanConfig::default(),
             stats,
         );
@@ -222,11 +272,35 @@ mod tests {
     #[test]
     fn scale_split_reconstructs_prediction() {
         let stats = measured(4, 0.05);
+        let topo = Topology::flat(4, LinkKind::Tcp25);
         let plan =
-            plan_bucket("b", (1 << 14) as f64, 4, LinkKind::Tcp25, &PlanConfig::default(), stats);
+            plan_bucket("b", (1 << 14) as f64, 4, &topo, &PlanConfig::default(), stats);
         assert!((plan.predicted_at_scale(1.0) - plan.predicted_time).abs() < 1e-15);
         let doubled = plan.predicted_at_scale(2.0);
         assert!(doubled > plan.predicted_time);
         assert!((doubled - (2.0 * plan.predicted_bw + plan.predicted_alpha)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn two_level_plan_records_class_split() {
+        let stats = measured(8, 0.02);
+        let topo = Topology::two_level(
+            4,
+            2,
+            LinkKind::Custom(250_000_000_000, 0),
+            LinkKind::Custom(25_000_000_000, 0),
+        );
+        let plan =
+            plan_bucket("t", (1 << 16) as f64, 8, &topo, &PlanConfig::default(), stats);
+        assert_eq!(plan.planned_topo, topo);
+        let classes = plan.predicted_class_at_scale(1.0);
+        // zero-latency links: the class bandwidth sums bracket the total
+        assert!(classes[1] > 0.0, "inter class carries traffic");
+        assert!(
+            plan.predicted_time <= classes[0] + classes[1] + 1e-12,
+            "total {} vs classes {classes:?}",
+            plan.predicted_time
+        );
+        assert!(plan.predicted_time + 1e-12 >= classes[0].max(classes[1]));
     }
 }

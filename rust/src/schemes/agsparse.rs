@@ -12,6 +12,7 @@
 //! AGsparse degrades past ~40 GPUs in Fig 7.
 
 use super::*;
+use crate::util::largest_pow2_at_most;
 
 /// Which all-gather topology to use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -61,7 +62,7 @@ impl SyncScheme for AgSparse {
         inputs: &[CooTensor],
         tx: &mut dyn Transport,
         _scratch: &mut SyncScratch,
-    ) -> SyncResult {
+    ) -> Result<SyncResult, crate::wire::WireError> {
         let n = inputs.len();
         assert_eq!(n, tx.endpoints());
 
@@ -71,7 +72,7 @@ impl SyncScheme for AgSparse {
                 for (i, t) in inputs.iter().enumerate() {
                     for j in 0..n {
                         if j != i {
-                            tx.send(i, j, push_frame(i, t)).expect("ag-p2p send");
+                            tx.send(i, j, push_frame(i, t))?;
                         }
                     }
                 }
@@ -79,11 +80,11 @@ impl SyncScheme for AgSparse {
                 for j in 0..n {
                     let mut got = Vec::with_capacity(n - 1);
                     for _ in 0..n.saturating_sub(1) {
-                        got.push(expect_push(tx.recv(j).expect("ag-p2p recv")).1);
+                        got.push(expect_push(tx.recv(j)?).1);
                     }
                     outputs.push(merge_with_own(&got, &inputs[j]));
                 }
-                tx.end_stage("ag-p2p").expect("ag-p2p stage");
+                tx.end_stage("ag-p2p")?;
                 outputs
             }
             AgPattern::Ring => {
@@ -99,54 +100,85 @@ impl SyncScheme for AgSparse {
                         } else {
                             received[i].last().expect("ring holds the last tensor")
                         };
-                        tx.send(i, (i + 1) % n, push_frame(origin, t))
-                            .expect("ag-ring send");
+                        tx.send(i, (i + 1) % n, push_frame(origin, t))?;
                     }
                     for (i, store) in received.iter_mut().enumerate() {
-                        let (from, t) = expect_push(tx.recv(i).expect("ag-ring recv"));
+                        let (from, t) = expect_push(tx.recv(i)?);
                         assert_eq!(from as usize, (i + n - 1 - s) % n, "ring origin");
                         store.push(t);
                     }
-                    tx.end_stage("ag-ring").expect("ag-ring stage");
+                    tx.end_stage("ag-ring")?;
                 }
                 (0..n)
                     .map(|i| merge_with_own(&received[i], &inputs[i]))
                     .collect()
             }
             AgPattern::Hierarchy => {
-                // Recursive doubling: stage s exchanges the 2^s tensors
-                // gathered so far with the partner at distance 2^s (the
-                // exchanged sets are disjoint blocks, so no dedup).
-                assert!(n.is_power_of_two(), "hierarchy pattern needs 2^k nodes");
+                // Recursive doubling over the largest power-of-two core,
+                // with a SparCML-style fold for the excess nodes: each
+                // excess node core+j first folds its tensor into core
+                // node j, the core exchanges *sets* of original tensors
+                // at doubling distances (disjoint blocks, so no dedup),
+                // and the final aggregate folds back out. Power-of-two n
+                // keeps the classic scheduled (the fold stages vanish),
+                // which the pow-2 tests pin as the oracle.
+                let core = largest_pow2_at_most(n);
+                let excess = n - core;
                 let mut sets: Vec<Vec<CooTensor>> =
                     inputs.iter().map(|t| vec![t.clone()]).collect();
+                if excess > 0 {
+                    for j in 0..excess {
+                        let src = core + j;
+                        tx.send(src, j, push_frame(src, &inputs[src]))?;
+                    }
+                    for (j, set) in sets.iter_mut().enumerate().take(excess) {
+                        set.push(expect_push(tx.recv(j)?).1);
+                    }
+                    tx.end_stage("ag-hier-fold-in")?;
+                }
                 let mut dist = 1;
-                while dist < n {
-                    for (i, set) in sets.iter().enumerate() {
+                while dist < core {
+                    // Set sizes differ once a fold happened: snapshot
+                    // them so each receiver knows its partner's count.
+                    let sizes: Vec<usize> = sets[..core].iter().map(|s| s.len()).collect();
+                    for (i, set) in sets.iter().enumerate().take(core) {
                         let peer = i ^ dist;
                         for t in set {
-                            tx.send(i, peer, push_frame(i, t)).expect("ag-hier send");
+                            tx.send(i, peer, push_frame(i, t))?;
                         }
                     }
-                    for i in 0..n {
-                        for _ in 0..dist {
-                            let t = expect_push(tx.recv(i).expect("ag-hier recv")).1;
+                    for i in 0..core {
+                        for _ in 0..sizes[i ^ dist] {
+                            let t = expect_push(tx.recv(i)?).1;
                             sets[i].push(t);
                         }
                     }
-                    tx.end_stage("ag-hier").expect("ag-hier stage");
+                    tx.end_stage("ag-hier")?;
                     dist <<= 1;
                 }
-                sets.into_iter()
-                    .map(|set| CooTensor::merge_all(&set))
-                    .collect()
+                // Core nodes hold every tensor; aggregate one-shot, then
+                // fold the (much smaller) aggregate back out.
+                let mut outputs: Vec<CooTensor> = sets[..core]
+                    .iter()
+                    .map(|set| CooTensor::merge_all(set))
+                    .collect();
+                if excess > 0 {
+                    for (j, out) in outputs.iter().enumerate().take(excess) {
+                        tx.send(j, core + j, push_frame(j, out))?;
+                    }
+                    for j in 0..excess {
+                        outputs.push(expect_push(tx.recv(core + j)?).1);
+                    }
+                    tx.end_stage("ag-hier-fold-out")?;
+                }
+                outputs
             }
         };
 
-        SyncResult {
+        Ok(SyncResult {
             outputs,
             report: tx.take_report(),
-        }
+        })
     }
 }
 
@@ -201,7 +233,37 @@ mod tests {
         let net = Network::new(n, LinkKind::Tcp25);
         let r = AgSparse::new(AgPattern::Hierarchy).sync(&inputs, &net);
         verify_outputs(&r, &inputs);
-        assert_eq!(r.report.stages.len(), 3); // log2(8)
+        assert_eq!(r.report.stages.len(), 3); // log2(8), no fold stages
+    }
+
+    #[test]
+    fn hierarchy_non_power_of_two_correct() {
+        // The old schedule asserted 2^k nodes; the folded one must be
+        // exact at every machine count, with log2(core) + 2 stages.
+        for n in [3usize, 5, 6, 7, 12] {
+            let inputs = overlapping_inputs(11 + n as u64, n, 2500, 40, 30);
+            let net = Network::new(n, LinkKind::Tcp25);
+            let r = AgSparse::new(AgPattern::Hierarchy).sync(&inputs, &net);
+            verify_outputs(&r, &inputs);
+            let core = largest_pow2_at_most(n);
+            assert_eq!(
+                r.report.stages.len(),
+                core.trailing_zeros() as usize + 2,
+                "n={n}: doubling over the pow-2 core plus fold-in/out"
+            );
+        }
+    }
+
+    #[test]
+    fn hierarchy_pow2_matches_p2p_traffic() {
+        // The pow-2 oracle: recursive doubling moves exactly the p2p
+        // all-gather's n(n−1) frames, only staged differently.
+        let n = 4;
+        let inputs = overlapping_inputs(6, n, 1000, 30, 10);
+        let net = Network::new(n, LinkKind::Tcp25);
+        let p2p = AgSparse::new(AgPattern::PointToPoint).sync(&inputs, &net);
+        let hier = AgSparse::new(AgPattern::Hierarchy).sync(&inputs, &net);
+        assert_eq!(p2p.report.total_bytes(), hier.report.total_bytes());
     }
 
     #[test]

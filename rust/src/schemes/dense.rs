@@ -54,16 +54,16 @@ impl SyncScheme for DenseAllReduce {
         inputs: &[CooTensor],
         tx: &mut dyn Transport,
         _scratch: &mut SyncScratch,
-    ) -> SyncResult {
+    ) -> Result<SyncResult, crate::wire::WireError> {
         let n = inputs.len();
         assert_eq!(n, tx.endpoints());
         let dense_len = inputs[0].dense_len;
         if n == 1 {
             let out = reference_sum(inputs).to_coo();
-            return SyncResult {
+            return Ok(SyncResult {
                 outputs: vec![out],
                 report: tx.take_report(),
-            };
+            });
         }
 
         // Chunk c covers [lo(c), hi(c)); chunks partition the range, so
@@ -93,12 +93,11 @@ impl SyncScheme for DenseAllReduce {
                         offset: lo(c) as u64,
                         values: chunk,
                     },
-                )
-                .expect("allreduce reduce-scatter send");
+                )?;
             }
             for (i, slot) in cur.iter_mut().enumerate() {
                 let c = (i + n - 1 - s) % n;
-                match tx.recv(i).expect("allreduce reduce-scatter recv") {
+                match tx.recv(i)? {
                     Message::DenseChunk {
                         offset, mut values, ..
                     } => {
@@ -110,7 +109,7 @@ impl SyncScheme for DenseAllReduce {
                     other => panic!("unexpected frame during reduce-scatter: {other:?}"),
                 }
             }
-            tx.end_stage("reduce-scatter").expect("reduce-scatter stage");
+            tx.end_stage("reduce-scatter")?;
         }
 
         // Node i now holds the fully reduced chunk (i + 1) mod n.
@@ -130,12 +129,11 @@ impl SyncScheme for DenseAllReduce {
                         offset: lo(c) as u64,
                         values: chunk,
                     },
-                )
-                .expect("allreduce all-gather send");
+                )?;
             }
             for (i, slot) in cur.iter_mut().enumerate() {
                 let c = (i + n - s) % n;
-                match tx.recv(i).expect("allreduce all-gather recv") {
+                match tx.recv(i)? {
                     Message::DenseChunk { offset, values, .. } => {
                         assert_eq!(offset as usize, lo(c), "ring chunk out of order");
                         if i == 0 {
@@ -146,14 +144,14 @@ impl SyncScheme for DenseAllReduce {
                     other => panic!("unexpected frame during all-gather: {other:?}"),
                 }
             }
-            tx.end_stage("all-gather").expect("all-gather stage");
+            tx.end_stage("all-gather")?;
         }
 
         let out = crate::tensor::DenseTensor::from_values(full).to_coo();
-        SyncResult {
+        Ok(SyncResult {
             outputs: vec![out; n],
             report: tx.take_report(),
-        }
+        })
     }
 }
 

@@ -35,7 +35,7 @@ pub use zen::{Zen, ZenIndexFormat};
 use crate::cluster::{CommReport, Network};
 use crate::hashing::{HashBitmapPayload, PartitionScratch};
 use crate::tensor::{CooSlice, CooTensor};
-use crate::wire::{FrameRef, SimTransport, Transport};
+use crate::wire::{FrameRef, SimTransport, Transport, WireError};
 
 /// Table 2 dimension values.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -198,7 +198,10 @@ pub trait SyncScheme: Send + Sync {
         scratch: &mut SyncScratch,
     ) -> SyncResult {
         let mut tx = SimTransport::new(net.clone());
+        // The in-process virtual-time backend has no peer to lose; an
+        // error here is a scheme protocol bug, so the panic is correct.
         self.sync_transport(inputs, &mut tx, scratch)
+            .expect("virtual-time sync failed (scheme protocol bug)")
     }
 
     /// Execute the scheme's protocol over an explicit transport backend
@@ -206,14 +209,18 @@ pub trait SyncScheme: Send + Sync {
     /// and receives real [`crate::wire::codec`] frames; the transport
     /// observes the bytes and produces the [`CommReport`] uniformly.
     ///
-    /// Panics on transport failure (an in-flight synchronization cannot
-    /// recover from a torn-down data plane) and on protocol violations.
+    /// Transport failures surface as `Err`: a hung-up channel or closed
+    /// socket peer yields [`WireError::Disconnected`] mid-protocol
+    /// instead of aborting the process, and an oversized frame is
+    /// rejected as [`WireError::FrameTooLarge`]. Protocol violations
+    /// (wrong frame kind mid-stage, mismatched endpoint counts) are
+    /// scheme bugs and still panic.
     fn sync_transport(
         &self,
         inputs: &[CooTensor],
         tx: &mut dyn Transport,
         scratch: &mut SyncScratch,
-    ) -> SyncResult;
+    ) -> Result<SyncResult, WireError>;
 }
 
 /// Reference aggregation: dense element-wise sum of all inputs.

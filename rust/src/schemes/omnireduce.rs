@@ -33,7 +33,7 @@ fn send_block_tensor(
     from: usize,
     bt: &BlockTensor,
     buf: &mut Vec<f32>,
-) {
+) -> Result<(), crate::wire::WireError> {
     buf.clear();
     for block in &bt.blocks {
         buf.extend_from_slice(block);
@@ -49,7 +49,6 @@ fn send_block_tensor(
             values: &buf[..],
         },
     )
-    .expect("omnireduce send");
 }
 
 fn expect_blocks(msg: Message, block_len: usize) -> (u32, BlockTensor) {
@@ -91,7 +90,7 @@ impl SyncScheme for OmniReduce {
         inputs: &[CooTensor],
         tx: &mut dyn Transport,
         scratch: &mut SyncScratch,
-    ) -> SyncResult {
+    ) -> Result<SyncResult, crate::wire::WireError> {
         let n = inputs.len();
         assert_eq!(n, tx.endpoints());
         let dense_len = inputs[0].dense_len;
@@ -110,7 +109,7 @@ impl SyncScheme for OmniReduce {
                 if w == p {
                     own[p] = Some(blocks);
                 } else if blocks.num_blocks() > 0 {
-                    send_block_tensor(tx, w, p, w, &blocks, &mut scratch.block_values);
+                    send_block_tensor(tx, w, p, w, &blocks, &mut scratch.block_values)?;
                     expected[p] += 1;
                 }
             }
@@ -121,15 +120,12 @@ impl SyncScheme for OmniReduce {
         for p in 0..n {
             let mut acc = own[p].take().expect("own block shard present");
             for _ in 0..expected[p] {
-                let (_, bt) = expect_blocks(
-                    tx.recv(p).expect("omnireduce push recv"),
-                    self.block_len,
-                );
+                let (_, bt) = expect_blocks(tx.recv(p)?, self.block_len);
                 acc = acc.merge(&bt);
             }
             aggregated.push(acc);
         }
-        tx.end_stage("push").expect("push stage");
+        tx.end_stage("push")?;
 
         // Pull: aggregator p broadcasts its aggregated block tensor —
         // flattened once per aggregator, then framed to every recipient
@@ -155,8 +151,7 @@ impl SyncScheme for OmniReduce {
                             block_ids: &agg.block_ids,
                             values: &scratch.block_values,
                         },
-                    )
-                    .expect("omnireduce pull send");
+                    )?;
                     expected[w] += 1;
                 }
             }
@@ -168,20 +163,17 @@ impl SyncScheme for OmniReduce {
             let mut parts: Vec<(u32, CooTensor)> = Vec::with_capacity(n);
             parts.push((lo(w), aggregated[w].to_dense().to_coo()));
             for _ in 0..expected[w] {
-                let (from, bt) = expect_blocks(
-                    tx.recv(w).expect("omnireduce pull recv"),
-                    self.block_len,
-                );
+                let (from, bt) = expect_blocks(tx.recv(w)?, self.block_len);
                 parts.push((lo(from as usize), bt.to_dense().to_coo()));
             }
             outputs.push(CooTensor::concat_ranges(&parts, dense_len));
         }
-        tx.end_stage("pull").expect("pull stage");
+        tx.end_stage("pull")?;
 
-        SyncResult {
+        Ok(SyncResult {
             outputs,
             report: tx.take_report(),
-        }
+        })
     }
 }
 

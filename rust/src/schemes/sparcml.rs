@@ -44,18 +44,18 @@ impl SyncScheme for SparCml {
         inputs: &[CooTensor],
         tx: &mut dyn Transport,
         _scratch: &mut SyncScratch,
-    ) -> SyncResult {
+    ) -> Result<SyncResult, crate::wire::WireError> {
         let n = inputs.len();
         assert_eq!(n, tx.endpoints());
         if n == 1 {
-            return SyncResult {
+            return Ok(SyncResult {
                 outputs: vec![inputs[0].clone()],
                 report: tx.take_report(),
-            };
+            });
         }
 
         // Largest power of two ≤ n.
-        let core = 1usize << (usize::BITS - 1 - n.leading_zeros());
+        let core = crate::util::largest_pow2_at_most(n);
         let excess = n - core;
         // Current partial aggregate per node.
         let mut partial: Vec<CooTensor> = inputs.to_vec();
@@ -64,14 +64,13 @@ impl SyncScheme for SparCml {
         if excess > 0 {
             for j in 0..excess {
                 let src = core + j;
-                tx.send(src, j, push_frame(src, &partial[src]))
-                    .expect("sparcml fold-in send");
+                tx.send(src, j, push_frame(src, &partial[src]))?;
             }
             for j in 0..excess {
-                let (_, t) = expect_push(tx.recv(j).expect("sparcml fold-in recv"));
+                let (_, t) = expect_push(tx.recv(j)?);
                 partial[j] = partial[j].merge(&t);
             }
-            tx.end_stage("fold-in").expect("fold-in stage");
+            tx.end_stage("fold-in")?;
         }
 
         // Recursive doubling within the core: all sends of a stage leave
@@ -79,35 +78,33 @@ impl SyncScheme for SparCml {
         let mut dist = 1usize;
         while dist < core {
             for (i, t) in partial.iter().enumerate().take(core) {
-                tx.send(i, i ^ dist, push_frame(i, t))
-                    .expect("sparcml rec-double send");
+                tx.send(i, i ^ dist, push_frame(i, t))?;
             }
             for i in 0..core {
-                let (from, t) = expect_push(tx.recv(i).expect("sparcml rec-double recv"));
+                let (from, t) = expect_push(tx.recv(i)?);
                 assert_eq!(from as usize, i ^ dist, "recursive-doubling partner");
                 partial[i] = partial[i].merge(&t);
             }
-            tx.end_stage("rec-double").expect("rec-double stage");
+            tx.end_stage("rec-double")?;
             dist <<= 1;
         }
 
         // Post-fold: send the final aggregate back to the excess nodes.
         if excess > 0 {
             for j in 0..excess {
-                tx.send(j, core + j, push_frame(j, &partial[j]))
-                    .expect("sparcml fold-out send");
+                tx.send(j, core + j, push_frame(j, &partial[j]))?;
             }
             for j in 0..excess {
-                let (_, t) = expect_push(tx.recv(core + j).expect("sparcml fold-out recv"));
+                let (_, t) = expect_push(tx.recv(core + j)?);
                 partial[core + j] = t;
             }
-            tx.end_stage("fold-out").expect("fold-out stage");
+            tx.end_stage("fold-out")?;
         }
 
-        SyncResult {
+        Ok(SyncResult {
             outputs: partial,
             report: tx.take_report(),
-        }
+        })
     }
 }
 

@@ -44,7 +44,7 @@ impl SyncScheme for SparsePs {
         inputs: &[CooTensor],
         tx: &mut dyn Transport,
         _scratch: &mut SyncScratch,
-    ) -> SyncResult {
+    ) -> Result<SyncResult, crate::wire::WireError> {
         let n = inputs.len();
         assert_eq!(n, tx.endpoints());
         let dense_len = inputs[0].dense_len;
@@ -61,7 +61,7 @@ impl SyncScheme for SparsePs {
                 if w == p {
                     own[p] = Some(part);
                 } else if part.nnz() > 0 {
-                    tx.send(w, p, push_frame(w, &part)).expect("sparse-ps push");
+                    tx.send(w, p, push_frame(w, &part))?;
                     expected[p] += 1;
                 }
             }
@@ -72,11 +72,11 @@ impl SyncScheme for SparsePs {
         for p in 0..n {
             let mut shards = vec![own[p].take().expect("own shard present")];
             for _ in 0..expected[p] {
-                shards.push(expect_push(tx.recv(p).expect("sparse-ps push recv")).1);
+                shards.push(expect_push(tx.recv(p)?).1);
             }
             aggregated.push(CooTensor::merge_all(&shards));
         }
-        tx.end_stage("push").expect("push stage");
+        tx.end_stage("push")?;
 
         // Pull: server p point-to-point broadcasts its aggregated
         // partition to every worker (existing PS implementations, App. B).
@@ -87,7 +87,7 @@ impl SyncScheme for SparsePs {
             }
             for w in 0..n {
                 if w != p {
-                    tx.send(p, w, pull_frame(p, agg)).expect("sparse-ps pull");
+                    tx.send(p, w, pull_frame(p, agg))?;
                     expected[w] += 1;
                 }
             }
@@ -99,17 +99,17 @@ impl SyncScheme for SparsePs {
             let mut parts: Vec<(u32, CooTensor)> = Vec::with_capacity(n);
             parts.push((lo(w), aggregated[w].clone()));
             for _ in 0..expected[w] {
-                let (server, tensor) = expect_pull_coo(tx.recv(w).expect("sparse-ps pull recv"));
+                let (server, tensor) = expect_pull_coo(tx.recv(w)?);
                 parts.push((lo(server as usize), tensor));
             }
             outputs.push(CooTensor::concat_ranges(&parts, dense_len));
         }
-        tx.end_stage("pull").expect("pull stage");
+        tx.end_stage("pull")?;
 
-        SyncResult {
+        Ok(SyncResult {
             outputs,
             report: tx.take_report(),
-        }
+        })
     }
 }
 

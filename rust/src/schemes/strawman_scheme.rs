@@ -53,7 +53,7 @@ impl SyncScheme for StrawmanScheme {
         inputs: &[CooTensor],
         tx: &mut dyn Transport,
         _scratch: &mut SyncScratch,
-    ) -> SyncResult {
+    ) -> Result<SyncResult, crate::wire::WireError> {
         let n = inputs.len();
         assert_eq!(n, tx.endpoints());
         assert_eq!(self.hasher.n, n);
@@ -72,7 +72,7 @@ impl SyncScheme for StrawmanScheme {
                 if p == w {
                     own[w] = Some(part);
                 } else if part.nnz() > 0 {
-                    tx.send(w, p, push_frame(w, &part)).expect("strawman push");
+                    tx.send(w, p, push_frame(w, &part))?;
                     expected[p] += 1;
                 }
             }
@@ -87,11 +87,11 @@ impl SyncScheme for StrawmanScheme {
         for p in 0..n {
             let mut shards = vec![own[p].take().expect("own shard present")];
             for _ in 0..expected[p] {
-                shards.push(expect_push(tx.recv(p).expect("strawman push recv")).1);
+                shards.push(expect_push(tx.recv(p)?).1);
             }
             aggregated.push(CooTensor::merge_all(&shards));
         }
-        tx.end_stage("push").expect("push stage");
+        tx.end_stage("push")?;
 
         // Pull: COO broadcast of each server's (disjoint) aggregate.
         let mut expected = vec![0usize; n];
@@ -101,7 +101,7 @@ impl SyncScheme for StrawmanScheme {
             }
             for w in 0..n {
                 if w != p {
-                    tx.send(p, w, pull_frame(p, agg)).expect("strawman pull");
+                    tx.send(p, w, pull_frame(p, agg))?;
                     expected[w] += 1;
                 }
             }
@@ -110,16 +110,16 @@ impl SyncScheme for StrawmanScheme {
         for w in 0..n {
             let mut pieces: Vec<CooTensor> = Vec::with_capacity(expected[w]);
             for _ in 0..expected[w] {
-                pieces.push(expect_pull_coo(tx.recv(w).expect("strawman pull recv")).1);
+                pieces.push(expect_pull_coo(tx.recv(w)?).1);
             }
             outputs.push(merge_with_own(&pieces, &aggregated[w]));
         }
-        tx.end_stage("pull").expect("pull stage");
+        tx.end_stage("pull")?;
 
-        SyncResult {
+        Ok(SyncResult {
             outputs,
             report: tx.take_report(),
-        }
+        })
     }
 }
 

@@ -145,7 +145,7 @@ impl SyncScheme for Zen {
         inputs: &[CooTensor],
         tx: &mut dyn Transport,
         scratch: &mut SyncScratch,
-    ) -> SyncResult {
+    ) -> Result<SyncResult, crate::wire::WireError> {
         let n = inputs.len();
         assert_eq!(n, tx.endpoints());
         assert_eq!(self.hasher.n, n, "Zen hasher partitions must equal endpoints");
@@ -171,8 +171,7 @@ impl SyncScheme for Zen {
         for (w, ps) in partitions.iter().enumerate() {
             for p in 0..n {
                 if p != w {
-                    tx.send(w, p, push_frame_slice(w, ps.part(p)))
-                        .expect("zen push send");
+                    tx.send(w, p, push_frame_slice(w, ps.part(p)))?;
                 }
             }
         }
@@ -183,7 +182,7 @@ impl SyncScheme for Zen {
         for p in 0..n {
             let mut got = Vec::with_capacity(n - 1);
             for _ in 0..n.saturating_sub(1) {
-                got.push(expect_push(tx.recv(p).expect("zen push recv")).1);
+                got.push(expect_push(tx.recv(p)?).1);
             }
             received.push(got);
         }
@@ -196,7 +195,7 @@ impl SyncScheme for Zen {
                 CooTensor::merge_all_slices(&views)
             })
             .collect();
-        tx.end_stage("push").expect("zen push stage");
+        tx.end_stage("push")?;
 
         // --- Pull: broadcast each server's aggregate in the configured
         // index format; every worker decodes what it receives and merges
@@ -207,7 +206,7 @@ impl SyncScheme for Zen {
                 for (p, agg) in aggregated.iter().enumerate() {
                     for w in 0..n {
                         if w != p {
-                            tx.send(p, w, pull_frame(p, agg)).expect("zen pull send");
+                            tx.send(p, w, pull_frame(p, agg))?;
                         }
                     }
                 }
@@ -215,7 +214,7 @@ impl SyncScheme for Zen {
                 for w in 0..n {
                     let mut pieces: Vec<CooTensor> = Vec::with_capacity(n - 1);
                     for _ in 0..n.saturating_sub(1) {
-                        pieces.push(expect_pull_coo(tx.recv(w).expect("zen pull recv")).1);
+                        pieces.push(expect_pull_coo(tx.recv(w)?).1);
                     }
                     outputs.push(merge_with_own(&pieces, &aggregated[w]));
                 }
@@ -238,8 +237,7 @@ impl SyncScheme for Zen {
                                     bitmap: &scratch.payload.bitmap,
                                     values: &scratch.payload.values,
                                 },
-                            )
-                            .expect("zen pull send");
+                            )?;
                         }
                     }
                 }
@@ -247,7 +245,7 @@ impl SyncScheme for Zen {
                 for w in 0..n {
                     let mut pieces: Vec<CooTensor> = Vec::with_capacity(n - 1);
                     for _ in 0..n.saturating_sub(1) {
-                        match tx.recv(w).expect("zen pull recv") {
+                        match tx.recv(w)? {
                             Message::PullHashBitmap {
                                 server,
                                 bitmap,
@@ -284,8 +282,7 @@ impl SyncScheme for Zen {
                                     bitmap: &scratch.payload.bitmap,
                                     values: &agg.values,
                                 },
-                            )
-                            .expect("zen pull send");
+                            )?;
                         }
                     }
                 }
@@ -293,7 +290,7 @@ impl SyncScheme for Zen {
                 for w in 0..n {
                     let mut pieces: Vec<CooTensor> = Vec::with_capacity(n - 1);
                     for _ in 0..n.saturating_sub(1) {
-                        match tx.recv(w).expect("zen pull recv") {
+                        match tx.recv(w)? {
                             Message::PullHashBitmap { bitmap, values, .. } => {
                                 // positions are global indices directly
                                 pieces.push(CooTensor::from_sorted(
@@ -310,13 +307,13 @@ impl SyncScheme for Zen {
                 outputs
             }
         };
-        tx.end_stage("pull").expect("zen pull stage");
+        tx.end_stage("pull")?;
 
         let mut report = tx.take_report();
         if self.charge_compute {
             report.compute_overhead += hash_time + enc_time / n as f64;
         }
-        SyncResult { outputs, report }
+        Ok(SyncResult { outputs, report })
     }
 }
 

@@ -28,6 +28,15 @@ pub fn ceil_div(a: usize, b: usize) -> usize {
     a.div_ceil(b)
 }
 
+/// Largest power of two ≤ `n` (`n ≥ 1`) — the recursive-doubling core
+/// size shared by the folded schemes (SparCML, AGsparse-hier) and
+/// their cost-model twins, so the schedules cannot drift apart.
+#[inline]
+pub fn largest_pow2_at_most(n: usize) -> usize {
+    debug_assert!(n >= 1);
+    1usize << (usize::BITS - 1 - n.leading_zeros())
+}
+
 /// Human-readable byte count.
 pub fn human_bytes(b: f64) -> String {
     const UNITS: [&str; 6] = ["B", "KB", "MB", "GB", "TB", "PB"];

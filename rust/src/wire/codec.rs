@@ -61,6 +61,16 @@ pub enum WireError {
     ///
     /// [`Malformed`]: WireError::Malformed
     Disconnected,
+    /// A frame field that the format encodes as a `u32` (nnz, block
+    /// count, body length, …) would not fit one: the value would have
+    /// been silently truncated by the old `as u32` casts. Rejected by
+    /// [`FrameRef::validate`] before any byte is written.
+    FrameTooLarge {
+        /// Which size field overflowed.
+        what: &'static str,
+        /// The offending value.
+        len: u64,
+    },
 }
 
 impl std::fmt::Display for WireError {
@@ -77,6 +87,9 @@ impl std::fmt::Display for WireError {
             }
             WireError::Malformed(msg) => write!(f, "malformed body: {msg}"),
             WireError::Disconnected => write!(f, "peer endpoint disconnected"),
+            WireError::FrameTooLarge { what, len } => {
+                write!(f, "frame {what} {len} exceeds the u32 wire limit")
+            }
         }
     }
 }
@@ -383,7 +396,98 @@ pub enum FrameRef<'a> {
     },
 }
 
+/// Reject any size field that the wire format stores as a `u32` but
+/// whose value would not fit one — the length-only core of
+/// [`FrameRef::validate`], shared with the boundary tests (which probe
+/// the limits with synthetic counts instead of 4-billion-element
+/// allocations). Each entry is `(field name, value)`.
+pub fn validate_frame_counts(counts: &[(&'static str, u64)]) -> Result<(), WireError> {
+    for &(what, len) in counts {
+        if len > u32::MAX as u64 {
+            return Err(WireError::FrameTooLarge { what, len });
+        }
+    }
+    Ok(())
+}
+
+/// Size fields of a COO frame (`PushCoo`/`PullCoo`) at `nnz` entries:
+/// the nnz count itself and the body length it implies.
+pub fn coo_frame_counts(nnz: u64) -> [(&'static str, u64); 2] {
+    [
+        ("coo nnz", nnz),
+        ("body length", (4 + 8 + 4) + nnz.saturating_mul(8)),
+    ]
+}
+
+/// Size fields of a `PullHashBitmap` frame at `bits` bitmap bits and
+/// `values` payload values.
+pub fn hash_bitmap_frame_counts(bits: u64, values: u64) -> [(&'static str, u64); 2] {
+    let words = bits.max(1).div_ceil(64);
+    [
+        ("bitmap value count", values),
+        (
+            "body length",
+            (4 + 8 + 4)
+                .saturating_add(words.saturating_mul(8))
+                .saturating_add(values.saturating_mul(4)),
+        ),
+    ]
+}
+
+/// Size fields of a `DenseChunk` frame at `count` values.
+pub fn dense_chunk_frame_counts(count: u64) -> [(&'static str, u64); 2] {
+    [
+        ("dense chunk count", count),
+        ("body length", (4 + 8 + 4) + count.saturating_mul(4)),
+    ]
+}
+
+/// Size fields of a `Blocks` frame at `nblocks` blocks of `block_len`
+/// values each.
+pub fn blocks_frame_counts(nblocks: u64, block_len: u64) -> [(&'static str, u64); 3] {
+    let values = nblocks.saturating_mul(block_len);
+    [
+        ("block count", nblocks),
+        ("block value count", values),
+        (
+            "body length",
+            (4 + 8 + 4 + 4)
+                .saturating_add(nblocks.saturating_mul(4))
+                .saturating_add(values.saturating_mul(4)),
+        ),
+    ]
+}
+
 impl FrameRef<'_> {
+    /// Check every `u32`-encoded size field of this frame *before*
+    /// encoding: the frame writers would otherwise truncate an
+    /// oversized nnz/count/body length silently via `as u32`. The
+    /// transports call this on every `send`, so an oversized frame
+    /// surfaces as a typed [`WireError::FrameTooLarge`] instead of a
+    /// corrupted wire image.
+    pub fn validate(&self) -> Result<(), WireError> {
+        match self {
+            FrameRef::PushCoo { indices, .. } | FrameRef::PullCoo { indices, .. } => {
+                validate_frame_counts(&coo_frame_counts(indices.len() as u64))
+            }
+            FrameRef::PullHashBitmap { bitmap, values, .. } => validate_frame_counts(
+                &hash_bitmap_frame_counts(bitmap.len() as u64, values.len() as u64),
+            ),
+            FrameRef::DenseChunk { values, .. } => {
+                validate_frame_counts(&dense_chunk_frame_counts(values.len() as u64))
+            }
+            FrameRef::Blocks {
+                block_ids,
+                block_len,
+                ..
+            } => validate_frame_counts(&blocks_frame_counts(
+                block_ids.len() as u64,
+                *block_len as u64,
+            )),
+            FrameRef::Barrier { .. } => Ok(()),
+        }
+    }
+
     /// Exact size of the encoded frame (header included). Asserted equal
     /// to `encode`'s output length by the codec tests — this is the byte
     /// matrix `SimTransport` observes.
@@ -1048,6 +1152,46 @@ mod tests {
         assert!(e.to_string().contains("disconnected"), "{e}");
         assert!(std::error::Error::source(&e).is_none());
         assert_eq!(e, WireError::Disconnected);
+    }
+
+    #[test]
+    fn frame_too_large_error_covered() {
+        let e = WireError::FrameTooLarge {
+            what: "coo nnz",
+            len: 1 << 33,
+        };
+        assert!(e.to_string().contains("coo nnz"), "{e}");
+        assert!(e.to_string().contains("u32"), "{e}");
+        assert_ne!(e, WireError::Disconnected);
+    }
+
+    #[test]
+    fn ordinary_frames_validate_clean() {
+        let t = CooTensor::from_sorted(100, vec![3, 40, 99], vec![1.0, -2.5, 0.125]);
+        let msgs = [
+            Message::PushCoo { from: 1, tensor: t },
+            Message::PullHashBitmap {
+                server: 0,
+                bitmap: Bitmap::from_ones(130, &[0, 129]),
+                values: vec![1.0, 2.0],
+            },
+            Message::DenseChunk {
+                from: 0,
+                offset: 0,
+                values: vec![0.5; 9],
+            },
+            Message::Blocks {
+                from: 0,
+                dense_len: 64,
+                block_len: 4,
+                block_ids: vec![0, 3],
+                values: vec![0.25; 8],
+            },
+            Message::Barrier { epoch: 1 },
+        ];
+        for m in &msgs {
+            m.as_frame().validate().unwrap_or_else(|e| panic!("{m:?}: {e}"));
+        }
     }
 
     #[test]

@@ -40,7 +40,7 @@ use std::net::{TcpListener, TcpStream};
 
 use super::codec::{Decode, FrameRef, Message, WireError, FRAME_HEADER};
 use super::fabric::{Endpoint, Fabric};
-use crate::cluster::{CommReport, Network, StageReport};
+use crate::cluster::{ClassStage, CommReport, Network, StageReport, LINK_CLASSES};
 
 /// Which transport backend to run a synchronization over.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -114,10 +114,19 @@ pub fn make_transport(kind: TransportKind, net: &Network) -> anyhow::Result<Box<
 }
 
 /// Shared per-stage accounting: byte matrix → `StageReport` → report.
+/// Bytes are tracked per [`crate::cluster::LinkClass`] against the
+/// network's topology — co-located ranks charge the intra-node link,
+/// cross-node frames the fabric — and a stage costs the max over its
+/// classes (parallel physical links). On a flat network every frame is
+/// inter-class and the numbers reduce exactly to the historical
+/// single-link model.
 struct StageAcc {
     net: Network,
     sent: Vec<u64>,
     recv: Vec<u64>,
+    /// Per-class per-endpoint bytes (`[intra, inter]`).
+    class_sent: [Vec<u64>; 2],
+    class_recv: [Vec<u64>; 2],
     in_flight: usize,
     report: CommReport,
 }
@@ -129,18 +138,21 @@ impl StageAcc {
             net,
             sent: vec![0; n],
             recv: vec![0; n],
+            class_sent: [vec![0; n], vec![0; n]],
+            class_recv: [vec![0; n], vec![0; n]],
             in_flight: 0,
             report: CommReport::new(),
         }
     }
 
-    /// Validate an endpoint pair before any transmit is attempted.
-    fn check_pair(&self, src: usize, dst: usize) -> Result<(), WireError> {
+    /// Validate an endpoint pair and the frame's wire-size fields
+    /// before any transmit is attempted.
+    fn check_send(&self, src: usize, dst: usize, frame: &FrameRef<'_>) -> Result<(), WireError> {
         let n = self.net.endpoints;
         if src >= n || dst >= n || src == dst {
             return Err(WireError::Malformed("invalid endpoint pair"));
         }
-        Ok(())
+        frame.validate()
     }
 
     /// Charge a *successfully transmitted* frame to the current stage —
@@ -148,6 +160,9 @@ impl StageAcc {
     fn charge(&mut self, src: usize, dst: usize, bytes: u64) {
         self.sent[src] += bytes;
         self.recv[dst] += bytes;
+        let c = self.net.topo.class_of(src, dst).idx();
+        self.class_sent[c][src] += bytes;
+        self.class_recv[c][dst] += bytes;
         self.in_flight += 1;
     }
 
@@ -162,12 +177,30 @@ impl StageAcc {
         let n = self.net.endpoints;
         let sent = std::mem::replace(&mut self.sent, vec![0; n]);
         let recv = std::mem::replace(&mut self.recv, vec![0; n]);
-        let time = self.net.stage_time(&sent, &recv);
+        let classes = LINK_CLASSES.map(|class| {
+            let c = class.idx();
+            let busiest = self.class_sent[c]
+                .iter()
+                .zip(self.class_recv[c].iter())
+                .map(|(&s, &r)| s.max(r))
+                .max()
+                .unwrap_or(0);
+            let stage = ClassStage {
+                bytes: self.class_sent[c].iter().sum(),
+                busiest,
+                time: self.net.class_time(class, busiest),
+            };
+            self.class_sent[c].iter_mut().for_each(|v| *v = 0);
+            self.class_recv[c].iter_mut().for_each(|v| *v = 0);
+            stage
+        });
+        let time = classes[0].time.max(classes[1].time);
         self.report.push(StageReport {
             name: name.to_string(),
             sent,
             recv,
             time,
+            classes,
         });
         Ok(())
     }
@@ -207,7 +240,7 @@ impl Transport for SimTransport {
     }
 
     fn send(&mut self, src: usize, dst: usize, frame: FrameRef<'_>) -> Result<(), WireError> {
-        self.acc.check_pair(src, dst)?;
+        self.acc.check_send(src, dst, &frame)?;
         self.queues[dst].push_back(frame.to_message());
         self.acc.charge(src, dst, frame.encoded_len() as u64);
         Ok(())
@@ -254,6 +287,16 @@ impl ChannelTransport {
     pub fn fabric(&self) -> &Fabric {
         &self.fabric
     }
+
+    /// Hang up endpoint `e`: its subsequent sends fail with
+    /// [`WireError::Disconnected`], exactly like a crashed peer whose
+    /// channel half is gone. The disconnect-regression suite drives
+    /// every scheme through this mid-protocol.
+    pub fn disconnect_endpoint(&mut self, e: usize) {
+        if let Some(ep) = self.endpoints.get_mut(e) {
+            ep.disconnect();
+        }
+    }
 }
 
 impl Transport for ChannelTransport {
@@ -266,7 +309,7 @@ impl Transport for ChannelTransport {
     }
 
     fn send(&mut self, src: usize, dst: usize, frame: FrameRef<'_>) -> Result<(), WireError> {
-        self.acc.check_pair(src, dst)?;
+        self.acc.check_send(src, dst, &frame)?;
         // Encode straight into the buffer the channel will own: one
         // encode, one move, no re-copy.
         let mut buf = Vec::with_capacity(frame.encoded_len());
@@ -364,7 +407,7 @@ impl Transport for TcpTransport {
     }
 
     fn send(&mut self, src: usize, dst: usize, frame: FrameRef<'_>) -> Result<(), WireError> {
-        self.acc.check_pair(src, dst)?;
+        self.acc.check_send(src, dst, &frame)?;
         let len = frame.encoded_len();
         if self.in_flight[src][dst] + len > MAX_TCP_INFLIGHT_BYTES {
             // Fail loudly: this many undrained bytes could outgrow the
@@ -574,6 +617,55 @@ mod tests {
         tx.end_stage("s").unwrap();
         assert_eq!(tx.take_report().stages.len(), 1);
         assert_eq!(tx.take_report().stages.len(), 0);
+    }
+
+    #[test]
+    fn classed_accounting_splits_colocated_frames() {
+        use crate::cluster::{LinkClass, LinkKind, Topology};
+        // 2 nodes × 2 ranks: 0→1 is intra, 0→2 inter.
+        let topo = Topology::two_level(2, 2, LinkKind::NvLink, LinkKind::Tcp25);
+        let mut tx = SimTransport::new(Network::with_topology(topo));
+        tx.send(0, 1, FrameRef::Barrier { epoch: 1 }).unwrap();
+        tx.send(0, 2, FrameRef::Barrier { epoch: 2 }).unwrap();
+        tx.recv(1).unwrap();
+        tx.recv(2).unwrap();
+        tx.end_stage("mixed").unwrap();
+        let report = tx.take_report();
+        let st = &report.stages[0];
+        let frame = Message::Barrier { epoch: 1 }.encoded_len() as u64;
+        assert_eq!(st.classes[LinkClass::Intra.idx()].bytes, frame);
+        assert_eq!(st.classes[LinkClass::Inter.idx()].bytes, frame);
+        // same bytes, but the TCP fabric is slower and pays more α
+        let intra = st.classes[LinkClass::Intra.idx()].time;
+        let inter = st.classes[LinkClass::Inter.idx()].time;
+        assert!(inter > intra && intra > 0.0);
+        assert_eq!(st.time, inter, "stage charges the max class");
+        // totals remain class-agnostic
+        assert_eq!(st.sent, vec![2 * frame, 0, 0, 0]);
+        assert_eq!(report.bytes_by_class(), [frame, frame]);
+    }
+
+    #[test]
+    fn oversized_frame_rejected_before_charging() {
+        // The validation hook: a frame whose u32 size fields would
+        // truncate is refused by send with a typed error on every
+        // backend (length-only check, no huge allocation).
+        let ids = [0u32];
+        let values = [0.0f32; 4];
+        let bad = FrameRef::Blocks {
+            from: 0,
+            dense_len: u64::MAX,
+            block_len: u32::MAX,
+            block_ids: &ids,
+            values: &values,
+        };
+        let mut tx = SimTransport::new(net(2));
+        assert!(matches!(
+            tx.send(0, 1, bad),
+            Err(WireError::FrameTooLarge { .. })
+        ));
+        tx.end_stage("clean").unwrap();
+        assert_eq!(tx.take_report().stages[0].total_bytes(), 0);
     }
 
     #[test]

@@ -51,6 +51,48 @@ pub fn random_uniform_inputs(
         .collect()
 }
 
+/// Per-worker tensors whose non-zero supports are correlated by worker
+/// *group*: consecutive runs of `workers_per_group` workers share one
+/// group-private support of `density · dense_len` scattered positions
+/// (per-worker values still differ). Models placement-correlated
+/// sparsity — locality-aware data loaders hand co-located workers
+/// similar shards, so the union density stays flat within a group and
+/// steps up only when the next group joins. This is the workload where
+/// topology-aware planning diverges from the flat mesh
+/// (`figures::topology_crossover`, `tests/topology_integration.rs`).
+pub fn group_clustered_inputs(
+    seed: u64,
+    groups: usize,
+    workers_per_group: usize,
+    dense_len: usize,
+    density: f64,
+) -> Vec<CooTensor> {
+    assert!(groups >= 1 && workers_per_group >= 1);
+    let nnz = ((dense_len as f64 * density) as usize).clamp(1, dense_len);
+    let mut rng = Pcg64::seeded(seed);
+    let supports: Vec<Vec<u32>> = (0..groups)
+        .map(|_| {
+            let mut idx: Vec<u32> = rng
+                .sample_distinct(dense_len, nnz)
+                .into_iter()
+                .map(|i| i as u32)
+                .collect();
+            idx.sort_unstable();
+            idx
+        })
+        .collect();
+    (0..groups * workers_per_group)
+        .map(|w| {
+            let support = &supports[w / workers_per_group];
+            let vals: Vec<f32> = support
+                .iter()
+                .map(|_| rng.next_f32() * 2.0 - 0.99)
+                .collect();
+            CooTensor::from_sorted(dense_len, support.clone(), vals)
+        })
+        .collect()
+}
+
 /// What kind of gradient a [`LayerSpec`] produces.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LayerKind {

@@ -1,0 +1,164 @@
+//! Panic-free protocol paths: a data plane that loses a peer mid-stage
+//! must surface [`WireError::Disconnected`] from `sync_transport`, not
+//! abort the process. The old scheme bodies `expect()`ed every
+//! send/recv, so a hung-up channel or closed socket took the whole
+//! trainer down; this suite drives every scheme through disconnects
+//! injected at every phase of its protocol.
+
+use zen::cluster::{CommReport, LinkKind, Network};
+use zen::schemes::{self, SyncScratch};
+use zen::wire::{
+    ChannelTransport, FrameRef, Message, SimTransport, Transport, TransportKind, WireError,
+};
+use zen::workload::random_uniform_inputs;
+
+/// Every scheme variant, by CLI name.
+const ALL_SCHEMES: &[&str] = &[
+    "dense",
+    "agsparse",
+    "agsparse-ring",
+    "agsparse-hier",
+    "sparcml",
+    "sparseps",
+    "omnireduce",
+    "zen",
+    "zen-coo",
+    "strawman:8",
+];
+
+/// A transport that behaves like [`SimTransport`] until the `fail_at`-th
+/// operation (send/recv/end_stage), then reports the peer as gone on
+/// that and every later call — the deterministic stand-in for a peer
+/// crashing at an arbitrary point of the protocol.
+struct FailingTransport {
+    inner: SimTransport,
+    ops: usize,
+    fail_at: Option<usize>,
+}
+
+impl FailingTransport {
+    fn new(net: Network, fail_at: Option<usize>) -> FailingTransport {
+        FailingTransport {
+            inner: SimTransport::new(net),
+            ops: 0,
+            fail_at,
+        }
+    }
+
+    fn tick(&mut self) -> Result<(), WireError> {
+        let op = self.ops;
+        self.ops += 1;
+        match self.fail_at {
+            Some(k) if op >= k => Err(WireError::Disconnected),
+            _ => Ok(()),
+        }
+    }
+}
+
+impl Transport for FailingTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Sim
+    }
+
+    fn endpoints(&self) -> usize {
+        self.inner.endpoints()
+    }
+
+    fn send(&mut self, src: usize, dst: usize, frame: FrameRef<'_>) -> Result<(), WireError> {
+        self.tick()?;
+        self.inner.send(src, dst, frame)
+    }
+
+    fn recv(&mut self, dst: usize) -> Result<Message, WireError> {
+        self.tick()?;
+        self.inner.recv(dst)
+    }
+
+    fn end_stage(&mut self, name: &str) -> Result<(), WireError> {
+        self.tick()?;
+        self.inner.end_stage(name)
+    }
+
+    fn take_report(&mut self) -> CommReport {
+        self.inner.take_report()
+    }
+}
+
+#[test]
+fn every_scheme_surfaces_disconnect_at_every_protocol_phase() {
+    for &machines in &[3usize, 4, 5] {
+        let inputs = random_uniform_inputs(0xd15c ^ machines as u64, machines, 3_000, 0.03);
+        let nnz = inputs[0].nnz().max(8);
+        for name in ALL_SCHEMES {
+            let scheme = schemes::by_name(name, machines, 0xd15c, nnz).unwrap();
+            let net = Network::new(machines, LinkKind::Tcp25);
+
+            // Count the healthy run's transport operations first.
+            let mut probe = FailingTransport::new(net.clone(), None);
+            scheme
+                .sync_transport(&inputs, &mut probe, &mut SyncScratch::new())
+                .unwrap_or_else(|e| panic!("{name} m={machines}: healthy run failed: {e}"));
+            let total_ops = probe.ops;
+            assert!(total_ops > 0, "{name} m={machines}: no transport traffic");
+
+            // Fail at the first op, the last, and a spread in between —
+            // send phases, recv phases, and stage boundaries all get hit.
+            let mut points = vec![0, total_ops / 4, total_ops / 2, 3 * total_ops / 4];
+            points.push(total_ops - 1);
+            points.dedup();
+            for k in points {
+                let mut tx = FailingTransport::new(net.clone(), Some(k));
+                let r = scheme.sync_transport(&inputs, &mut tx, &mut SyncScratch::new());
+                match r {
+                    Err(WireError::Disconnected) => {}
+                    Err(other) => panic!(
+                        "{name} m={machines} fail_at={k}/{total_ops}: \
+                         expected Disconnected, got {other}"
+                    ),
+                    Ok(_) => panic!(
+                        "{name} m={machines} fail_at={k}/{total_ops}: \
+                         sync succeeded over a dead transport"
+                    ),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn real_channel_hangup_yields_disconnected() {
+    // Not an injected error: actually drop one endpoint's channel
+    // senders mid-fabric. The first frame that endpoint tries to move
+    // must surface the hangup as an Err, not a panic.
+    let machines = 4;
+    let inputs = random_uniform_inputs(0xc10, machines, 2_000, 0.05);
+    for name in ALL_SCHEMES {
+        let scheme = schemes::by_name(name, machines, 0xc10, inputs[0].nnz().max(8)).unwrap();
+        let net = Network::new(machines, LinkKind::Tcp25);
+        let mut ch = ChannelTransport::new(net.clone());
+        // Endpoint 2 "crashes" before the sync begins.
+        ch.disconnect_endpoint(2);
+        let r = scheme.sync_transport(&inputs, &mut ch, &mut SyncScratch::new());
+        match r {
+            Err(WireError::Disconnected) => {}
+            Err(other) => panic!("{name}: expected Disconnected, got {other}"),
+            Ok(_) => panic!("{name}: sync succeeded with a hung-up endpoint"),
+        }
+    }
+}
+
+#[test]
+fn healthy_channel_unaffected_by_disconnect_api() {
+    // disconnect_endpoint on an out-of-range id is a no-op; a healthy
+    // fabric still completes.
+    let machines = 3;
+    let inputs = random_uniform_inputs(0xaa, machines, 1_000, 0.05);
+    let scheme = schemes::by_name("zen", machines, 1, inputs[0].nnz().max(8)).unwrap();
+    let net = Network::new(machines, LinkKind::Tcp25);
+    let mut ch = ChannelTransport::new(net.clone());
+    ch.disconnect_endpoint(99);
+    let r = scheme
+        .sync_transport(&inputs, &mut ch, &mut SyncScratch::new())
+        .expect("healthy fabric");
+    schemes::verify_outputs(&r, &inputs);
+}

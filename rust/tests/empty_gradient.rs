@@ -63,16 +63,15 @@ fn one_empty(seed: u64, n: usize) -> Vec<CooTensor> {
 /// stage-exact byte consistency between the backends.
 fn check_cell(name: &str, inputs: &[CooTensor], lossless_expected: bool) {
     let n = inputs.len();
-    if name == "agsparse-hier" && !n.is_power_of_two() {
-        return; // the hierarchy pattern is defined for 2^k nodes only
-    }
     let scheme = schemes::by_name(name, n, 0xe1, 128).unwrap();
     let net = Network::new(n, LinkKind::Tcp25);
     let ctx = format!("{name} m={n}");
 
     let sim = scheme.sync_with(inputs, &net, &mut SyncScratch::new());
     let mut ch = ChannelTransport::new(net.clone());
-    let chan = scheme.sync_transport(inputs, &mut ch, &mut SyncScratch::new());
+    let chan = scheme
+        .sync_transport(inputs, &mut ch, &mut SyncScratch::new())
+        .unwrap_or_else(|e| panic!("{ctx}: channel sync failed: {e}"));
 
     // Byte consistency: the two data planes must observe the same
     // traffic, stage by stage, empty frames included.
@@ -116,9 +115,6 @@ fn all_workers_empty_every_scheme_every_machine_count() {
 #[test]
 fn all_empty_aggregate_is_exactly_zero() {
     for name in ALL_SCHEMES {
-        if *name == "agsparse-hier" {
-            continue; // covered at n = 4 below anyway
-        }
         let inputs = all_empty(3);
         let scheme = schemes::by_name(name, 3, 0xe2, 128).unwrap();
         let net = Network::new(3, LinkKind::Tcp25);
@@ -166,7 +162,9 @@ fn empty_inputs_over_tcp_smoke() {
                 return;
             }
         };
-        let real = scheme.sync_transport(&inputs, &mut tcp, &mut SyncScratch::new());
+        let real = scheme
+            .sync_transport(&inputs, &mut tcp, &mut SyncScratch::new())
+            .unwrap_or_else(|e| panic!("{name}: tcp sync failed: {e}"));
         for (s, c) in sim.report.stages.iter().zip(real.report.stages.iter()) {
             assert_eq!(s.sent, c.sent, "{name}: tcp stage '{}' sent", s.name);
             assert_eq!(s.recv, c.recv, "{name}: tcp stage '{}' recv", s.name);

@@ -1,0 +1,133 @@
+//! Wire-size limits: every count the codec encodes as a `u32` must be
+//! rejected with a typed error when it would not fit one, instead of
+//! being silently truncated by `as u32` (the old behavior corrupted the
+//! frame's length fields for nnz ≥ 2^32). The boundary is probed with
+//! length-only synthetic counts — no 4-billion-element allocations —
+//! through the same helpers [`FrameRef::validate`] dispatches to, plus
+//! an end-to-end check that transports reject invalid frames before
+//! charging any bytes.
+
+use zen::cluster::{LinkKind, Network};
+use zen::wire::codec::{
+    blocks_frame_counts, coo_frame_counts, dense_chunk_frame_counts, hash_bitmap_frame_counts,
+    validate_frame_counts,
+};
+use zen::wire::{ChannelTransport, FrameRef, SimTransport, Transport, WireError};
+
+const U32_MAX: u64 = u32::MAX as u64;
+
+fn ok(counts: &[(&'static str, u64)]) -> bool {
+    validate_frame_counts(counts).is_ok()
+}
+
+fn rejected_field(counts: &[(&'static str, u64)]) -> &'static str {
+    match validate_frame_counts(counts) {
+        Err(WireError::FrameTooLarge { what, .. }) => what,
+        other => panic!("expected FrameTooLarge, got {other:?}"),
+    }
+}
+
+#[test]
+fn coo_nnz_boundary() {
+    // The body length (16 + 8·nnz) overflows u32 long before the nnz
+    // field itself: the largest encodable COO frame holds
+    // (u32::MAX − 16) / 8 entries.
+    let max_nnz = (U32_MAX - 16) / 8;
+    assert!(ok(&coo_frame_counts(max_nnz)), "just below the limit");
+    assert_eq!(rejected_field(&coo_frame_counts(max_nnz + 1)), "body length");
+    // nnz beyond u32 is also caught in its own right
+    assert_eq!(rejected_field(&coo_frame_counts(U32_MAX + 1)), "coo nnz");
+}
+
+#[test]
+fn dense_chunk_boundary() {
+    let max_count = (U32_MAX - 16) / 4;
+    assert!(ok(&dense_chunk_frame_counts(max_count)));
+    assert_eq!(
+        rejected_field(&dense_chunk_frame_counts(max_count + 1)),
+        "body length"
+    );
+    assert_eq!(
+        rejected_field(&dense_chunk_frame_counts(U32_MAX + 1)),
+        "dense chunk count"
+    );
+}
+
+#[test]
+fn blocks_boundary() {
+    // nblocks · block_len (the value count) carries its own u32 field.
+    assert!(ok(&blocks_frame_counts(1_000, 4)));
+    assert_eq!(
+        rejected_field(&blocks_frame_counts(U32_MAX + 1, 1)),
+        "block count"
+    );
+    // counts fit individually but the product overflows
+    assert_eq!(
+        rejected_field(&blocks_frame_counts(1 << 20, 1 << 13)),
+        "block value count"
+    );
+    // product fits u32 but the 4-byte-per-value body does not
+    let nblocks = (U32_MAX / 4 / 64) + 1;
+    assert_eq!(rejected_field(&blocks_frame_counts(nblocks, 64)), "body length");
+}
+
+#[test]
+fn hash_bitmap_boundary() {
+    // Bitmap bits travel as u64 (no truncation risk); the value count
+    // and the word-padded body are the u32-bound fields.
+    assert!(ok(&hash_bitmap_frame_counts(1 << 20, 1 << 15)));
+    assert_eq!(
+        rejected_field(&hash_bitmap_frame_counts(64, U32_MAX + 1)),
+        "bitmap value count"
+    );
+    // a bitmap alone can outgrow the body length field: > 2^32 bytes of
+    // words means > 2^35 bits
+    assert_eq!(
+        rejected_field(&hash_bitmap_frame_counts(1u64 << 36, 0)),
+        "body length"
+    );
+}
+
+#[test]
+fn saturating_arithmetic_never_wraps() {
+    // Absurd synthetic counts must still land in FrameTooLarge, not
+    // wrap around u64 into a "valid" small body.
+    assert!(validate_frame_counts(&coo_frame_counts(u64::MAX)).is_err());
+    assert!(validate_frame_counts(&blocks_frame_counts(u64::MAX, u64::MAX)).is_err());
+    assert!(validate_frame_counts(&hash_bitmap_frame_counts(u64::MAX, u64::MAX)).is_err());
+    assert!(validate_frame_counts(&dense_chunk_frame_counts(u64::MAX)).is_err());
+}
+
+#[test]
+fn transports_validate_before_charging() {
+    // End-to-end: a frame with an in-range slice but an invalid
+    // declared block geometry is refused by `send` on both in-process
+    // backends, and nothing is charged to the stage.
+    let net = Network::new(2, LinkKind::Tcp25);
+    let ids = [0u32];
+    let values = [0.0f32; 8];
+    // block_len u32::MAX with 1 block: value count fits, body length
+    // computation must reject without any allocation.
+    let bad = FrameRef::Blocks {
+        from: 0,
+        dense_len: u64::MAX,
+        block_len: u32::MAX,
+        block_ids: &ids,
+        values: &values,
+    };
+    let mut sim = SimTransport::new(net.clone());
+    assert!(matches!(
+        sim.send(0, 1, bad),
+        Err(WireError::FrameTooLarge { .. })
+    ));
+    sim.end_stage("clean").expect("nothing in flight");
+    assert_eq!(sim.take_report().stages[0].total_bytes(), 0);
+
+    let mut ch = ChannelTransport::new(net);
+    assert!(matches!(
+        ch.send(0, 1, bad),
+        Err(WireError::FrameTooLarge { .. })
+    ));
+    ch.end_stage("clean").expect("nothing in flight");
+    assert_eq!(ch.take_report().stages[0].total_bytes(), 0);
+}

@@ -9,7 +9,7 @@
 //! that picks a scheme measurably slower than the best by more than
 //! the tie margin fails.
 
-use zen::cluster::{LinkKind, Network};
+use zen::cluster::{LinkKind, Network, Topology};
 use zen::planner::{plan_bucket, CostPlanner, MeasuredStats, PlanConfig, Planner};
 use zen::schemes::{self, SyncScheme, SyncScratch, PLANNER_CANDIDATES};
 use zen::tensor::block::DEFAULT_BLOCK;
@@ -34,7 +34,8 @@ fn cost_model_argmin_tracks_transport_measured_best() {
             let inputs =
                 random_uniform_inputs(0xc405 ^ machines as u64, machines, dense_len, density);
             let stats = MeasuredStats::from_tensors(&inputs, &[machines], &[DEFAULT_BLOCK]);
-            let plan = plan_bucket("cell", dense_len as f64, machines, link, &cfg, stats);
+            let topo = Topology::flat(machines, link);
+            let plan = plan_bucket("cell", dense_len as f64, machines, &topo, &cfg, stats);
 
             let net = Network::new(machines, link);
             let measured: Vec<(&str, f64)> = PLANNER_CANDIDATES
@@ -73,7 +74,7 @@ fn non_power_of_two_machines_plan_without_panic() {
     let machines = 6;
     let inputs = random_uniform_inputs(0x6666, machines, 1 << 13, 0.02);
     let planner = CostPlanner::new(machines, 0x5eed, 256, PlanConfig::default());
-    let planned = planner.plan("n6", &inputs, LinkKind::Tcp25);
+    let planned = planner.plan("n6", &inputs, &Topology::flat(machines, LinkKind::Tcp25));
     let plan = planned.plan.expect("auto always plans");
     assert_eq!(plan.costs.len(), PLANNER_CANDIDATES.len());
     assert!(plan.costs.iter().all(|c| c.time.is_finite()));
@@ -96,8 +97,9 @@ fn repeated_profiling_returns_identical_stats() {
     assert_eq!(a, b, "profiling is deterministic");
 
     let planner = CostPlanner::new(4, 0x5eed, 256, PlanConfig::default());
-    let first = planner.plan("bucket", &inputs, LinkKind::Tcp25).plan.unwrap();
-    let second = planner.plan("bucket", &inputs, LinkKind::Tcp25).plan.unwrap();
+    let tcp = Topology::flat(4, LinkKind::Tcp25);
+    let first = planner.plan("bucket", &inputs, &tcp).plan.unwrap();
+    let second = planner.plan("bucket", &inputs, &tcp).plan.unwrap();
     assert!(
         std::sync::Arc::ptr_eq(&first, &second),
         "cached plan (and its stats) must be the same object"
@@ -113,8 +115,9 @@ fn hysteresis_zero_replans_on_any_drift() {
         ..PlanConfig::default()
     };
     let planner = CostPlanner::new(4, 0x5eed, 256, cfg);
-    planner.plan("b", &random_uniform_inputs(1, 4, 4096, 0.020), LinkKind::Tcp25);
+    let tcp = Topology::flat(4, LinkKind::Tcp25);
+    planner.plan("b", &random_uniform_inputs(1, 4, 4096, 0.020), &tcp);
     // ~10% denser: outside a zero threshold, inside the default 0.25
-    planner.plan("b", &random_uniform_inputs(2, 4, 4096, 0.022), LinkKind::Tcp25);
+    planner.plan("b", &random_uniform_inputs(2, 4, 4096, 0.022), &tcp);
     assert_eq!(planner.profile_count(), 2, "zero hysteresis re-plans");
 }

@@ -12,15 +12,18 @@
 //! A TCP smoke cell additionally runs two schemes over real loopback
 //! sockets.
 
-use zen::cluster::{LinkKind, Network};
+use zen::cluster::{LinkKind, Network, Topology, LINK_CLASSES};
 use zen::schemes::{self, SyncScheme, SyncScratch};
 use zen::wire::{ChannelTransport, TcpTransport};
 use zen::workload::random_uniform_inputs as random_inputs;
 
-/// The seven schemes of the paper's taxonomy, by CLI name.
+/// The seven schemes of the paper's taxonomy, by CLI name, plus the
+/// folded AGsparse-hier variant (its non-power-of-two schedule is
+/// exactly what the {3, 5, 6, 12} grid exists to cover).
 const SCHEMES: &[&str] = &[
     "dense",
     "agsparse",
+    "agsparse-hier",
     "sparcml",
     "sparseps",
     "omnireduce",
@@ -43,7 +46,9 @@ fn assert_parity_cell(name: &str, machines: usize, density: f64) {
 
     let sim = scheme.sync_with(&inputs, &net, &mut SyncScratch::new());
     let mut ch = ChannelTransport::new(net.clone());
-    let chan = scheme.sync_transport(&inputs, &mut ch, &mut SyncScratch::new());
+    let chan = scheme
+        .sync_transport(&inputs, &mut ch, &mut SyncScratch::new())
+        .unwrap_or_else(|e| panic!("{ctx}: channel sync failed: {e}"));
 
     // 1. per-stage byte parity
     assert_eq!(
@@ -101,6 +106,64 @@ fn parity_all_schemes_8_machines() {
 }
 
 #[test]
+fn parity_all_schemes_non_pow2_machines() {
+    // Heterogeneous-cluster counts: the non-power-of-two fold paths of
+    // SparCML and AGsparse-hier (plus everyone else's generic loops)
+    // must hold stage-exact parity too. One density per cell keeps the
+    // grid affordable; the pow-2 grids above cover the density sweep.
+    for machines in [3usize, 5, 6, 12] {
+        for name in SCHEMES {
+            assert_parity_cell(name, machines, 0.02);
+        }
+    }
+}
+
+#[test]
+fn topology_parity_per_link_class() {
+    // Two-level placement: sim and channel must agree not just on the
+    // total byte matrix but on the per-link-class split — bytes and
+    // busiest endpoint per class, stage by stage.
+    let topo = Topology::two_level(4, 2, LinkKind::NvLink, LinkKind::Tcp25);
+    let net = Network::with_topology(topo);
+    let machines = net.endpoints;
+    let inputs = random_inputs(0x707, machines, 6_000, 0.03);
+    for name in ["zen", "sparcml", "dense", "agsparse-hier"] {
+        let scheme = schemes::by_name(name, machines, 0xace5, inputs[0].nnz()).unwrap();
+        let sim = scheme.sync_with(&inputs, &net, &mut SyncScratch::new());
+        let mut ch = ChannelTransport::new(net.clone());
+        let chan = scheme
+            .sync_transport(&inputs, &mut ch, &mut SyncScratch::new())
+            .unwrap_or_else(|e| panic!("{name}: channel sync failed: {e}"));
+        assert_eq!(sim.report.stages.len(), chan.report.stages.len(), "{name}");
+        let mut intra_seen = false;
+        for (s, c) in sim.report.stages.iter().zip(chan.report.stages.iter()) {
+            for class in LINK_CLASSES {
+                let (a, b) = (&s.classes[class.idx()], &c.classes[class.idx()]);
+                assert_eq!(a.bytes, b.bytes, "{name}: stage '{}' {} bytes", s.name, class.name());
+                assert_eq!(
+                    a.busiest,
+                    b.busiest,
+                    "{name}: stage '{}' {} busiest",
+                    s.name,
+                    class.name()
+                );
+                assert!((a.time - b.time).abs() < 1e-15, "{name}: class time");
+            }
+            intra_seen |= s.classes[0].bytes > 0;
+            // stage charge is the max over the classes
+            let expect = s.classes[0].time.max(s.classes[1].time);
+            assert!((s.time - expect).abs() < 1e-15, "{name}: stage '{}'", s.name);
+        }
+        assert!(intra_seen, "{name}: co-located ranks must exchange intra-class bytes");
+        assert_eq!(sim.report.bytes_by_class(), chan.report.bytes_by_class(), "{name}");
+        for (a, b) in sim.outputs.iter().zip(chan.outputs.iter()) {
+            assert_eq!(a, b, "{name}: outputs diverge across backends");
+        }
+        schemes::verify_outputs(&chan, &inputs);
+    }
+}
+
+#[test]
 fn tcp_loopback_matches_sim_smoke() {
     // Real sockets: small payloads (one orchestrating thread must never
     // outgrow the kernel socket buffer), two representative schemes.
@@ -120,7 +183,9 @@ fn tcp_loopback_matches_sim_smoke() {
                 return;
             }
         };
-        let real = scheme.sync_transport(&inputs, &mut tcp, &mut SyncScratch::new());
+        let real = scheme
+            .sync_transport(&inputs, &mut tcp, &mut SyncScratch::new())
+            .unwrap_or_else(|e| panic!("{name}: tcp sync failed: {e}"));
         assert_eq!(sim.report.stages.len(), real.report.stages.len(), "{name}");
         for (s, c) in sim.report.stages.iter().zip(real.report.stages.iter()) {
             assert_eq!(s.sent, c.sent, "{name}: tcp stage '{}' sent", s.name);
@@ -143,8 +208,12 @@ fn transport_reuse_across_sequential_syncs() {
     let scheme = schemes::by_name("zen", machines, 1, inputs[0].nnz()).unwrap();
     let mut ch = ChannelTransport::new(net.clone());
     let mut scratch = SyncScratch::new();
-    let first = scheme.sync_transport(&inputs, &mut ch, &mut scratch);
-    let second = scheme.sync_transport(&inputs, &mut ch, &mut scratch);
+    let first = scheme
+        .sync_transport(&inputs, &mut ch, &mut scratch)
+        .expect("first sync");
+    let second = scheme
+        .sync_transport(&inputs, &mut ch, &mut scratch)
+        .expect("second sync");
     assert_eq!(
         first.report.total_bytes(),
         second.report.total_bytes(),
