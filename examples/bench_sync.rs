@@ -217,7 +217,7 @@ fn main() {
                 let mut bytes = 0u64;
                 let mut compute_overhead = 0.0f64;
                 let ns = median_ns(cfg.warmup, cfg.iters, || {
-                    let r = scheme.sync_with(&inputs, &net, &mut scratch);
+                    let r = scheme.run_sim(&inputs, &net, &mut scratch);
                     bytes = r.report.total_bytes();
                     compute_overhead = r.report.compute_overhead;
                     std::hint::black_box(r.outputs.len());

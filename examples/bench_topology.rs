@@ -45,7 +45,7 @@ fn run(
     inputs: &[CooTensor],
     net: &Network,
 ) -> (f64, [f64; 2]) {
-    let r = scheme.sync_with(inputs, net, &mut SyncScratch::new());
+    let r = scheme.run_sim(inputs, net, &mut SyncScratch::new());
     (r.report.comm_time(), r.report.time_by_class())
 }
 

@@ -1,22 +1,23 @@
-//! Transport-overhead trajectory: every scheme over every transport
-//! backend, emitted as machine-readable `BENCH_PR3.json` so the cost of
-//! moving real frames (channel) and real sockets (tcp) versus the
-//! virtual-time simulator is re-measurable on any machine.
+//! Transport-overhead trajectory: every scheme over every data plane,
+//! emitted as machine-readable `BENCH_PR6.json` so the cost of moving
+//! real frames (channel) and real sockets (the readiness-polled
+//! loopback mesh) versus the virtual-time simulator is re-measurable on
+//! any machine.
 //!
 //!   cargo run --release --example bench_transport -- [--tiny] [--iters K] [--out PATH]
 //!
 //! - `--tiny`: CI smoke configuration (small tensors, few iterations).
 //! - `--iters K`: timed iterations per cell (median reported).
-//! - `--out PATH`: output JSON path (default `BENCH_PR3.json`).
+//! - `--out PATH`: output JSON path (default `BENCH_PR6.json`).
 //!
-//! Payload sizes are deliberately modest: the TCP backend is driven by a
-//! single orchestrating thread, so per-frame payloads must stay well
-//! below the kernel socket buffer.
+//! Unlike the retired single-threaded TCP loopback, the socket mesh
+//! queues writes per peer and never blocks, so payload size is bounded
+//! by memory, not the kernel socket buffer.
 
 use zen::cluster::{LinkKind, Network};
 use zen::schemes::{self, SyncScheme, SyncScratch};
 use zen::util::{Stopwatch, Summary};
-use zen::wire::{make_transport, TransportKind};
+use zen::wire::{make_driver, TransportKind};
 use zen::workload::random_uniform_inputs as random_inputs;
 
 struct Config {
@@ -31,7 +32,7 @@ fn parse_args() -> Config {
         tiny: false,
         iters: 7,
         warmup: 2,
-        out: "BENCH_PR3.json".to_string(),
+        out: "BENCH_PR6.json".to_string(),
     };
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
@@ -98,11 +99,15 @@ fn main() {
         "strawman:8",
         "dense",
     ];
-    let backends = [TransportKind::Sim, TransportKind::Channel, TransportKind::Tcp];
+    let backends = [
+        TransportKind::Sim,
+        TransportKind::Channel,
+        TransportKind::Socket,
+    ];
 
     let mut json = String::new();
     json.push_str("{\n");
-    json.push_str("  \"pr\": 3,\n");
+    json.push_str("  \"pr\": 6,\n");
     json.push_str(&format!(
         "  \"config\": {{\"tiny\": {}, \"iters\": {}, \"warmup\": {}, \
          \"machines\": {machines}, \"dense_len\": {dense_len}, \"density\": {density}}},\n",
@@ -115,10 +120,10 @@ fn main() {
         let scheme = schemes::by_name(name, machines, 0x5eed, nnz).unwrap();
         let mut sim_ns = f64::NAN;
         for kind in backends {
-            // One transport per cell, reused across iterations (the TCP
+            // One driver per cell, reused across iterations (the socket
             // mesh persists; take_report resets per sync).
-            let mut tx = match make_transport(kind, &net) {
-                Ok(tx) => tx,
+            let mut drv = match make_driver(kind, &net) {
+                Ok(d) => d,
                 Err(e) => {
                     eprintln!("{name}/{}: backend unavailable ({e})", kind.name());
                     rows.push(format!(
@@ -135,7 +140,7 @@ fn main() {
             let mut bytes = 0u64;
             let ns = median_ns(cfg.warmup, cfg.iters, || {
                 let r = scheme
-                    .sync_transport(&inputs, tx.as_mut(), &mut scratch)
+                    .run(&inputs, drv.as_mut(), &mut scratch)
                     .expect("bench sync");
                 bytes = r.report.total_bytes();
                 std::hint::black_box(r.outputs.len());

@@ -4,7 +4,7 @@
 //!   cargo run --release --example quickstart
 
 use zen::cluster::{LinkKind, Network};
-use zen::schemes::{self, verify_outputs, SyncScheme};
+use zen::schemes::{self, verify_outputs, SyncScheme, SyncScratch};
 use zen::util::human_bytes;
 use zen::workload::{profiles, GradientGen};
 
@@ -27,7 +27,7 @@ fn main() {
         "scheme", "traffic", "hot recv", "time(ms)", "recv imbalance"
     );
     for scheme in schemes::all_schemes(machines, 7, gen.expected_nnz()) {
-        let r = scheme.sync(&inputs, &net);
+        let r = scheme.run_sim(&inputs, &net, &mut SyncScratch::new());
         // every scheme must produce the exact aggregation
         verify_outputs(&r, &inputs);
         println!(

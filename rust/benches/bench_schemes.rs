@@ -22,8 +22,9 @@ fn main() {
             inputs[0].nnz()
         );
         let mut dense_time = 0.0;
+        let mut scratch = schemes::SyncScratch::new();
         for scheme in schemes::all_schemes(n, 5, inputs[0].nnz()) {
-            let r = scheme.sync(&inputs, &net);
+            let r = scheme.run_sim(&inputs, &net, &mut scratch);
             let virt = r.report.comm_time();
             if scheme.name() == "AllReduce" {
                 dense_time = virt;
@@ -38,7 +39,11 @@ fn main() {
                 1,
                 5,
                 || {
-                    std::hint::black_box(scheme.sync(&inputs, &net));
+                    std::hint::black_box(scheme.run_sim(
+                        &inputs,
+                        &net,
+                        &mut schemes::SyncScratch::new(),
+                    ));
                 },
             );
         }

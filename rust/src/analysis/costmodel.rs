@@ -192,7 +192,7 @@ impl<'a, S: SparsityStats> CostModel<'a, S> {
     }
 
     /// Number of synchronous stages each planner candidate executes at
-    /// this `n` — mirrors the actual `sync_transport` protocols, which
+    /// this `n` — mirrors the actual protocol machines, which
     /// is what [`crate::cluster::Network::stage_time`] charges α for.
     pub fn stage_count(&self, scheme: &str) -> Option<usize> {
         let n = self.n;
@@ -293,7 +293,7 @@ impl<'a, S: SparsityStats> CostModel<'a, S> {
 
     /// Per-stage busiest-endpoint loads of a candidate, split by link
     /// class, under topology `t` — the classed twin of the flat closed
-    /// forms. The per-scheme structure mirrors each `sync_transport`
+    /// forms. The per-scheme structure mirrors each scheme's protocol
     /// protocol: p2p transfers split a rank's `n−1` peers into `g−1`
     /// co-located and `n−g` remote ones; doubling exchanges are
     /// node-local while the partner distance stays below the node size.

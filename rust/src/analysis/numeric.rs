@@ -72,8 +72,9 @@ pub fn fig7_sweep(
             Box::new(zen_hb),
         ];
         let mut normalized = vec![("Dense".to_string(), 1.0)];
+        let mut scratch = schemes::SyncScratch::new();
         for s in schemes_list.iter() {
-            let r = s.sync(&inputs, &net);
+            let r = s.run_sim(&inputs, &net, &mut scratch);
             normalized.push((s.name().to_string(), r.report.comm_time() / dense_time));
         }
         out.push(Fig7Point { n, normalized });

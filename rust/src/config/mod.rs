@@ -162,9 +162,10 @@ impl Args {
         }
     }
 
-    /// Parse a transport backend name (`sim`, `channel`, `tcp`). Unlike
-    /// [`link`](Args::link), an unknown value is an error — silently
-    /// simulating when the user asked for real frames would be wrong.
+    /// Parse a transport backend name (`sim`, `channel`, `socket`).
+    /// Unlike [`link`](Args::link), an unknown value is an error —
+    /// silently simulating when the user asked for real frames would be
+    /// wrong.
     pub fn transport(
         &self,
         key: &str,
@@ -173,7 +174,7 @@ impl Args {
         match self.get(key) {
             None => Ok(default),
             Some(v) => crate::wire::TransportKind::parse(v)
-                .ok_or_else(|| anyhow::anyhow!("unknown transport '{v}' (sim|channel|tcp)")),
+                .ok_or_else(|| anyhow::anyhow!("unknown transport '{v}' (sim|channel|socket)")),
         }
     }
 }
@@ -184,6 +185,25 @@ mod tests {
 
     fn parse(s: &str) -> Args {
         Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn transport_parses_socket_and_rejects_unknown() {
+        use crate::wire::TransportKind;
+        let a = parse("sim --transport socket");
+        assert_eq!(
+            a.transport("transport", TransportKind::Sim).unwrap(),
+            TransportKind::Socket
+        );
+        // Legacy spelling still lands on the socket mesh.
+        let b = parse("sim --transport tcp");
+        assert_eq!(
+            b.transport("transport", TransportKind::Sim).unwrap(),
+            TransportKind::Socket
+        );
+        let c = parse("sim --transport warp");
+        let err = c.transport("transport", TransportKind::Sim).unwrap_err();
+        assert!(err.to_string().contains("sim|channel|socket"), "{err}");
     }
 
     #[test]

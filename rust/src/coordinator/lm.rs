@@ -26,7 +26,7 @@ use crate::runtime::{lit, Executable, Runtime};
 use crate::schemes::{SyncScheme, SyncScratch};
 use crate::tensor::CooTensor;
 use crate::util::{Pcg64, Zipf};
-use crate::wire::{Transport, TransportKind};
+use crate::wire::{Driver, TransportKind};
 
 /// Model/shape configuration. Must match an exported artifact.
 #[derive(Clone, Debug)]
@@ -142,12 +142,90 @@ pub struct LmTrainer {
     /// Reused sync working memory — steps after the first reuse the
     /// warmed partition/payload buffers (scratch-arena layer).
     scratch: SyncScratch,
-    /// Data plane the scheme's protocol runs over, built once per
-    /// trainer (a TCP mesh persists across steps).
-    transport: Box<dyn Transport>,
+    /// Data plane the scheme's protocols run over, built once per
+    /// trainer (a socket mesh persists across steps).
+    driver: Box<dyn Driver>,
+}
+
+/// Validating builder for [`LmTrainer`]: collect the knobs, check them
+/// all at [`build`](LmTrainerBuilder::build), and get one combined
+/// error instead of the first panic or piecemeal `ensure!`.
+pub struct LmTrainerBuilder {
+    cfg: LmConfig,
+    scheme: String,
+    topo: Topology,
+    transport: TransportKind,
+    artifacts_dir: std::path::PathBuf,
+}
+
+impl LmTrainerBuilder {
+    pub fn scheme(mut self, name: &str) -> Self {
+        self.scheme = name.to_string();
+        self
+    }
+
+    pub fn topology(mut self, topo: Topology) -> Self {
+        self.topo = topo;
+        self
+    }
+
+    pub fn workers(mut self, workers: usize, link: LinkKind) -> Self {
+        self.topo = Topology::flat(workers, link);
+        self
+    }
+
+    pub fn transport(mut self, t: TransportKind) -> Self {
+        self.transport = t;
+        self
+    }
+
+    pub fn artifacts_dir(mut self, dir: &std::path::Path) -> Self {
+        self.artifacts_dir = dir.to_path_buf();
+        self
+    }
+
+    pub fn replan_threshold(mut self, t: f64) -> Self {
+        self.cfg.replan_threshold = t;
+        self
+    }
+
+    pub fn build(self) -> Result<LmTrainer> {
+        let mut problems = Vec::new();
+        if self.topo.endpoints() == 0 {
+            problems.push("topology must place at least one worker".to_string());
+        }
+        if !(0.0..=1.0).contains(&self.cfg.replan_threshold) {
+            problems.push(format!(
+                "replan threshold {} outside [0, 1]",
+                self.cfg.replan_threshold
+            ));
+        }
+        if !problems.is_empty() {
+            anyhow::bail!("{}", problems.join("; "));
+        }
+        LmTrainer::with_topology(
+            self.cfg,
+            &self.scheme,
+            self.topo,
+            self.transport,
+            &self.artifacts_dir,
+        )
+    }
 }
 
 impl LmTrainer {
+    /// Start a validating builder (defaults: scheme `zen`, 4 flat
+    /// Tcp25 workers, sim transport, `artifacts/`).
+    pub fn builder(cfg: LmConfig) -> LmTrainerBuilder {
+        LmTrainerBuilder {
+            cfg,
+            scheme: "zen".to_string(),
+            topo: Topology::flat(4, LinkKind::Tcp25),
+            transport: TransportKind::Sim,
+            artifacts_dir: std::path::PathBuf::from("artifacts"),
+        }
+    }
+
     /// Construct with the default virtual-time transport.
     pub fn new(
         cfg: LmConfig,
@@ -167,7 +245,7 @@ impl LmTrainer {
     }
 
     /// Construct with an explicit transport backend
-    /// (`zen train --transport sim|channel|tcp`) on a flat network.
+    /// (`zen train --transport sim|channel|socket`) on a flat network.
     pub fn with_transport(
         cfg: LmConfig,
         workers: usize,
@@ -225,26 +303,7 @@ impl LmTrainer {
         )
         .ok_or_else(|| anyhow::anyhow!("unknown scheme '{scheme_name}' (or 'auto')"))?;
         let net = Network::with_topology(topo);
-        if matches!(transport, TransportKind::Tcp) {
-            // Scheme-aware worst-frame estimate, shared with
-            // SimDriver::new; the runtime per-stream budget stays
-            // authoritative.
-            let est_payload = super::tcp_worst_frame_estimate(
-                scheme_name,
-                cfg.emb_params(),
-                expected_nnz,
-                workers,
-            );
-            let est_frame = est_payload + 64;
-            anyhow::ensure!(
-                est_frame <= crate::wire::MAX_TCP_INFLIGHT_BYTES,
-                "estimated worst gradient frame for scheme '{scheme_name}' is \
-                 ~{est_frame} B, over the tcp loopback budget ({} B) — use a \
-                 smaller shape or --transport channel",
-                crate::wire::MAX_TCP_INFLIGHT_BYTES
-            );
-        }
-        let transport = crate::wire::make_transport(transport, &net)?;
+        let driver = crate::wire::make_driver(transport, &net)?;
 
         let mut rng = Pcg64::seeded(cfg.seed);
         let scale = 1.0 / (cfg.dim as f64).sqrt();
@@ -273,7 +332,7 @@ impl LmTrainer {
 
             step_count: 0,
             scratch: SyncScratch::new(),
-            transport,
+            driver,
         })
     }
 
@@ -399,7 +458,7 @@ impl LmTrainer {
 
         // Plan, then synchronize the sparse embedding gradients (reused
         // scratch — steady-state steps don't pay allocator noise in the
-        // sync) over the trainer's transport backend. Fixed schemes make
+        // sync) over the trainer's data plane. Fixed schemes make
         // plan() a constant; `auto` serves its cached plan unless the
         // measured gradient density drifted past the hysteresis.
         let planned = self
@@ -407,7 +466,7 @@ impl LmTrainer {
             .plan("embedding", &worker_grads, &self.net.topo);
         let sync = planned
             .scheme
-            .sync_transport(&worker_grads, self.transport.as_mut(), &mut self.scratch)
+            .run(&worker_grads, self.driver.as_mut(), &mut self.scratch)
             .map_err(|e| {
                 anyhow::anyhow!("step {}: embedding gradient sync failed: {e}", self.step_count)
             })?;

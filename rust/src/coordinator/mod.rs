@@ -34,37 +34,6 @@ pub fn compute_time_per_iter(profile_name: &str) -> f64 {
     }
 }
 
-/// Conservative worst-frame payload estimate (bytes, excluding the
-/// frame header) for the up-front TCP in-flight check — shared by
-/// [`SimDriver`] and [`lm::LmTrainer`] so the two paths cannot drift.
-/// `per_node_nnz` is the expected non-zeros of one endpoint's tensor;
-/// `auto` takes the worst case across every planner candidate (a
-/// dense-chunk frame can exceed the densified COO one at low density).
-/// That is deliberately stricter than the scheme auto would *probably*
-/// pick: a density drift can legally re-plan onto any candidate
-/// mid-run, and an up-front rejection with guidance beats a mid-run
-/// transport panic. Workloads rejected under `auto` still run any
-/// fixed sparse scheme over TCP, or `auto` over `--transport channel`.
-pub(crate) fn tcp_worst_frame_estimate(
-    scheme: &str,
-    dense_len: usize,
-    per_node_nnz: usize,
-    endpoints: usize,
-) -> usize {
-    let lower = scheme.to_ascii_lowercase();
-    let dense_est = crate::util::ceil_div(dense_len, endpoints) * 4;
-    let densified_est = per_node_nnz.saturating_mul(endpoints).min(dense_len) * 8;
-    if lower == "allreduce" || lower == "dense" || lower == "omnireduce" {
-        dense_est
-    } else if lower == "sparcml" || lower.starts_with("agsparse") {
-        densified_est
-    } else if lower == "auto" {
-        dense_est.max(densified_est)
-    } else {
-        per_node_nnz * 8
-    }
-}
-
 /// Multi-tensor pipeline options: when set, the simulation synchronizes
 /// the model as per-layer gradients through [`crate::engine::SyncEngine`]
 /// (bucketing + compute/communication overlap) instead of one blocking
@@ -119,8 +88,8 @@ pub struct SimConfig {
     /// one-blocking-sync path.
     pub pipeline: Option<PipelineConfig>,
     /// Data plane the schemes run over: virtual-time sim (default),
-    /// real-frames channel fabric, or loopback TCP sockets
-    /// (`zen sim --transport sim|channel|tcp`).
+    /// real-frames channel fabric, or the readiness-polled loopback
+    /// socket mesh (`zen sim --transport sim|channel|socket`).
     pub transport: TransportKind,
 }
 
@@ -139,6 +108,104 @@ impl SimConfig {
             seed: 0xbeef,
             pipeline: None,
             transport: TransportKind::Sim,
+        }
+    }
+
+    /// Start a validating builder: every constraint is checked at
+    /// [`build`](SimConfigBuilder::build) and reported as one combined
+    /// `Err`, instead of surfacing piecemeal from [`SimDriver::new`].
+    pub fn builder(profile: ModelProfile, machines: usize, scheme: &str) -> SimConfigBuilder {
+        SimConfigBuilder {
+            cfg: SimConfig::new(profile, machines, scheme),
+        }
+    }
+}
+
+/// Validating builder for [`SimConfig`] (see [`SimConfig::builder`]).
+#[derive(Clone, Debug)]
+pub struct SimConfigBuilder {
+    cfg: SimConfig,
+}
+
+impl SimConfigBuilder {
+    pub fn scale(mut self, scale: usize) -> Self {
+        self.cfg.scale = scale;
+        self
+    }
+
+    pub fn gpus_per_machine(mut self, g: usize) -> Self {
+        self.cfg.gpus_per_machine = g;
+        self
+    }
+
+    pub fn link(mut self, link: LinkKind) -> Self {
+        self.cfg.link = link;
+        self
+    }
+
+    pub fn topology(mut self, topo: Topology) -> Self {
+        self.cfg.topology = Some(topo);
+        self
+    }
+
+    pub fn replan_threshold(mut self, t: f64) -> Self {
+        self.cfg.replan_threshold = t;
+        self
+    }
+
+    pub fn iterations(mut self, iters: usize) -> Self {
+        self.cfg.iterations = iters;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    pub fn pipeline(mut self, p: PipelineConfig) -> Self {
+        self.cfg.pipeline = Some(p);
+        self
+    }
+
+    pub fn transport(mut self, t: TransportKind) -> Self {
+        self.cfg.transport = t;
+        self
+    }
+
+    pub fn build(self) -> Result<SimConfig, String> {
+        let cfg = self.cfg;
+        let mut problems = Vec::new();
+        if cfg.machines == 0 {
+            problems.push("machines must be >= 1".to_string());
+        }
+        if cfg.scale == 0 {
+            problems.push("scale must be >= 1".to_string());
+        }
+        if cfg.gpus_per_machine == 0 {
+            problems.push("gpus_per_machine must be >= 1".to_string());
+        }
+        if !(0.0..=1.0).contains(&cfg.replan_threshold) {
+            problems.push(format!(
+                "replan threshold {} outside [0, 1]",
+                cfg.replan_threshold
+            ));
+        }
+        if let Some(p) = &cfg.pipeline {
+            if p.emb_shards == 0 {
+                problems
+                    .push("pipeline needs at least one embedding shard (--emb-shards)".to_string());
+            }
+        }
+        if let Some(t) = &cfg.topology {
+            if t.endpoints() == 0 {
+                problems.push("topology must place at least one rank".to_string());
+            }
+        }
+        if problems.is_empty() {
+            Ok(cfg)
+        } else {
+            Err(problems.join("; "))
         }
     }
 }
@@ -241,11 +308,6 @@ impl SimDriver {
                 p.emb_shards >= 1,
                 "pipeline needs at least one embedding shard (--emb-shards)"
             );
-            anyhow::ensure!(
-                cfg.transport != TransportKind::Tcp,
-                "engine mode builds one socket mesh per bucket — use \
-                 --transport sim|channel with --pipeline, or drop --pipeline"
-            );
         }
         let sync_topo = match &cfg.topology {
             Some(t) => {
@@ -268,35 +330,6 @@ impl SimDriver {
         } else {
             gen.expected_nnz() * cfg.gpus_per_machine.min(4)
         };
-        if cfg.transport == TransportKind::Tcp {
-            // TCP is the only fallible backend. Fail fast with a clean
-            // error, not a mid-run panic: (1) sockets must be available,
-            // (2) the worst-case frame (a full machine tensor, what
-            // AGsparse/SparCML ship) must fit the per-stream budget.
-            drop(crate::wire::make_transport(
-                cfg.transport,
-                &Network::with_topology(sync_topo.clone()),
-            )?);
-            // Worst-case per-stream bytes are scheme-dependent:
-            // point-to-point schemes ship at most one machine tensor per
-            // frame; SparCML/AGsparse ship densified aggregates (up to
-            // the union of all machines); the dense ring and OmniReduce
-            // ship positional chunks of the range. The estimate is
-            // conservative guidance — the runtime per-stream budget
-            // stays authoritative.
-            let dense_len = gen.profile.emb_params();
-            let est_payload =
-                tcp_worst_frame_estimate(&cfg.scheme, dense_len, endpoint_nnz, endpoints);
-            let est_frame = est_payload + 64;
-            anyhow::ensure!(
-                est_frame <= crate::wire::MAX_TCP_INFLIGHT_BYTES,
-                "estimated worst frame for scheme '{}' is ~{est_frame} B, over the \
-                 tcp loopback budget ({} B) — raise --scale (smaller tensors) or \
-                 use --transport channel",
-                cfg.scheme,
-                crate::wire::MAX_TCP_INFLIGHT_BYTES
-            );
-        }
         anyhow::ensure!(
             (0.0..=1.0).contains(&cfg.replan_threshold),
             "replan threshold {} outside [0, 1]",
@@ -440,14 +473,12 @@ impl SimDriver {
         let mut plan: Vec<BucketPlanReport> = Vec::new();
         // One scratch for the whole run: iterations after the first
         // reuse warmed buffers, so the compute charge in the reported
-        // stages reflects the algorithm, not the allocator. The
-        // transport is likewise built once (a TCP mesh persists across
+        // stages reflects the algorithm, not the allocator. The driver
+        // is likewise built once (a socket mesh persists across
         // iterations) and reset by each sync's `take_report`.
         let mut scratch = SyncScratch::new();
-        // Constructibility was validated in `new`; a failure here is a
-        // transient environment change mid-run.
-        let mut tx = crate::wire::make_transport(self.cfg.transport, &net)
-            .expect("sim transport setup (validated at construction)");
+        let mut driver = crate::wire::make_driver(self.cfg.transport, &net)
+            .expect("sim driver setup");
 
         for it in 0..self.cfg.iterations as u64 {
             // Flat path: each machine's tensor = aggregate of its g
@@ -461,10 +492,10 @@ impl SimDriver {
             let planned = self.planner.plan("embedding", &inputs, &net.topo);
             let result = planned
                 .scheme
-                .sync_transport(&inputs, tx.as_mut(), &mut scratch)
+                .run(&inputs, driver.as_mut(), &mut scratch)
                 .unwrap_or_else(|e| {
                     panic!(
-                        "embedding sync failed on the {} transport: {e}",
+                        "embedding sync failed on the {} data plane: {e}",
                         self.cfg.transport.name()
                     )
                 });
@@ -761,12 +792,26 @@ mod tests {
     }
 
     #[test]
-    fn pipelined_tcp_rejected() {
-        // Engine mode would build one socket mesh per bucket; the
-        // combination is refused with a clean error at construction.
-        let mut c = pipelined_cfg("zen", 4);
-        c.transport = TransportKind::Tcp;
-        assert!(SimDriver::new(c).is_err());
+    fn builder_collects_all_problems() {
+        let err = SimConfig::builder(profiles::by_name("DeepFM").unwrap(), 4, "zen")
+            .replan_threshold(1.5)
+            .pipeline(PipelineConfig {
+                bucket_bytes: 64 * 1024,
+                dense_layers: 3,
+                emb_shards: 0,
+            })
+            .build()
+            .unwrap_err();
+        assert!(err.contains("replan threshold"), "{err}");
+        assert!(err.contains("embedding shard"), "{err}");
+
+        let ok = SimConfig::builder(profiles::by_name("DeepFM").unwrap(), 4, "zen")
+            .transport(TransportKind::Socket)
+            .iterations(1)
+            .build()
+            .unwrap();
+        assert_eq!(ok.transport, TransportKind::Socket);
+        assert_eq!(ok.iterations, 1);
     }
 
     #[test]

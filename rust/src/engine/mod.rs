@@ -24,9 +24,9 @@
 //!    synchronizes with the *same* scheme protocol the single-tensor
 //!    path uses (bucket-level reuse — Zen, AllReduce, SparCML, … all
 //!    work unchanged), concurrently on a [`crate::util::ThreadPool`],
-//!    over the transport backend selected by
+//!    over the data plane selected by
 //!    [`EngineConfig::transport`] (virtual-time sim, real-frames
-//!    channel, or loopback TCP);
+//!    channel, or the loopback socket mesh);
 //! 3. a [`Timeline`] charges virtual time twice: **serialized** (compute,
 //!    then every bucket in turn — the one-blocking-`sync()` baseline)
 //!    and **overlapped** (bucket *k*'s communication may start at
@@ -58,10 +58,11 @@ pub struct EngineConfig {
     /// layer readiness is `compute_time × ready_frac`.
     pub compute_time: f64,
     /// Data plane every bucket sync runs over: the virtual-time
-    /// simulator (default), the real-frames channel fabric, or loopback
-    /// TCP. Each in-flight bucket gets its own transport instance —
-    /// cheap for sim/channel; for TCP this opens a fresh socket mesh
-    /// per bucket, so prefer the flat (`SimDriver`) path for TCP runs.
+    /// simulator (default), the real-frames channel fabric, or the
+    /// readiness-polled loopback socket mesh. Each in-flight bucket
+    /// gets its own driver instance — cheap for sim/channel; the socket
+    /// driver opens a fresh mesh per bucket, so prefer the flat
+    /// (`SimDriver`) path for socket runs.
     pub transport: TransportKind,
 }
 
@@ -75,10 +76,74 @@ impl EngineConfig {
         }
     }
 
+    /// Start a validating builder (errors at `build()` instead of
+    /// panicking mid-construction).
+    pub fn builder() -> EngineConfigBuilder {
+        EngineConfigBuilder::default()
+    }
+
     /// Select the data plane (builder style).
     pub fn with_transport(mut self, transport: TransportKind) -> Self {
         self.transport = transport;
         self
+    }
+}
+
+/// Validating builder for [`EngineConfig`]: all checks run at
+/// [`build`](EngineConfigBuilder::build), returning `Err` with every
+/// violated constraint instead of panicking.
+#[derive(Clone, Debug)]
+pub struct EngineConfigBuilder {
+    bucket_bytes: usize,
+    compute_time: f64,
+    transport: TransportKind,
+}
+
+impl Default for EngineConfigBuilder {
+    fn default() -> Self {
+        EngineConfigBuilder {
+            bucket_bytes: usize::MAX,
+            compute_time: 0.0,
+            transport: TransportKind::Sim,
+        }
+    }
+}
+
+impl EngineConfigBuilder {
+    /// Bucket close threshold in estimated wire bytes.
+    pub fn bucket_bytes(mut self, bytes: usize) -> Self {
+        self.bucket_bytes = bytes;
+        self
+    }
+
+    /// Modeled backward-pass time (virtual seconds).
+    pub fn compute_time(mut self, seconds: f64) -> Self {
+        self.compute_time = seconds;
+        self
+    }
+
+    /// Data plane every bucket sync runs over.
+    pub fn transport(mut self, transport: TransportKind) -> Self {
+        self.transport = transport;
+        self
+    }
+
+    pub fn build(self) -> Result<EngineConfig, String> {
+        let mut problems = Vec::new();
+        if !self.compute_time.is_finite() || self.compute_time < 0.0 {
+            problems.push(format!(
+                "compute_time must be finite and >= 0, got {}",
+                self.compute_time
+            ));
+        }
+        if !problems.is_empty() {
+            return Err(problems.join("; "));
+        }
+        Ok(EngineConfig {
+            bucket_bytes: self.bucket_bytes,
+            compute_time: self.compute_time,
+            transport: self.transport,
+        })
     }
 }
 
@@ -276,7 +341,7 @@ impl SyncEngine {
         type Synced = (
             Bucket,
             crate::planner::PlannedSync,
-            crate::schemes::SyncResult,
+            crate::schemes::SyncOutput,
         );
         let synced: Vec<Synced> = self.pool.map(buckets, |b| {
             let inputs: Vec<CooTensor> = per_worker_layers
@@ -285,17 +350,18 @@ impl SyncEngine {
                 .collect();
             let planned = planner.plan(&b.label(specs), &inputs, &net.topo);
             let mut scratch = self.scratch.acquire();
-            let mut tx = crate::wire::make_transport(self.cfg.transport, net)
-                .expect("engine transport setup");
-            // The engine owns both ends of its in-process transports, so
-            // a mid-sync wire error here is unrecoverable state, not a
-            // flaky peer — fail loudly with the bucket context.
+            let mut driver =
+                crate::wire::make_driver(self.cfg.transport, net).expect("engine driver setup");
+            // The engine owns every endpoint of its in-process data
+            // planes, so a mid-sync wire error here is unrecoverable
+            // state, not a flaky peer — fail loudly with the bucket
+            // context.
             let result = planned
                 .scheme
-                .sync_transport(&inputs, tx.as_mut(), &mut scratch)
+                .run(&inputs, driver.as_mut(), &mut scratch)
                 .unwrap_or_else(|e| {
                     panic!(
-                        "bucket '{}' sync failed on the {} transport: {e}",
+                        "bucket '{}' sync failed on the {} data plane: {e}",
                         b.label(specs),
                         self.cfg.transport.name()
                     )
@@ -518,6 +584,23 @@ mod tests {
         let again = engine.run(&specs, &layers, &planner, &net, |r| r.comm_time());
         assert!(again.buckets.iter().all(|b| !b.replanned));
         assert_eq!(planner.profile_count(), specs.len(), "O(warm-up) profiling");
+    }
+
+    #[test]
+    fn builder_validates_instead_of_panicking() {
+        let ok = EngineConfig::builder()
+            .bucket_bytes(16 * 1024)
+            .compute_time(0.05)
+            .transport(crate::wire::TransportKind::Channel)
+            .build()
+            .expect("valid config");
+        assert_eq!(ok.bucket_bytes, 16 * 1024);
+        assert_eq!(ok.transport, crate::wire::TransportKind::Channel);
+        let err = EngineConfig::builder().compute_time(-1.0).build();
+        assert!(err.is_err());
+        assert!(err.unwrap_err().contains("compute_time"));
+        let nan = EngineConfig::builder().compute_time(f64::NAN).build();
+        assert!(nan.is_err());
     }
 
     #[test]

@@ -467,7 +467,10 @@ pub fn fig7_measured_for(profile: &ModelProfile, machine_counts: &[usize], seed:
             let scheme = schemes::by_name(name, n, seed ^ 0x5a5a, gen.expected_nnz()).unwrap();
             // comm_time() is pure stage time — Zen's hashing charge
             // lands in compute_overhead and stays out of this column.
-            let measured = scheme.sync(&inputs, &net).report.comm_time();
+            let measured = scheme
+                .run_sim(&inputs, &net, &mut schemes::SyncScratch::new())
+                .report
+                .comm_time();
             t.row(vec![
                 n.to_string(),
                 scheme.name().to_string(),

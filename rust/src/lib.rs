@@ -31,3 +31,33 @@ pub mod tensor;
 pub mod util;
 pub mod wire;
 pub mod workload;
+
+/// The supported public surface in one import.
+///
+/// ```no_run
+/// use zen::prelude::*;
+///
+/// let inputs: Vec<CooTensor> = /* per-rank sparse gradients */ vec![];
+/// let net = Network::new(4, LinkKind::Tcp25);
+/// let scheme = schemes::by_name("zen", 4, 7, 1024).unwrap();
+/// let out = scheme.run_sim(&inputs, &net, &mut SyncScratch::new());
+/// # let _ = out;
+/// ```
+///
+/// Everything here is semver-intended API; paths *not* re-exported
+/// (e.g. `wire::fabric` internals, per-scheme machine types) are
+/// implementation detail and may change without notice. See DESIGN.md
+/// § "API boundary".
+pub mod prelude {
+    pub use crate::cluster::{CommReport, LinkKind, Network, Topology};
+    pub use crate::coordinator::lm::{LmConfig, LmTrainer};
+    pub use crate::coordinator::{PipelineConfig, SimConfig, SimDriver, SimResult};
+    pub use crate::engine::{EngineConfig, SyncEngine};
+    pub use crate::planner;
+    pub use crate::schemes::{self, SyncOutput, SyncScheme, SyncScratch};
+    pub use crate::tensor::CooTensor;
+    pub use crate::wire::{
+        make_driver, Driver, Event, Protocol, SocketDriver, Transport, TransportDriver,
+        TransportKind, WireError, WorkerDriver,
+    };
+}

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   sim     simulate data-parallel training on a Table-1 workload
 //!   train   really train the embedding LM through the AOT stack
+//!   worker  one rank of a two-process sync over real sockets
 //!   schemes list schemes and their Table-2 dimensions
 //!
 //! Examples:
@@ -11,8 +12,10 @@
 //!   zen sim --model DeepFM --scheme auto --topology 4x2:2,300/50,25
 //!   zen sim --model LSTM --machines 16 --scheme zen --pipeline --bucket-kb 256
 //!   zen sim --model DeepFM --machines 8 --scheme zen --transport channel
-//!   zen sim --model DeepFM --machines 4 --gpus 1 --scale 2048 --transport tcp
+//!   zen sim --model DeepFM --machines 4 --gpus 1 --scale 2048 --transport socket
 //!   zen train --shape tiny --workers 4 --scheme auto --steps 50
+//!   zen worker --listen 127.0.0.1:4700 --scheme zen   # terminal 1
+//!   zen worker --connect 127.0.0.1:4700 --scheme zen  # terminal 2
 //!   zen schemes
 //!
 //! `--scheme auto` hands scheme choice to the cost-model planner: each
@@ -41,20 +44,112 @@ fn main() -> anyhow::Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("sim") => cmd_sim(&args),
         Some("train") => cmd_train(&args),
+        Some("worker") => cmd_worker(&args),
         Some("schemes") => cmd_schemes(),
         _ => {
             eprintln!(
-                "usage: zen <sim|train|schemes> [--options]\n\
-                 sim:   --model LSTM|DeepFM|NMT|BERT --machines N --scheme S|auto\n\
-                        --link tcp25|rdma100 --transport sim|channel|tcp\n\
-                        --topology NxG[:ia,ib/ea,eb] (two-level cluster)\n\
-                        --replan-threshold R (auto hysteresis, default 0.25)\n\
-                 train: --shape tiny|paper_100m --workers N --scheme S|auto --steps N\n\
-                        --transport sim|channel|tcp --topology NxG --replan-threshold R"
+                "usage: zen <sim|train|worker|schemes> [--options]\n\
+                 sim:    --model LSTM|DeepFM|NMT|BERT --machines N --scheme S|auto\n\
+                         --link tcp25|rdma100 --transport sim|channel|socket\n\
+                         --topology NxG[:ia,ib/ea,eb] (two-level cluster)\n\
+                         --replan-threshold R (auto hysteresis, default 0.25)\n\
+                 train:  --shape tiny|paper_100m --workers N --scheme S|auto --steps N\n\
+                         --transport sim|channel|socket --topology NxG --replan-threshold R\n\
+                 worker: --listen ADDR | --connect ADDR (one rank per process)\n\
+                         --scheme S --dense-len N --shared N --private N --seed N"
             );
             Ok(())
         }
     }
+}
+
+/// One rank of a two-process synchronization: the listener is rank 0,
+/// the connector rank 1. Both processes derive the *same* pair of
+/// sparse gradients from `--seed` (a shared hot set plus per-rank
+/// private tails), so the protocol runs over real sockets without any
+/// out-of-band gradient shipping, and both sides can independently
+/// verify they produced the identical aggregate.
+fn cmd_worker(args: &Args) -> anyhow::Result<()> {
+    use zen::cluster::Network;
+    use zen::schemes::{SyncScheme, SyncScratch};
+    use zen::wire::WorkerDriver;
+
+    let scheme_name = args.get_or("scheme", "zen");
+    let dense_len = args.get_usize("dense-len", 100_000);
+    let shared = args.get_usize("shared", 1_500);
+    let private = args.get_usize("private", 500);
+    let seed = args.get_u64("seed", 0x2e2);
+    let link = args.link("link", LinkKind::Tcp25);
+    let net = Network::new(2, link);
+    let mut driver = match (args.get("listen"), args.get("connect")) {
+        (Some(addr), None) => WorkerDriver::listen(addr, net)?,
+        (None, Some(addr)) => WorkerDriver::connect(addr, net)?,
+        _ => anyhow::bail!("worker needs exactly one of --listen ADDR or --connect ADDR"),
+    };
+    let rank = driver.rank();
+    let inputs = worker_inputs(seed, 2, dense_len, shared, private);
+    let expected_nnz = shared + private;
+    let scheme = zen::schemes::by_name(scheme_name, 2, seed ^ 0x5eed, expected_nnz)
+        .ok_or_else(|| anyhow::anyhow!("unknown scheme '{scheme_name}'"))?;
+    let sync = scheme.run(&inputs, &mut driver, &mut SyncScratch::new())?;
+    println!(
+        "rank={rank} scheme={} bytes={} digest={:016x}",
+        scheme.name(),
+        sync.report.total_bytes(),
+        fnv_digest(&sync.outputs[rank]),
+    );
+    Ok(())
+}
+
+/// Deterministic per-rank inputs shared by both worker processes: a
+/// common hot set (seeded by `seed` alone) plus a per-rank private tail.
+fn worker_inputs(
+    seed: u64,
+    n: usize,
+    dense_len: usize,
+    shared: usize,
+    private: usize,
+) -> Vec<zen::tensor::CooTensor> {
+    use zen::util::Pcg64;
+    let mut rng = Pcg64::seeded(seed);
+    let hot: Vec<usize> = rng.sample_distinct(dense_len, shared);
+    (0..n)
+        .map(|w| {
+            let mut idx: Vec<u32> = hot.iter().map(|&i| i as u32).collect();
+            let mut priv_rng = Pcg64::new(seed ^ w as u64, 55);
+            for _ in 0..private {
+                idx.push(priv_rng.below(dense_len as u64) as u32);
+            }
+            idx.sort_unstable();
+            idx.dedup();
+            let vals: Vec<f32> = idx
+                .iter()
+                .map(|_| priv_rng.next_f32() * 2.0 - 1.0)
+                .map(|v| if v == 0.0 { 0.5 } else { v })
+                .collect();
+            zen::tensor::CooTensor::from_sorted(dense_len, idx, vals)
+        })
+        .collect()
+}
+
+/// FNV-1a over the output's indices and value bit patterns — a cheap
+/// cross-process fingerprint for asserting bit-identical aggregates.
+fn fnv_digest(t: &zen::tensor::CooTensor) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |h: &mut u64, bytes: &[u8]| {
+        for &b in bytes {
+            *h ^= b as u64;
+            *h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    eat(&mut h, &(t.dense_len as u64).to_le_bytes());
+    for &i in &t.indices {
+        eat(&mut h, &i.to_le_bytes());
+    }
+    for &v in &t.values {
+        eat(&mut h, &v.to_bits().to_le_bytes());
+    }
+    h
 }
 
 fn cmd_sim(args: &Args) -> anyhow::Result<()> {
@@ -222,7 +317,12 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         scheme,
         transport.name()
     );
-    let mut t = LmTrainer::with_topology(cfg, scheme, topo, transport, &artifacts)?;
+    let mut t = LmTrainer::builder(cfg)
+        .scheme(scheme)
+        .topology(topo)
+        .transport(transport)
+        .artifacts_dir(&artifacts)
+        .build()?;
     let log = t.run(steps, args.get_usize("log-every", 10), true)?;
     println!(
         "done: final loss {:.4}, total emb comm {:.1}ms (virtual), compute {:.1}s (wall)",

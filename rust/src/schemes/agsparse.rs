@@ -4,15 +4,22 @@
 //! locally (one-shot, Centralization). Three communication patterns are
 //! implemented, matching footnote 1 ("different implementations for
 //! AGsparse with different communication patterns"): point-to-point
-//! (default), ring, and hierarchy (recursive doubling) — each expressed
-//! as `PushCoo` frames over the transport.
+//! (default), ring, and hierarchy (recursive doubling) — each built as
+//! per-rank sans-IO machines exchanging `PushCoo` frames.
 //!
 //! Traffic per GPU grows with `Σ_j nnz_j` — overlaps between tensors are
 //! transmitted in full and reduced only at the destination, which is why
 //! AGsparse degrades past ~40 GPUs in Fig 7.
+//!
+//! The hierarchy machines never gossip set sizes: after the fold-in a
+//! rank's set size is `2` for the fold targets and `1` otherwise, and
+//! each doubling stage adds the partner's size — fully determined by
+//! `(n, rank, stage)`, so every rank computes its partner's expected
+//! frame count locally and parks on `NeedFrame` until they arrived.
 
 use super::*;
 use crate::util::largest_pow2_at_most;
+use crate::wire::{Event, Inbox};
 
 /// Which all-gather topology to use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -57,128 +64,412 @@ impl SyncScheme for AgSparse {
         }
     }
 
-    fn sync_transport(
-        &self,
-        inputs: &[CooTensor],
-        tx: &mut dyn Transport,
-        _scratch: &mut SyncScratch,
-    ) -> Result<SyncResult, crate::wire::WireError> {
+    fn protocols<'a>(&'a self, inputs: &'a [CooTensor]) -> Vec<Box<dyn Protocol + 'a>> {
         let n = inputs.len();
-        assert_eq!(n, tx.endpoints());
+        (0..n)
+            .map(|rank| match self.pattern {
+                AgPattern::PointToPoint => {
+                    Box::new(P2pMachine::new(rank, inputs)) as Box<dyn Protocol + 'a>
+                }
+                AgPattern::Ring => Box::new(RingAgMachine::new(rank, inputs)),
+                AgPattern::Hierarchy => Box::new(HierMachine::new(rank, inputs)),
+            })
+            .collect()
+    }
+}
 
-        let outputs = match self.pattern {
-            AgPattern::PointToPoint => {
-                // One stage: node i broadcasts its tensor to all others.
-                for (i, t) in inputs.iter().enumerate() {
-                    for j in 0..n {
-                        if j != i {
-                            tx.send(i, j, push_frame(i, t))?;
-                        }
-                    }
-                }
-                let mut outputs = Vec::with_capacity(n);
-                for j in 0..n {
-                    let mut got = Vec::with_capacity(n - 1);
-                    for _ in 0..n.saturating_sub(1) {
-                        got.push(expect_push(tx.recv(j)?).1);
-                    }
-                    outputs.push(merge_with_own(&got, &inputs[j]));
-                }
-                tx.end_stage("ag-p2p")?;
-                outputs
-            }
-            AgPattern::Ring => {
-                // n−1 stages; stage s: node i forwards the tensor that
-                // originated at (i − s) mod n to (i + 1) mod n.
-                let mut received: Vec<Vec<CooTensor>> =
-                    (0..n).map(|_| Vec::with_capacity(n - 1)).collect();
-                for s in 0..n.saturating_sub(1) {
-                    for i in 0..n {
-                        let origin = (i + n - s) % n;
-                        let t = if s == 0 {
-                            &inputs[i]
-                        } else {
-                            received[i].last().expect("ring holds the last tensor")
-                        };
-                        tx.send(i, (i + 1) % n, push_frame(origin, t))?;
-                    }
-                    for (i, store) in received.iter_mut().enumerate() {
-                        let (from, t) = expect_push(tx.recv(i)?);
-                        assert_eq!(from as usize, (i + n - 1 - s) % n, "ring origin");
-                        store.push(t);
-                    }
-                    tx.end_stage("ag-ring")?;
-                }
-                (0..n)
-                    .map(|i| merge_with_own(&received[i], &inputs[i]))
-                    .collect()
-            }
-            AgPattern::Hierarchy => {
-                // Recursive doubling over the largest power-of-two core,
-                // with a SparCML-style fold for the excess nodes: each
-                // excess node core+j first folds its tensor into core
-                // node j, the core exchanges *sets* of original tensors
-                // at doubling distances (disjoint blocks, so no dedup),
-                // and the final aggregate folds back out. Power-of-two n
-                // keeps the classic scheduled (the fold stages vanish),
-                // which the pow-2 tests pin as the oracle.
-                let core = largest_pow2_at_most(n);
-                let excess = n - core;
-                let mut sets: Vec<Vec<CooTensor>> =
-                    inputs.iter().map(|t| vec![t.clone()]).collect();
-                if excess > 0 {
-                    for j in 0..excess {
-                        let src = core + j;
-                        tx.send(src, j, push_frame(src, &inputs[src]))?;
-                    }
-                    for (j, set) in sets.iter_mut().enumerate().take(excess) {
-                        set.push(expect_push(tx.recv(j)?).1);
-                    }
-                    tx.end_stage("ag-hier-fold-in")?;
-                }
-                let mut dist = 1;
-                while dist < core {
-                    // Set sizes differ once a fold happened: snapshot
-                    // them so each receiver knows its partner's count.
-                    let sizes: Vec<usize> = sets[..core].iter().map(|s| s.len()).collect();
-                    for (i, set) in sets.iter().enumerate().take(core) {
-                        let peer = i ^ dist;
-                        for t in set {
-                            tx.send(i, peer, push_frame(i, t))?;
-                        }
-                    }
-                    for i in 0..core {
-                        for _ in 0..sizes[i ^ dist] {
-                            let t = expect_push(tx.recv(i)?).1;
-                            sets[i].push(t);
-                        }
-                    }
-                    tx.end_stage("ag-hier")?;
-                    dist <<= 1;
-                }
-                // Core nodes hold every tensor; aggregate one-shot, then
-                // fold the (much smaller) aggregate back out.
-                let mut outputs: Vec<CooTensor> = sets[..core]
-                    .iter()
-                    .map(|set| CooTensor::merge_all(set))
-                    .collect();
-                if excess > 0 {
-                    for (j, out) in outputs.iter().enumerate().take(excess) {
-                        tx.send(j, core + j, push_frame(j, out))?;
-                    }
-                    for j in 0..excess {
-                        outputs.push(expect_push(tx.recv(core + j)?).1);
-                    }
-                    tx.end_stage("ag-hier-fold-out")?;
-                }
-                outputs
-            }
-        };
+// --- Point-to-point: one stage, everyone broadcasts, merge at closure.
 
-        Ok(SyncResult {
-            outputs,
-            report: tx.take_report(),
-        })
+struct P2pMachine<'a> {
+    rank: usize,
+    n: usize,
+    inputs: &'a [CooTensor],
+    inbox: Inbox,
+    cursor: usize,
+    parked: bool,
+    output: Option<CooTensor>,
+}
+
+impl<'a> P2pMachine<'a> {
+    fn new(rank: usize, inputs: &'a [CooTensor]) -> P2pMachine<'a> {
+        P2pMachine {
+            rank,
+            n: inputs.len(),
+            inputs,
+            inbox: Inbox::new(inputs.len()),
+            cursor: 0,
+            parked: false,
+            output: None,
+        }
+    }
+}
+
+impl Protocol for P2pMachine<'_> {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn poll(&mut self, _scratch: &mut SyncScratch) -> Result<Event, WireError> {
+        if let Some(out) = self.output.take() {
+            return Ok(Event::Complete(out));
+        }
+        while self.cursor < self.n {
+            let j = self.cursor;
+            self.cursor += 1;
+            if j != self.rank {
+                return Ok(Event::Send {
+                    dst: j,
+                    msg: push_msg(self.rank, &self.inputs[self.rank]),
+                });
+            }
+        }
+        self.parked = true;
+        Ok(Event::StageDone { name: "ag-p2p" })
+    }
+
+    fn deliver(&mut self, src: usize, msg: Message) -> Result<(), WireError> {
+        self.inbox.push(src, msg);
+        Ok(())
+    }
+
+    fn stage_closed(&mut self, name: &str) -> Result<(), WireError> {
+        assert_eq!(name, "ag-p2p");
+        let got: Vec<CooTensor> = self
+            .inbox
+            .drain_ascending()
+            .into_iter()
+            .map(|(_, msg)| expect_push(msg).1)
+            .collect();
+        self.output = Some(merge_with_own(&got, &self.inputs[self.rank]));
+        Ok(())
+    }
+}
+
+// --- Ring: n−1 stages; forward the last-received tensor each step.
+
+struct RingAgMachine<'a> {
+    rank: usize,
+    n: usize,
+    inputs: &'a [CooTensor],
+    inbox: Inbox,
+    /// Current step `s`; `sent` marks this step's frame as emitted.
+    step: usize,
+    sent: bool,
+    parked: bool,
+    received: Vec<CooTensor>,
+}
+
+impl<'a> RingAgMachine<'a> {
+    fn new(rank: usize, inputs: &'a [CooTensor]) -> RingAgMachine<'a> {
+        let n = inputs.len();
+        RingAgMachine {
+            rank,
+            n,
+            inputs,
+            inbox: Inbox::new(n),
+            step: 0,
+            sent: false,
+            parked: false,
+            received: Vec::with_capacity(n.saturating_sub(1)),
+        }
+    }
+
+    fn pred(&self) -> usize {
+        (self.rank + self.n - 1) % self.n
+    }
+}
+
+impl Protocol for RingAgMachine<'_> {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn poll(&mut self, _scratch: &mut SyncScratch) -> Result<Event, WireError> {
+        if self.step >= self.n.saturating_sub(1) {
+            let out = merge_with_own(&self.received, &self.inputs[self.rank]);
+            return Ok(Event::Complete(out));
+        }
+        if !self.sent {
+            self.sent = true;
+            let s = self.step;
+            let origin = (self.rank + self.n - s) % self.n;
+            let t = if s == 0 {
+                &self.inputs[self.rank]
+            } else {
+                self.received.last().expect("ring holds the last tensor")
+            };
+            return Ok(Event::Send {
+                dst: (self.rank + 1) % self.n,
+                msg: push_msg(origin, t),
+            });
+        }
+        if self.parked {
+            return Ok(Event::StageDone { name: "ag-ring" });
+        }
+        let pred = self.pred();
+        match self.inbox.take_from(pred) {
+            Some(msg) => {
+                let (from, t) = expect_push(msg);
+                assert_eq!(
+                    from as usize,
+                    (self.rank + self.n - 1 - self.step) % self.n,
+                    "ring origin"
+                );
+                self.received.push(t);
+                self.parked = true;
+                Ok(Event::StageDone { name: "ag-ring" })
+            }
+            None => Ok(Event::NeedFrame { src: pred }),
+        }
+    }
+
+    fn deliver(&mut self, src: usize, msg: Message) -> Result<(), WireError> {
+        self.inbox.push(src, msg);
+        Ok(())
+    }
+
+    fn stage_closed(&mut self, name: &str) -> Result<(), WireError> {
+        assert_eq!(name, "ag-ring");
+        self.step += 1;
+        self.sent = false;
+        self.parked = false;
+        Ok(())
+    }
+}
+
+// --- Hierarchy: fold-in, recursive doubling over the pow-2 core,
+// fold-out.
+
+enum HierPhase {
+    /// Fold-in stage (skipped when n is a power of two).
+    FoldIn,
+    /// Doubling stage at distance `dist`.
+    Double { dist: usize },
+    /// Fold the aggregate back out to the excess ranks.
+    FoldOut,
+    Done,
+}
+
+struct HierMachine<'a> {
+    rank: usize,
+    n: usize,
+    core: usize,
+    excess: usize,
+    inputs: &'a [CooTensor],
+    inbox: Inbox,
+    phase: HierPhase,
+    /// Send progress within the current stage.
+    send_cursor: usize,
+    parked: bool,
+    /// The set of original tensors this rank has gathered (core ranks).
+    set: Vec<CooTensor>,
+    output: Option<CooTensor>,
+}
+
+impl<'a> HierMachine<'a> {
+    fn new(rank: usize, inputs: &'a [CooTensor]) -> HierMachine<'a> {
+        let n = inputs.len();
+        let core = largest_pow2_at_most(n);
+        let excess = n - core;
+        HierMachine {
+            rank,
+            n,
+            core,
+            excess,
+            inputs,
+            inbox: Inbox::new(n),
+            phase: if excess > 0 {
+                HierPhase::FoldIn
+            } else {
+                HierPhase::Double { dist: 1 }
+            },
+            send_cursor: 0,
+            parked: false,
+            set: vec![inputs[rank].clone()],
+            output: None,
+        }
+    }
+
+    /// The deterministic set size of core rank `i` before the doubling
+    /// stage at distance `dist`: 2 for fold targets, 1 otherwise, then
+    /// doubled per completed stage.
+    fn set_size_before(&self, i: usize, dist: usize) -> usize {
+        let mut size = if i < self.excess { 2 } else { 1 };
+        let mut d = 1;
+        while d < dist {
+            size += self.set_size_at(i ^ d, d);
+            d <<= 1;
+        }
+        size
+    }
+
+    /// Recursive helper: set size of rank `i` entering distance `d`.
+    fn set_size_at(&self, i: usize, d: usize) -> usize {
+        self.set_size_before(i, d)
+    }
+}
+
+impl Protocol for HierMachine<'_> {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn poll(&mut self, _scratch: &mut SyncScratch) -> Result<Event, WireError> {
+        loop {
+            match self.phase {
+                HierPhase::FoldIn => {
+                    if self.parked {
+                        return Ok(Event::StageDone {
+                            name: "ag-hier-fold-in",
+                        });
+                    }
+                    if self.rank >= self.core {
+                        // Excess rank: fold the tensor into core rank j.
+                        let j = self.rank - self.core;
+                        if self.send_cursor == 0 {
+                            self.send_cursor = 1;
+                            return Ok(Event::Send {
+                                dst: j,
+                                msg: push_msg(self.rank, &self.inputs[self.rank]),
+                            });
+                        }
+                        self.parked = true;
+                        return Ok(Event::StageDone {
+                            name: "ag-hier-fold-in",
+                        });
+                    }
+                    if self.rank < self.excess {
+                        // Fold target: consume exactly one frame.
+                        let src = self.core + self.rank;
+                        match self.inbox.take_from(src) {
+                            Some(msg) => {
+                                self.set.push(expect_push(msg).1);
+                                self.parked = true;
+                                return Ok(Event::StageDone {
+                                    name: "ag-hier-fold-in",
+                                });
+                            }
+                            None => return Ok(Event::NeedFrame { src }),
+                        }
+                    }
+                    // Core rank with no fold partner: idle this stage.
+                    self.parked = true;
+                    return Ok(Event::StageDone {
+                        name: "ag-hier-fold-in",
+                    });
+                }
+                HierPhase::Double { dist } => {
+                    if dist >= self.core {
+                        // Doubling finished: aggregate, then fold out.
+                        if self.rank < self.core {
+                            self.output = Some(CooTensor::merge_all(&self.set));
+                            self.set.clear();
+                        }
+                        if self.excess > 0 {
+                            self.phase = HierPhase::FoldOut;
+                            continue;
+                        }
+                        self.phase = HierPhase::Done;
+                        continue;
+                    }
+                    if self.parked {
+                        return Ok(Event::StageDone { name: "ag-hier" });
+                    }
+                    if self.rank >= self.core {
+                        self.parked = true;
+                        return Ok(Event::StageDone { name: "ag-hier" });
+                    }
+                    let peer = self.rank ^ dist;
+                    // Send the whole set, one frame per tensor.
+                    if self.send_cursor < self.set.len() {
+                        let t = &self.set[self.send_cursor];
+                        let msg = push_msg(self.rank, t);
+                        self.send_cursor += 1;
+                        return Ok(Event::Send { dst: peer, msg });
+                    }
+                    // Then consume the partner's (locally computed) count.
+                    let expected = self.set_size_before(peer, dist);
+                    if self.inbox.from_src(peer) < expected {
+                        return Ok(Event::NeedFrame { src: peer });
+                    }
+                    for _ in 0..expected {
+                        let msg = self.inbox.take_from(peer).expect("counted above");
+                        self.set.push(expect_push(msg).1);
+                    }
+                    self.parked = true;
+                    return Ok(Event::StageDone { name: "ag-hier" });
+                }
+                HierPhase::FoldOut => {
+                    if self.parked {
+                        return Ok(Event::StageDone {
+                            name: "ag-hier-fold-out",
+                        });
+                    }
+                    if self.rank < self.excess {
+                        // Core fold source: ship the aggregate out.
+                        if self.send_cursor == 0 {
+                            self.send_cursor = 1;
+                            let out = self.output.as_ref().expect("aggregate ready");
+                            let msg = push_msg(self.rank, out);
+                            return Ok(Event::Send {
+                                dst: self.core + self.rank,
+                                msg,
+                            });
+                        }
+                        self.parked = true;
+                        return Ok(Event::StageDone {
+                            name: "ag-hier-fold-out",
+                        });
+                    }
+                    if self.rank >= self.core {
+                        // Excess rank: the received aggregate is the output.
+                        let src = self.rank - self.core;
+                        match self.inbox.take_from(src) {
+                            Some(msg) => {
+                                self.output = Some(expect_push(msg).1);
+                                self.parked = true;
+                                return Ok(Event::StageDone {
+                                    name: "ag-hier-fold-out",
+                                });
+                            }
+                            None => return Ok(Event::NeedFrame { src }),
+                        }
+                    }
+                    self.parked = true;
+                    return Ok(Event::StageDone {
+                        name: "ag-hier-fold-out",
+                    });
+                }
+                HierPhase::Done => {
+                    return Ok(Event::Complete(
+                        self.output.take().expect("aggregate ready"),
+                    ))
+                }
+            }
+        }
+    }
+
+    fn deliver(&mut self, src: usize, msg: Message) -> Result<(), WireError> {
+        self.inbox.push(src, msg);
+        Ok(())
+    }
+
+    fn stage_closed(&mut self, name: &str) -> Result<(), WireError> {
+        self.parked = false;
+        self.send_cursor = 0;
+        match name {
+            "ag-hier-fold-in" => self.phase = HierPhase::Double { dist: 1 },
+            "ag-hier" => {
+                if let HierPhase::Double { dist } = self.phase {
+                    self.phase = HierPhase::Double { dist: dist << 1 };
+                } else {
+                    panic!("AGsparse-hier: ag-hier closed outside doubling");
+                }
+            }
+            "ag-hier-fold-out" => self.phase = HierPhase::Done,
+            other => panic!("AGsparse-hier: unknown stage '{other}' closed"),
+        }
+        Ok(())
     }
 }
 
@@ -190,12 +481,16 @@ mod tests {
     use crate::tensor::WireFormat;
     use crate::wire::codec::COO_FRAME_OVERHEAD;
 
+    fn run(pattern: AgPattern, inputs: &[CooTensor], net: &Network) -> SyncOutput {
+        AgSparse::new(pattern).run_sim(inputs, net, &mut SyncScratch::new())
+    }
+
     #[test]
     fn all_patterns_correct() {
         let inputs = overlapping_inputs(1, 4, 2000, 60, 40);
         let net = Network::new(4, LinkKind::Tcp25);
         for p in [AgPattern::PointToPoint, AgPattern::Ring, AgPattern::Hierarchy] {
-            let r = AgSparse::new(p).sync(&inputs, &net);
+            let r = run(p, &inputs, &net);
             verify_outputs(&r, &inputs);
         }
     }
@@ -205,7 +500,7 @@ mod tests {
         let n = 5;
         let inputs = overlapping_inputs(2, n, 1000, 20, 20);
         let net = Network::new(n, LinkKind::Tcp25);
-        let r = AgSparse::new(AgPattern::PointToPoint).sync(&inputs, &net);
+        let r = run(AgPattern::PointToPoint, &inputs, &net);
         let total: u64 = inputs.iter().map(|t| t.wire_bytes() as u64).sum();
         let framing = (n * COO_FRAME_OVERHEAD) as u64;
         assert_eq!(r.report.total_bytes(), (n as u64 - 1) * (total + framing));
@@ -218,8 +513,8 @@ mod tests {
         let n = 4;
         let inputs = overlapping_inputs(3, n, 1000, 30, 10);
         let net = Network::new(n, LinkKind::Tcp25);
-        let p2p = AgSparse::new(AgPattern::PointToPoint).sync(&inputs, &net);
-        let ring = AgSparse::new(AgPattern::Ring).sync(&inputs, &net);
+        let p2p = run(AgPattern::PointToPoint, &inputs, &net);
+        let ring = run(AgPattern::Ring, &inputs, &net);
         assert_eq!(p2p.report.total_bytes(), ring.report.total_bytes());
         assert_eq!(ring.report.stages.len(), n - 1);
         assert_eq!(p2p.report.stages.len(), 1);
@@ -231,7 +526,7 @@ mod tests {
         let n = 8;
         let inputs = overlapping_inputs(4, n, 3000, 50, 25);
         let net = Network::new(n, LinkKind::Tcp25);
-        let r = AgSparse::new(AgPattern::Hierarchy).sync(&inputs, &net);
+        let r = run(AgPattern::Hierarchy, &inputs, &net);
         verify_outputs(&r, &inputs);
         assert_eq!(r.report.stages.len(), 3); // log2(8), no fold stages
     }
@@ -243,7 +538,7 @@ mod tests {
         for n in [3usize, 5, 6, 7, 12] {
             let inputs = overlapping_inputs(11 + n as u64, n, 2500, 40, 30);
             let net = Network::new(n, LinkKind::Tcp25);
-            let r = AgSparse::new(AgPattern::Hierarchy).sync(&inputs, &net);
+            let r = run(AgPattern::Hierarchy, &inputs, &net);
             verify_outputs(&r, &inputs);
             let core = largest_pow2_at_most(n);
             assert_eq!(
@@ -261,8 +556,8 @@ mod tests {
         let n = 4;
         let inputs = overlapping_inputs(6, n, 1000, 30, 10);
         let net = Network::new(n, LinkKind::Tcp25);
-        let p2p = AgSparse::new(AgPattern::PointToPoint).sync(&inputs, &net);
-        let hier = AgSparse::new(AgPattern::Hierarchy).sync(&inputs, &net);
+        let p2p = run(AgPattern::PointToPoint, &inputs, &net);
+        let hier = run(AgPattern::Hierarchy, &inputs, &net);
         assert_eq!(p2p.report.total_bytes(), hier.report.total_bytes());
     }
 
@@ -273,7 +568,7 @@ mod tests {
         let n = 4;
         let net = Network::new(n, LinkKind::Tcp25);
         let same = overlapping_inputs(5, n, 1000, 100, 0);
-        let r1 = AgSparse::new(AgPattern::PointToPoint).sync(&same, &net);
+        let r1 = run(AgPattern::PointToPoint, &same, &net);
         let nnz = same[0].nnz();
         let disjoint: Vec<CooTensor> = (0..n as u32)
             .map(|w| {
@@ -281,7 +576,7 @@ mod tests {
                 CooTensor::from_sorted(1000 * n, idx, vec![1.0; nnz])
             })
             .collect();
-        let r2 = AgSparse::new(AgPattern::PointToPoint).sync(&disjoint, &net);
+        let r2 = run(AgPattern::PointToPoint, &disjoint, &net);
         assert_eq!(r1.report.total_bytes(), r2.report.total_bytes());
     }
 }

@@ -5,14 +5,19 @@
 //! in total — the textbook bandwidth-optimal dense collective (paper
 //! footnote 2: Ring, incremental aggregation, Parallelism, Balanced).
 //!
-//! The protocol executes for real over the transport: chunks of dense
-//! values travel as `DenseChunk` frames and are incrementally reduced at
-//! each hop. Only one chunk per node is ever materialized (the in-flight
-//! accumulator), so the full `n × M` dense expansion the first perf pass
-//! removed never comes back.
+//! Each rank is a sans-IO machine that circulates `DenseChunk` frames
+//! with its ring neighbors: per step it sends its accumulator to the
+//! successor, parks on `NeedFrame` for the predecessor's chunk
+//! (deterministic one-frame count), folds its own contribution in, and
+//! closes the step's stage. Only one chunk per rank is ever
+//! materialized (the in-flight accumulator), so the full `n × M` dense
+//! expansion the first perf pass removed never comes back; during
+//! all-gather every rank assembles the full aggregate from the
+//! circulating fully-reduced chunks, which are bit-identical at every
+//! rank by construction.
 
 use super::*;
-use crate::wire::Message;
+use crate::wire::{Event, Inbox};
 
 /// Dense Ring-AllReduce.
 #[derive(Clone, Debug, Default)]
@@ -34,6 +39,13 @@ fn add_range(t: &CooTensor, lo: u32, hi: u32, dst: &mut [f32]) {
     }
 }
 
+fn expect_chunk(msg: Message) -> (u64, Vec<f32>) {
+    match msg {
+        Message::DenseChunk { offset, values, .. } => (offset, values),
+        other => panic!("unexpected frame on the ring: {other:?}"),
+    }
+}
+
 impl SyncScheme for DenseAllReduce {
     fn name(&self) -> &'static str {
         "AllReduce"
@@ -49,109 +61,207 @@ impl SyncScheme for DenseAllReduce {
         }
     }
 
-    fn sync_transport(
-        &self,
-        inputs: &[CooTensor],
-        tx: &mut dyn Transport,
-        _scratch: &mut SyncScratch,
-    ) -> Result<SyncResult, crate::wire::WireError> {
+    fn protocols<'a>(&'a self, inputs: &'a [CooTensor]) -> Vec<Box<dyn Protocol + 'a>> {
+        (0..inputs.len())
+            .map(|rank| Box::new(RingMachine::new(rank, inputs)) as Box<dyn Protocol + 'a>)
+            .collect()
+    }
+}
+
+enum RingState {
+    Init,
+    /// Reduce-scatter step `s`: accumulator not yet sent.
+    RsSend(usize),
+    /// Waiting for the predecessor's step-`s` partial chunk.
+    RsWait(usize),
+    /// Folded; parked on the step-`s` `reduce-scatter` stage.
+    RsParked(usize),
+    /// Initialize the full-assembly buffer, then start all-gather.
+    AgStart,
+    AgSend(usize),
+    AgWait(usize),
+    AgParked(usize),
+    Done,
+}
+
+struct RingMachine<'a> {
+    rank: usize,
+    n: usize,
+    dense_len: usize,
+    per: usize,
+    inputs: &'a [CooTensor],
+    inbox: Inbox,
+    state: RingState,
+    /// The in-flight chunk accumulator (the only materialized chunk).
+    acc: Vec<f32>,
+    /// Full dense assembly, filled during all-gather.
+    full: Vec<f32>,
+}
+
+impl<'a> RingMachine<'a> {
+    fn new(rank: usize, inputs: &'a [CooTensor]) -> RingMachine<'a> {
         let n = inputs.len();
-        assert_eq!(n, tx.endpoints());
         let dense_len = inputs[0].dense_len;
-        if n == 1 {
-            let out = reference_sum(inputs).to_coo();
-            return Ok(SyncResult {
-                outputs: vec![out],
-                report: tx.take_report(),
-            });
+        RingMachine {
+            rank,
+            n,
+            dense_len,
+            per: crate::util::ceil_div(dense_len, n),
+            inputs,
+            inbox: Inbox::new(n),
+            state: RingState::Init,
+            acc: Vec::new(),
+            full: Vec::new(),
         }
+    }
 
-        // Chunk c covers [lo(c), hi(c)); chunks partition the range, so
-        // every stage moves exactly `dense_len` values across the ring.
-        let per = crate::util::ceil_div(dense_len, n);
-        let lo = |c: usize| (c * per).min(dense_len);
-        let hi = |c: usize| ((c + 1) * per).min(dense_len);
+    fn lo(&self, c: usize) -> usize {
+        (c * self.per).min(self.dense_len)
+    }
 
-        // --- Ring reduce-scatter: at step s node i forwards the partial
-        // sum of chunk (i − s) mod n and folds its own contribution into
-        // the chunk it receives from its predecessor.
-        let mut cur: Vec<Vec<f32>> = (0..n)
-            .map(|i| {
-                let mut acc = vec![0.0f32; hi(i) - lo(i)];
-                add_range(&inputs[i], lo(i) as u32, hi(i) as u32, &mut acc);
-                acc
-            })
-            .collect();
-        for s in 0..n - 1 {
-            for (i, chunk) in cur.iter().enumerate() {
-                let c = (i + n - s) % n;
-                tx.send(
-                    i,
-                    (i + 1) % n,
-                    FrameRef::DenseChunk {
-                        from: i as u32,
-                        offset: lo(c) as u64,
-                        values: chunk,
-                    },
-                )?;
-            }
-            for (i, slot) in cur.iter_mut().enumerate() {
-                let c = (i + n - 1 - s) % n;
-                match tx.recv(i)? {
-                    Message::DenseChunk {
-                        offset, mut values, ..
-                    } => {
-                        assert_eq!(offset as usize, lo(c), "ring chunk out of order");
-                        assert_eq!(values.len(), hi(c) - lo(c));
-                        add_range(&inputs[i], lo(c) as u32, hi(c) as u32, &mut values);
-                        *slot = values;
+    fn hi(&self, c: usize) -> usize {
+        ((c + 1) * self.per).min(self.dense_len)
+    }
+
+    fn succ(&self) -> usize {
+        (self.rank + 1) % self.n
+    }
+
+    fn pred(&self) -> usize {
+        (self.rank + self.n - 1) % self.n
+    }
+
+    fn chunk_msg(&self, c: usize) -> Message {
+        Message::DenseChunk {
+            from: self.rank as u32,
+            offset: self.lo(c) as u64,
+            values: self.acc.clone(),
+        }
+    }
+}
+
+impl Protocol for RingMachine<'_> {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn poll(&mut self, _scratch: &mut SyncScratch) -> Result<Event, WireError> {
+        loop {
+            match self.state {
+                RingState::Init => {
+                    if self.n == 1 {
+                        self.state = RingState::Done;
+                        return Ok(Event::Complete(reference_sum(self.inputs).to_coo()));
                     }
-                    other => panic!("unexpected frame during reduce-scatter: {other:?}"),
+                    let (lo, hi) = (self.lo(self.rank), self.hi(self.rank));
+                    self.acc = vec![0.0f32; hi - lo];
+                    add_range(&self.inputs[self.rank], lo as u32, hi as u32, &mut self.acc);
+                    self.state = RingState::RsSend(0);
                 }
-            }
-            tx.end_stage("reduce-scatter")?;
-        }
-
-        // Node i now holds the fully reduced chunk (i + 1) mod n.
-        // --- Ring all-gather: circulate the reduced chunks; node 0
-        // assembles the aggregate every endpoint ends up with.
-        let mut full = vec![0.0f32; dense_len];
-        let first = 1 % n;
-        full[lo(first)..hi(first)].copy_from_slice(&cur[0]);
-        for s in 0..n - 1 {
-            for (i, chunk) in cur.iter().enumerate() {
-                let c = (i + 1 + n - s) % n;
-                tx.send(
-                    i,
-                    (i + 1) % n,
-                    FrameRef::DenseChunk {
-                        from: i as u32,
-                        offset: lo(c) as u64,
-                        values: chunk,
-                    },
-                )?;
-            }
-            for (i, slot) in cur.iter_mut().enumerate() {
-                let c = (i + n - s) % n;
-                match tx.recv(i)? {
-                    Message::DenseChunk { offset, values, .. } => {
-                        assert_eq!(offset as usize, lo(c), "ring chunk out of order");
-                        if i == 0 {
-                            full[lo(c)..hi(c)].copy_from_slice(&values);
+                RingState::RsSend(s) => {
+                    let c = (self.rank + self.n - s) % self.n;
+                    let msg = self.chunk_msg(c);
+                    self.state = RingState::RsWait(s);
+                    return Ok(Event::Send {
+                        dst: self.succ(),
+                        msg,
+                    });
+                }
+                RingState::RsWait(s) => {
+                    let pred = self.pred();
+                    match self.inbox.take_from(pred) {
+                        Some(msg) => {
+                            let c = (self.rank + self.n - 1 - s) % self.n;
+                            let (offset, mut values) = expect_chunk(msg);
+                            assert_eq!(offset as usize, self.lo(c), "ring chunk out of order");
+                            assert_eq!(values.len(), self.hi(c) - self.lo(c));
+                            add_range(
+                                &self.inputs[self.rank],
+                                self.lo(c) as u32,
+                                self.hi(c) as u32,
+                                &mut values,
+                            );
+                            self.acc = values;
+                            self.state = RingState::RsParked(s);
+                            return Ok(Event::StageDone {
+                                name: "reduce-scatter",
+                            });
                         }
-                        *slot = values;
+                        None => return Ok(Event::NeedFrame { src: pred }),
                     }
-                    other => panic!("unexpected frame during all-gather: {other:?}"),
+                }
+                RingState::RsParked(_) => {
+                    return Ok(Event::StageDone {
+                        name: "reduce-scatter",
+                    })
+                }
+                RingState::AgStart => {
+                    // This rank now holds the fully reduced chunk
+                    // (rank + 1) mod n; seed the assembly with it.
+                    self.full = vec![0.0f32; self.dense_len];
+                    let c = (self.rank + 1) % self.n;
+                    self.full[self.lo(c)..self.hi(c)].copy_from_slice(&self.acc);
+                    self.state = RingState::AgSend(0);
+                }
+                RingState::AgSend(s) => {
+                    let c = (self.rank + 1 + self.n - s) % self.n;
+                    let msg = self.chunk_msg(c);
+                    self.state = RingState::AgWait(s);
+                    return Ok(Event::Send {
+                        dst: self.succ(),
+                        msg,
+                    });
+                }
+                RingState::AgWait(s) => {
+                    let pred = self.pred();
+                    match self.inbox.take_from(pred) {
+                        Some(msg) => {
+                            let c = (self.rank + self.n - s) % self.n;
+                            let (offset, values) = expect_chunk(msg);
+                            assert_eq!(offset as usize, self.lo(c), "ring chunk out of order");
+                            self.full[self.lo(c)..self.hi(c)].copy_from_slice(&values);
+                            self.acc = values;
+                            self.state = RingState::AgParked(s);
+                            return Ok(Event::StageDone { name: "all-gather" });
+                        }
+                        None => return Ok(Event::NeedFrame { src: pred }),
+                    }
+                }
+                RingState::AgParked(_) => return Ok(Event::StageDone { name: "all-gather" }),
+                RingState::Done => {
+                    let full = std::mem::take(&mut self.full);
+                    return Ok(Event::Complete(
+                        crate::tensor::DenseTensor::from_values(full).to_coo(),
+                    ));
                 }
             }
-            tx.end_stage("all-gather")?;
         }
+    }
 
-        let out = crate::tensor::DenseTensor::from_values(full).to_coo();
-        Ok(SyncResult {
-            outputs: vec![out; n],
-            report: tx.take_report(),
-        })
+    fn deliver(&mut self, src: usize, msg: Message) -> Result<(), WireError> {
+        self.inbox.push(src, msg);
+        Ok(())
+    }
+
+    fn stage_closed(&mut self, name: &str) -> Result<(), WireError> {
+        match (&self.state, name) {
+            (RingState::RsParked(s), "reduce-scatter") => {
+                self.state = if s + 1 < self.n - 1 {
+                    RingState::RsSend(s + 1)
+                } else {
+                    RingState::AgStart
+                };
+            }
+            (RingState::AgParked(s), "all-gather") => {
+                self.state = if s + 1 < self.n - 1 {
+                    RingState::AgSend(s + 1)
+                } else {
+                    RingState::Done
+                };
+            }
+            _ => panic!("AllReduce: unexpected stage '{name}' closed"),
+        }
+        Ok(())
     }
 }
 
@@ -163,11 +273,15 @@ mod tests {
     use crate::tensor::BYTES_F32;
     use crate::wire::codec::DENSE_CHUNK_OVERHEAD;
 
+    fn run(inputs: &[CooTensor], net: &Network) -> SyncOutput {
+        DenseAllReduce::new().run_sim(inputs, net, &mut SyncScratch::new())
+    }
+
     #[test]
     fn correct_aggregation() {
         let inputs = overlapping_inputs(1, 4, 1000, 50, 30);
         let net = Network::new(4, LinkKind::Tcp25);
-        let r = DenseAllReduce::new().sync(&inputs, &net);
+        let r = run(&inputs, &net);
         verify_outputs(&r, &inputs);
     }
 
@@ -180,7 +294,7 @@ mod tests {
         let m = 4096;
         let inputs = overlapping_inputs(2, n, m, 10, 10);
         let net = Network::new(n, LinkKind::Tcp25);
-        let r = DenseAllReduce::new().sync(&inputs, &net);
+        let r = run(&inputs, &net);
         let per_stage = (m * BYTES_F32 + n * DENSE_CHUNK_OVERHEAD) as u64;
         assert_eq!(r.report.total_bytes(), 2 * (n as u64 - 1) * per_stage);
         assert_eq!(r.report.stages.len(), 2 * (n - 1));
@@ -193,7 +307,7 @@ mod tests {
         let n = 5;
         let inputs = overlapping_inputs(7, n, 1013, 40, 20);
         let net = Network::new(n, LinkKind::Tcp25);
-        let r = DenseAllReduce::new().sync(&inputs, &net);
+        let r = run(&inputs, &net);
         verify_outputs(&r, &inputs);
         let payload: u64 = r.report.total_bytes()
             - (2 * (n as u64 - 1)) * (n * DENSE_CHUNK_OVERHEAD) as u64;
@@ -204,7 +318,7 @@ mod tests {
     fn single_node_is_free() {
         let inputs = overlapping_inputs(3, 1, 100, 5, 5);
         let net = Network::new(1, LinkKind::Tcp25);
-        let r = DenseAllReduce::new().sync(&inputs, &net);
+        let r = run(&inputs, &net);
         assert_eq!(r.report.total_bytes(), 0);
         verify_outputs(&r, &inputs);
     }
@@ -215,8 +329,8 @@ mod tests {
         let net = Network::new(4, LinkKind::Tcp25);
         let sparse = overlapping_inputs(4, 4, 10_000, 5, 5);
         let denser = overlapping_inputs(5, 4, 10_000, 2_000, 500);
-        let t1 = DenseAllReduce::new().sync(&sparse, &net).report.comm_time();
-        let t2 = DenseAllReduce::new().sync(&denser, &net).report.comm_time();
+        let t1 = run(&sparse, &net).report.comm_time();
+        let t2 = run(&denser, &net).report.comm_time();
         assert!((t1 - t2).abs() < 1e-12);
     }
 }

@@ -1,16 +1,17 @@
 //! Communication schemes for sparse tensor synchronization (paper §2.3).
 //!
 //! Every scheme implements [`SyncScheme`]: given one sparse gradient
-//! tensor per machine, it expresses its protocol as explicit send/recv
-//! of [`crate::wire::codec`] frames over a pluggable
-//! [`Transport`](crate::wire::Transport) — the same code path runs the
-//! virtual-time simulator ([`crate::wire::SimTransport`], the default
-//! under [`SyncScheme::sync_with`]), the real-frames mpsc fabric
-//! ([`crate::wire::ChannelTransport`]), and loopback TCP sockets
-//! ([`crate::wire::TcpTransport`]). Byte accounting is observed by the
-//! transport, not hand-maintained per scheme, so the [`CommReport`] a
-//! scheme returns is byte-for-byte the traffic its frames put on the
-//! data plane (frame headers included).
+//! tensor per machine, it builds one sans-IO
+//! [`Protocol`](crate::wire::Protocol) state machine per rank
+//! ([`SyncScheme::protocols`]); a [`Driver`](crate::wire::Driver) moves
+//! the frames. The same protocol body runs the virtual-time simulator,
+//! the real-frames mpsc fabric, the readiness-polled loopback socket
+//! mesh, and one-rank-per-process deployment (`zen worker`) — the
+//! single public entry point is [`SyncScheme::run`], with
+//! [`SyncScheme::run_sim`] as the simulator convenience. Byte
+//! accounting is observed by the driver, not hand-maintained per
+//! scheme, so the [`CommReport`] a sync returns is byte-for-byte the
+//! traffic its frames put on the data plane (frame headers included).
 //!
 //! The paper's four design dimensions (communication / aggregation /
 //! partition / balance, Table 2) are exposed via [`SchemeDims`] so the
@@ -35,7 +36,7 @@ pub use zen::{Zen, ZenIndexFormat};
 use crate::cluster::{CommReport, Network};
 use crate::hashing::{HashBitmapPayload, PartitionScratch};
 use crate::tensor::{CooSlice, CooTensor};
-use crate::wire::{FrameRef, SimTransport, Transport, WireError};
+use crate::wire::{Driver, Message, Protocol, SimTransport, TransportDriver, WireError};
 
 /// Table 2 dimension values.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -76,11 +77,15 @@ pub struct SchemeDims {
 
 /// Result of synchronizing one tensor across all endpoints.
 #[derive(Clone, Debug)]
-pub struct SyncResult {
+pub struct SyncOutput {
     /// Aggregated tensor at each endpoint (must all equal the sum).
     pub outputs: Vec<CooTensor>,
     pub report: CommReport,
 }
+
+/// Pre-redesign name of [`SyncOutput`].
+#[deprecated(since = "0.6.0", note = "renamed to SyncOutput")]
+pub type SyncResult = SyncOutput;
 
 /// Reusable working memory for one in-flight `sync_with` call — the
 /// scheme-level scratch arena (see [`crate::util::arena`]).
@@ -112,33 +117,28 @@ impl SyncScratch {
     }
 }
 
-/// Borrow a COO tensor as a `PushCoo` frame from worker `from`.
-pub(crate) fn push_frame(from: usize, t: &CooTensor) -> FrameRef<'_> {
-    FrameRef::PushCoo {
+/// An owned `PushCoo` message from worker `from` (what protocol
+/// machines emit through [`Event::Send`](crate::wire::Event::Send)).
+pub(crate) fn push_msg(from: usize, t: &CooTensor) -> Message {
+    Message::PushCoo {
         from: from as u32,
-        dense_len: t.dense_len,
-        indices: &t.indices,
-        values: &t.values,
+        tensor: t.clone(),
     }
 }
 
-/// Borrow a COO view as a `PushCoo` frame from worker `from`.
-pub(crate) fn push_frame_slice(from: usize, t: CooSlice<'_>) -> FrameRef<'_> {
-    FrameRef::PushCoo {
+/// An owned `PushCoo` message materialized from a borrowed COO view.
+pub(crate) fn push_msg_slice(from: usize, t: CooSlice<'_>) -> Message {
+    Message::PushCoo {
         from: from as u32,
-        dense_len: t.dense_len,
-        indices: t.indices,
-        values: t.values,
+        tensor: CooTensor::from_sorted(t.dense_len, t.indices.to_vec(), t.values.to_vec()),
     }
 }
 
-/// Borrow a COO tensor as a `PullCoo` frame from server `server`.
-pub(crate) fn pull_frame(server: usize, t: &CooTensor) -> FrameRef<'_> {
-    FrameRef::PullCoo {
+/// An owned `PullCoo` message from server `server`.
+pub(crate) fn pull_msg(server: usize, t: &CooTensor) -> Message {
+    Message::PullCoo {
         server: server as u32,
-        dense_len: t.dense_len,
-        indices: &t.indices,
-        values: &t.values,
+        tensor: t.clone(),
     }
 }
 
@@ -176,51 +176,73 @@ pub trait SyncScheme: Send + Sync {
     /// Table 2 classification.
     fn dims(&self) -> SchemeDims;
 
-    /// Synchronize: every endpoint contributes one sparse tensor over the
-    /// same dense range; every endpoint ends with the full aggregation.
-    ///
-    /// Convenience entry point with throwaway scratch; hot loops call
-    /// [`sync_with`](SyncScheme::sync_with) with a reused
-    /// [`SyncScratch`] instead.
-    fn sync(&self, inputs: &[CooTensor], net: &Network) -> SyncResult {
-        self.sync_with(inputs, net, &mut SyncScratch::new())
-    }
+    /// Build the scheme's per-rank sans-IO state machines for one
+    /// synchronization — the one implementation every scheme provides.
+    /// `protocols(inputs)[r]` plays rank `r`; machines borrow the
+    /// inputs (and the scheme) for the duration of the sync. See
+    /// [`crate::wire::protocol`] for the lifecycle contract.
+    fn protocols<'a>(&'a self, inputs: &'a [CooTensor]) -> Vec<Box<dyn Protocol + 'a>>;
 
-    /// Synchronize over the virtual-time simulator backend
-    /// ([`SimTransport`] charging `net`'s α–β model) with caller-provided
-    /// scratch memory. Implementations must be oblivious to the
-    /// scratch's previous contents, and callers must not share one
-    /// scratch across concurrent calls.
-    fn sync_with(
-        &self,
-        inputs: &[CooTensor],
-        net: &Network,
-        scratch: &mut SyncScratch,
-    ) -> SyncResult {
-        let mut tx = SimTransport::new(net.clone());
-        // The in-process virtual-time backend has no peer to lose; an
-        // error here is a scheme protocol bug, so the panic is correct.
-        self.sync_transport(inputs, &mut tx, scratch)
-            .expect("virtual-time sync failed (scheme protocol bug)")
-    }
-
-    /// Execute the scheme's protocol over an explicit transport backend
-    /// — the one implementation every scheme provides. The scheme sends
-    /// and receives real [`crate::wire::codec`] frames; the transport
-    /// observes the bytes and produces the [`CommReport`] uniformly.
+    /// Synchronize: every endpoint contributes one sparse tensor over
+    /// the same dense range; every endpoint ends with the full
+    /// aggregation. The single public entry point since the sans-IO
+    /// redesign — the driver decides what the data plane physically is
+    /// (virtual time, mpsc channels, kernel sockets, remote peers).
     ///
-    /// Transport failures surface as `Err`: a hung-up channel or closed
+    /// Data-plane failures surface as `Err`: a hung-up channel or dead
     /// socket peer yields [`WireError::Disconnected`] mid-protocol
     /// instead of aborting the process, and an oversized frame is
     /// rejected as [`WireError::FrameTooLarge`]. Protocol violations
     /// (wrong frame kind mid-stage, mismatched endpoint counts) are
     /// scheme bugs and still panic.
-    fn sync_transport(
+    fn run(
         &self,
         inputs: &[CooTensor],
-        tx: &mut dyn Transport,
+        driver: &mut dyn Driver,
         scratch: &mut SyncScratch,
-    ) -> Result<SyncResult, WireError>;
+    ) -> Result<SyncOutput, WireError> {
+        let outcome = driver.drive(self.protocols(inputs), scratch)?;
+        Ok(SyncOutput {
+            outputs: outcome.outputs,
+            report: outcome.report,
+        })
+    }
+
+    /// Synchronize over the virtual-time simulator backend
+    /// ([`SimTransport`] charging `net`'s α–β model) with
+    /// caller-provided scratch memory — the hot path every figure and
+    /// sweep runs on. Implementations must be oblivious to the
+    /// scratch's previous contents, and callers must not share one
+    /// scratch across concurrent calls.
+    fn run_sim(
+        &self,
+        inputs: &[CooTensor],
+        net: &Network,
+        scratch: &mut SyncScratch,
+    ) -> SyncOutput {
+        let mut driver = TransportDriver::new(Box::new(SimTransport::new(net.clone())));
+        // The in-process virtual-time backend has no peer to lose; an
+        // error here is a scheme protocol bug, so the panic is correct.
+        self.run(inputs, &mut driver, scratch)
+            .expect("virtual-time sync failed (scheme protocol bug)")
+    }
+
+    /// Synchronize with throwaway scratch over the simulator.
+    #[deprecated(since = "0.6.0", note = "use run (explicit driver) or run_sim")]
+    fn sync(&self, inputs: &[CooTensor], net: &Network) -> SyncOutput {
+        self.run_sim(inputs, net, &mut SyncScratch::new())
+    }
+
+    /// Synchronize over the simulator with caller-provided scratch.
+    #[deprecated(since = "0.6.0", note = "use run (explicit driver) or run_sim")]
+    fn sync_with(
+        &self,
+        inputs: &[CooTensor],
+        net: &Network,
+        scratch: &mut SyncScratch,
+    ) -> SyncOutput {
+        self.run_sim(inputs, net, scratch)
+    }
 }
 
 /// Reference aggregation: dense element-wise sum of all inputs.
@@ -258,7 +280,7 @@ pub fn assert_matches_reference(
 /// Assert all endpoint outputs equal the reference within float tolerance.
 /// Panics with context on mismatch; used by tests and the coordinator's
 /// self-check mode.
-pub fn verify_outputs(result: &SyncResult, inputs: &[CooTensor]) {
+pub fn verify_outputs(result: &SyncOutput, inputs: &[CooTensor]) {
     let reference = reference_sum(inputs);
     for (e, out) in result.outputs.iter().enumerate() {
         assert_matches_reference(out, &reference, &format!("endpoint {e}"));

@@ -7,10 +7,15 @@
 //! still contiguous partitioning, so it inherits Sparse PS's
 //! skew-driven imbalance, and dense-after-aggregation partitions
 //! degenerate to near-dense traffic.
+//!
+//! Like SparsePS, the frame count is data-dependent (empty block sets
+//! are never framed), so the per-rank machines are
+//! receive-until-stage-closed: an aggregator merges whatever its inbox
+//! holds when the `push` stage closes, in ascending-source order.
 
 use super::*;
 use crate::tensor::BlockTensor;
-use crate::wire::{FrameRef, Message};
+use crate::wire::{Event, Inbox, Message};
 
 /// OmniReduce scheme with a configurable block length.
 #[derive(Clone, Debug)]
@@ -25,30 +30,19 @@ impl OmniReduce {
     }
 }
 
-/// Frame a block tensor: ids borrowed, blocks flattened into `buf`.
-fn send_block_tensor(
-    tx: &mut dyn Transport,
-    src: usize,
-    dst: usize,
-    from: usize,
-    bt: &BlockTensor,
-    buf: &mut Vec<f32>,
-) -> Result<(), crate::wire::WireError> {
-    buf.clear();
+/// Build an owned `Blocks` frame from a block tensor (values flattened).
+fn blocks_msg(from: usize, bt: &BlockTensor) -> Message {
+    let mut values = Vec::with_capacity(bt.num_blocks() * bt.block_len);
     for block in &bt.blocks {
-        buf.extend_from_slice(block);
+        values.extend_from_slice(block);
     }
-    tx.send(
-        src,
-        dst,
-        FrameRef::Blocks {
-            from: from as u32,
-            dense_len: bt.dense_len as u64,
-            block_len: bt.block_len as u32,
-            block_ids: &bt.block_ids,
-            values: &buf[..],
-        },
-    )
+    Message::Blocks {
+        from: from as u32,
+        dense_len: bt.dense_len as u64,
+        block_len: bt.block_len as u32,
+        block_ids: bt.block_ids.clone(),
+        values,
+    }
 }
 
 fn expect_blocks(msg: Message, block_len: usize) -> (u32, BlockTensor) {
@@ -85,95 +79,159 @@ impl SyncScheme for OmniReduce {
         }
     }
 
-    fn sync_transport(
-        &self,
-        inputs: &[CooTensor],
-        tx: &mut dyn Transport,
-        scratch: &mut SyncScratch,
-    ) -> Result<SyncResult, crate::wire::WireError> {
+    fn protocols<'a>(&'a self, inputs: &'a [CooTensor]) -> Vec<Box<dyn Protocol + 'a>> {
+        (0..inputs.len())
+            .map(|rank| {
+                Box::new(OmniMachine::new(rank, inputs, self.block_len)) as Box<dyn Protocol + 'a>
+            })
+            .collect()
+    }
+}
+
+enum OmniState {
+    /// Framing non-empty block sets to the other aggregators.
+    PushSend,
+    /// Parked on `push`; block merge happens at stage closure.
+    PushParked,
+    /// Broadcasting the aggregated block tensor.
+    PullSend,
+    /// Parked on `pull`; reassembly happens at stage closure.
+    PullParked,
+    Done,
+}
+
+struct OmniMachine<'a> {
+    rank: usize,
+    n: usize,
+    dense_len: usize,
+    block_len: usize,
+    inputs: &'a [CooTensor],
+    state: OmniState,
+    inbox: Inbox,
+    cursor: usize,
+    /// This rank's own block shard of its aggregator partition.
+    own: Option<BlockTensor>,
+    /// The aggregated block tensor this rank serves.
+    agg: Option<BlockTensor>,
+    output: Option<CooTensor>,
+}
+
+impl<'a> OmniMachine<'a> {
+    fn new(rank: usize, inputs: &'a [CooTensor], block_len: usize) -> OmniMachine<'a> {
         let n = inputs.len();
-        assert_eq!(n, tx.endpoints());
-        let dense_len = inputs[0].dense_len;
-        let per = crate::util::ceil_div(dense_len, n) as u32;
-        let lo = |p: usize| (p as u32 * per).min(dense_len as u32);
-        let hi = |p: usize| ((p as u32 + 1) * per).min(dense_len as u32);
+        OmniMachine {
+            rank,
+            n,
+            dense_len: inputs[0].dense_len,
+            block_len,
+            inputs,
+            state: OmniState::PushSend,
+            inbox: Inbox::new(n),
+            cursor: 0,
+            own: None,
+            agg: None,
+            output: None,
+        }
+    }
 
-        // Push: block-encode each contiguous partition; only non-empty
-        // block sets are framed.
-        let mut own: Vec<Option<BlockTensor>> = (0..n).map(|_| None).collect();
-        let mut expected = vec![0usize; n];
-        for (w, t) in inputs.iter().enumerate() {
-            for p in 0..n {
-                let part = t.slice_range(lo(p), hi(p));
-                let blocks = BlockTensor::from_coo(&part, self.block_len);
-                if w == p {
-                    own[p] = Some(blocks);
-                } else if blocks.num_blocks() > 0 {
-                    send_block_tensor(tx, w, p, w, &blocks, &mut scratch.block_values)?;
-                    expected[p] += 1;
+    fn per(&self) -> u32 {
+        crate::util::ceil_div(self.dense_len, self.n) as u32
+    }
+
+    fn lo(&self, p: usize) -> u32 {
+        (p as u32 * self.per()).min(self.dense_len as u32)
+    }
+
+    fn hi(&self, p: usize) -> u32 {
+        ((p as u32 + 1) * self.per()).min(self.dense_len as u32)
+    }
+}
+
+impl Protocol for OmniMachine<'_> {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn poll(&mut self, _scratch: &mut SyncScratch) -> Result<Event, WireError> {
+        match self.state {
+            OmniState::PushSend => {
+                while self.cursor < self.n {
+                    let p = self.cursor;
+                    self.cursor += 1;
+                    let part = self.inputs[self.rank].slice_range(self.lo(p), self.hi(p));
+                    let blocks = BlockTensor::from_coo(&part, self.block_len);
+                    if p == self.rank {
+                        self.own = Some(blocks);
+                    } else if blocks.num_blocks() > 0 {
+                        return Ok(Event::Send {
+                            dst: p,
+                            msg: blocks_msg(self.rank, &blocks),
+                        });
+                    }
                 }
+                self.state = OmniState::PushParked;
+                Ok(Event::StageDone { name: "push" })
             }
-        }
-
-        // One-shot aggregation at each aggregator (block merge).
-        let mut aggregated: Vec<BlockTensor> = Vec::with_capacity(n);
-        for p in 0..n {
-            let mut acc = own[p].take().expect("own block shard present");
-            for _ in 0..expected[p] {
-                let (_, bt) = expect_blocks(tx.recv(p)?, self.block_len);
-                acc = acc.merge(&bt);
-            }
-            aggregated.push(acc);
-        }
-        tx.end_stage("push")?;
-
-        // Pull: aggregator p broadcasts its aggregated block tensor —
-        // flattened once per aggregator, then framed to every recipient
-        // from the same borrowed staging buffer.
-        let mut expected = vec![0usize; n];
-        for (p, agg) in aggregated.iter().enumerate() {
-            if agg.num_blocks() == 0 {
-                continue;
-            }
-            scratch.block_values.clear();
-            for block in &agg.blocks {
-                scratch.block_values.extend_from_slice(block);
-            }
-            for w in 0..n {
-                if w != p {
-                    tx.send(
-                        p,
-                        w,
-                        FrameRef::Blocks {
-                            from: p as u32,
-                            dense_len: agg.dense_len as u64,
-                            block_len: agg.block_len as u32,
-                            block_ids: &agg.block_ids,
-                            values: &scratch.block_values,
-                        },
-                    )?;
-                    expected[w] += 1;
+            OmniState::PushParked => Ok(Event::StageDone { name: "push" }),
+            OmniState::PullSend => {
+                let nonempty = self
+                    .agg
+                    .as_ref()
+                    .expect("aggregated blocks")
+                    .num_blocks()
+                    > 0;
+                if nonempty {
+                    while self.cursor < self.n {
+                        let w = self.cursor;
+                        self.cursor += 1;
+                        if w != self.rank {
+                            let msg = blocks_msg(self.rank, self.agg.as_ref().unwrap());
+                            return Ok(Event::Send { dst: w, msg });
+                        }
+                    }
                 }
+                self.state = OmniState::PullParked;
+                Ok(Event::StageDone { name: "pull" })
             }
+            OmniState::PullParked => Ok(Event::StageDone { name: "pull" }),
+            OmniState::Done => Ok(Event::Complete(
+                self.output.take().expect("output assembled at pull closure"),
+            )),
         }
+    }
 
-        // Reassemble at every worker.
-        let mut outputs = Vec::with_capacity(n);
-        for w in 0..n {
-            let mut parts: Vec<(u32, CooTensor)> = Vec::with_capacity(n);
-            parts.push((lo(w), aggregated[w].to_dense().to_coo()));
-            for _ in 0..expected[w] {
-                let (from, bt) = expect_blocks(tx.recv(w)?, self.block_len);
-                parts.push((lo(from as usize), bt.to_dense().to_coo()));
+    fn deliver(&mut self, src: usize, msg: Message) -> Result<(), WireError> {
+        self.inbox.push(src, msg);
+        Ok(())
+    }
+
+    fn stage_closed(&mut self, name: &str) -> Result<(), WireError> {
+        match name {
+            "push" => {
+                // One-shot block merge, ascending-worker order.
+                let mut acc = self.own.take().expect("own block shard present");
+                for (_, msg) in self.inbox.drain_ascending() {
+                    let (_, bt) = expect_blocks(msg, self.block_len);
+                    acc = acc.merge(&bt);
+                }
+                self.agg = Some(acc);
+                self.cursor = 0;
+                self.state = OmniState::PullSend;
             }
-            outputs.push(CooTensor::concat_ranges(&parts, dense_len));
+            "pull" => {
+                let agg = self.agg.take().expect("aggregated blocks");
+                let mut parts: Vec<(u32, CooTensor)> = Vec::with_capacity(self.n);
+                parts.push((self.lo(self.rank), agg.to_dense().to_coo()));
+                for (_, msg) in self.inbox.drain_ascending() {
+                    let (from, bt) = expect_blocks(msg, self.block_len);
+                    parts.push((self.lo(from as usize), bt.to_dense().to_coo()));
+                }
+                self.output = Some(CooTensor::concat_ranges(&parts, self.dense_len));
+                self.state = OmniState::Done;
+            }
+            other => panic!("OmniReduce: unknown stage '{other}' closed"),
         }
-        tx.end_stage("pull")?;
-
-        Ok(SyncResult {
-            outputs,
-            report: tx.take_report(),
-        })
+        Ok(())
     }
 }
 
@@ -183,11 +241,15 @@ mod tests {
     use super::*;
     use crate::cluster::LinkKind;
 
+    fn run(block_len: usize, inputs: &[CooTensor], net: &Network) -> SyncOutput {
+        OmniReduce::new(block_len).run_sim(inputs, net, &mut SyncScratch::new())
+    }
+
     #[test]
     fn correct_aggregation() {
         let inputs = overlapping_inputs(1, 4, 4096, 100, 50);
         let net = Network::new(4, LinkKind::Tcp25);
-        let r = OmniReduce::new(64).sync(&inputs, &net);
+        let r = run(64, &inputs, &net);
         verify_outputs(&r, &inputs);
     }
 
@@ -204,8 +266,12 @@ mod tests {
             })
             .collect();
         let net = Network::new(n, LinkKind::Tcp25);
-        let omni = OmniReduce::new(256).sync(&inputs, &net);
-        let ag = AgSparse::new(AgPattern::PointToPoint).sync(&inputs, &net);
+        let omni = run(256, &inputs, &net);
+        let ag = AgSparse::new(AgPattern::PointToPoint).run_sim(
+            &inputs,
+            &net,
+            &mut SyncScratch::new(),
+        );
         assert!(omni.report.total_bytes() < ag.report.total_bytes());
         verify_outputs(&omni, &inputs);
     }
@@ -220,7 +286,7 @@ mod tests {
         let t = CooTensor::from_sorted(dense_len, idx.clone(), vec![1.0; idx.len()]);
         let inputs = vec![t.clone(), t];
         let net = Network::new(2, LinkKind::Tcp25);
-        let omni = OmniReduce::new(block).sync(&inputs, &net);
+        let omni = run(block, &inputs, &net);
         let coo_bytes = (idx.len() * 8) as u64; // per tensor per hop
         let omni_push = omni.report.stages[0].sent[0];
         assert!(omni_push > 2 * coo_bytes, "padding should dominate");
@@ -236,7 +302,7 @@ mod tests {
             .map(|_| CooTensor::from_sorted(dense_len, idx.clone(), vec![1.0; 256]))
             .collect();
         let net = Network::new(n, LinkKind::Tcp25);
-        let r = OmniReduce::new(64).sync(&inputs, &net);
+        let r = run(64, &inputs, &net);
         let push = &r.report.stages[0];
         assert!(push.recv[0] > 0);
         assert_eq!(push.recv[1..].iter().sum::<u64>(), 0);

@@ -11,8 +11,16 @@
 //! Non-power-of-two node counts use the standard pre/post folding step:
 //! the excess nodes first send their tensor to a partner inside the
 //! power-of-two core, and receive the final aggregate back at the end.
+//!
+//! Each rank is a sans-IO machine: per doubling stage it emits its
+//! partial-aggregate snapshot to the partner *before* consuming the
+//! partner's frame, so both sides exchange pre-merge snapshots exactly
+//! as the orchestrated loop did (all sends of a stage leave before any
+//! merge).
 
 use super::*;
+use crate::util::largest_pow2_at_most;
+use crate::wire::{Event, Inbox};
 
 /// SparCML SSAR recursive-doubling scheme.
 #[derive(Clone, Debug, Default)]
@@ -39,72 +47,197 @@ impl SyncScheme for SparCml {
         }
     }
 
-    fn sync_transport(
-        &self,
-        inputs: &[CooTensor],
-        tx: &mut dyn Transport,
-        _scratch: &mut SyncScratch,
-    ) -> Result<SyncResult, crate::wire::WireError> {
+    fn protocols<'a>(&'a self, inputs: &'a [CooTensor]) -> Vec<Box<dyn Protocol + 'a>> {
+        (0..inputs.len())
+            .map(|rank| Box::new(SparCmlMachine::new(rank, inputs)) as Box<dyn Protocol + 'a>)
+            .collect()
+    }
+}
+
+enum CmlPhase {
+    /// Fold-in stage (skipped when n is a power of two).
+    FoldIn,
+    /// Doubling stage at distance `dist`.
+    Double { dist: usize },
+    /// Fold the aggregate back out to the excess ranks.
+    FoldOut,
+    Done,
+}
+
+struct SparCmlMachine<'a> {
+    rank: usize,
+    core: usize,
+    excess: usize,
+    inputs: &'a [CooTensor],
+    inbox: Inbox,
+    phase: CmlPhase,
+    sent: bool,
+    parked: bool,
+    /// The running partial aggregate (starts as this rank's input).
+    partial: Option<CooTensor>,
+}
+
+impl<'a> SparCmlMachine<'a> {
+    fn new(rank: usize, inputs: &'a [CooTensor]) -> SparCmlMachine<'a> {
         let n = inputs.len();
-        assert_eq!(n, tx.endpoints());
-        if n == 1 {
-            return Ok(SyncResult {
-                outputs: vec![inputs[0].clone()],
-                report: tx.take_report(),
-            });
-        }
-
-        // Largest power of two ≤ n.
-        let core = crate::util::largest_pow2_at_most(n);
+        let core = largest_pow2_at_most(n);
         let excess = n - core;
-        // Current partial aggregate per node.
-        let mut partial: Vec<CooTensor> = inputs.to_vec();
-
-        // Pre-fold: node core+j sends its tensor to node j, which merges.
-        if excess > 0 {
-            for j in 0..excess {
-                let src = core + j;
-                tx.send(src, j, push_frame(src, &partial[src]))?;
-            }
-            for j in 0..excess {
-                let (_, t) = expect_push(tx.recv(j)?);
-                partial[j] = partial[j].merge(&t);
-            }
-            tx.end_stage("fold-in")?;
+        SparCmlMachine {
+            rank,
+            core,
+            excess,
+            inputs,
+            inbox: Inbox::new(n),
+            phase: if n == 1 {
+                CmlPhase::Done
+            } else if excess > 0 {
+                CmlPhase::FoldIn
+            } else {
+                CmlPhase::Double { dist: 1 }
+            },
+            sent: false,
+            parked: false,
+            partial: Some(inputs[rank].clone()),
         }
+    }
+}
 
-        // Recursive doubling within the core: all sends of a stage leave
-        // before any merge, so partners exchange the same snapshot.
-        let mut dist = 1usize;
-        while dist < core {
-            for (i, t) in partial.iter().enumerate().take(core) {
-                tx.send(i, i ^ dist, push_frame(i, t))?;
+impl Protocol for SparCmlMachine<'_> {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn poll(&mut self, _scratch: &mut SyncScratch) -> Result<Event, WireError> {
+        loop {
+            match self.phase {
+                CmlPhase::FoldIn => {
+                    if self.parked {
+                        return Ok(Event::StageDone { name: "fold-in" });
+                    }
+                    if self.rank >= self.core {
+                        // Excess rank: ship the tensor into the core.
+                        if !self.sent {
+                            self.sent = true;
+                            let j = self.rank - self.core;
+                            let msg = push_msg(self.rank, self.partial.as_ref().unwrap());
+                            return Ok(Event::Send { dst: j, msg });
+                        }
+                        self.parked = true;
+                        return Ok(Event::StageDone { name: "fold-in" });
+                    }
+                    if self.rank < self.excess {
+                        // Fold target: merge exactly one frame.
+                        let src = self.core + self.rank;
+                        match self.inbox.take_from(src) {
+                            Some(msg) => {
+                                let (_, t) = expect_push(msg);
+                                let p = self.partial.take().unwrap();
+                                self.partial = Some(p.merge(&t));
+                                self.parked = true;
+                                return Ok(Event::StageDone { name: "fold-in" });
+                            }
+                            None => return Ok(Event::NeedFrame { src }),
+                        }
+                    }
+                    self.parked = true;
+                    return Ok(Event::StageDone { name: "fold-in" });
+                }
+                CmlPhase::Double { dist } => {
+                    if dist >= self.core {
+                        self.phase = if self.excess > 0 {
+                            CmlPhase::FoldOut
+                        } else {
+                            CmlPhase::Done
+                        };
+                        continue;
+                    }
+                    if self.parked {
+                        return Ok(Event::StageDone { name: "rec-double" });
+                    }
+                    if self.rank >= self.core {
+                        // Excess ranks sit out the doubling.
+                        self.parked = true;
+                        return Ok(Event::StageDone { name: "rec-double" });
+                    }
+                    let peer = self.rank ^ dist;
+                    if !self.sent {
+                        self.sent = true;
+                        let msg = push_msg(self.rank, self.partial.as_ref().unwrap());
+                        return Ok(Event::Send { dst: peer, msg });
+                    }
+                    match self.inbox.take_from(peer) {
+                        Some(msg) => {
+                            let (from, t) = expect_push(msg);
+                            assert_eq!(from as usize, peer, "recursive-doubling partner");
+                            let p = self.partial.take().unwrap();
+                            self.partial = Some(p.merge(&t));
+                            self.parked = true;
+                            return Ok(Event::StageDone { name: "rec-double" });
+                        }
+                        None => return Ok(Event::NeedFrame { src: peer }),
+                    }
+                }
+                CmlPhase::FoldOut => {
+                    if self.parked {
+                        return Ok(Event::StageDone { name: "fold-out" });
+                    }
+                    if self.rank < self.excess {
+                        // Return the final aggregate to the excess rank.
+                        if !self.sent {
+                            self.sent = true;
+                            let msg = push_msg(self.rank, self.partial.as_ref().unwrap());
+                            return Ok(Event::Send {
+                                dst: self.core + self.rank,
+                                msg,
+                            });
+                        }
+                        self.parked = true;
+                        return Ok(Event::StageDone { name: "fold-out" });
+                    }
+                    if self.rank >= self.core {
+                        let src = self.rank - self.core;
+                        match self.inbox.take_from(src) {
+                            Some(msg) => {
+                                self.partial = Some(expect_push(msg).1);
+                                self.parked = true;
+                                return Ok(Event::StageDone { name: "fold-out" });
+                            }
+                            None => return Ok(Event::NeedFrame { src }),
+                        }
+                    }
+                    self.parked = true;
+                    return Ok(Event::StageDone { name: "fold-out" });
+                }
+                CmlPhase::Done => {
+                    return Ok(Event::Complete(
+                        self.partial.take().expect("partial aggregate present"),
+                    ))
+                }
             }
-            for i in 0..core {
-                let (from, t) = expect_push(tx.recv(i)?);
-                assert_eq!(from as usize, i ^ dist, "recursive-doubling partner");
-                partial[i] = partial[i].merge(&t);
-            }
-            tx.end_stage("rec-double")?;
-            dist <<= 1;
         }
+    }
 
-        // Post-fold: send the final aggregate back to the excess nodes.
-        if excess > 0 {
-            for j in 0..excess {
-                tx.send(j, core + j, push_frame(j, &partial[j]))?;
+    fn deliver(&mut self, src: usize, msg: Message) -> Result<(), WireError> {
+        self.inbox.push(src, msg);
+        Ok(())
+    }
+
+    fn stage_closed(&mut self, name: &str) -> Result<(), WireError> {
+        self.sent = false;
+        self.parked = false;
+        match name {
+            "fold-in" => self.phase = CmlPhase::Double { dist: 1 },
+            "rec-double" => {
+                if let CmlPhase::Double { dist } = self.phase {
+                    self.phase = CmlPhase::Double { dist: dist << 1 };
+                } else {
+                    panic!("SparCML: rec-double closed outside doubling");
+                }
             }
-            for j in 0..excess {
-                let (_, t) = expect_push(tx.recv(core + j)?);
-                partial[core + j] = t;
-            }
-            tx.end_stage("fold-out")?;
+            "fold-out" => self.phase = CmlPhase::Done,
+            other => panic!("SparCML: unknown stage '{other}' closed"),
         }
-
-        Ok(SyncResult {
-            outputs: partial,
-            report: tx.take_report(),
-        })
+        Ok(())
     }
 }
 
@@ -115,11 +248,15 @@ mod tests {
     use crate::cluster::LinkKind;
     use crate::wire::codec::COO_FRAME_OVERHEAD;
 
+    fn run(inputs: &[CooTensor], net: &Network) -> SyncOutput {
+        SparCml::new().run_sim(inputs, net, &mut SyncScratch::new())
+    }
+
     #[test]
     fn power_of_two_correct() {
         let inputs = overlapping_inputs(1, 8, 4000, 80, 40);
         let net = Network::new(8, LinkKind::Tcp25);
-        let r = SparCml::new().sync(&inputs, &net);
+        let r = run(&inputs, &net);
         verify_outputs(&r, &inputs);
         assert_eq!(r.report.stages.len(), 3);
     }
@@ -129,7 +266,7 @@ mod tests {
         for n in [3usize, 5, 6, 7, 12] {
             let inputs = overlapping_inputs(n as u64, n, 2000, 40, 30);
             let net = Network::new(n, LinkKind::Tcp25);
-            let r = SparCml::new().sync(&inputs, &net);
+            let r = run(&inputs, &net);
             verify_outputs(&r, &inputs);
         }
     }
@@ -147,7 +284,7 @@ mod tests {
             })
             .collect();
         let net = Network::new(n, LinkKind::Tcp25);
-        let r = SparCml::new().sync(&inputs, &net);
+        let r = run(&inputs, &net);
         let payload: Vec<u64> = r
             .report
             .stages
@@ -169,7 +306,7 @@ mod tests {
             .map(|_| CooTensor::from_sorted(1000, idx.clone(), vec![1.0; 100]))
             .collect();
         let net = Network::new(n, LinkKind::Tcp25);
-        let r = SparCml::new().sync(&inputs, &net);
+        let r = run(&inputs, &net);
         let per_stage: Vec<u64> = r.report.stages.iter().map(|s| s.sent[0]).collect();
         assert!(per_stage.windows(2).all(|w| w[0] == w[1]));
         verify_outputs(&r, &inputs);
@@ -179,7 +316,7 @@ mod tests {
     fn single_node_noop() {
         let inputs = overlapping_inputs(9, 1, 500, 10, 10);
         let net = Network::new(1, LinkKind::Tcp25);
-        let r = SparCml::new().sync(&inputs, &net);
+        let r = run(&inputs, &net);
         assert_eq!(r.report.total_bytes(), 0);
         verify_outputs(&r, &inputs);
     }

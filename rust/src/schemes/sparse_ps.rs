@@ -10,9 +10,14 @@
 //! Push ships each worker's non-empty range slices as `PushCoo` frames
 //! (range-local indices); Pull broadcasts each server's aggregated
 //! partition as `PullCoo` frames. Empty payloads are never framed — a
-//! partition that holds no non-zeros generates no traffic at all.
+//! partition that holds no non-zeros generates no traffic at all, which
+//! is why the per-rank machines are receive-until-stage-closed: the
+//! frame count is data-dependent, so a server aggregates whatever its
+//! inbox holds when the `push` stage closes (ascending-source order,
+//! reproducing the orchestrated merge order bit for bit).
 
 use super::*;
+use crate::wire::{Event, Inbox};
 
 /// Sparse PS scheme.
 #[derive(Clone, Debug, Default)]
@@ -39,77 +44,159 @@ impl SyncScheme for SparsePs {
         }
     }
 
-    fn sync_transport(
-        &self,
-        inputs: &[CooTensor],
-        tx: &mut dyn Transport,
-        _scratch: &mut SyncScratch,
-    ) -> Result<SyncResult, crate::wire::WireError> {
+    fn protocols<'a>(&'a self, inputs: &'a [CooTensor]) -> Vec<Box<dyn Protocol + 'a>> {
         let n = inputs.len();
-        assert_eq!(n, tx.endpoints());
-        let dense_len = inputs[0].dense_len;
-        let per = crate::util::ceil_div(dense_len, n) as u32;
-        let lo = |p: usize| (p as u32 * per).min(dense_len as u32);
-        let hi = |p: usize| ((p as u32 + 1) * per).min(dense_len as u32);
+        (0..n)
+            .map(|rank| Box::new(PsMachine::new(rank, inputs)) as Box<dyn Protocol + 'a>)
+            .collect()
+    }
+}
 
-        // Push: worker w frames contiguous partition p to server p.
-        let mut own: Vec<Option<CooTensor>> = (0..n).map(|_| None).collect();
-        let mut expected = vec![0usize; n];
-        for (w, t) in inputs.iter().enumerate() {
-            for p in 0..n {
-                let part = t.slice_range(lo(p), hi(p));
-                if w == p {
-                    own[p] = Some(part);
-                } else if part.nnz() > 0 {
-                    tx.send(w, p, push_frame(w, &part))?;
-                    expected[p] += 1;
+enum PsState {
+    /// Framing non-empty range slices to the other servers.
+    PushSend,
+    /// Parked on `push`; aggregation happens at stage closure.
+    PushParked,
+    /// Broadcasting the aggregated partition to the other workers.
+    PullSend,
+    /// Parked on `pull`; reassembly happens at stage closure.
+    PullParked,
+    /// Output assembled, next poll completes.
+    Done,
+}
+
+struct PsMachine<'a> {
+    rank: usize,
+    n: usize,
+    dense_len: usize,
+    inputs: &'a [CooTensor],
+    state: PsState,
+    inbox: Inbox,
+    cursor: usize,
+    /// This rank's own shard of its server partition.
+    own: Option<CooTensor>,
+    /// The aggregated partition this rank serves.
+    agg: Option<CooTensor>,
+    output: Option<CooTensor>,
+}
+
+impl<'a> PsMachine<'a> {
+    fn new(rank: usize, inputs: &'a [CooTensor]) -> PsMachine<'a> {
+        let n = inputs.len();
+        PsMachine {
+            rank,
+            n,
+            dense_len: inputs[0].dense_len,
+            inputs,
+            state: PsState::PushSend,
+            inbox: Inbox::new(n),
+            cursor: 0,
+            own: None,
+            agg: None,
+            output: None,
+        }
+    }
+
+    fn per(&self) -> u32 {
+        crate::util::ceil_div(self.dense_len, self.n) as u32
+    }
+
+    fn lo(&self, p: usize) -> u32 {
+        (p as u32 * self.per()).min(self.dense_len as u32)
+    }
+
+    fn hi(&self, p: usize) -> u32 {
+        ((p as u32 + 1) * self.per()).min(self.dense_len as u32)
+    }
+}
+
+impl Protocol for PsMachine<'_> {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn poll(&mut self, _scratch: &mut SyncScratch) -> Result<Event, WireError> {
+        match self.state {
+            PsState::PushSend => {
+                while self.cursor < self.n {
+                    let p = self.cursor;
+                    self.cursor += 1;
+                    let part = self.inputs[self.rank].slice_range(self.lo(p), self.hi(p));
+                    if p == self.rank {
+                        self.own = Some(part);
+                    } else if part.nnz() > 0 {
+                        return Ok(Event::Send {
+                            dst: p,
+                            msg: push_msg(self.rank, &part),
+                        });
+                    }
                 }
+                self.state = PsState::PushParked;
+                Ok(Event::StageDone { name: "push" })
             }
-        }
-
-        // One-shot aggregation at each server.
-        let mut aggregated: Vec<CooTensor> = Vec::with_capacity(n);
-        for p in 0..n {
-            let mut shards = vec![own[p].take().expect("own shard present")];
-            for _ in 0..expected[p] {
-                shards.push(expect_push(tx.recv(p)?).1);
-            }
-            aggregated.push(CooTensor::merge_all(&shards));
-        }
-        tx.end_stage("push")?;
-
-        // Pull: server p point-to-point broadcasts its aggregated
-        // partition to every worker (existing PS implementations, App. B).
-        let mut expected = vec![0usize; n];
-        for (p, agg) in aggregated.iter().enumerate() {
-            if agg.nnz() == 0 {
-                continue;
-            }
-            for w in 0..n {
-                if w != p {
-                    tx.send(p, w, pull_frame(p, agg))?;
-                    expected[w] += 1;
+            PsState::PushParked => Ok(Event::StageDone { name: "push" }),
+            PsState::PullSend => {
+                let nonempty = self
+                    .agg
+                    .as_ref()
+                    .expect("aggregated partition")
+                    .nnz()
+                    > 0;
+                if nonempty {
+                    while self.cursor < self.n {
+                        let w = self.cursor;
+                        self.cursor += 1;
+                        if w != self.rank {
+                            let msg = pull_msg(self.rank, self.agg.as_ref().unwrap());
+                            return Ok(Event::Send { dst: w, msg });
+                        }
+                    }
                 }
+                self.state = PsState::PullParked;
+                Ok(Event::StageDone { name: "pull" })
             }
+            PsState::PullParked => Ok(Event::StageDone { name: "pull" }),
+            PsState::Done => Ok(Event::Complete(
+                self.output.take().expect("output assembled at pull closure"),
+            )),
         }
+    }
 
-        // Reassemble the full tensor at every worker.
-        let mut outputs = Vec::with_capacity(n);
-        for w in 0..n {
-            let mut parts: Vec<(u32, CooTensor)> = Vec::with_capacity(n);
-            parts.push((lo(w), aggregated[w].clone()));
-            for _ in 0..expected[w] {
-                let (server, tensor) = expect_pull_coo(tx.recv(w)?);
-                parts.push((lo(server as usize), tensor));
+    fn deliver(&mut self, src: usize, msg: Message) -> Result<(), WireError> {
+        self.inbox.push(src, msg);
+        Ok(())
+    }
+
+    fn stage_closed(&mut self, name: &str) -> Result<(), WireError> {
+        match name {
+            "push" => {
+                // One-shot aggregation: own shard first, then the
+                // received shards in ascending-worker order (the old
+                // orchestrated global-FIFO order).
+                let mut shards = vec![self.own.take().expect("own shard present")];
+                for (_, msg) in self.inbox.drain_ascending() {
+                    shards.push(expect_push(msg).1);
+                }
+                self.agg = Some(CooTensor::merge_all(&shards));
+                self.cursor = 0;
+                self.state = PsState::PullSend;
             }
-            outputs.push(CooTensor::concat_ranges(&parts, dense_len));
+            "pull" => {
+                let mut parts: Vec<(u32, CooTensor)> = Vec::with_capacity(self.n);
+                parts.push((
+                    self.lo(self.rank),
+                    self.agg.take().expect("aggregated partition"),
+                ));
+                for (_, msg) in self.inbox.drain_ascending() {
+                    let (server, tensor) = expect_pull_coo(msg);
+                    parts.push((self.lo(server as usize), tensor));
+                }
+                self.output = Some(CooTensor::concat_ranges(&parts, self.dense_len));
+                self.state = PsState::Done;
+            }
+            other => panic!("SparsePS: unknown stage '{other}' closed"),
         }
-        tx.end_stage("pull")?;
-
-        Ok(SyncResult {
-            outputs,
-            report: tx.take_report(),
-        })
+        Ok(())
     }
 }
 
@@ -125,7 +212,7 @@ mod tests {
     fn correct_aggregation() {
         let inputs = overlapping_inputs(1, 6, 3000, 70, 30);
         let net = Network::new(6, LinkKind::Tcp25);
-        let r = SparsePs::new().sync(&inputs, &net);
+        let r = SparsePs::new().run_sim(&inputs, &net, &mut SyncScratch::new());
         verify_outputs(&r, &inputs);
         assert_eq!(r.report.stages.len(), 2);
     }
@@ -149,7 +236,7 @@ mod tests {
             })
             .collect();
         let net = Network::new(n, LinkKind::Tcp25);
-        let r = SparsePs::new().sync(&inputs, &net);
+        let r = SparsePs::new().run_sim(&inputs, &net, &mut SyncScratch::new());
         let push = &r.report.stages[0];
         let recv0 = push.recv[0];
         let recv_rest: u64 = push.recv[1..].iter().sum();
@@ -175,7 +262,7 @@ mod tests {
             })
             .collect();
         let net = Network::new(n, LinkKind::Tcp25);
-        let r = SparsePs::new().sync(&inputs, &net);
+        let r = SparsePs::new().run_sim(&inputs, &net, &mut SyncScratch::new());
         assert!(r.report.recv_imbalance() < 1.15);
     }
 
@@ -185,7 +272,7 @@ mod tests {
         let a = CooTensor::from_sorted(100, vec![0, 1, 2], vec![1.0; 3]);
         let b = CooTensor::from_sorted(100, vec![3, 4], vec![1.0; 2]);
         let net = Network::new(2, LinkKind::Tcp25);
-        let r = SparsePs::new().sync(&[a, b], &net);
+        let r = SparsePs::new().run_sim(&[a, b], &net, &mut SyncScratch::new());
         // push: b frames its 2 entries (both < 50) to server 0 → 16 B of
         // COO payload + one frame of overhead; a has nothing for
         // server 1, so no frame at all.

@@ -6,16 +6,24 @@
 //! aggregate is incomplete — Fig 14 shows the accuracy cost, Fig 8 the
 //! memory/loss trade-off. Push ships the surviving hash partitions as
 //! `PushCoo` frames; Pull uses COO broadcast.
+//!
+//! Empty partitions are never framed (like SparsePS), so the per-rank
+//! machines are receive-until-stage-closed. Each machine records its
+//! own `(nnz, lost)` into a per-rank slot on the scheme; the loss rate
+//! is the ratio over whichever ranks ran in this process — all of them
+//! in-process, just the local rank under `zen worker`.
 
 use super::*;
 use crate::hashing::StrawmanHasher;
+use crate::wire::{Event, Inbox};
 
 /// Lossy strawman scheme with memory `mem_multiple × expected_nnz` slots.
 pub struct StrawmanScheme {
     hasher: StrawmanHasher,
-    /// Measured info-loss of the last sync (interior mutability for the
-    /// accuracy experiment's reporting).
-    last_loss_rate: std::sync::Mutex<f64>,
+    /// Per-rank `(nnz, lost)` of the last sync (interior mutability for
+    /// the accuracy experiment's reporting); reset when machines are
+    /// built, filled by each rank's machine at partition time.
+    last_loss: std::sync::Mutex<Vec<Option<(usize, usize)>>>,
 }
 
 impl StrawmanScheme {
@@ -23,13 +31,27 @@ impl StrawmanScheme {
         let slots = ((expected_nnz as f64 * mem_multiple) as usize).max(n);
         StrawmanScheme {
             hasher: StrawmanHasher::new(master_seed, n, slots),
-            last_loss_rate: std::sync::Mutex::new(0.0),
+            last_loss: std::sync::Mutex::new(Vec::new()),
         }
     }
 
-    /// Information-loss rate measured on the most recent `sync`.
+    /// Information-loss rate measured on the most recent sync, over the
+    /// ranks that ran in this process.
     pub fn last_loss_rate(&self) -> f64 {
-        *self.last_loss_rate.lock().unwrap()
+        let slots = self.last_loss.lock().unwrap();
+        let (nnz, lost) = slots
+            .iter()
+            .flatten()
+            .fold((0usize, 0usize), |(a, b), &(n, l)| (a + n, b + l));
+        if nnz == 0 {
+            0.0
+        } else {
+            lost as f64 / nnz as f64
+        }
+    }
+
+    fn record_loss(&self, rank: usize, nnz: usize, lost: usize) {
+        self.last_loss.lock().unwrap()[rank] = Some((nnz, lost));
     }
 }
 
@@ -48,78 +70,137 @@ impl SyncScheme for StrawmanScheme {
         }
     }
 
-    fn sync_transport(
-        &self,
-        inputs: &[CooTensor],
-        tx: &mut dyn Transport,
-        _scratch: &mut SyncScratch,
-    ) -> Result<SyncResult, crate::wire::WireError> {
+    fn protocols<'a>(&'a self, inputs: &'a [CooTensor]) -> Vec<Box<dyn Protocol + 'a>> {
         let n = inputs.len();
-        assert_eq!(n, tx.endpoints());
         assert_eq!(self.hasher.n, n);
+        *self.last_loss.lock().unwrap() = vec![None; n];
+        (0..n)
+            .map(|rank| {
+                Box::new(StrawmanMachine {
+                    rank,
+                    n,
+                    scheme: self,
+                    inputs,
+                    inbox: Inbox::new(n),
+                    state: StrawState::PushSend,
+                    cursor: 0,
+                    parts: Vec::new(),
+                    own: None,
+                    agg: None,
+                    output: None,
+                }) as Box<dyn Protocol + 'a>
+            })
+            .collect()
+    }
+}
 
-        // Push: strawman-partition (lossy) on every worker; frame every
-        // non-empty foreign partition.
-        let mut own: Vec<Option<CooTensor>> = (0..n).map(|_| None).collect();
-        let mut expected = vec![0usize; n];
-        let mut total_nnz = 0usize;
-        let mut total_lost = 0usize;
-        for (w, t) in inputs.iter().enumerate() {
-            let out = self.hasher.partition(t);
-            total_nnz += t.nnz();
-            total_lost += out.lost;
-            for (p, part) in out.parts.into_iter().enumerate() {
-                if p == w {
-                    own[w] = Some(part);
-                } else if part.nnz() > 0 {
-                    tx.send(w, p, push_frame(w, &part))?;
-                    expected[p] += 1;
+enum StrawState {
+    /// Lossy-partition, then frame non-empty foreign partitions.
+    PushSend,
+    PushParked,
+    /// Broadcast the (possibly empty → unframed) aggregate.
+    PullSend,
+    PullParked,
+    Done,
+}
+
+struct StrawmanMachine<'a> {
+    rank: usize,
+    n: usize,
+    scheme: &'a StrawmanScheme,
+    inputs: &'a [CooTensor],
+    inbox: Inbox,
+    state: StrawState,
+    cursor: usize,
+    /// Surviving partitions of this rank's input (drained as sent).
+    parts: Vec<Option<CooTensor>>,
+    own: Option<CooTensor>,
+    agg: Option<CooTensor>,
+    output: Option<CooTensor>,
+}
+
+impl Protocol for StrawmanMachine<'_> {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn poll(&mut self, _scratch: &mut SyncScratch) -> Result<Event, WireError> {
+        match self.state {
+            StrawState::PushSend => {
+                if self.parts.is_empty() {
+                    let t = &self.inputs[self.rank];
+                    let out = self.scheme.hasher.partition(t);
+                    self.scheme.record_loss(self.rank, t.nnz(), out.lost);
+                    self.parts = out.parts.into_iter().map(Some).collect();
                 }
-            }
-        }
-        *self.last_loss_rate.lock().unwrap() = if total_nnz == 0 {
-            0.0
-        } else {
-            total_lost as f64 / total_nnz as f64
-        };
-
-        let mut aggregated: Vec<CooTensor> = Vec::with_capacity(n);
-        for p in 0..n {
-            let mut shards = vec![own[p].take().expect("own shard present")];
-            for _ in 0..expected[p] {
-                shards.push(expect_push(tx.recv(p)?).1);
-            }
-            aggregated.push(CooTensor::merge_all(&shards));
-        }
-        tx.end_stage("push")?;
-
-        // Pull: COO broadcast of each server's (disjoint) aggregate.
-        let mut expected = vec![0usize; n];
-        for (p, agg) in aggregated.iter().enumerate() {
-            if agg.nnz() == 0 {
-                continue;
-            }
-            for w in 0..n {
-                if w != p {
-                    tx.send(p, w, pull_frame(p, agg))?;
-                    expected[w] += 1;
+                while self.cursor < self.n {
+                    let p = self.cursor;
+                    self.cursor += 1;
+                    let part = self.parts[p].take().expect("partition present");
+                    if p == self.rank {
+                        self.own = Some(part);
+                    } else if part.nnz() > 0 {
+                        return Ok(Event::Send {
+                            dst: p,
+                            msg: push_msg(self.rank, &part),
+                        });
+                    }
                 }
+                self.state = StrawState::PushParked;
+                Ok(Event::StageDone { name: "push" })
             }
-        }
-        let mut outputs = Vec::with_capacity(n);
-        for w in 0..n {
-            let mut pieces: Vec<CooTensor> = Vec::with_capacity(expected[w]);
-            for _ in 0..expected[w] {
-                pieces.push(expect_pull_coo(tx.recv(w)?).1);
+            StrawState::PushParked => Ok(Event::StageDone { name: "push" }),
+            StrawState::PullSend => {
+                let nonempty = self.agg.as_ref().expect("aggregate present").nnz() > 0;
+                if nonempty {
+                    while self.cursor < self.n {
+                        let w = self.cursor;
+                        self.cursor += 1;
+                        if w != self.rank {
+                            let msg = pull_msg(self.rank, self.agg.as_ref().unwrap());
+                            return Ok(Event::Send { dst: w, msg });
+                        }
+                    }
+                }
+                self.state = StrawState::PullParked;
+                Ok(Event::StageDone { name: "pull" })
             }
-            outputs.push(merge_with_own(&pieces, &aggregated[w]));
+            StrawState::PullParked => Ok(Event::StageDone { name: "pull" }),
+            StrawState::Done => Ok(Event::Complete(
+                self.output.take().expect("output assembled"),
+            )),
         }
-        tx.end_stage("pull")?;
+    }
 
-        Ok(SyncResult {
-            outputs,
-            report: tx.take_report(),
-        })
+    fn deliver(&mut self, src: usize, msg: Message) -> Result<(), WireError> {
+        self.inbox.push(src, msg);
+        Ok(())
+    }
+
+    fn stage_closed(&mut self, name: &str) -> Result<(), WireError> {
+        match name {
+            "push" => {
+                let mut shards = vec![self.own.take().expect("own shard present")];
+                for (_, msg) in self.inbox.drain_ascending() {
+                    shards.push(expect_push(msg).1);
+                }
+                self.agg = Some(CooTensor::merge_all(&shards));
+                self.cursor = 0;
+                self.state = StrawState::PullSend;
+            }
+            "pull" => {
+                let pieces: Vec<CooTensor> = self
+                    .inbox
+                    .drain_ascending()
+                    .into_iter()
+                    .map(|(_, msg)| expect_pull_coo(msg).1)
+                    .collect();
+                self.output = Some(merge_with_own(&pieces, self.agg.as_ref().unwrap()));
+                self.state = StrawState::Done;
+            }
+            other => panic!("Strawman-lossy: unknown stage '{other}' closed"),
+        }
+        Ok(())
     }
 }
 
@@ -130,12 +211,16 @@ mod tests {
     use crate::cluster::LinkKind;
     use crate::schemes::reference_sum;
 
+    fn run(s: &StrawmanScheme, inputs: &[CooTensor], net: &Network) -> SyncOutput {
+        s.run_sim(inputs, net, &mut SyncScratch::new())
+    }
+
     #[test]
     fn loses_gradients_under_small_memory() {
         let inputs = overlapping_inputs(1, 4, 20_000, 500, 400);
         let net = Network::new(4, LinkKind::Tcp25);
         let s = StrawmanScheme::new(3, 4, 900, 1.0);
-        let r = s.sync(&inputs, &net);
+        let r = run(&s, &inputs, &net);
         assert!(s.last_loss_rate() > 0.05, "loss {}", s.last_loss_rate());
         // outputs are a *partial* sum: every surviving entry must match
         // some subset-sum ≤ reference count
@@ -149,7 +234,7 @@ mod tests {
         let inputs = overlapping_inputs(2, 4, 20_000, 500, 400);
         let net = Network::new(4, LinkKind::Tcp25);
         let s = StrawmanScheme::new(3, 4, 900, 64.0);
-        let r = s.sync(&inputs, &net);
+        let r = run(&s, &inputs, &net);
         assert!(s.last_loss_rate() < 0.02, "loss {}", s.last_loss_rate());
         let _ = r;
     }
@@ -159,7 +244,7 @@ mod tests {
         let inputs = overlapping_inputs(3, 8, 50_000, 1_500, 500);
         let net = Network::new(8, LinkKind::Tcp25);
         let s = StrawmanScheme::new(5, 8, 2_000, 8.0);
-        let r = s.sync(&inputs, &net);
+        let r = run(&s, &inputs, &net);
         assert!(r.report.stages[0].recv_imbalance() < 1.2);
     }
 }

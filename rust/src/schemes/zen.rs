@@ -12,6 +12,16 @@
 //! Theorem 3: total index overhead per worker is a constant `|G|/32`
 //! FP32-equivalents. The COO-Pull variant exists for the Fig 18 ablation,
 //! and a naive positional bitmap variant for Fig 17's comparison.
+//!
+//! Each rank is a sans-IO machine. Frame counts are deterministic
+//! (every worker pushes to every server, every server broadcasts its
+//! pull, empty or not), so both stages consume exactly `n−1` frames via
+//! `NeedFrame` and aggregate inside `poll` — where the machine has the
+//! [`SyncScratch`] it hashes and encodes into. Hashing and encode wall
+//! time is accumulated per machine into a shared per-sync accumulator
+//! (each rank contributes its own `(hash + encode)/n`, reproducing the
+//! orchestrated "workers hash in parallel, charge the max" estimate)
+//! and charged into the report by [`Zen`]'s `run` override.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -19,7 +29,7 @@ use std::sync::{Arc, Mutex};
 use super::*;
 use crate::hashing::{HashBitmapCodec, HashBitmapPayload, HierarchicalHasher};
 use crate::util::OnceMap;
-use crate::wire::Message;
+use crate::wire::{Event, Inbox, Message};
 
 /// Which index representation Pull uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -115,6 +125,44 @@ impl Zen {
         overflow.push((dense_len, d.clone()));
         d
     }
+
+    /// Build the per-rank machines sharing one compute-time accumulator.
+    /// The accumulator belongs to one sync, never to the (possibly
+    /// concurrently shared) scheme instance.
+    fn machines<'a>(
+        &'a self,
+        inputs: &'a [CooTensor],
+        compute: Arc<Mutex<f64>>,
+    ) -> Vec<Box<dyn Protocol + 'a>> {
+        let n = inputs.len();
+        assert_eq!(self.hasher.n, n, "Zen hasher partitions must equal endpoints");
+        let dense_len = inputs[0].dense_len;
+        let domains = match self.format {
+            ZenIndexFormat::HashBitmap => Some(self.domains_for(dense_len)),
+            _ => None,
+        };
+        (0..n)
+            .map(|rank| {
+                Box::new(ZenMachine {
+                    rank,
+                    n,
+                    dense_len,
+                    scheme: self,
+                    inputs,
+                    domains: domains.clone(),
+                    compute: compute.clone(),
+                    inbox: Inbox::new(n),
+                    state: ZenState::Push,
+                    cursor: 0,
+                    hashed: false,
+                    encoded: false,
+                    pending: std::collections::VecDeque::new(),
+                    agg: None,
+                    output: None,
+                }) as Box<dyn Protocol + 'a>
+            })
+            .collect()
+    }
 }
 
 impl SyncScheme for Zen {
@@ -140,180 +188,241 @@ impl SyncScheme for Zen {
         }
     }
 
-    fn sync_transport(
+    fn protocols<'a>(&'a self, inputs: &'a [CooTensor]) -> Vec<Box<dyn Protocol + 'a>> {
+        // Callers driving the machines directly get correct frames and
+        // bytes; compute-time charging needs `run`, which keeps the
+        // accumulator and folds it into the report.
+        self.machines(inputs, Arc::new(Mutex::new(0.0)))
+    }
+
+    fn run(
         &self,
         inputs: &[CooTensor],
-        tx: &mut dyn Transport,
+        driver: &mut dyn Driver,
         scratch: &mut SyncScratch,
-    ) -> Result<SyncResult, crate::wire::WireError> {
-        let n = inputs.len();
-        assert_eq!(n, tx.endpoints());
-        assert_eq!(self.hasher.n, n, "Zen hasher partitions must equal endpoints");
-        let dense_len = inputs[0].dense_len;
-
-        // --- Push: hash-partition on every worker (Alg 1) into reused
-        // per-worker scratch, then frame each foreign partition straight
-        // out of its zero-copy view — the send side never materializes
-        // owned tensors.
-        let sw = crate::util::Stopwatch::start();
-        if scratch.partitions.len() < n {
-            scratch
-                .partitions
-                .resize_with(n, crate::hashing::PartitionScratch::new);
+    ) -> Result<SyncOutput, WireError> {
+        let compute = Arc::new(Mutex::new(0.0f64));
+        let outcome = driver.drive(self.machines(inputs, compute.clone()), scratch)?;
+        let mut report = outcome.report;
+        if self.charge_compute {
+            report.compute_overhead += *compute.lock().unwrap();
         }
-        for (t, ps) in inputs.iter().zip(scratch.partitions.iter_mut()) {
-            self.hasher.partition_into(t, ps);
-        }
-        // Workers hash in parallel in the real system; charge the max.
-        let hash_time = sw.elapsed() / n as f64;
+        Ok(SyncOutput {
+            outputs: outcome.outputs,
+            report,
+        })
+    }
+}
 
-        let partitions = &scratch.partitions[..n];
-        for (w, ps) in partitions.iter().enumerate() {
-            for p in 0..n {
-                if p != w {
-                    tx.send(w, p, push_frame_slice(w, ps.part(p)))?;
-                }
-            }
-        }
+enum ZenState {
+    /// Hash-partition, push foreign shards, consume n−1, aggregate.
+    Push,
+    PushParked,
+    /// Encode + broadcast the aggregate, consume n−1, assemble output.
+    Pull,
+    PullParked,
+    Done,
+}
 
-        // --- One-shot aggregation at each server: server p merges its
-        // own partition-p view with the n−1 shards it received.
-        let mut received: Vec<Vec<CooTensor>> = Vec::with_capacity(n);
-        for p in 0..n {
-            let mut got = Vec::with_capacity(n - 1);
-            for _ in 0..n.saturating_sub(1) {
-                got.push(expect_push(tx.recv(p)?).1);
-            }
-            received.push(got);
-        }
-        let mut views: Vec<CooSlice<'_>> = Vec::with_capacity(n);
-        let aggregated: Vec<CooTensor> = (0..n)
-            .map(|p| {
-                views.clear();
-                views.push(partitions[p].part(p));
-                views.extend(received[p].iter().map(|t| t.as_slice()));
-                CooTensor::merge_all_slices(&views)
-            })
-            .collect();
-        tx.end_stage("push")?;
+struct ZenMachine<'a> {
+    rank: usize,
+    n: usize,
+    dense_len: usize,
+    scheme: &'a Zen,
+    inputs: &'a [CooTensor],
+    /// Partition domains (hash-bitmap format only).
+    domains: Option<Arc<Vec<Vec<u32>>>>,
+    /// Per-sync compute-time accumulator shared by all machines.
+    compute: Arc<Mutex<f64>>,
+    inbox: Inbox,
+    state: ZenState,
+    cursor: usize,
+    hashed: bool,
+    encoded: bool,
+    /// Pull frames staged at encode time, emitted one per poll.
+    pending: std::collections::VecDeque<(usize, Message)>,
+    /// This server's aggregated partition.
+    agg: Option<CooTensor>,
+    output: Option<CooTensor>,
+}
 
-        // --- Pull: broadcast each server's aggregate in the configured
-        // index format; every worker decodes what it receives and merges
-        // the (disjoint) aggregated partitions.
-        let mut enc_time = 0.0f64;
-        let outputs: Vec<CooTensor> = match self.format {
-            ZenIndexFormat::Coo => {
-                for (p, agg) in aggregated.iter().enumerate() {
-                    for w in 0..n {
-                        if w != p {
-                            tx.send(p, w, pull_frame(p, agg))?;
-                        }
+impl ZenMachine<'_> {
+    fn charge(&self, seconds: f64) {
+        *self.compute.lock().unwrap() += seconds / self.n as f64;
+    }
+
+    /// First peer (ascending) whose frame has not arrived yet, if any.
+    fn missing_peer(&self) -> Option<usize> {
+        (0..self.n).find(|&w| w != self.rank && self.inbox.from_src(w) == 0)
+    }
+}
+
+impl Protocol for ZenMachine<'_> {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn poll(&mut self, scratch: &mut SyncScratch) -> Result<Event, WireError> {
+        match self.state {
+            ZenState::Push => {
+                if !self.hashed {
+                    self.hashed = true;
+                    if scratch.partitions.len() < self.n {
+                        scratch
+                            .partitions
+                            .resize_with(self.n, crate::hashing::PartitionScratch::new);
                     }
-                }
-                let mut outputs = Vec::with_capacity(n);
-                for w in 0..n {
-                    let mut pieces: Vec<CooTensor> = Vec::with_capacity(n - 1);
-                    for _ in 0..n.saturating_sub(1) {
-                        pieces.push(expect_pull_coo(tx.recv(w)?).1);
-                    }
-                    outputs.push(merge_with_own(&pieces, &aggregated[w]));
-                }
-                outputs
-            }
-            ZenIndexFormat::HashBitmap => {
-                let domains = self.domains_for(dense_len);
-                for (p, agg) in aggregated.iter().enumerate() {
-                    let codec = HashBitmapCodec::new(&domains[p]);
+                    // Alg 1 on this rank's own input only; in the real
+                    // system workers hash in parallel, so each rank
+                    // charges its own time divided by n.
                     let sw = crate::util::Stopwatch::start();
-                    codec.encode_into(agg.as_slice(), &mut scratch.payload);
-                    enc_time += sw.elapsed();
-                    for w in 0..n {
-                        if w != p {
-                            tx.send(
-                                p,
-                                w,
-                                FrameRef::PullHashBitmap {
-                                    server: p as u32,
-                                    bitmap: &scratch.payload.bitmap,
-                                    values: &scratch.payload.values,
-                                },
-                            )?;
+                    self.scheme
+                        .hasher
+                        .partition_into(&self.inputs[self.rank], &mut scratch.partitions[self.rank]);
+                    self.charge(sw.elapsed());
+                }
+                while self.cursor < self.n {
+                    let p = self.cursor;
+                    self.cursor += 1;
+                    if p != self.rank {
+                        let msg = push_msg_slice(self.rank, scratch.partitions[self.rank].part(p));
+                        return Ok(Event::Send { dst: p, msg });
+                    }
+                }
+                if let Some(w) = self.missing_peer() {
+                    return Ok(Event::NeedFrame { src: w });
+                }
+                // One-shot aggregation: own partition-p view first, then
+                // the shards in ascending-worker order (the orchestrated
+                // global-FIFO order).
+                let received: Vec<CooTensor> = self
+                    .inbox
+                    .drain_ascending()
+                    .into_iter()
+                    .map(|(_, msg)| expect_push(msg).1)
+                    .collect();
+                let mut views: Vec<CooSlice<'_>> = Vec::with_capacity(self.n);
+                views.push(scratch.partitions[self.rank].part(self.rank));
+                views.extend(received.iter().map(|t| t.as_slice()));
+                self.agg = Some(CooTensor::merge_all_slices(&views));
+                self.state = ZenState::PushParked;
+                Ok(Event::StageDone { name: "push" })
+            }
+            ZenState::PushParked => Ok(Event::StageDone { name: "push" }),
+            ZenState::Pull => {
+                if !self.encoded {
+                    self.encoded = true;
+                    let agg = self.agg.as_ref().expect("aggregated partition");
+                    match self.scheme.format {
+                        ZenIndexFormat::Coo => {
+                            for w in 0..self.n {
+                                if w != self.rank {
+                                    self.pending.push_back((w, pull_msg(self.rank, agg)));
+                                }
+                            }
+                        }
+                        ZenIndexFormat::HashBitmap => {
+                            let domains = self.domains.as_ref().expect("domains computed");
+                            let codec = HashBitmapCodec::new(&domains[self.rank]);
+                            let sw = crate::util::Stopwatch::start();
+                            codec.encode_into(agg.as_slice(), &mut scratch.payload);
+                            self.charge(sw.elapsed());
+                            for w in 0..self.n {
+                                if w != self.rank {
+                                    self.pending.push_back((
+                                        w,
+                                        Message::PullHashBitmap {
+                                            server: self.rank as u32,
+                                            bitmap: scratch.payload.bitmap.clone(),
+                                            values: scratch.payload.values.clone(),
+                                        },
+                                    ));
+                                }
+                            }
+                        }
+                        ZenIndexFormat::NaiveBitmap => {
+                            // Naive positional bitmap over the WHOLE
+                            // range + values (§3.2.1: n·|G|/32, Fig 17).
+                            let sw = crate::util::Stopwatch::start();
+                            scratch.payload.bitmap.reset(self.dense_len);
+                            for &i in &agg.indices {
+                                scratch.payload.bitmap.set(i as usize);
+                            }
+                            self.charge(sw.elapsed());
+                            for w in 0..self.n {
+                                if w != self.rank {
+                                    self.pending.push_back((
+                                        w,
+                                        Message::PullHashBitmap {
+                                            server: self.rank as u32,
+                                            bitmap: scratch.payload.bitmap.clone(),
+                                            values: agg.values.clone(),
+                                        },
+                                    ));
+                                }
+                            }
                         }
                     }
                 }
-                let mut outputs = Vec::with_capacity(n);
-                for w in 0..n {
-                    let mut pieces: Vec<CooTensor> = Vec::with_capacity(n - 1);
-                    for _ in 0..n.saturating_sub(1) {
-                        match tx.recv(w)? {
+                if let Some((dst, msg)) = self.pending.pop_front() {
+                    return Ok(Event::Send { dst, msg });
+                }
+                if let Some(w) = self.missing_peer() {
+                    return Ok(Event::NeedFrame { src: w });
+                }
+                // Decode in ascending-server order and merge the
+                // disjoint aggregated partitions with our own.
+                let mut pieces: Vec<CooTensor> = Vec::with_capacity(self.n - 1);
+                for (_, msg) in self.inbox.drain_ascending() {
+                    let piece = match (self.scheme.format, msg) {
+                        (ZenIndexFormat::Coo, msg) => expect_pull_coo(msg).1,
+                        (
+                            ZenIndexFormat::HashBitmap,
                             Message::PullHashBitmap {
                                 server,
                                 bitmap,
                                 values,
-                            } => {
-                                let codec = HashBitmapCodec::new(&domains[server as usize]);
-                                let payload = HashBitmapPayload { bitmap, values };
-                                pieces.push(codec.decode(&payload, dense_len));
-                            }
-                            other => panic!("zen pull expected PullHashBitmap, got {other:?}"),
+                            },
+                        ) => {
+                            let domains = self.domains.as_ref().expect("domains computed");
+                            let codec = HashBitmapCodec::new(&domains[server as usize]);
+                            let payload = HashBitmapPayload { bitmap, values };
+                            codec.decode(&payload, self.dense_len)
                         }
-                    }
-                    outputs.push(merge_with_own(&pieces, &aggregated[w]));
+                        (
+                            ZenIndexFormat::NaiveBitmap,
+                            Message::PullHashBitmap { bitmap, values, .. },
+                        ) => {
+                            // positions are global indices directly
+                            CooTensor::from_sorted(self.dense_len, bitmap.ones(), values)
+                        }
+                        (_, other) => panic!("zen pull expected PullHashBitmap, got {other:?}"),
+                    };
+                    pieces.push(piece);
                 }
-                outputs
+                self.output = Some(merge_with_own(&pieces, self.agg.as_ref().unwrap()));
+                self.state = ZenState::PullParked;
+                Ok(Event::StageDone { name: "pull" })
             }
-            ZenIndexFormat::NaiveBitmap => {
-                // Naive positional bitmap over the WHOLE range + values
-                // (§3.2.1's strawman: n·|G|/32 total, Fig 17).
-                for (p, agg) in aggregated.iter().enumerate() {
-                    let sw = crate::util::Stopwatch::start();
-                    scratch.payload.bitmap.reset(dense_len);
-                    for &i in &agg.indices {
-                        scratch.payload.bitmap.set(i as usize);
-                    }
-                    enc_time += sw.elapsed();
-                    for w in 0..n {
-                        if w != p {
-                            tx.send(
-                                p,
-                                w,
-                                FrameRef::PullHashBitmap {
-                                    server: p as u32,
-                                    bitmap: &scratch.payload.bitmap,
-                                    values: &agg.values,
-                                },
-                            )?;
-                        }
-                    }
-                }
-                let mut outputs = Vec::with_capacity(n);
-                for w in 0..n {
-                    let mut pieces: Vec<CooTensor> = Vec::with_capacity(n - 1);
-                    for _ in 0..n.saturating_sub(1) {
-                        match tx.recv(w)? {
-                            Message::PullHashBitmap { bitmap, values, .. } => {
-                                // positions are global indices directly
-                                pieces.push(CooTensor::from_sorted(
-                                    dense_len,
-                                    bitmap.ones(),
-                                    values,
-                                ));
-                            }
-                            other => panic!("zen pull expected PullHashBitmap, got {other:?}"),
-                        }
-                    }
-                    outputs.push(merge_with_own(&pieces, &aggregated[w]));
-                }
-                outputs
-            }
-        };
-        tx.end_stage("pull")?;
-
-        let mut report = tx.take_report();
-        if self.charge_compute {
-            report.compute_overhead += hash_time + enc_time / n as f64;
+            ZenState::PullParked => Ok(Event::StageDone { name: "pull" }),
+            ZenState::Done => Ok(Event::Complete(
+                self.output.take().expect("output assembled"),
+            )),
         }
-        Ok(SyncResult { outputs, report })
+    }
+
+    fn deliver(&mut self, src: usize, msg: Message) -> Result<(), WireError> {
+        self.inbox.push(src, msg);
+        Ok(())
+    }
+
+    fn stage_closed(&mut self, name: &str) -> Result<(), WireError> {
+        match name {
+            "push" => self.state = ZenState::Pull,
+            "pull" => self.state = ZenState::Done,
+            other => panic!("Zen: unknown stage '{other}' closed"),
+        }
+        Ok(())
     }
 }
 
@@ -323,6 +432,10 @@ mod tests {
     use super::*;
     use crate::cluster::LinkKind;
     use crate::util::Pcg64;
+
+    fn run(zen: &Zen, inputs: &[CooTensor], net: &Network) -> SyncOutput {
+        zen.run_sim(inputs, net, &mut SyncScratch::new())
+    }
 
     #[test]
     fn correct_aggregation_all_formats() {
@@ -334,7 +447,7 @@ mod tests {
             ZenIndexFormat::NaiveBitmap,
         ] {
             let zen = Zen::new(7, 4, 200, fmt);
-            let r = zen.sync(&inputs, &net);
+            let r = run(&zen, &inputs, &net);
             verify_outputs(&r, &inputs);
             assert_eq!(r.report.stages.len(), 2);
         }
@@ -359,7 +472,7 @@ mod tests {
             .collect();
         let net = Network::new(n, LinkKind::Tcp25);
         let zen = Zen::new(11, n, 2_000, ZenIndexFormat::HashBitmap);
-        let r = zen.sync(&inputs, &net);
+        let r = run(&zen, &inputs, &net);
         let push = &r.report.stages[0];
         let total: u64 = push.recv.iter().sum();
         let max = *push.recv.iter().max().unwrap();
@@ -388,16 +501,10 @@ mod tests {
             })
             .collect();
         let net = Network::new(n, LinkKind::Tcp25);
-        let coo_pull = Zen::new(3, n, dense_len / 3, ZenIndexFormat::Coo)
-            .sync(&inputs, &net)
-            .report
-            .stages[1]
-            .total_bytes();
-        let hb_pull = Zen::new(3, n, dense_len / 3, ZenIndexFormat::HashBitmap)
-            .sync(&inputs, &net)
-            .report
-            .stages[1]
-            .total_bytes();
+        let coo_zen = Zen::new(3, n, dense_len / 3, ZenIndexFormat::Coo);
+        let coo_pull = run(&coo_zen, &inputs, &net).report.stages[1].total_bytes();
+        let hb_zen = Zen::new(3, n, dense_len / 3, ZenIndexFormat::HashBitmap);
+        let hb_pull = run(&hb_zen, &inputs, &net).report.stages[1].total_bytes();
         assert!(hb_pull < coo_pull, "hash bitmap {hb_pull} vs COO {coo_pull}");
     }
 
@@ -412,7 +519,8 @@ mod tests {
                 .map(|_| CooTensor::from_sorted(dense_len, idx.clone(), vec![1.0; 64]))
                 .collect();
             let net = Network::new(n, LinkKind::Tcp25);
-            let naive = Zen::new(3, n, 64, ZenIndexFormat::NaiveBitmap).sync(&inputs, &net);
+            let zen = Zen::new(3, n, 64, ZenIndexFormat::NaiveBitmap);
+            let naive = run(&zen, &inputs, &net);
             // per-worker pull recv from n-1 servers
             let per_worker: u64 = naive.report.stages[1].recv[0];
             let bitmap_part = (n - 1) as u64 * (dense_len as u64 / 8);
@@ -433,15 +541,15 @@ mod tests {
         assert_eq!(zen.domain_compute_count(), 0);
         let mut scratch = SyncScratch::new();
         for _ in 0..5 {
-            let r = zen.sync_with(&inputs_a, &net, &mut scratch);
+            let r = zen.run_sim(&inputs_a, &net, &mut scratch);
             verify_outputs(&r, &inputs_a);
         }
         assert_eq!(zen.domain_compute_count(), 1, "one compute per dense_len");
         for _ in 0..3 {
-            zen.sync_with(&inputs_b, &net, &mut scratch);
+            zen.run_sim(&inputs_b, &net, &mut scratch);
         }
         assert_eq!(zen.domain_compute_count(), 2);
-        zen.sync_with(&inputs_a, &net, &mut scratch);
+        zen.run_sim(&inputs_a, &net, &mut scratch);
         assert_eq!(zen.domain_compute_count(), 2, "cache hit on revisit");
     }
 
@@ -464,7 +572,7 @@ mod tests {
                         CooTensor::from_sorted(dense_len, idx, vec![1.0, 2.0])
                     })
                     .collect();
-                zen.sync(&inputs, &net);
+                run(&zen, &inputs, &net);
             }
             assert_eq!(
                 zen.domain_compute_count(),
@@ -484,7 +592,7 @@ mod tests {
         std::thread::scope(|s| {
             for _ in 0..8 {
                 s.spawn(|| {
-                    let r = zen.sync(&inputs, &net);
+                    let r = run(&zen, &inputs, &net);
                     verify_outputs(&r, &inputs);
                 });
             }
@@ -498,7 +606,7 @@ mod tests {
         let net = Network::new(4, LinkKind::Tcp25);
         let zen = Zen::new(7, 8, 100, ZenIndexFormat::Coo); // wrong n
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            zen.sync(&inputs, &net)
+            run(&zen, &inputs, &net)
         }));
         assert!(result.is_err());
     }

@@ -1,29 +1,33 @@
-//! Wire layer: binary codecs, the pluggable [`Transport`] data plane,
-//! and the in-process message [`Fabric`].
+//! Wire layer: binary codecs, sans-IO [`Protocol`] machines, and the
+//! [`Driver`] IO shells that run them.
 //!
-//! Every synchronization scheme in [`crate::schemes`] runs its protocol
-//! over a `dyn Transport`: [`SimTransport`] charges virtual α–β time
-//! from the byte matrix it observes (the simulator mode),
-//! [`ChannelTransport`] moves real encoded frames through mpsc channels,
-//! and [`TcpTransport`] moves them through loopback sockets. One code
-//! path, three data planes — sim-vs-channel byte parity per stage is
-//! asserted for every scheme by `rust/tests/transport_parity.rs`, which
-//! is what lets the repo keep a single source of truth for byte
-//! accounting.
+//! Every synchronization scheme in [`crate::schemes`] builds one
+//! [`Protocol`] state machine per rank ([`protocol`]); a [`Driver`]
+//! moves the frames: [`TransportDriver`] loops over an in-process
+//! [`Transport`] ([`SimTransport`] charges virtual α–β time from the
+//! byte matrix it observes, [`ChannelTransport`] moves real encoded
+//! frames through mpsc channels), [`SocketDriver`] pumps a
+//! readiness-polled loopback socket mesh, and [`WorkerDriver`] runs one
+//! rank per OS process (`zen worker`). One protocol body, four data
+//! planes — per-stage byte parity across all of them is asserted by
+//! `rust/tests/transport_parity.rs` and
+//! `rust/tests/driver_equivalence.rs`, which is what lets the repo keep
+//! a single source of truth for byte accounting.
 //!
 //! No serde offline, so the codecs are hand-rolled little-endian
 //! framing with explicit versioning and exhaustive roundtrip tests.
 
 pub mod codec;
-pub mod fabric;
+pub mod driver;
+pub(crate) mod fabric;
+pub mod protocol;
 pub mod transport;
 
 pub use codec::{
     encode_blocks, encode_dense_chunk, encode_pull_hash_bitmap, encode_push_coo, Decode, Encode,
     FrameRef, Message, WireError,
 };
-pub use fabric::{Endpoint, Fabric};
-pub use transport::{
-    make_transport, ChannelTransport, SimTransport, TcpTransport, Transport, TransportKind,
-    MAX_TCP_INFLIGHT_BYTES,
-};
+pub use driver::{make_driver, DriveOutcome, Driver, SocketDriver, TransportDriver, WorkerDriver};
+pub use fabric::Fabric;
+pub use protocol::{Event, Inbox, Protocol};
+pub use transport::{make_transport, ChannelTransport, SimTransport, Transport, TransportKind};

@@ -1,0 +1,189 @@
+//! Sans-IO protocol cores: per-rank state machines under every scheme.
+//!
+//! A synchronization scheme used to run *all* endpoints inside one
+//! `sync_transport` body that called blocking `send`/`recv` in global
+//! order — correct on an in-process transport, impossible to deploy on
+//! a real network where each rank owns only its endpoint. Following the
+//! sans-IO split (protocol cores compute events; IO shells move bytes),
+//! each scheme now builds one [`Protocol`] state machine per rank. A
+//! machine never performs IO: the driver polls it, the machine answers
+//! with an [`Event`], and delivered frames are handed back through
+//! [`Protocol::deliver`].
+//!
+//! ## Event vocabulary
+//!
+//! - [`Event::Send`] — the machine wants a frame on the wire. The
+//!   driver transmits it and re-polls; a machine emits every send of a
+//!   stage through successive polls.
+//! - [`Event::NeedFrame`] — the machine is parked waiting for a frame
+//!   from `src` it knows must arrive (deterministic-count protocols:
+//!   Zen's `n−1` pushes, a ring neighbor's chunk). The driver re-polls
+//!   it after the next delivery.
+//! - [`Event::StageDone`] — the machine finished its part of the named
+//!   synchronous stage. When *every* machine is parked on the same
+//!   stage name and every sent frame is delivered, the driver closes
+//!   the stage (charging its α–β time) and calls
+//!   [`Protocol::stage_closed`] on each machine.
+//! - [`Event::Complete`] — the machine's final aggregate; it will not
+//!   be polled again.
+//!
+//! ## Machine lifecycle contract
+//!
+//! Stages are globally synchronous and identically named across ranks
+//! (rank sequences never diverge — idle ranks still emit `StageDone`).
+//! Within a stage a machine first emits all its sends, then either
+//! consumes a known number of frames (parking on `NeedFrame` until they
+//! arrive) or parks on `StageDone` immediately and consumes its whole
+//! inbox after `stage_closed` — the latter is how the
+//! receive-until-stage-closed schemes (SparsePS, OmniReduce, the
+//! strawman) handle data-dependent frame counts (empty shards are never
+//! sent). Frames are buffered per source ([`Inbox`]) and consumed in
+//! ascending-source order, which reproduces the old orchestrated
+//! global-FIFO merge order on every backend — the per-stage byte parity
+//! and bit-identical outputs the transport-parity suite pins.
+
+use std::collections::VecDeque;
+
+use super::codec::{Message, WireError};
+use crate::schemes::SyncScratch;
+use crate::tensor::CooTensor;
+
+/// What a protocol machine wants next (see the module docs for the
+/// lifecycle contract).
+#[derive(Debug)]
+pub enum Event {
+    /// Put `msg` on the wire to rank `dst`.
+    Send { dst: usize, msg: Message },
+    /// Parked: progress needs a frame from `src`.
+    NeedFrame { src: usize },
+    /// Parked: this rank's part of stage `name` is finished.
+    StageDone { name: &'static str },
+    /// The protocol is finished; this is the rank's aggregate.
+    Complete(CooTensor),
+}
+
+/// One rank's sans-IO state machine for one synchronization.
+///
+/// Machines are built by
+/// [`SyncScheme::protocols`](crate::schemes::SyncScheme::protocols) and
+/// driven by a [`Driver`](crate::wire::Driver); they borrow the
+/// scheme's inputs (and the scheme itself) for the duration of the
+/// sync. The shared [`SyncScratch`] is passed into every poll; machines
+/// may use it only transiently within a poll *or* through the per-rank
+/// slot convention (`scratch.partitions[rank]` belongs to machine
+/// `rank` for the whole sync).
+pub trait Protocol {
+    /// The rank this machine plays.
+    fn rank(&self) -> usize;
+
+    /// Advance until the next event. Never blocks; `Err` is a wire-level
+    /// failure (malformed frame), protocol violations panic.
+    fn poll(&mut self, scratch: &mut SyncScratch) -> Result<Event, WireError>;
+
+    /// Hand the machine a frame that arrived from `src`.
+    fn deliver(&mut self, src: usize, msg: Message) -> Result<(), WireError>;
+
+    /// The stage every rank reported done is now closed: all its frames
+    /// are delivered and its time is charged. The machine may advance
+    /// past the stage boundary on its next poll.
+    fn stage_closed(&mut self, name: &str) -> Result<(), WireError>;
+}
+
+/// Per-source frame buffer every machine owns: frames are pushed in
+/// arrival order (per-source FIFO, which every backend preserves) and
+/// consumed either per-source ([`take_from`](Inbox::take_from)) or in
+/// ascending-source order ([`drain_ascending`](Inbox::drain_ascending))
+/// — the deterministic merge order that makes outputs bit-identical
+/// across sim, channel, and socket backends.
+#[derive(Debug)]
+pub struct Inbox {
+    slots: Vec<VecDeque<Message>>,
+    len: usize,
+}
+
+impl Inbox {
+    pub fn new(n: usize) -> Inbox {
+        Inbox {
+            slots: (0..n).map(|_| VecDeque::new()).collect(),
+            len: 0,
+        }
+    }
+
+    /// Buffer a frame from `src`.
+    pub fn push(&mut self, src: usize, msg: Message) {
+        self.slots[src].push_back(msg);
+        self.len += 1;
+    }
+
+    /// Total buffered frames.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Buffered frames from one source.
+    pub fn from_src(&self, src: usize) -> usize {
+        self.slots[src].len()
+    }
+
+    /// Pop the oldest frame from `src`, if any.
+    pub fn take_from(&mut self, src: usize) -> Option<Message> {
+        let msg = self.slots[src].pop_front();
+        if msg.is_some() {
+            self.len -= 1;
+        }
+        msg
+    }
+
+    /// Drain every buffered frame in ascending-source order (FIFO within
+    /// a source).
+    pub fn drain_ascending(&mut self) -> Vec<(usize, Message)> {
+        let mut out = Vec::with_capacity(self.len);
+        for (src, q) in self.slots.iter_mut().enumerate() {
+            while let Some(msg) = q.pop_front() {
+                out.push((src, msg));
+            }
+        }
+        self.len = 0;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inbox_orders_by_source_then_fifo() {
+        let mut inbox = Inbox::new(3);
+        inbox.push(2, Message::Barrier { epoch: 20 });
+        inbox.push(0, Message::Barrier { epoch: 1 });
+        inbox.push(2, Message::Barrier { epoch: 21 });
+        assert_eq!(inbox.len(), 3);
+        assert_eq!(inbox.from_src(2), 2);
+        let drained = inbox.drain_ascending();
+        assert_eq!(
+            drained,
+            vec![
+                (0, Message::Barrier { epoch: 1 }),
+                (2, Message::Barrier { epoch: 20 }),
+                (2, Message::Barrier { epoch: 21 }),
+            ]
+        );
+        assert!(inbox.is_empty());
+    }
+
+    #[test]
+    fn inbox_take_from_is_per_source_fifo() {
+        let mut inbox = Inbox::new(2);
+        inbox.push(1, Message::Barrier { epoch: 5 });
+        inbox.push(1, Message::Barrier { epoch: 6 });
+        assert_eq!(inbox.take_from(0), None);
+        assert_eq!(inbox.take_from(1), Some(Message::Barrier { epoch: 5 }));
+        assert_eq!(inbox.take_from(1), Some(Message::Barrier { epoch: 6 }));
+        assert_eq!(inbox.len(), 0);
+    }
+}

@@ -1,14 +1,15 @@
 //! Panic-free protocol paths: a data plane that loses a peer mid-stage
-//! must surface [`WireError::Disconnected`] from `sync_transport`, not
-//! abort the process. The old scheme bodies `expect()`ed every
-//! send/recv, so a hung-up channel or closed socket took the whole
-//! trainer down; this suite drives every scheme through disconnects
-//! injected at every phase of its protocol.
+//! must surface [`WireError::Disconnected`] from `run`, not abort the
+//! process. The old scheme bodies `expect()`ed every send/recv, so a
+//! hung-up channel or closed socket took the whole trainer down; this
+//! suite drives every scheme through disconnects injected at every
+//! phase of its protocol.
 
 use zen::cluster::{CommReport, LinkKind, Network};
-use zen::schemes::{self, SyncScratch};
+use zen::schemes::{self, SyncScheme, SyncScratch};
 use zen::wire::{
-    ChannelTransport, FrameRef, Message, SimTransport, Transport, TransportKind, WireError,
+    ChannelTransport, FrameRef, Message, SimTransport, Transport, TransportDriver, TransportKind,
+    WireError,
 };
 use zen::workload::random_uniform_inputs;
 
@@ -96,7 +97,11 @@ fn every_scheme_surfaces_disconnect_at_every_protocol_phase() {
             // Count the healthy run's transport operations first.
             let mut probe = FailingTransport::new(net.clone(), None);
             scheme
-                .sync_transport(&inputs, &mut probe, &mut SyncScratch::new())
+                .run(
+                    &inputs,
+                    &mut TransportDriver::over(&mut probe),
+                    &mut SyncScratch::new(),
+                )
                 .unwrap_or_else(|e| panic!("{name} m={machines}: healthy run failed: {e}"));
             let total_ops = probe.ops;
             assert!(total_ops > 0, "{name} m={machines}: no transport traffic");
@@ -108,7 +113,11 @@ fn every_scheme_surfaces_disconnect_at_every_protocol_phase() {
             points.dedup();
             for k in points {
                 let mut tx = FailingTransport::new(net.clone(), Some(k));
-                let r = scheme.sync_transport(&inputs, &mut tx, &mut SyncScratch::new());
+                let r = scheme.run(
+                    &inputs,
+                    &mut TransportDriver::over(&mut tx),
+                    &mut SyncScratch::new(),
+                );
                 match r {
                     Err(WireError::Disconnected) => {}
                     Err(other) => panic!(
@@ -138,7 +147,11 @@ fn real_channel_hangup_yields_disconnected() {
         let mut ch = ChannelTransport::new(net.clone());
         // Endpoint 2 "crashes" before the sync begins.
         ch.disconnect_endpoint(2);
-        let r = scheme.sync_transport(&inputs, &mut ch, &mut SyncScratch::new());
+        let r = scheme.run(
+            &inputs,
+            &mut TransportDriver::over(&mut ch),
+            &mut SyncScratch::new(),
+        );
         match r {
             Err(WireError::Disconnected) => {}
             Err(other) => panic!("{name}: expected Disconnected, got {other}"),
@@ -158,7 +171,11 @@ fn healthy_channel_unaffected_by_disconnect_api() {
     let mut ch = ChannelTransport::new(net.clone());
     ch.disconnect_endpoint(99);
     let r = scheme
-        .sync_transport(&inputs, &mut ch, &mut SyncScratch::new())
+        .run(
+            &inputs,
+            &mut TransportDriver::over(&mut ch),
+            &mut SyncScratch::new(),
+        )
         .expect("healthy fabric");
     schemes::verify_outputs(&r, &inputs);
 }

@@ -1,0 +1,283 @@
+//! Driver-equivalence suite (PR 6 acceptance): the same sans-IO
+//! protocol machines must behave identically under every IO shell.
+//!
+//! 1. Every scheme × n ∈ {2, 3, 4, 5, 8} × {sim, channel, socket}:
+//!    per-stage sent/recv byte vectors equal across drivers, outputs
+//!    bit-identical, lossless schemes reference-exact.
+//! 2. Two-process smoke: `zen worker --listen` / `--connect` in two OS
+//!    processes complete the sync, print equal output digests, and
+//!    report the same total bytes as the in-process run.
+//! 3. Peer kill: a worker whose peer connects and immediately dies
+//!    exits with an error (`WireError::Disconnected` path), not a hang.
+
+use std::io::Read;
+use std::net::{TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use zen::cluster::{LinkKind, Network};
+use zen::schemes::{self, SyncScheme, SyncScratch};
+use zen::tensor::CooTensor;
+use zen::util::Pcg64;
+use zen::wire::{make_driver, TransportKind};
+use zen::workload::random_uniform_inputs as random_inputs;
+
+const ALL_SCHEMES: &[&str] = &[
+    "dense",
+    "agsparse",
+    "agsparse-ring",
+    "agsparse-hier",
+    "sparcml",
+    "sparseps",
+    "omnireduce",
+    "zen",
+    "zen-coo",
+    "strawman:8",
+];
+
+/// Whether loopback sockets work in this environment (sandboxes may
+/// forbid them); checked once per process.
+fn sockets_available() -> bool {
+    TcpListener::bind("127.0.0.1:0").is_ok()
+}
+
+fn equivalence_cell(name: &str, machines: usize, with_socket: bool) {
+    let dense_len = 4_000;
+    let inputs = random_inputs(0xd21 ^ machines as u64, machines, dense_len, 0.03);
+    let nnz = inputs[0].nnz().max(8);
+    let scheme = schemes::by_name(name, machines, 0x7ace, nnz).unwrap();
+    let net = Network::new(machines, LinkKind::Tcp25);
+    let ctx = format!("{name} m={machines}");
+
+    let mut kinds = vec![TransportKind::Sim, TransportKind::Channel];
+    if with_socket {
+        kinds.push(TransportKind::Socket);
+    }
+    let mut baseline: Option<(TransportKind, zen::schemes::SyncOutput)> = None;
+    for kind in kinds {
+        let mut drv = make_driver(kind, &net)
+            .unwrap_or_else(|e| panic!("{ctx}: {} driver setup: {e}", kind.name()));
+        let got = scheme
+            .run(&inputs, drv.as_mut(), &mut SyncScratch::new())
+            .unwrap_or_else(|e| panic!("{ctx}: {} sync failed: {e}", kind.name()));
+        match &baseline {
+            None => {
+                if !name.starts_with("strawman") {
+                    schemes::verify_outputs(&got, &inputs);
+                }
+                baseline = Some((kind, got));
+            }
+            Some((base_kind, base)) => {
+                let pair = format!("{ctx}: {} vs {}", base_kind.name(), kind.name());
+                assert_eq!(
+                    base.report.stages.len(),
+                    got.report.stages.len(),
+                    "{pair}: stage count"
+                );
+                for (s, c) in base.report.stages.iter().zip(got.report.stages.iter()) {
+                    assert_eq!(s.name, c.name, "{pair}: stage name");
+                    assert_eq!(s.sent, c.sent, "{pair}: stage '{}' sent", s.name);
+                    assert_eq!(s.recv, c.recv, "{pair}: stage '{}' recv", s.name);
+                }
+                assert_eq!(base.outputs, got.outputs, "{pair}: outputs diverge");
+            }
+        }
+    }
+}
+
+#[test]
+fn every_scheme_equivalent_across_drivers() {
+    let with_socket = sockets_available();
+    if !with_socket {
+        eprintln!("loopback sockets unavailable; covering sim vs channel only");
+    }
+    for &machines in &[2usize, 3, 4, 5, 8] {
+        for name in ALL_SCHEMES {
+            equivalence_cell(name, machines, with_socket);
+        }
+    }
+}
+
+// ---- two-process worker smoke --------------------------------------
+
+/// Same derivation as `zen worker` (main.rs `worker_inputs`): both test
+/// and processes must agree on the gradients byte-for-byte.
+fn worker_inputs(seed: u64, n: usize, dense_len: usize, shared: usize, private: usize) -> Vec<CooTensor> {
+    let mut rng = Pcg64::seeded(seed);
+    let hot: Vec<usize> = rng.sample_distinct(dense_len, shared);
+    (0..n)
+        .map(|w| {
+            let mut idx: Vec<u32> = hot.iter().map(|&i| i as u32).collect();
+            let mut priv_rng = Pcg64::new(seed ^ w as u64, 55);
+            for _ in 0..private {
+                idx.push(priv_rng.below(dense_len as u64) as u32);
+            }
+            idx.sort_unstable();
+            idx.dedup();
+            let vals: Vec<f32> = idx
+                .iter()
+                .map(|_| priv_rng.next_f32() * 2.0 - 1.0)
+                .map(|v| if v == 0.0 { 0.5 } else { v })
+                .collect();
+            CooTensor::from_sorted(dense_len, idx, vals)
+        })
+        .collect()
+}
+
+/// FNV-1a mirror of the binary's output fingerprint.
+fn fnv_digest(t: &CooTensor) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |h: &mut u64, bytes: &[u8]| {
+        for &b in bytes {
+            *h ^= b as u64;
+            *h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    eat(&mut h, &(t.dense_len as u64).to_le_bytes());
+    for &i in &t.indices {
+        eat(&mut h, &i.to_le_bytes());
+    }
+    for &v in &t.values {
+        eat(&mut h, &v.to_bits().to_le_bytes());
+    }
+    h
+}
+
+/// Reserve a loopback port: bind to 0, read the assignment, release.
+fn free_port() -> u16 {
+    TcpListener::bind("127.0.0.1:0")
+        .expect("bind ephemeral")
+        .local_addr()
+        .expect("local addr")
+        .port()
+}
+
+fn spawn_worker(role: &str, addr: &str, scheme: &str, seed: u64) -> Child {
+    Command::new(env!("CARGO_BIN_EXE_zen"))
+        .args([
+            "worker",
+            role,
+            addr,
+            "--scheme",
+            scheme,
+            "--dense-len",
+            "8000",
+            "--shared",
+            "400",
+            "--private",
+            "150",
+            "--seed",
+            &seed.to_string(),
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn zen worker")
+}
+
+fn wait_with_deadline(mut child: Child, what: &str) -> (String, String, bool) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        match child.try_wait().expect("try_wait") {
+            Some(status) => {
+                let mut out = String::new();
+                let mut err = String::new();
+                child.stdout.take().unwrap().read_to_string(&mut out).ok();
+                child.stderr.take().unwrap().read_to_string(&mut err).ok();
+                return (out, err, status.success());
+            }
+            None if Instant::now() > deadline => {
+                child.kill().ok();
+                panic!("{what}: worker did not exit within 30s");
+            }
+            None => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+}
+
+/// Parse `bytes=N digest=H` off the worker's report line.
+fn parse_report(stdout: &str, what: &str) -> (u64, u64) {
+    let line = stdout
+        .lines()
+        .find(|l| l.contains("digest="))
+        .unwrap_or_else(|| panic!("{what}: no report line in {stdout:?}"));
+    let field = |key: &str| {
+        line.split_whitespace()
+            .find_map(|tok| tok.strip_prefix(key))
+            .unwrap_or_else(|| panic!("{what}: missing {key} in {line:?}"))
+            .to_string()
+    };
+    let bytes: u64 = field("bytes=").parse().expect("bytes field");
+    let digest = u64::from_str_radix(&field("digest="), 16).expect("digest field");
+    (bytes, digest)
+}
+
+#[test]
+fn two_process_worker_sync_matches_in_process() {
+    if !sockets_available() {
+        eprintln!("loopback sockets unavailable; skipping worker smoke");
+        return;
+    }
+    let seed = 0x2e2u64;
+    for scheme_name in ["zen", "dense"] {
+        let addr = format!("127.0.0.1:{}", free_port());
+        let listener = spawn_worker("--listen", &addr, scheme_name, seed);
+        let connector = spawn_worker("--connect", &addr, scheme_name, seed);
+        let (out0, err0, ok0) = wait_with_deadline(listener, "listener");
+        let (out1, err1, ok1) = wait_with_deadline(connector, "connector");
+        assert!(ok0, "{scheme_name}: listener failed: {err0}\n{out0}");
+        assert!(ok1, "{scheme_name}: connector failed: {err1}\n{out1}");
+        let (bytes0, digest0) = parse_report(&out0, "listener");
+        let (bytes1, digest1) = parse_report(&out1, "connector");
+        assert_eq!(digest0, digest1, "{scheme_name}: aggregates diverge across processes");
+
+        // In-process ground truth: same inputs, same scheme, virtual
+        // time. Both workers observe the full 2-rank byte matrix, so
+        // all three totals must agree.
+        let inputs = worker_inputs(seed, 2, 8_000, 400, 150);
+        let nnz = 400 + 150;
+        let scheme = schemes::by_name(scheme_name, 2, seed ^ 0x5eed, nnz).unwrap();
+        let net = Network::new(2, LinkKind::Tcp25);
+        let reference = scheme.run_sim(&inputs, &net, &mut SyncScratch::new());
+        assert_eq!(bytes0, reference.report.total_bytes(), "{scheme_name}: listener bytes");
+        assert_eq!(bytes1, reference.report.total_bytes(), "{scheme_name}: connector bytes");
+        assert_eq!(
+            digest0,
+            fnv_digest(&reference.outputs[0]),
+            "{scheme_name}: worker aggregate differs from in-process"
+        );
+    }
+}
+
+#[test]
+fn worker_surfaces_peer_death_as_error_not_hang() {
+    if !sockets_available() {
+        eprintln!("loopback sockets unavailable; skipping peer-kill test");
+        return;
+    }
+    let addr = format!("127.0.0.1:{}", free_port());
+    let listener = spawn_worker("--listen", &addr, "zen", 7);
+    // A "peer" that connects and immediately dies mid-handshake.
+    let deadline = Instant::now() + Duration::from_secs(15);
+    loop {
+        match TcpStream::connect(&addr) {
+            Ok(s) => {
+                drop(s);
+                break;
+            }
+            Err(_) if Instant::now() < deadline => {
+                std::thread::sleep(Duration::from_millis(20))
+            }
+            Err(e) => panic!("could not reach listening worker: {e}"),
+        }
+    }
+    let (out, err, ok) = wait_with_deadline(listener, "peer-kill");
+    assert!(
+        !ok,
+        "worker must exit with an error after its peer dies, got: {out}"
+    );
+    assert!(
+        err.to_lowercase().contains("disconnect"),
+        "stderr should surface the disconnect: {err:?}"
+    );
+}

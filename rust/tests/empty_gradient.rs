@@ -8,14 +8,14 @@
 //!   reference sum (all-zero when every input is empty),
 //! - byte accounting is consistent: sim and channel backends report
 //!   identical per-stage sent/recv vectors, and outputs are
-//!   bit-identical across backends (TCP smoke-checked where sockets
-//!   are permitted).
+//!   bit-identical across backends (socket-mesh smoke-checked where
+//!   sockets are permitted).
 
 use zen::cluster::{LinkKind, Network};
 use zen::schemes::{self, SyncScheme, SyncScratch};
 use zen::tensor::CooTensor;
 use zen::util::Pcg64;
-use zen::wire::{ChannelTransport, TcpTransport};
+use zen::wire::{ChannelTransport, SocketDriver, TransportDriver};
 
 const DENSE_LEN: usize = 4_096;
 
@@ -67,10 +67,11 @@ fn check_cell(name: &str, inputs: &[CooTensor], lossless_expected: bool) {
     let net = Network::new(n, LinkKind::Tcp25);
     let ctx = format!("{name} m={n}");
 
-    let sim = scheme.sync_with(inputs, &net, &mut SyncScratch::new());
+    let sim = scheme.run_sim(inputs, &net, &mut SyncScratch::new());
     let mut ch = ChannelTransport::new(net.clone());
+    let mut drv = TransportDriver::over(&mut ch);
     let chan = scheme
-        .sync_transport(inputs, &mut ch, &mut SyncScratch::new())
+        .run(inputs, &mut drv, &mut SyncScratch::new())
         .unwrap_or_else(|e| panic!("{ctx}: channel sync failed: {e}"));
 
     // Byte consistency: the two data planes must observe the same
@@ -118,7 +119,7 @@ fn all_empty_aggregate_is_exactly_zero() {
         let inputs = all_empty(3);
         let scheme = schemes::by_name(name, 3, 0xe2, 128).unwrap();
         let net = Network::new(3, LinkKind::Tcp25);
-        let r = scheme.sync_with(&inputs, &net, &mut SyncScratch::new());
+        let r = scheme.run_sim(&inputs, &net, &mut SyncScratch::new());
         for (e, out) in r.outputs.iter().enumerate() {
             assert_eq!(out.dense_len, DENSE_LEN, "{name}: endpoint {e} range");
             assert!(
@@ -144,7 +145,7 @@ fn one_empty_worker_every_scheme() {
 }
 
 #[test]
-fn empty_inputs_over_tcp_smoke() {
+fn empty_inputs_over_socket_smoke() {
     // Real loopback sockets moving zero-payload frames: header-only
     // traffic must flow and account identically to the simulator.
     let n = 3;
@@ -152,24 +153,24 @@ fn empty_inputs_over_tcp_smoke() {
     let net = Network::new(n, LinkKind::Tcp25);
     for name in ["zen", "sparseps", "dense"] {
         let scheme = schemes::by_name(name, n, 0xe3, 128).unwrap();
-        let sim = scheme.sync_with(&inputs, &net, &mut SyncScratch::new());
-        let mut tcp = match TcpTransport::connect(net.clone()) {
+        let sim = scheme.run_sim(&inputs, &net, &mut SyncScratch::new());
+        let mut sock = match SocketDriver::mesh(net.clone()) {
             Ok(t) => t,
             Err(e) => {
                 // Sandboxes may forbid loopback sockets; channel parity
                 // above already covers the encode/decode path.
-                eprintln!("skipping tcp empty-gradient smoke ({name}): {e}");
+                eprintln!("skipping socket empty-gradient smoke ({name}): {e}");
                 return;
             }
         };
         let real = scheme
-            .sync_transport(&inputs, &mut tcp, &mut SyncScratch::new())
-            .unwrap_or_else(|e| panic!("{name}: tcp sync failed: {e}"));
+            .run(&inputs, &mut sock, &mut SyncScratch::new())
+            .unwrap_or_else(|e| panic!("{name}: socket sync failed: {e}"));
         for (s, c) in sim.report.stages.iter().zip(real.report.stages.iter()) {
-            assert_eq!(s.sent, c.sent, "{name}: tcp stage '{}' sent", s.name);
-            assert_eq!(s.recv, c.recv, "{name}: tcp stage '{}' recv", s.name);
+            assert_eq!(s.sent, c.sent, "{name}: socket stage '{}' sent", s.name);
+            assert_eq!(s.recv, c.recv, "{name}: socket stage '{}' recv", s.name);
         }
-        assert_eq!(sim.outputs, real.outputs, "{name}: tcp outputs diverge");
+        assert_eq!(sim.outputs, real.outputs, "{name}: socket outputs diverge");
         schemes::verify_outputs(&real, &inputs);
     }
 }

@@ -20,7 +20,7 @@ fn measured_time(name: &str, inputs: &[zen::tensor::CooTensor], net: &Network) -
     let n = inputs.len();
     let nnz = inputs.iter().map(|t| t.nnz()).max().unwrap_or(1).max(1);
     let scheme = schemes::by_name(name, n, 0x5eed, nnz).unwrap();
-    let r = scheme.sync_with(inputs, net, &mut SyncScratch::new());
+    let r = scheme.run_sim(inputs, net, &mut SyncScratch::new());
     r.report.comm_time()
 }
 
@@ -81,7 +81,7 @@ fn non_power_of_two_machines_plan_without_panic() {
     let net = Network::new(machines, LinkKind::Tcp25);
     let r = planned
         .scheme
-        .sync_with(&inputs, &net, &mut SyncScratch::new());
+        .run_sim(&inputs, &net, &mut SyncScratch::new());
     schemes::verify_outputs(&r, &inputs);
 }
 

@@ -5,7 +5,7 @@
 
 use zen::cluster::{LinkKind, Network};
 use zen::hashing::{HashBitmapCodec, HierarchicalHasher};
-use zen::schemes::{self, SyncScheme};
+use zen::schemes::{self, SyncScheme, SyncScratch};
 use zen::tensor::CooTensor;
 use zen::util::propcheck::{check_seeded, prop_assert};
 
@@ -34,7 +34,7 @@ fn prop_any_scheme_any_workload_aggregates_exactly() {
         let which = g.usize_in(0, 5);
         let name = ["dense", "agsparse", "sparcml", "sparseps", "omnireduce", "zen"][which];
         let scheme = schemes::by_name(name, n, g.u64(), nnz).unwrap();
-        let r = scheme.sync(&inputs, &net);
+        let r = scheme.run_sim(&inputs, &net, &mut SyncScratch::new());
         // exact dense-sum equivalence within float tolerance
         let reference = schemes::reference_sum(&inputs);
         for out in &r.outputs {

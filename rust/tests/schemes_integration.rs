@@ -3,7 +3,7 @@
 //! hash bitmaps end-to-end.
 
 use zen::cluster::{LinkKind, Network};
-use zen::schemes::{self, verify_outputs, SyncScheme};
+use zen::schemes::{self, verify_outputs, SyncScheme, SyncScratch};
 use zen::tensor::metrics;
 use zen::workload::{profiles, GradientGen};
 
@@ -18,7 +18,7 @@ fn every_scheme_correct_on_every_model() {
         let net = Network::new(6, LinkKind::Tcp25);
         let nnz = inputs[0].nnz();
         for scheme in schemes::all_schemes(6, 3, nnz) {
-            let r = scheme.sync(&inputs, &net);
+            let r = scheme.run_sim(&inputs, &net, &mut SyncScratch::new());
             verify_outputs(&r, &inputs);
         }
     }
@@ -31,7 +31,7 @@ fn every_scheme_correct_across_iterations() {
         let inputs = workload("NMT", 4, iter);
         let net = Network::new(4, LinkKind::Rdma100);
         for scheme in schemes::all_schemes(4, iter, inputs[0].nnz()) {
-            let r = scheme.sync(&inputs, &net);
+            let r = scheme.run_sim(&inputs, &net, &mut SyncScratch::new());
             verify_outputs(&r, &inputs);
         }
     }
@@ -46,7 +46,7 @@ fn zen_beats_baselines_on_comm_time() {
     let nnz = inputs[0].nnz();
     let time = |name: &str| {
         let s = schemes::by_name(name, 16, 5, nnz).unwrap();
-        s.sync(&inputs, &net).report.comm_time()
+        s.run_sim(&inputs, &net, &mut SyncScratch::new()).report.comm_time()
     };
     let zen_t = time("zen");
     for other in ["sparcml", "omnireduce", "sparseps", "agsparse"] {
@@ -62,7 +62,7 @@ fn zen_imbalance_bounded_by_theorem2() {
     let net = Network::new(8, LinkKind::Tcp25);
     let nnz = inputs[0].nnz();
     let zen = schemes::by_name("zen", 8, 7, nnz).unwrap();
-    let r = zen.sync(&inputs, &net);
+    let r = zen.run_sim(&inputs, &net, &mut SyncScratch::new());
     let push = r.report.stages[0].recv_imbalance();
     let bound = 1.0 + 4.0 * ((8.0 * (8f64).ln()) / nnz as f64).sqrt();
     assert!(push <= bound, "push imbalance {push} > theorem band {bound}");
@@ -74,7 +74,7 @@ fn sparse_ps_imbalance_tracks_skewness() {
     let inputs = workload("LSTM", 8, 0);
     let net = Network::new(8, LinkKind::Tcp25);
     let ps = schemes::by_name("sparseps", 8, 0, 0).unwrap();
-    let r = ps.sync(&inputs, &net);
+    let r = ps.run_sim(&inputs, &net, &mut SyncScratch::new());
     let push_imb = r.report.stages[0].recv_imbalance();
     let skew: f64 = inputs
         .iter()
@@ -92,7 +92,7 @@ fn dense_traffic_constant_zen_traffic_scales_with_density() {
     let sparse_in = workload("BERT", 4, 0);
     let net = Network::new(4, LinkKind::Tcp25);
     let dense = schemes::by_name("dense", 4, 0, 0).unwrap();
-    let d1 = dense.sync(&sparse_in, &net).report.total_bytes();
+    let d1 = dense.run_sim(&sparse_in, &net, &mut SyncScratch::new()).report.total_bytes();
     // denser inputs → dense unchanged, zen grows
     let other = workload("BERT", 4, 1);
     let denser_in: Vec<zen::tensor::CooTensor> = sparse_in
@@ -100,11 +100,11 @@ fn dense_traffic_constant_zen_traffic_scales_with_density() {
         .zip(other.iter())
         .map(|(a, b)| a.merge(b))
         .collect();
-    let d2 = dense.sync(&denser_in, &net).report.total_bytes();
+    let d2 = dense.run_sim(&denser_in, &net, &mut SyncScratch::new()).report.total_bytes();
     assert_eq!(d1, d2);
     let zen = schemes::by_name("zen", 4, 3, sparse_in[0].nnz()).unwrap();
-    let z1 = zen.sync(&sparse_in, &net).report.total_bytes();
-    let z2 = zen.sync(&denser_in, &net).report.total_bytes();
+    let z1 = zen.run_sim(&sparse_in, &net, &mut SyncScratch::new()).report.total_bytes();
+    let z2 = zen.run_sim(&denser_in, &net, &mut SyncScratch::new()).report.total_bytes();
     assert!(z2 as f64 > z1 as f64 * 1.4, "zen {z1} -> {z2}");
 }
 
@@ -116,7 +116,7 @@ fn strawman_loss_decreases_with_memory() {
     let mut last_loss = f64::INFINITY;
     for mult in [1.0, 4.0, 16.0] {
         let s = zen::schemes::StrawmanScheme::new(9, 4, nnz, mult);
-        let _ = s.sync(&inputs, &net);
+        let _ = s.run_sim(&inputs, &net, &mut SyncScratch::new());
         let loss = s.last_loss_rate();
         assert!(
             loss <= last_loss + 1e-9,
@@ -132,7 +132,7 @@ fn single_machine_all_schemes_trivial() {
     let inputs = workload("NMT", 1, 0);
     let net = Network::new(1, LinkKind::Tcp25);
     for scheme in schemes::all_schemes(1, 0, inputs[0].nnz()) {
-        let r = scheme.sync(&inputs, &net);
+        let r = scheme.run_sim(&inputs, &net, &mut SyncScratch::new());
         verify_outputs(&r, &inputs);
     }
 }

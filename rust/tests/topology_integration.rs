@@ -71,12 +71,12 @@ fn auto_flips_to_hierarchical_scheme_on_two_level_topology() {
     let net = Network::with_topology(two_level);
     let t_topo = topo_choice
         .scheme
-        .sync_with(&inputs, &net, &mut SyncScratch::new())
+        .run_sim(&inputs, &net, &mut SyncScratch::new())
         .report
         .comm_time();
     let t_flat_pick = flat_choice
         .scheme
-        .sync_with(&inputs, &net, &mut SyncScratch::new())
+        .run_sim(&inputs, &net, &mut SyncScratch::new())
         .report
         .comm_time();
     assert!(
@@ -102,7 +102,7 @@ fn plan_reports_predicted_vs_measured_per_link_class() {
     let net = Network::with_topology(two_level);
     let report = planned
         .scheme
-        .sync_with(&inputs, &net, &mut SyncScratch::new())
+        .run_sim(&inputs, &net, &mut SyncScratch::new())
         .report;
     let measured = report.time_by_class();
     assert!(measured[LinkClass::Inter.idx()] > 0.0, "inter measured");
@@ -142,7 +142,7 @@ fn all_schemes_complete_on_non_pow2_machine_counts() {
             "zen-coo",
         ] {
             let scheme = schemes::by_name(name, n, 0xacc, nnz).unwrap();
-            let r = scheme.sync_with(&inputs, &net, &mut SyncScratch::new());
+            let r = scheme.run_sim(&inputs, &net, &mut SyncScratch::new());
             schemes::verify_outputs(&r, &inputs);
         }
     }

@@ -9,12 +9,12 @@
 //! 3. outputs equal to the dense reference (lossless schemes) and
 //!    bit-identical across backends (all schemes).
 //!
-//! A TCP smoke cell additionally runs two schemes over real loopback
-//! sockets.
+//! A socket smoke cell additionally runs two schemes over the real
+//! loopback socket mesh ([`SocketDriver`]).
 
 use zen::cluster::{LinkKind, Network, Topology, LINK_CLASSES};
 use zen::schemes::{self, SyncScheme, SyncScratch};
-use zen::wire::{ChannelTransport, TcpTransport};
+use zen::wire::{ChannelTransport, SocketDriver, TransportDriver};
 use zen::workload::random_uniform_inputs as random_inputs;
 
 /// The seven schemes of the paper's taxonomy, by CLI name, plus the
@@ -44,11 +44,14 @@ fn assert_parity_cell(name: &str, machines: usize, density: f64) {
     let net = Network::new(machines, LinkKind::Tcp25);
     let ctx = format!("{name} m={machines} d={density}");
 
-    let sim = scheme.sync_with(&inputs, &net, &mut SyncScratch::new());
+    let sim = scheme.run_sim(&inputs, &net, &mut SyncScratch::new());
     let mut ch = ChannelTransport::new(net.clone());
-    let chan = scheme
-        .sync_transport(&inputs, &mut ch, &mut SyncScratch::new())
-        .unwrap_or_else(|e| panic!("{ctx}: channel sync failed: {e}"));
+    let chan = {
+        let mut drv = TransportDriver::over(&mut ch);
+        scheme
+            .run(&inputs, &mut drv, &mut SyncScratch::new())
+            .unwrap_or_else(|e| panic!("{ctx}: channel sync failed: {e}"))
+    };
 
     // 1. per-stage byte parity
     assert_eq!(
@@ -129,11 +132,14 @@ fn topology_parity_per_link_class() {
     let inputs = random_inputs(0x707, machines, 6_000, 0.03);
     for name in ["zen", "sparcml", "dense", "agsparse-hier"] {
         let scheme = schemes::by_name(name, machines, 0xace5, inputs[0].nnz()).unwrap();
-        let sim = scheme.sync_with(&inputs, &net, &mut SyncScratch::new());
+        let sim = scheme.run_sim(&inputs, &net, &mut SyncScratch::new());
         let mut ch = ChannelTransport::new(net.clone());
-        let chan = scheme
-            .sync_transport(&inputs, &mut ch, &mut SyncScratch::new())
-            .unwrap_or_else(|e| panic!("{name}: channel sync failed: {e}"));
+        let chan = {
+            let mut drv = TransportDriver::over(&mut ch);
+            scheme
+                .run(&inputs, &mut drv, &mut SyncScratch::new())
+                .unwrap_or_else(|e| panic!("{name}: channel sync failed: {e}"))
+        };
         assert_eq!(sim.report.stages.len(), chan.report.stages.len(), "{name}");
         let mut intra_seen = false;
         for (s, c) in sim.report.stages.iter().zip(chan.report.stages.iter()) {
@@ -164,35 +170,36 @@ fn topology_parity_per_link_class() {
 }
 
 #[test]
-fn tcp_loopback_matches_sim_smoke() {
-    // Real sockets: small payloads (one orchestrating thread must never
-    // outgrow the kernel socket buffer), two representative schemes.
+fn socket_loopback_matches_sim_smoke() {
+    // Real sockets: the readiness-polled loopback mesh, two
+    // representative schemes. Per-peer queues mean payload size is no
+    // longer capped by the kernel socket buffer.
     let machines = 3;
     let dense_len = 2_048;
     let inputs = random_inputs(0x7c9, machines, dense_len, 0.05);
     let net = Network::new(machines, LinkKind::Tcp25);
     for name in ["zen", "dense"] {
         let scheme = schemes::by_name(name, machines, 0xace5, inputs[0].nnz()).unwrap();
-        let sim = scheme.sync_with(&inputs, &net, &mut SyncScratch::new());
-        let mut tcp = match TcpTransport::connect(net.clone()) {
+        let sim = scheme.run_sim(&inputs, &net, &mut SyncScratch::new());
+        let mut sock = match SocketDriver::mesh(net.clone()) {
             Ok(t) => t,
             Err(e) => {
                 // Sandboxes may forbid loopback sockets; the channel
                 // parity above already covers the protocol path.
-                eprintln!("skipping tcp parity ({name}): {e}");
+                eprintln!("skipping socket parity ({name}): {e}");
                 return;
             }
         };
         let real = scheme
-            .sync_transport(&inputs, &mut tcp, &mut SyncScratch::new())
-            .unwrap_or_else(|e| panic!("{name}: tcp sync failed: {e}"));
+            .run(&inputs, &mut sock, &mut SyncScratch::new())
+            .unwrap_or_else(|e| panic!("{name}: socket sync failed: {e}"));
         assert_eq!(sim.report.stages.len(), real.report.stages.len(), "{name}");
         for (s, c) in sim.report.stages.iter().zip(real.report.stages.iter()) {
-            assert_eq!(s.sent, c.sent, "{name}: tcp stage '{}' sent", s.name);
-            assert_eq!(s.recv, c.recv, "{name}: tcp stage '{}' recv", s.name);
+            assert_eq!(s.sent, c.sent, "{name}: socket stage '{}' sent", s.name);
+            assert_eq!(s.recv, c.recv, "{name}: socket stage '{}' recv", s.name);
         }
         for (a, b) in sim.outputs.iter().zip(real.outputs.iter()) {
-            assert_eq!(a, b, "{name}: tcp outputs diverge");
+            assert_eq!(a, b, "{name}: socket outputs diverge");
         }
         schemes::verify_outputs(&real, &inputs);
     }
@@ -207,12 +214,13 @@ fn transport_reuse_across_sequential_syncs() {
     let inputs = random_inputs(0xbeefcafe, machines, 4_000, 0.02);
     let scheme = schemes::by_name("zen", machines, 1, inputs[0].nnz()).unwrap();
     let mut ch = ChannelTransport::new(net.clone());
+    let mut drv = TransportDriver::over(&mut ch);
     let mut scratch = SyncScratch::new();
     let first = scheme
-        .sync_transport(&inputs, &mut ch, &mut scratch)
+        .run(&inputs, &mut drv, &mut scratch)
         .expect("first sync");
     let second = scheme
-        .sync_transport(&inputs, &mut ch, &mut scratch)
+        .run(&inputs, &mut drv, &mut scratch)
         .expect("second sync");
     assert_eq!(
         first.report.total_bytes(),

@@ -6,7 +6,7 @@
 
 use zen::cluster::{LinkKind, Network};
 use zen::hashing::HierarchicalHasher;
-use zen::schemes::{self, SyncScheme};
+use zen::schemes::{self, SyncScheme, SyncScratch};
 use zen::tensor::CooTensor;
 use zen::wire::{Encode, Fabric, Message, WireError};
 use zen::workload::{profiles, GradientGen};
@@ -23,7 +23,7 @@ fn fabric_aggregation_matches_analytic_scheme() {
     // orchestrated scheme (sim transport)
     let zen_scheme = schemes::by_name("zen", n, 0x1234, nnz).unwrap();
     let net = Network::new(n, LinkKind::Tcp25);
-    let analytic = zen_scheme.sync(&ins, &net);
+    let analytic = zen_scheme.run_sim(&ins, &net, &mut SyncScratch::new());
     // real fabric, one thread per endpoint, same hash family seed
     let hasher = HierarchicalHasher::with_defaults(0x1234, n, nnz);
     let (_fabric, eps) = Fabric::new(n);
@@ -51,7 +51,7 @@ fn fabric_bytes_match_scheme_accounting_exactly() {
     let mut zen_scheme = schemes::Zen::new(seed, n, nnz, schemes::ZenIndexFormat::HashBitmap);
     zen_scheme.charge_compute = false;
     let net = Network::new(n, LinkKind::Tcp25);
-    let scheme_bytes = zen_scheme.sync(&ins, &net).report.total_bytes();
+    let scheme_bytes = zen_scheme.run_sim(&ins, &net, &mut SyncScratch::new()).report.total_bytes();
 
     let hasher = HierarchicalHasher::with_defaults(seed, n, nnz);
     let (fabric, eps) = Fabric::new(n);
