@@ -1,0 +1,208 @@
+//! Simulation-scale trajectory (PR 7): how far one thread goes.
+//!
+//! Two measurements, emitted as machine-readable `BENCH_PR7.json`:
+//!
+//! 1. **Head-to-head** at n ∈ {8, 64}: the same scheme over the
+//!    discrete-event driver (one thread, one heap) versus the
+//!    thread-per-rank driver (n OS threads + a coordinator). The ratio
+//!    is the cost of simulating concurrency with real concurrency —
+//!    the event driver's reason to exist.
+//! 2. **Scale sweep**: every scheme at large n (1024 ranks; 256 under
+//!    `--tiny`) on a two-level topology, one thread, totals-only
+//!    accounting — reporting wall clock, events/sec, and the event
+//!    pool's high-water mark (peak concurrent in-flight frames, the
+//!    run's peak-memory proxy).
+//!
+//!   cargo run --release --example bench_simscale -- [--tiny] [--iters K] [--out PATH]
+//!
+//! - `--tiny`: CI smoke configuration (small tensors, 256-rank sweep).
+//! - `--iters K`: timed iterations per head-to-head cell (median).
+//! - `--out PATH`: output JSON path (default `BENCH_PR7.json`).
+
+use zen::cluster::{LinkKind, Network, Topology};
+use zen::schemes::{self, SyncScheme, SyncScratch};
+use zen::util::{Stopwatch, Summary};
+use zen::wire::{EventDriver, ThreadedDriver};
+use zen::workload::random_uniform_inputs as random_inputs;
+
+struct Config {
+    tiny: bool,
+    iters: usize,
+    warmup: usize,
+    out: String,
+}
+
+fn parse_args() -> Config {
+    let mut cfg = Config {
+        tiny: false,
+        iters: 5,
+        warmup: 1,
+        out: "BENCH_PR7.json".to_string(),
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--tiny" => {
+                cfg.tiny = true;
+                cfg.iters = 3;
+            }
+            "--iters" => {
+                cfg.iters = args
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .expect("--iters needs a positive integer");
+            }
+            "--out" => {
+                cfg.out = args.next().expect("--out needs a path");
+            }
+            other => panic!("unknown argument {other}"),
+        }
+    }
+    cfg
+}
+
+fn median_ns<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let sw = Stopwatch::start();
+        f();
+        s.add(sw.elapsed() * 1e9);
+    }
+    s.median()
+}
+
+fn json_f(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.1}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn main() {
+    let cfg = parse_args();
+    let dense_len = if cfg.tiny { 1 << 12 } else { 1 << 14 };
+    let density = 0.02;
+
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"pr\": 7,\n");
+    json.push_str(&format!(
+        "  \"config\": {{\"tiny\": {}, \"iters\": {}, \"warmup\": {}, \
+         \"dense_len\": {dense_len}, \"density\": {density}}},\n",
+        cfg.tiny, cfg.iters, cfg.warmup
+    ));
+
+    // -- 1. event driver vs thread-per-rank, same scheme same inputs --
+    json.push_str("  \"head_to_head\": [\n");
+    let mut rows: Vec<String> = Vec::new();
+    for machines in [8usize, 64] {
+        let inputs = random_inputs(0x51ca ^ machines as u64, machines, dense_len, density);
+        let nnz = inputs[0].nnz().max(8);
+        let scheme = schemes::by_name("zen", machines, 0x5eed, nnz).unwrap();
+        let net = Network::new(machines, LinkKind::Tcp25);
+
+        let mut ev = EventDriver::new(net.clone());
+        let mut scratch = SyncScratch::new();
+        let event_ns = median_ns(cfg.warmup, cfg.iters, || {
+            let r = scheme
+                .run(&inputs, &mut ev, &mut scratch)
+                .expect("event sync");
+            std::hint::black_box(r.outputs.len());
+        });
+
+        let mut th = ThreadedDriver::new(net);
+        let threaded_ns = median_ns(cfg.warmup, cfg.iters, || {
+            let r = scheme
+                .run(&inputs, &mut th, &mut scratch)
+                .expect("threaded sync");
+            std::hint::black_box(r.outputs.len());
+        });
+
+        let speedup = threaded_ns / event_ns;
+        println!(
+            "n={machines:<4} event {:>10.1} us/iter   thread-per-rank {:>10.1} us/iter   ({speedup:.1}x)",
+            event_ns / 1e3,
+            threaded_ns / 1e3
+        );
+        rows.push(format!(
+            "    {{\"machines\": {machines}, \"event_ns_median\": {}, \
+             \"threaded_ns_median\": {}, \"event_speedup\": {}}}",
+            json_f(event_ns),
+            json_f(threaded_ns),
+            if speedup.is_finite() {
+                format!("{speedup:.2}")
+            } else {
+                "null".to_string()
+            }
+        ));
+    }
+    json.push_str(&rows.join(",\n"));
+    json.push_str("\n  ],\n");
+
+    // -- 2. all schemes at large n, one thread, totals-only -----------
+    let ranks = if cfg.tiny { 256usize } else { 1024 };
+    let (nodes, per_node) = (ranks / 32, 32usize);
+    let sweep_dense = 1 << 12;
+    let sweep_inputs = random_inputs(0x1024, ranks, sweep_dense, 0.005);
+    let sweep_nnz = sweep_inputs[0].nnz().max(8);
+    let topo = Topology::two_level(
+        nodes,
+        per_node,
+        LinkKind::Custom(250_000_000_000, 2_000),
+        LinkKind::Custom(25_000_000_000, 50_000),
+    );
+    let net = Network::with_topology(topo);
+    let sweep_schemes = [
+        "zen",
+        "zen-coo",
+        "sparseps",
+        "omnireduce",
+        "sparcml",
+        "agsparse",
+        "agsparse-ring",
+        "agsparse-hier",
+        "dense",
+    ];
+
+    json.push_str("  \"sweep\": [\n");
+    let mut rows: Vec<String> = Vec::new();
+    for name in sweep_schemes {
+        let scheme = schemes::by_name(name, ranks, 0x5eed, sweep_nnz).unwrap();
+        let mut drv = EventDriver::new(net.clone()).totals_only();
+        let mut scratch = SyncScratch::new();
+        let sw = Stopwatch::start();
+        let r = scheme
+            .run(&sweep_inputs, &mut drv, &mut scratch)
+            .expect("sweep sync");
+        let wall = sw.elapsed();
+        std::hint::black_box(r.outputs.len());
+        let events = drv.events_processed();
+        let eps = events as f64 / wall.max(1e-12);
+        println!(
+            "{name:<14} n={ranks}  {:>8.1} ms wall  {:>12} events  {:>12.0} ev/s  pool {:>6}  vt {:.3e}s",
+            wall * 1e3,
+            events,
+            eps,
+            drv.pool_high_water(),
+            drv.virtual_time()
+        );
+        rows.push(format!(
+            "    {{\"scheme\": \"{}\", \"machines\": {ranks}, \"wall_ms\": {}, \
+             \"events\": {events}, \"events_per_sec\": {}, \
+             \"pool_high_water\": {}, \"virtual_time_s\": {}}}",
+            scheme.name(),
+            json_f(wall * 1e3),
+            json_f(eps),
+            drv.pool_high_water(),
+            json_f(drv.virtual_time())
+        ));
+    }
+    json.push_str(&rows.join(",\n"));
+    json.push_str("\n  ]\n}\n");
+    std::fs::write(&cfg.out, &json).expect("write bench json");
+    println!("wrote {}", cfg.out);
+}

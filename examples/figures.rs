@@ -57,7 +57,7 @@ fn main() -> anyhow::Result<()> {
     let want = |name: &str| args.iter().any(|a| a == name || a == "all");
     if args.is_empty() {
         eprintln!(
-            "usage: figures -- all | table1 table2 fig1 fig2 fig7 fig7m fig8 \
+            "usage: figures -- all | table1 table2 fig1 fig2 fig7 fig7m fig7e fig8 \
              fig11 fig12 fig13 fig14 fig15 fig16 fig17 fig18 figp figt"
         );
         return Ok(());
@@ -84,6 +84,11 @@ fn main() -> anyhow::Result<()> {
         // Fig 7 re-derived from measured stats: cost-model predictions
         // next to transport-measured times, both normalized to Dense.
         emit(figures::fig7_measured());
+    }
+    if want("fig7e") {
+        // Fig 7 at event-driver scale: the crossover swept to 512 ranks
+        // on one thread (`--transport event` territory).
+        emit(figures::fig7_event_scale());
     }
     if want("figp") {
         // Planner crossover map — the decision surface behind

@@ -29,7 +29,9 @@
 pub mod report;
 pub mod topology;
 
-pub use report::{ClassStage, CommReport, StageReport, Timeline, TimelineEntry, TimelineJob};
+pub use report::{
+    ClassStage, ClassedJob, CommReport, StageReport, Timeline, TimelineEntry, TimelineJob,
+};
 pub use topology::{LinkClass, Topology, LINK_CLASSES};
 
 /// Link presets matching the paper's two testbeds.

@@ -6,7 +6,7 @@ use super::topology::{LinkClass, LINK_CLASSES};
 /// busiest endpoint's bytes on it, and its α–β time. The stage's time
 /// is the max over classes (parallel physical links); a flat network
 /// puts everything in the inter class.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct ClassStage {
     /// Total bytes moved on this class in the stage.
     pub bytes: u64,
@@ -221,6 +221,22 @@ pub struct Timeline {
     pub compute_time: f64,
 }
 
+/// A communication job with its link occupancy split per
+/// [`LinkClass`] (`[intra, inter]`) — built from a bucket report's
+/// [`time_by_class`](CommReport::time_by_class). Input to
+/// [`Timeline::schedule_classed`].
+#[derive(Clone, Debug)]
+pub struct ClassedJob {
+    pub label: String,
+    /// Virtual time at which the payload is ready to transmit.
+    pub ready: f64,
+    /// Link occupancy per class (seconds); a class the job never
+    /// touches carries `0.0` and does not constrain it.
+    pub durations: [f64; 2],
+    /// Bytes this job puts on the network (reporting only).
+    pub bytes: u64,
+}
+
 impl Timeline {
     /// Greedy in-order schedule of `jobs` against a `compute_time`-long
     /// compute pass.
@@ -231,6 +247,49 @@ impl Timeline {
             let start = job.ready.max(cursor);
             let finish = start + job.duration;
             cursor = finish;
+            entries.push(TimelineEntry {
+                label: job.label.clone(),
+                ready: job.ready,
+                start,
+                finish,
+                bytes: job.bytes,
+            });
+        }
+        Timeline {
+            entries,
+            compute_time,
+        }
+    }
+
+    /// Link-busy-interval schedule: each [`LinkClass`] is its own
+    /// physical resource with a busy-until cursor. A job starts once it
+    /// is ready *and* every class it occupies is free, holds each class
+    /// for that class's duration, and finishes when its slowest class
+    /// does — so an intra-only bucket overlaps freely with an
+    /// inter-heavy one instead of queuing behind it. On a flat network
+    /// every job occupies only the inter class and this reduces exactly
+    /// to [`schedule`](Timeline::schedule). This is the engine's
+    /// pipelined-bucket model under the event-driven virtual-time
+    /// transport, replacing thread-join ordering with simulated link
+    /// contention.
+    pub fn schedule_classed(compute_time: f64, jobs: &[ClassedJob]) -> Timeline {
+        let mut entries = Vec::with_capacity(jobs.len());
+        let mut cursors = [0.0f64; 2];
+        for job in jobs {
+            let mut start = job.ready;
+            for c in LINK_CLASSES {
+                if job.durations[c.idx()] > 0.0 {
+                    start = start.max(cursors[c.idx()]);
+                }
+            }
+            let mut finish = start;
+            for c in LINK_CLASSES {
+                let d = job.durations[c.idx()];
+                if d > 0.0 {
+                    cursors[c.idx()] = start + d;
+                    finish = finish.max(start + d);
+                }
+            }
             entries.push(TimelineEntry {
                 label: job.label.clone(),
                 ready: job.ready,
@@ -368,5 +427,67 @@ mod tests {
         let t = Timeline::schedule(1.0, &jobs);
         assert!(t.overlapped_time() <= t.serialized_time() + 1e-12);
         assert!(t.overlapped_time() >= t.compute_time);
+    }
+
+    fn cjob(label: &str, ready: f64, durations: [f64; 2]) -> ClassedJob {
+        ClassedJob {
+            label: label.into(),
+            ready,
+            durations,
+            bytes: 100,
+        }
+    }
+
+    #[test]
+    fn classed_schedule_reduces_to_flat_on_inter_only_jobs() {
+        // Same jobs, inter class only: identical start/finish as the
+        // single-cursor greedy schedule.
+        let flat = Timeline::schedule(
+            1.0,
+            &[job("a", 0.5, 0.2), job("b", 0.6, 0.4), job("c", 1.2, 0.1)],
+        );
+        let classed = Timeline::schedule_classed(
+            1.0,
+            &[
+                cjob("a", 0.5, [0.0, 0.2]),
+                cjob("b", 0.6, [0.0, 0.4]),
+                cjob("c", 1.2, [0.0, 0.1]),
+            ],
+        );
+        for (f, c) in flat.entries.iter().zip(classed.entries.iter()) {
+            assert_eq!(f.start, c.start, "{}", f.label);
+            assert_eq!(f.finish, c.finish, "{}", f.label);
+        }
+        assert_eq!(flat.overlapped_time(), classed.overlapped_time());
+    }
+
+    #[test]
+    fn classed_schedule_overlaps_disjoint_link_classes() {
+        // An intra-only job and an inter-only job ready at once run
+        // concurrently; a second inter job queues behind the first.
+        let t = Timeline::schedule_classed(
+            0.0,
+            &[
+                cjob("inter-1", 0.0, [0.0, 0.4]),
+                cjob("intra", 0.0, [0.3, 0.0]),
+                cjob("inter-2", 0.0, [0.0, 0.2]),
+            ],
+        );
+        assert_eq!(t.entries[0].start, 0.0);
+        assert_eq!(t.entries[1].start, 0.0, "intra link is free");
+        assert!((t.entries[2].start - 0.4).abs() < 1e-12, "inter is busy");
+        assert!((t.overlapped_time() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn classed_job_finishes_with_its_slowest_class() {
+        let t = Timeline::schedule_classed(0.0, &[cjob("both", 0.1, [0.5, 0.2])]);
+        assert!((t.entries[0].finish - 0.6).abs() < 1e-12);
+        // both cursors advance: a follow-up on either class waits
+        let t2 = Timeline::schedule_classed(
+            0.0,
+            &[cjob("both", 0.0, [0.5, 0.2]), cjob("intra", 0.0, [0.1, 0.0])],
+        );
+        assert!((t2.entries[1].start - 0.5).abs() < 1e-12);
     }
 }

@@ -234,12 +234,25 @@ fn parse_link(pair: &str, spec: &str) -> Result<LinkKind, String> {
         .trim()
         .parse()
         .map_err(|_| format!("topology '{spec}': bad bandwidth '{gbps}' (Gbps)"))?;
+    // `NaN` compares false against every bound and `inf` saturates the
+    // `as u64` casts below to u64::MAX — both would silently build a
+    // nonsense link, so finiteness is checked before the range.
+    if !alpha_us.is_finite() || alpha_us < 0.0 {
+        return Err(format!(
+            "topology '{spec}': latency '{alpha}' must be a finite number of µs >= 0"
+        ));
+    }
+    if !gbps.is_finite() || gbps <= 0.0 {
+        return Err(format!(
+            "topology '{spec}': bandwidth '{gbps}' must be a finite number of Gbps > 0"
+        ));
+    }
     let bps = (gbps * 1e9) as u64;
     // Validate the *converted* value: a sub-1-bps spec would truncate
     // to 0 and turn every α–β time into +inf instead of an error.
-    if alpha_us < 0.0 || bps == 0 {
+    if bps == 0 {
         return Err(format!(
-            "topology '{spec}': latency must be >= 0 and bandwidth at least 1 bps"
+            "topology '{spec}': bandwidth must come to at least 1 bps"
         ));
     }
     Ok(LinkKind::Custom(bps, (alpha_us * 1e3) as u64))
@@ -302,6 +315,72 @@ mod tests {
         ] {
             assert!(Topology::parse(bad, LinkKind::Tcp25).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn parse_rejections_name_the_offending_field() {
+        let msg = |spec: &str| Topology::parse(spec, LinkKind::Tcp25).unwrap_err();
+        assert!(msg("4").contains("want NxG"), "{}", msg("4"));
+        assert!(msg("ax2").contains("bad node count"), "{}", msg("ax2"));
+        assert!(
+            msg("4xb").contains("bad ranks-per-node"),
+            "{}",
+            msg("4xb")
+        );
+        assert!(msg("0x2").contains("counts must be >= 1"), "{}", msg("0x2"));
+        assert!(msg("4x0").contains("counts must be >= 1"), "{}", msg("4x0"));
+        assert!(
+            msg("4x2:1,2").contains("intra/inter"),
+            "{}",
+            msg("4x2:1,2")
+        );
+        assert!(
+            msg("4x2:1/3,4").contains("alpha_us,gbps"),
+            "{}",
+            msg("4x2:1/3,4")
+        );
+        assert!(
+            msg("4x2:a,300/50,25").contains("bad latency"),
+            "{}",
+            msg("4x2:a,300/50,25")
+        );
+        assert!(
+            msg("4x2:1,b/50,25").contains("bad bandwidth"),
+            "{}",
+            msg("4x2:1,b/50,25")
+        );
+        // NaN slips past plain `< 0.0` range checks; inf saturates the
+        // u64 cast — both must be rejected with the finiteness message.
+        assert!(
+            msg("4x2:NaN,300/50,25").contains("finite number of µs"),
+            "{}",
+            msg("4x2:NaN,300/50,25")
+        );
+        assert!(
+            msg("4x2:inf,300/50,25").contains("finite number of µs"),
+            "{}",
+            msg("4x2:inf,300/50,25")
+        );
+        assert!(
+            msg("4x2:1,inf/50,25").contains("finite number of Gbps"),
+            "{}",
+            msg("4x2:1,inf/50,25")
+        );
+        assert!(
+            msg("4x2:1,NaN/50,25").contains("finite number of Gbps"),
+            "{}",
+            msg("4x2:1,NaN/50,25")
+        );
+        assert!(
+            msg("4x2:1,-2/50,25").contains("Gbps > 0"),
+            "{}",
+            msg("4x2:1,-2/50,25")
+        );
+        assert!(
+            msg("4x2:1,1e-10/50,25").contains("at least 1 bps"),
+            "{}",
+            msg("4x2:1,1e-10/50,25")
+        );
     }
 
     #[test]

@@ -162,7 +162,8 @@ impl Args {
         }
     }
 
-    /// Parse a transport backend name (`sim`, `channel`, `socket`).
+    /// Parse a transport backend name (`sim`, `channel`, `socket`,
+    /// `event`, `threaded`).
     /// Unlike [`link`](Args::link), an unknown value is an error —
     /// silently simulating when the user asked for real frames would be
     /// wrong.
@@ -174,7 +175,9 @@ impl Args {
         match self.get(key) {
             None => Ok(default),
             Some(v) => crate::wire::TransportKind::parse(v)
-                .ok_or_else(|| anyhow::anyhow!("unknown transport '{v}' (sim|channel|socket)")),
+                .ok_or_else(|| {
+                    anyhow::anyhow!("unknown transport '{v}' (sim|channel|socket|event|threaded)")
+                }),
         }
     }
 }
@@ -203,7 +206,19 @@ mod tests {
         );
         let c = parse("sim --transport warp");
         let err = c.transport("transport", TransportKind::Sim).unwrap_err();
-        assert!(err.to_string().contains("sim|channel|socket"), "{err}");
+        assert!(
+            err.to_string().contains("sim|channel|socket|event|threaded"),
+            "{err}"
+        );
+        // The driver-level backends parse too (and `des` is an alias).
+        for (spelling, want) in [
+            ("event", TransportKind::Event),
+            ("des", TransportKind::Event),
+            ("threaded", TransportKind::Threaded),
+        ] {
+            let a = parse(&format!("sim --transport {spelling}"));
+            assert_eq!(a.transport("transport", TransportKind::Sim).unwrap(), want);
+        }
     }
 
     #[test]

@@ -88,8 +88,10 @@ pub struct SimConfig {
     /// one-blocking-sync path.
     pub pipeline: Option<PipelineConfig>,
     /// Data plane the schemes run over: virtual-time sim (default),
-    /// real-frames channel fabric, or the readiness-polled loopback
-    /// socket mesh (`zen sim --transport sim|channel|socket`).
+    /// real-frames channel fabric, the readiness-polled loopback socket
+    /// mesh, the single-threaded discrete-event scheduler (the large-n
+    /// mode — ranks are event endpoints, not threads), or one OS thread
+    /// per rank (`zen sim --transport sim|channel|socket|event|threaded`).
     pub transport: TransportKind,
 }
 
@@ -729,6 +731,19 @@ mod tests {
         let chan = SimDriver::new(c).unwrap().run();
         assert_eq!(sim.emb_sync_times, chan.emb_sync_times);
         assert_eq!(sim.throughput, chan.throughput);
+    }
+
+    #[test]
+    fn event_transport_run_matches_sim() {
+        // `--transport event`: the discrete-event scheduler replays the
+        // same protocol in virtual time — per-stage charges flow through
+        // the same accounting, so every reported number is identical.
+        let sim = SimDriver::new(cfg("zen", 4)).unwrap().run();
+        let mut c = cfg("zen", 4);
+        c.transport = TransportKind::Event;
+        let ev = SimDriver::new(c).unwrap().run();
+        assert_eq!(sim.emb_sync_times, ev.emb_sync_times);
+        assert_eq!(sim.throughput, ev.throughput);
     }
 
     #[test]

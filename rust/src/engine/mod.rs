@@ -30,7 +30,9 @@
 //! 3. a [`Timeline`] charges virtual time twice: **serialized** (compute,
 //!    then every bucket in turn — the one-blocking-`sync()` baseline)
 //!    and **overlapped** (bucket *k*'s communication may start at
-//!    `compute_time × ready_frac_k`, buckets share the link in order).
+//!    `compute_time × ready_frac_k`, buckets share the link in order —
+//!    per link *class* under the event driver, so intra-node and fabric
+//!    traffic of different buckets pipeline past each other).
 //!
 //! The spread between the two is the pipelining win the engine exists to
 //! measure; `benches/bench_engine.rs` sweeps it over schemes × models.
@@ -39,7 +41,7 @@ pub mod bucket;
 
 pub use bucket::{plan_buckets, Bucket};
 
-use crate::cluster::{CommReport, Network, Timeline, TimelineJob};
+use crate::cluster::{ClassedJob, CommReport, Network, Timeline, TimelineJob};
 use crate::planner::Planner;
 use crate::schemes::{SyncScheme, SyncScratch};
 use crate::tensor::{CooTensor, WireFormat};
@@ -370,9 +372,14 @@ impl SyncEngine {
         });
         let wall_time = sw.elapsed();
 
-        // Charge virtual time and build the overlap schedule.
+        // Charge virtual time and build the overlap schedule. Under the
+        // event driver the overlap model is classed link-busy intervals
+        // (buckets on disjoint link classes pipeline past each other);
+        // every other backend keeps the single shared-link queue.
+        let classed = self.cfg.transport == TransportKind::Event;
         let mut outcomes = Vec::with_capacity(synced.len());
         let mut jobs = Vec::with_capacity(synced.len());
+        let mut classed_jobs = Vec::with_capacity(if classed { synced.len() } else { 0 });
         let mut layer_outputs: Vec<Option<CooTensor>> = vec![None; specs.len()];
         let mut total_bytes = 0u64;
         for (b, planned, result) in synced {
@@ -386,6 +393,20 @@ impl SyncEngine {
                 duration: comm_time,
                 bytes,
             });
+            if classed {
+                // Split the (possibly `time_of`-rescaled) duration over
+                // the link classes in the report's own proportions so
+                // the classed schedule and the caller's rescaling agree.
+                let raw = result.report.comm_time();
+                let scale = if raw > 0.0 { comm_time / raw } else { 0.0 };
+                let per_class = result.report.time_by_class();
+                classed_jobs.push(ClassedJob {
+                    label: label.clone(),
+                    ready: self.cfg.compute_time * b.ready_frac,
+                    durations: [per_class[0] * scale, per_class[1] * scale],
+                    bytes,
+                });
+            }
             // Every endpoint holds the same aggregate; unbucket machine
             // 0's copy back into per-layer outputs.
             for (l, t) in b
@@ -408,7 +429,11 @@ impl SyncEngine {
                 report: result.report,
             });
         }
-        let timeline = Timeline::schedule(self.cfg.compute_time, &jobs);
+        let timeline = if classed {
+            Timeline::schedule_classed(self.cfg.compute_time, &classed_jobs)
+        } else {
+            Timeline::schedule(self.cfg.compute_time, &jobs)
+        };
         let serialized_time = timeline.serialized_time();
         let overlapped_time = timeline.overlapped_time();
 
@@ -547,6 +572,39 @@ mod tests {
             assert_eq!(a.bytes, b.bytes, "bucket {}", a.label);
         }
         verify_layer_outputs(&chan, &layers);
+    }
+
+    #[test]
+    fn event_driver_engine_matches_sim_and_reduces_flat() {
+        // Buckets synced over the discrete-event driver must reproduce
+        // the simulator's outputs, bytes, and per-bucket α–β comm times
+        // exactly; on a flat network every bucket is inter-only, so the
+        // classed link-busy schedule reduces to the shared-link queue
+        // and the overlapped makespans coincide too.
+        let gen = small_gen();
+        let specs = gen.layer_specs(3, 4);
+        let layers = gen.layer_iteration_all(&specs, 0, 4);
+        let planner = fixed("zen", 4, gen.expected_nnz().max(64));
+        let net = Network::new(4, LinkKind::Tcp25);
+        let sim = SyncEngine::new(EngineConfig::new(16 * 1024, 0.05)).run(
+            &specs,
+            &layers,
+            &planner,
+            &net,
+            |r| r.comm_time(),
+        );
+        let ev_cfg =
+            EngineConfig::new(16 * 1024, 0.05).with_transport(crate::wire::TransportKind::Event);
+        let ev = SyncEngine::new(ev_cfg).run(&specs, &layers, &planner, &net, |r| r.comm_time());
+        assert_eq!(sim.total_bytes, ev.total_bytes);
+        assert_eq!(sim.buckets.len(), ev.buckets.len());
+        for (a, b) in sim.buckets.iter().zip(ev.buckets.iter()) {
+            assert_eq!(a.bytes, b.bytes, "bucket {}", a.label);
+            assert_eq!(a.comm_time, b.comm_time, "bucket {}", a.label);
+        }
+        verify_layer_outputs(&ev, &layers);
+        assert_eq!(sim.serialized_time, ev.serialized_time);
+        assert_eq!(sim.overlapped_time, ev.overlapped_time);
     }
 
     #[test]

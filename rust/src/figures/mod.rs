@@ -483,6 +483,74 @@ pub fn fig7_measured_for(profile: &ModelProfile, machine_counts: &[usize], seed:
     t
 }
 
+/// Fig 7-E (beyond the paper) — the Fig 7 scheme crossover at
+/// event-driver scale: transport-measured comm time per candidate,
+/// normalized to the dense ring, at machine counts no thread-per-rank
+/// backend could sweep — all simulated on one thread by
+/// [`crate::wire::EventDriver`]. Each cell also checks the planner:
+/// `planner-pick` marks the cost model's argmin, `measured-best` the
+/// transport-measured winner; the crossover reproduces when the marks
+/// coincide (or sit within a near-tie).
+pub fn fig7_event_scale() -> Table {
+    fig7_event_scale_for(&[64, 128, 256, 512])
+}
+
+/// Parameterized body of [`fig7_event_scale`] (tests run smaller sweeps).
+pub fn fig7_event_scale_for(machine_counts: &[usize]) -> Table {
+    let mut t = Table::new(
+        "Fig 7-E — scheme crossover at event-driver scale (x Dense, one thread)",
+        &["machines", "scheme", "measured", "events", "flags"],
+    );
+    let dense_len = 1 << 12;
+    let density = 0.005;
+    let block = crate::tensor::block::DEFAULT_BLOCK;
+    let link = LinkKind::Tcp25;
+    for &n in machine_counts {
+        let inputs = random_uniform_inputs(SEED ^ (n as u64) << 1, n, dense_len, density);
+        let nnz = inputs[0].nnz().max(8);
+        let stats = MeasuredStats::from_tensors(&inputs, &[n], &[block]);
+        let topo = Topology::flat(n, link);
+        let planner_pick = rank_candidates(dense_len as f64, n, &topo, block, &stats)[0].scheme;
+        let net = Network::new(n, link);
+        let mut measured: Vec<(&str, f64, u64)> = Vec::new();
+        for name in schemes::PLANNER_CANDIDATES {
+            let scheme = schemes::by_name(name, n, SEED ^ 0x5a5a, nnz).unwrap();
+            let mut drv = crate::wire::EventDriver::new(net.clone()).totals_only();
+            scheme
+                .run(&inputs, &mut drv, &mut schemes::SyncScratch::new())
+                .expect("event-driver sweep sync");
+            measured.push((name, drv.totals().time, drv.events_processed()));
+        }
+        let dense_time = measured
+            .iter()
+            .find(|(name, ..)| *name == "allreduce")
+            .map(|&(_, time, _)| time)
+            .unwrap_or(f64::NAN);
+        let best = measured
+            .iter()
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .map(|&(name, ..)| name)
+            .unwrap_or("");
+        for (name, time, events) in measured {
+            let mut flags: Vec<&str> = Vec::new();
+            if name == planner_pick {
+                flags.push("planner-pick");
+            }
+            if name == best {
+                flags.push("measured-best");
+            }
+            t.row(vec![
+                n.to_string(),
+                name.to_string(),
+                format!("{:.3}", time / dense_time),
+                events.to_string(),
+                flags.join("+"),
+            ]);
+        }
+    }
+    t
+}
+
 /// Fig T1 (beyond the paper) — the hierarchy crossover under
 /// heterogeneous links: the planner's chosen scheme per (sparsity
 /// structure × topology). Group-clustered workers (co-located ranks
@@ -670,6 +738,35 @@ mod tests {
             is_hier(&hier),
             "two-level 10x-slower-inter must pick a hierarchical scheme, got {hier}"
         );
+    }
+
+    #[test]
+    fn fig7_event_scale_rows_are_complete_and_marked() {
+        // Small counts keep the test fast; the 512-rank sweep is the
+        // example binary's job.
+        let t = fig7_event_scale_for(&[8, 16]);
+        assert_eq!(t.rows.len(), 2 * schemes::PLANNER_CANDIDATES.len());
+        for machines in ["8", "16"] {
+            let rows: Vec<_> = t.rows.iter().filter(|r| r[0] == machines).collect();
+            // Normalization anchor: the dense ring's own ratio is 1.
+            let dense = rows.iter().find(|r| r[1] == "allreduce").unwrap();
+            let ratio: f64 = dense[2].parse().unwrap();
+            assert!((ratio - 1.0).abs() < 1e-9, "n={machines}: {ratio}");
+            assert_eq!(
+                rows.iter().filter(|r| r[4].contains("planner-pick")).count(),
+                1,
+                "n={machines}: exactly one planner pick"
+            );
+            assert_eq!(
+                rows.iter().filter(|r| r[4].contains("measured-best")).count(),
+                1,
+                "n={machines}: exactly one measured best"
+            );
+            for r in &rows {
+                assert!(r[2].parse::<f64>().unwrap().is_finite());
+                assert!(r[3].parse::<u64>().unwrap() > 0, "events counted");
+            }
+        }
     }
 
     #[test]

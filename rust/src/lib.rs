@@ -57,7 +57,7 @@ pub mod prelude {
     pub use crate::schemes::{self, SyncOutput, SyncScheme, SyncScratch};
     pub use crate::tensor::CooTensor;
     pub use crate::wire::{
-        make_driver, Driver, Event, Protocol, SocketDriver, Transport, TransportDriver,
-        TransportKind, WireError, WorkerDriver,
+        make_driver, Driver, Event, EventDriver, Protocol, SocketDriver, ThreadedDriver,
+        Transport, TransportDriver, TransportKind, WireError, WorkerDriver,
     };
 }

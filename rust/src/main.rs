@@ -13,6 +13,7 @@
 //!   zen sim --model LSTM --machines 16 --scheme zen --pipeline --bucket-kb 256
 //!   zen sim --model DeepFM --machines 8 --scheme zen --transport channel
 //!   zen sim --model DeepFM --machines 4 --gpus 1 --scale 2048 --transport socket
+//!   zen sim --machines 1024 --gpus 1 --transport event --topology 32x32 --scheme auto
 //!   zen train --shape tiny --workers 4 --scheme auto --steps 50
 //!   zen worker --listen 127.0.0.1:4700 --scheme zen   # terminal 1
 //!   zen worker --connect 127.0.0.1:4700 --scheme zen  # terminal 2
@@ -50,11 +51,12 @@ fn main() -> anyhow::Result<()> {
             eprintln!(
                 "usage: zen <sim|train|worker|schemes> [--options]\n\
                  sim:    --model LSTM|DeepFM|NMT|BERT --machines N --scheme S|auto\n\
-                         --link tcp25|rdma100 --transport sim|channel|socket\n\
+                         --link tcp25|rdma100 --transport sim|channel|socket|event|threaded\n\
                          --topology NxG[:ia,ib/ea,eb] (two-level cluster)\n\
                          --replan-threshold R (auto hysteresis, default 0.25)\n\
                  train:  --shape tiny|paper_100m --workers N --scheme S|auto --steps N\n\
-                         --transport sim|channel|socket --topology NxG --replan-threshold R\n\
+                         --transport sim|channel|socket|event|threaded --topology NxG\n\
+                         --replan-threshold R\n\
                  worker: --listen ADDR | --connect ADDR (one rank per process)\n\
                          --scheme S --dense-len N --shared N --private N --seed N"
             );

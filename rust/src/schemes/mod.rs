@@ -87,8 +87,9 @@ pub struct SyncOutput {
 #[deprecated(since = "0.6.0", note = "renamed to SyncOutput")]
 pub type SyncResult = SyncOutput;
 
-/// Reusable working memory for one in-flight `sync_with` call — the
-/// scheme-level scratch arena (see [`crate::util::arena`]).
+/// Reusable working memory for one in-flight [`SyncScheme::run`] (or
+/// [`run_sim`](SyncScheme::run_sim)) call — the scheme-level scratch
+/// arena (see [`crate::util::arena`]).
 ///
 /// One `SyncScratch` serves one concurrent synchronization at a time;
 /// the engine checks one out per in-flight bucket from a

@@ -4,7 +4,10 @@
 //! every local protocol machine, transmits the frames they emit,
 //! delivers arrivals back, and closes each synchronous stage when the
 //! machines reach consensus (see [`crate::wire::protocol`] for the
-//! event vocabulary and lifecycle contract). Three shells exist:
+//! event vocabulary and lifecycle contract). Alongside the
+//! discrete-event [`EventDriver`](crate::wire::EventDriver) and the
+//! thread-per-rank [`ThreadedDriver`](crate::wire::ThreadedDriver)
+//! (their own modules), three shells live here:
 //!
 //! - [`TransportDriver`] — a thin loop over any in-process
 //!   [`Transport`] (virtual-time sim, real-frames channel). Every
@@ -207,8 +210,10 @@ impl Driver for TransportDriver<'_> {
     }
 }
 
-/// All parked machines must agree on the open stage's name.
-fn consensus_stage(done: &[Option<&'static str>]) -> Result<&'static str, WireError> {
+/// All parked machines must agree on the open stage's name. Shared by
+/// every in-process driver ([`TransportDriver`], [`SocketDriver`], the
+/// event and threaded drivers).
+pub(crate) fn consensus_stage(done: &[Option<&'static str>]) -> Result<&'static str, WireError> {
     let name = done
         .iter()
         .flatten()
@@ -237,6 +242,8 @@ pub fn make_driver(kind: TransportKind, net: &Network) -> anyhow::Result<Box<dyn
                 .map_err(|e| anyhow::anyhow!("socket mesh setup: {e}"))?;
             Box::new(mesh)
         }
+        TransportKind::Event => Box::new(super::event::EventDriver::new(net.clone())),
+        TransportKind::Threaded => Box::new(super::threaded::ThreadedDriver::new(net.clone())),
     })
 }
 

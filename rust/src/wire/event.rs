@@ -1,0 +1,603 @@
+//! Discrete-event virtual time: thousands of ranks on one thread.
+//!
+//! [`EventDriver`] owns all n per-rank [`Protocol`] machines of a
+//! synchronization and drives them from one binary event heap, so
+//! simulation cost scales with *event* count, not thread count — the
+//! regime where the paper's scheme crossovers actually matter (512–1024
+//! GPUs across dozens of nodes, Fig. 7) runs on a single thread in
+//! seconds. The classed α–β charging model follows "A DAG Model of
+//! Synchronous SGD" (PAPERS.md): each frame is charged latency plus
+//! serialization from the [`Topology`](crate::cluster::Topology) link
+//! class it crosses.
+//!
+//! ## Heap ordering rules
+//!
+//! Deliveries pop in ascending `(time, src, seq)` order — `time` via
+//! `f64::total_cmp`, then source rank, then a global send sequence
+//! number. Per-(src, dst) delivery times are strictly monotone (each
+//! later frame starts no earlier than the previous one freed the link
+//! and serialization time is never zero), so per-source FIFO — the only
+//! order the [`Inbox`](crate::wire::Inbox) merge path depends on — is
+//! preserved and outputs stay bit-identical to every other backend.
+//!
+//! ## Contention model
+//!
+//! Each endpoint keeps a per-link-class busy-until horizon for its
+//! transmit and receive sides. A frame from `src` to `dst` over class
+//! `c` starts at `max(rank_time[src], tx_free[c][src], rx_free[c][dst])`,
+//! occupies both horizons for its serialization time `bytes·8/B_c`, and
+//! arrives a propagation latency `α_c` later — so multiple in-flight
+//! frames sharing a link class queue behind each other instead of
+//! overlapping for free. Stage *totals* stay exactly equal to
+//! [`SimTransport`](crate::wire::SimTransport): byte matrices flow
+//! through the same [`StageAcc`], and at each stage boundary the global
+//! clock advances by the stage's max-over-classes α–β time (the same
+//! number every backend charges), with all horizons reset to the
+//! boundary — a synchronous stage is a barrier.
+//!
+//! ## Allocation-free invariants
+//!
+//! The steady-state loop allocates nothing per simulated iteration:
+//! event nodes live in a free-listed slot pool (messages are moved in
+//! and out by `Option::take`), the heap and per-endpoint horizon vectors
+//! are retained across drives, and in [`totals-only`](EventDriver::totals_only)
+//! mode stage closure goes through `StageAcc::end_stage_lite`, which
+//! zeroes the byte matrices in place instead of materializing per-stage
+//! reports. `rust/tests/alloc_steady_state.rs` pins this with a
+//! counting allocator. [`pool_high_water`](EventDriver::pool_high_water)
+//! exposes the slot pool's high-water mark as a peak-memory proxy for
+//! the scale bench.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::codec::{Message, WireError};
+use super::driver::{consensus_stage, DriveOutcome, Driver};
+use super::protocol::{Event, Protocol};
+use super::transport::StageAcc;
+use crate::cluster::Network;
+use crate::schemes::SyncScratch;
+use crate::tensor::CooTensor;
+
+/// One scheduled delivery: the heap key plus the slot holding the
+/// message. Ordered by `(time, src, seq)` — see the module docs.
+#[derive(Clone, Copy, Debug)]
+struct DeliveryEv {
+    time: f64,
+    src: u32,
+    dst: u32,
+    seq: u64,
+    slot: u32,
+}
+
+impl PartialEq for DeliveryEv {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for DeliveryEv {}
+impl PartialOrd for DeliveryEv {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for DeliveryEv {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.time
+            .total_cmp(&other.time)
+            .then(self.src.cmp(&other.src))
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Compact accumulated totals for [`EventDriver::totals_only`] mode:
+/// what a large-n sweep needs from a drive without the per-stage
+/// [`StageReport`](crate::cluster::StageReport) allocations.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EventTotals {
+    /// Stages closed.
+    pub stages: u64,
+    /// Bytes moved per link class (`[intra, inter]`).
+    pub bytes_by_class: [u64; 2],
+    /// Accumulated α–β stage time per link class.
+    pub time_by_class: [f64; 2],
+    /// Accumulated stage time (max over classes per stage).
+    pub time: f64,
+}
+
+/// Single-threaded discrete-event scheduler over all n protocol
+/// machines. Reusable across drives: the heap, slot pool, and horizon
+/// vectors are retained, and [`virtual_time`](EventDriver::virtual_time)
+/// accumulates monotonically across synchronizations.
+pub struct EventDriver {
+    acc: StageAcc,
+    totals_only: bool,
+    totals: EventTotals,
+    /// Virtual time of the last closed stage boundary.
+    clock: f64,
+    /// Virtual time at which the current stage opened.
+    rank_time: Vec<f64>,
+    /// Per-class per-endpoint transmit-side busy-until horizon.
+    tx_free: [Vec<f64>; 2],
+    /// Per-class per-endpoint receive-side busy-until horizon.
+    rx_free: [Vec<f64>; 2],
+    heap: BinaryHeap<Reverse<DeliveryEv>>,
+    /// Free-listed message pool: in-flight frames park here so the
+    /// steady-state loop never allocates event nodes.
+    slots: Vec<Option<Message>>,
+    free: Vec<u32>,
+    seq: u64,
+    events: u64,
+}
+
+impl EventDriver {
+    pub fn new(net: Network) -> EventDriver {
+        let n = net.endpoints;
+        EventDriver {
+            acc: StageAcc::new(net),
+            totals_only: false,
+            totals: EventTotals::default(),
+            clock: 0.0,
+            rank_time: vec![0.0; n],
+            tx_free: [vec![0.0; n], vec![0.0; n]],
+            rx_free: [vec![0.0; n], vec![0.0; n]],
+            heap: BinaryHeap::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
+            seq: 0,
+            events: 0,
+        }
+    }
+
+    /// Totals-only accounting: skip per-stage `StageReport`s (and their
+    /// allocations) and accumulate [`EventTotals`] instead. The mode for
+    /// large-n sweeps and the allocation-pinned steady-state loop; the
+    /// returned [`DriveOutcome`] carries an empty report.
+    pub fn totals_only(mut self) -> EventDriver {
+        self.totals_only = true;
+        self
+    }
+
+    /// Accumulated virtual time: the sum of every closed stage's
+    /// max-over-classes α–β time, across all drives — exactly what
+    /// `CommReport::comm_time()` sums for the same run.
+    pub fn virtual_time(&self) -> f64 {
+        self.clock
+    }
+
+    /// Delivery events processed across all drives.
+    pub fn events_processed(&self) -> u64 {
+        self.events
+    }
+
+    /// High-water mark of the in-flight message pool (peak concurrent
+    /// frames): the scale bench's peak-memory proxy.
+    pub fn pool_high_water(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Accumulated totals (populated in [`totals_only`](Self::totals_only)
+    /// mode).
+    pub fn totals(&self) -> EventTotals {
+        self.totals
+    }
+
+    /// Validate, charge, and heap-schedule one emitted frame.
+    fn schedule_send(&mut self, src: usize, dst: usize, msg: Message) -> Result<(), WireError> {
+        let len = {
+            let frame = msg.as_frame();
+            self.acc.check_send(src, dst, &frame)?;
+            frame.encoded_len() as u64
+        };
+        let class = self.acc.net.topo.class_of(src, dst);
+        let c = class.idx();
+        let link = self.acc.net.topo.link_of(class);
+        let ser = len as f64 * 8.0 / link.bandwidth_bps();
+        let start = self.rank_time[src]
+            .max(self.tx_free[c][src])
+            .max(self.rx_free[c][dst]);
+        let busy_until = start + ser;
+        self.tx_free[c][src] = busy_until;
+        self.rx_free[c][dst] = busy_until;
+        self.acc.charge(src, dst, len);
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.slots.push(None);
+                (self.slots.len() - 1) as u32
+            }
+        };
+        self.slots[slot as usize] = Some(msg);
+        self.seq += 1;
+        self.heap.push(Reverse(DeliveryEv {
+            time: busy_until + link.latency(),
+            src: src as u32,
+            dst: dst as u32,
+            seq: self.seq,
+            slot,
+        }));
+        Ok(())
+    }
+
+    /// Close the consensus stage: charge its α–β time, jump the global
+    /// clock to the stage boundary, and reset every horizon to it.
+    fn close_stage(&mut self, name: &str) -> Result<(), WireError> {
+        let stage_time = if self.totals_only {
+            let classes = self.acc.end_stage_lite()?;
+            self.totals.stages += 1;
+            for c in 0..2 {
+                self.totals.bytes_by_class[c] += classes[c].bytes;
+                self.totals.time_by_class[c] += classes[c].time;
+            }
+            let t = classes[0].time.max(classes[1].time);
+            self.totals.time += t;
+            t
+        } else {
+            self.acc.end_stage(name)?
+        };
+        self.clock += stage_time;
+        let t = self.clock;
+        self.rank_time.iter_mut().for_each(|v| *v = t);
+        for c in 0..2 {
+            self.tx_free[c].iter_mut().for_each(|v| *v = t);
+            self.rx_free[c].iter_mut().for_each(|v| *v = t);
+        }
+        Ok(())
+    }
+}
+
+impl Driver for EventDriver {
+    fn endpoints(&self) -> usize {
+        self.acc.net.endpoints
+    }
+
+    fn drive<'a>(
+        &mut self,
+        mut machines: Vec<Box<dyn Protocol + 'a>>,
+        scratch: &mut SyncScratch,
+    ) -> Result<DriveOutcome, WireError> {
+        let n = machines.len();
+        if n != self.endpoints() {
+            return Err(WireError::Malformed("machine count != endpoints"));
+        }
+        let mut done: Vec<Option<&'static str>> = (0..n).map(|_| None).collect();
+        let mut need = vec![false; n];
+        let mut outs: Vec<Option<CooTensor>> = (0..n).map(|_| None).collect();
+        let mut finished = 0usize;
+
+        while finished < n {
+            let mut progressed = false;
+            for i in 0..n {
+                if outs[i].is_some() || done[i].is_some() || need[i] {
+                    continue;
+                }
+                loop {
+                    match machines[i].poll(scratch)? {
+                        Event::Send { dst, msg } => {
+                            progressed = true;
+                            self.schedule_send(i, dst, msg)?;
+                        }
+                        Event::NeedFrame { .. } => {
+                            need[i] = true;
+                            break;
+                        }
+                        Event::StageDone { name } => {
+                            progressed = true;
+                            done[i] = Some(name);
+                            break;
+                        }
+                        Event::Complete(t) => {
+                            progressed = true;
+                            outs[i] = Some(t);
+                            finished += 1;
+                            break;
+                        }
+                    }
+                }
+            }
+            // Drain the heap: every scheduled frame is delivered in
+            // deterministic (time, src, seq) order before the next poll
+            // round — per-source FIFO is monotone by construction, so
+            // the Inbox merge path sees the same order as every other
+            // backend.
+            while let Some(Reverse(ev)) = self.heap.pop() {
+                let msg = self.slots[ev.slot as usize]
+                    .take()
+                    .expect("scheduled slot holds a message");
+                self.free.push(ev.slot);
+                let dst = ev.dst as usize;
+                if self.rank_time[dst] < ev.time {
+                    self.rank_time[dst] = ev.time;
+                }
+                self.acc.on_recv();
+                self.events += 1;
+                machines[dst].deliver(ev.src as usize, msg)?;
+                need[dst] = false;
+                progressed = true;
+            }
+            if finished == n {
+                break;
+            }
+            let all_parked = (0..n).all(|i| outs[i].is_some() || done[i].is_some());
+            if all_parked {
+                let name = consensus_stage(&done)?;
+                self.close_stage(name)?;
+                for i in 0..n {
+                    if done[i].take().is_some() {
+                        machines[i].stage_closed(name)?;
+                    }
+                }
+            } else if !progressed {
+                return Err(WireError::Malformed(
+                    "protocol stalled: machine waits for a frame nobody sends",
+                ));
+            }
+        }
+        let report = self.acc.take_report();
+        Ok(DriveOutcome {
+            outputs: outs.into_iter().map(|o| o.unwrap()).collect(),
+            report,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::LinkKind;
+    use crate::schemes::{self, verify_outputs, SyncScheme};
+    use crate::wire::transport::SimTransport;
+    use crate::wire::TransportDriver;
+    use crate::workload::random_uniform_inputs;
+
+    /// Minimal toy: each rank pushes one COO frame to the next rank
+    /// (mod n) in stage "swap", then completes with what it received.
+    struct RingSwap {
+        rank: usize,
+        n: usize,
+        sent: bool,
+        parked: bool,
+        closed: bool,
+        got: Option<CooTensor>,
+    }
+
+    impl RingSwap {
+        fn machines(n: usize) -> Vec<Box<dyn Protocol>> {
+            (0..n)
+                .map(|rank| {
+                    Box::new(RingSwap {
+                        rank,
+                        n,
+                        sent: false,
+                        parked: false,
+                        closed: false,
+                        got: None,
+                    }) as Box<dyn Protocol>
+                })
+                .collect()
+        }
+    }
+
+    impl Protocol for RingSwap {
+        fn rank(&self) -> usize {
+            self.rank
+        }
+
+        fn poll(&mut self, _scratch: &mut SyncScratch) -> Result<Event, WireError> {
+            if !self.sent {
+                self.sent = true;
+                let t = CooTensor::from_sorted(64, vec![self.rank as u32], vec![1.0]);
+                return Ok(Event::Send {
+                    dst: (self.rank + 1) % self.n,
+                    msg: Message::PushCoo {
+                        from: self.rank as u32,
+                        tensor: t,
+                    },
+                });
+            }
+            if self.got.is_none() {
+                return Ok(Event::NeedFrame {
+                    src: (self.rank + self.n - 1) % self.n,
+                });
+            }
+            if !self.parked {
+                self.parked = true;
+                return Ok(Event::StageDone { name: "swap" });
+            }
+            assert!(self.closed, "completed before stage closure");
+            Ok(Event::Complete(self.got.take().unwrap()))
+        }
+
+        fn deliver(&mut self, src: usize, msg: Message) -> Result<(), WireError> {
+            assert_eq!(src, (self.rank + self.n - 1) % self.n);
+            match msg {
+                Message::PushCoo { tensor, .. } => self.got = Some(tensor),
+                other => panic!("unexpected frame {other:?}"),
+            }
+            Ok(())
+        }
+
+        fn stage_closed(&mut self, name: &str) -> Result<(), WireError> {
+            assert_eq!(name, "swap");
+            self.closed = true;
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn event_driver_matches_sim_on_the_toy_protocol() {
+        let net = Network::new(4, LinkKind::Tcp25);
+        let mut sim = TransportDriver::new(Box::new(SimTransport::new(net.clone())));
+        let want = sim
+            .drive(RingSwap::machines(4), &mut SyncScratch::new())
+            .unwrap();
+        let mut ev = EventDriver::new(net);
+        let got = ev
+            .drive(RingSwap::machines(4), &mut SyncScratch::new())
+            .unwrap();
+        assert_eq!(got.outputs, want.outputs);
+        assert_eq!(got.report.stages.len(), want.report.stages.len());
+        let (s, c) = (&want.report.stages[0], &got.report.stages[0]);
+        assert_eq!(s.name, c.name);
+        assert_eq!(s.sent, c.sent);
+        assert_eq!(s.recv, c.recv);
+        assert_eq!(s.time, c.time, "stage α–β time is exact across backends");
+        assert_eq!(
+            ev.virtual_time(),
+            got.report.comm_time(),
+            "virtual clock equals the summed stage times"
+        );
+    }
+
+    /// Two senders share rank 0's receive link: the big frame (polled
+    /// first, rank order) seizes the link, so the small frame — which
+    /// would arrive first on an uncontended link — queues behind it.
+    struct Probe {
+        rank: usize,
+        sent: bool,
+        parked: bool,
+        closed: bool,
+        order: Vec<u32>,
+    }
+
+    impl Probe {
+        fn machines() -> Vec<Box<dyn Protocol>> {
+            (0..3)
+                .map(|rank| {
+                    Box::new(Probe {
+                        rank,
+                        sent: false,
+                        parked: false,
+                        closed: false,
+                        order: Vec::new(),
+                    }) as Box<dyn Protocol>
+                })
+                .collect()
+        }
+    }
+
+    impl Protocol for Probe {
+        fn rank(&self) -> usize {
+            self.rank
+        }
+
+        fn poll(&mut self, _scratch: &mut SyncScratch) -> Result<Event, WireError> {
+            if self.rank != 0 && !self.sent {
+                self.sent = true;
+                // rank 1: 500-entry frame; rank 2: 1-entry frame.
+                let nnz = if self.rank == 1 { 500 } else { 1 };
+                let t = CooTensor::from_sorted(
+                    1 << 16,
+                    (0..nnz as u32).collect(),
+                    vec![self.rank as f32; nnz],
+                );
+                return Ok(Event::Send {
+                    dst: 0,
+                    msg: Message::PushCoo {
+                        from: self.rank as u32,
+                        tensor: t,
+                    },
+                });
+            }
+            if self.rank == 0 && self.order.len() < 2 {
+                return Ok(Event::NeedFrame { src: 1 });
+            }
+            if !self.parked {
+                self.parked = true;
+                return Ok(Event::StageDone { name: "probe" });
+            }
+            assert!(self.closed);
+            let out = CooTensor::from_sorted(
+                8,
+                (0..self.order.len() as u32).collect(),
+                self.order.iter().map(|&s| s as f32).collect(),
+            );
+            Ok(Event::Complete(out))
+        }
+
+        fn deliver(&mut self, src: usize, _msg: Message) -> Result<(), WireError> {
+            assert_eq!(self.rank, 0);
+            self.order.push(src as u32);
+            Ok(())
+        }
+
+        fn stage_closed(&mut self, name: &str) -> Result<(), WireError> {
+            assert_eq!(name, "probe");
+            self.closed = true;
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn shared_receive_link_serializes_in_flight_frames() {
+        let net = Network::new(3, LinkKind::Tcp25);
+        let mut ev = EventDriver::new(net);
+        let got = ev.drive(Probe::machines(), &mut SyncScratch::new()).unwrap();
+        // Contention-aware order: rank 1's big frame first. Without the
+        // rx-horizon the 1-entry frame would overtake it.
+        assert_eq!(got.outputs[0].values, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn totals_only_mode_accumulates_without_stage_reports() {
+        let net = Network::new(4, LinkKind::Tcp25);
+        let mut full = EventDriver::new(net.clone());
+        let report = full
+            .drive(RingSwap::machines(4), &mut SyncScratch::new())
+            .unwrap()
+            .report;
+        let mut lite = EventDriver::new(net).totals_only();
+        let out = lite
+            .drive(RingSwap::machines(4), &mut SyncScratch::new())
+            .unwrap();
+        assert!(out.report.stages.is_empty(), "totals mode skips reports");
+        let t = lite.totals();
+        assert_eq!(t.stages, 1);
+        assert_eq!(t.bytes_by_class, report.bytes_by_class());
+        assert_eq!(t.time, report.comm_time());
+        assert_eq!(lite.virtual_time(), full.virtual_time());
+        assert!(lite.events_processed() == 4 && lite.pool_high_water() >= 1);
+    }
+
+    #[test]
+    fn machine_count_mismatch_is_an_error() {
+        let net = Network::new(5, LinkKind::Tcp25);
+        let mut ev = EventDriver::new(net);
+        let err = ev
+            .drive(RingSwap::machines(4), &mut SyncScratch::new())
+            .expect_err("4 machines on 5 endpoints");
+        assert!(matches!(err, WireError::Malformed(_)));
+    }
+
+    #[test]
+    fn full_scheme_parity_against_run_sim() {
+        // A real scheme end to end: outputs bit-identical, per-stage
+        // bytes and times exact, on flat and two-level topologies.
+        for machines in [3usize, 4] {
+            let inputs = random_uniform_inputs(0xe7e ^ machines as u64, machines, 2_000, 0.05);
+            let nnz = inputs[0].nnz().max(8);
+            for name in ["zen", "agsparse", "sparseps"] {
+                let scheme = schemes::by_name(name, machines, 0x7ace, nnz).unwrap();
+                let net = Network::new(machines, LinkKind::Tcp25);
+                let want = scheme.run_sim(&inputs, &net, &mut SyncScratch::new());
+                let mut ev = EventDriver::new(net);
+                let got = scheme
+                    .run(&inputs, &mut ev, &mut SyncScratch::new())
+                    .unwrap();
+                verify_outputs(&got, &inputs);
+                assert_eq!(got.outputs, want.outputs, "{name} n={machines}");
+                assert_eq!(
+                    got.report.stages.len(),
+                    want.report.stages.len(),
+                    "{name} n={machines}"
+                );
+                for (s, c) in want.report.stages.iter().zip(got.report.stages.iter()) {
+                    assert_eq!(s.sent, c.sent, "{name} n={machines} stage {}", s.name);
+                    assert_eq!(s.recv, c.recv, "{name} n={machines} stage {}", s.name);
+                    assert_eq!(s.time, c.time, "{name} n={machines} stage {}", s.name);
+                }
+                assert_eq!(ev.virtual_time(), want.report.comm_time(), "{name}");
+            }
+        }
+    }
+}

@@ -6,10 +6,13 @@
 //! moves the frames: [`TransportDriver`] loops over an in-process
 //! [`Transport`] ([`SimTransport`] charges virtual α–β time from the
 //! byte matrix it observes, [`ChannelTransport`] moves real encoded
-//! frames through mpsc channels), [`SocketDriver`] pumps a
-//! readiness-polled loopback socket mesh, and [`WorkerDriver`] runs one
-//! rank per OS process (`zen worker`). One protocol body, four data
-//! planes — per-stage byte parity across all of them is asserted by
+//! frames through mpsc channels), [`EventDriver`] schedules every frame
+//! on a single-threaded discrete-event heap (thousands of ranks, one
+//! thread), [`ThreadedDriver`] runs one OS thread per rank over
+//! in-process channels, [`SocketDriver`] pumps a readiness-polled
+//! loopback socket mesh, and [`WorkerDriver`] runs one rank per OS
+//! process (`zen worker`). One protocol body, six data planes —
+//! per-stage byte parity across all of them is asserted by
 //! `rust/tests/transport_parity.rs` and
 //! `rust/tests/driver_equivalence.rs`, which is what lets the repo keep
 //! a single source of truth for byte accounting.
@@ -19,8 +22,10 @@
 
 pub mod codec;
 pub mod driver;
+pub mod event;
 pub(crate) mod fabric;
 pub mod protocol;
+pub mod threaded;
 pub mod transport;
 
 pub use codec::{
@@ -28,6 +33,8 @@ pub use codec::{
     FrameRef, Message, WireError,
 };
 pub use driver::{make_driver, DriveOutcome, Driver, SocketDriver, TransportDriver, WorkerDriver};
+pub use event::{EventDriver, EventTotals};
 pub use fabric::Fabric;
 pub use protocol::{Event, Inbox, Protocol};
+pub use threaded::ThreadedDriver;
 pub use transport::{make_transport, ChannelTransport, SimTransport, Transport, TransportKind};

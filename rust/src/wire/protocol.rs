@@ -72,7 +72,12 @@ pub enum Event {
 /// may use it only transiently within a poll *or* through the per-rank
 /// slot convention (`scratch.partitions[rank]` belongs to machine
 /// `rank` for the whole sync).
-pub trait Protocol {
+///
+/// Machines are `Send`: a driver may move each machine onto its own OS
+/// thread ([`ThreadedDriver`](crate::wire::ThreadedDriver)) — the state
+/// a machine borrows from its scheme is shared read-only (`SyncScheme`
+/// is `Sync`), so the bound costs implementors nothing.
+pub trait Protocol: Send {
     /// The rank this machine plays.
     fn rank(&self) -> usize;
 

@@ -1,0 +1,297 @@
+//! Thread-per-rank driver: real concurrency, one OS thread per machine.
+//!
+//! [`ThreadedDriver`] is the in-process realization of "every rank is a
+//! real execution context": each [`Protocol`] machine runs on its own
+//! scoped OS thread, frames move through per-rank mpsc channels, and a
+//! coordinator (the calling thread) closes synchronous stages once all
+//! ranks park and every charged frame is delivered. It completes the
+//! PR-6 follow-on ("multi-threaded, one thread per rank, in-process
+//! driving") — and it is the honest wall-clock baseline the
+//! discrete-event [`EventDriver`](crate::wire::EventDriver) is
+//! benchmarked against (`examples/bench_simscale.rs`): simulation cost
+//! here scales with thread count, there with event count.
+//!
+//! Accounting is the shared [`StageAcc`] behind a mutex, so per-stage
+//! byte matrices and α–β stage times are identical to every other
+//! backend; outputs are bit-identical because machines consume frames
+//! through the per-source-FIFO [`Inbox`](crate::wire::Inbox) merge path
+//! and mpsc channels preserve per-sender order.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::codec::{Message, WireError};
+use super::driver::{consensus_stage, DriveOutcome, Driver};
+use super::protocol::{Event, Protocol};
+use super::transport::StageAcc;
+use crate::cluster::Network;
+use crate::schemes::SyncScratch;
+use crate::tensor::CooTensor;
+
+/// What a rank thread can find in its channel.
+enum RankMsg {
+    /// A frame from `src`.
+    Frame(usize, Message),
+    /// The named stage every rank parked on is closed.
+    Close(&'static str),
+    /// The drive is failing; unwind now.
+    Abort,
+}
+
+/// What rank threads report to the coordinator.
+enum CoordMsg {
+    Parked { rank: usize, name: &'static str },
+    Done { rank: usize, output: CooTensor },
+    Failed { err: WireError },
+}
+
+/// How long any wait (a parked rank, the coordinator, a frame-starved
+/// machine) may go without progress before the drive fails with
+/// [`WireError::Disconnected`].
+const DEFAULT_DEADLINE: Duration = Duration::from_secs(30);
+
+/// One OS thread per rank over in-process channels.
+pub struct ThreadedDriver {
+    net: Network,
+    deadline: Duration,
+}
+
+impl ThreadedDriver {
+    pub fn new(net: Network) -> ThreadedDriver {
+        ThreadedDriver {
+            net,
+            deadline: DEFAULT_DEADLINE,
+        }
+    }
+
+    /// Override the no-progress deadline (tests).
+    pub fn with_deadline(mut self, deadline: Duration) -> ThreadedDriver {
+        self.deadline = deadline;
+        self
+    }
+}
+
+/// One rank's thread body: poll the machine, move frames through the
+/// channels, park on stage boundaries until the coordinator closes
+/// them. Every blocking wait is bounded by `deadline`.
+fn rank_loop<'a>(
+    me: usize,
+    mut machine: Box<dyn Protocol + 'a>,
+    rx: &Receiver<RankMsg>,
+    txs: &[Sender<RankMsg>],
+    coord: &Sender<CoordMsg>,
+    acc: &Mutex<StageAcc>,
+    deadline: Duration,
+) -> Result<CooTensor, WireError> {
+    let mut scratch = SyncScratch::new();
+    loop {
+        match machine.poll(&mut scratch)? {
+            Event::Send { dst, msg } => {
+                {
+                    let mut a = acc.lock().unwrap();
+                    let frame = msg.as_frame();
+                    a.check_send(me, dst, &frame)?;
+                    let len = frame.encoded_len() as u64;
+                    // Charged before the channel send: the coordinator
+                    // treats in_flight == 0 as "all emitted frames
+                    // delivered", which holds only with this ordering.
+                    a.charge(me, dst, len);
+                }
+                txs.get(dst)
+                    .ok_or(WireError::Malformed("no stream for endpoint pair"))?
+                    .send(RankMsg::Frame(me, msg))
+                    .map_err(|_| WireError::Disconnected)?;
+            }
+            Event::NeedFrame { .. } => match rx.recv_timeout(deadline) {
+                Ok(RankMsg::Frame(src, msg)) => {
+                    machine.deliver(src, msg)?;
+                    acc.lock().unwrap().on_recv();
+                }
+                Ok(RankMsg::Close(_)) => {
+                    return Err(WireError::Malformed("stage closed under a waiting machine"))
+                }
+                Ok(RankMsg::Abort) | Err(_) => return Err(WireError::Disconnected),
+            },
+            Event::StageDone { name } => {
+                coord
+                    .send(CoordMsg::Parked { rank: me, name })
+                    .map_err(|_| WireError::Disconnected)?;
+                // Parked: keep draining arrivals (peers may still be
+                // emitting this stage's frames) until the close lands.
+                loop {
+                    match rx.recv_timeout(deadline) {
+                        Ok(RankMsg::Frame(src, msg)) => {
+                            machine.deliver(src, msg)?;
+                            acc.lock().unwrap().on_recv();
+                        }
+                        Ok(RankMsg::Close(closed)) => {
+                            machine.stage_closed(closed)?;
+                            break;
+                        }
+                        Ok(RankMsg::Abort) | Err(_) => return Err(WireError::Disconnected),
+                    }
+                }
+            }
+            Event::Complete(t) => return Ok(t),
+        }
+    }
+}
+
+impl Driver for ThreadedDriver {
+    fn endpoints(&self) -> usize {
+        self.net.endpoints
+    }
+
+    fn drive<'a>(
+        &mut self,
+        machines: Vec<Box<dyn Protocol + 'a>>,
+        _scratch: &mut SyncScratch,
+    ) -> Result<DriveOutcome, WireError> {
+        let n = machines.len();
+        if n != self.endpoints() {
+            return Err(WireError::Malformed("machine count != endpoints"));
+        }
+        let acc = Mutex::new(StageAcc::new(self.net.clone()));
+        let deadline = self.deadline;
+        let (coord_tx, coord_rx) = channel::<CoordMsg>();
+        let mut rank_txs: Vec<Sender<RankMsg>> = Vec::with_capacity(n);
+        let mut rank_rxs: Vec<Option<Receiver<RankMsg>>> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            rank_txs.push(tx);
+            rank_rxs.push(Some(rx));
+        }
+
+        let outs = std::thread::scope(|s| {
+            for (i, machine) in machines.into_iter().enumerate() {
+                let rx = rank_rxs[i].take().expect("receiver handed out once");
+                let txs = rank_txs.clone();
+                let coord = coord_tx.clone();
+                let acc = &acc;
+                s.spawn(move || {
+                    let msg = match rank_loop(i, machine, &rx, &txs, &coord, acc, deadline) {
+                        Ok(output) => CoordMsg::Done { rank: i, output },
+                        Err(err) => CoordMsg::Failed { err },
+                    };
+                    let _ = coord.send(msg);
+                });
+            }
+
+            // Coordinator: collect parks, close stages, collect outputs.
+            let mut done: Vec<Option<&'static str>> = (0..n).map(|_| None).collect();
+            let mut outs: Vec<Option<CooTensor>> = (0..n).map(|_| None).collect();
+            let mut finished = 0usize;
+            let mut failure: Option<WireError> = None;
+            while finished < n && failure.is_none() {
+                match coord_rx.recv_timeout(deadline) {
+                    Ok(CoordMsg::Parked { rank, name }) => done[rank] = Some(name),
+                    Ok(CoordMsg::Done { rank, output }) => {
+                        outs[rank] = Some(output);
+                        finished += 1;
+                    }
+                    Ok(CoordMsg::Failed { err }) => failure = Some(err),
+                    Err(_) => failure = Some(WireError::Disconnected),
+                }
+                let all_parked = (0..n).all(|i| outs[i].is_some() || done[i].is_some());
+                if failure.is_none() && finished < n && all_parked {
+                    // Every stage send was charged before its rank
+                    // parked; wait for the channels to drain so the
+                    // byte matrix is complete, then close.
+                    let drain = Instant::now();
+                    loop {
+                        if acc.lock().unwrap().in_flight() == 0 {
+                            break;
+                        }
+                        if drain.elapsed() > deadline {
+                            failure = Some(WireError::Disconnected);
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_micros(50));
+                    }
+                    if failure.is_none() {
+                        match consensus_stage(&done)
+                            .and_then(|name| acc.lock().unwrap().end_stage(name).map(|_| name))
+                        {
+                            Ok(name) => {
+                                for i in 0..n {
+                                    if done[i].take().is_some()
+                                        && rank_txs[i].send(RankMsg::Close(name)).is_err()
+                                    {
+                                        failure = Some(WireError::Disconnected);
+                                    }
+                                }
+                            }
+                            Err(e) => failure = Some(e),
+                        }
+                    }
+                }
+            }
+            if let Some(err) = failure {
+                // Unwind: wake every rank; scope join is bounded because
+                // every thread wait carries the deadline.
+                for tx in &rank_txs {
+                    let _ = tx.send(RankMsg::Abort);
+                }
+                return Err(err);
+            }
+            Ok(outs)
+        })?;
+
+        let report = acc.into_inner().unwrap().take_report();
+        Ok(DriveOutcome {
+            outputs: outs.into_iter().map(|o| o.unwrap()).collect(),
+            report,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::LinkKind;
+    use crate::schemes::{self, SyncScheme};
+    use crate::wire::transport::SimTransport;
+    use crate::wire::TransportDriver;
+    use crate::workload::random_uniform_inputs;
+
+    #[test]
+    fn threaded_driver_matches_sim_for_real_schemes() {
+        for machines in [2usize, 4] {
+            let inputs = random_uniform_inputs(0x7d ^ machines as u64, machines, 2_000, 0.05);
+            let nnz = inputs[0].nnz().max(8);
+            for name in ["zen", "dense", "sparseps"] {
+                let scheme = schemes::by_name(name, machines, 0x7ace, nnz).unwrap();
+                let net = Network::new(machines, LinkKind::Tcp25);
+                let mut sim = TransportDriver::new(Box::new(SimTransport::new(net.clone())));
+                let want = scheme
+                    .run(&inputs, &mut sim, &mut SyncScratch::new())
+                    .unwrap();
+                let mut th = ThreadedDriver::new(net);
+                let got = scheme
+                    .run(&inputs, &mut th, &mut SyncScratch::new())
+                    .unwrap();
+                assert_eq!(got.outputs, want.outputs, "{name} n={machines}");
+                assert_eq!(got.report.stages.len(), want.report.stages.len());
+                for (s, c) in want.report.stages.iter().zip(got.report.stages.iter()) {
+                    assert_eq!(s.name, c.name, "{name} n={machines}");
+                    assert_eq!(s.sent, c.sent, "{name} n={machines} stage {}", s.name);
+                    assert_eq!(s.recv, c.recv, "{name} n={machines} stage {}", s.name);
+                    assert_eq!(s.time, c.time, "{name} n={machines} stage {}", s.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn machine_count_mismatch_is_an_error() {
+        let net = Network::new(3, LinkKind::Tcp25);
+        let mut th = ThreadedDriver::new(net);
+        let scheme = schemes::by_name("dense", 2, 1, 8).unwrap();
+        let inputs = random_uniform_inputs(1, 2, 256, 0.1);
+        let err = scheme
+            .run(&inputs, &mut th, &mut SyncScratch::new())
+            .expect_err("2 machines on 3 endpoints");
+        assert!(matches!(err, WireError::Malformed(_)));
+    }
+}

@@ -52,16 +52,28 @@ pub enum TransportKind {
     /// ([`SocketDriver`](crate::wire::SocketDriver) — a driver-level
     /// backend, not a `Transport`).
     Socket,
+    /// Single-threaded discrete-event virtual time
+    /// ([`EventDriver`](crate::wire::EventDriver) — a driver-level
+    /// backend, not a `Transport`): every rank is an event endpoint on
+    /// one binary heap, so thousands of ranks simulate on one thread.
+    Event,
+    /// One OS thread per rank over in-process channels
+    /// ([`ThreadedDriver`](crate::wire::ThreadedDriver) — a driver-level
+    /// backend, not a `Transport`): the real-concurrency baseline the
+    /// event scheduler is benchmarked against.
+    Threaded,
 }
 
 impl TransportKind {
-    /// Parse a CLI name: `sim`, `channel`, `socket` (the historical
-    /// `tcp` spelling still parses).
+    /// Parse a CLI name: `sim`, `channel`, `socket`, `event`,
+    /// `threaded` (the historical `tcp` spelling still parses).
     pub fn parse(name: &str) -> Option<TransportKind> {
         Some(match name.to_ascii_lowercase().as_str() {
             "sim" | "virtual" => TransportKind::Sim,
             "channel" | "mpsc" | "fabric" => TransportKind::Channel,
             "socket" | "tcp" | "tcp-loopback" => TransportKind::Socket,
+            "event" | "des" | "event-sim" => TransportKind::Event,
+            "threaded" | "thread" | "thread-per-rank" => TransportKind::Threaded,
             _ => return None,
         })
     }
@@ -71,6 +83,8 @@ impl TransportKind {
             TransportKind::Sim => "sim",
             TransportKind::Channel => "channel",
             TransportKind::Socket => "socket",
+            TransportKind::Event => "event",
+            TransportKind::Threaded => "threaded",
         }
     }
 }
@@ -119,6 +133,12 @@ pub fn make_transport(kind: TransportKind, net: &Network) -> anyhow::Result<Box<
         TransportKind::Channel => Box::new(ChannelTransport::new(net.clone())),
         TransportKind::Socket => anyhow::bail!(
             "the socket backend is a driver, not a transport — use wire::make_driver"
+        ),
+        TransportKind::Event => anyhow::bail!(
+            "the event backend is a driver, not a transport — use wire::make_driver"
+        ),
+        TransportKind::Threaded => anyhow::bail!(
+            "the threaded backend is a driver, not a transport — use wire::make_driver"
         ),
     })
 }
@@ -200,14 +220,15 @@ impl StageAcc {
         self.on_recv();
     }
 
-    pub(crate) fn end_stage(&mut self, name: &str) -> Result<(), WireError> {
-        if self.in_flight != 0 {
-            return Err(WireError::Malformed("stage closed with undelivered frames"));
-        }
-        let n = self.net.endpoints;
-        let sent = std::mem::replace(&mut self.sent, vec![0; n]);
-        let recv = std::mem::replace(&mut self.recv, vec![0; n]);
-        let classes = LINK_CLASSES.map(|class| {
+    /// Frames charged but not yet delivered in the current stage.
+    pub(crate) fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Compute the per-class stage summaries from the current byte
+    /// matrices and zero the class matrices in place — allocation-free.
+    fn close_classes(&mut self) -> [ClassStage; 2] {
+        LINK_CLASSES.map(|class| {
             let c = class.idx();
             let busiest = self.class_sent[c]
                 .iter()
@@ -223,7 +244,20 @@ impl StageAcc {
             self.class_sent[c].iter_mut().for_each(|v| *v = 0);
             self.class_recv[c].iter_mut().for_each(|v| *v = 0);
             stage
-        });
+        })
+    }
+
+    /// Close the stage, appending a [`StageReport`]; returns the
+    /// stage's max-over-classes α–β time (the event driver advances its
+    /// virtual clock by exactly this number).
+    pub(crate) fn end_stage(&mut self, name: &str) -> Result<f64, WireError> {
+        if self.in_flight != 0 {
+            return Err(WireError::Malformed("stage closed with undelivered frames"));
+        }
+        let n = self.net.endpoints;
+        let sent = std::mem::replace(&mut self.sent, vec![0; n]);
+        let recv = std::mem::replace(&mut self.recv, vec![0; n]);
+        let classes = self.close_classes();
         let time = classes[0].time.max(classes[1].time);
         self.report.push(StageReport {
             name: name.to_string(),
@@ -232,7 +266,22 @@ impl StageAcc {
             time,
             classes,
         });
-        Ok(())
+        Ok(time)
+    }
+
+    /// Close a stage without materializing a [`StageReport`]: the class
+    /// summaries are returned by value and every matrix is zeroed in
+    /// place, so the call performs **zero heap allocations** — this is
+    /// what keeps the [`EventDriver`](crate::wire::EventDriver) totals
+    /// mode allocation-free per simulated iteration.
+    pub(crate) fn end_stage_lite(&mut self) -> Result<[ClassStage; 2], WireError> {
+        if self.in_flight != 0 {
+            return Err(WireError::Malformed("stage closed with undelivered frames"));
+        }
+        let classes = self.close_classes();
+        self.sent.iter_mut().for_each(|v| *v = 0);
+        self.recv.iter_mut().for_each(|v| *v = 0);
+        Ok(classes)
     }
 
     pub(crate) fn take_report(&mut self) -> CommReport {
@@ -299,7 +348,7 @@ impl Transport for SimTransport {
     }
 
     fn end_stage(&mut self, name: &str) -> Result<(), WireError> {
-        self.acc.end_stage(name)
+        self.acc.end_stage(name).map(|_| ())
     }
 
     fn take_report(&mut self) -> CommReport {
@@ -377,7 +426,7 @@ impl Transport for ChannelTransport {
     }
 
     fn end_stage(&mut self, name: &str) -> Result<(), WireError> {
-        self.acc.end_stage(name)
+        self.acc.end_stage(name).map(|_| ())
     }
 
     fn take_report(&mut self) -> CommReport {
@@ -465,11 +514,6 @@ mod tests {
             a.take_report().stages[0].sent,
             b.take_report().stages[0].sent
         );
-    }
-
-    #[test]
-    fn make_transport_refuses_the_socket_kind() {
-        assert!(make_transport(TransportKind::Socket, &net(2)).is_err());
     }
 
     #[test]
@@ -561,11 +605,24 @@ mod tests {
             TransportKind::Sim,
             TransportKind::Channel,
             TransportKind::Socket,
+            TransportKind::Event,
+            TransportKind::Threaded,
         ] {
             assert_eq!(TransportKind::parse(k.name()), Some(k));
         }
         // historical spelling still accepted
         assert_eq!(TransportKind::parse("tcp"), Some(TransportKind::Socket));
         assert_eq!(TransportKind::parse("carrier-pigeon"), None);
+    }
+
+    #[test]
+    fn make_transport_refuses_driver_level_kinds() {
+        for k in [
+            TransportKind::Socket,
+            TransportKind::Event,
+            TransportKind::Threaded,
+        ] {
+            assert!(make_transport(k, &net(2)).is_err(), "{}", k.name());
+        }
     }
 }

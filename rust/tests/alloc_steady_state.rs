@@ -4,20 +4,35 @@
 //! iteration — the measured compute charge then reflects the algorithm,
 //! not the allocator.
 //!
+//! PR 7 extends the gate to the discrete-event driver: after a warm-up
+//! drive, further simulated stages in totals-only mode must allocate
+//! nothing (pooled event slots, retained heap and horizon vectors,
+//! in-place stage accounting).
+//!
 //! Method: a counting `#[global_allocator]` wrapping the system
-//! allocator. This file holds exactly one `#[test]` so no sibling test
-//! thread can allocate concurrently and pollute the counter. The hasher
-//! runs on a single-worker pool: thread spawning allocates by design,
-//! and the scoped pool is PR-gated separately for correctness — the
-//! zero-allocation claim is about the algorithmic hot path.
+//! allocator. The tests in this file serialize on one mutex so no
+//! sibling test thread can allocate concurrently and pollute the
+//! counter. The hasher runs on a single-worker pool: thread spawning
+//! allocates by design, and the scoped pool is PR-gated separately for
+//! correctness — the zero-allocation claim is about the algorithmic hot
+//! path.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
+use zen::cluster::{LinkKind, Network};
 use zen::hashing::{HashBitmapCodec, HashBitmapPayload, HierarchicalHasher, PartitionScratch};
+use zen::schemes::SyncScratch;
 use zen::tensor::CooTensor;
 use zen::util::{Pcg64, ThreadPool};
-use zen::wire::{encode_pull_hash_bitmap, encode_push_coo};
+use zen::wire::{
+    encode_pull_hash_bitmap, encode_push_coo, Driver, Event, EventDriver, Message, Protocol,
+    WireError,
+};
+
+/// Serializes the tests: the allocation counter is process-global.
+static COUNTER_LOCK: Mutex<()> = Mutex::new(());
 
 struct CountingAlloc;
 
@@ -50,6 +65,7 @@ fn allocations() -> usize {
 
 #[test]
 fn partition_encode_decode_is_allocation_free_after_warmup() {
+    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     let n = 8;
     let dense_len = 100_000;
     let nnz = 6_000;
@@ -124,5 +140,111 @@ fn partition_encode_decode_is_allocation_free_after_warmup() {
         after - before,
         0,
         "partition→encode→decode steady state must not allocate"
+    );
+}
+
+// ---- event-driver steady state (PR 7) ------------------------------
+
+/// Barrier-frame toy protocol: each of `rounds` stages, every rank
+/// sends one empty COO frame (`CooTensor::empty` holds no heap memory)
+/// to the next rank, waits for one frame, parks. Exercises the full
+/// schedule → heap → deliver → stage-close loop without any payload
+/// allocations of its own.
+struct Pulse {
+    rank: usize,
+    n: usize,
+    rounds: usize,
+    round: usize,
+    sent: bool,
+    got: bool,
+}
+
+impl Pulse {
+    fn machines(n: usize, rounds: usize) -> Vec<Box<dyn Protocol>> {
+        (0..n)
+            .map(|rank| {
+                Box::new(Pulse {
+                    rank,
+                    n,
+                    rounds,
+                    round: 0,
+                    sent: false,
+                    got: false,
+                }) as Box<dyn Protocol>
+            })
+            .collect()
+    }
+}
+
+impl Protocol for Pulse {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn poll(&mut self, _scratch: &mut SyncScratch) -> Result<Event, WireError> {
+        if self.round == self.rounds {
+            return Ok(Event::Complete(CooTensor::empty(8)));
+        }
+        if !self.sent {
+            self.sent = true;
+            return Ok(Event::Send {
+                dst: (self.rank + 1) % self.n,
+                msg: Message::PushCoo {
+                    from: self.rank as u32,
+                    tensor: CooTensor::empty(8),
+                },
+            });
+        }
+        if !self.got {
+            return Ok(Event::NeedFrame {
+                src: (self.rank + self.n - 1) % self.n,
+            });
+        }
+        Ok(Event::StageDone { name: "pulse" })
+    }
+
+    fn deliver(&mut self, _src: usize, _msg: Message) -> Result<(), WireError> {
+        self.got = true;
+        Ok(())
+    }
+
+    fn stage_closed(&mut self, _name: &str) -> Result<(), WireError> {
+        self.round += 1;
+        self.sent = false;
+        self.got = false;
+        Ok(())
+    }
+}
+
+/// Allocations of one totals-only drive over `rounds` barrier stages
+/// (including boxing the machines — a per-drive constant).
+fn event_drive_allocs(rounds: usize) -> usize {
+    let n = 8;
+    let net = Network::new(n, LinkKind::Tcp25);
+    let mut drv = EventDriver::new(net).totals_only();
+    let mut scratch = SyncScratch::new();
+    let before = allocations();
+    let out = drv
+        .drive(Pulse::machines(n, rounds), &mut scratch)
+        .expect("pulse drive");
+    let after = allocations();
+    assert_eq!(out.outputs.len(), n);
+    assert_eq!(drv.totals().stages as usize, rounds);
+    assert_eq!(drv.events_processed() as usize, n * rounds);
+    assert!(drv.pool_high_water() <= n, "≤ one in-flight frame per rank");
+    after - before
+}
+
+#[test]
+fn event_driver_totals_mode_is_allocation_free_per_stage() {
+    let _guard = COUNTER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // Per-drive constants (machine boxes, first-round pool/heap growth)
+    // are identical for both drives, so 100 extra simulated stages must
+    // cost exactly zero additional allocations.
+    let short = event_drive_allocs(5);
+    let long = event_drive_allocs(105);
+    assert_eq!(
+        long, short,
+        "event-driver steady state must not allocate per stage"
     );
 }

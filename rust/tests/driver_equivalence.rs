@@ -1,9 +1,12 @@
 //! Driver-equivalence suite (PR 6 acceptance): the same sans-IO
 //! protocol machines must behave identically under every IO shell.
 //!
-//! 1. Every scheme × n ∈ {2, 3, 4, 5, 8} × {sim, channel, socket}:
-//!    per-stage sent/recv byte vectors equal across drivers, outputs
-//!    bit-identical, lossless schemes reference-exact.
+//! 1. Every scheme × n ∈ {2, 3, 4, 5, 8} × {sim, channel, event,
+//!    socket}: per-stage sent/recv byte vectors and α–β stage times
+//!    equal across drivers, outputs bit-identical, lossless schemes
+//!    reference-exact. The discrete-event driver additionally proves
+//!    its virtual clock equals the report's comm time in exact f64
+//!    arithmetic (PR 7 acceptance).
 //! 2. Two-process smoke: `zen worker --listen` / `--connect` in two OS
 //!    processes complete the sync, print equal output digests, and
 //!    report the same total bytes as the in-process run.
@@ -19,7 +22,7 @@ use zen::cluster::{LinkKind, Network};
 use zen::schemes::{self, SyncScheme, SyncScratch};
 use zen::tensor::CooTensor;
 use zen::util::Pcg64;
-use zen::wire::{make_driver, TransportKind};
+use zen::wire::{make_driver, EventDriver, TransportKind};
 use zen::workload::random_uniform_inputs as random_inputs;
 
 const ALL_SCHEMES: &[&str] = &[
@@ -49,7 +52,11 @@ fn equivalence_cell(name: &str, machines: usize, with_socket: bool) {
     let net = Network::new(machines, LinkKind::Tcp25);
     let ctx = format!("{name} m={machines}");
 
-    let mut kinds = vec![TransportKind::Sim, TransportKind::Channel];
+    let mut kinds = vec![
+        TransportKind::Sim,
+        TransportKind::Channel,
+        TransportKind::Event,
+    ];
     if with_socket {
         kinds.push(TransportKind::Socket);
     }
@@ -78,11 +85,34 @@ fn equivalence_cell(name: &str, machines: usize, with_socket: bool) {
                     assert_eq!(s.name, c.name, "{pair}: stage name");
                     assert_eq!(s.sent, c.sent, "{pair}: stage '{}' sent", s.name);
                     assert_eq!(s.recv, c.recv, "{pair}: stage '{}' recv", s.name);
+                    assert_eq!(s.time, c.time, "{pair}: stage '{}' time", s.name);
+                    assert_eq!(
+                        s.classes, c.classes,
+                        "{pair}: stage '{}' class split",
+                        s.name
+                    );
                 }
                 assert_eq!(base.outputs, got.outputs, "{pair}: outputs diverge");
             }
         }
     }
+
+    // The event driver's virtual clock is the sum of its stage charges —
+    // exactly the report's comm time, in the same f64 additions.
+    let mut ev = EventDriver::new(net.clone());
+    let got = scheme
+        .run(&inputs, &mut ev, &mut SyncScratch::new())
+        .unwrap_or_else(|e| panic!("{ctx}: event sync failed: {e}"));
+    assert_eq!(
+        ev.virtual_time(),
+        got.report.comm_time(),
+        "{ctx}: event virtual clock != report comm time"
+    );
+    assert_eq!(
+        baseline.as_ref().unwrap().1.outputs,
+        got.outputs,
+        "{ctx}: event outputs diverge from baseline"
+    );
 }
 
 #[test]

@@ -11,9 +11,10 @@
 
 use zen::cluster::{LinkKind, Network, Topology};
 use zen::planner::{plan_bucket, CostPlanner, MeasuredStats, PlanConfig, Planner};
-use zen::schemes::{self, SyncScheme, SyncScratch, PLANNER_CANDIDATES};
+use zen::schemes::{self, CommPattern, SyncScheme, SyncScratch, PLANNER_CANDIDATES};
 use zen::tensor::block::DEFAULT_BLOCK;
-use zen::workload::random_uniform_inputs;
+use zen::wire::EventDriver;
+use zen::workload::{group_clustered_inputs, random_uniform_inputs};
 
 /// Transport-observed comm time of one candidate on `inputs`.
 fn measured_time(name: &str, inputs: &[zen::tensor::CooTensor], net: &Network) -> f64 {
@@ -106,6 +107,100 @@ fn repeated_profiling_returns_identical_stats() {
     );
     assert_eq!(first.stats, a, "cached stats equal a fresh profile");
     assert_eq!(planner.profile_count(), 1, "no re-profiling at steady state");
+}
+
+#[test]
+fn plan_bucket_validates_at_large_n_on_parsed_topologies() {
+    // The planner's cost tables must stay finite and complete at event-
+    // driver scale: n ∈ {64, 256, 1024} ranks placed by parsed 3-tier
+    // (rank/node/fabric) topology specs.
+    let dense_len = 1 << 13;
+    let cfg = PlanConfig::default();
+    for (spec, machines) in [
+        ("8x8:2,300/50,25", 64usize),
+        ("16x16:2,300/50,25", 256),
+        ("32x32:2,300/50,25", 1024),
+    ] {
+        let topo = Topology::parse(spec, LinkKind::Tcp25).unwrap();
+        assert_eq!(topo.endpoints(), machines, "{spec}");
+        let inputs = random_uniform_inputs(0xb16 ^ machines as u64, machines, dense_len, 0.005);
+        let stats = MeasuredStats::from_tensors(&inputs, &[machines], &[DEFAULT_BLOCK]);
+        let plan = plan_bucket("cell", dense_len as f64, machines, &topo, &cfg, stats);
+        assert_eq!(
+            plan.costs.len(),
+            PLANNER_CANDIDATES.len(),
+            "{spec}: every candidate ranked"
+        );
+        assert!(
+            plan.costs.iter().all(|c| c.time.is_finite()),
+            "{spec}: finite costs"
+        );
+        assert!(
+            schemes::by_name(plan.chosen, machines, 0x5eed, 64).is_some(),
+            "{spec}: chosen scheme '{}' must construct at n={machines}",
+            plan.chosen
+        );
+    }
+}
+
+#[test]
+fn auto_at_1024_ranks_completes_on_the_event_driver() {
+    // PR 7 acceptance: `--scheme auto` at n = 1024 on a two-level
+    // 32×32 fabric with 10× slower inter-node links completes under
+    // the single-threaded event driver, and the placement flips the
+    // argmin to a hierarchical scheme where the flat mesh would not
+    // pick one (the n=8 flip of tests/topology_integration.rs, at
+    // event-driver scale).
+    let n = 1024usize;
+    let (nodes, ranks) = (32usize, 32usize);
+    let dense_len = 4096;
+    // Group-clustered sparsity aligned with the placement: one group
+    // per node.
+    let inputs = group_clustered_inputs(0x1024, nodes, ranks, dense_len, 0.005);
+    let two_level = Topology::parse("32x32:0,250/0,25", LinkKind::Tcp25).unwrap();
+    let flat = Topology::flat(n, LinkKind::Custom(25_000_000_000, 0));
+
+    let comm_pattern = |name: &str| {
+        schemes::by_name(name, n, 1, 64)
+            .unwrap_or_else(|| panic!("chosen scheme '{name}' must construct"))
+            .dims()
+            .communication
+    };
+    let flat_planner = CostPlanner::new(n, 0x5eed, 64, PlanConfig::default());
+    let flat_chosen = flat_planner
+        .plan("bucket", &inputs, &flat)
+        .plan
+        .unwrap()
+        .chosen;
+    let topo_planner = CostPlanner::new(n, 0x5eed, 64, PlanConfig::default());
+    let planned = topo_planner.plan("bucket", &inputs, &two_level);
+    let topo_chosen = planned.plan.as_ref().unwrap().chosen;
+    assert_ne!(
+        comm_pattern(flat_chosen),
+        CommPattern::Hierarchy,
+        "flat mesh must not pick a hierarchical scheme here (picked {flat_chosen})"
+    );
+    assert_eq!(
+        comm_pattern(topo_chosen),
+        CommPattern::Hierarchy,
+        "32x32 with 10x slower inter links must pick a hierarchical scheme \
+         (picked {topo_chosen}; flat picked {flat_chosen})"
+    );
+
+    // Execute the choice once at full scale, on one thread.
+    let net = Network::with_topology(two_level);
+    let mut drv = EventDriver::new(net);
+    let r = planned
+        .scheme
+        .run(&inputs, &mut drv, &mut SyncScratch::new())
+        .expect("1024-rank event-driver sync");
+    schemes::verify_outputs(&r, &inputs);
+    assert_eq!(
+        drv.virtual_time(),
+        r.report.comm_time(),
+        "event clock == report comm time at n=1024"
+    );
+    assert!(drv.events_processed() > 0);
 }
 
 #[test]
