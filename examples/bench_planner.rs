@@ -67,6 +67,7 @@ fn sim(
         bucket_bytes: 64 * 1024,
         dense_layers: 3,
         emb_shards: 4,
+        ..PipelineConfig::default()
     });
     SimDriver::new(cfg).expect("bench config").run()
 }

@@ -198,6 +198,15 @@ pub struct TimelineJob {
     pub duration: f64,
     /// Bytes this job puts on the network (reporting only).
     pub bytes: u64,
+    /// Forward-pass consumption rank (0 = needed first in the next
+    /// iteration's forward pass). Used by the priority schedulers to
+    /// break ties among simultaneously-ready jobs, and by
+    /// [`Timeline::forward_finish`] to order forward consumption.
+    pub priority: usize,
+    /// Forward-pass compute time (seconds) of the layers this job
+    /// carries — how long the next iteration's forward pass spends on
+    /// them once their gradients have arrived.
+    pub fwd_duration: f64,
 }
 
 /// One scheduled interval on the shared inter-machine link.
@@ -208,6 +217,10 @@ pub struct TimelineEntry {
     pub start: f64,
     pub finish: f64,
     pub bytes: u64,
+    /// Forward-consumption rank inherited from the job (0 = first).
+    pub priority: usize,
+    /// Forward-pass compute time inherited from the job.
+    pub fwd_duration: f64,
 }
 
 /// Virtual-time schedule of communication jobs overlapping one compute
@@ -235,6 +248,12 @@ pub struct ClassedJob {
     pub durations: [f64; 2],
     /// Bytes this job puts on the network (reporting only).
     pub bytes: u64,
+    /// Forward-pass consumption rank (0 = needed first); see
+    /// [`TimelineJob::priority`].
+    pub priority: usize,
+    /// Forward-pass compute time of the carried layers; see
+    /// [`TimelineJob::fwd_duration`].
+    pub fwd_duration: f64,
 }
 
 impl Timeline {
@@ -253,6 +272,57 @@ impl Timeline {
                 start,
                 finish,
                 bytes: job.bytes,
+                priority: job.priority,
+                fwd_duration: job.fwd_duration,
+            });
+        }
+        Timeline {
+            entries,
+            compute_time,
+        }
+    }
+
+    /// Priority (first-needed-first) schedule on the single shared
+    /// link: among the jobs that are ready, always transmit the one
+    /// whose layers the *next* iteration's forward pass consumes
+    /// earliest (lowest [`TimelineJob::priority`]), à la ByteScheduler.
+    /// Repeatedly picks the job minimizing the lexicographic key
+    /// `(feasible start, priority, submission index)` — so an idle link
+    /// never waits for a higher-priority job that is not ready yet
+    /// (work conservation: the busy periods, and hence the makespan,
+    /// match [`schedule`](Timeline::schedule) exactly when ready times
+    /// are monotone in submission order). The payoff is in
+    /// [`forward_finish`](Timeline::forward_finish): once a backlog
+    /// forms, the first-needed bucket jumps the queue and the next
+    /// forward pass stalls less.
+    pub fn schedule_priority(compute_time: f64, jobs: &[TimelineJob]) -> Timeline {
+        let mut entries = Vec::with_capacity(jobs.len());
+        let mut done = vec![false; jobs.len()];
+        let mut cursor = 0.0f64;
+        for _ in 0..jobs.len() {
+            let mut best: Option<(f64, usize, usize)> = None;
+            for (i, job) in jobs.iter().enumerate() {
+                if done[i] {
+                    continue;
+                }
+                let key = (job.ready.max(cursor), job.priority, i);
+                if best.is_none_or(|b| key < b) {
+                    best = Some(key);
+                }
+            }
+            let (start, _, i) = best.expect("one undone job must remain");
+            done[i] = true;
+            let job = &jobs[i];
+            let finish = start + job.duration;
+            cursor = finish;
+            entries.push(TimelineEntry {
+                label: job.label.clone(),
+                ready: job.ready,
+                start,
+                finish,
+                bytes: job.bytes,
+                priority: job.priority,
+                fwd_duration: job.fwd_duration,
             });
         }
         Timeline {
@@ -296,6 +366,66 @@ impl Timeline {
                 start,
                 finish,
                 bytes: job.bytes,
+                priority: job.priority,
+                fwd_duration: job.fwd_duration,
+            });
+        }
+        Timeline {
+            entries,
+            compute_time,
+        }
+    }
+
+    /// Priority schedule over per-class link resources — the classed
+    /// sibling of [`schedule_priority`](Timeline::schedule_priority).
+    /// A job's feasible start is the latest of its ready time and the
+    /// busy-until cursors of every class it occupies; among feasible
+    /// jobs the scheduler picks the lexicographic minimum of
+    /// `(feasible start, priority, submission index)`. Unlike the
+    /// single-link case, priority here can strictly shorten the
+    /// *makespan* too: serving the first-needed job first can hand an
+    /// intra-heavy and an inter-heavy job to disjoint links in an
+    /// order the FIFO schedule would have serialized.
+    pub fn schedule_classed_priority(compute_time: f64, jobs: &[ClassedJob]) -> Timeline {
+        let mut entries = Vec::with_capacity(jobs.len());
+        let mut done = vec![false; jobs.len()];
+        let mut cursors = [0.0f64; 2];
+        for _ in 0..jobs.len() {
+            let mut best: Option<(f64, usize, usize)> = None;
+            for (i, job) in jobs.iter().enumerate() {
+                if done[i] {
+                    continue;
+                }
+                let mut start = job.ready;
+                for c in LINK_CLASSES {
+                    if job.durations[c.idx()] > 0.0 {
+                        start = start.max(cursors[c.idx()]);
+                    }
+                }
+                let key = (start, job.priority, i);
+                if best.is_none_or(|b| key < b) {
+                    best = Some(key);
+                }
+            }
+            let (start, _, i) = best.expect("one undone job must remain");
+            done[i] = true;
+            let job = &jobs[i];
+            let mut finish = start;
+            for c in LINK_CLASSES {
+                let d = job.durations[c.idx()];
+                if d > 0.0 {
+                    cursors[c.idx()] = start + d;
+                    finish = finish.max(start + d);
+                }
+            }
+            entries.push(TimelineEntry {
+                label: job.label.clone(),
+                ready: job.ready,
+                start,
+                finish,
+                bytes: job.bytes,
+                priority: job.priority,
+                fwd_duration: job.fwd_duration,
             });
         }
         Timeline {
@@ -329,6 +459,26 @@ impl Timeline {
 
     pub fn total_bytes(&self) -> u64 {
         self.entries.iter().map(|e| e.bytes).sum()
+    }
+
+    /// Virtual time at which the *next* iteration's forward pass
+    /// completes. The forward pass starts when this iteration's
+    /// backward compute ends (`compute_time`), consumes layers in
+    /// ascending [`TimelineEntry::priority`] order, and spends each
+    /// entry's `fwd_duration` on its layers — but cannot touch a layer
+    /// before its synchronization `finish`es. This is the metric
+    /// priority scheduling actually improves: on a single link the
+    /// makespan is schedule-order-invariant (work conservation), but
+    /// draining the backlog first-needed-first lets the forward pass
+    /// start sooner.
+    pub fn forward_finish(&self) -> f64 {
+        let mut order: Vec<&TimelineEntry> = self.entries.iter().collect();
+        order.sort_by_key(|e| e.priority);
+        let mut t = self.compute_time;
+        for e in order {
+            t = t.max(e.finish) + e.fwd_duration;
+        }
+        t
     }
 }
 
@@ -390,6 +540,16 @@ mod tests {
             ready,
             duration,
             bytes: 100,
+            priority: 0,
+            fwd_duration: 0.0,
+        }
+    }
+
+    fn pjob(label: &str, ready: f64, duration: f64, priority: usize, fwd: f64) -> TimelineJob {
+        TimelineJob {
+            priority,
+            fwd_duration: fwd,
+            ..job(label, ready, duration)
         }
     }
 
@@ -435,6 +595,8 @@ mod tests {
             ready,
             durations,
             bytes: 100,
+            priority: 0,
+            fwd_duration: 0.0,
         }
     }
 
@@ -489,5 +651,118 @@ mod tests {
             &[cjob("both", 0.0, [0.5, 0.2]), cjob("intra", 0.0, [0.1, 0.0])],
         );
         assert!((t2.entries[1].start - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn priority_single_link_makespan_matches_greedy() {
+        // Monotone ready times (the backward pass emits buckets in
+        // order): both schedules are work-conserving on one link, so
+        // their busy periods — and the makespan — are identical even
+        // though the priority schedule transmits in a different order.
+        let jobs = [
+            pjob("mlp0", 0.2, 0.4, 3, 0.25),
+            pjob("mlp1", 0.4, 0.4, 2, 0.25),
+            pjob("mlp2", 0.6, 0.4, 1, 0.25),
+            pjob("emb", 0.8, 0.4, 0, 0.25),
+        ];
+        let greedy = Timeline::schedule(1.0, &jobs);
+        let prio = Timeline::schedule_priority(1.0, &jobs);
+        assert!((greedy.overlapped_time() - prio.overlapped_time()).abs() < 1e-12);
+        assert!((greedy.serialized_time() - prio.serialized_time()).abs() < 1e-12);
+        assert_eq!(greedy.total_bytes(), prio.total_bytes());
+    }
+
+    #[test]
+    fn priority_backlog_improves_forward_finish() {
+        // Backward completion order is the reverse of forward need:
+        // by the time the link drains the backlog, greedy sends the
+        // first-needed bucket (emb, priority 0) last, while the
+        // priority schedule jumps it to the front of the queue. Same
+        // makespan, strictly earlier next-iteration forward finish.
+        let jobs = [
+            pjob("mlp0", 0.2, 0.4, 3, 0.25),
+            pjob("mlp1", 0.4, 0.4, 2, 0.25),
+            pjob("mlp2", 0.6, 0.4, 1, 0.25),
+            pjob("emb", 0.8, 0.4, 0, 0.25),
+        ];
+        let greedy = Timeline::schedule(1.0, &jobs);
+        let prio = Timeline::schedule_priority(1.0, &jobs);
+        // greedy: emb finishes last at 1.8 → fwd = 1.8 + 4·0.25
+        assert!((greedy.forward_finish() - 2.8).abs() < 1e-12);
+        // priority: emb sent third (1.0–1.4), mlp1 absorbs the delay
+        assert!((prio.forward_finish() - 2.4).abs() < 1e-12);
+        assert!(prio.forward_finish() < greedy.forward_finish());
+    }
+
+    #[test]
+    fn priority_is_work_conserving() {
+        // The link never idles waiting for a higher-priority job that
+        // is not ready yet: the ready lower-priority job goes first.
+        let jobs = [pjob("low", 0.0, 0.5, 1, 0.0), pjob("high", 0.2, 0.1, 0, 0.0)];
+        let t = Timeline::schedule_priority(0.0, &jobs);
+        assert_eq!(t.entries[0].label, "low");
+        assert!((t.entries[1].start - 0.5).abs() < 1e-12);
+        assert!((t.overlapped_time() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn forward_finish_without_fwd_cost_is_overlapped_time() {
+        let jobs = [job("a", 0.5, 0.2), job("b", 1.0, 0.3)];
+        let t = Timeline::schedule(1.0, &jobs);
+        assert!((t.forward_finish() - t.overlapped_time()).abs() < 1e-12);
+        let empty = Timeline::schedule(0.7, &[]);
+        assert!((empty.forward_finish() - 0.7).abs() < 1e-12);
+    }
+
+    fn pcjob(label: &str, ready: f64, durations: [f64; 2], priority: usize) -> ClassedJob {
+        ClassedJob {
+            priority,
+            ..cjob(label, ready, durations)
+        }
+    }
+
+    #[test]
+    fn classed_priority_reduces_to_priority_on_inter_only_jobs() {
+        let jobs = [
+            pjob("a", 0.2, 0.4, 2, 0.1),
+            pjob("b", 0.3, 0.2, 0, 0.1),
+            pjob("c", 0.3, 0.3, 1, 0.1),
+        ];
+        let cjobs: Vec<ClassedJob> = jobs
+            .iter()
+            .map(|j| ClassedJob {
+                label: j.label.clone(),
+                ready: j.ready,
+                durations: [0.0, j.duration],
+                bytes: j.bytes,
+                priority: j.priority,
+                fwd_duration: j.fwd_duration,
+            })
+            .collect();
+        let flat = Timeline::schedule_priority(1.0, &jobs);
+        let classed = Timeline::schedule_classed_priority(1.0, &cjobs);
+        for (f, c) in flat.entries.iter().zip(classed.entries.iter()) {
+            assert_eq!(f.label, c.label);
+            assert_eq!(f.start, c.start, "{}", f.label);
+            assert_eq!(f.finish, c.finish, "{}", f.label);
+        }
+        assert_eq!(flat.forward_finish(), classed.forward_finish());
+    }
+
+    #[test]
+    fn classed_priority_can_beat_fifo_makespan() {
+        // FIFO head-of-line blocking across link classes: the
+        // both-class job queues behind the intra job AND delays the
+        // inter job. Serving first-needed-first hands the intra-only
+        // and inter-only jobs to their disjoint links immediately.
+        let jobs = [
+            pcjob("intra", 0.0, [0.5, 0.0], 2),
+            pcjob("both", 0.0, [0.4, 0.4], 1),
+            pcjob("inter", 0.0, [0.0, 0.5], 0),
+        ];
+        let fifo = Timeline::schedule_classed(0.0, &jobs);
+        let prio = Timeline::schedule_classed_priority(0.0, &jobs);
+        assert!((fifo.overlapped_time() - 1.4).abs() < 1e-12);
+        assert!((prio.overlapped_time() - 0.9).abs() < 1e-12);
     }
 }

@@ -46,6 +46,14 @@ pub struct PipelineConfig {
     pub dense_layers: usize,
     /// Contiguous row shards the embedding is split into.
     pub emb_shards: usize,
+    /// First-needed-first bucket scheduling
+    /// ([`EngineConfig::priority_schedule`]) — `zen sim
+    /// --priority-schedule`.
+    pub priority_schedule: bool,
+    /// Tensor-partitioning threshold in bytes at the scaled tensor size
+    /// ([`EngineConfig::partition_bytes`]); `usize::MAX` disables —
+    /// `zen sim --partition-threshold KB`.
+    pub partition_bytes: usize,
 }
 
 impl Default for PipelineConfig {
@@ -54,6 +62,8 @@ impl Default for PipelineConfig {
             bucket_bytes: 256 * 1024,
             dense_layers: 4,
             emb_shards: 8,
+            priority_schedule: false,
+            partition_bytes: usize::MAX,
         }
     }
 }
@@ -281,6 +291,11 @@ pub struct SimResult {
     /// Engine mode only: mean full-size iteration time with
     /// compute/communication overlap (the pipeline makespan + intra).
     pub engine_overlapped: Option<f64>,
+    /// Engine mode only: mean full-size virtual time at which the
+    /// *next* iteration's forward pass completes
+    /// ([`crate::cluster::Timeline::forward_finish`] + intra + MLP) —
+    /// the stall metric `--priority-schedule` improves.
+    pub engine_forward_finish: Option<f64>,
 }
 
 impl SimResult {
@@ -553,6 +568,7 @@ impl SimDriver {
             emb_sync_mean,
             engine_serialized: None,
             engine_overlapped: None,
+            engine_forward_finish: None,
         }
     }
 
@@ -568,12 +584,15 @@ impl SimDriver {
         let compute_time = compute_time_per_iter(self.cfg.profile.name);
         let engine = crate::engine::SyncEngine::new(
             crate::engine::EngineConfig::new(p.bucket_bytes, compute_time)
-                .with_transport(self.cfg.transport),
+                .with_transport(self.cfg.transport)
+                .with_priority(p.priority_schedule)
+                .with_partition_bytes(p.partition_bytes),
         );
 
         let mut emb_sync_times = Vec::with_capacity(self.cfg.iterations);
         let mut serialized = Vec::with_capacity(self.cfg.iterations);
         let mut overlapped = Vec::with_capacity(self.cfg.iterations);
+        let mut fwd_finishes = Vec::with_capacity(self.cfg.iterations);
         let mut plan: Vec<BucketPlanReport> = Vec::new();
         for it in 0..self.cfg.iterations as u64 {
             // Per-endpoint layer tensors. Flat path: aggregate each
@@ -637,6 +656,7 @@ impl SimDriver {
             emb_sync_times.push(comm_total);
             serialized.push(run.serialized_time);
             overlapped.push(run.overlapped_time);
+            fwd_finishes.push(run.forward_finish);
         }
 
         // With dense layers in the plan the engine synchronizes the MLP
@@ -655,6 +675,7 @@ impl SimDriver {
         let emb_sync_mean = mean(&emb_sync_times);
         let engine_serialized = intra_time + mlp_sync_time + mean(&serialized);
         let engine_overlapped = intra_time + mlp_sync_time + mean(&overlapped);
+        let engine_forward_finish = intra_time + mlp_sync_time + mean(&fwd_finishes);
         let throughput =
             (self.sample_gpus() * self.cfg.profile.batch_size) as f64 / engine_overlapped;
 
@@ -671,6 +692,7 @@ impl SimDriver {
             emb_sync_mean,
             engine_serialized: Some(engine_serialized),
             engine_overlapped: Some(engine_overlapped),
+            engine_forward_finish: Some(engine_forward_finish),
         }
     }
 }
@@ -760,6 +782,28 @@ mod tests {
         let r = SimDriver::new(cfg("zen", 4)).unwrap().run();
         assert!(r.engine_serialized.is_none());
         assert!(r.engine_overlapped.is_none());
+        assert!(r.engine_forward_finish.is_none());
+    }
+
+    #[test]
+    fn pipelined_priority_reports_forward_finish() {
+        // Priority scheduling + tensor partitioning through the full
+        // sim pipeline: runs clean and reports a forward-finish time at
+        // least as large as the overlapped makespan (the forward pass
+        // adds compute after the last needed sync).
+        let mut c = cfg("zen", 4);
+        c.iterations = 1;
+        c.pipeline = Some(PipelineConfig {
+            bucket_bytes: 64 * 1024,
+            dense_layers: 3,
+            emb_shards: 4,
+            priority_schedule: true,
+            partition_bytes: 32 * 1024,
+        });
+        let r = SimDriver::new(c).unwrap().run();
+        let over = r.engine_overlapped.expect("engine mode");
+        let fwd = r.engine_forward_finish.expect("engine mode");
+        assert!(fwd >= over - 1e-9, "forward finish {fwd} vs overlapped {over}");
     }
 
     fn pipelined_cfg(scheme: &str, machines: usize) -> SimConfig {
@@ -769,6 +813,7 @@ mod tests {
             bucket_bytes: 64 * 1024,
             dense_layers: 3,
             emb_shards: 4,
+            ..PipelineConfig::default()
         });
         c
     }
@@ -814,6 +859,7 @@ mod tests {
                 bucket_bytes: 64 * 1024,
                 dense_layers: 3,
                 emb_shards: 0,
+                ..PipelineConfig::default()
             })
             .build()
             .unwrap_err();
@@ -936,6 +982,7 @@ mod tests {
             bucket_bytes: 64 * 1024,
             dense_layers: 2,
             emb_shards: 3,
+            ..PipelineConfig::default()
         });
         let r = SimDriver::new(c).unwrap().run();
         assert!(r.engine_overlapped.unwrap() > 0.0);

@@ -27,6 +27,11 @@ pub struct Bucket {
     /// Fraction of backward compute done when the whole bucket is ready
     /// (the max over members = the last member, specs being ordered).
     pub ready_frac: f64,
+    /// Forward-consumption rank of the bucket: the minimum
+    /// [`LayerSpec::fwd_order`] over members — the bucket is needed as
+    /// soon as its earliest-forward layer is. 0 = needed first in the
+    /// next iteration's forward pass.
+    pub priority: usize,
 }
 
 impl Bucket {
@@ -51,10 +56,12 @@ pub fn plan_buckets(specs: &[LayerSpec], est_bytes: &[usize], bucket_bytes: usiz
     let mut offsets = Vec::new();
     let mut dense_len = 0usize;
     let mut est = 0usize;
+    let mut priority = usize::MAX;
     for (l, spec) in specs.iter().enumerate() {
         offsets.push(dense_len);
         dense_len += spec.params;
         est += est_bytes[l];
+        priority = priority.min(spec.fwd_order);
         if est >= bucket_bytes || l + 1 == specs.len() {
             buckets.push(Bucket {
                 layers: start..l + 1,
@@ -62,13 +69,78 @@ pub fn plan_buckets(specs: &[LayerSpec], est_bytes: &[usize], bucket_bytes: usiz
                 dense_len,
                 est_bytes: est,
                 ready_frac: spec.ready_frac,
+                priority,
             });
             start = l + 1;
             dense_len = 0;
             est = 0;
+            priority = usize::MAX;
         }
     }
     buckets
+}
+
+/// One independently schedulable slice of a bucket: the dense index
+/// range `lo..hi` of piece `piece` out of `pieces`. Oversized buckets
+/// are partitioned so a huge tensor does not monopolize the link
+/// (tensor partitioning à la ByteScheduler); every piece shares its
+/// bucket's ready time and forward priority, and the pieces' outputs
+/// are re-concatenated before layer splitting, so partitioning can
+/// never change synchronized values — only the timeline.
+#[derive(Clone, Debug)]
+pub struct BucketPiece {
+    /// Index into the bucket list.
+    pub bucket: usize,
+    /// This piece's ordinal within the bucket (0-based).
+    pub piece: usize,
+    /// Total pieces the bucket was split into (1 = not split).
+    pub pieces: usize,
+    /// Dense-range start within the bucket tensor (inclusive).
+    pub lo: u32,
+    /// Dense-range end within the bucket tensor (exclusive).
+    pub hi: u32,
+}
+
+impl BucketPiece {
+    /// `"label[piece/pieces]"` for split buckets, the plain bucket
+    /// label otherwise — keeps single-piece runs byte-identical to
+    /// the pre-partitioning engine output.
+    pub fn label(&self, bucket: &Bucket, specs: &[LayerSpec]) -> String {
+        let base = bucket.label(specs);
+        if self.pieces == 1 {
+            base
+        } else {
+            format!("{base}[{}/{}]", self.piece, self.pieces)
+        }
+    }
+}
+
+/// Split every bucket whose estimated payload exceeds
+/// `partition_bytes` into `ceil(est_bytes / partition_bytes)` equal
+/// dense-range pieces (capped at one piece per dense element). With
+/// `partition_bytes == usize::MAX` (the default) every bucket stays
+/// whole. Pieces are emitted in bucket order, then piece order — the
+/// same backward-completion order the scheduler's submission index
+/// ties break on.
+pub fn partition_pieces(buckets: &[Bucket], partition_bytes: usize) -> Vec<BucketPiece> {
+    let mut out = Vec::with_capacity(buckets.len());
+    for (bi, b) in buckets.iter().enumerate() {
+        let k = if b.est_bytes > partition_bytes {
+            crate::util::ceil_div(b.est_bytes, partition_bytes.max(1)).min(b.dense_len.max(1))
+        } else {
+            1
+        };
+        for p in 0..k {
+            out.push(BucketPiece {
+                bucket: bi,
+                piece: p,
+                pieces: k,
+                lo: (p * b.dense_len / k) as u32,
+                hi: ((p + 1) * b.dense_len / k) as u32,
+            });
+        }
+    }
+    out
 }
 
 /// Concatenate one machine's member-layer tensors into the bucket
@@ -112,6 +184,7 @@ mod tests {
             params,
             kind: LayerKind::Dense,
             ready_frac: frac,
+            fwd_order: 0,
         }
     }
 
@@ -185,6 +258,68 @@ mod tests {
         assert_eq!(cat.indices, vec![2, 9, 10, 29]);
         let back = split_layers(&b[0], &s, &cat);
         assert_eq!(back, layers);
+    }
+
+    #[test]
+    fn bucket_priority_is_min_member_fwd_order() {
+        // Backward order a, b, c; forward needs c first (fwd_order 0).
+        let mut s = specs3();
+        s[0].fwd_order = 2;
+        s[1].fwd_order = 1;
+        s[2].fwd_order = 0;
+        let b = plan_buckets(&s, &[80, 160, 40], 200);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0].priority, 1, "min over members a,b");
+        assert_eq!(b[1].priority, 0);
+        let single = plan_buckets(&s, &[80, 160, 40], usize::MAX);
+        assert_eq!(single[0].priority, 0);
+    }
+
+    #[test]
+    fn max_threshold_keeps_buckets_whole() {
+        let s = specs3();
+        let b = plan_buckets(&s, &[80, 160, 40], usize::MAX);
+        let pieces = partition_pieces(&b, usize::MAX);
+        assert_eq!(pieces.len(), 1);
+        assert_eq!(pieces[0].pieces, 1);
+        assert_eq!((pieces[0].lo, pieces[0].hi), (0, 35));
+        assert_eq!(pieces[0].label(&b[0], &s), b[0].label(&s));
+    }
+
+    #[test]
+    fn partition_splits_oversized_buckets_evenly() {
+        let s = specs3();
+        let b = plan_buckets(&s, &[80, 160, 40], usize::MAX);
+        assert_eq!(b[0].est_bytes, 280);
+        // 280 bytes over a 100-byte threshold → ceil(280/100) = 3 pieces
+        let pieces = partition_pieces(&b, 100);
+        assert_eq!(pieces.len(), 3);
+        // pieces tile 0..35 contiguously without gaps or overlap
+        assert_eq!(pieces[0].lo, 0);
+        assert_eq!(pieces.last().unwrap().hi, 35);
+        for w in pieces.windows(2) {
+            assert_eq!(w[0].hi, w[1].lo);
+        }
+        for (p, pc) in pieces.iter().enumerate() {
+            assert_eq!(pc.bucket, 0);
+            assert_eq!(pc.piece, p);
+            assert_eq!(pc.pieces, 3);
+            assert!(pc.lo < pc.hi, "no empty pieces at this size");
+        }
+        assert_eq!(pieces[1].label(&b[0], &s), "a..c[1/3]");
+    }
+
+    #[test]
+    fn partition_caps_pieces_at_dense_len() {
+        // A 5-element bucket with a huge payload estimate cannot split
+        // into more than 5 pieces.
+        let s = vec![spec("t", 5, 1.0)];
+        let b = plan_buckets(&s, &[10_000], usize::MAX);
+        let pieces = partition_pieces(&b, 1);
+        assert_eq!(pieces.len(), 5);
+        for (p, pc) in pieces.iter().enumerate() {
+            assert_eq!((pc.lo, pc.hi), (p as u32, p as u32 + 1));
+        }
     }
 
     #[test]

@@ -39,7 +39,7 @@
 
 pub mod bucket;
 
-pub use bucket::{plan_buckets, Bucket};
+pub use bucket::{partition_pieces, plan_buckets, Bucket, BucketPiece};
 
 use crate::cluster::{ClassedJob, CommReport, Network, Timeline, TimelineJob};
 use crate::planner::Planner;
@@ -66,6 +66,23 @@ pub struct EngineConfig {
     /// driver opens a fresh mesh per bucket, so prefer the flat
     /// (`SimDriver`) path for socket runs.
     pub transport: TransportKind,
+    /// First-needed-first link scheduling (ByteScheduler-style): when a
+    /// backlog of ready buckets forms, transmit the one the *next*
+    /// iteration's forward pass consumes earliest instead of FIFO
+    /// backward order. Never changes synchronized values or (single
+    /// link) the makespan — it improves [`EngineRun::forward_finish`].
+    pub priority_schedule: bool,
+    /// Tensor-partitioning threshold in estimated wire bytes: a bucket
+    /// whose payload estimate exceeds this splits into
+    /// `ceil(est / partition_bytes)` independently scheduled pieces so
+    /// one huge tensor cannot monopolize the link. `usize::MAX`
+    /// (default) disables partitioning.
+    pub partition_bytes: usize,
+    /// Modeled forward-pass time of the *next* iteration (virtual
+    /// seconds), distributed over buckets by parameter share; feeds
+    /// [`crate::cluster::Timeline::forward_finish`]. Defaults to
+    /// `compute_time / 2` (backward ≈ 2× forward).
+    pub forward_time: f64,
 }
 
 impl EngineConfig {
@@ -75,6 +92,9 @@ impl EngineConfig {
             bucket_bytes,
             compute_time,
             transport: TransportKind::Sim,
+            priority_schedule: false,
+            partition_bytes: usize::MAX,
+            forward_time: compute_time * 0.5,
         }
     }
 
@@ -89,6 +109,25 @@ impl EngineConfig {
         self.transport = transport;
         self
     }
+
+    /// Enable/disable first-needed-first scheduling (builder style).
+    pub fn with_priority(mut self, priority_schedule: bool) -> Self {
+        self.priority_schedule = priority_schedule;
+        self
+    }
+
+    /// Set the tensor-partitioning threshold (builder style).
+    pub fn with_partition_bytes(mut self, partition_bytes: usize) -> Self {
+        self.partition_bytes = partition_bytes;
+        self
+    }
+
+    /// Set the modeled next-iteration forward time (builder style).
+    pub fn with_forward_time(mut self, forward_time: f64) -> Self {
+        assert!(forward_time.is_finite() && forward_time >= 0.0);
+        self.forward_time = forward_time;
+        self
+    }
 }
 
 /// Validating builder for [`EngineConfig`]: all checks run at
@@ -99,6 +138,10 @@ pub struct EngineConfigBuilder {
     bucket_bytes: usize,
     compute_time: f64,
     transport: TransportKind,
+    priority_schedule: bool,
+    partition_bytes: usize,
+    /// `None` → derive `compute_time / 2` at build time.
+    forward_time: Option<f64>,
 }
 
 impl Default for EngineConfigBuilder {
@@ -107,6 +150,9 @@ impl Default for EngineConfigBuilder {
             bucket_bytes: usize::MAX,
             compute_time: 0.0,
             transport: TransportKind::Sim,
+            priority_schedule: false,
+            partition_bytes: usize::MAX,
+            forward_time: None,
         }
     }
 }
@@ -130,6 +176,25 @@ impl EngineConfigBuilder {
         self
     }
 
+    /// First-needed-first link scheduling.
+    pub fn priority_schedule(mut self, enabled: bool) -> Self {
+        self.priority_schedule = enabled;
+        self
+    }
+
+    /// Tensor-partitioning threshold in estimated wire bytes.
+    pub fn partition_bytes(mut self, bytes: usize) -> Self {
+        self.partition_bytes = bytes;
+        self
+    }
+
+    /// Modeled next-iteration forward time (virtual seconds); unset →
+    /// `compute_time / 2`.
+    pub fn forward_time(mut self, seconds: f64) -> Self {
+        self.forward_time = Some(seconds);
+        self
+    }
+
     pub fn build(self) -> Result<EngineConfig, String> {
         let mut problems = Vec::new();
         if !self.compute_time.is_finite() || self.compute_time < 0.0 {
@@ -138,6 +203,11 @@ impl EngineConfigBuilder {
                 self.compute_time
             ));
         }
+        if let Some(fwd) = self.forward_time {
+            if !fwd.is_finite() || fwd < 0.0 {
+                problems.push(format!("forward_time must be finite and >= 0, got {fwd}"));
+            }
+        }
         if !problems.is_empty() {
             return Err(problems.join("; "));
         }
@@ -145,6 +215,9 @@ impl EngineConfigBuilder {
             bucket_bytes: self.bucket_bytes,
             compute_time: self.compute_time,
             transport: self.transport,
+            priority_schedule: self.priority_schedule,
+            partition_bytes: self.partition_bytes,
+            forward_time: self.forward_time.unwrap_or(self.compute_time * 0.5),
         })
     }
 }
@@ -205,6 +278,10 @@ pub struct EngineRun {
     pub layer_outputs: Vec<CooTensor>,
     /// Wall-clock seconds the engine spent executing bucket syncs.
     pub wall_time: f64,
+    /// Virtual time at which the *next* iteration's forward pass
+    /// completes ([`Timeline::forward_finish`]) — the metric priority
+    /// scheduling improves when the makespan cannot move.
+    pub forward_finish: f64,
 }
 
 impl EngineRun {
@@ -334,23 +411,48 @@ impl SyncEngine {
             }
         };
 
-        // Plan and synchronize every bucket, concurrently. The planner
-        // sees each bucket's actual per-machine tensors (cost planners
+        // Tensor partitioning: oversized buckets split into
+        // independently scheduled dense-range pieces; with the default
+        // `partition_bytes == usize::MAX` every bucket is one piece and
+        // this whole layer is the identity.
+        let pieces = bucket::partition_pieces(&buckets, self.cfg.partition_bytes);
+        let total_params: usize = buckets.iter().map(|b| b.dense_len).sum();
+
+        // Concatenate each machine's member layers once per bucket
+        // (sequential — cheap next to the syncs); pieces slice these.
+        let bucket_inputs: Vec<Vec<CooTensor>> = buckets
+            .iter()
+            .map(|b| {
+                per_worker_layers
+                    .iter()
+                    .map(|w| bucket::concat_layers(b, w))
+                    .collect()
+            })
+            .collect();
+
+        // Plan and synchronize every piece, concurrently. The planner
+        // sees each piece's actual per-machine tensors (cost planners
         // measure them; cached plans make that O(warm-up)); each
-        // in-flight bucket runs over its own transport instance of the
+        // in-flight piece runs over its own transport instance of the
         // configured backend (transports are single-sync state).
         let sw = crate::util::Stopwatch::start();
         type Synced = (
-            Bucket,
+            BucketPiece,
             crate::planner::PlannedSync,
             crate::schemes::SyncOutput,
         );
-        let synced: Vec<Synced> = self.pool.map(buckets, |b| {
-            let inputs: Vec<CooTensor> = per_worker_layers
-                .iter()
-                .map(|w| bucket::concat_layers(&b, w))
-                .collect();
-            let planned = planner.plan(&b.label(specs), &inputs, &net.topo);
+        let synced: Vec<Synced> = self.pool.map(pieces, |pc| {
+            let b = &buckets[pc.bucket];
+            let inputs: Vec<CooTensor> = if pc.pieces == 1 {
+                bucket_inputs[pc.bucket].clone()
+            } else {
+                bucket_inputs[pc.bucket]
+                    .iter()
+                    .map(|t| t.slice_range(pc.lo, pc.hi))
+                    .collect()
+            };
+            let label = pc.label(b, specs);
+            let planned = planner.plan(&label, &inputs, &net.topo);
             let mut scratch = self.scratch.acquire();
             let mut driver =
                 crate::wire::make_driver(self.cfg.transport, net).expect("engine driver setup");
@@ -363,12 +465,11 @@ impl SyncEngine {
                 .run(&inputs, driver.as_mut(), &mut scratch)
                 .unwrap_or_else(|e| {
                     panic!(
-                        "bucket '{}' sync failed on the {} data plane: {e}",
-                        b.label(specs),
+                        "bucket '{label}' sync failed on the {} data plane: {e}",
                         self.cfg.transport.name()
                     )
                 });
-            (b, planned, result)
+            (pc, planned, result)
         });
         let wall_time = sw.elapsed();
 
@@ -380,42 +481,52 @@ impl SyncEngine {
         let mut outcomes = Vec::with_capacity(synced.len());
         let mut jobs = Vec::with_capacity(synced.len());
         let mut classed_jobs = Vec::with_capacity(if classed { synced.len() } else { 0 });
-        let mut layer_outputs: Vec<Option<CooTensor>> = vec![None; specs.len()];
+        let mut piece_outs: Vec<Vec<(u32, CooTensor)>> = vec![Vec::new(); buckets.len()];
         let mut total_bytes = 0u64;
-        for (b, planned, result) in synced {
-            let comm_time = time_of(&result.report);
-            let bytes = result.report.total_bytes();
+        for (pc, planned, result) in synced {
+            let b = &buckets[pc.bucket];
+            let crate::schemes::SyncOutput { outputs, report } = result;
+            let comm_time = time_of(&report);
+            let bytes = report.total_bytes();
             total_bytes += bytes;
-            let label = b.label(specs);
+            let label = pc.label(b, specs);
+            // Next-forward compute share of this piece's parameters —
+            // what forward_finish charges once the piece has synced.
+            let fwd_duration = if total_params == 0 {
+                0.0
+            } else {
+                self.cfg.forward_time * (pc.hi - pc.lo) as f64 / total_params as f64
+            };
             jobs.push(TimelineJob {
                 label: label.clone(),
                 ready: self.cfg.compute_time * b.ready_frac,
                 duration: comm_time,
                 bytes,
+                priority: b.priority,
+                fwd_duration,
             });
             if classed {
                 // Split the (possibly `time_of`-rescaled) duration over
                 // the link classes in the report's own proportions so
                 // the classed schedule and the caller's rescaling agree.
-                let raw = result.report.comm_time();
+                let raw = report.comm_time();
                 let scale = if raw > 0.0 { comm_time / raw } else { 0.0 };
-                let per_class = result.report.time_by_class();
+                let per_class = report.time_by_class();
                 classed_jobs.push(ClassedJob {
                     label: label.clone(),
                     ready: self.cfg.compute_time * b.ready_frac,
                     durations: [per_class[0] * scale, per_class[1] * scale],
                     bytes,
+                    priority: b.priority,
+                    fwd_duration,
                 });
             }
-            // Every endpoint holds the same aggregate; unbucket machine
-            // 0's copy back into per-layer outputs.
-            for (l, t) in b
-                .layers
-                .clone()
-                .zip(bucket::split_layers(&b, specs, &result.outputs[0]))
-            {
-                layer_outputs[l] = Some(t);
-            }
+            // Every endpoint holds the same aggregate; keep machine 0's
+            // copy for reassembly into per-layer outputs below.
+            piece_outs[pc.bucket].push((
+                pc.lo,
+                outputs.into_iter().next().expect("scheme output per machine"),
+            ));
             outcomes.push(BucketOutcome {
                 label,
                 layers: b.layers.clone(),
@@ -425,17 +536,34 @@ impl SyncEngine {
                 replanned: planned.replanned,
                 bytes,
                 comm_time,
-                raw_comm_time: result.report.comm_time(),
-                report: result.report,
+                raw_comm_time: report.comm_time(),
+                report,
             });
         }
-        let timeline = if classed {
-            Timeline::schedule_classed(self.cfg.compute_time, &classed_jobs)
-        } else {
-            Timeline::schedule(self.cfg.compute_time, &jobs)
+
+        // Reassemble each bucket's aggregate from its pieces (identity
+        // for unsplit buckets) and unbucket into per-layer outputs.
+        let mut layer_outputs: Vec<Option<CooTensor>> = vec![None; specs.len()];
+        for (b, parts) in buckets.iter().zip(piece_outs) {
+            let full = if parts.len() == 1 {
+                parts.into_iter().next().unwrap().1
+            } else {
+                CooTensor::concat_ranges(&parts, b.dense_len)
+            };
+            for (l, t) in b.layers.clone().zip(bucket::split_layers(b, specs, &full)) {
+                layer_outputs[l] = Some(t);
+            }
+        }
+
+        let timeline = match (classed, self.cfg.priority_schedule) {
+            (true, true) => Timeline::schedule_classed_priority(self.cfg.compute_time, &classed_jobs),
+            (true, false) => Timeline::schedule_classed(self.cfg.compute_time, &classed_jobs),
+            (false, true) => Timeline::schedule_priority(self.cfg.compute_time, &jobs),
+            (false, false) => Timeline::schedule(self.cfg.compute_time, &jobs),
         };
         let serialized_time = timeline.serialized_time();
         let overlapped_time = timeline.overlapped_time();
+        let forward_finish = timeline.forward_finish();
 
         EngineRun {
             buckets: outcomes,
@@ -445,6 +573,7 @@ impl SyncEngine {
             total_bytes,
             layer_outputs: layer_outputs.into_iter().map(|t| t.unwrap()).collect(),
             wall_time,
+            forward_finish,
         }
     }
 }
@@ -674,5 +803,67 @@ mod tests {
             .entries
             .windows(2)
             .all(|w| w[0].ready <= w[1].ready));
+    }
+
+    #[test]
+    fn partitioned_pieces_aggregate_exactly() {
+        // Split oversized buckets into pieces: the synchronized values
+        // must be identical to the unsplit run, piece by piece
+        // reassembled — partitioning only changes the timeline.
+        let gen = small_gen();
+        let specs = gen.layer_specs(3, 4);
+        let layers = gen.layer_iteration_all(&specs, 0, 4);
+        let planner = fixed("zen", 4, gen.expected_nnz().max(64));
+        let net = Network::new(4, LinkKind::Tcp25);
+        let whole = SyncEngine::new(EngineConfig::new(64 * 1024, 0.05)).run(
+            &specs,
+            &layers,
+            &planner,
+            &net,
+            |r| r.comm_time(),
+        );
+        let split_cfg = EngineConfig::new(64 * 1024, 0.05).with_partition_bytes(8 * 1024);
+        let split =
+            SyncEngine::new(split_cfg).run(&specs, &layers, &planner, &net, |r| r.comm_time());
+        assert!(
+            split.buckets.len() > whole.buckets.len(),
+            "want actual splitting: {} pieces vs {} buckets",
+            split.buckets.len(),
+            whole.buckets.len()
+        );
+        assert_eq!(whole.layer_outputs, split.layer_outputs);
+        verify_layer_outputs(&split, &layers);
+        // piece labels carry the [i/k] suffix
+        assert!(split.buckets.iter().any(|b| b.label.contains('[')));
+    }
+
+    #[test]
+    fn priority_schedule_preserves_values_and_timing_bounds() {
+        // Priority scheduling reorders link access only: identical
+        // synchronized values, identical serialized time and bytes,
+        // identical single-link makespan (work conservation), and a
+        // next-forward finish no later than greedy's.
+        let gen = small_gen();
+        let specs = gen.layer_specs(3, 4);
+        let layers = gen.layer_iteration_all(&specs, 0, 4);
+        let planner = fixed("zen", 4, gen.expected_nnz().max(64));
+        let net = Network::new(4, LinkKind::Tcp25);
+        let greedy = SyncEngine::new(EngineConfig::new(16 * 1024, 0.05)).run(
+            &specs,
+            &layers,
+            &planner,
+            &net,
+            |r| r.comm_time(),
+        );
+        let prio_cfg = EngineConfig::new(16 * 1024, 0.05).with_priority(true);
+        let prio =
+            SyncEngine::new(prio_cfg).run(&specs, &layers, &planner, &net, |r| r.comm_time());
+        assert!(greedy.buckets.len() >= 2, "want a multi-bucket workload");
+        assert_eq!(greedy.layer_outputs, prio.layer_outputs);
+        assert_eq!(greedy.total_bytes, prio.total_bytes);
+        assert!((greedy.serialized_time - prio.serialized_time).abs() < 1e-12);
+        assert!((greedy.overlapped_time - prio.overlapped_time).abs() < 1e-9);
+        assert!(prio.forward_finish <= greedy.forward_finish + 1e-9);
+        verify_layer_outputs(&prio, &layers);
     }
 }

@@ -73,9 +73,7 @@ impl<'a> HashBitmapCodec<'a> {
         // Both `t.indices` and `domain` are sorted: linear merge.
         let mut d = 0usize;
         for (&idx, &v) in t.indices.iter().zip(t.values.iter()) {
-            while d < self.domain.len() && self.domain[d] < idx {
-                d += 1;
-            }
+            d = crate::kernel::active::domain_rank(self.domain, d, idx);
             assert!(
                 d < self.domain.len() && self.domain[d] == idx,
                 "index {idx} not in partition domain — h0 mismatch between \

@@ -247,11 +247,16 @@ impl HierarchicalHasher {
         // pass). Carrying the value keeps phase 2 entirely inside the
         // L2-sized shard — no random loads from the big tensor arrays.
         let h0 = self.family.partitioner(self.n);
-        for (&idx, &val) in t.indices.iter().zip(t.values.iter()) {
-            let shard = &mut scratch.shards[h0.partition(idx)];
-            shard.bucket_idx.push(idx);
-            shard.bucket_val.push(val);
-        }
+        let shards = &mut scratch.shards;
+        crate::kernel::active::partition_scatter(
+            |idx| h0.partition(idx),
+            &t.indices,
+            &t.values,
+            |p, idx, val| {
+                shards[p].bucket_idx.push(idx);
+                shards[p].bucket_val.push(val);
+            },
+        );
 
         // Phase 2: per-shard probing; shards are independent.
         let (k, r1, r2) = (self.k, self.r1, self.r2);

@@ -1,0 +1,194 @@
+//! Chunked (`u64x8`-style) kernels — the default implementations.
+//!
+//! Each kernel processes fixed [`LANES`]-wide blocks through
+//! `chunks_exact`, with a scalar epilogue for the unaligned tail. The
+//! block bodies are written so LLVM can vectorize them: no
+//! loop-carried dependency inside a block (per-lane partial
+//! accumulators, batched hash computation, split sub-histograms) and
+//! branch-free lane operations. Integer reductions are reassociated
+//! across lanes — which is exact — and floating-point arithmetic is
+//! never reassociated, so every kernel is bit-for-bit identical to its
+//! [`super::scalar`] fallback (pinned by `tests/kernel_parity.rs`).
+//! No kernel allocates: temporaries are fixed-size stack arrays.
+
+use super::LANES;
+
+/// Bitwise OR of `src` into `dst` in 8-word blocks (bitmap set union).
+/// Panics if the word counts differ.
+pub fn or_words(dst: &mut [u64], src: &[u64]) {
+    assert_eq!(dst.len(), src.len());
+    let mut d = dst.chunks_exact_mut(LANES);
+    let mut s = src.chunks_exact(LANES);
+    for (db, sb) in (&mut d).zip(&mut s) {
+        for k in 0..LANES {
+            db[k] |= sb[k];
+        }
+    }
+    for (a, b) in d.into_remainder().iter_mut().zip(s.remainder().iter()) {
+        *a |= *b;
+    }
+}
+
+/// Population count of the word-wise AND, with per-lane partial counts
+/// summed at the end (integer reassociation — exact). Panics if the
+/// word counts differ.
+pub fn and_count_words(a: &[u64], b: &[u64]) -> usize {
+    assert_eq!(a.len(), b.len());
+    let mut lanes = [0usize; LANES];
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for (ab, bb) in (&mut ac).zip(&mut bc) {
+        for k in 0..LANES {
+            lanes[k] += (ab[k] & bb[k]).count_ones() as usize;
+        }
+    }
+    let mut total: usize = lanes.iter().sum();
+    for (x, y) in ac.remainder().iter().zip(bc.remainder().iter()) {
+        total += (x & y).count_ones() as usize;
+    }
+    total
+}
+
+/// Total population count, accumulated per lane.
+pub fn count_ones_words(words: &[u64]) -> usize {
+    let mut lanes = [0usize; LANES];
+    let mut c = words.chunks_exact(LANES);
+    for block in &mut c {
+        for k in 0..LANES {
+            lanes[k] += block[k].count_ones() as usize;
+        }
+    }
+    let mut total: usize = lanes.iter().sum();
+    for w in c.remainder() {
+        total += w.count_ones() as usize;
+    }
+    total
+}
+
+/// Linear merge of two strictly-ascending (index, value) sequences with
+/// a bulk-run fast path: whenever the next [`LANES`] keys of one side
+/// all precede the other side's head key, they are copied in one
+/// `extend_from_slice` instead of eight compare-branch iterations —
+/// the common shape when worker supports barely overlap (low-density
+/// gradients). Interleaved and equal-key regions fall back to the
+/// scalar step, so output order and float summation order are exactly
+/// the scalar kernel's. Appends into caller-reserved buffers.
+pub fn merge_sorted(
+    a_idx: &[u32],
+    a_val: &[f32],
+    b_idx: &[u32],
+    b_val: &[f32],
+    out_idx: &mut Vec<u32>,
+    out_val: &mut Vec<f32>,
+) {
+    debug_assert_eq!(a_idx.len(), a_val.len());
+    debug_assert_eq!(b_idx.len(), b_val.len());
+    let (na, nb) = (a_idx.len(), b_idx.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < na && j < nb {
+        if i + LANES <= na && a_idx[i + LANES - 1] < b_idx[j] {
+            out_idx.extend_from_slice(&a_idx[i..i + LANES]);
+            out_val.extend_from_slice(&a_val[i..i + LANES]);
+            i += LANES;
+            continue;
+        }
+        if j + LANES <= nb && b_idx[j + LANES - 1] < a_idx[i] {
+            out_idx.extend_from_slice(&b_idx[j..j + LANES]);
+            out_val.extend_from_slice(&b_val[j..j + LANES]);
+            j += LANES;
+            continue;
+        }
+        match a_idx[i].cmp(&b_idx[j]) {
+            std::cmp::Ordering::Less => {
+                out_idx.push(a_idx[i]);
+                out_val.push(a_val[i]);
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                out_idx.push(b_idx[j]);
+                out_val.push(b_val[j]);
+                j += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                out_idx.push(a_idx[i]);
+                out_val.push(a_val[i] + b_val[j]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    out_idx.extend_from_slice(&a_idx[i..]);
+    out_val.extend_from_slice(&a_val[i..]);
+    out_idx.extend_from_slice(&b_idx[j..]);
+    out_val.extend_from_slice(&b_val[j..]);
+}
+
+/// Sub-tables of the split radix histogram: four independent 256-entry
+/// tallies (4 KiB of stack) so consecutive keys hitting the same digit
+/// don't serialize on one counter's store-to-load dependency.
+const HIST_SPLIT: usize = 4;
+
+/// One radix counting pass: overwrite `counts` with the tally of
+/// `(key >> shift) & 0xFF` over all keys, accumulated in [`HIST_SPLIT`]
+/// independent sub-tables and summed per digit (integer reassociation —
+/// exact). The caller does not need to zero `counts` first.
+pub fn histogram_u8(keys: &[u32], shift: u32, counts: &mut [u32; 256]) {
+    let mut sub = [[0u32; 256]; HIST_SPLIT];
+    let mut blocks = keys.chunks_exact(HIST_SPLIT);
+    for block in &mut blocks {
+        for (t, &k) in sub.iter_mut().zip(block.iter()) {
+            t[((k >> shift) & 0xFF) as usize] += 1;
+        }
+    }
+    for &k in blocks.remainder() {
+        sub[0][((k >> shift) & 0xFF) as usize] += 1;
+    }
+    for (digit, c) in counts.iter_mut().enumerate() {
+        *c = sub[0][digit] + sub[1][digit] + sub[2][digit] + sub[3][digit];
+    }
+}
+
+/// Advance a cursor through a strictly-ascending `domain` to the first
+/// position whose entry is `>= idx`, skipping [`LANES`] entries per
+/// probe while the block's last key still precedes `idx` — one branch
+/// per eight domain entries on the long gaps between sparse non-zeros
+/// — then stepping the final block scalar-wise. Domain monotonicity
+/// makes the skip exact: if `domain[d + LANES - 1] < idx`, every entry
+/// of the block is `< idx`.
+pub fn domain_rank(domain: &[u32], start: usize, idx: u32) -> usize {
+    let mut d = start;
+    while d + LANES <= domain.len() && domain[d + LANES - 1] < idx {
+        d += LANES;
+    }
+    while d < domain.len() && domain[d] < idx {
+        d += 1;
+    }
+    d
+}
+
+/// Hash-partition scatter: partition ids are computed [`LANES`] at a
+/// time into a stack block — eight independent hash evaluations with no
+/// interleaved stores, which unrolls and pipelines — before the sink
+/// consumes the block in order. Visit order is exactly the input order,
+/// matching the scalar kernel.
+pub fn partition_scatter<P, F>(pid: P, indices: &[u32], values: &[f32], mut sink: F)
+where
+    P: Fn(u32) -> usize,
+    F: FnMut(usize, u32, f32),
+{
+    debug_assert_eq!(indices.len(), values.len());
+    let mut ic = indices.chunks_exact(LANES);
+    let mut vc = values.chunks_exact(LANES);
+    for (ib, vb) in (&mut ic).zip(&mut vc) {
+        let mut pids = [0usize; LANES];
+        for (p, &idx) in pids.iter_mut().zip(ib.iter()) {
+            *p = pid(idx);
+        }
+        for k in 0..LANES {
+            sink(pids[k], ib[k], vb[k]);
+        }
+    }
+    for (&idx, &val) in ic.remainder().iter().zip(vc.remainder().iter()) {
+        sink(pid(idx), idx, val);
+    }
+}

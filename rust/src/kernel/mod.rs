@@ -1,0 +1,45 @@
+//! Vectorized inner-loop kernels with scalar fallbacks.
+//!
+//! The sparse hot paths — bitmap union, sorted COO merge, the radix
+//! histogram, the hash-partition scatter, and the domain-rank scan of
+//! the hash-bitmap encoder — all reduce to a handful of tight loops
+//! over flat arrays. This module hoists those loops out of their call
+//! sites into named kernels with two interchangeable implementations:
+//!
+//! - [`scalar`]: the straightforward element-at-a-time loops (the
+//!   pre-PR-8 code, kept verbatim as the semantic ground truth);
+//! - [`chunked`]: explicit `u64x8`-style chunked forms — fixed-width
+//!   [`LANES`]-element blocks over `chunks_exact`, per-lane partial
+//!   accumulators, bulk-run fast paths, and split sub-histograms — the
+//!   shapes LLVM reliably auto-vectorizes and pipelines on stable Rust
+//!   (no `std::simd` dependency).
+//!
+//! **Selection is at compile time**: [`active`] aliases [`chunked`] by
+//! default and [`scalar`] under the `scalar_kernels` Cargo feature.
+//! Both modules are always compiled, so `tests/kernel_parity.rs` can
+//! compare them function-by-function regardless of which one the rest
+//! of the crate runs on.
+//!
+//! **Contract** (pinned by the parity suite): every chunked kernel is
+//! bit-for-bit identical to its scalar fallback on all inputs — same
+//! outputs, same visit order for callback kernels, same panics. The
+//! chunked forms only ever reassociate *integer* reductions (bit
+//! counts, histogram tallies), never floating-point arithmetic, so the
+//! guarantee is exact, not approximate. All kernels are
+//! allocation-free: temporaries are fixed-size stack arrays, and
+//! `Vec`-filling kernels only `extend` into caller-reserved buffers —
+//! the scratch-arena zero-allocation tests cover them unchanged.
+
+pub mod chunked;
+pub mod scalar;
+
+/// Chunk width of the vectorized kernels: eight 64-bit lanes (a 512-bit
+/// block — one AVX-512 register, two NEON/SSE pairs), matching the
+/// `u64x8` shape the chunked forms are written around.
+pub const LANES: usize = 8;
+
+#[cfg(feature = "scalar_kernels")]
+pub use scalar as active;
+
+#[cfg(not(feature = "scalar_kernels"))]
+pub use chunked as active;

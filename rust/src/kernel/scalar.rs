@@ -1,0 +1,107 @@
+//! Scalar fallback kernels — the element-at-a-time ground truth.
+//!
+//! These are the loops the hot paths ran before the kernel layer
+//! existed, moved here verbatim. [`super::chunked`] must match them
+//! bit-for-bit (`tests/kernel_parity.rs`); select them crate-wide with
+//! the `scalar_kernels` Cargo feature.
+
+/// Bitwise OR of `src` into `dst`, word by word (bitmap set union).
+/// Panics if the word counts differ.
+pub fn or_words(dst: &mut [u64], src: &[u64]) {
+    assert_eq!(dst.len(), src.len());
+    for (a, b) in dst.iter_mut().zip(src.iter()) {
+        *a |= *b;
+    }
+}
+
+/// Population count of the word-wise AND (bitmap overlap cardinality).
+/// Panics if the word counts differ.
+pub fn and_count_words(a: &[u64], b: &[u64]) -> usize {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| (x & y).count_ones() as usize)
+        .sum()
+}
+
+/// Total population count of a word array.
+pub fn count_ones_words(words: &[u64]) -> usize {
+    words.iter().map(|w| w.count_ones() as usize).sum()
+}
+
+/// Linear merge of two strictly-ascending (index, value) sequences into
+/// caller-owned output buffers; values at equal indices are summed.
+/// Appends (never clears) — the caller reserves capacity, so with
+/// warmed buffers this performs no allocation.
+pub fn merge_sorted(
+    a_idx: &[u32],
+    a_val: &[f32],
+    b_idx: &[u32],
+    b_val: &[f32],
+    out_idx: &mut Vec<u32>,
+    out_val: &mut Vec<f32>,
+) {
+    debug_assert_eq!(a_idx.len(), a_val.len());
+    debug_assert_eq!(b_idx.len(), b_val.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a_idx.len() && j < b_idx.len() {
+        match a_idx[i].cmp(&b_idx[j]) {
+            std::cmp::Ordering::Less => {
+                out_idx.push(a_idx[i]);
+                out_val.push(a_val[i]);
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                out_idx.push(b_idx[j]);
+                out_val.push(b_val[j]);
+                j += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                out_idx.push(a_idx[i]);
+                out_val.push(a_val[i] + b_val[j]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    out_idx.extend_from_slice(&a_idx[i..]);
+    out_val.extend_from_slice(&a_val[i..]);
+    out_idx.extend_from_slice(&b_idx[j..]);
+    out_val.extend_from_slice(&b_val[j..]);
+}
+
+/// One radix counting pass: overwrite `counts` with the tally of
+/// `(key >> shift) & 0xFF` over all keys. The caller does not need to
+/// zero `counts` first.
+pub fn histogram_u8(keys: &[u32], shift: u32, counts: &mut [u32; 256]) {
+    counts.fill(0);
+    for &k in keys {
+        counts[((k >> shift) & 0xFF) as usize] += 1;
+    }
+}
+
+/// Advance a cursor through a strictly-ascending `domain` from `start`
+/// to the first position whose entry is `>= idx` (or `domain.len()`).
+/// The hash-bitmap encoder's domain-merge step: successive calls with
+/// ascending `idx` make one linear scan overall.
+pub fn domain_rank(domain: &[u32], start: usize, idx: u32) -> usize {
+    let mut d = start;
+    while d < domain.len() && domain[d] < idx {
+        d += 1;
+    }
+    d
+}
+
+/// Hash-partition scatter (Algorithm 1 phase 1): visit every
+/// (index, value) pair in order with its partition id `pid(index)`.
+/// The sink sees pairs in exactly the input order.
+pub fn partition_scatter<P, F>(pid: P, indices: &[u32], values: &[f32], mut sink: F)
+where
+    P: Fn(u32) -> usize,
+    F: FnMut(usize, u32, f32),
+{
+    debug_assert_eq!(indices.len(), values.len());
+    for (&idx, &val) in indices.iter().zip(values.iter()) {
+        sink(pid(idx), idx, val);
+    }
+}

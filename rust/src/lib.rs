@@ -24,6 +24,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod figures;
 pub mod hashing;
+pub mod kernel;
 pub mod planner;
 pub mod runtime;
 pub mod schemes;

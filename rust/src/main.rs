@@ -11,6 +11,7 @@
 //!   zen sim --model DeepFM --machines 16 --scheme auto --pipeline
 //!   zen sim --model DeepFM --scheme auto --topology 4x2:2,300/50,25
 //!   zen sim --model LSTM --machines 16 --scheme zen --pipeline --bucket-kb 256
+//!   zen sim --model LSTM --scheme zen --pipeline --priority-schedule --partition-threshold 128
 //!   zen sim --model DeepFM --machines 8 --scheme zen --transport channel
 //!   zen sim --model DeepFM --machines 4 --gpus 1 --scale 2048 --transport socket
 //!   zen sim --machines 1024 --gpus 1 --transport event --topology 32x32 --scheme auto
@@ -54,6 +55,8 @@ fn main() -> anyhow::Result<()> {
                          --link tcp25|rdma100 --transport sim|channel|socket|event|threaded\n\
                          --topology NxG[:ia,ib/ea,eb] (two-level cluster)\n\
                          --replan-threshold R (auto hysteresis, default 0.25)\n\
+                         --pipeline --bucket-kb N --priority-schedule (first-needed-first)\n\
+                         --partition-threshold KB (split oversized buckets; 0 = off)\n\
                  train:  --shape tiny|paper_100m --workers N --scheme S|auto --steps N\n\
                          --transport sim|channel|socket|event|threaded --topology NxG\n\
                          --replan-threshold R\n\
@@ -184,17 +187,31 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
         Some(v) => !matches!(v.to_ascii_lowercase().as_str(), "false" | "0" | "no" | "off"),
         None => {
             args.has_flag("pipeline")
-                || ["bucket-kb", "dense-layers", "emb-shards"]
+                || args.has_flag("priority-schedule")
+                || ["bucket-kb", "dense-layers", "emb-shards", "partition-threshold"]
                     .iter()
                     .any(|k| args.get(k).is_some())
         }
     };
     if pipeline_requested {
         let d = PipelineConfig::default();
+        // `--priority-schedule` may arrive bare or as `=<bool>`.
+        let priority_schedule = match args.get("priority-schedule") {
+            Some(v) => !matches!(v.to_ascii_lowercase().as_str(), "false" | "0" | "no" | "off"),
+            None => args.has_flag("priority-schedule"),
+        };
+        // `--partition-threshold KB`; 0 (the default) disables.
+        let partition_kb = args.get_usize("partition-threshold", 0);
         cfg.pipeline = Some(PipelineConfig {
             bucket_bytes: args.get_usize("bucket-kb", d.bucket_bytes / 1024) * 1024,
             dense_layers: args.get_usize("dense-layers", d.dense_layers),
             emb_shards: args.get_usize("emb-shards", d.emb_shards),
+            priority_schedule,
+            partition_bytes: if partition_kb == 0 {
+                usize::MAX
+            } else {
+                partition_kb * 1024
+            },
         });
     }
     let r = SimDriver::new(cfg.clone())?.run();
@@ -231,8 +248,12 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
         );
     }
     if let (Some(ser), Some(over)) = (r.engine_serialized, r.engine_overlapped) {
+        let fwd = r
+            .engine_forward_finish
+            .map(|f| format!("  fwd-finish {:.2}ms", f * 1e3))
+            .unwrap_or_default();
         println!(
-            "  pipeline: serialized {:.2}ms  overlapped {:.2}ms  ({:.2}x from overlap)",
+            "  pipeline: serialized {:.2}ms  overlapped {:.2}ms  ({:.2}x from overlap){fwd}",
             ser * 1e3,
             over * 1e3,
             ser / over

@@ -227,23 +227,6 @@ pub trait SyncScheme: Send + Sync {
         self.run(inputs, &mut driver, scratch)
             .expect("virtual-time sync failed (scheme protocol bug)")
     }
-
-    /// Synchronize with throwaway scratch over the simulator.
-    #[deprecated(since = "0.6.0", note = "use run (explicit driver) or run_sim")]
-    fn sync(&self, inputs: &[CooTensor], net: &Network) -> SyncOutput {
-        self.run_sim(inputs, net, &mut SyncScratch::new())
-    }
-
-    /// Synchronize over the simulator with caller-provided scratch.
-    #[deprecated(since = "0.6.0", note = "use run (explicit driver) or run_sim")]
-    fn sync_with(
-        &self,
-        inputs: &[CooTensor],
-        net: &Network,
-        scratch: &mut SyncScratch,
-    ) -> SyncOutput {
-        self.run_sim(inputs, net, scratch)
-    }
 }
 
 /// Reference aggregation: dense element-wise sum of all inputs.

@@ -89,7 +89,7 @@ impl Bitmap {
 
     /// Number of set bits.
     pub fn count_ones(&self) -> usize {
-        self.words.iter().map(|w| w.count_ones() as usize).sum()
+        crate::kernel::active::count_ones_words(&self.words)
     }
 
     /// Positions of set bits, ascending (word-level scan, not bit loop).
@@ -117,19 +117,13 @@ impl Bitmap {
     /// Bitwise OR (set union) with another bitmap of equal length.
     pub fn or_assign(&mut self, other: &Bitmap) {
         assert_eq!(self.len, other.len);
-        for (a, b) in self.words.iter_mut().zip(other.words.iter()) {
-            *a |= *b;
-        }
+        crate::kernel::active::or_words(&mut self.words, &other.words);
     }
 
     /// Bitwise AND count — fast overlap cardinality for Definition 3.
     pub fn and_count(&self, other: &Bitmap) -> usize {
         assert_eq!(self.len, other.len);
-        self.words
-            .iter()
-            .zip(other.words.iter())
-            .map(|(a, b)| (a & b).count_ones() as usize)
-            .sum()
+        crate::kernel::active::and_count_words(&self.words, &other.words)
     }
 }
 

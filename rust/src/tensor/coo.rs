@@ -257,31 +257,7 @@ pub fn merge_into(a: CooSlice<'_>, b: CooSlice<'_>, indices: &mut Vec<u32>, valu
     values.clear();
     indices.reserve(a.nnz() + b.nnz());
     values.reserve(a.nnz() + b.nnz());
-    let (mut i, mut j) = (0usize, 0usize);
-    while i < a.nnz() && j < b.nnz() {
-        match a.indices[i].cmp(&b.indices[j]) {
-            std::cmp::Ordering::Less => {
-                indices.push(a.indices[i]);
-                values.push(a.values[i]);
-                i += 1;
-            }
-            std::cmp::Ordering::Greater => {
-                indices.push(b.indices[j]);
-                values.push(b.values[j]);
-                j += 1;
-            }
-            std::cmp::Ordering::Equal => {
-                indices.push(a.indices[i]);
-                values.push(a.values[i] + b.values[j]);
-                i += 1;
-                j += 1;
-            }
-        }
-    }
-    indices.extend_from_slice(&a.indices[i..]);
-    values.extend_from_slice(&a.values[i..]);
-    indices.extend_from_slice(&b.indices[j..]);
-    values.extend_from_slice(&b.values[j..]);
+    crate::kernel::active::merge_sorted(a.indices, a.values, b.indices, b.values, indices, values);
 }
 
 #[cfg(test)]

@@ -57,10 +57,8 @@ pub fn radix_sort_pairs_with(keys: &mut Vec<u32>, vals: &mut Vec<f32>, scratch: 
     // One pass per byte, least-significant first.
     for pass in 0..4 {
         let shift = pass * RADIX_BITS;
-        scratch.counts.fill(0);
-        for &k in keys.iter() {
-            scratch.counts[((k >> shift) & MASK) as usize] += 1;
-        }
+        let counts: &mut [u32; BUCKETS] = (&mut scratch.counts[..BUCKETS]).try_into().unwrap();
+        crate::kernel::active::histogram_u8(keys, shift as u32, counts);
         // skip a pass whose keys are all in one bucket
         if scratch.counts.iter().any(|&c| c as usize == n) {
             continue;

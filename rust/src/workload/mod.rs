@@ -119,6 +119,14 @@ pub struct LayerSpec {
     /// Fraction of backward compute done when this gradient is ready,
     /// in (0, 1]; monotone non-decreasing across the spec list.
     pub ready_frac: f64,
+    /// Consumption rank in the *next* iteration's forward pass
+    /// (0 = needed first). The forward pass walks input → output, the
+    /// exact reverse of backward-completion order: the embedding (input
+    /// layer, last gradient out) is the first parameter the next
+    /// forward touches. Priority scheduling
+    /// ([`crate::cluster::Timeline::schedule_priority`]) transmits
+    /// low-`fwd_order` buckets first when a backlog forms.
+    pub fwd_order: usize,
 }
 
 /// Deterministic sparse-gradient generator for one model profile.
@@ -215,6 +223,9 @@ impl GradientGen {
                 params: hi - lo,
                 kind: LayerKind::Dense,
                 ready_frac: (i + 1) as f64 / total as f64,
+                // forward consumption is the reverse of backward
+                // completion: mlp0 (nearest the output) is needed last
+                fwd_order: total - 1 - i,
             });
         }
         let rows = self.profile.rows;
@@ -226,6 +237,9 @@ impl GradientGen {
                 params: (row_hi - row_lo) * self.profile.dim,
                 kind: LayerKind::EmbeddingShard { row_lo, row_hi },
                 ready_frac: (dense_layers + s + 1) as f64 / total as f64,
+                // the embedding is the input layer: last gradient to
+                // complete, first parameter the next forward reads
+                fwd_order: total - 1 - (dense_layers + s),
             });
         }
         specs

@@ -21,6 +21,7 @@ fn spec(name: &str, params: usize, frac: f64) -> LayerSpec {
         params,
         kind: LayerKind::Dense,
         ready_frac: frac,
+        fwd_order: 0,
     }
 }
 
@@ -127,6 +128,89 @@ fn threshold_smaller_than_one_layer_degenerates_to_per_layer() {
     assert_eq!(run.buckets.len(), specs.len(), "one bucket per layer");
     verify_layer_outputs(&run, &layers);
     check_all_schemes(machines, &specs, &layers, 1);
+}
+
+#[test]
+fn priority_schedule_never_changes_synced_values() {
+    // Priority scheduling (and tensor partitioning) reorder *when*
+    // buckets transmit, never *what* they carry: layer outputs, bytes,
+    // and serialized time must be identical with the flag on or off,
+    // and the priority run's forward-finish must never be worse.
+    let specs = vec![
+        spec("emb", 2_000, 0.25),
+        spec("mlp0", 900, 0.5),
+        spec("mlp1", 900, 0.75),
+        spec("head", 400, 1.0),
+    ];
+    let machines = 4;
+    let layers = random_layers(7, machines, &specs);
+    let net = Network::new(machines, LinkKind::Tcp25);
+    let planner = fixed("zen", machines, 0x55, 512);
+
+    let greedy = SyncEngine::new(EngineConfig::new(2_048, 0.05)).run(
+        &specs,
+        &layers,
+        &planner,
+        &net,
+        |r| r.comm_time(),
+    );
+    let prio = SyncEngine::new(EngineConfig::new(2_048, 0.05).with_priority(true)).run(
+        &specs,
+        &layers,
+        &planner,
+        &net,
+        |r| r.comm_time(),
+    );
+
+    verify_layer_outputs(&greedy, &layers);
+    verify_layer_outputs(&prio, &layers);
+    assert_eq!(greedy.layer_outputs.len(), prio.layer_outputs.len());
+    for (l, (g, p)) in greedy
+        .layer_outputs
+        .iter()
+        .zip(prio.layer_outputs.iter())
+        .enumerate()
+    {
+        assert_eq!(g.indices, p.indices, "layer {l} indices");
+        let gb: Vec<u32> = g.values.iter().map(|v| v.to_bits()).collect();
+        let pb: Vec<u32> = p.values.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(gb, pb, "layer {l} values");
+    }
+    assert_eq!(greedy.total_bytes, prio.total_bytes, "bytes on the wire");
+    assert!(
+        (greedy.serialized_time - prio.serialized_time).abs() < 1e-9,
+        "serialized time: greedy {} vs priority {}",
+        greedy.serialized_time,
+        prio.serialized_time
+    );
+    assert!(
+        prio.forward_finish <= greedy.forward_finish + 1e-9,
+        "priority forward-finish {} must not exceed greedy {}",
+        prio.forward_finish,
+        greedy.forward_finish
+    );
+
+    // Partitioning on top of priority still reproduces the exact same
+    // aggregated values (timing/bytes may differ: each piece pays its
+    // own wire framing).
+    let split = SyncEngine::new(
+        EngineConfig::new(2_048, 0.05)
+            .with_priority(true)
+            .with_partition_bytes(1_024),
+    )
+    .run(&specs, &layers, &planner, &net, |r| r.comm_time());
+    verify_layer_outputs(&split, &layers);
+    for (l, (g, s)) in greedy
+        .layer_outputs
+        .iter()
+        .zip(split.layer_outputs.iter())
+        .enumerate()
+    {
+        assert_eq!(g.indices, s.indices, "split layer {l} indices");
+        let gb: Vec<u32> = g.values.iter().map(|v| v.to_bits()).collect();
+        let sb: Vec<u32> = s.values.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(gb, sb, "split layer {l} values");
+    }
 }
 
 #[test]

@@ -1,0 +1,238 @@
+//! Scalar ↔ chunked kernel parity: every `zen::kernel::chunked` kernel
+//! must be **bit-for-bit identical** to its `zen::kernel::scalar`
+//! ground truth — not approximately equal. The chunked forms only
+//! reassociate integer reductions (exact) and copy float runs verbatim,
+//! so any divergence is a bug, and this suite compares the two
+//! implementations directly (both are always compiled, regardless of
+//! which one the `scalar_kernels` feature wires into the hot paths).
+//!
+//! Shapes exercised per kernel: empty, single element, block-aligned,
+//! unaligned tails (every length around the 8-lane boundary), and
+//! maximum density (all-ones bitmaps, fully-overlapping merges), at
+//! worker counts n ∈ {2, 4, 8, 16} for the n-way merge.
+
+use zen::hashing::HashFamily;
+use zen::kernel::{chunked, scalar, LANES};
+use zen::util::Pcg64;
+
+/// Lengths that straddle the lane boundary: 0, 1, every count around
+/// one block, around two blocks, and a large odd size.
+fn lens() -> Vec<usize> {
+    vec![0, 1, 3, 7, 8, 9, 15, 16, 17, 23, 24, 25, 64, 100, 1_000, 1_003]
+}
+
+fn words(rng: &mut Pcg64, n: usize) -> Vec<u64> {
+    (0..n)
+        .map(|_| (rng.next_u32() as u64) << 32 | rng.next_u32() as u64)
+        .collect()
+}
+
+#[test]
+fn or_words_matches_scalar() {
+    let mut rng = Pcg64::seeded(seed_a());
+    for n in lens() {
+        let a = words(&mut rng, n);
+        let b = words(&mut rng, n);
+        let mut da = a.clone();
+        let mut db = a.clone();
+        scalar::or_words(&mut da, &b);
+        chunked::or_words(&mut db, &b);
+        assert_eq!(da, db, "n={n}");
+    }
+}
+
+fn seed_a() -> u64 {
+    0xa11ce
+}
+
+#[test]
+fn and_count_and_popcount_match_scalar() {
+    let mut rng = Pcg64::seeded(0xbeefcafe);
+    for n in lens() {
+        let a = words(&mut rng, n);
+        let b = words(&mut rng, n);
+        assert_eq!(
+            scalar::and_count_words(&a, &b),
+            chunked::and_count_words(&a, &b),
+            "and n={n}"
+        );
+        assert_eq!(
+            scalar::count_ones_words(&a),
+            chunked::count_ones_words(&a),
+            "popcount n={n}"
+        );
+        // max density: all-ones words
+        let ones = vec![u64::MAX; n];
+        assert_eq!(scalar::count_ones_words(&ones), n * 64);
+        assert_eq!(chunked::count_ones_words(&ones), n * 64);
+        assert_eq!(chunked::and_count_words(&ones, &ones), n * 64);
+    }
+}
+
+/// Strictly ascending random index sequence of length `n` over
+/// `0..range`, with values derived from the indices.
+fn sorted_pairs(rng: &mut Pcg64, n: usize, range: u32) -> (Vec<u32>, Vec<f32>) {
+    let mut idx: Vec<u32> = (0..n.min(range as usize))
+        .map(|_| rng.next_u32() % range.max(1))
+        .collect();
+    idx.sort_unstable();
+    idx.dedup();
+    let val: Vec<f32> = idx
+        .iter()
+        .map(|&i| (i as f32) * 0.25 - (rng.next_u32() % 7) as f32)
+        .collect();
+    (idx, val)
+}
+
+#[test]
+fn merge_sorted_matches_scalar_bitwise() {
+    let mut rng = Pcg64::seeded(0x4e57);
+    // (na, nb, range) grid: empty/single/unaligned/disjoint/dense
+    let cases: Vec<(usize, usize, u32)> = vec![
+        (0, 0, 10),
+        (0, 5, 100),
+        (1, 1, 2),
+        (1, 1, 1_000),
+        (7, 9, 64),
+        (8, 8, 16),   // heavy overlap → Equal arm (float sums)
+        (100, 3, 1_000_000), // long runs → bulk-copy fast path
+        (3, 100, 1_000_000),
+        (500, 500, 700), // max density: most indices shared
+        (1_000, 1_000, 1_000_000),
+    ];
+    for (na, nb, range) in cases {
+        let (ai, av) = sorted_pairs(&mut rng, na, range);
+        let (bi, bv) = sorted_pairs(&mut rng, nb, range);
+        let (mut si, mut sv) = (Vec::new(), Vec::new());
+        let (mut ci, mut cv) = (Vec::new(), Vec::new());
+        scalar::merge_sorted(&ai, &av, &bi, &bv, &mut si, &mut sv);
+        chunked::merge_sorted(&ai, &av, &bi, &bv, &mut ci, &mut cv);
+        assert_eq!(si, ci, "indices na={na} nb={nb} range={range}");
+        // bit-for-bit float equality, not approximate
+        let s_bits: Vec<u32> = sv.iter().map(|v| v.to_bits()).collect();
+        let c_bits: Vec<u32> = cv.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(s_bits, c_bits, "values na={na} nb={nb} range={range}");
+    }
+}
+
+#[test]
+fn merge_sorted_nway_tree_matches_scalar() {
+    // Tree-reduce n sequences with each kernel, the way
+    // `CooTensor::merge_all` consumes merge_sorted, at n ∈ {2,4,8,16}.
+    type Merge =
+        fn(&[u32], &[f32], &[u32], &[f32], &mut Vec<u32>, &mut Vec<f32>);
+    fn tree(parts: Vec<(Vec<u32>, Vec<f32>)>, merge: Merge) -> (Vec<u32>, Vec<f32>) {
+        let mut layer = parts;
+        while layer.len() > 1 {
+            let mut next = Vec::with_capacity((layer.len() + 1) / 2);
+            let mut it = layer.chunks(2);
+            for pair in &mut it {
+                if pair.len() == 2 {
+                    let (mut oi, mut ov) = (Vec::new(), Vec::new());
+                    merge(&pair[0].0, &pair[0].1, &pair[1].0, &pair[1].1, &mut oi, &mut ov);
+                    next.push((oi, ov));
+                } else {
+                    next.push(pair[0].clone());
+                }
+            }
+            layer = next;
+        }
+        layer.into_iter().next().unwrap_or_default()
+    }
+    for n in [2usize, 4, 8, 16] {
+        let mut rng = Pcg64::seeded(0x7ee5 + n as u64);
+        let parts: Vec<(Vec<u32>, Vec<f32>)> =
+            (0..n).map(|_| sorted_pairs(&mut rng, 200, 2_000)).collect();
+        let (si, sv) = tree(parts.clone(), scalar::merge_sorted);
+        let (ci, cv) = tree(parts, chunked::merge_sorted);
+        assert_eq!(si, ci, "n={n}");
+        let s_bits: Vec<u32> = sv.iter().map(|v| v.to_bits()).collect();
+        let c_bits: Vec<u32> = cv.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(s_bits, c_bits, "n={n}");
+    }
+}
+
+#[test]
+fn histogram_matches_scalar_on_every_byte() {
+    let mut rng = Pcg64::seeded(0x415);
+    for n in lens() {
+        let keys: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+        for shift in [0u32, 8, 16, 24] {
+            let mut s = [1u32; 256]; // pre-dirtied: kernels must overwrite
+            let mut c = [2u32; 256];
+            scalar::histogram_u8(&keys, shift, &mut s);
+            chunked::histogram_u8(&keys, shift, &mut c);
+            assert_eq!(s, c, "n={n} shift={shift}");
+            assert_eq!(s.iter().sum::<u32>() as usize, n, "total n={n}");
+        }
+    }
+    // max density: every key in one bucket
+    let same = vec![0xAB00u32; 1_001];
+    let mut s = [0u32; 256];
+    let mut c = [0u32; 256];
+    scalar::histogram_u8(&same, 8, &mut s);
+    chunked::histogram_u8(&same, 8, &mut c);
+    assert_eq!(s, c);
+    assert_eq!(s[0xAB], 1_001);
+}
+
+#[test]
+fn domain_rank_matches_scalar() {
+    let mut rng = Pcg64::seeded(0xd0_417);
+    for n in lens() {
+        let (domain, _) = sorted_pairs(&mut rng, n, (n as u32 * 3).max(8));
+        // probe every member, every gap neighbor, and both extremes
+        let mut probes: Vec<u32> = domain.clone();
+        probes.extend(domain.iter().map(|&d| d.saturating_add(1)));
+        probes.extend(domain.iter().map(|&d| d.saturating_sub(1)));
+        probes.push(0);
+        probes.push(u32::MAX);
+        probes.sort_unstable();
+        for start_frac in [0usize, 1, 2] {
+            let start = domain.len() * start_frac / 3;
+            for &p in &probes {
+                assert_eq!(
+                    scalar::domain_rank(&domain, start, p),
+                    chunked::domain_rank(&domain, start, p),
+                    "len={} start={start} probe={p}",
+                    domain.len()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn partition_scatter_matches_scalar_visit_order() {
+    let family = HashFamily::new(0x5eed, 4);
+    let mut rng = Pcg64::seeded(0x5ca7);
+    for n in lens() {
+        for parts in [1usize, 2, 7, 16] {
+            let h0 = family.partitioner(parts);
+            let (indices, values) = sorted_pairs(&mut rng, n, 1 << 20);
+            let mut s_visits: Vec<(usize, u32, u32)> = Vec::new();
+            let mut c_visits: Vec<(usize, u32, u32)> = Vec::new();
+            scalar::partition_scatter(
+                |i| h0.partition(i),
+                &indices,
+                &values,
+                |p, i, v| s_visits.push((p, i, v.to_bits())),
+            );
+            chunked::partition_scatter(
+                |i| h0.partition(i),
+                &indices,
+                &values,
+                |p, i, v| c_visits.push((p, i, v.to_bits())),
+            );
+            assert_eq!(s_visits, c_visits, "n={n} parts={parts}");
+            assert_eq!(s_visits.len(), indices.len());
+        }
+    }
+}
+
+#[test]
+fn lanes_is_the_documented_block_width() {
+    // The suite's boundary lengths are built around this constant;
+    // if LANES changes, lens() must be revisited.
+    assert_eq!(LANES, 8);
+}
