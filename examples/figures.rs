@@ -52,13 +52,56 @@ fn fig14() -> anyhow::Result<Table> {
     Ok(t)
 }
 
+/// Fig C — convergence vs synchronized volume: the lossy tier's
+/// tradeoff curve. Same model, same data, same scheme (zen); only the
+/// `--compress` spec varies. Error feedback keeps the destination
+/// loss close to lossless while Top-k cuts the wire volume by the
+/// selection ratio. Needs `make artifacts` like fig14.
+fn figc() -> anyhow::Result<Table> {
+    use zen::compress::CompressSpec;
+    use zen::coordinator::lm::{LmConfig, LmTrainer};
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut t = Table::new(
+        "Fig C — convergence vs synchronized volume (error-feedback compression)",
+        &["compress", "steps", "final loss", "final accuracy", "wire MB", "lossy steps"],
+    );
+    let variants = [
+        CompressSpec::None,
+        CompressSpec::TopK(0.05),
+        CompressSpec::TopK(0.01),
+        CompressSpec::Threshold(1e-3),
+    ];
+    let steps = 120;
+    for spec in variants {
+        let mut cfg = LmConfig::tiny();
+        cfg.seed = 0xf19c; // identical init across compressors
+        cfg.compress = spec.clone();
+        let mut trainer = LmTrainer::builder(cfg)
+            .scheme("zen")
+            .workers(4, LinkKind::Tcp25)
+            .artifacts_dir(&artifacts)
+            .build()?;
+        let log = trainer.run(steps, 30, false)?;
+        let acc = log.accuracies.last().map(|(_, a)| *a).unwrap_or(0.0);
+        t.row(vec![
+            spec.label(),
+            steps.to_string(),
+            format!("{:.4}", log.losses.last().copied().unwrap_or(f32::NAN)),
+            format!("{acc:.3}"),
+            format!("{:.2}", log.comm_bytes_total as f64 / 1e6),
+            log.lossy_steps.to_string(),
+        ]);
+    }
+    Ok(t)
+}
+
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let want = |name: &str| args.iter().any(|a| a == name || a == "all");
     if args.is_empty() {
         eprintln!(
             "usage: figures -- all | table1 table2 fig1 fig2 fig7 fig7m fig7e fig8 \
-             fig11 fig12 fig13 fig14 fig15 fig16 fig17 fig18 figp figt"
+             fig11 fig12 fig13 fig14 fig15 fig16 fig17 fig18 figp figt figc"
         );
         return Ok(());
     }
@@ -120,6 +163,9 @@ fn main() -> anyhow::Result<()> {
     }
     if want("fig14") {
         emit(fig14()?);
+    }
+    if want("figc") {
+        emit(figc()?);
     }
     if want("fig15") {
         emit(figures::fig15());

@@ -224,6 +224,8 @@ impl<'a, S: SparsityStats> CostModel<'a, S> {
             }
             // push + pull
             "sparseps" | "sparse-ps" | "omnireduce" | "zen" | "zen-coo" => 2,
+            // balance histogram + scatter + gather
+            "oktopk" | "ok-topk" => 3,
             _ => return None,
         };
         // A single machine executes no network stage at all, whatever
@@ -260,6 +262,7 @@ impl<'a, S: SparsityStats> CostModel<'a, S> {
             "sparcml" => self.sparcml(),
             "sparseps" | "sparse-ps" => self.sparse_ps(),
             "omnireduce" => self.omnireduce(block_len),
+            "oktopk" | "ok-topk" => self.oktopk(),
             "zen-coo" => self.balanced_parallelism(),
             "zen" => self.zen(),
             _ => return None,
@@ -390,6 +393,14 @@ impl<'a, S: SparsityStats> CostModel<'a, S> {
                     split(self.m / nf * unit * pull),
                 ]
             }
+            "oktopk" | "ok-topk" => {
+                let blocks = crate::schemes::oktopk::balance_blocks(self.m as usize, n) as f64;
+                vec![
+                    split(blocks),
+                    split(2.0 * d(1) * self.m / nf),
+                    split(2.0 * d(n) * self.m / nf),
+                ]
+            }
             "zen-coo" => vec![
                 split(2.0 * d(1) * self.m / nf),
                 split(2.0 * d(n) * self.m / nf),
@@ -503,6 +514,16 @@ impl<'a, S: SparsityStats> CostModel<'a, S> {
         let pull = (self.stats.block_density(self.n, block_len) * s).min(1.0);
         let unit = 1.0 + 1.0 / block_len as f64;
         (self.nf() - 1.0) * self.m / self.nf() * unit * (push + pull) / self.bandwidth_values
+    }
+
+    /// Ok-Topk balanced sparse allreduce: the Balanced-Parallelism COO
+    /// transfer achieved for real (the balance histogram removes the
+    /// skew penalty) plus the histogram broadcast that pays for it —
+    /// `(n−1)·blocks/B + 2(n−1)(d_G + d_G^n)·M/n/B` with
+    /// `blocks = `[`crate::schemes::oktopk::balance_blocks`]`(M, n)`.
+    pub fn oktopk(&self) -> f64 {
+        let blocks = crate::schemes::oktopk::balance_blocks(self.m as usize, self.n) as f64;
+        (self.nf() - 1.0) * blocks / self.bandwidth_values + self.balanced_parallelism()
     }
 
     /// Balanced Parallelism with COO (the hypothetical optimum of Fig 7):
@@ -727,8 +748,16 @@ mod tests {
         let alpha = 1e-3;
         let cm0 = CostModel::new(1e6, 8, 25e9 / 32.0, &s);
         let cm1 = CostModel::new(1e6, 8, 25e9 / 32.0, &s).with_latency(alpha);
-        for scheme in ["allreduce", "agsparse", "sparcml", "sparseps", "omnireduce", "zen-coo", "zen"]
-        {
+        for scheme in [
+            "allreduce",
+            "agsparse",
+            "sparcml",
+            "sparseps",
+            "omnireduce",
+            "oktopk",
+            "zen-coo",
+            "zen",
+        ] {
             let stages = cm1.stage_count(scheme).unwrap();
             let d = cm1.time_for(scheme, 256).unwrap() - cm0.time_for(scheme, 256).unwrap();
             assert!(
@@ -739,6 +768,25 @@ mod tests {
         // one machine: everything is free, latency included
         let cm_solo = CostModel::new(1e6, 1, 25e9 / 32.0, &s).with_latency(alpha);
         assert_eq!(cm_solo.time_for("zen", 256), Some(0.0));
+    }
+
+    #[test]
+    fn oktopk_is_balanced_parallelism_plus_histogram() {
+        let s = stats();
+        let bw = 25e9 / 32.0;
+        let cm = CostModel::new(1e7, 8, bw, &s);
+        let blocks = crate::schemes::oktopk::balance_blocks(1e7 as usize, 8) as f64;
+        let expect = cm.balanced_parallelism() + 7.0 * blocks / bw;
+        let got = cm.time_for("oktopk", 256).unwrap();
+        assert!((got - expect).abs() < 1e-12, "{got} vs {expect}");
+        // The histogram premium is what separates it from the Fig-7
+        // hypothetical optimum — strictly above, but vanishingly so at
+        // realistic sizes (a few hundred counts vs millions of values).
+        assert!(got > cm.balanced_parallelism());
+        assert!(got < cm.balanced_parallelism() * 1.01);
+        // And it beats skewed Sparse PS whenever skew is real.
+        assert!(got < cm.sparse_ps(), "balance must beat skew penalty");
+        assert_eq!(cm.stage_count("oktopk"), Some(3));
     }
 
     /// Group-clustered stats: workers 0..n/2 share one support, workers
@@ -796,6 +844,7 @@ mod tests {
             "sparcml",
             "sparseps",
             "omnireduce",
+            "oktopk",
             "zen-coo",
             "zen",
         ];
@@ -822,6 +871,7 @@ mod tests {
             "sparcml",
             "sparseps",
             "omnireduce",
+            "oktopk",
             "zen-coo",
             "zen",
         ];

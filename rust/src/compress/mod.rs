@@ -1,0 +1,524 @@
+//! Lossy gradient compression with error-feedback residuals.
+//!
+//! The compression tier slots between gradient generation and the wire:
+//! a [`Compressor`] takes one rank's sparse gradient for one tensor and
+//! returns an ordinary [`CooTensor`] holding only the entries worth
+//! shipping this iteration. Because the output is a plain COO tensor,
+//! every existing scheme and driver (sim/channel/socket/event/worker)
+//! runs compressed gradients unchanged — compression is invisible to
+//! the protocol layer.
+//!
+//! Two selection rules are provided:
+//!
+//! - [`TopK`]: the `k` largest-magnitude entries per tensor, selected
+//!   exactly by [`crate::kernel::active::select_topk`] (heap-free
+//!   radix partial selection, deterministic lower-index tie-break);
+//! - [`Threshold`]: every entry with `|v| >= t`.
+//!
+//! Both wrap an [`ErrorFeedback`] residual store: the mass *not* sent
+//! is kept in a per-rank, per-tensor accumulator and merged into the
+//! next iteration's gradient before selection, so dropped updates are
+//! delayed, never lost (the classic EF-SGD construction; see
+//! "Near-Optimal Sparse Allreduce", PAPERS.md). The accounting is
+//! exact by design: the merged accumulator is *partitioned* into sent
+//! and residual entries — no arithmetic happens at the split — so
+//! `sent ⊎ residual` always reconstructs `residual_prev + grad`
+//! bit for bit (pinned by `tests/compress_integration.rs`).
+//!
+//! Working buffers come from a [`ScratchPool`] and residual vectors
+//! are recycled in place, so steady-state compression performs no
+//! allocation beyond the output tensor itself.
+
+use std::collections::HashMap;
+
+use crate::kernel;
+use crate::tensor::CooTensor;
+use crate::util::arena::ScratchPool;
+
+/// Parsed `--compress` specification (`topk:K | threshold:T | none`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum CompressSpec {
+    /// Lossless: compression disabled.
+    None,
+    /// Top-k by magnitude. `k >= 1` is an absolute per-tensor entry
+    /// count; `0 < k < 1` is a fraction of the dense length.
+    TopK(f64),
+    /// Magnitude threshold: keep entries with `|v| >= t`.
+    Threshold(f32),
+}
+
+impl CompressSpec {
+    /// Parse a `topk:K|threshold:T|none` spec. Error messages name the
+    /// offending field; the CLI wraps them with the flag name.
+    pub fn parse(s: &str) -> Result<CompressSpec, String> {
+        let s = s.trim();
+        if s.is_empty() || s == "none" {
+            return Ok(CompressSpec::None);
+        }
+        if let Some(arg) = s.strip_prefix("topk:") {
+            let k: f64 = arg
+                .parse()
+                .map_err(|_| format!("topk wants a number, got '{arg}'"))?;
+            if !k.is_finite() || k <= 0.0 {
+                return Err(format!(
+                    "topk wants a count >= 1 or a fraction in (0, 1), got {k}"
+                ));
+            }
+            return Ok(CompressSpec::TopK(k));
+        }
+        if let Some(arg) = s.strip_prefix("threshold:") {
+            let t: f32 = arg
+                .parse()
+                .map_err(|_| format!("threshold wants a number, got '{arg}'"))?;
+            if !t.is_finite() || t <= 0.0 {
+                return Err(format!("threshold must be a finite positive number, got {t}"));
+            }
+            return Ok(CompressSpec::Threshold(t));
+        }
+        Err(format!("unknown compressor '{s}' (topk:K|threshold:T|none)"))
+    }
+
+    /// Whether this spec compresses at all.
+    pub fn is_active(&self) -> bool {
+        !matches!(self, CompressSpec::None)
+    }
+
+    /// Build the compressor this spec describes (`None` when inactive).
+    pub fn build(&self) -> Option<Box<dyn Compressor>> {
+        match *self {
+            CompressSpec::None => None,
+            CompressSpec::TopK(k) => Some(Box::new(TopK::new(k))),
+            CompressSpec::Threshold(t) => Some(Box::new(Threshold::new(t))),
+        }
+    }
+
+    /// Predicted post-compression per-worker density given the dense
+    /// length and the measured per-worker density `d1`. Top-k has a
+    /// closed form (`min(d1, k/len)`); a magnitude threshold depends on
+    /// the value distribution, so its analytic prediction stays at `d1`
+    /// (the planner measures the survivor fraction from real tensors
+    /// instead — see [`crate::planner::CostPlanner`]).
+    pub fn predicted_density(&self, dense_len: usize, d1: f64) -> f64 {
+        match *self {
+            CompressSpec::None | CompressSpec::Threshold(_) => d1,
+            CompressSpec::TopK(k) => {
+                let kk = resolve_k(k, dense_len) as f64;
+                d1.min(kk / dense_len.max(1) as f64)
+            }
+        }
+    }
+
+    /// Short display name for plan tables and bench output.
+    pub fn label(&self) -> String {
+        match *self {
+            CompressSpec::None => "none".to_string(),
+            CompressSpec::TopK(k) => format!("topk:{k}"),
+            CompressSpec::Threshold(t) => format!("threshold:{t}"),
+        }
+    }
+}
+
+/// Resolve a Top-k parameter to an absolute entry count for a tensor of
+/// `dense_len` positions: counts pass through, fractions scale.
+fn resolve_k(k: f64, dense_len: usize) -> usize {
+    if k >= 1.0 {
+        k.round() as usize
+    } else {
+        ((k * dense_len as f64).round() as usize).max(1)
+    }
+}
+
+/// Cumulative compression accounting (entries, not bytes — one COO
+/// entry is 8 wire bytes regardless of scheme).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CompressStats {
+    /// Entries offered to the compressor (raw gradients, pre-residual).
+    pub raw_entries: u64,
+    /// Entries actually sent after selection.
+    pub sent_entries: u64,
+}
+
+impl CompressStats {
+    /// COO wire bytes avoided relative to sending the raw gradients.
+    pub fn bytes_saved(&self) -> u64 {
+        self.raw_entries.saturating_sub(self.sent_entries) * 8
+    }
+}
+
+/// A lossy gradient compressor with error feedback.
+pub trait Compressor: Send {
+    fn name(&self) -> &'static str;
+    /// Predicted post-compression per-worker density (see
+    /// [`CompressSpec::predicted_density`]).
+    fn predicted_density(&self, dense_len: usize, d1: f64) -> f64;
+    /// Compress one rank's gradient for tensor `label`, folding the
+    /// rank's residual in first and retaining the unsent remainder.
+    fn compress(&mut self, label: &str, rank: usize, grad: &CooTensor) -> CooTensor;
+    /// Cumulative entry accounting across all `compress` calls.
+    fn stats(&self) -> CompressStats;
+}
+
+/// Compress each rank's tensor in a batch (the per-iteration shape the
+/// coordinator and trainer use).
+pub fn compress_all(
+    c: &mut dyn Compressor,
+    label: &str,
+    inputs: &[CooTensor],
+) -> Vec<CooTensor> {
+    inputs
+        .iter()
+        .enumerate()
+        .map(|(rank, t)| c.compress(label, rank, t))
+        .collect()
+}
+
+/// One rank's unsent remainder for one tensor. Sorted-unique COO halves,
+/// recycled in place across iterations.
+#[derive(Default)]
+struct Residual {
+    indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+/// Reusable working buffers for one compression call.
+#[derive(Default)]
+pub struct CompressScratch {
+    acc_idx: Vec<u32>,
+    acc_val: Vec<f32>,
+    sel: Vec<u32>,
+}
+
+/// Per-rank, per-tensor residual store shared by every selection rule.
+///
+/// `compress_with` merges `residual + grad` into a scratch accumulator
+/// (sorted COO merge — the only arithmetic in the pipeline), lets the
+/// selection rule pick ascending positions, then splits the accumulator
+/// exactly: selected entries become the sent tensor, the rest (minus
+/// entries that cancelled to exactly 0.0, which carry no mass) become
+/// the new residual.
+#[derive(Default)]
+pub struct ErrorFeedback {
+    residuals: HashMap<String, Vec<Residual>>,
+    pool: ScratchPool<CompressScratch>,
+    stats: CompressStats,
+}
+
+impl ErrorFeedback {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn compress_with<F>(&mut self, label: &str, rank: usize, grad: &CooTensor, select: F) -> CooTensor
+    where
+        F: FnOnce(&[f32], &mut Vec<u32>),
+    {
+        if !self.residuals.contains_key(label) {
+            self.residuals.insert(label.to_string(), Vec::new());
+        }
+        let per_rank = self.residuals.get_mut(label).expect("inserted above");
+        while per_rank.len() <= rank {
+            per_rank.push(Residual::default());
+        }
+        let residual = &mut per_rank[rank];
+        let mut scratch = self.pool.acquire();
+        let CompressScratch { acc_idx, acc_val, sel } = &mut *scratch;
+        acc_idx.clear();
+        acc_val.clear();
+        sel.clear();
+        kernel::active::merge_sorted(
+            &residual.indices,
+            &residual.values,
+            &grad.indices,
+            &grad.values,
+            acc_idx,
+            acc_val,
+        );
+        select(acc_val, sel);
+
+        let mut sent_idx = Vec::with_capacity(sel.len());
+        let mut sent_val = Vec::with_capacity(sel.len());
+        residual.indices.clear();
+        residual.values.clear();
+        let mut next = sel.iter().copied().peekable();
+        for (pos, (&idx, &val)) in acc_idx.iter().zip(acc_val.iter()).enumerate() {
+            if next.peek() == Some(&(pos as u32)) {
+                next.next();
+                sent_idx.push(idx);
+                sent_val.push(val);
+            } else if val != 0.0 {
+                residual.indices.push(idx);
+                residual.values.push(val);
+            }
+        }
+        self.stats.raw_entries += grad.nnz() as u64;
+        self.stats.sent_entries += sent_idx.len() as u64;
+        CooTensor::from_sorted(grad.dense_len, sent_idx, sent_val)
+    }
+
+    /// One rank's current residual mass for one tensor (empty when the
+    /// rank never compressed), as an owned tensor over `dense_len` —
+    /// test/report surface.
+    pub fn residual(&self, label: &str, rank: usize, dense_len: usize) -> CooTensor {
+        match self.residuals.get(label).and_then(|v| v.get(rank)) {
+            Some(r) => {
+                CooTensor::from_sorted(dense_len, r.indices.clone(), r.values.clone())
+            }
+            None => CooTensor::empty(dense_len),
+        }
+    }
+}
+
+/// Error-feedback Top-k: ship the `k` largest-magnitude entries of
+/// `residual + grad`, retain the rest.
+pub struct TopK {
+    k: f64,
+    feedback: ErrorFeedback,
+}
+
+impl TopK {
+    /// `k >= 1`: absolute per-tensor entry count; `0 < k < 1`: fraction
+    /// of the dense length; `k = 0` degenerates to sending nothing
+    /// (every gradient becomes all-empty and accumulates as residual).
+    pub fn new(k: f64) -> Self {
+        TopK {
+            k: k.max(0.0),
+            feedback: ErrorFeedback::new(),
+        }
+    }
+
+    /// The residual store (test/report surface).
+    pub fn feedback(&self) -> &ErrorFeedback {
+        &self.feedback
+    }
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn predicted_density(&self, dense_len: usize, d1: f64) -> f64 {
+        if self.k == 0.0 {
+            return 0.0;
+        }
+        CompressSpec::TopK(self.k).predicted_density(dense_len, d1)
+    }
+
+    fn compress(&mut self, label: &str, rank: usize, grad: &CooTensor) -> CooTensor {
+        let k = if self.k == 0.0 {
+            0
+        } else {
+            resolve_k(self.k, grad.dense_len)
+        };
+        self.feedback.compress_with(label, rank, grad, |vals, sel| {
+            kernel::active::select_topk(vals, k, sel);
+        })
+    }
+
+    fn stats(&self) -> CompressStats {
+        self.feedback.stats
+    }
+}
+
+/// Error-feedback magnitude threshold: ship entries of
+/// `residual + grad` with `|v| >= t`, retain the rest.
+pub struct Threshold {
+    t: f32,
+    feedback: ErrorFeedback,
+}
+
+impl Threshold {
+    pub fn new(t: f32) -> Self {
+        Threshold {
+            t,
+            feedback: ErrorFeedback::new(),
+        }
+    }
+
+    pub fn feedback(&self) -> &ErrorFeedback {
+        &self.feedback
+    }
+}
+
+impl Compressor for Threshold {
+    fn name(&self) -> &'static str {
+        "threshold"
+    }
+
+    fn predicted_density(&self, dense_len: usize, d1: f64) -> f64 {
+        CompressSpec::Threshold(self.t).predicted_density(dense_len, d1)
+    }
+
+    fn compress(&mut self, label: &str, rank: usize, grad: &CooTensor) -> CooTensor {
+        let t = self.t;
+        self.feedback.compress_with(label, rank, grad, |vals, sel| {
+            for (i, &v) in vals.iter().enumerate() {
+                if v.abs() >= t {
+                    sel.push(i as u32);
+                }
+            }
+        })
+    }
+
+    fn stats(&self) -> CompressStats {
+        self.feedback.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coo(dense_len: usize, pairs: &[(u32, f32)]) -> CooTensor {
+        CooTensor::from_sorted(
+            dense_len,
+            pairs.iter().map(|&(i, _)| i).collect(),
+            pairs.iter().map(|&(_, v)| v).collect(),
+        )
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(CompressSpec::parse("none").unwrap(), CompressSpec::None);
+        assert_eq!(CompressSpec::parse("").unwrap(), CompressSpec::None);
+        assert_eq!(
+            CompressSpec::parse("topk:64").unwrap(),
+            CompressSpec::TopK(64.0)
+        );
+        assert_eq!(
+            CompressSpec::parse("topk:0.01").unwrap(),
+            CompressSpec::TopK(0.01)
+        );
+        assert_eq!(
+            CompressSpec::parse("threshold:0.5").unwrap(),
+            CompressSpec::Threshold(0.5)
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "topk:0",
+            "topk:-3",
+            "topk:NaN",
+            "topk:inf",
+            "topk:abc",
+            "threshold:-0.5",
+            "threshold:0",
+            "threshold:NaN",
+            "gzip:9",
+        ] {
+            let err = CompressSpec::parse(bad).unwrap_err();
+            assert!(!err.is_empty(), "{bad}: {err}");
+        }
+        assert!(CompressSpec::parse("topk:0").unwrap_err().contains("topk"));
+        assert!(CompressSpec::parse("threshold:-0.5")
+            .unwrap_err()
+            .contains("positive"));
+    }
+
+    #[test]
+    fn topk_selects_largest_magnitudes_with_feedback() {
+        let mut c = TopK::new(2.0);
+        let g = coo(100, &[(3, 0.5), (10, -2.0), (50, 1.0), (80, -0.25)]);
+        let sent = c.compress("t", 0, &g);
+        assert_eq!(sent.indices, vec![10, 50]);
+        assert_eq!(sent.values, vec![-2.0, 1.0]);
+        // Dropped mass re-enters: next iteration's empty gradient still
+        // ships the two largest residual entries.
+        let sent2 = c.compress("t", 0, &CooTensor::empty(100));
+        assert_eq!(sent2.indices, vec![3, 80]);
+        assert_eq!(sent2.values, vec![0.5, -0.25]);
+        // Residual is now fully drained.
+        let sent3 = c.compress("t", 0, &CooTensor::empty(100));
+        assert_eq!(sent3.nnz(), 0);
+        assert_eq!(c.stats().raw_entries, 4);
+        assert_eq!(c.stats().sent_entries, 4);
+    }
+
+    #[test]
+    fn topk_k_at_least_nnz_is_bit_identical_passthrough() {
+        let mut c = TopK::new(10.0);
+        let g = coo(64, &[(1, 0.125), (7, -0.5), (9, 3.0)]);
+        let sent = c.compress("t", 0, &g);
+        assert_eq!(sent, g, "k >= nnz with empty residual is lossless");
+    }
+
+    #[test]
+    fn topk_zero_sends_nothing_and_accumulates() {
+        let mut c = TopK::new(0.0);
+        let g = coo(64, &[(2, 1.0), (5, -1.0)]);
+        for _ in 0..3 {
+            assert_eq!(c.compress("t", 0, &g).nnz(), 0);
+        }
+        // All mass is in the residual: one full-k flush returns 3x.
+        let mut flush = TopK::new(64.0);
+        std::mem::swap(&mut flush.feedback, &mut c.feedback);
+        let sent = flush.compress("t", 0, &CooTensor::empty(64));
+        assert_eq!(sent.indices, vec![2, 5]);
+        assert_eq!(sent.values, vec![3.0, -3.0]);
+    }
+
+    #[test]
+    fn threshold_keeps_only_large_entries() {
+        let mut c = Threshold::new(0.75);
+        let g = coo(32, &[(0, 0.5), (4, -1.5), (8, 0.75), (16, 0.25)]);
+        let sent = c.compress("t", 0, &g);
+        assert_eq!(sent.indices, vec![4, 8], ">= is inclusive");
+        // 0.5 + 0.25 stay back; a second identical gradient pushes 0.5
+        // past the threshold (1.0) while 0.25 reaches only 0.5.
+        let sent2 = c.compress("t", 0, &g);
+        assert_eq!(sent2.indices, vec![0, 4, 8]);
+        assert_eq!(sent2.values[0], 1.0);
+    }
+
+    #[test]
+    fn ranks_and_labels_have_independent_residuals() {
+        let mut c = TopK::new(1.0);
+        let g = coo(16, &[(1, 1.0), (2, 2.0)]);
+        c.compress("a", 0, &g);
+        c.compress("a", 1, &g);
+        c.compress("b", 0, &g);
+        // Each (label, rank) kept its own 1-entry residual at index 1.
+        for (label, rank) in [("a", 0), ("a", 1), ("b", 0)] {
+            let sent = c.compress(label, rank, &CooTensor::empty(16));
+            assert_eq!(sent.indices, vec![1], "{label}/{rank}");
+            assert_eq!(sent.values, vec![1.0], "{label}/{rank}");
+        }
+    }
+
+    #[test]
+    fn exact_cancellation_prunes_residual() {
+        let mut c = TopK::new(1.0);
+        c.compress("t", 0, &coo(8, &[(1, 0.5), (3, 2.0)]));
+        // residual holds (1, 0.5); cancel it exactly.
+        c.compress("t", 0, &coo(8, &[(1, -0.5), (3, 2.0)]));
+        let sent = c.compress("t", 0, &CooTensor::empty(8));
+        assert_eq!(sent.nnz(), 0, "cancelled entries leave no residual");
+    }
+
+    #[test]
+    fn predicted_density_forms() {
+        let s = CompressSpec::TopK(64.0);
+        assert!((s.predicted_density(6400, 0.5) - 0.01).abs() < 1e-12);
+        assert_eq!(s.predicted_density(6400, 0.001), 0.001, "capped at d1");
+        let f = CompressSpec::TopK(0.01);
+        assert!((f.predicted_density(6400, 0.5) - 0.01).abs() < 1e-12);
+        assert_eq!(
+            CompressSpec::Threshold(0.5).predicted_density(6400, 0.2),
+            0.2,
+            "threshold has no analytic reduction"
+        );
+        assert_eq!(CompressSpec::None.predicted_density(6400, 0.2), 0.2);
+    }
+
+    #[test]
+    fn build_matches_spec() {
+        assert!(CompressSpec::None.build().is_none());
+        assert_eq!(CompressSpec::TopK(4.0).build().unwrap().name(), "topk");
+        assert_eq!(
+            CompressSpec::Threshold(0.1).build().unwrap().name(),
+            "threshold"
+        );
+    }
+}

@@ -162,6 +162,39 @@ impl Args {
         }
     }
 
+    /// Parse a `--compress topk:K|threshold:T|none` option into a
+    /// [`crate::compress::CompressSpec`]. Absent means lossless. A
+    /// present-but-invalid spec is an error — silently training
+    /// lossless when the user asked for compression (or vice versa)
+    /// would be wrong.
+    pub fn compress(&self, key: &str) -> anyhow::Result<crate::compress::CompressSpec> {
+        match self.get(key) {
+            None => Ok(crate::compress::CompressSpec::None),
+            Some(v) => crate::compress::CompressSpec::parse(v)
+                .map_err(|e| anyhow::anyhow!("--{key}: {e}")),
+        }
+    }
+
+    /// Parse an `--accuracy-budget B` option: a finite non-negative
+    /// final-loss degradation allowance (0 disarms the lossy planner
+    /// tier). NaN and negative budgets are errors, not silent zeroes —
+    /// a budget the planner cannot compare against would arm nothing.
+    pub fn accuracy_budget(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                let x: f64 = v.parse().map_err(|_| {
+                    anyhow::anyhow!("--{key} wants a non-negative number, got '{v}'")
+                })?;
+                anyhow::ensure!(
+                    x.is_finite() && x >= 0.0,
+                    "--{key} must be a finite non-negative number, got {x}"
+                );
+                Ok(x)
+            }
+        }
+    }
+
     /// Parse a transport backend name (`sim`, `channel`, `socket`,
     /// `event`, `threaded`).
     /// Unlike [`link`](Args::link), an unknown value is an error —
@@ -261,6 +294,54 @@ mod tests {
         assert_eq!(parse("").ratio("hys", 0.25).unwrap(), 0.25);
         assert!(parse("--hys 1.5").ratio("hys", 0.25).is_err());
         assert!(parse("--hys nope").ratio("hys", 0.25).is_err());
+    }
+
+    #[test]
+    fn compress_parsing() {
+        use crate::compress::CompressSpec;
+        assert_eq!(parse("").compress("compress").unwrap(), CompressSpec::None);
+        assert_eq!(
+            parse("--compress none").compress("compress").unwrap(),
+            CompressSpec::None
+        );
+        assert_eq!(
+            parse("--compress topk:0.01").compress("compress").unwrap(),
+            CompressSpec::TopK(0.01)
+        );
+        assert_eq!(
+            parse("--compress threshold:0.5").compress("compress").unwrap(),
+            CompressSpec::Threshold(0.5)
+        );
+        // Named-field error messages, `--key:` prefixed like topology().
+        let err = parse("--compress topk:0").compress("compress").unwrap_err();
+        assert!(err.to_string().starts_with("--compress:"), "{err}");
+        assert!(err.to_string().contains("topk"), "{err}");
+        for bad in ["topk:-2", "threshold:-0.5", "threshold:NaN", "gzip:9"] {
+            assert!(
+                parse(&format!("--compress {bad}")).compress("compress").is_err(),
+                "{bad} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn accuracy_budget_parsing() {
+        assert_eq!(parse("").accuracy_budget("accuracy-budget", 0.0).unwrap(), 0.0);
+        assert_eq!(
+            parse("--accuracy-budget 0.05")
+                .accuracy_budget("accuracy-budget", 0.0)
+                .unwrap(),
+            0.05
+        );
+        for bad in ["NaN", "inf", "-0.1", "nope"] {
+            let r = parse(&format!("--accuracy-budget {bad}"))
+                .accuracy_budget("accuracy-budget", 0.0);
+            assert!(r.is_err(), "budget '{bad}' must be rejected");
+            assert!(
+                r.unwrap_err().to_string().contains("--accuracy-budget"),
+                "{bad}: error must name the flag"
+            );
+        }
     }
 
     #[test]

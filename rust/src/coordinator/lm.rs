@@ -42,6 +42,14 @@ pub struct LmConfig {
     /// Density-drift hysteresis for `--scheme auto` (see
     /// [`PlanConfig::replan_threshold`]; ignored by fixed schemes).
     pub replan_threshold: f64,
+    /// Lossy gradient compression (`zen train --compress
+    /// topk:K|threshold:T|none`). Fixed schemes compress every step;
+    /// `--scheme auto` compresses only the steps whose lossy plan beat
+    /// the best lossless prediction under a positive `accuracy_budget`.
+    pub compress: crate::compress::CompressSpec,
+    /// Tolerated final-loss degradation that arms the planner's lossy
+    /// tier (`--accuracy-budget B`; 0 keeps `auto` lossless).
+    pub accuracy_budget: f64,
 }
 
 impl LmConfig {
@@ -58,6 +66,8 @@ impl LmConfig {
             lr: 0.3,
             seed: 0x11,
             replan_threshold: PlanConfig::default().replan_threshold,
+            compress: crate::compress::CompressSpec::None,
+            accuracy_budget: 0.0,
         }
     }
 
@@ -74,6 +84,8 @@ impl LmConfig {
             lr: 0.3,
             seed: 0x100,
             replan_threshold: PlanConfig::default().replan_threshold,
+            compress: crate::compress::CompressSpec::None,
+            accuracy_budget: 0.0,
         }
     }
 
@@ -110,6 +122,11 @@ pub struct StepStats {
     pub compute_wall: f64,
     /// Wall-clock scheme overhead (hashing etc., from the report).
     pub scheme_overhead: f64,
+    /// Wire volume of this step's embedding sync inputs (COO entries ×
+    /// 8 bytes) — after compression when the lossy tier fired.
+    pub comm_bytes: u64,
+    /// Whether this step synchronized compressed gradients.
+    pub lossy: bool,
 }
 
 /// Accumulated log of a run.
@@ -120,6 +137,11 @@ pub struct TrainLog {
     pub emb_comm_total: f64,
     pub mlp_comm_total: f64,
     pub compute_wall_total: f64,
+    /// Total embedding-sync wire volume across the run (bytes; see
+    /// [`StepStats::comm_bytes`]).
+    pub comm_bytes_total: u64,
+    /// Steps that synchronized compressed gradients.
+    pub lossy_steps: usize,
 }
 
 /// The trainer.
@@ -145,6 +167,9 @@ pub struct LmTrainer {
     /// Data plane the scheme's protocols run over, built once per
     /// trainer (a socket mesh persists across steps).
     driver: Box<dyn Driver>,
+    /// Lossy compressor (error-feedback residuals live across steps);
+    /// `None` when `cfg.compress` is inactive.
+    compressor: Option<Box<dyn crate::compress::Compressor>>,
 }
 
 /// Validating builder for [`LmTrainer`]: collect the knobs, check them
@@ -189,6 +214,16 @@ impl LmTrainerBuilder {
         self
     }
 
+    pub fn compress(mut self, spec: crate::compress::CompressSpec) -> Self {
+        self.cfg.compress = spec;
+        self
+    }
+
+    pub fn accuracy_budget(mut self, b: f64) -> Self {
+        self.cfg.accuracy_budget = b;
+        self
+    }
+
     pub fn build(self) -> Result<LmTrainer> {
         let mut problems = Vec::new();
         if self.topo.endpoints() == 0 {
@@ -198,6 +233,12 @@ impl LmTrainerBuilder {
             problems.push(format!(
                 "replan threshold {} outside [0, 1]",
                 self.cfg.replan_threshold
+            ));
+        }
+        if !self.cfg.accuracy_budget.is_finite() || self.cfg.accuracy_budget < 0.0 {
+            problems.push(format!(
+                "accuracy budget {} must be a finite non-negative number",
+                self.cfg.accuracy_budget
             ));
         }
         if !problems.is_empty() {
@@ -290,8 +331,15 @@ impl LmTrainer {
             "replan threshold {} outside [0, 1]",
             cfg.replan_threshold
         );
+        anyhow::ensure!(
+            cfg.accuracy_budget.is_finite() && cfg.accuracy_budget >= 0.0,
+            "accuracy budget {} must be a finite non-negative number",
+            cfg.accuracy_budget
+        );
         let plan_cfg = PlanConfig {
             replan_threshold: cfg.replan_threshold,
+            compress: cfg.compress.clone(),
+            accuracy_budget: cfg.accuracy_budget,
             ..PlanConfig::default()
         };
         let planner = planner::by_name(
@@ -316,6 +364,7 @@ impl LmTrainer {
         let w2 = init(&mut rng, cfg.hidden * cfg.dim, scale);
         let b2 = vec![0.0; cfg.dim];
         let zipf = Zipf::new(cfg.vocab, cfg.zipf_theta);
+        let compressor = cfg.compress.build();
 
         Ok(LmTrainer {
             cfg,
@@ -333,6 +382,7 @@ impl LmTrainer {
             step_count: 0,
             scratch: SyncScratch::new(),
             driver,
+            compressor,
         })
     }
 
@@ -464,9 +514,29 @@ impl LmTrainer {
         let planned = self
             .planner
             .plan("embedding", &worker_grads, &self.net.topo);
+        // Plan-gated lossy tier (same policy as the sim driver): a
+        // fixed scheme under `--compress` compresses every step;
+        // `auto` compresses only when the plan says lossy. Error
+        // feedback keeps the dropped mass in per-rank residuals, so
+        // what SGD never saw this step ships in a later one.
+        let lossy = match (&self.compressor, planned.plan.as_deref()) {
+            (Some(_), None) => true,
+            (Some(_), Some(p)) => p.lossy,
+            (None, _) => false,
+        };
+        let synced: Vec<CooTensor> = if lossy {
+            crate::compress::compress_all(
+                self.compressor.as_mut().unwrap().as_mut(),
+                "embedding",
+                &worker_grads,
+            )
+        } else {
+            worker_grads
+        };
+        let comm_bytes: u64 = synced.iter().map(|t| t.nnz() as u64 * 8).sum();
         let sync = planned
             .scheme
-            .run(&worker_grads, self.driver.as_mut(), &mut self.scratch)
+            .run(&synced, self.driver.as_mut(), &mut self.scratch)
             .map_err(|e| {
                 anyhow::anyhow!("step {}: embedding gradient sync failed: {e}", self.step_count)
             })?;
@@ -505,6 +575,8 @@ impl LmTrainer {
             mlp_comm_time,
             compute_wall,
             scheme_overhead,
+            comm_bytes,
+            lossy,
         })
     }
 
@@ -557,6 +629,8 @@ impl LmTrainer {
             log.emb_comm_total += s.emb_comm_time;
             log.mlp_comm_total += s.mlp_comm_time;
             log.compute_wall_total += s.compute_wall;
+            log.comm_bytes_total += s.comm_bytes;
+            log.lossy_steps += s.lossy as usize;
             if log_every > 0 && (it % log_every == 0 || it + 1 == iters) {
                 let acc = self.eval_accuracy(512);
                 log.accuracies.push((it, acc));

@@ -92,6 +92,15 @@ pub struct SimConfig {
     /// Relative measured-density drift that invalidates a cached plan
     /// (`--scheme auto` only; see [`PlanConfig::replan_threshold`]).
     pub replan_threshold: f64,
+    /// Lossy gradient compression (`zen sim --compress
+    /// topk:K|threshold:T|none`). With a fixed scheme the compressor
+    /// runs unconditionally; with `--scheme auto` it runs only on
+    /// buckets whose lossy plan beats the best lossless prediction
+    /// under a positive [`accuracy_budget`](SimConfig::accuracy_budget).
+    pub compress: crate::compress::CompressSpec,
+    /// Tolerated final-loss degradation that arms the planner's lossy
+    /// tier (`--accuracy-budget B`; 0 keeps `auto` lossless).
+    pub accuracy_budget: f64,
     pub iterations: usize,
     pub seed: u64,
     /// `Some` → pipelined multi-tensor engine; `None` → the classic
@@ -116,6 +125,8 @@ impl SimConfig {
             topology: None,
             scheme: scheme.to_string(),
             replan_threshold: PlanConfig::default().replan_threshold,
+            compress: crate::compress::CompressSpec::None,
+            accuracy_budget: 0.0,
             iterations: 4,
             seed: 0xbeef,
             pipeline: None,
@@ -165,6 +176,16 @@ impl SimConfigBuilder {
         self
     }
 
+    pub fn compress(mut self, spec: crate::compress::CompressSpec) -> Self {
+        self.cfg.compress = spec;
+        self
+    }
+
+    pub fn accuracy_budget(mut self, b: f64) -> Self {
+        self.cfg.accuracy_budget = b;
+        self
+    }
+
     pub fn iterations(mut self, iters: usize) -> Self {
         self.cfg.iterations = iters;
         self
@@ -201,6 +222,12 @@ impl SimConfigBuilder {
             problems.push(format!(
                 "replan threshold {} outside [0, 1]",
                 cfg.replan_threshold
+            ));
+        }
+        if !cfg.accuracy_budget.is_finite() || cfg.accuracy_budget < 0.0 {
+            problems.push(format!(
+                "accuracy budget {} must be a finite non-negative number",
+                cfg.accuracy_budget
             ));
         }
         if let Some(p) = &cfg.pipeline {
@@ -245,6 +272,15 @@ pub struct BucketPlanReport {
     /// inter]` — each class's α–β sum alone; the stage charge is their
     /// max, so the two entries need not add up to `measured`).
     pub measured_by_class: [f64; 2],
+    /// True when this bucket synchronized compressed gradients — a
+    /// planner-chosen lossy plan, or a fixed scheme under `--compress`.
+    pub lossy: bool,
+    /// Compressor label (`topk:K` / `threshold:T`) when `lossy`.
+    pub compressor: Option<String>,
+    /// Best lossless candidate's predicted full-size time — kept next
+    /// to `predicted` (the executed plan's time) so the table can show
+    /// what the lossy tier bought. `None` under a fixed scheme.
+    pub predicted_lossless: Option<f64>,
 }
 
 impl BucketPlanReport {
@@ -296,6 +332,10 @@ pub struct SimResult {
     /// ([`crate::cluster::Timeline::forward_finish`] + intra + MLP) —
     /// the stall metric `--priority-schedule` improves.
     pub engine_forward_finish: Option<f64>,
+    /// Total wire entries the compressor dropped across the run,
+    /// priced in bytes at full model scale (8 bytes per COO entry).
+    /// Zero when no compression ran.
+    pub bytes_saved: u64,
 }
 
 impl SimResult {
@@ -352,8 +392,15 @@ impl SimDriver {
             "replan threshold {} outside [0, 1]",
             cfg.replan_threshold
         );
+        anyhow::ensure!(
+            cfg.accuracy_budget.is_finite() && cfg.accuracy_budget >= 0.0,
+            "accuracy budget {} must be a finite non-negative number",
+            cfg.accuracy_budget
+        );
         let plan_cfg = PlanConfig {
             replan_threshold: cfg.replan_threshold,
+            compress: cfg.compress.clone(),
+            accuracy_budget: cfg.accuracy_budget,
             ..PlanConfig::default()
         };
         let planner = planner::by_name(
@@ -496,17 +543,40 @@ impl SimDriver {
         let mut scratch = SyncScratch::new();
         let mut driver = crate::wire::make_driver(self.cfg.transport, &net)
             .expect("sim driver setup");
+        // One compressor for the whole run: error-feedback residuals
+        // carry dropped mass across iterations, so the state must
+        // outlive the loop.
+        let mut compressor = self.cfg.compress.build();
 
         for it in 0..self.cfg.iterations as u64 {
             // Flat path: each machine's tensor = aggregate of its g
             // GPUs (the intra-machine NVLink phase), densification
             // included. Topology mode: each rank's own GPU tensor.
-            let inputs: Vec<crate::tensor::CooTensor> =
+            let raw: Vec<crate::tensor::CooTensor> =
                 (0..n).map(|m| self.rank_tensor(it, m)).collect();
             // Steady-state plan() is a cached lookup plus a mean-density
             // scan; only warm-up (or a density drift past the
-            // hysteresis) profiles and re-ranks.
-            let planned = self.planner.plan("embedding", &inputs, &net.topo);
+            // hysteresis) profiles and re-ranks. Planning sees the raw
+            // gradients — the lossy tier prices compression itself.
+            let planned = self.planner.plan("embedding", &raw, &net.topo);
+            // Plan-gated compression: `--scheme auto` compresses only
+            // when the planner's lossy candidate beat every lossless
+            // one under the accuracy budget; a fixed scheme under
+            // `--compress` compresses unconditionally (no plan to gate).
+            let lossy = match (&compressor, planned.plan.as_deref()) {
+                (Some(_), None) => true,
+                (Some(_), Some(p)) => p.lossy,
+                (None, _) => false,
+            };
+            let inputs = if lossy {
+                crate::compress::compress_all(
+                    compressor.as_mut().unwrap().as_mut(),
+                    "embedding",
+                    &raw,
+                )
+            } else {
+                raw
+            };
             let result = planned
                 .scheme
                 .run(&inputs, driver.as_mut(), &mut scratch)
@@ -516,7 +586,10 @@ impl SimDriver {
                         self.cfg.transport.name()
                     )
                 });
-            // Correctness self-check on the first iteration.
+            // Correctness self-check on the first iteration: the sync
+            // must reproduce the sum of whatever it was given — the
+            // compressed tensors when the lossy tier ran (the lossy
+            // error lives in the residuals, not the collective).
             if it == 0 && !self.cfg.scheme.starts_with("strawman") {
                 schemes::verify_outputs(&result, &inputs);
             }
@@ -536,6 +609,16 @@ impl SimDriver {
                         .as_ref()
                         .map(|p| p.predicted_class_at_scale(scale)),
                     measured_by_class: self.full_size_time_by_class(&result.report),
+                    lossy,
+                    compressor: if lossy {
+                        Some(self.cfg.compress.label())
+                    } else {
+                        None
+                    },
+                    predicted_lossless: planned
+                        .plan
+                        .as_ref()
+                        .map(|p| p.predicted_lossless_at_scale(scale)),
                 });
             }
             emb_sync_times.push(measured);
@@ -554,6 +637,9 @@ impl SimDriver {
         let iter_time = compute_time + intra_time + mlp_sync_time + emb_sync_mean;
         let throughput =
             (self.sample_gpus() * self.cfg.profile.batch_size) as f64 / iter_time;
+        let bytes_saved = compressor
+            .as_ref()
+            .map_or(0, |c| (c.stats().bytes_saved() as f64 * self.scale_factor()) as u64);
 
         SimResult {
             scheme: self.planner.scheme_label(),
@@ -569,6 +655,7 @@ impl SimDriver {
             engine_serialized: None,
             engine_overlapped: None,
             engine_forward_finish: None,
+            bytes_saved,
         }
     }
 
@@ -594,6 +681,10 @@ impl SimDriver {
         let mut overlapped = Vec::with_capacity(self.cfg.iterations);
         let mut fwd_finishes = Vec::with_capacity(self.cfg.iterations);
         let mut plan: Vec<BucketPlanReport> = Vec::new();
+        // Engine path: the compressor runs up-front on every layer
+        // (the engine re-buckets tensors, so the per-bucket plan gate
+        // of the flat path has no stable tensor to key residuals on).
+        let mut compressor = self.cfg.compress.build();
         for it in 0..self.cfg.iterations as u64 {
             // Per-endpoint layer tensors. Flat path: aggregate each
             // layer over the machine's g GPUs (intra-machine NVLink
@@ -625,6 +716,20 @@ impl SimDriver {
                     })
                     .collect()
             };
+            let machine_layers: Vec<Vec<crate::tensor::CooTensor>> = match &mut compressor {
+                None => machine_layers,
+                Some(c) => machine_layers
+                    .into_iter()
+                    .enumerate()
+                    .map(|(rank, layers)| {
+                        layers
+                            .into_iter()
+                            .enumerate()
+                            .map(|(l, t)| c.compress(&format!("layer{l}"), rank, &t))
+                            .collect()
+                    })
+                    .collect(),
+            };
             let run = engine.run(&specs, &machine_layers, self.planner.as_ref(), &net, |r| {
                 self.full_size_time(r)
             });
@@ -649,6 +754,14 @@ impl SimDriver {
                             .as_ref()
                             .map(|p| p.predicted_class_at_scale(scale)),
                         measured_by_class: self.full_size_time_by_class(&b.report),
+                        lossy: compressor.is_some(),
+                        compressor: compressor
+                            .as_ref()
+                            .map(|_| self.cfg.compress.label()),
+                        predicted_lossless: b
+                            .plan
+                            .as_ref()
+                            .map(|p| p.predicted_lossless_at_scale(scale)),
                     })
                     .collect();
             }
@@ -678,6 +791,9 @@ impl SimDriver {
         let engine_forward_finish = intra_time + mlp_sync_time + mean(&fwd_finishes);
         let throughput =
             (self.sample_gpus() * self.cfg.profile.batch_size) as f64 / engine_overlapped;
+        let bytes_saved = compressor
+            .as_ref()
+            .map_or(0, |c| (c.stats().bytes_saved() as f64 * self.scale_factor()) as u64);
 
         SimResult {
             scheme: self.planner.scheme_label(),
@@ -693,6 +809,7 @@ impl SimDriver {
             engine_serialized: Some(engine_serialized),
             engine_overlapped: Some(engine_overlapped),
             engine_forward_finish: Some(engine_forward_finish),
+            bytes_saved,
         }
     }
 }
@@ -735,6 +852,62 @@ mod tests {
     #[test]
     fn unknown_scheme_rejected() {
         assert!(SimDriver::new(cfg("nccl-magic", 4)).is_err());
+    }
+
+    #[test]
+    fn fixed_scheme_compression_saves_bytes_and_reports_lossy() {
+        let mut c = cfg("zen", 4);
+        c.compress = crate::compress::CompressSpec::TopK(0.005);
+        let lossy = SimDriver::new(c).unwrap().run();
+        let base = SimDriver::new(cfg("zen", 4)).unwrap().run();
+        assert!(lossy.bytes_saved > 0, "top-k dropped no entries");
+        assert!(lossy.plan[0].lossy);
+        assert_eq!(lossy.plan[0].compressor.as_deref(), Some("topk:0.005"));
+        assert!(
+            lossy.emb_sync_mean < base.emb_sync_mean,
+            "compressed sync {} not cheaper than lossless {}",
+            lossy.emb_sync_mean,
+            base.emb_sync_mean
+        );
+        assert_eq!(base.bytes_saved, 0);
+        assert!(!base.plan[0].lossy);
+    }
+
+    #[test]
+    fn auto_gates_compression_on_the_plan() {
+        // Unarmed (budget 0): `--compress` alone never fires under auto.
+        let mut c0 = cfg("auto", 8);
+        c0.compress = crate::compress::CompressSpec::TopK(0.001);
+        let r0 = SimDriver::new(c0).unwrap().run();
+        assert!(!r0.plan[0].lossy);
+        assert_eq!(r0.bytes_saved, 0);
+        // Armed: compression runs exactly when the plan says lossy.
+        let mut c = cfg("auto", 8);
+        c.compress = crate::compress::CompressSpec::TopK(0.001);
+        c.accuracy_budget = 0.05;
+        let r = SimDriver::new(c).unwrap().run();
+        assert!(r.throughput > 0.0);
+        if r.plan[0].lossy {
+            assert!(r.bytes_saved > 0);
+            assert!(
+                r.plan[0].predicted.unwrap() <= r.plan[0].predicted_lossless.unwrap(),
+                "lossy plan predicted above its lossless baseline"
+            );
+        }
+    }
+
+    #[test]
+    fn builder_rejects_bad_accuracy_budget() {
+        let err = SimConfig::builder(profiles::by_name("DeepFM").unwrap(), 4, "zen")
+            .accuracy_budget(f64::NAN)
+            .build()
+            .unwrap_err();
+        assert!(err.contains("accuracy budget"), "{err}");
+        assert!(SimConfig::builder(profiles::by_name("DeepFM").unwrap(), 4, "zen")
+            .compress(crate::compress::CompressSpec::Threshold(0.5))
+            .accuracy_budget(0.02)
+            .build()
+            .is_ok());
     }
 
     #[test]

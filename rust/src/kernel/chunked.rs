@@ -192,3 +192,81 @@ where
         sink(pid(idx), idx, val);
     }
 }
+
+/// Positions (ascending) of the `k` largest-magnitude values — the
+/// chunked form of the Top-k radix selection. The histogram passes
+/// tally into [`HIST_SPLIT`] independent sub-tables (summed per digit;
+/// integer reassociation — exact) and the final emission scan computes
+/// magnitude keys [`LANES`] at a time into a stack block before
+/// consuming them in order, so push order and lower-position tie-breaks
+/// match the scalar kernel bit for bit.
+pub fn select_topk(values: &[f32], k: usize, out: &mut Vec<u32>) {
+    let n = values.len();
+    if k == 0 {
+        return;
+    }
+    if k >= n {
+        out.extend(0..n as u32);
+        return;
+    }
+    let mut prefix: u32 = 0;
+    let mut remaining = k as u32;
+    for pass in 0..4u32 {
+        let shift = 24 - 8 * pass;
+        let mut sub = [[0u32; 256]; HIST_SPLIT];
+        let mut blocks = values.chunks_exact(HIST_SPLIT);
+        for block in &mut blocks {
+            for (t, &v) in sub.iter_mut().zip(block.iter()) {
+                let kb = v.abs().to_bits();
+                if pass == 0 || (kb >> (shift + 8)) == prefix {
+                    t[((kb >> shift) & 0xFF) as usize] += 1;
+                }
+            }
+        }
+        for &v in blocks.remainder() {
+            let kb = v.abs().to_bits();
+            if pass == 0 || (kb >> (shift + 8)) == prefix {
+                sub[0][((kb >> shift) & 0xFF) as usize] += 1;
+            }
+        }
+        let mut digit = 255usize;
+        loop {
+            let c = sub[0][digit] + sub[1][digit] + sub[2][digit] + sub[3][digit];
+            if remaining <= c {
+                prefix = (prefix << 8) | digit as u32;
+                break;
+            }
+            remaining -= c;
+            debug_assert!(digit > 0, "rank exceeds prefix-class population");
+            digit -= 1;
+        }
+    }
+    let threshold = prefix;
+    let mut take_eq = remaining;
+    let mut vc = values.chunks_exact(LANES);
+    let mut base = 0u32;
+    for vb in &mut vc {
+        let mut keys = [0u32; LANES];
+        for (slot, &v) in keys.iter_mut().zip(vb.iter()) {
+            *slot = v.abs().to_bits();
+        }
+        for (off, &kb) in keys.iter().enumerate() {
+            if kb > threshold {
+                out.push(base + off as u32);
+            } else if kb == threshold && take_eq > 0 {
+                take_eq -= 1;
+                out.push(base + off as u32);
+            }
+        }
+        base += LANES as u32;
+    }
+    for (off, &v) in vc.remainder().iter().enumerate() {
+        let kb = v.abs().to_bits();
+        if kb > threshold {
+            out.push(base + off as u32);
+        } else if kb == threshold && take_eq > 0 {
+            take_eq -= 1;
+            out.push(base + off as u32);
+        }
+    }
+}

@@ -105,3 +105,66 @@ where
         sink(pid(idx), idx, val);
     }
 }
+
+/// Positions (ascending) of the `k` largest-magnitude values, appended
+/// into a caller-reserved buffer — heap-free partial selection for the
+/// Top-k compressor. Ties on magnitude break toward the lower position,
+/// so the selection is a pure function of the input. `k = 0` selects
+/// nothing; `k >= len` selects every position.
+///
+/// The magnitude key is `v.abs().to_bits()`: for non-negative floats
+/// the IEEE-754 bit pattern orders exactly like the value, so the
+/// selection runs entirely in integer arithmetic — an MSB-first radix
+/// refinement (four 8-bit passes over a 256-counter histogram, each
+/// restricted to the high-bit prefix fixed so far) pins down the k-th
+/// largest key and the rank within its tie class, then one ascending
+/// scan emits the selected positions. No sorting, no heap, no
+/// allocation beyond the caller's output pushes.
+pub fn select_topk(values: &[f32], k: usize, out: &mut Vec<u32>) {
+    let n = values.len();
+    if k == 0 {
+        return;
+    }
+    if k >= n {
+        out.extend(0..n as u32);
+        return;
+    }
+    // Refinement state: the top `8·pass` bits of the k-th largest key,
+    // and the rank still to place inside that prefix class.
+    let mut prefix: u32 = 0;
+    let mut remaining = k as u32;
+    for pass in 0..4u32 {
+        let shift = 24 - 8 * pass;
+        let mut counts = [0u32; 256];
+        for &v in values {
+            let kb = v.abs().to_bits();
+            if pass == 0 || (kb >> (shift + 8)) == prefix {
+                counts[((kb >> shift) & 0xFF) as usize] += 1;
+            }
+        }
+        let mut digit = 255usize;
+        loop {
+            let c = counts[digit];
+            if remaining <= c {
+                prefix = (prefix << 8) | digit as u32;
+                break;
+            }
+            remaining -= c;
+            debug_assert!(digit > 0, "rank exceeds prefix-class population");
+            digit -= 1;
+        }
+    }
+    // `prefix` is now the full k-th largest key; `remaining` is how many
+    // of the keys equal to it are selected (lowest positions first).
+    let threshold = prefix;
+    let mut take_eq = remaining;
+    for (i, &v) in values.iter().enumerate() {
+        let kb = v.abs().to_bits();
+        if kb > threshold {
+            out.push(i as u32);
+        } else if kb == threshold && take_eq > 0 {
+            take_eq -= 1;
+            out.push(i as u32);
+        }
+    }
+}

@@ -19,6 +19,7 @@
 //! paper table and figure to a module and a regeneration command.
 pub mod analysis;
 pub mod cluster;
+pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod engine;
@@ -51,6 +52,7 @@ pub mod workload;
 /// § "API boundary".
 pub mod prelude {
     pub use crate::cluster::{CommReport, LinkKind, Network, Topology};
+    pub use crate::compress::{CompressSpec, Compressor};
     pub use crate::coordinator::lm::{LmConfig, LmTrainer};
     pub use crate::coordinator::{PipelineConfig, SimConfig, SimDriver, SimResult};
     pub use crate::engine::{EngineConfig, SyncEngine};

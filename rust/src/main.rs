@@ -55,11 +55,14 @@ fn main() -> anyhow::Result<()> {
                          --link tcp25|rdma100 --transport sim|channel|socket|event|threaded\n\
                          --topology NxG[:ia,ib/ea,eb] (two-level cluster)\n\
                          --replan-threshold R (auto hysteresis, default 0.25)\n\
+                         --compress topk:K|threshold:T|none (error-feedback lossy tier)\n\
+                         --accuracy-budget B (arms the auto planner's lossy tier)\n\
                          --pipeline --bucket-kb N --priority-schedule (first-needed-first)\n\
                          --partition-threshold KB (split oversized buckets; 0 = off)\n\
                  train:  --shape tiny|paper_100m --workers N --scheme S|auto --steps N\n\
                          --transport sim|channel|socket|event|threaded --topology NxG\n\
-                         --replan-threshold R\n\
+                         --replan-threshold R --compress topk:K|threshold:T|none\n\
+                         --accuracy-budget B (lossy runs also report the loss delta)\n\
                  worker: --listen ADDR | --connect ADDR (one rank per process)\n\
                          --scheme S --dense-len N --shared N --private N --seed N"
             );
@@ -174,6 +177,8 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     cfg.seed = args.get_u64("seed", 0xbeef);
     cfg.transport = args.transport("transport", TransportKind::Sim)?;
     cfg.replan_threshold = args.ratio("replan-threshold", cfg.replan_threshold)?;
+    cfg.compress = args.compress("compress")?;
+    cfg.accuracy_budget = args.accuracy_budget("accuracy-budget", 0.0)?;
     if let Some(t) = args.topology("topology", cfg.link)? {
         // The topology defines the fabric: machines/gpus follow it so
         // throughput and reporting stay consistent.
@@ -264,21 +269,35 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
     // cost-model mispredictions are printed, not hidden. Fixed schemes
     // predict nothing — their output stays exactly as before the
     // planner existed.
-    if r.plan.iter().any(|p| p.predicted.is_some()) {
+    if r.plan.iter().any(|p| p.predicted.is_some() || p.lossy) {
         println!("  plan:");
         let two_level = cfg.topology.as_ref().map(|t| !t.is_flat()).unwrap_or(false);
         for p in &r.plan {
-            match (p.predicted, p.misprediction()) {
-                (Some(pred), Some(mis)) => println!(
-                    "    {:<14} {:<12} predicted {:>8.3}ms  measured {:>8.3}ms  (x{:.2})",
+            // A degenerate ratio (nothing predicted, or either side
+            // zero) prints as `n/a`, never an inf/NaN.
+            let mis = p
+                .misprediction()
+                .map(|m| format!("(x{m:.2})"))
+                .unwrap_or_else(|| "(n/a)".to_string());
+            // Lossy rows carry the compressor and the lossless
+            // baseline the budget bought its way past.
+            let lossy_tag = match (&p.compressor, p.predicted_lossless) {
+                (Some(c), Some(base)) => {
+                    format!("  lossy[{c}] vs lossless {:.3}ms", base * 1e3)
+                }
+                (Some(c), None) => format!("  lossy[{c}]"),
+                _ => String::new(),
+            };
+            match p.predicted {
+                Some(pred) => println!(
+                    "    {:<14} {:<12} predicted {:>8.3}ms  measured {:>8.3}ms  {mis}{lossy_tag}",
                     p.label,
                     p.scheme,
                     pred * 1e3,
                     p.measured * 1e3,
-                    mis
                 ),
-                _ => println!(
-                    "    {:<14} {:<12} measured {:>8.3}ms",
+                None => println!(
+                    "    {:<14} {:<12} measured {:>8.3}ms{lossy_tag}",
                     p.label,
                     p.scheme,
                     p.measured * 1e3
@@ -306,6 +325,13 @@ fn cmd_sim(args: &Args) -> anyhow::Result<()> {
             }
         }
     }
+    if r.bytes_saved > 0 {
+        println!(
+            "  compression [{}] saved {:.2} MB on the wire (full scale)",
+            cfg.compress.label(),
+            r.bytes_saved as f64 / 1e6
+        );
+    }
     println!("  throughput {:.0} samples/s", r.throughput);
     Ok(())
 }
@@ -319,6 +345,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.lr = args.get_f64("lr", cfg.lr as f64) as f32;
     cfg.seed = args.get_u64("seed", cfg.seed);
     cfg.replan_threshold = args.ratio("replan-threshold", cfg.replan_threshold)?;
+    cfg.compress = args.compress("compress")?;
+    cfg.accuracy_budget = args.accuracy_budget("accuracy-budget", 0.0)?;
     let steps = args.get_usize("steps", 50);
     let scheme = args.get_or("scheme", "zen");
     let link = args.link("link", LinkKind::Tcp25);
@@ -340,19 +368,55 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         scheme,
         transport.name()
     );
-    let mut t = LmTrainer::builder(cfg)
+    let mut t = LmTrainer::builder(cfg.clone())
         .scheme(scheme)
-        .topology(topo)
+        .topology(topo.clone())
         .transport(transport)
         .artifacts_dir(&artifacts)
         .build()?;
     let log = t.run(steps, args.get_usize("log-every", 10), true)?;
+    let final_loss = log.losses.last().copied().unwrap_or(f32::NAN);
     println!(
-        "done: final loss {:.4}, total emb comm {:.1}ms (virtual), compute {:.1}s (wall)",
-        log.losses.last().copied().unwrap_or(f32::NAN),
+        "done: final loss {:.4}, total emb comm {:.1}ms (virtual), compute {:.1}s (wall), \
+         wire {:.2} MB",
+        final_loss,
         log.emb_comm_total * 1e3,
-        log.compute_wall_total
+        log.compute_wall_total,
+        log.comm_bytes_total as f64 / 1e6
     );
+    // Lossy runs replay the identical data lossless so the loss delta
+    // is printed next to the bytes the compressor saved — the
+    // accuracy-vs-volume trade the budget authorized.
+    if cfg.compress.is_active() && log.lossy_steps > 0 {
+        let mut base_cfg = cfg.clone();
+        base_cfg.compress = zen::compress::CompressSpec::None;
+        base_cfg.accuracy_budget = 0.0;
+        let mut base = LmTrainer::builder(base_cfg)
+            .scheme(scheme)
+            .topology(topo)
+            .transport(transport)
+            .artifacts_dir(&artifacts)
+            .build()?;
+        let base_log = base.run(steps, 0, false)?;
+        let base_loss = base_log.losses.last().copied().unwrap_or(f32::NAN);
+        let delta = final_loss - base_loss;
+        let saved = base_log.comm_bytes_total.saturating_sub(log.comm_bytes_total);
+        println!(
+            "lossy [{}]: loss delta {delta:+.4} vs lossless {base_loss:.4} \
+             (budget {}), saved {:.2} MB ({:.1}x less wire), lossy steps {}/{steps}",
+            cfg.compress.label(),
+            cfg.accuracy_budget,
+            saved as f64 / 1e6,
+            base_log.comm_bytes_total as f64 / log.comm_bytes_total.max(1) as f64,
+            log.lossy_steps
+        );
+        if cfg.accuracy_budget > 0.0 && delta as f64 > cfg.accuracy_budget {
+            println!(
+                "warning: loss delta {delta:+.4} exceeds --accuracy-budget {}",
+                cfg.accuracy_budget
+            );
+        }
+    }
     Ok(())
 }
 

@@ -13,7 +13,12 @@
 //!    [`crate::analysis::CostModel`] (with the α–β latency term) for
 //!    all seven candidates in [`crate::schemes::PLANNER_CANDIDATES`]
 //!    and emit the argmin as a [`BucketPlan`], with the full ranked
-//!    cost table kept for auditing.
+//!    cost table kept for auditing. With a `--compress` tier armed
+//!    ([`PlanConfig::lossy_tier_armed`]), a second ranking over
+//!    [`crate::schemes::LOSSY_TIER_CANDIDATES`] at the predicted
+//!    post-compression density decides whether the bucket goes lossy
+//!    ([`plan::plan_bucket_compressed`]) — only where the predicted
+//!    volume strictly beats the best lossless candidate.
 //! 3. **Execute** ([`Planner`]): [`crate::engine::SyncEngine::run`],
 //!    `SimDriver`, and `LmTrainer` consume a `dyn Planner` instead of a
 //!    single scheme. [`FixedPlanner`] preserves the old single-scheme
@@ -30,7 +35,8 @@ pub mod plan;
 
 pub use measure::MeasuredStats;
 pub use plan::{
-    misprediction_ratio, plan_bucket, rank_candidates, BucketPlan, PlanConfig, SchemeCost,
+    misprediction_ratio, plan_bucket, plan_bucket_compressed, rank_candidates,
+    rank_candidates_among, BucketPlan, PlanConfig, SchemeCost,
 };
 
 use std::collections::HashMap;
@@ -120,7 +126,9 @@ pub struct CostPlanner {
     /// Machine count the candidate schemes were constructed for.
     n: usize,
     /// Candidate schemes keyed by their [`schemes::by_name`] name, in
-    /// [`schemes::PLANNER_CANDIDATES`] order.
+    /// [`schemes::LOSSY_TIER_CANDIDATES`] order (a superset of
+    /// [`schemes::PLANNER_CANDIDATES`]; lossless plans never choose the
+    /// extra entries, so building them unconditionally is harmless).
     candidates: Vec<(&'static str, Arc<dyn SyncScheme>)>,
     /// Cached plan per bucket label.
     cache: Mutex<HashMap<String, Arc<BucketPlan>>>,
@@ -134,7 +142,7 @@ impl CostPlanner {
     /// `expected_nnz` parameterize the hash-based candidates exactly as
     /// [`schemes::by_name`] does.
     pub fn new(n: usize, seed: u64, expected_nnz: usize, cfg: PlanConfig) -> Self {
-        let candidates = schemes::PLANNER_CANDIDATES
+        let candidates = schemes::LOSSY_TIER_CANDIDATES
             .iter()
             .map(|&name| {
                 // The executed candidate must match what the cost model
@@ -234,7 +242,12 @@ impl Planner for CostPlanner {
         // labels, so no duplicated work in practice.
         let stats = MeasuredStats::from_tensors(inputs, &[n], &[self.cfg.block_len]);
         let m = inputs[0].dense_len as f64;
-        let plan = Arc::new(plan_bucket(label, m, n, topo, &self.cfg, stats));
+        let plan = if self.cfg.lossy_tier_armed() {
+            let cd1 = compressed_density(&self.cfg.compress, inputs, stats.d1);
+            Arc::new(plan_bucket_compressed(label, m, n, topo, &self.cfg, stats, cd1))
+        } else {
+            Arc::new(plan_bucket(label, m, n, topo, &self.cfg, stats))
+        };
         self.profiles.fetch_add(1, Ordering::Relaxed);
         self.cache
             .lock()
@@ -245,6 +258,32 @@ impl Planner for CostPlanner {
             plan: Some(plan),
             replanned: true,
         }
+    }
+}
+
+/// Predicted mean post-compression per-worker density for one bucket.
+/// Top-k has a closed form; a magnitude threshold has none, so its
+/// survivor fraction is counted from the actual values being planned —
+/// one linear pass, done only on the (cached, O(warm-up)) profiling
+/// path.
+pub fn compressed_density(
+    spec: &crate::compress::CompressSpec,
+    inputs: &[crate::tensor::CooTensor],
+    d1: f64,
+) -> f64 {
+    let dense_len = inputs.first().map_or(0, |t| t.dense_len);
+    match *spec {
+        crate::compress::CompressSpec::Threshold(t) => {
+            if dense_len == 0 || inputs.is_empty() {
+                return d1;
+            }
+            let survivors: usize = inputs
+                .iter()
+                .map(|x| x.values.iter().filter(|v| v.abs() >= t).count())
+                .sum();
+            survivors as f64 / (inputs.len() * dense_len) as f64
+        }
+        _ => spec.predicted_density(dense_len, d1),
     }
 }
 
@@ -330,6 +369,47 @@ mod tests {
         let r = p.plan("b", &denser, &tcp);
         assert!(r.replanned);
         assert_eq!(p.profile_count(), 2);
+    }
+
+    #[test]
+    fn armed_cost_planner_goes_lossy_and_can_execute_the_choice() {
+        let cfg = PlanConfig {
+            compress: crate::compress::CompressSpec::TopK(0.001),
+            accuracy_budget: 0.05,
+            ..PlanConfig::default()
+        };
+        let p = CostPlanner::new(8, 7, 256, cfg);
+        let inputs = random_uniform_inputs(6, 8, 1 << 16, 0.03);
+        let planned = p.plan("b", &inputs, &Topology::flat(8, LinkKind::Tcp25));
+        let plan = planned.plan.as_ref().unwrap();
+        assert!(plan.lossy, "30× reduction must beat lossless");
+        assert!(plan.predicted_lossy_time.unwrap() < plan.predicted_lossless_time);
+        // Whatever the lossy tier chose must be executable by this
+        // planner — including the oktopk-only candidate.
+        assert_eq!(planned.scheme.name().is_empty(), false);
+        // Unarmed planner on the same bucket: lossless plan, no tier.
+        let p2 = CostPlanner::new(8, 7, 256, PlanConfig::default());
+        let planned2 = p2.plan("b", &inputs, &Topology::flat(8, LinkKind::Tcp25));
+        let plan2 = planned2.plan.as_ref().unwrap();
+        assert!(!plan2.lossy);
+        assert!(plan2.predicted_lossy_time.is_none());
+    }
+
+    #[test]
+    fn compressed_density_measures_threshold_survivors() {
+        use crate::compress::CompressSpec;
+        let t = crate::tensor::CooTensor::from_sorted(
+            8,
+            vec![0, 1, 2, 3],
+            vec![0.1, -0.9, 0.5, -0.05],
+        );
+        let d1 = t.density();
+        let spec = CompressSpec::Threshold(0.5);
+        let got = compressed_density(&spec, &[t.clone()], d1);
+        assert!((got - 2.0 / 8.0).abs() < 1e-12, "|v| >= 0.5 keeps 2 of 8");
+        // Top-k path delegates to the closed form.
+        let k = CompressSpec::TopK(2.0);
+        assert_eq!(compressed_density(&k, &[t], d1), k.predicted_density(8, d1));
     }
 
     #[test]

@@ -30,6 +30,16 @@ pub struct PlanConfig {
     pub replan_threshold: f64,
     /// Block length the OmniReduce candidate is costed (and profiled) at.
     pub block_len: usize,
+    /// Lossy compression tier (`--compress`): when active *and*
+    /// [`accuracy_budget`](PlanConfig::accuracy_budget) is positive, the
+    /// planner additionally ranks
+    /// [`crate::schemes::LOSSY_TIER_CANDIDATES`] at the post-compression
+    /// density and picks the lossy plan only where it strictly beats the
+    /// best lossless candidate.
+    pub compress: crate::compress::CompressSpec,
+    /// Tolerated final-loss degradation (absolute) for the lossy tier;
+    /// `0` disarms it even when a compressor is configured.
+    pub accuracy_budget: f64,
 }
 
 impl Default for PlanConfig {
@@ -37,7 +47,16 @@ impl Default for PlanConfig {
         PlanConfig {
             replan_threshold: 0.25,
             block_len: crate::tensor::block::DEFAULT_BLOCK,
+            compress: crate::compress::CompressSpec::None,
+            accuracy_budget: 0.0,
         }
+    }
+}
+
+impl PlanConfig {
+    /// Whether the lossy tier participates in planning at all.
+    pub fn lossy_tier_armed(&self) -> bool {
+        self.compress.is_active() && self.accuracy_budget > 0.0
     }
 }
 
@@ -75,6 +94,26 @@ pub struct BucketPlan {
     pub predicted_class_alpha: [f64; 2],
     /// Every candidate's prediction, sorted ascending by time.
     pub costs: Vec<SchemeCost>,
+    /// Best *lossless* candidate's predicted time — equals
+    /// `predicted_time` for lossless plans; for lossy plans it is the
+    /// baseline the compression tier beat (the "bytes you would have
+    /// paid" side of the lossy-vs-lossless report).
+    pub predicted_lossless_time: f64,
+    /// Bandwidth part of `predicted_lossless_time` (rescales with
+    /// tensor size; the remainder is its size-invariant latency).
+    pub predicted_lossless_bw: f64,
+    /// Best lossy-tier candidate's predicted time at the
+    /// post-compression density; `None` when the tier was not ranked.
+    pub predicted_lossy_time: Option<f64>,
+    /// Whether the chosen scheme runs on *compressed* gradients — only
+    /// ever true when the lossy prediction strictly beat the best
+    /// lossless one under an armed accuracy budget.
+    pub lossy: bool,
+    /// Predicted post-compression per-worker density the lossy tier was
+    /// priced at (`None` for lossless plans).
+    pub lossy_d1: Option<f64>,
+    /// Compressor label (`topk:K`/`threshold:T`) for lossy plans.
+    pub compressor: Option<String>,
     /// Mean per-worker density the plan was derived at (hysteresis
     /// anchor).
     pub planned_d1: f64,
@@ -88,9 +127,17 @@ pub struct BucketPlan {
 /// measured / predicted (> 1 = cost model optimistic): the one
 /// misprediction definition shared by every reporting surface
 /// (`engine::BucketOutcome`, `coordinator::BucketPlanReport`). `None`
-/// when nothing was predicted; 1.0 (neutral) for a zero prediction.
+/// when nothing was predicted, and also when either side is zero — a
+/// zero prediction (one machine, empty bucket) or a zero measurement
+/// has no meaningful ratio, and printers must show `n/a`, never an
+/// `inf`/`NaN` born from the division.
 pub fn misprediction_ratio(measured: f64, predicted: Option<f64>) -> Option<f64> {
-    predicted.map(|p| if p > 0.0 { measured / p } else { 1.0 })
+    let p = predicted?;
+    if p > 0.0 && measured > 0.0 {
+        Some(measured / p)
+    } else {
+        None
+    }
 }
 
 impl BucketPlan {
@@ -99,6 +146,14 @@ impl BucketPlan {
     /// twin of `SimDriver::full_size_time`.
     pub fn predicted_at_scale(&self, scale: f64) -> f64 {
         self.predicted_bw * scale + self.predicted_alpha
+    }
+
+    /// The lossless baseline rescaled like
+    /// [`predicted_at_scale`](BucketPlan::predicted_at_scale) — what
+    /// the bucket would have cost without the lossy tier.
+    pub fn predicted_lossless_at_scale(&self, scale: f64) -> f64 {
+        self.predicted_lossless_bw * scale
+            + (self.predicted_lossless_time - self.predicted_lossless_bw)
     }
 
     /// Per-link-class prediction at `scale ×` the planned tensor size
@@ -143,8 +198,22 @@ pub fn rank_candidates<S: SparsityStats>(
     block_len: usize,
     stats: &S,
 ) -> Vec<SchemeCost> {
+    rank_candidates_among(&crate::schemes::PLANNER_CANDIDATES, m, n, topo, block_len, stats)
+}
+
+/// [`rank_candidates`] over an explicit name list — the lossy tier
+/// ranks [`crate::schemes::LOSSY_TIER_CANDIDATES`] at the
+/// post-compression density through the same code path.
+pub fn rank_candidates_among<S: SparsityStats>(
+    names: &[&'static str],
+    m: f64,
+    n: usize,
+    topo: &Topology,
+    block_len: usize,
+    stats: &S,
+) -> Vec<SchemeCost> {
     let cm = cost_model(m, n, topo, stats);
-    let mut costs: Vec<SchemeCost> = crate::schemes::PLANNER_CANDIDATES
+    let mut costs: Vec<SchemeCost> = names
         .iter()
         .map(|&name| SchemeCost {
             scheme: name,
@@ -194,10 +263,115 @@ pub fn plan_bucket(
             (full.inter - bw_only.inter).max(0.0),
         ],
         costs,
+        predicted_lossless_time: predicted_time,
+        predicted_lossless_bw: bw_only.total,
+        predicted_lossy_time: None,
+        lossy: false,
+        lossy_d1: None,
+        compressor: None,
         planned_d1: stats.d1,
         planned_topo: topo.clone(),
         stats,
     }
+}
+
+/// The measured statistics rescaled to a predicted post-compression
+/// density: aggregate densities shrink by the survivor ratio (capped at
+/// 1), skewness carries over (compression keeps the largest entries,
+/// which live where the mass already was), and the block share falls
+/// back to the independence approximation — Top-k survivors are
+/// scattered, so the raw tensor's measured clustering no longer
+/// applies. At ratio 1 (no reduction) the view is bit-identical to the
+/// underlying stats, so a degenerate compressor can never flip a plan.
+struct ScaledStats<'a> {
+    inner: &'a MeasuredStats,
+    ratio: f64,
+}
+
+impl SparsityStats for ScaledStats<'_> {
+    fn agg_density(&self, j: usize) -> f64 {
+        (self.inner.agg_density(j) * self.ratio).min(1.0)
+    }
+
+    fn skewness(&self, n: usize) -> f64 {
+        self.inner.skewness(n)
+    }
+
+    fn block_density(&self, j: usize, block_len: usize) -> f64 {
+        if self.ratio >= 1.0 {
+            self.inner.block_density(j, block_len)
+        } else {
+            crate::analysis::costmodel::independent_block_density(self.agg_density(j), block_len)
+        }
+    }
+}
+
+/// [`plan_bucket`], then — when the config arms the lossy tier — a
+/// second ranking of [`crate::schemes::LOSSY_TIER_CANDIDATES`] at the
+/// predicted post-compression density `compressed_d1`. The lossy plan
+/// is adopted only where it *strictly* beats the best lossless
+/// prediction; both predictions are kept on the plan so every report
+/// can show the volume the budget actually bought.
+pub fn plan_bucket_compressed(
+    label: &str,
+    m: f64,
+    n: usize,
+    topo: &Topology,
+    cfg: &PlanConfig,
+    stats: MeasuredStats,
+    compressed_d1: f64,
+) -> BucketPlan {
+    let mut plan = plan_bucket(label, m, n, topo, cfg, stats);
+    if !cfg.lossy_tier_armed() {
+        return plan;
+    }
+    let ratio = if plan.stats.d1 > 0.0 {
+        (compressed_d1 / plan.stats.d1).min(1.0)
+    } else {
+        1.0
+    };
+    let (lossy_costs, full, bw_only) = {
+        let scaled = ScaledStats {
+            inner: &plan.stats,
+            ratio,
+        };
+        let costs = rank_candidates_among(
+            &crate::schemes::LOSSY_TIER_CANDIDATES,
+            m,
+            n,
+            topo,
+            cfg.block_len,
+            &scaled,
+        );
+        let best = costs.first().expect("non-empty lossy candidate list").scheme;
+        let full: ClassedTime = cost_model(m, n, topo, &scaled)
+            .time_for_by_class(best, cfg.block_len)
+            .expect("lossy candidate has a closed form");
+        let bw_only: ClassedTime =
+            CostModel::new(m, n, topo.inter.bandwidth_bps() / 32.0, &scaled)
+                .with_topology(TopoCost::from_topology(topo).without_latency())
+                .time_for_by_class(best, cfg.block_len)
+                .expect("lossy candidate has a closed form");
+        (costs, full, bw_only)
+    };
+    let best_lossy = lossy_costs[0].time;
+    plan.predicted_lossy_time = Some(best_lossy);
+    if best_lossy < plan.predicted_lossless_time {
+        plan.chosen = lossy_costs[0].scheme;
+        plan.predicted_time = best_lossy;
+        plan.predicted_bw = bw_only.total;
+        plan.predicted_alpha = best_lossy - bw_only.total;
+        plan.predicted_class_bw = [bw_only.intra, bw_only.inter];
+        plan.predicted_class_alpha = [
+            (full.intra - bw_only.intra).max(0.0),
+            (full.inter - bw_only.inter).max(0.0),
+        ];
+        plan.costs = lossy_costs;
+        plan.lossy = true;
+        plan.lossy_d1 = Some(compressed_d1);
+        plan.compressor = Some(cfg.compress.label());
+    }
+    plan
 }
 
 #[cfg(test)]
@@ -279,6 +453,55 @@ mod tests {
         let doubled = plan.predicted_at_scale(2.0);
         assert!(doubled > plan.predicted_time);
         assert!((doubled - (2.0 * plan.predicted_bw + plan.predicted_alpha)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn misprediction_ratio_guards_degenerate_zeroes() {
+        assert_eq!(misprediction_ratio(1.0, None), None);
+        assert_eq!(misprediction_ratio(1.0, Some(0.0)), None, "zero prediction");
+        assert_eq!(misprediction_ratio(0.0, Some(1.0)), None, "zero measurement");
+        assert_eq!(misprediction_ratio(0.0, Some(0.0)), None);
+        assert_eq!(misprediction_ratio(2.0, Some(1.0)), Some(2.0));
+    }
+
+    #[test]
+    fn lossy_tier_wins_only_under_real_reduction() {
+        let stats = measured(8, 0.02);
+        let d1 = stats.d1;
+        let topo = Topology::flat(8, LinkKind::Tcp25);
+        let cfg = PlanConfig {
+            compress: crate::compress::CompressSpec::TopK(0.001),
+            accuracy_budget: 0.05,
+            ..PlanConfig::default()
+        };
+        let m = (1 << 18) as f64;
+        // 20× density reduction: the lossy prediction must win, and the
+        // plan must carry both sides of the comparison.
+        let compressed = cfg.compress.predicted_density(1 << 18, d1);
+        assert!(compressed < d1 / 10.0);
+        let plan = plan_bucket_compressed("c", m, 8, &topo, &cfg, stats.clone(), compressed);
+        assert!(plan.lossy, "a real volume reduction must be taken");
+        let lossy_t = plan.predicted_lossy_time.unwrap();
+        assert!(lossy_t < plan.predicted_lossless_time);
+        assert_eq!(plan.predicted_time, lossy_t);
+        assert_eq!(plan.lossy_d1, Some(compressed));
+        assert_eq!(plan.compressor.as_deref(), Some("topk:0.001"));
+        assert!(crate::schemes::LOSSY_TIER_CANDIDATES.contains(&plan.chosen));
+        // Degenerate compressor (k >= nnz → no reduction): the lossy
+        // ranking prices identically to lossless plus the Ok-Topk
+        // premium, so lossless must win and the plan stays bit-lossless.
+        let same = plan_bucket_compressed("c", m, 8, &topo, &cfg, stats.clone(), d1);
+        assert!(!same.lossy, "no reduction → never trade accuracy");
+        assert_eq!(same.predicted_time, same.predicted_lossless_time);
+        assert!(same.predicted_lossy_time.unwrap() >= same.predicted_lossless_time);
+        // Disarmed budget: the lossy tier is never even ranked.
+        let cfg0 = PlanConfig {
+            accuracy_budget: 0.0,
+            ..cfg.clone()
+        };
+        let off = plan_bucket_compressed("c", m, 8, &topo, &cfg0, stats, compressed);
+        assert!(!off.lossy);
+        assert!(off.predicted_lossy_time.is_none());
     }
 
     #[test]

@@ -19,6 +19,7 @@
 
 pub mod agsparse;
 pub mod dense;
+pub mod oktopk;
 pub mod omnireduce;
 pub mod sparcml;
 pub mod sparse_ps;
@@ -27,6 +28,7 @@ pub mod zen;
 
 pub use agsparse::{AgPattern, AgSparse};
 pub use dense::DenseAllReduce;
+pub use oktopk::OkTopk;
 pub use omnireduce::OmniReduce;
 pub use sparcml::SparCml;
 pub use sparse_ps::SparsePs;
@@ -299,9 +301,28 @@ pub const PLANNER_CANDIDATES: [&str; 7] = [
     "zen",
 ];
 
+/// The candidate list the planner ranks when a lossy compression tier
+/// is armed (`--compress topk:K|threshold:T`): every lossless candidate
+/// plus the Ok-Topk balanced sparse allreduce, which only pays off on
+/// the skewed survivor sets compression produces. The compressor itself
+/// stays outside the scheme (error feedback in [`crate::compress`]),
+/// so each candidate still synchronizes exactly — "lossy" is a property
+/// of the tier, never of a scheme silently dropping gradients.
+pub const LOSSY_TIER_CANDIDATES: [&str; 8] = [
+    "allreduce",
+    "agsparse",
+    "sparcml",
+    "sparseps",
+    "omnireduce",
+    "zen-coo",
+    "zen",
+    "oktopk",
+];
+
 /// Construct a scheme by CLI name. Recognized: `allreduce`/`dense`,
-/// `agsparse`, `sparcml`, `sparseps`, `omnireduce`, `zen`, `zen-coo`,
-/// `strawman:<mem_multiple>` (lossy). `auto` is *not* a scheme — it is
+/// `agsparse`, `sparcml`, `sparseps`, `omnireduce`, `oktopk`, `zen`,
+/// `zen-coo`, `strawman:<mem_multiple>` (lossy). `auto` is *not* a
+/// scheme — it is
 /// resolved one level up by `crate::planner::by_name` into a
 /// cost-model-driven per-bucket choice among [`PLANNER_CANDIDATES`].
 pub fn by_name(
@@ -322,6 +343,7 @@ pub fn by_name(
         "agsparse-hier" => Box::new(AgSparse::new(AgPattern::Hierarchy)),
         "sparcml" => Box::new(SparCml::new()),
         "sparseps" | "sparse-ps" => Box::new(SparsePs::new()),
+        "oktopk" | "ok-topk" => Box::new(OkTopk::new()),
         "omnireduce" => Box::new(OmniReduce::new(crate::tensor::block::DEFAULT_BLOCK)),
         "zen" => Box::new(Zen::new(seed, n, expected_nnz, ZenIndexFormat::HashBitmap)),
         "zen-coo" => Box::new(Zen::new(seed, n, expected_nnz, ZenIndexFormat::Coo)),
@@ -380,6 +402,20 @@ mod tests {
     #[test]
     fn planner_candidates_all_constructible() {
         for name in PLANNER_CANDIDATES {
+            let s = by_name(name, 6, 1, 128)
+                .unwrap_or_else(|| panic!("candidate '{name}' must construct"));
+            assert!(!s.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn lossy_tier_extends_lossless_candidates() {
+        assert_eq!(
+            &LOSSY_TIER_CANDIDATES[..PLANNER_CANDIDATES.len()],
+            &PLANNER_CANDIDATES[..],
+            "lossy tier is a strict superset, same order"
+        );
+        for name in LOSSY_TIER_CANDIDATES {
             let s = by_name(name, 6, 1, 128)
                 .unwrap_or_else(|| panic!("candidate '{name}' must construct"));
             assert!(!s.name().is_empty());

@@ -1,0 +1,179 @@
+//! Lossy-compression integration (PR 9): the error-feedback contract
+//! as a bit-level property, across compressors and iterations.
+//!
+//! The compressor's invariant is *conservation*, not approximation:
+//! selection partitions the merged accumulator (previous residual +
+//! new gradient) without any arithmetic at the split, so over any
+//! horizon T
+//!
+//!     Σ_t sent_t  +  residual_T  ==  Σ_t grad_t
+//!
+//! exactly — bit-for-bit when every gradient value is an exact binary
+//! fraction, because then every f32 addition along both sides is
+//! exact. This suite drives T iterations of quantized gradients
+//! (multiples of 2⁻¹⁰, bounded numerators) through Top-k and
+//! Threshold and compares dense accumulations bitwise.
+
+use zen::compress::{compress_all, CompressSpec, Compressor, Threshold, TopK};
+use zen::tensor::CooTensor;
+use zen::util::Pcg64;
+
+const DENSE_LEN: usize = 2_048;
+
+/// Random sparse gradients whose values are non-zero multiples of
+/// 2⁻¹⁰ with small integer numerators — every partial sum the
+/// compressor or the test can form stays exactly representable in f32.
+fn quantized_inputs(seed: u64, n: usize, density: f64) -> Vec<CooTensor> {
+    let nnz = ((DENSE_LEN as f64 * density) as usize).max(1);
+    let mut rng = Pcg64::seeded(seed);
+    (0..n)
+        .map(|_| {
+            let mut idx: Vec<u32> = rng
+                .sample_distinct(DENSE_LEN, nnz)
+                .into_iter()
+                .map(|i| i as u32)
+                .collect();
+            idx.sort_unstable();
+            let vals: Vec<f32> = idx
+                .iter()
+                .map(|_| {
+                    // numerator in [-1024, 1024] \ {0}
+                    let num = (rng.below(2048) as i64) - 1024;
+                    let num = if num == 0 { 7 } else { num };
+                    num as f32 * (1.0 / 1024.0)
+                })
+                .collect();
+            CooTensor::from_sorted(DENSE_LEN, idx, vals)
+        })
+        .collect()
+}
+
+/// Dense-accumulate a COO tensor into `acc` (exact adds by input
+/// construction).
+fn add_into(acc: &mut [f32], t: &CooTensor) {
+    for (&i, &v) in t.indices.iter().zip(t.values.iter()) {
+        acc[i as usize] += v;
+    }
+}
+
+fn assert_bitwise_equal(lhs: &[f32], rhs: &[f32], ctx: &str) {
+    for (i, (a, b)) in lhs.iter().zip(rhs.iter()).enumerate() {
+        // Exact-zero results may legitimately differ in sign bit
+        // (the compressor prunes exactly-cancelled entries; the test
+        // accumulator keeps +0.0) — everything else must match
+        // bit-for-bit.
+        let ok = a.to_bits() == b.to_bits() || (*a == 0.0 && *b == 0.0);
+        assert!(
+            ok,
+            "{ctx}: index {i}: {a} ({:08x}) vs {b} ({:08x})",
+            a.to_bits(),
+            b.to_bits()
+        );
+    }
+}
+
+/// T iterations through a compressor; assert per-rank conservation
+/// against the residual exposed by `residual_of`.
+fn conservation_property<C, R>(mut comp: C, residual_of: R, seed: u64, iters: u64, n: usize)
+where
+    C: Compressor,
+    R: Fn(&C, usize) -> CooTensor,
+{
+    let mut total_grad = vec![vec![0f32; DENSE_LEN]; n];
+    let mut total_sent = vec![vec![0f32; DENSE_LEN]; n];
+    let mut ever_dropped = false;
+    for t in 0..iters {
+        let grads = quantized_inputs(seed.wrapping_add(t.wrapping_mul(0x9e37)), n, 0.05);
+        for (rank, g) in grads.iter().enumerate() {
+            let sent = comp.compress("emb", rank, g);
+            add_into(&mut total_grad[rank], g);
+            add_into(&mut total_sent[rank], &sent);
+            ever_dropped |= sent.nnz() < g.nnz();
+        }
+    }
+    assert!(
+        ever_dropped,
+        "{}: the compressor never dropped anything",
+        comp.name()
+    );
+    let stats = comp.stats();
+    assert!(stats.sent_entries < stats.raw_entries, "stats must record the drop");
+    assert!(stats.bytes_saved() > 0);
+    assert_eq!(
+        stats.bytes_saved(),
+        (stats.raw_entries - stats.sent_entries) * 8,
+        "one COO entry is 8 wire bytes"
+    );
+    for rank in 0..n {
+        let mut got = total_sent[rank].clone();
+        add_into(&mut got, &residual_of(&comp, rank));
+        assert_bitwise_equal(
+            &got,
+            &total_grad[rank],
+            &format!("{} rank {rank}: sent + residual != grads", comp.name()),
+        );
+    }
+}
+
+#[test]
+fn topk_error_feedback_conserves_gradient_mass_bitwise() {
+    conservation_property(
+        TopK::new(0.02),
+        |c, rank| c.feedback().residual("emb", rank, DENSE_LEN),
+        0x7e57_0001,
+        12,
+        4,
+    );
+}
+
+#[test]
+fn threshold_error_feedback_conserves_gradient_mass_bitwise() {
+    conservation_property(
+        Threshold::new(0.25),
+        |c, rank| c.feedback().residual("emb", rank, DENSE_LEN),
+        0x7e57_0002,
+        12,
+        4,
+    );
+}
+
+#[test]
+fn compressed_sync_is_lossless_over_the_compressed_tensors() {
+    // The lossy error lives entirely in the residuals: the collective
+    // itself must reproduce the sum of the compressed tensors exactly,
+    // for every scheme, Ok-Topk included.
+    use zen::cluster::{LinkKind, Network};
+    use zen::schemes::{self, SyncScheme, SyncScratch};
+    let n = 4;
+    let raw = quantized_inputs(0xabcd, n, 0.06);
+    let mut comp = CompressSpec::TopK(0.01).build().unwrap();
+    let inputs = compress_all(comp.as_mut(), "emb", &raw);
+    assert!(inputs.iter().zip(raw.iter()).all(|(c, r)| c.nnz() < r.nnz()));
+    let net = Network::new(n, LinkKind::Tcp25);
+    for name in ["zen", "zen-coo", "oktopk", "sparseps", "omnireduce", "allreduce"] {
+        let scheme = schemes::by_name(name, n, 0x5eed, inputs[0].nnz().max(8)).unwrap();
+        let r = scheme.run_sim(&inputs, &net, &mut SyncScratch::new());
+        schemes::verify_outputs(&r, &inputs);
+    }
+}
+
+#[test]
+fn compression_reaches_five_x_at_one_percent_topk() {
+    // The acceptance ratio: k = 1% of the dense length on ~6%-dense
+    // gradients must cut wire entries by at least 5× — including in
+    // steady state, where the residual keeps re-offering unsent mass.
+    let n = 8;
+    let mut comp = TopK::new(0.01);
+    let mut raw_entries = 0u64;
+    let mut sent_entries = 0u64;
+    for t in 0..8u64 {
+        let grads = quantized_inputs(0xfee1 ^ t, n, 0.06);
+        let sent = compress_all(&mut comp, "emb", &grads);
+        raw_entries += grads.iter().map(|g| g.nnz() as u64).sum::<u64>();
+        sent_entries += sent.iter().map(|s| s.nnz() as u64).sum::<u64>();
+    }
+    assert!(
+        sent_entries * 5 <= raw_entries,
+        "top-k at 1% only reached {raw_entries}/{sent_entries} reduction"
+    );
+}

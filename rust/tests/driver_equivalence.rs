@@ -35,6 +35,7 @@ const ALL_SCHEMES: &[&str] = &[
     "omnireduce",
     "zen",
     "zen-coo",
+    "oktopk",
     "strawman:8",
 ];
 
@@ -124,6 +125,78 @@ fn every_scheme_equivalent_across_drivers() {
     for &machines in &[2usize, 3, 4, 5, 8] {
         for name in ALL_SCHEMES {
             equivalence_cell(name, machines, with_socket);
+        }
+    }
+}
+
+/// PR 9 acceptance: compressed synchronization is driver-invariant.
+/// The compressor emits ordinary `CooTensor`s, so every scheme must
+/// ship identical per-stage bytes and bit-identical outputs across
+/// sim/channel/event (and socket where available) when the inputs went
+/// through error-feedback Top-k first — same invariant the raw inputs
+/// satisfy, at post-compression density.
+fn compressed_equivalence_cell(name: &str, machines: usize, with_socket: bool) {
+    use zen::compress::{compress_all, CompressSpec};
+    let dense_len = 4_000;
+    let raw = random_inputs(0xc0de ^ machines as u64, machines, dense_len, 0.03);
+    let mut compressor = CompressSpec::TopK(0.01).build().unwrap();
+    let inputs = compress_all(compressor.as_mut(), "eq", &raw);
+    for (t, r) in inputs.iter().zip(raw.iter()) {
+        assert!(t.nnz() < r.nnz(), "top-k must reduce nnz in this cell");
+    }
+    let nnz = inputs[0].nnz().max(8);
+    let scheme = schemes::by_name(name, machines, 0x7ace, nnz).unwrap();
+    let net = Network::new(machines, LinkKind::Tcp25);
+    let ctx = format!("compressed {name} m={machines}");
+
+    let mut kinds = vec![
+        TransportKind::Sim,
+        TransportKind::Channel,
+        TransportKind::Event,
+    ];
+    if with_socket {
+        kinds.push(TransportKind::Socket);
+    }
+    let mut baseline: Option<(TransportKind, zen::schemes::SyncOutput)> = None;
+    for kind in kinds {
+        let mut drv = make_driver(kind, &net)
+            .unwrap_or_else(|e| panic!("{ctx}: {} driver setup: {e}", kind.name()));
+        let got = scheme
+            .run(&inputs, drv.as_mut(), &mut SyncScratch::new())
+            .unwrap_or_else(|e| panic!("{ctx}: {} sync failed: {e}", kind.name()));
+        match &baseline {
+            None => {
+                // The sync itself stays lossless: outputs must equal
+                // the sum of the *compressed* inputs exactly.
+                if !name.starts_with("strawman") {
+                    schemes::verify_outputs(&got, &inputs);
+                }
+                baseline = Some((kind, got));
+            }
+            Some((base_kind, base)) => {
+                let pair = format!("{ctx}: {} vs {}", base_kind.name(), kind.name());
+                for (s, c) in base.report.stages.iter().zip(got.report.stages.iter()) {
+                    assert_eq!(s.sent, c.sent, "{pair}: stage '{}' sent", s.name);
+                    assert_eq!(s.recv, c.recv, "{pair}: stage '{}' recv", s.name);
+                    assert_eq!(s.time, c.time, "{pair}: stage '{}' time", s.name);
+                }
+                assert_eq!(
+                    base.report.stages.len(),
+                    got.report.stages.len(),
+                    "{pair}: stage count"
+                );
+                assert_eq!(base.outputs, got.outputs, "{pair}: outputs diverge");
+            }
+        }
+    }
+}
+
+#[test]
+fn every_scheme_equivalent_across_drivers_compressed() {
+    let with_socket = sockets_available();
+    for &machines in &[2usize, 4, 8] {
+        for name in ALL_SCHEMES {
+            compressed_equivalence_cell(name, machines, with_socket);
         }
     }
 }

@@ -31,6 +31,7 @@ const ALL_SCHEMES: &[&str] = &[
     "omnireduce",
     "zen",
     "zen-coo",
+    "oktopk",
     "strawman:8",
 ];
 
@@ -140,6 +141,41 @@ fn one_empty_worker_every_scheme() {
         for name in ALL_SCHEMES {
             let inputs = one_empty(0x10e ^ n as u64, n);
             check_cell(name, &inputs, !name.starts_with("strawman"));
+        }
+    }
+}
+
+/// PR 9 degenerate-k hardening, riding the same grid: `topk:0` must
+/// turn every gradient into the all-empty case above (zero entries on
+/// the wire, everything in the residual), and a k ≥ nnz Top-k must be
+/// bit-identical lossless — the compressor degrades to a pass-through
+/// and no scheme may notice it ran.
+#[test]
+fn degenerate_topk_rides_the_empty_gradient_grid() {
+    use zen::compress::{compress_all, CompressSpec};
+    for n in [2usize, 4, 5] {
+        let raw = one_empty(0x70b ^ n as u64, n);
+
+        // k = 0: every compressed tensor is empty; the full grid must
+        // behave exactly like the all-empty case.
+        let mut zero = CompressSpec::TopK(0.0).build().unwrap();
+        let zeroed = compress_all(zero.as_mut(), "g", &raw);
+        assert!(zeroed.iter().all(|t| t.nnz() == 0), "topk:0 must send nothing");
+        for name in ALL_SCHEMES {
+            check_cell(name, &zeroed, true);
+        }
+
+        // k ≥ nnz (density 1.0 → k = dense_len): bit-identical
+        // pass-through, residuals stay empty.
+        let mut full = zen::compress::TopK::new(1.0);
+        let passed = compress_all(&mut full, "g", &raw);
+        assert_eq!(passed, raw, "k >= nnz must be bit-identical lossless");
+        for (rank, t) in raw.iter().enumerate() {
+            let resid = full.feedback().residual("g", rank, t.dense_len);
+            assert_eq!(resid.nnz(), 0, "rank {rank}: lossless pass left a residual");
+        }
+        for name in ALL_SCHEMES {
+            check_cell(name, &passed, !name.starts_with("strawman"));
         }
     }
 }

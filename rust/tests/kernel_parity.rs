@@ -231,6 +231,44 @@ fn partition_scatter_matches_scalar_visit_order() {
 }
 
 #[test]
+fn select_topk_matches_scalar_and_a_sort_oracle() {
+    // PR 9: the radix top-k selector behind the lossy compression tier.
+    // Chunked must be bit-identical to scalar, and both must equal the
+    // brute-force oracle: the k largest |v| keys, ties broken toward
+    // the smallest index, output ascending. Duplicate magnitudes and
+    // ±0.0 exercise the tie-rank path.
+    let mut rng = Pcg64::seeded(0x70b5);
+    for n in lens() {
+        let mut values: Vec<f32> = (0..n)
+            .map(|_| (rng.next_f32() * 2.0 - 1.0) * 8.0)
+            .collect();
+        // Inject duplicates and signed zeros at deterministic spots.
+        for i in (0..n).step_by(5) {
+            values[i] = if i % 2 == 0 { 0.5 } else { -0.5 };
+        }
+        if n > 2 {
+            values[1] = 0.0;
+            values[2] = -0.0;
+        }
+        for k in [0usize, 1, 2, n / 3, n.saturating_sub(1), n, n + 7] {
+            let mut s = Vec::new();
+            let mut c = Vec::new();
+            scalar::select_topk(&values, k, &mut s);
+            chunked::select_topk(&values, k, &mut c);
+            assert_eq!(s, c, "n={n} k={k}: chunked diverges from scalar");
+
+            // Oracle: sort by (|v| bits desc, index asc), take k, sort
+            // the survivors ascending.
+            let mut ranked: Vec<u32> = (0..n as u32).collect();
+            ranked.sort_by_key(|&i| (std::cmp::Reverse(values[i as usize].abs().to_bits()), i));
+            let mut expect: Vec<u32> = ranked.into_iter().take(k.min(n)).collect();
+            expect.sort_unstable();
+            assert_eq!(s, expect, "n={n} k={k}: selector diverges from oracle");
+        }
+    }
+}
+
+#[test]
 fn lanes_is_the_documented_block_width() {
     // The suite's boundary lengths are built around this constant;
     // if LANES changes, lens() must be revisited.

@@ -204,6 +204,69 @@ fn auto_at_1024_ranks_completes_on_the_event_driver() {
 }
 
 #[test]
+fn lossy_tier_only_fires_when_compression_beats_lossless() {
+    // PR 9 acceptance pin: an armed planner adopts the lossy tier only
+    // where the predicted post-compression volume beats the best
+    // lossless plan — and executing the choice on the compressed
+    // tensors is measurably cheaper than the lossless argmin on the
+    // raw ones. A pass-through compressor must never flip the plan.
+    use zen::compress::{compress_all, CompressSpec};
+    let machines = 8;
+    let dense_len = 1 << 16;
+    let link = LinkKind::Tcp25;
+    let topo = Topology::flat(machines, link);
+    let inputs = random_uniform_inputs(0x9a55, machines, dense_len, 0.03);
+    let cfg = PlanConfig {
+        compress: CompressSpec::TopK(0.001),
+        accuracy_budget: 0.05,
+        ..PlanConfig::default()
+    };
+    let planner = CostPlanner::new(machines, 0x5eed, 256, cfg.clone());
+    let planned = planner.plan("emb", &inputs, &topo);
+    let plan = planned.plan.expect("auto always plans");
+    assert!(plan.lossy, "3% -> 0.1% density must arm the lossy tier");
+    assert!(plan.predicted_lossy_time.unwrap() < plan.predicted_lossless_time);
+    assert_eq!(plan.compressor.as_deref(), Some("topk:0.001"));
+
+    // Transport-observed comparison: the lossy choice on compressed
+    // tensors vs the lossless argmin on the raw ones.
+    let net = Network::new(machines, link);
+    let mut comp = cfg.compress.build().unwrap();
+    let compressed = compress_all(comp.as_mut(), "emb", &inputs);
+    let lossy_run = planned
+        .scheme
+        .run_sim(&compressed, &net, &mut SyncScratch::new());
+    schemes::verify_outputs(&lossy_run, &compressed);
+    let lossless = plan_bucket(
+        "emb",
+        dense_len as f64,
+        machines,
+        &topo,
+        &PlanConfig::default(),
+        MeasuredStats::from_tensors(&inputs, &[machines], &[DEFAULT_BLOCK]),
+    );
+    let base_time = measured_time(lossless.chosen, &inputs, &net);
+    assert!(
+        lossy_run.report.comm_time() < base_time,
+        "compressed sync ({:.2e}s) not cheaper than lossless {} ({base_time:.2e}s)",
+        lossy_run.report.comm_time(),
+        lossless.chosen,
+    );
+
+    // Degenerate: a compressor that keeps everything prices identically
+    // to the lossless table and the strict comparison must hold it off.
+    let cfg_pass = PlanConfig {
+        compress: CompressSpec::TopK(1.0),
+        accuracy_budget: 0.05,
+        ..PlanConfig::default()
+    };
+    let p2 = CostPlanner::new(machines, 0x5eed, 256, cfg_pass);
+    let plan2 = p2.plan("emb", &inputs, &topo).plan.unwrap();
+    assert!(!plan2.lossy, "a pass-through compressor must never win");
+    assert!(plan2.predicted_lossy_time.unwrap() >= plan2.predicted_lossless_time);
+}
+
+#[test]
 fn hysteresis_zero_replans_on_any_drift() {
     let cfg = PlanConfig {
         replan_threshold: 0.0,

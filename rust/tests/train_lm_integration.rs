@@ -93,6 +93,53 @@ fn training_reduces_loss_and_improves_accuracy() {
 }
 
 #[test]
+fn compressed_training_converges_within_budget_and_saves_bytes() {
+    // PR 9 convergence regression: error-feedback Top-k under a fixed
+    // scheme must still learn — final loss within the accuracy budget
+    // of the lossless run on identical data — while shipping a fraction
+    // of the wire bytes. The residuals carry what each step dropped,
+    // so the trajectory differs but the destination must not.
+    if !have_artifacts() {
+        return;
+    }
+    let budget = 0.15f32;
+    let steps = 60;
+    let mk = |compress: zen::compress::CompressSpec| {
+        let mut cfg = LmConfig::tiny();
+        cfg.seed = 0xc0de;
+        cfg.compress = compress;
+        LmTrainer::builder(cfg)
+            .scheme("zen")
+            .workers(4, LinkKind::Tcp25)
+            .artifacts_dir(&artifacts_dir())
+            .build()
+            .unwrap()
+    };
+    let base_log = mk(zen::compress::CompressSpec::None).run(steps, 0, false).unwrap();
+    let mut lossy_t = mk(zen::compress::CompressSpec::TopK(0.05));
+    let lossy_log = lossy_t.run(steps, 0, false).unwrap();
+    let base_loss = base_log.losses.last().copied().unwrap();
+    let lossy_loss = lossy_log.losses.last().copied().unwrap();
+    assert!(
+        lossy_loss < lossy_log.losses.first().copied().unwrap(),
+        "compressed training must still reduce loss"
+    );
+    assert!(
+        (lossy_loss - base_loss).abs() < budget,
+        "top-k run drifted outside the accuracy budget: {lossy_loss} vs {base_loss}"
+    );
+    assert_eq!(lossy_log.lossy_steps, steps, "fixed scheme compresses every step");
+    assert!(
+        lossy_log.comm_bytes_total * 2 < base_log.comm_bytes_total,
+        "top-k should at least halve wire bytes: {} vs {}",
+        lossy_log.comm_bytes_total,
+        base_log.comm_bytes_total
+    );
+    // The lossless run never compresses and accounts zero lossy steps.
+    assert_eq!(base_log.lossy_steps, 0);
+}
+
+#[test]
 fn comm_time_zen_below_allreduce_at_scale() {
     if !have_artifacts() {
         return;
