@@ -1,0 +1,696 @@
+//! `zen check` — exhaustive delivery-order model checking for the
+//! sans-IO protocol layer.
+//!
+//! Every driver in [`crate::wire`] exercises exactly one frame-delivery
+//! order per run, so interleaving bugs in the protocol machines are
+//! invisible to the example-based suites. This module exploits the
+//! sans-IO design to explore *all* of them: the
+//! [`ScheduleDriver`](crate::wire::trace::ScheduleDriver) defers every
+//! delivery into a pending matrix and records each point where more
+//! than one source competed for a destination; [`check_scheme`] then
+//! DFS-enumerates those branch points — replaying a schedule prefix and
+//! continuing canonically — with stage-boundary state hashing so
+//! delivery orders that converge to the same protocol state are
+//! explored once (see the DPOR notes on [`crate::wire::trace`]).
+//!
+//! ## Invariants checked on every explored order
+//!
+//! - **No deadlock** — some machine can always make progress until all
+//!   emit `Complete` ([`Violation::Deadlock`]).
+//! - **No frame outlives its stage or its receiver** — the stage can
+//!   only close with zero pending frames (enforced structurally and by
+//!   `StageAcc`), and a frame sent to or still addressed to a finished
+//!   machine is flagged ([`Violation::SentToFinished`],
+//!   [`Violation::CompletedWithPending`]).
+//! - **Byte conservation** — per stage, the bytes the trace delivered
+//!   equal the sent and received totals `StageAcc` reported
+//!   ([`Violation::StageError`]).
+//! - **Bit-identical outputs** — every explored order must produce the
+//!   same [`fnv_digest`] per endpoint as the canonical order
+//!   ([`Violation::OutputDivergence`]).
+//! - **Losslessness** — for lossless schemes the canonical outputs must
+//!   equal the dense sum of the inputs within float tolerance (the
+//!   `tests/properties.rs` oracle; [`Violation::OracleFailure`]).
+//!
+//! A violation yields a minimized, replayable counterexample: the
+//! shortest schedule prefix whose canonical continuation reproduces the
+//! same violation kind, printable as `src>dst,…` and re-runnable via
+//! `zen check --replay`.
+
+#![deny(clippy::unwrap_used, clippy::expect_used, clippy::cast_possible_truncation)]
+
+use std::collections::HashSet;
+
+use crate::cluster::{CommReport, LinkKind, Network};
+use crate::schemes::{self, SyncScheme, SyncScratch};
+use crate::tensor::CooTensor;
+use crate::util::Pcg64;
+use crate::wire::trace::{
+    fnv1a, mix3, schedule_string, RunRecord, ScheduleDriver, Violation,
+};
+use crate::wire::DriveOutcome;
+
+/// Scheme variants `zen check --all` covers, with whether the lossless
+/// sum oracle applies. The strawman deliberately loses colliding
+/// gradients, so only determinism (bit-identical outputs across orders)
+/// is required of it.
+pub const CHECK_SCHEMES: [(&str, bool); 11] = [
+    ("allreduce", true),
+    ("agsparse", true),
+    ("agsparse-ring", true),
+    ("agsparse-hier", true),
+    ("sparcml", true),
+    ("sparseps", true),
+    ("omnireduce", true),
+    ("oktopk", true),
+    ("zen", true),
+    ("zen-coo", true),
+    ("strawman:8", false),
+];
+
+/// Default schedule budget: far above what exhaustive n ∈ {2, 3}
+/// exploration needs, a hard bound at larger n.
+pub const DEFAULT_MAX_RUNS: usize = 20_000;
+
+/// Exploration counters for one scheme × input-set check.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CheckStats {
+    /// Schedules executed (each is one full protocol run).
+    pub runs: usize,
+    /// Frames delivered across all runs.
+    pub deliveries: u64,
+    /// Branch points encountered (a destination with ≥ 2 competing
+    /// sources).
+    pub choice_points: u64,
+    /// Distinct stage-boundary states in the dedup cache.
+    pub distinct_states: usize,
+    /// Subtrees cut because their boundary state was already explored.
+    pub pruned: u64,
+    /// Peak DFS frontier (stack depth including the running schedule).
+    pub max_frontier: usize,
+    /// True when `max_runs` ended exploration before it was exhausted.
+    pub truncated: bool,
+}
+
+/// A caught violation plus the minimized schedule that reproduces it.
+#[derive(Clone, Debug)]
+pub struct CheckFailure {
+    pub violation: Violation,
+    /// Shortest schedule prefix whose canonical continuation reproduces
+    /// the violation kind (empty = the canonical order itself fails).
+    pub schedule: Vec<(usize, usize)>,
+}
+
+impl CheckFailure {
+    /// The `--replay` argument form of the counterexample.
+    pub fn replay_arg(&self) -> String {
+        schedule_string(&self.schedule)
+    }
+}
+
+/// Result of exploring one scheme over one input set.
+#[derive(Clone, Debug)]
+pub struct CheckReport {
+    pub scheme: String,
+    pub n: usize,
+    pub lossless: bool,
+    /// Digest of the canonical order's outputs (the value every other
+    /// order must reproduce bit-for-bit).
+    pub output_digest: Option<u64>,
+    pub stats: CheckStats,
+    pub failure: Option<CheckFailure>,
+}
+
+impl CheckReport {
+    pub fn ok(&self) -> bool {
+        self.failure.is_none()
+    }
+}
+
+/// FNV-1a fingerprint of one tensor (dense length, indices, value
+/// bits) — the digest `zen worker` prints and the bit-identical-output
+/// invariant compares.
+pub fn fnv_digest(t: &CooTensor) -> u64 {
+    let mut buf = Vec::with_capacity(8 + t.indices.len() * 8);
+    buf.extend_from_slice(&(t.dense_len as u64).to_le_bytes());
+    for &i in &t.indices {
+        buf.extend_from_slice(&i.to_le_bytes());
+    }
+    for &v in &t.values {
+        buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    fnv1a(&buf)
+}
+
+/// Order-sensitive digest of all endpoint outputs of one run.
+pub fn outputs_digest(outs: &[CooTensor]) -> u64 {
+    let mut h = 0x6f75_7470_7574_7321;
+    for (i, t) in outs.iter().enumerate() {
+        h = mix3(h, i as u64, fnv_digest(t));
+    }
+    h
+}
+
+fn index_u32(v: u64) -> u32 {
+    match u32::try_from(v) {
+        Ok(x) => x,
+        Err(_) => panic!("index {v} exceeds the u32 tensor index range"),
+    }
+}
+
+/// Deterministic per-worker sparse gradients with a shared hot set plus
+/// private tails — the §2.2 overlap structure in miniature. Shared by
+/// `zen check`, `zen worker` (both sides derive identical inputs from
+/// the seed), and the checker test suites.
+pub fn gen_inputs(
+    seed: u64,
+    n: usize,
+    dense_len: usize,
+    shared: usize,
+    private: usize,
+) -> Vec<CooTensor> {
+    let mut rng = Pcg64::seeded(seed);
+    let hot: Vec<usize> = rng.sample_distinct(dense_len, shared);
+    (0..n)
+        .map(|w| {
+            let mut idx: Vec<u32> = hot.iter().map(|&i| index_u32(i as u64)).collect();
+            let mut priv_rng = Pcg64::new(seed ^ w as u64, 55);
+            for _ in 0..private {
+                idx.push(index_u32(priv_rng.below(dense_len as u64)));
+            }
+            idx.sort_unstable();
+            idx.dedup();
+            let vals: Vec<f32> = idx
+                .iter()
+                .map(|_| priv_rng.next_f32() * 2.0 - 1.0)
+                .map(|v| if v == 0.0 { 0.5 } else { v })
+                .collect();
+            CooTensor::from_sorted(dense_len, idx, vals)
+        })
+        .collect()
+}
+
+fn panic_message(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Execute one schedule (prefix prescribed, canonical past it) with
+/// machine panics caught and classified. Returns the run outcome or the
+/// first violation, plus the full record either way.
+fn run_schedule(
+    scheme: &dyn SyncScheme,
+    inputs: &[CooTensor],
+    net: &Network,
+    prefix: &[(usize, usize)],
+) -> (Result<DriveOutcome, Violation>, RunRecord) {
+    let mut driver = ScheduleDriver::with_prefix(net.clone(), prefix.to_vec());
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut scratch = SyncScratch::new();
+        driver.run_checked(scheme.protocols(inputs), &mut scratch)
+    }));
+    let record = driver.take_record();
+    match res {
+        Ok(Ok(outcome)) => (Ok(outcome), record),
+        Ok(Err(v)) => (Err(v), record),
+        Err(p) => (
+            Err(Violation::MachinePanic {
+                detail: panic_message(p),
+            }),
+            record,
+        ),
+    }
+}
+
+/// Per-stage byte conservation: the bytes the trace delivered must
+/// equal the sent and received totals `StageAcc` reported.
+fn conservation_violation(record: &RunRecord, report: &CommReport) -> Option<Violation> {
+    if record.boundaries.len() != report.stages.len() {
+        return Some(Violation::StageError {
+            detail: format!(
+                "{} recorded stage boundaries vs {} reported stages",
+                record.boundaries.len(),
+                report.stages.len()
+            ),
+        });
+    }
+    let mut from = 0usize;
+    for (b, st) in record.boundaries.iter().zip(&report.stages) {
+        let delivered: u64 = record.trace[from..b.step].iter().map(|d| d.bytes).sum();
+        let sent: u64 = st.sent.iter().sum();
+        let recv: u64 = st.recv.iter().sum();
+        if delivered != sent || delivered != recv {
+            return Some(Violation::StageError {
+                detail: format!(
+                    "stage '{}': trace delivered {delivered} B, report sent {sent} B / recv {recv} B",
+                    b.name
+                ),
+            });
+        }
+        from = b.step;
+    }
+    None
+}
+
+/// The `tests/properties.rs` losslessness oracle as a closure-friendly
+/// check: every endpoint's aggregate must equal the dense sum of the
+/// inputs within float tolerance.
+fn oracle_violation(outputs: &[CooTensor], inputs: &[CooTensor]) -> Option<Violation> {
+    let reference = schemes::reference_sum(inputs);
+    for (e, out) in outputs.iter().enumerate() {
+        let d = out.to_dense();
+        if d.len() != reference.len() {
+            return Some(Violation::OracleFailure {
+                detail: format!(
+                    "endpoint {e}: dense length {} != reference {}",
+                    d.len(),
+                    reference.len()
+                ),
+            });
+        }
+        for i in 0..d.len() {
+            let (a, b) = (d.values[i], reference.values[i]);
+            if (a - b).abs() > 1e-4_f32.max(b.abs() * 1e-4) {
+                return Some(Violation::OracleFailure {
+                    detail: format!("endpoint {e}, index {i}: got {a}, reference {b}"),
+                });
+            }
+        }
+    }
+    None
+}
+
+/// Shortest prefix of the failing trace whose canonical continuation
+/// reproduces the same violation kind (linear scan from the front; the
+/// full trace always reproduces, so this terminates with a match).
+fn minimize_violation(
+    scheme: &dyn SyncScheme,
+    inputs: &[CooTensor],
+    net: &Network,
+    failing: &RunRecord,
+    v: Violation,
+) -> CheckFailure {
+    let full = failing.schedule();
+    for k in 0..=full.len() {
+        let (res, _rec) = run_schedule(scheme, inputs, net, &full[..k]);
+        if let Err(v2) = res {
+            if v2.kind() == v.kind() {
+                return CheckFailure {
+                    violation: v2,
+                    schedule: full[..k].to_vec(),
+                };
+            }
+        }
+    }
+    CheckFailure {
+        violation: v,
+        schedule: full,
+    }
+}
+
+/// Minimization for output-level violations (divergence from the
+/// canonical digest, or oracle failure): the shortest prefix whose
+/// canonical continuation completes with the same bad outputs.
+fn minimize_outputs(
+    scheme: &dyn SyncScheme,
+    inputs: &[CooTensor],
+    net: &Network,
+    failing: &RunRecord,
+    want_digest: Option<u64>,
+    v: &Violation,
+) -> CheckFailure {
+    let full = failing.schedule();
+    for k in 0..=full.len() {
+        let (res, _rec) = run_schedule(scheme, inputs, net, &full[..k]);
+        if let Ok(outcome) = res {
+            let bad = match want_digest {
+                Some(w) => outputs_digest(&outcome.outputs) != w,
+                None => oracle_violation(&outcome.outputs, inputs).is_some(),
+            };
+            if bad {
+                return CheckFailure {
+                    violation: v.clone(),
+                    schedule: full[..k].to_vec(),
+                };
+            }
+        }
+    }
+    CheckFailure {
+        violation: v.clone(),
+        schedule: full,
+    }
+}
+
+/// Explore the delivery orders of `scheme` over `inputs` up to
+/// `max_runs` schedules: exhaustive when the budget suffices (it always
+/// does at n ∈ {2, 3} with the default), bounded-depth beyond.
+///
+/// The DFS pops a schedule prefix, runs it with canonical continuation,
+/// checks every invariant, dedupes on stage-boundary state hashes
+/// (alternatives branching after an already-seen boundary are pruned —
+/// the canonical continuation from that state was explored by its first
+/// visitor), and pushes one new prefix per unexplored alternative
+/// source at each choice point.
+pub fn check_scheme(
+    scheme: &dyn SyncScheme,
+    inputs: &[CooTensor],
+    lossless: bool,
+    max_runs: usize,
+) -> CheckReport {
+    let n = inputs.len();
+    let net = Network::new(n, LinkKind::Tcp25);
+    let mut stats = CheckStats::default();
+    let mut seen: HashSet<u64> = HashSet::new();
+    let mut stack: Vec<Vec<(usize, usize)>> = vec![Vec::new()];
+    let mut reference: Option<u64> = None;
+    let mut failure: Option<CheckFailure> = None;
+
+    while let Some(prefix) = stack.pop() {
+        if stats.runs >= max_runs {
+            stats.truncated = true;
+            break;
+        }
+        stats.max_frontier = stats.max_frontier.max(stack.len() + 1);
+        stats.runs += 1;
+        let (res, record) = run_schedule(scheme, inputs, &net, &prefix);
+        stats.deliveries += record.trace.len() as u64;
+        stats.choice_points += record.choices.len() as u64;
+        let outcome = match res {
+            Err(v) => {
+                failure = Some(minimize_violation(scheme, inputs, &net, &record, v));
+                break;
+            }
+            Ok(o) => o,
+        };
+        if let Some(v) = conservation_violation(&record, &outcome.report) {
+            failure = Some(CheckFailure {
+                violation: v,
+                schedule: record.schedule(),
+            });
+            break;
+        }
+        let digest = outputs_digest(&outcome.outputs);
+        match reference {
+            None => {
+                reference = Some(digest);
+                if lossless {
+                    if let Some(v) = oracle_violation(&outcome.outputs, inputs) {
+                        failure = Some(minimize_outputs(scheme, inputs, &net, &record, None, &v));
+                        break;
+                    }
+                }
+            }
+            Some(want) if want != digest => {
+                let v = Violation::OutputDivergence {
+                    detail: format!("digest {digest:#018x} != canonical {want:#018x}"),
+                };
+                failure = Some(minimize_outputs(
+                    scheme,
+                    inputs,
+                    &net,
+                    &record,
+                    Some(want),
+                    &v,
+                ));
+                break;
+            }
+            // Same digest as a reference that already passed the
+            // oracle → the outputs are bit-identical, nothing to
+            // re-verify.
+            Some(_) => {}
+        }
+        // Prune on revisited boundary states, then expand alternatives.
+        // Dedup applies only to boundaries in the canonical region
+        // (step ≥ prefix length): inside the prefix the continuation is
+        // prescribed, so a state match there says nothing about what
+        // was explored from it.
+        let mut cutoff = usize::MAX;
+        for (bi, b) in record.boundaries.iter().enumerate() {
+            if b.step < prefix.len() {
+                continue;
+            }
+            if !seen.insert(mix3(0x5eed, bi as u64, b.state_hash)) {
+                cutoff = b.step;
+                stats.pruned += 1;
+                break;
+            }
+        }
+        for cp in record.choices.iter().rev() {
+            if cp.step >= cutoff {
+                continue;
+            }
+            for &alt in &cp.alternatives {
+                let mut p: Vec<(usize, usize)> = record.trace[..cp.step]
+                    .iter()
+                    .map(|d| (d.src, d.dst))
+                    .collect();
+                p.push((alt, cp.dst));
+                stack.push(p);
+            }
+        }
+    }
+    stats.distinct_states = seen.len();
+    CheckReport {
+        scheme: scheme.name().to_string(),
+        n,
+        lossless,
+        output_digest: reference,
+        stats,
+        failure,
+    }
+}
+
+/// Re-run one explicit schedule under the same invariants the explorer
+/// applies (conservation, optional expected digest, optional lossless
+/// oracle). Returns the violation it produces, if any, plus the record.
+pub fn replay_schedule(
+    scheme: &dyn SyncScheme,
+    inputs: &[CooTensor],
+    lossless: bool,
+    expect_digest: Option<u64>,
+    schedule: &[(usize, usize)],
+) -> (Option<Violation>, RunRecord) {
+    let net = Network::new(inputs.len(), LinkKind::Tcp25);
+    let (res, record) = run_schedule(scheme, inputs, &net, schedule);
+    let v = match res {
+        Err(v) => Some(v),
+        Ok(outcome) => conservation_violation(&record, &outcome.report)
+            .or_else(|| match expect_digest {
+                Some(w) => {
+                    let got = outputs_digest(&outcome.outputs);
+                    if got != w {
+                        Some(Violation::OutputDivergence {
+                            detail: format!("digest {got:#018x} != expected {w:#018x}"),
+                        })
+                    } else {
+                        None
+                    }
+                }
+                None => None,
+            })
+            .or_else(|| {
+                if lossless {
+                    oracle_violation(&outcome.outputs, inputs)
+                } else {
+                    None
+                }
+            }),
+    };
+    (v, record)
+}
+
+/// Parse the `--replay` schedule form: `src>dst,src>dst,…`.
+pub fn parse_schedule(s: &str) -> Result<Vec<(usize, usize)>, String> {
+    let mut out = Vec::new();
+    for tok in s.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        let (a, b) = tok
+            .split_once('>')
+            .ok_or_else(|| format!("bad step '{tok}': want src>dst"))?;
+        let src = a
+            .trim()
+            .parse::<usize>()
+            .map_err(|e| format!("bad src in '{tok}': {e}"))?;
+        let dst = b
+            .trim()
+            .parse::<usize>()
+            .map_err(|e| format!("bad dst in '{tok}': {e}"))?;
+        out.push((src, dst));
+    }
+    Ok(out)
+}
+
+/// One report as a JSON object (hand-rolled — no serde offline).
+pub fn report_json(r: &CheckReport) -> String {
+    let violation = match &r.failure {
+        Some(f) => format!(
+            "{{\"kind\":\"{}\",\"schedule\":\"{}\"}}",
+            f.violation.kind(),
+            f.replay_arg()
+        ),
+        None => "null".to_string(),
+    };
+    format!(
+        "{{\"scheme\":\"{}\",\"n\":{},\"runs\":{},\"deliveries\":{},\"choice_points\":{},\
+         \"distinct_states\":{},\"pruned\":{},\"max_frontier\":{},\"truncated\":{},\
+         \"violation\":{}}}",
+        r.scheme,
+        r.n,
+        r.stats.runs,
+        r.stats.deliveries,
+        r.stats.choice_points,
+        r.stats.distinct_states,
+        r.stats.pruned,
+        r.stats.max_frontier,
+        r.stats.truncated,
+        violation
+    )
+}
+
+/// The `BENCH_PR10.json` suite summary: states explored, states/sec,
+/// max frontier, plus one object per scheme × n.
+pub fn suite_json(reports: &[CheckReport], elapsed_secs: f64) -> String {
+    let runs: usize = reports.iter().map(|r| r.stats.runs).sum();
+    let deliveries: u64 = reports.iter().map(|r| r.stats.deliveries).sum();
+    let states: usize = reports.iter().map(|r| r.stats.distinct_states).sum();
+    let frontier: usize = reports
+        .iter()
+        .map(|r| r.stats.max_frontier)
+        .max()
+        .unwrap_or(0);
+    let violations: usize = reports.iter().filter(|r| !r.ok()).count();
+    let states_per_sec = if elapsed_secs > 0.0 {
+        states as f64 / elapsed_secs
+    } else {
+        0.0
+    };
+    let entries: Vec<String> = reports.iter().map(report_json).collect();
+    format!(
+        "{{\"bench\":\"check\",\"states_explored\":{states},\"runs\":{runs},\
+         \"deliveries\":{deliveries},\"states_per_sec\":{states_per_sec:.1},\
+         \"max_frontier\":{frontier},\"elapsed_secs\":{elapsed_secs:.3},\
+         \"violations\":{violations},\"schemes\":[{}]}}",
+        entries.join(",")
+    )
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used, clippy::cast_possible_truncation)]
+mod tests {
+    use super::*;
+
+    fn inputs(n: usize) -> Vec<CooTensor> {
+        gen_inputs(11, n, 48, 5, 3)
+    }
+
+    #[test]
+    fn gen_inputs_is_deterministic_and_overlapping() {
+        let a = inputs(3);
+        let b = inputs(3);
+        assert_eq!(a.len(), 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x, y);
+        }
+        // the shared hot set overlaps across workers
+        let common: Vec<u32> = a[0]
+            .indices
+            .iter()
+            .filter(|i| a[1].indices.contains(i))
+            .copied()
+            .collect();
+        assert!(common.len() >= 5);
+        assert!(a.iter().all(|t| !t.values.contains(&0.0)));
+    }
+
+    #[test]
+    fn ring_scheme_has_a_single_delivery_order() {
+        let ins = inputs(3);
+        let scheme = schemes::by_name("allreduce", 3, 1, 16).unwrap();
+        let r = check_scheme(scheme.as_ref(), &ins, true, DEFAULT_MAX_RUNS);
+        assert!(r.ok(), "{:?}", r.failure);
+        assert_eq!(
+            r.stats.choice_points, 0,
+            "ring stages have one source per destination"
+        );
+        assert_eq!(r.stats.runs, 1);
+        assert!(!r.stats.truncated);
+    }
+
+    #[test]
+    fn star_scheme_branches_and_stays_clean() {
+        let ins = inputs(3);
+        let scheme = schemes::by_name("sparseps", 3, 1, 16).unwrap();
+        let r = check_scheme(scheme.as_ref(), &ins, true, DEFAULT_MAX_RUNS);
+        assert!(r.ok(), "{:?}", r.failure);
+        assert!(r.stats.runs > 1, "fan-in must create delivery branches");
+        assert!(r.stats.choice_points > 0);
+        assert!(!r.stats.truncated);
+        assert!(r.output_digest.is_some());
+    }
+
+    #[test]
+    fn exploration_is_deterministic() {
+        let ins = inputs(3);
+        let scheme = schemes::by_name("sparseps", 3, 1, 16).unwrap();
+        let a = check_scheme(scheme.as_ref(), &ins, true, DEFAULT_MAX_RUNS);
+        let b = check_scheme(scheme.as_ref(), &ins, true, DEFAULT_MAX_RUNS);
+        assert_eq!(a.stats, b.stats);
+        assert_eq!(a.output_digest, b.output_digest);
+    }
+
+    #[test]
+    fn truncation_is_reported() {
+        let ins = inputs(3);
+        let scheme = schemes::by_name("zen", 3, 1, 16).unwrap();
+        let r = check_scheme(scheme.as_ref(), &ins, true, 1);
+        assert!(r.stats.truncated || r.stats.runs <= 1);
+    }
+
+    #[test]
+    fn parse_schedule_roundtrips() {
+        let sched = vec![(0, 1), (2, 1), (1, 0)];
+        let s = schedule_string(&sched);
+        assert_eq!(parse_schedule(&s).unwrap(), sched);
+        assert!(parse_schedule("0-1").is_err());
+        assert!(parse_schedule("a>b").is_err());
+        assert_eq!(parse_schedule("").unwrap(), vec![]);
+    }
+
+    #[test]
+    fn replay_of_a_clean_schedule_is_clean() {
+        let ins = inputs(2);
+        let scheme = schemes::by_name("zen", 2, 1, 16).unwrap();
+        let r = check_scheme(scheme.as_ref(), &ins, true, DEFAULT_MAX_RUNS);
+        assert!(r.ok(), "{:?}", r.failure);
+        let (v, record) =
+            replay_schedule(scheme.as_ref(), &ins, true, r.output_digest, &[]);
+        assert!(v.is_none(), "{v:?}");
+        assert!(!record.trace.is_empty());
+    }
+
+    #[test]
+    fn json_emits_expected_fields() {
+        let ins = inputs(2);
+        let scheme = schemes::by_name("allreduce", 2, 1, 16).unwrap();
+        let r = check_scheme(scheme.as_ref(), &ins, true, DEFAULT_MAX_RUNS);
+        let j = suite_json(&[r], 0.5);
+        for key in [
+            "\"bench\":\"check\"",
+            "\"states_explored\"",
+            "\"states_per_sec\"",
+            "\"max_frontier\"",
+            "\"violations\":0",
+            "\"scheme\":\"AllReduce\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+    }
+}

@@ -18,6 +18,7 @@
 //! See DESIGN.md (repository root) for the experiment index mapping every
 //! paper table and figure to a module and a regeneration command.
 pub mod analysis;
+pub mod check;
 pub mod cluster;
 pub mod compress;
 pub mod config;

@@ -4,6 +4,7 @@
 //!   sim     simulate data-parallel training on a Table-1 workload
 //!   train   really train the embedding LM through the AOT stack
 //!   worker  one rank of a two-process sync over real sockets
+//!   check   model-check the protocol layer over all delivery orders
 //!   schemes list schemes and their Table-2 dimensions
 //!
 //! Examples:
@@ -18,6 +19,8 @@
 //!   zen train --shape tiny --workers 4 --scheme auto --steps 50
 //!   zen worker --listen 127.0.0.1:4700 --scheme zen   # terminal 1
 //!   zen worker --connect 127.0.0.1:4700 --scheme zen  # terminal 2
+//!   zen check --all --machines 2,3
+//!   zen check --scheme zen --machines 3 --replay "1>0,2>0"
 //!   zen schemes
 //!
 //! `--scheme auto` hands scheme choice to the cost-model planner: each
@@ -47,10 +50,11 @@ fn main() -> anyhow::Result<()> {
         Some("sim") => cmd_sim(&args),
         Some("train") => cmd_train(&args),
         Some("worker") => cmd_worker(&args),
+        Some("check") => cmd_check(&args),
         Some("schemes") => cmd_schemes(),
         _ => {
             eprintln!(
-                "usage: zen <sim|train|worker|schemes> [--options]\n\
+                "usage: zen <sim|train|worker|check|schemes> [--options]\n\
                  sim:    --model LSTM|DeepFM|NMT|BERT --machines N --scheme S|auto\n\
                          --link tcp25|rdma100 --transport sim|channel|socket|event|threaded\n\
                          --topology NxG[:ia,ib/ea,eb] (two-level cluster)\n\
@@ -64,7 +68,11 @@ fn main() -> anyhow::Result<()> {
                          --replan-threshold R --compress topk:K|threshold:T|none\n\
                          --accuracy-budget B (lossy runs also report the loss delta)\n\
                  worker: --listen ADDR | --connect ADDR (one rank per process)\n\
-                         --scheme S --dense-len N --shared N --private N --seed N"
+                         --scheme S --dense-len N --shared N --private N --seed N\n\
+                 check:  --all | --scheme S  --machines 2,3 (comma list of group sizes)\n\
+                         --dense-len N --shared N --private N --seed N\n\
+                         --max-runs N (schedule budget; exhaustive within it)\n\
+                         --json PATH (exploration stats) --replay \"src>dst,...\""
             );
             Ok(())
         }
@@ -95,7 +103,7 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
         _ => anyhow::bail!("worker needs exactly one of --listen ADDR or --connect ADDR"),
     };
     let rank = driver.rank();
-    let inputs = worker_inputs(seed, 2, dense_len, shared, private);
+    let inputs = zen::check::gen_inputs(seed, 2, dense_len, shared, private);
     let expected_nnz = shared + private;
     let scheme = zen::schemes::by_name(scheme_name, 2, seed ^ 0x5eed, expected_nnz)
         .ok_or_else(|| anyhow::anyhow!("unknown scheme '{scheme_name}'"))?;
@@ -104,60 +112,143 @@ fn cmd_worker(args: &Args) -> anyhow::Result<()> {
         "rank={rank} scheme={} bytes={} digest={:016x}",
         scheme.name(),
         sync.report.total_bytes(),
-        fnv_digest(&sync.outputs[rank]),
+        // The same FNV-1a fingerprint the model checker compares across
+        // delivery orders; both processes print it for a cross-process
+        // bit-identity check.
+        zen::check::fnv_digest(&sync.outputs[rank]),
     );
     Ok(())
 }
 
-/// Deterministic per-rank inputs shared by both worker processes: a
-/// common hot set (seeded by `seed` alone) plus a per-rank private tail.
-fn worker_inputs(
-    seed: u64,
-    n: usize,
-    dense_len: usize,
-    shared: usize,
-    private: usize,
-) -> Vec<zen::tensor::CooTensor> {
-    use zen::util::Pcg64;
-    let mut rng = Pcg64::seeded(seed);
-    let hot: Vec<usize> = rng.sample_distinct(dense_len, shared);
-    (0..n)
-        .map(|w| {
-            let mut idx: Vec<u32> = hot.iter().map(|&i| i as u32).collect();
-            let mut priv_rng = Pcg64::new(seed ^ w as u64, 55);
-            for _ in 0..private {
-                idx.push(priv_rng.below(dense_len as u64) as u32);
-            }
-            idx.sort_unstable();
-            idx.dedup();
-            let vals: Vec<f32> = idx
-                .iter()
-                .map(|_| priv_rng.next_f32() * 2.0 - 1.0)
-                .map(|v| if v == 0.0 { 0.5 } else { v })
-                .collect();
-            zen::tensor::CooTensor::from_sorted(dense_len, idx, vals)
-        })
-        .collect()
-}
+/// Model-check the protocol layer: explore every frame-delivery order
+/// (exhaustive at n ∈ {2,3}, bounded by `--max-runs` beyond) and assert
+/// the invariant set on each — no deadlock, byte conservation per
+/// stage, bit-identical outputs across orders, losslessness vs the
+/// dense-sum oracle. A violation prints a minimized schedule that
+/// `--replay` re-executes deterministically. Exits nonzero on any
+/// violation so CI can gate on it.
+fn cmd_check(args: &Args) -> anyhow::Result<()> {
+    use zen::check;
 
-/// FNV-1a over the output's indices and value bit patterns — a cheap
-/// cross-process fingerprint for asserting bit-identical aggregates.
-fn fnv_digest(t: &zen::tensor::CooTensor) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    let mut eat = |h: &mut u64, bytes: &[u8]| {
-        for &b in bytes {
-            *h ^= b as u64;
-            *h = h.wrapping_mul(0x100_0000_01b3);
-        }
+    let dense_len = args.get_usize("dense-len", 64);
+    let shared = args.get_usize("shared", 6);
+    let private = args.get_usize("private", 3);
+    let seed = args.get_u64("seed", 7);
+    let max_runs = args.get_usize("max-runs", check::DEFAULT_MAX_RUNS);
+    let machines: Vec<usize> = args
+        .get_or("machines", "2,3")
+        .split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            t.parse::<usize>()
+                .map_err(|e| anyhow::anyhow!("bad --machines entry '{t}': {e}"))
+        })
+        .collect::<Result<_, _>>()?;
+    if machines.iter().any(|&n| n < 2) {
+        anyhow::bail!("--machines entries must be >= 2");
+    }
+
+    let make_scheme = |name: &str, n: usize, inputs: &[zen::tensor::CooTensor]| {
+        let expected_nnz = inputs.iter().map(|t| t.indices.len()).sum::<usize>() / n.max(1);
+        zen::schemes::by_name(name, n, seed ^ 0x5eed, expected_nnz)
+            .ok_or_else(|| anyhow::anyhow!("unknown scheme '{name}'"))
     };
-    eat(&mut h, &(t.dense_len as u64).to_le_bytes());
-    for &i in &t.indices {
-        eat(&mut h, &i.to_le_bytes());
+
+    // --replay: re-run one explicit schedule under the full invariant
+    // set instead of exploring.
+    if let Some(spec) = args.get("replay") {
+        let name = args.get_or("scheme", "zen");
+        let n = machines.first().copied().unwrap_or(3);
+        let schedule = check::parse_schedule(spec).map_err(|e| anyhow::anyhow!(e))?;
+        let inputs = check::gen_inputs(seed, n, dense_len, shared, private);
+        let scheme = make_scheme(name, n, &inputs)?;
+        let lossless = !name.starts_with("strawman");
+        let (violation, record) =
+            check::replay_schedule(scheme.as_ref(), &inputs, lossless, None, &schedule);
+        match violation {
+            Some(v) => {
+                println!("replay {name} n={n}: VIOLATION [{}] {v}", v.kind());
+                println!("  schedule: {}", zen::wire::schedule_string(&record.schedule()));
+                std::process::exit(1);
+            }
+            None => {
+                println!(
+                    "replay {name} n={n}: clean ({} deliveries, {} stages)",
+                    record.trace.len(),
+                    record.boundaries.len()
+                );
+                return Ok(());
+            }
+        }
     }
-    for &v in &t.values {
-        eat(&mut h, &v.to_bits().to_le_bytes());
+
+    let targets: Vec<(String, bool)> = match args.get("scheme") {
+        Some(name) => vec![(name.to_string(), !name.starts_with("strawman"))],
+        None => check::CHECK_SCHEMES
+            .iter()
+            .map(|&(n, l)| (n.to_string(), l))
+            .collect(),
+    };
+
+    let t0 = std::time::Instant::now();
+    let mut reports = Vec::new();
+    let mut failed = false;
+    for (name, lossless) in &targets {
+        for &n in &machines {
+            let inputs = check::gen_inputs(seed, n, dense_len, shared, private);
+            let scheme = make_scheme(name, n, &inputs)?;
+            let r = check::check_scheme(scheme.as_ref(), &inputs, *lossless, max_runs);
+            let status = match (&r.failure, r.stats.truncated) {
+                (Some(_), _) => "VIOLATION",
+                (None, true) => "truncated",
+                (None, false) => "exhaustive",
+            };
+            println!(
+                "{name:<14} n={n}  runs {:<6} deliveries {:<8} states {:<6} pruned {:<5} \
+                 frontier {:<4} {status}",
+                r.stats.runs,
+                r.stats.deliveries,
+                r.stats.distinct_states,
+                r.stats.pruned,
+                r.stats.max_frontier
+            );
+            if let Some(f) = &r.failure {
+                failed = true;
+                println!("  violation [{}]: {}", f.violation.kind(), f.violation);
+                println!(
+                    "  minimized schedule ({} deliveries): {}",
+                    f.schedule.len(),
+                    f.replay_arg()
+                );
+                println!(
+                    "  replay: zen check --scheme {name} --machines {n} --seed {seed} \
+                     --dense-len {dense_len} --shared {shared} --private {private} \
+                     --replay \"{}\"",
+                    f.replay_arg()
+                );
+            }
+            reports.push(r);
+        }
     }
-    h
+    let elapsed = t0.elapsed().as_secs_f64();
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, check::suite_json(&reports, elapsed))?;
+        println!("wrote exploration stats to {path}");
+    }
+    let states: usize = reports.iter().map(|r| r.stats.distinct_states).sum();
+    let runs: usize = reports.iter().map(|r| r.stats.runs).sum();
+    println!(
+        "checked {} scheme×n combinations: {runs} schedules, {states} distinct states, \
+         {:.2}s ({:.0} states/s)",
+        reports.len(),
+        elapsed,
+        if elapsed > 0.0 { states as f64 / elapsed } else { 0.0 }
+    );
+    if failed {
+        std::process::exit(1);
+    }
+    Ok(())
 }
 
 fn cmd_sim(args: &Args) -> anyhow::Result<()> {

@@ -196,7 +196,7 @@ impl Protocol for RingAgMachine<'_> {
             let t = if s == 0 {
                 &self.inputs[self.rank]
             } else {
-                self.received.last().expect("ring holds the last tensor")
+                state(self.received.last(), "ring holds the last tensor")
             };
             return Ok(Event::Send {
                 dst: (self.rank + 1) % self.n,
@@ -393,7 +393,7 @@ impl Protocol for HierMachine<'_> {
                         return Ok(Event::NeedFrame { src: peer });
                     }
                     for _ in 0..expected {
-                        let msg = self.inbox.take_from(peer).expect("counted above");
+                        let msg = state(self.inbox.take_from(peer), "counted above");
                         self.set.push(expect_push(msg).1);
                     }
                     self.parked = true;
@@ -409,7 +409,7 @@ impl Protocol for HierMachine<'_> {
                         // Core fold source: ship the aggregate out.
                         if self.send_cursor == 0 {
                             self.send_cursor = 1;
-                            let out = self.output.as_ref().expect("aggregate ready");
+                            let out = state(self.output.as_ref(), "aggregate ready");
                             let msg = push_msg(self.rank, out);
                             return Ok(Event::Send {
                                 dst: self.core + self.rank,
@@ -441,9 +441,10 @@ impl Protocol for HierMachine<'_> {
                     });
                 }
                 HierPhase::Done => {
-                    return Ok(Event::Complete(
-                        self.output.take().expect("aggregate ready"),
-                    ))
+                    return Ok(Event::Complete(state(
+                        self.output.take(),
+                        "aggregate ready",
+                    )))
                 }
             }
         }
@@ -475,6 +476,8 @@ impl Protocol for HierMachine<'_> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used, clippy::cast_possible_truncation)]
+
     use super::super::testutil::overlapping_inputs;
     use super::*;
     use crate::cluster::LinkKind;

@@ -133,7 +133,7 @@ impl<'a> RingMachine<'a> {
 
     fn chunk_msg(&self, c: usize) -> Message {
         Message::DenseChunk {
-            from: self.rank as u32,
+            from: small_u32(self.rank, "ring rank"),
             offset: self.lo(c) as u64,
             values: self.acc.clone(),
         }
@@ -155,7 +155,12 @@ impl Protocol for RingMachine<'_> {
                     }
                     let (lo, hi) = (self.lo(self.rank), self.hi(self.rank));
                     self.acc = vec![0.0f32; hi - lo];
-                    add_range(&self.inputs[self.rank], lo as u32, hi as u32, &mut self.acc);
+                    add_range(
+                        &self.inputs[self.rank],
+                        small_u32(lo, "chunk offset"),
+                        small_u32(hi, "chunk end"),
+                        &mut self.acc,
+                    );
                     self.state = RingState::RsSend(0);
                 }
                 RingState::RsSend(s) => {
@@ -173,12 +178,12 @@ impl Protocol for RingMachine<'_> {
                         Some(msg) => {
                             let c = (self.rank + self.n - 1 - s) % self.n;
                             let (offset, mut values) = expect_chunk(msg);
-                            assert_eq!(offset as usize, self.lo(c), "ring chunk out of order");
+                            assert_eq!(offset, self.lo(c) as u64, "ring chunk out of order");
                             assert_eq!(values.len(), self.hi(c) - self.lo(c));
                             add_range(
                                 &self.inputs[self.rank],
-                                self.lo(c) as u32,
-                                self.hi(c) as u32,
+                                small_u32(self.lo(c), "chunk offset"),
+                                small_u32(self.hi(c), "chunk end"),
                                 &mut values,
                             );
                             self.acc = values;
@@ -218,7 +223,7 @@ impl Protocol for RingMachine<'_> {
                         Some(msg) => {
                             let c = (self.rank + self.n - s) % self.n;
                             let (offset, values) = expect_chunk(msg);
-                            assert_eq!(offset as usize, self.lo(c), "ring chunk out of order");
+                            assert_eq!(offset, self.lo(c) as u64, "ring chunk out of order");
                             self.full[self.lo(c)..self.hi(c)].copy_from_slice(&values);
                             self.acc = values;
                             self.state = RingState::AgParked(s);
@@ -267,6 +272,8 @@ impl Protocol for RingMachine<'_> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used, clippy::cast_possible_truncation)]
+
     use super::super::testutil::overlapping_inputs;
     use super::*;
     use crate::cluster::LinkKind;

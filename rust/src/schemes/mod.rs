@@ -17,6 +17,16 @@
 //! partition / balance, Table 2) are exposed via [`SchemeDims`] so the
 //! taxonomy table regenerates from the implementations themselves.
 
+// Cargo `[lints]` tables are package-wide; the hardening guarantee is
+// scoped to the protocol layer (wire/ + schemes/), so the denies live
+// here as inner attributes (mirrors wire/mod.rs). Every waiver below is
+// a scoped `#[allow]` with its reason next to it.
+#![deny(
+    clippy::cast_possible_truncation,
+    clippy::unwrap_used,
+    clippy::expect_used
+)]
+
 pub mod agsparse;
 pub mod dense;
 pub mod oktopk;
@@ -120,11 +130,32 @@ impl SyncScratch {
     }
 }
 
+/// Convert a value that is structurally small (a rank bounded by the
+/// machine count, a count bounded by a validated frame field) to the
+/// `u32` the wire format carries. Panics with context on overflow
+/// instead of silently truncating.
+pub(crate) fn small_u32(v: usize, what: &str) -> u32 {
+    match u32::try_from(v) {
+        Ok(v) => v,
+        Err(_) => panic!("{what} ({v}) exceeds u32 — the wire format carries 32-bit ids"),
+    }
+}
+
+/// Take a staged value out of an `Option` slot that the protocol's
+/// stage sequencing guarantees is filled. Panics with context when the
+/// sequencing invariant is broken (a scheme bug, not recoverable input).
+pub(crate) fn state<T>(slot: Option<T>, what: &str) -> T {
+    match slot {
+        Some(v) => v,
+        None => panic!("protocol state missing: {what}"),
+    }
+}
+
 /// An owned `PushCoo` message from worker `from` (what protocol
 /// machines emit through [`Event::Send`](crate::wire::Event::Send)).
 pub(crate) fn push_msg(from: usize, t: &CooTensor) -> Message {
     Message::PushCoo {
-        from: from as u32,
+        from: small_u32(from, "worker rank"),
         tensor: t.clone(),
     }
 }
@@ -132,7 +163,7 @@ pub(crate) fn push_msg(from: usize, t: &CooTensor) -> Message {
 /// An owned `PushCoo` message materialized from a borrowed COO view.
 pub(crate) fn push_msg_slice(from: usize, t: CooSlice<'_>) -> Message {
     Message::PushCoo {
-        from: from as u32,
+        from: small_u32(from, "worker rank"),
         tensor: CooTensor::from_sorted(t.dense_len, t.indices.to_vec(), t.values.to_vec()),
     }
 }
@@ -140,7 +171,7 @@ pub(crate) fn push_msg_slice(from: usize, t: CooSlice<'_>) -> Message {
 /// An owned `PullCoo` message from server `server`.
 pub(crate) fn pull_msg(server: usize, t: &CooTensor) -> Message {
     Message::PullCoo {
-        server: server as u32,
+        server: small_u32(server, "server rank"),
         tensor: t.clone(),
     }
 }
@@ -225,9 +256,13 @@ pub trait SyncScheme: Send + Sync {
     ) -> SyncOutput {
         let mut driver = TransportDriver::new(Box::new(SimTransport::new(net.clone())));
         // The in-process virtual-time backend has no peer to lose; an
-        // error here is a scheme protocol bug, so the panic is correct.
-        self.run(inputs, &mut driver, scratch)
-            .expect("virtual-time sync failed (scheme protocol bug)")
+        // error here is a scheme protocol bug, so the panic is correct
+        // and the expect lint is waived for this one call.
+        #[allow(clippy::expect_used)]
+        let out = self
+            .run(inputs, &mut driver, scratch)
+            .expect("virtual-time sync failed (scheme protocol bug)");
+        out
     }
 }
 
@@ -353,6 +388,8 @@ pub fn by_name(
 
 #[cfg(test)]
 pub(crate) mod testutil {
+    #![allow(clippy::unwrap_used, clippy::expect_used, clippy::cast_possible_truncation)]
+
     use super::*;
     use crate::util::Pcg64;
 
@@ -389,6 +426,8 @@ pub(crate) mod testutil {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used, clippy::cast_possible_truncation)]
+
     use super::*;
 
     #[test]

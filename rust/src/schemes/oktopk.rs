@@ -146,29 +146,35 @@ impl<'a> OkMachine<'a> {
         let total: f64 = self.hist.iter().map(|&c| c as f64).sum();
         let target = total / self.n as f64;
         let mut starts = vec![0u32; self.n + 1];
-        starts[self.n] = self.nblocks as u32;
+        starts[self.n] = small_u32(self.nblocks, "histogram blocks");
         let mut acc = 0f64;
         let mut owner = 1;
         for b in 0..self.nblocks {
             while owner < self.n && acc >= target * owner as f64 {
-                starts[owner] = b as u32;
+                starts[owner] = small_u32(b, "histogram block");
                 owner += 1;
             }
             acc += self.hist[b] as f64;
         }
         while owner < self.n {
-            starts[owner] = self.nblocks as u32;
+            starts[owner] = small_u32(self.nblocks, "histogram blocks");
             owner += 1;
         }
         self.starts = starts;
     }
 
     fn lo(&self, p: usize) -> u32 {
-        (self.starts[p] as usize * self.block_len).min(self.dense_len) as u32
+        small_u32(
+            (self.starts[p] as usize * self.block_len).min(self.dense_len),
+            "partition offset",
+        )
     }
 
     fn hi(&self, p: usize) -> u32 {
-        (self.starts[p + 1] as usize * self.block_len).min(self.dense_len) as u32
+        small_u32(
+            (self.starts[p + 1] as usize * self.block_len).min(self.dense_len),
+            "partition end",
+        )
     }
 }
 
@@ -187,7 +193,7 @@ impl Protocol for OkMachine<'_> {
                         return Ok(Event::Send {
                             dst: p,
                             msg: Message::DenseChunk {
-                                from: self.rank as u32,
+                                from: small_u32(self.rank, "worker rank"),
                                 offset: 0,
                                 values: self.hist.clone(),
                             },
@@ -217,13 +223,14 @@ impl Protocol for OkMachine<'_> {
             }
             OkPhase::ScatterParked => Ok(Event::StageDone { name: "scatter" }),
             OkPhase::GatherSend => {
-                let nonempty = self.agg.as_ref().expect("aggregated partition").nnz() > 0;
+                let nonempty = state(self.agg.as_ref(), "aggregated partition").nnz() > 0;
                 if nonempty {
                     while self.cursor < self.n {
                         let w = self.cursor;
                         self.cursor += 1;
                         if w != self.rank {
-                            let msg = pull_msg(self.rank, self.agg.as_ref().unwrap());
+                            let agg = state(self.agg.as_ref(), "aggregated partition");
+                            let msg = pull_msg(self.rank, agg);
                             return Ok(Event::Send { dst: w, msg });
                         }
                     }
@@ -232,9 +239,10 @@ impl Protocol for OkMachine<'_> {
                 Ok(Event::StageDone { name: "gather" })
             }
             OkPhase::GatherParked => Ok(Event::StageDone { name: "gather" }),
-            OkPhase::Done => Ok(Event::Complete(
-                self.output.take().expect("output assembled at gather closure"),
-            )),
+            OkPhase::Done => Ok(Event::Complete(state(
+                self.output.take(),
+                "output assembled at gather closure",
+            ))),
         }
     }
 
@@ -265,7 +273,7 @@ impl Protocol for OkMachine<'_> {
                 self.phase = OkPhase::ScatterSend;
             }
             "scatter" => {
-                let mut shards = vec![self.own.take().expect("own shard present")];
+                let mut shards = vec![state(self.own.take(), "own shard present")];
                 for (_, msg) in self.inbox.drain_ascending() {
                     shards.push(expect_push(msg).1);
                 }
@@ -277,7 +285,7 @@ impl Protocol for OkMachine<'_> {
                 let mut parts: Vec<(u32, CooTensor)> = Vec::with_capacity(self.n);
                 parts.push((
                     self.lo(self.rank),
-                    self.agg.take().expect("aggregated partition"),
+                    state(self.agg.take(), "aggregated partition"),
                 ));
                 for (_, msg) in self.inbox.drain_ascending() {
                     let (server, tensor) = expect_pull_coo(msg);
@@ -294,6 +302,8 @@ impl Protocol for OkMachine<'_> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used, clippy::cast_possible_truncation)]
+
     use super::super::testutil::overlapping_inputs;
     use super::*;
     use crate::cluster::LinkKind;

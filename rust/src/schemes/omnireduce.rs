@@ -37,9 +37,9 @@ fn blocks_msg(from: usize, bt: &BlockTensor) -> Message {
         values.extend_from_slice(block);
     }
     Message::Blocks {
-        from: from as u32,
+        from: small_u32(from, "worker rank"),
         dense_len: bt.dense_len as u64,
-        block_len: bt.block_len as u32,
+        block_len: small_u32(bt.block_len, "block length"),
         block_ids: bt.block_ids.clone(),
         values,
     }
@@ -55,9 +55,13 @@ fn expect_blocks(msg: Message, block_len: usize) -> (u32, BlockTensor) {
             values,
         } => {
             assert_eq!(bl as usize, block_len, "block length mismatch");
+            let dense_len = match usize::try_from(dense_len) {
+                Ok(v) => v,
+                Err(_) => panic!("blocks dense length exceeds the address space"),
+            };
             (
                 from,
-                BlockTensor::from_wire_parts(dense_len as usize, block_len, block_ids, values),
+                BlockTensor::from_wire_parts(dense_len, block_len, block_ids, values),
             )
         }
         other => panic!("omnireduce expected Blocks, got {other:?}"),
@@ -135,15 +139,20 @@ impl<'a> OmniMachine<'a> {
     }
 
     fn per(&self) -> u32 {
-        crate::util::ceil_div(self.dense_len, self.n) as u32
+        small_u32(
+            crate::util::ceil_div(self.dense_len, self.n),
+            "partition width",
+        )
     }
 
     fn lo(&self, p: usize) -> u32 {
-        (p as u32 * self.per()).min(self.dense_len as u32)
+        (small_u32(p, "aggregator rank") * self.per())
+            .min(small_u32(self.dense_len, "dense length"))
     }
 
     fn hi(&self, p: usize) -> u32 {
-        ((p as u32 + 1) * self.per()).min(self.dense_len as u32)
+        ((small_u32(p, "aggregator rank") + 1) * self.per())
+            .min(small_u32(self.dense_len, "dense length"))
     }
 }
 
@@ -174,18 +183,14 @@ impl Protocol for OmniMachine<'_> {
             }
             OmniState::PushParked => Ok(Event::StageDone { name: "push" }),
             OmniState::PullSend => {
-                let nonempty = self
-                    .agg
-                    .as_ref()
-                    .expect("aggregated blocks")
-                    .num_blocks()
-                    > 0;
+                let nonempty = state(self.agg.as_ref(), "aggregated blocks").num_blocks() > 0;
                 if nonempty {
                     while self.cursor < self.n {
                         let w = self.cursor;
                         self.cursor += 1;
                         if w != self.rank {
-                            let msg = blocks_msg(self.rank, self.agg.as_ref().unwrap());
+                            let agg = state(self.agg.as_ref(), "aggregated blocks");
+                            let msg = blocks_msg(self.rank, agg);
                             return Ok(Event::Send { dst: w, msg });
                         }
                     }
@@ -194,9 +199,10 @@ impl Protocol for OmniMachine<'_> {
                 Ok(Event::StageDone { name: "pull" })
             }
             OmniState::PullParked => Ok(Event::StageDone { name: "pull" }),
-            OmniState::Done => Ok(Event::Complete(
-                self.output.take().expect("output assembled at pull closure"),
-            )),
+            OmniState::Done => Ok(Event::Complete(state(
+                self.output.take(),
+                "output assembled at pull closure",
+            ))),
         }
     }
 
@@ -209,7 +215,7 @@ impl Protocol for OmniMachine<'_> {
         match name {
             "push" => {
                 // One-shot block merge, ascending-worker order.
-                let mut acc = self.own.take().expect("own block shard present");
+                let mut acc = state(self.own.take(), "own block shard present");
                 for (_, msg) in self.inbox.drain_ascending() {
                     let (_, bt) = expect_blocks(msg, self.block_len);
                     acc = acc.merge(&bt);
@@ -219,7 +225,7 @@ impl Protocol for OmniMachine<'_> {
                 self.state = OmniState::PullSend;
             }
             "pull" => {
-                let agg = self.agg.take().expect("aggregated blocks");
+                let agg = state(self.agg.take(), "aggregated blocks");
                 let mut parts: Vec<(u32, CooTensor)> = Vec::with_capacity(self.n);
                 parts.push((self.lo(self.rank), agg.to_dense().to_coo()));
                 for (_, msg) in self.inbox.drain_ascending() {
@@ -237,6 +243,8 @@ impl Protocol for OmniMachine<'_> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used, clippy::cast_possible_truncation)]
+
     use super::super::testutil::overlapping_inputs;
     use super::*;
     use crate::cluster::LinkKind;

@@ -119,7 +119,8 @@ impl Protocol for SparCmlMachine<'_> {
                         if !self.sent {
                             self.sent = true;
                             let j = self.rank - self.core;
-                            let msg = push_msg(self.rank, self.partial.as_ref().unwrap());
+                            let msg =
+                                push_msg(self.rank, state(self.partial.as_ref(), "partial"));
                             return Ok(Event::Send { dst: j, msg });
                         }
                         self.parked = true;
@@ -131,7 +132,7 @@ impl Protocol for SparCmlMachine<'_> {
                         match self.inbox.take_from(src) {
                             Some(msg) => {
                                 let (_, t) = expect_push(msg);
-                                let p = self.partial.take().unwrap();
+                                let p = state(self.partial.take(), "partial");
                                 self.partial = Some(p.merge(&t));
                                 self.parked = true;
                                 return Ok(Event::StageDone { name: "fold-in" });
@@ -162,14 +163,14 @@ impl Protocol for SparCmlMachine<'_> {
                     let peer = self.rank ^ dist;
                     if !self.sent {
                         self.sent = true;
-                        let msg = push_msg(self.rank, self.partial.as_ref().unwrap());
+                        let msg = push_msg(self.rank, state(self.partial.as_ref(), "partial"));
                         return Ok(Event::Send { dst: peer, msg });
                     }
                     match self.inbox.take_from(peer) {
                         Some(msg) => {
                             let (from, t) = expect_push(msg);
                             assert_eq!(from as usize, peer, "recursive-doubling partner");
-                            let p = self.partial.take().unwrap();
+                            let p = state(self.partial.take(), "partial");
                             self.partial = Some(p.merge(&t));
                             self.parked = true;
                             return Ok(Event::StageDone { name: "rec-double" });
@@ -185,7 +186,8 @@ impl Protocol for SparCmlMachine<'_> {
                         // Return the final aggregate to the excess rank.
                         if !self.sent {
                             self.sent = true;
-                            let msg = push_msg(self.rank, self.partial.as_ref().unwrap());
+                            let msg =
+                                push_msg(self.rank, state(self.partial.as_ref(), "partial"));
                             return Ok(Event::Send {
                                 dst: self.core + self.rank,
                                 msg,
@@ -209,9 +211,10 @@ impl Protocol for SparCmlMachine<'_> {
                     return Ok(Event::StageDone { name: "fold-out" });
                 }
                 CmlPhase::Done => {
-                    return Ok(Event::Complete(
-                        self.partial.take().expect("partial aggregate present"),
-                    ))
+                    return Ok(Event::Complete(state(
+                        self.partial.take(),
+                        "partial aggregate present",
+                    )))
                 }
             }
         }
@@ -243,6 +246,8 @@ impl Protocol for SparCmlMachine<'_> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used, clippy::cast_possible_truncation)]
+
     use super::super::testutil::overlapping_inputs;
     use super::*;
     use crate::cluster::LinkKind;

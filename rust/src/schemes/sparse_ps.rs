@@ -98,15 +98,19 @@ impl<'a> PsMachine<'a> {
     }
 
     fn per(&self) -> u32 {
-        crate::util::ceil_div(self.dense_len, self.n) as u32
+        small_u32(
+            crate::util::ceil_div(self.dense_len, self.n),
+            "partition width",
+        )
     }
 
     fn lo(&self, p: usize) -> u32 {
-        (p as u32 * self.per()).min(self.dense_len as u32)
+        (small_u32(p, "server rank") * self.per()).min(small_u32(self.dense_len, "dense length"))
     }
 
     fn hi(&self, p: usize) -> u32 {
-        ((p as u32 + 1) * self.per()).min(self.dense_len as u32)
+        ((small_u32(p, "server rank") + 1) * self.per())
+            .min(small_u32(self.dense_len, "dense length"))
     }
 }
 
@@ -136,18 +140,14 @@ impl Protocol for PsMachine<'_> {
             }
             PsState::PushParked => Ok(Event::StageDone { name: "push" }),
             PsState::PullSend => {
-                let nonempty = self
-                    .agg
-                    .as_ref()
-                    .expect("aggregated partition")
-                    .nnz()
-                    > 0;
+                let nonempty = state(self.agg.as_ref(), "aggregated partition").nnz() > 0;
                 if nonempty {
                     while self.cursor < self.n {
                         let w = self.cursor;
                         self.cursor += 1;
                         if w != self.rank {
-                            let msg = pull_msg(self.rank, self.agg.as_ref().unwrap());
+                            let agg = state(self.agg.as_ref(), "aggregated partition");
+                            let msg = pull_msg(self.rank, agg);
                             return Ok(Event::Send { dst: w, msg });
                         }
                     }
@@ -156,9 +156,10 @@ impl Protocol for PsMachine<'_> {
                 Ok(Event::StageDone { name: "pull" })
             }
             PsState::PullParked => Ok(Event::StageDone { name: "pull" }),
-            PsState::Done => Ok(Event::Complete(
-                self.output.take().expect("output assembled at pull closure"),
-            )),
+            PsState::Done => Ok(Event::Complete(state(
+                self.output.take(),
+                "output assembled at pull closure",
+            ))),
         }
     }
 
@@ -173,7 +174,7 @@ impl Protocol for PsMachine<'_> {
                 // One-shot aggregation: own shard first, then the
                 // received shards in ascending-worker order (the old
                 // orchestrated global-FIFO order).
-                let mut shards = vec![self.own.take().expect("own shard present")];
+                let mut shards = vec![state(self.own.take(), "own shard present")];
                 for (_, msg) in self.inbox.drain_ascending() {
                     shards.push(expect_push(msg).1);
                 }
@@ -185,7 +186,7 @@ impl Protocol for PsMachine<'_> {
                 let mut parts: Vec<(u32, CooTensor)> = Vec::with_capacity(self.n);
                 parts.push((
                     self.lo(self.rank),
-                    self.agg.take().expect("aggregated partition"),
+                    state(self.agg.take(), "aggregated partition"),
                 ));
                 for (_, msg) in self.inbox.drain_ascending() {
                     let (server, tensor) = expect_pull_coo(msg);
@@ -202,6 +203,8 @@ impl Protocol for PsMachine<'_> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used, clippy::cast_possible_truncation)]
+
     use super::super::testutil::overlapping_inputs;
     use super::*;
     use crate::cluster::LinkKind;

@@ -28,7 +28,11 @@ pub struct StrawmanScheme {
 
 impl StrawmanScheme {
     pub fn new(master_seed: u64, n: usize, expected_nnz: usize, mem_multiple: f64) -> Self {
-        let slots = ((expected_nnz as f64 * mem_multiple) as usize).max(n);
+        // mem_multiple is a small CLI-provided factor, so the product
+        // stays far below 2^53 and the float→int cast keeps the exact
+        // integer part — the truncation lint is waived for this line.
+        #[allow(clippy::cast_possible_truncation)]
+        let slots = ((expected_nnz as f64 * mem_multiple).max(0.0) as usize).max(n);
         StrawmanScheme {
             hasher: StrawmanHasher::new(master_seed, n, slots),
             last_loss: std::sync::Mutex::new(Vec::new()),
@@ -38,7 +42,7 @@ impl StrawmanScheme {
     /// Information-loss rate measured on the most recent sync, over the
     /// ranks that ran in this process.
     pub fn last_loss_rate(&self) -> f64 {
-        let slots = self.last_loss.lock().unwrap();
+        let slots = crate::wire::lock_or_panic(&self.last_loss, "loss slots");
         let (nnz, lost) = slots
             .iter()
             .flatten()
@@ -51,7 +55,7 @@ impl StrawmanScheme {
     }
 
     fn record_loss(&self, rank: usize, nnz: usize, lost: usize) {
-        self.last_loss.lock().unwrap()[rank] = Some((nnz, lost));
+        crate::wire::lock_or_panic(&self.last_loss, "loss slots")[rank] = Some((nnz, lost));
     }
 }
 
@@ -73,7 +77,7 @@ impl SyncScheme for StrawmanScheme {
     fn protocols<'a>(&'a self, inputs: &'a [CooTensor]) -> Vec<Box<dyn Protocol + 'a>> {
         let n = inputs.len();
         assert_eq!(self.hasher.n, n);
-        *self.last_loss.lock().unwrap() = vec![None; n];
+        *crate::wire::lock_or_panic(&self.last_loss, "loss slots") = vec![None; n];
         (0..n)
             .map(|rank| {
                 Box::new(StrawmanMachine {
@@ -136,7 +140,7 @@ impl Protocol for StrawmanMachine<'_> {
                 while self.cursor < self.n {
                     let p = self.cursor;
                     self.cursor += 1;
-                    let part = self.parts[p].take().expect("partition present");
+                    let part = state(self.parts[p].take(), "partition present");
                     if p == self.rank {
                         self.own = Some(part);
                     } else if part.nnz() > 0 {
@@ -151,13 +155,14 @@ impl Protocol for StrawmanMachine<'_> {
             }
             StrawState::PushParked => Ok(Event::StageDone { name: "push" }),
             StrawState::PullSend => {
-                let nonempty = self.agg.as_ref().expect("aggregate present").nnz() > 0;
+                let nonempty = state(self.agg.as_ref(), "aggregate present").nnz() > 0;
                 if nonempty {
                     while self.cursor < self.n {
                         let w = self.cursor;
                         self.cursor += 1;
                         if w != self.rank {
-                            let msg = pull_msg(self.rank, self.agg.as_ref().unwrap());
+                            let agg = state(self.agg.as_ref(), "aggregate present");
+                            let msg = pull_msg(self.rank, agg);
                             return Ok(Event::Send { dst: w, msg });
                         }
                     }
@@ -166,9 +171,10 @@ impl Protocol for StrawmanMachine<'_> {
                 Ok(Event::StageDone { name: "pull" })
             }
             StrawState::PullParked => Ok(Event::StageDone { name: "pull" }),
-            StrawState::Done => Ok(Event::Complete(
-                self.output.take().expect("output assembled"),
-            )),
+            StrawState::Done => Ok(Event::Complete(state(
+                self.output.take(),
+                "output assembled",
+            ))),
         }
     }
 
@@ -180,7 +186,7 @@ impl Protocol for StrawmanMachine<'_> {
     fn stage_closed(&mut self, name: &str) -> Result<(), WireError> {
         match name {
             "push" => {
-                let mut shards = vec![self.own.take().expect("own shard present")];
+                let mut shards = vec![state(self.own.take(), "own shard present")];
                 for (_, msg) in self.inbox.drain_ascending() {
                     shards.push(expect_push(msg).1);
                 }
@@ -195,7 +201,10 @@ impl Protocol for StrawmanMachine<'_> {
                     .into_iter()
                     .map(|(_, msg)| expect_pull_coo(msg).1)
                     .collect();
-                self.output = Some(merge_with_own(&pieces, self.agg.as_ref().unwrap()));
+                self.output = Some(merge_with_own(
+                    &pieces,
+                    state(self.agg.as_ref(), "aggregate present"),
+                ));
                 self.state = StrawState::Done;
             }
             other => panic!("Strawman-lossy: unknown stage '{other}' closed"),
@@ -206,6 +215,8 @@ impl Protocol for StrawmanMachine<'_> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used, clippy::cast_possible_truncation)]
+
     use super::super::testutil::overlapping_inputs;
     use super::*;
     use crate::cluster::LinkKind;

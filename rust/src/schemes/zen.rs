@@ -116,7 +116,7 @@ impl Zen {
         // Fast table full of other dense_lens: the overflow tier still
         // caches (compute under the lock, after a re-check, so
         // exactly-once holds here too).
-        let mut overflow = self.domains_overflow.lock().unwrap();
+        let mut overflow = crate::wire::lock_or_panic(&self.domains_overflow, "domain cache");
         if let Some((_, d)) = overflow.iter().find(|(k, _)| *k == dense_len) {
             return d.clone();
         }
@@ -205,7 +205,7 @@ impl SyncScheme for Zen {
         let outcome = driver.drive(self.machines(inputs, compute.clone()), scratch)?;
         let mut report = outcome.report;
         if self.charge_compute {
-            report.compute_overhead += *compute.lock().unwrap();
+            report.compute_overhead += *crate::wire::lock_or_panic(&compute, "compute accumulator");
         }
         Ok(SyncOutput {
             outputs: outcome.outputs,
@@ -248,7 +248,8 @@ struct ZenMachine<'a> {
 
 impl ZenMachine<'_> {
     fn charge(&self, seconds: f64) {
-        *self.compute.lock().unwrap() += seconds / self.n as f64;
+        *crate::wire::lock_or_panic(&self.compute, "compute accumulator") +=
+            seconds / self.n as f64;
     }
 
     /// First peer (ascending) whose frame has not arrived yet, if any.
@@ -312,7 +313,7 @@ impl Protocol for ZenMachine<'_> {
             ZenState::Pull => {
                 if !self.encoded {
                     self.encoded = true;
-                    let agg = self.agg.as_ref().expect("aggregated partition");
+                    let agg = state(self.agg.as_ref(), "aggregated partition");
                     match self.scheme.format {
                         ZenIndexFormat::Coo => {
                             for w in 0..self.n {
@@ -322,7 +323,7 @@ impl Protocol for ZenMachine<'_> {
                             }
                         }
                         ZenIndexFormat::HashBitmap => {
-                            let domains = self.domains.as_ref().expect("domains computed");
+                            let domains = state(self.domains.as_ref(), "domains computed");
                             let codec = HashBitmapCodec::new(&domains[self.rank]);
                             let sw = crate::util::Stopwatch::start();
                             codec.encode_into(agg.as_slice(), &mut scratch.payload);
@@ -332,7 +333,7 @@ impl Protocol for ZenMachine<'_> {
                                     self.pending.push_back((
                                         w,
                                         Message::PullHashBitmap {
-                                            server: self.rank as u32,
+                                            server: small_u32(self.rank, "server rank"),
                                             bitmap: scratch.payload.bitmap.clone(),
                                             values: scratch.payload.values.clone(),
                                         },
@@ -354,7 +355,7 @@ impl Protocol for ZenMachine<'_> {
                                     self.pending.push_back((
                                         w,
                                         Message::PullHashBitmap {
-                                            server: self.rank as u32,
+                                            server: small_u32(self.rank, "server rank"),
                                             bitmap: scratch.payload.bitmap.clone(),
                                             values: agg.values.clone(),
                                         },
@@ -384,7 +385,7 @@ impl Protocol for ZenMachine<'_> {
                                 values,
                             },
                         ) => {
-                            let domains = self.domains.as_ref().expect("domains computed");
+                            let domains = state(self.domains.as_ref(), "domains computed");
                             let codec = HashBitmapCodec::new(&domains[server as usize]);
                             let payload = HashBitmapPayload { bitmap, values };
                             codec.decode(&payload, self.dense_len)
@@ -400,14 +401,18 @@ impl Protocol for ZenMachine<'_> {
                     };
                     pieces.push(piece);
                 }
-                self.output = Some(merge_with_own(&pieces, self.agg.as_ref().unwrap()));
+                self.output = Some(merge_with_own(
+                    &pieces,
+                    state(self.agg.as_ref(), "aggregated partition"),
+                ));
                 self.state = ZenState::PullParked;
                 Ok(Event::StageDone { name: "pull" })
             }
             ZenState::PullParked => Ok(Event::StageDone { name: "pull" }),
-            ZenState::Done => Ok(Event::Complete(
-                self.output.take().expect("output assembled"),
-            )),
+            ZenState::Done => Ok(Event::Complete(state(
+                self.output.take(),
+                "output assembled",
+            ))),
         }
     }
 
@@ -428,6 +433,8 @@ impl Protocol for ZenMachine<'_> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used, clippy::cast_possible_truncation)]
+
     use super::super::testutil::overlapping_inputs;
     use super::*;
     use crate::cluster::LinkKind;

@@ -201,6 +201,15 @@ struct Reader<'a> {
     pos: usize,
 }
 
+/// `chunks_exact(4)` guarantees 4-byte chunks; spelled out so the
+/// conversion cannot silently panic through `unwrap`.
+fn le4(c: &[u8]) -> [u8; 4] {
+    match c.try_into() {
+        Ok(a) => a,
+        Err(_) => unreachable!("chunks_exact(4) yielded a non-4-byte chunk"),
+    }
+}
+
 impl Reader<'_> {
     fn need(&self, n: usize) -> Result<(), WireError> {
         if self.pos + n > self.buf.len() {
@@ -212,11 +221,17 @@ impl Reader<'_> {
             Ok(())
         }
     }
+    /// Consume the next `N` bytes as a fixed array — the bounds check
+    /// is the only failure mode, so the array conversion is infallible.
+    fn take<const N: usize>(&mut self) -> Result<[u8; N], WireError> {
+        self.need(N)?;
+        let mut out = [0u8; N];
+        out.copy_from_slice(&self.buf[self.pos..self.pos + N]);
+        self.pos += N;
+        Ok(out)
+    }
     fn u16(&mut self) -> Result<u16, WireError> {
-        self.need(2)?;
-        let v = u16::from_le_bytes(self.buf[self.pos..self.pos + 2].try_into().unwrap());
-        self.pos += 2;
-        Ok(v)
+        Ok(u16::from_le_bytes(self.take()?))
     }
     fn u8(&mut self) -> Result<u8, WireError> {
         self.need(1)?;
@@ -225,16 +240,10 @@ impl Reader<'_> {
         Ok(v)
     }
     fn u32(&mut self) -> Result<u32, WireError> {
-        self.need(4)?;
-        let v = u32::from_le_bytes(self.buf[self.pos..self.pos + 4].try_into().unwrap());
-        self.pos += 4;
-        Ok(v)
+        Ok(u32::from_le_bytes(self.take()?))
     }
     fn u64(&mut self) -> Result<u64, WireError> {
-        self.need(8)?;
-        let v = u64::from_le_bytes(self.buf[self.pos..self.pos + 8].try_into().unwrap());
-        self.pos += 8;
-        Ok(v)
+        Ok(u64::from_le_bytes(self.take()?))
     }
     // Bulk reads: one bounds check, then a chunked scan of the raw byte
     // region — the read-side twin of the writer's bulk path.
@@ -244,7 +253,7 @@ impl Reader<'_> {
         out.extend(
             self.buf[self.pos..self.pos + n * 4]
                 .chunks_exact(4)
-                .map(|c| u32::from_le_bytes(c.try_into().unwrap())),
+                .map(|c| u32::from_le_bytes(le4(c))),
         );
         self.pos += n * 4;
         Ok(out)
@@ -255,7 +264,7 @@ impl Reader<'_> {
         out.extend(
             self.buf[self.pos..self.pos + n * 4]
                 .chunks_exact(4)
-                .map(|c| f32::from_le_bytes(c.try_into().unwrap())),
+                .map(|c| f32::from_le_bytes(le4(c))),
         );
         self.pos += n * 4;
         Ok(out)
@@ -270,16 +279,29 @@ impl Reader<'_> {
     }
 }
 
+/// Convert a length the wire format stores as `u32`. The transports
+/// gate every send through [`FrameRef::validate`], which rejects
+/// oversized counts as typed [`WireError::FrameTooLarge`] — reaching
+/// this with an unrepresentable value is a codec-internal bug, so it
+/// panics rather than truncating the wire image.
+fn count_u32(what: &'static str, len: usize) -> u32 {
+    match u32::try_from(len) {
+        Ok(v) => v,
+        Err(_) => panic!("{what} {len} exceeds the u32 wire limit; FrameRef::validate must gate it"),
+    }
+}
+
 fn write_coo_parts(w: &mut Writer, dense_len: usize, indices: &[u32], values: &[f32]) {
     debug_assert_eq!(indices.len(), values.len());
     w.u64(dense_len as u64);
-    w.u32(indices.len() as u32);
+    w.u32(count_u32("coo nnz", indices.len()));
     w.u32s(indices);
     w.f32s(values);
 }
 
 fn read_coo(r: &mut Reader) -> Result<CooTensor, WireError> {
-    let dense_len = r.u64()? as usize;
+    let dense_len = usize::try_from(r.u64()?)
+        .map_err(|_| WireError::Malformed("dense length exceeds the address space"))?;
     let nnz = r.u32()? as usize;
     let indices = r.u32s(nnz)?;
     let values = r.f32s(nnz)?;
@@ -622,7 +644,7 @@ fn frame<F: FnOnce(&mut Writer)>(out: &mut Vec<u8>, kind: u8, body: F) {
     w.u32(0); // body_len placeholder
     let body_start = w.0.len();
     body(&mut w);
-    let body_len = (out.len() - body_start) as u32;
+    let body_len = count_u32("body length", out.len() - body_start);
     out[start + 4..start + 8].copy_from_slice(&body_len.to_le_bytes());
 }
 
@@ -652,7 +674,7 @@ pub fn encode_pull_hash_bitmap(server: u32, bitmap: &Bitmap, values: &[f32], out
         w.u32(server);
         w.u64(bitmap.len() as u64);
         w.u64s(bitmap.words());
-        w.u32(values.len() as u32);
+        w.u32(count_u32("bitmap value count", values.len()));
         w.f32s(values);
     });
 }
@@ -663,7 +685,7 @@ pub fn encode_dense_chunk(from: u32, offset: u64, values: &[f32], out: &mut Vec<
     frame(out, 5, |w| {
         w.u32(from);
         w.u64(offset);
-        w.u32(values.len() as u32);
+        w.u32(count_u32("dense chunk count", values.len()));
         w.f32s(values);
     });
 }
@@ -683,7 +705,7 @@ pub fn encode_blocks(
         w.u32(from);
         w.u64(dense_len);
         w.u32(block_len);
-        w.u32(block_ids.len() as u32);
+        w.u32(count_u32("block count", block_ids.len()));
         w.u32s(block_ids);
         w.f32s(values);
     });
@@ -715,7 +737,8 @@ impl Decode for Message {
                 if bits64 > MAX_BITMAP_BITS {
                     return Err(WireError::Malformed("bitmap length implausible"));
                 }
-                let bits = bits64 as usize;
+                let bits = usize::try_from(bits64)
+                    .map_err(|_| WireError::Malformed("bitmap length implausible"))?;
                 let n_words = crate::util::ceil_div(bits.max(1), 64);
                 let bitmap = Bitmap::from_le_bytes(bits, r.word_bytes(n_words)?);
                 let nnz = r.u32()? as usize;
@@ -791,6 +814,7 @@ impl Decode for Message {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used, clippy::cast_possible_truncation)]
 mod tests {
     use super::*;
     use crate::util::propcheck::{check, prop_assert};

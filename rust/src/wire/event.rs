@@ -59,6 +59,16 @@ use crate::cluster::Network;
 use crate::schemes::SyncScratch;
 use crate::tensor::CooTensor;
 
+/// Endpoint ranks fit `u32` by construction (a `Network` never has
+/// anywhere near 2^32 endpoints); spelled out so the conversion can't
+/// silently truncate if that ever changes.
+fn rank_u32(r: usize) -> u32 {
+    match u32::try_from(r) {
+        Ok(v) => v,
+        Err(_) => panic!("rank {r} exceeds the u32 event-key range"),
+    }
+}
+
 /// One scheduled delivery: the heap key plus the slot holding the
 /// message. Ordered by `(time, src, seq)` — see the module docs.
 #[derive(Clone, Copy, Debug)]
@@ -204,15 +214,15 @@ impl EventDriver {
             Some(s) => s,
             None => {
                 self.slots.push(None);
-                (self.slots.len() - 1) as u32
+                rank_u32(self.slots.len() - 1)
             }
         };
         self.slots[slot as usize] = Some(msg);
         self.seq += 1;
         self.heap.push(Reverse(DeliveryEv {
             time: busy_until + link.latency(),
-            src: src as u32,
-            dst: dst as u32,
+            src: rank_u32(src),
+            dst: rank_u32(dst),
             seq: self.seq,
             slot,
         }));
@@ -301,9 +311,10 @@ impl Driver for EventDriver {
             // the Inbox merge path sees the same order as every other
             // backend.
             while let Some(Reverse(ev)) = self.heap.pop() {
-                let msg = self.slots[ev.slot as usize]
-                    .take()
-                    .expect("scheduled slot holds a message");
+                let msg = match self.slots[ev.slot as usize].take() {
+                    Some(m) => m,
+                    None => unreachable!("scheduled slot {} holds no message", ev.slot),
+                };
                 self.free.push(ev.slot);
                 let dst = ev.dst as usize;
                 if self.rank_time[dst] < ev.time {
@@ -335,13 +346,14 @@ impl Driver for EventDriver {
         }
         let report = self.acc.take_report();
         Ok(DriveOutcome {
-            outputs: outs.into_iter().map(|o| o.unwrap()).collect(),
+            outputs: super::driver::collect_outputs(outs),
             report,
         })
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used, clippy::cast_possible_truncation)]
 mod tests {
     use super::*;
     use crate::cluster::LinkKind;

@@ -20,13 +20,39 @@
 //! No serde offline, so the codecs are hand-rolled little-endian
 //! framing with explicit versioning and exhaustive roundtrip tests.
 
+// Cargo `[lints]` tables are package-wide, so the module-scoped part of
+// the lint policy lives here: protocol/driver code must not truncate
+// sizes with `as` or panic through unwrap/expect — every exception
+// carries an `#[allow]` with a reason. (Crate-wide denies — unsafe_code,
+// dbg/todo/unimplemented — are in Cargo.toml.)
+#![deny(
+    clippy::cast_possible_truncation,
+    clippy::unwrap_used,
+    clippy::expect_used
+)]
+
 pub mod codec;
 pub mod driver;
 pub mod event;
 pub(crate) mod fabric;
 pub mod protocol;
 pub mod threaded;
+pub mod trace;
 pub mod transport;
+
+/// Lock a mutex, panicking with context if a peer thread panicked while
+/// holding it. Lock poisoning here is always a secondary failure — the
+/// original panic is the bug — so unwrapping with a label beats
+/// threading `PoisonError` through every protocol body.
+pub(crate) fn lock_or_panic<'a, T>(
+    m: &'a std::sync::Mutex<T>,
+    what: &str,
+) -> std::sync::MutexGuard<'a, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(_) => panic!("{what}: mutex poisoned by a peer panic"),
+    }
+}
 
 pub use codec::{
     encode_blocks, encode_dense_chunk, encode_pull_hash_bitmap, encode_push_coo, Decode, Encode,
@@ -37,4 +63,5 @@ pub use event::{EventDriver, EventTotals};
 pub use fabric::Fabric;
 pub use protocol::{Event, Inbox, Protocol};
 pub use threaded::ThreadedDriver;
+pub use trace::{schedule_string, ChoicePoint, RunRecord, ScheduleDriver, StageBoundary, Violation};
 pub use transport::{make_transport, ChannelTransport, SimTransport, Transport, TransportKind};

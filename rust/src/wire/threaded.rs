@@ -89,7 +89,7 @@ fn rank_loop<'a>(
         match machine.poll(&mut scratch)? {
             Event::Send { dst, msg } => {
                 {
-                    let mut a = acc.lock().unwrap();
+                    let mut a = super::lock_or_panic(acc, "stage accounting");
                     let frame = msg.as_frame();
                     a.check_send(me, dst, &frame)?;
                     let len = frame.encoded_len() as u64;
@@ -106,7 +106,7 @@ fn rank_loop<'a>(
             Event::NeedFrame { .. } => match rx.recv_timeout(deadline) {
                 Ok(RankMsg::Frame(src, msg)) => {
                     machine.deliver(src, msg)?;
-                    acc.lock().unwrap().on_recv();
+                    super::lock_or_panic(acc, "stage accounting").on_recv();
                 }
                 Ok(RankMsg::Close(_)) => {
                     return Err(WireError::Malformed("stage closed under a waiting machine"))
@@ -123,7 +123,7 @@ fn rank_loop<'a>(
                     match rx.recv_timeout(deadline) {
                         Ok(RankMsg::Frame(src, msg)) => {
                             machine.deliver(src, msg)?;
-                            acc.lock().unwrap().on_recv();
+                            super::lock_or_panic(acc, "stage accounting").on_recv();
                         }
                         Ok(RankMsg::Close(closed)) => {
                             machine.stage_closed(closed)?;
@@ -165,7 +165,10 @@ impl Driver for ThreadedDriver {
 
         let outs = std::thread::scope(|s| {
             for (i, machine) in machines.into_iter().enumerate() {
-                let rx = rank_rxs[i].take().expect("receiver handed out once");
+                let rx = match rank_rxs[i].take() {
+                    Some(rx) => rx,
+                    None => unreachable!("receiver {i} handed out once"),
+                };
                 let txs = rank_txs.clone();
                 let coord = coord_tx.clone();
                 let acc = &acc;
@@ -200,7 +203,7 @@ impl Driver for ThreadedDriver {
                     // byte matrix is complete, then close.
                     let drain = Instant::now();
                     loop {
-                        if acc.lock().unwrap().in_flight() == 0 {
+                        if super::lock_or_panic(&acc, "stage accounting").in_flight() == 0 {
                             break;
                         }
                         if drain.elapsed() > deadline {
@@ -211,7 +214,11 @@ impl Driver for ThreadedDriver {
                     }
                     if failure.is_none() {
                         match consensus_stage(&done)
-                            .and_then(|name| acc.lock().unwrap().end_stage(name).map(|_| name))
+                            .and_then(|name| {
+                                super::lock_or_panic(&acc, "stage accounting")
+                                    .end_stage(name)
+                                    .map(|_| name)
+                            })
                         {
                             Ok(name) => {
                                 for i in 0..n {
@@ -238,9 +245,14 @@ impl Driver for ThreadedDriver {
             Ok(outs)
         })?;
 
-        let report = acc.into_inner().unwrap().take_report();
+        let report = match acc.into_inner() {
+            Ok(a) => a.take_report(),
+            // A rank panic while holding the lock would already have
+            // propagated through the scope join above.
+            Err(_) => unreachable!("accounting mutex poisoned after a clean scope join"),
+        };
         Ok(DriveOutcome {
-            outputs: outs.into_iter().map(|o| o.unwrap()).collect(),
+            outputs: super::driver::collect_outputs(outs),
             report,
         })
     }
@@ -248,6 +260,8 @@ impl Driver for ThreadedDriver {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used, clippy::cast_possible_truncation)]
+
     use super::*;
     use crate::cluster::LinkKind;
     use crate::schemes::{self, SyncScheme};

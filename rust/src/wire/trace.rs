@@ -1,0 +1,758 @@
+//! Schedule-recording executor under the model checker (`zen check`).
+//!
+//! [`ScheduleDriver`] is the trace-record/replay hook on [`Driver`]: it
+//! drives all n machines itself (like
+//! [`TransportDriver`](crate::wire::TransportDriver)) but *defers*
+//! every delivery into a per-(src, dst) FIFO matrix and chooses which
+//! pending frame the destination sees next — prescribed by an explicit
+//! schedule prefix, canonical (lowest source) past it. Every delivery,
+//! branch point, and stage boundary lands in a [`RunRecord`], which is
+//! what [`crate::check`] enumerates delivery orders over; invariant
+//! breaches surface as a typed [`Violation`] instead of a panic or a
+//! hang.
+//!
+//! ## Canonical order and the DPOR-style reduction
+//!
+//! Deliveries to *distinct* destinations commute: [`Protocol::deliver`]
+//! mutates only the destination machine, and the poll phase runs every
+//! machine to a parked state independently (a machine touches only its
+//! own state plus its per-rank scratch slot). The executor therefore
+//! fixes the destination — the lowest rank with any pending frame —
+//! and branches only over which *source*'s head frame that destination
+//! receives, collapsing the factorial interleaving of independent
+//! deliveries to the product of per-receiver arrival orders. The
+//! reduction is complete for every scheme in this repo because within a
+//! stage (a) the star-pattern machines emit all their sends before
+//! consuming any same-stage delivery, and (b) the ring and
+//! recursive-doubling stages have exactly one source per destination. A
+//! hypothetical protocol whose mid-stage deliveries trigger *new* sends
+//! could realize arrival orders the reduction never explores; the
+//! per-run output digest in [`crate::check`] is the safety net for that
+//! assumption.
+
+use std::collections::VecDeque;
+
+use super::codec::{Message, WireError};
+use super::driver::{consensus_stage, DriveOutcome, Driver};
+use super::protocol::{Event, Protocol};
+use super::transport::StageAcc;
+use crate::cluster::Network;
+use crate::schemes::SyncScratch;
+use crate::tensor::CooTensor;
+
+/// Hard cap on poll events per run: a machine that livelocks (emits
+/// events forever without completing) is reported instead of hanging
+/// the checker.
+const MAX_POLLS: usize = 4_000_000;
+
+/// Hard cap on closed stages per run (same livelock guard).
+const MAX_STAGES: usize = 4_096;
+
+/// An invariant the executor (or the checker above it) caught a
+/// protocol breaking, with enough context to print and to replay.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Violation {
+    /// Every machine is parked, no frame is pending delivery, and at
+    /// least one machine still waits on `NeedFrame` — nothing can ever
+    /// wake it. `parked_done` lists the ranks already at the stage
+    /// boundary (non-empty means a premature `StageDone` somewhere).
+    Deadlock {
+        waiting: Vec<usize>,
+        parked_done: Vec<usize>,
+    },
+    /// A frame was sent to, or was still undelivered at, a rank that
+    /// already emitted `Complete`.
+    SentToFinished { src: usize, dst: usize },
+    /// A machine completed while frames addressed to it were still
+    /// pending delivery.
+    CompletedWithPending { dst: usize, pending: usize },
+    /// Stage-boundary accounting failed: parked machines disagree on
+    /// the open stage, or byte conservation broke (`StageAcc` refused
+    /// to close, or per-stage sent/delivered totals diverged).
+    StageError { detail: String },
+    /// A machine returned a `WireError` from poll/deliver/stage_closed,
+    /// or exceeded the livelock budget.
+    MachineError { rank: usize, detail: String },
+    /// A machine panicked (caught by the checker's `catch_unwind`).
+    MachinePanic { detail: String },
+    /// A prescribed replay step named a (src, dst) pair with no pending
+    /// frame — the schedule does not belong to this protocol run.
+    BadSchedule { step: usize, src: usize, dst: usize },
+    /// Two explored delivery orders produced different outputs
+    /// (checker-level: the bit-identical-output invariant).
+    OutputDivergence { detail: String },
+    /// An output failed the losslessness oracle (checker-level: sum of
+    /// inputs, within float tolerance).
+    OracleFailure { detail: String },
+}
+
+impl Violation {
+    /// Stable short name — what counterexample minimization matches on.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Violation::Deadlock { .. } => "deadlock",
+            Violation::SentToFinished { .. } => "sent-to-finished",
+            Violation::CompletedWithPending { .. } => "completed-with-pending",
+            Violation::StageError { .. } => "stage-error",
+            Violation::MachineError { .. } => "machine-error",
+            Violation::MachinePanic { .. } => "machine-panic",
+            Violation::BadSchedule { .. } => "bad-schedule",
+            Violation::OutputDivergence { .. } => "output-divergence",
+            Violation::OracleFailure { .. } => "oracle-failure",
+        }
+    }
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Violation::Deadlock {
+                waiting,
+                parked_done,
+            } => write!(
+                f,
+                "deadlock: ranks {waiting:?} wait on frames nobody will send \
+                 (ranks {parked_done:?} already parked on the stage boundary)"
+            ),
+            Violation::SentToFinished { src, dst } => {
+                write!(f, "rank {src} sent a frame to finished rank {dst}")
+            }
+            Violation::CompletedWithPending { dst, pending } => write!(
+                f,
+                "rank {dst} completed with {pending} frame(s) still pending delivery to it"
+            ),
+            Violation::StageError { detail } => write!(f, "stage accounting: {detail}"),
+            Violation::MachineError { rank, detail } => {
+                write!(f, "rank {rank} machine error: {detail}")
+            }
+            Violation::MachinePanic { detail } => write!(f, "machine panicked: {detail}"),
+            Violation::BadSchedule { step, src, dst } => write!(
+                f,
+                "schedule step {step} names {src}>{dst} but no such frame is pending"
+            ),
+            Violation::OutputDivergence { detail } => {
+                write!(f, "outputs differ across delivery orders: {detail}")
+            }
+            Violation::OracleFailure { detail } => {
+                write!(f, "losslessness oracle failed: {detail}")
+            }
+        }
+    }
+}
+
+/// One delivered frame: step `i` of a run moved `bytes` from `src` to
+/// `dst`; `digest` fingerprints the encoded frame bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Delivery {
+    pub src: usize,
+    pub dst: usize,
+    pub bytes: u64,
+    pub digest: u64,
+}
+
+/// A step at which more than one source had a deliverable head frame
+/// for the chosen destination: the DFS re-runs the schedule with each
+/// alternative source swapped in at `step`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChoicePoint {
+    /// Index into the run's trace where the branch happened.
+    pub step: usize,
+    /// The destination every branch delivers to.
+    pub dst: usize,
+    /// The canonically chosen source (lowest rank).
+    pub chosen: usize,
+    /// The other eligible sources.
+    pub alternatives: Vec<usize>,
+}
+
+/// A closed stage boundary: `step` deliveries were complete when stage
+/// `name` closed, and `state_hash` digests everything delivered so far
+/// — order-insensitive within each stage, chained across stages — so
+/// two runs that reach a boundary with the same hash are in the same
+/// protocol state regardless of intra-stage delivery order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StageBoundary {
+    pub step: usize,
+    pub name: &'static str,
+    pub state_hash: u64,
+}
+
+/// Everything one executed schedule produced: the full delivery trace,
+/// the branch points the DFS can flip, the stage boundaries for state
+/// deduplication, and poll-count stats.
+#[derive(Clone, Debug, Default)]
+pub struct RunRecord {
+    pub trace: Vec<Delivery>,
+    pub choices: Vec<ChoicePoint>,
+    pub boundaries: Vec<StageBoundary>,
+    pub polls: usize,
+}
+
+impl RunRecord {
+    /// The trace as a plain (src, dst) schedule — the replay currency.
+    pub fn schedule(&self) -> Vec<(usize, usize)> {
+        self.trace.iter().map(|d| (d.src, d.dst)).collect()
+    }
+}
+
+/// Render a schedule as the `src>dst,src>dst,…` form `zen check
+/// --replay` accepts.
+pub fn schedule_string(sched: &[(usize, usize)]) -> String {
+    let steps: Vec<String> = sched.iter().map(|&(s, d)| format!("{s}>{d}")).collect();
+    steps.join(",")
+}
+
+/// FNV-1a over a byte slice — the frame/output fingerprint shared with
+/// `zen worker`'s digest line.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Order-sensitive 64-bit mix of three words (boundary-hash chaining).
+pub fn mix3(a: u64, b: u64, c: u64) -> u64 {
+    let mut h = a ^ 0x9e37_79b9_7f4a_7c15;
+    for v in [b, c] {
+        h ^= v;
+        h = h.wrapping_mul(0xff51_afd7_ed55_8ccd);
+        h ^= h >> 33;
+    }
+    h
+}
+
+/// The schedule-record/replay driver. One instance runs one schedule
+/// per [`run_checked`](ScheduleDriver::run_checked) call; the record of
+/// the last run stays readable until the next call.
+pub struct ScheduleDriver {
+    net: Network,
+    prefix: Vec<(usize, usize)>,
+    record: RunRecord,
+}
+
+/// A frame parked in the pending-delivery matrix.
+struct PendingFrame {
+    msg: Message,
+    bytes: u64,
+    digest: u64,
+}
+
+impl ScheduleDriver {
+    /// Canonical-order executor (empty prefix: every choice point takes
+    /// the lowest eligible source).
+    pub fn new(net: Network) -> ScheduleDriver {
+        ScheduleDriver::with_prefix(net, Vec::new())
+    }
+
+    /// Executor that replays `prefix` verbatim, then continues
+    /// canonically — the DFS and `--replay` entry point.
+    pub fn with_prefix(net: Network, prefix: Vec<(usize, usize)>) -> ScheduleDriver {
+        ScheduleDriver {
+            net,
+            prefix,
+            record: RunRecord::default(),
+        }
+    }
+
+    /// The record of the last `run_checked`/`drive` call.
+    pub fn record(&self) -> &RunRecord {
+        &self.record
+    }
+
+    /// Take the record, leaving an empty one.
+    pub fn take_record(&mut self) -> RunRecord {
+        std::mem::take(&mut self.record)
+    }
+
+    /// Run the machines under the prescribed schedule prefix (canonical
+    /// lowest-source order past it), recording every delivery, choice
+    /// point, and stage boundary. Returns the outputs or the first
+    /// invariant violation; the record is retained either way (on a
+    /// violation it holds the deliveries completed before the failure —
+    /// the counterexample trace).
+    pub fn run_checked<'a>(
+        &mut self,
+        mut machines: Vec<Box<dyn Protocol + 'a>>,
+        scratch: &mut SyncScratch,
+    ) -> Result<DriveOutcome, Violation> {
+        self.record = RunRecord::default();
+        let n = machines.len();
+        if n != self.net.endpoints {
+            return Err(Violation::StageError {
+                detail: format!("{n} machines on {} endpoints", self.net.endpoints),
+            });
+        }
+        let mut acc = StageAcc::new(self.net.clone());
+        let mut done: Vec<Option<&'static str>> = (0..n).map(|_| None).collect();
+        let mut need = vec![false; n];
+        let mut outs: Vec<Option<CooTensor>> = (0..n).map(|_| None).collect();
+        let mut finished = 0usize;
+        // pending[src][dst]: frames sent but not yet delivered (FIFO —
+        // per-source order is part of the protocol contract and never
+        // reordered; the checker branches only across sources).
+        let mut pending: Vec<Vec<VecDeque<PendingFrame>>> = (0..n)
+            .map(|_| (0..n).map(|_| VecDeque::new()).collect())
+            .collect();
+        let mut pending_total = 0usize;
+        let mut step = 0usize;
+        let mut chain_hash = 0u64;
+        let mut encode_buf: Vec<u8> = Vec::new();
+
+        loop {
+            // Phase 1: poll every runnable machine to a parked state,
+            // in ascending rank (polls commute — each machine touches
+            // only its own state plus its per-rank scratch slot).
+            for i in 0..n {
+                if outs[i].is_some() || done[i].is_some() || need[i] {
+                    continue;
+                }
+                loop {
+                    self.record.polls += 1;
+                    if self.record.polls > MAX_POLLS {
+                        return Err(Violation::MachineError {
+                            rank: i,
+                            detail: format!("poll budget ({MAX_POLLS}) exceeded — livelock?"),
+                        });
+                    }
+                    match machines[i].poll(scratch) {
+                        Err(e) => {
+                            return Err(Violation::MachineError {
+                                rank: i,
+                                detail: e.to_string(),
+                            })
+                        }
+                        Ok(Event::Send { dst, msg }) => {
+                            if dst < n && outs[dst].is_some() {
+                                return Err(Violation::SentToFinished { src: i, dst });
+                            }
+                            let frame = msg.as_frame();
+                            if let Err(e) = acc.check_send(i, dst, &frame) {
+                                return Err(Violation::MachineError {
+                                    rank: i,
+                                    detail: format!("invalid send to {dst}: {e}"),
+                                });
+                            }
+                            let bytes = frame.encoded_len() as u64;
+                            encode_buf.clear();
+                            frame.encode(&mut encode_buf);
+                            let digest = fnv1a(&encode_buf);
+                            acc.charge(i, dst, bytes);
+                            pending[i][dst].push_back(PendingFrame { msg, bytes, digest });
+                            pending_total += 1;
+                        }
+                        Ok(Event::NeedFrame { .. }) => {
+                            need[i] = true;
+                            break;
+                        }
+                        Ok(Event::StageDone { name }) => {
+                            done[i] = Some(name);
+                            break;
+                        }
+                        Ok(Event::Complete(t)) => {
+                            let inbound: usize = (0..n).map(|s| pending[s][i].len()).sum();
+                            if inbound > 0 {
+                                return Err(Violation::CompletedWithPending {
+                                    dst: i,
+                                    pending: inbound,
+                                });
+                            }
+                            outs[i] = Some(t);
+                            finished += 1;
+                            break;
+                        }
+                    }
+                }
+            }
+            if finished == n {
+                break;
+            }
+
+            // Phase 2: deliver one pending frame — prescribed while
+            // inside the replay prefix, canonical past it.
+            if pending_total > 0 {
+                let (src, dst) = if step < self.prefix.len() {
+                    let (s, d) = self.prefix[step];
+                    if s >= n || d >= n || pending[s][d].is_empty() {
+                        return Err(Violation::BadSchedule {
+                            step,
+                            src: s,
+                            dst: d,
+                        });
+                    }
+                    (s, d)
+                } else {
+                    // Canonical choice: lowest destination with pending
+                    // frames; branch across its eligible sources.
+                    let dst = match (0..n).find(|&d| (0..n).any(|s| !pending[s][d].is_empty())) {
+                        Some(d) => d,
+                        None => unreachable!("pending_total > 0 but no pending frame found"),
+                    };
+                    let srcs: Vec<usize> =
+                        (0..n).filter(|&s| !pending[s][dst].is_empty()).collect();
+                    let chosen = srcs[0];
+                    if srcs.len() > 1 {
+                        self.record.choices.push(ChoicePoint {
+                            step,
+                            dst,
+                            chosen,
+                            alternatives: srcs[1..].to_vec(),
+                        });
+                    }
+                    (chosen, dst)
+                };
+                let frame = match pending[src][dst].pop_front() {
+                    Some(fr) => fr,
+                    None => unreachable!("chosen queue verified non-empty"),
+                };
+                pending_total -= 1;
+                acc.on_recv();
+                if outs[dst].is_some() {
+                    return Err(Violation::SentToFinished { src, dst });
+                }
+                if let Err(e) = machines[dst].deliver(src, frame.msg) {
+                    return Err(Violation::MachineError {
+                        rank: dst,
+                        detail: format!("deliver from {src}: {e}"),
+                    });
+                }
+                need[dst] = false;
+                self.record.trace.push(Delivery {
+                    src,
+                    dst,
+                    bytes: frame.bytes,
+                    digest: frame.digest,
+                });
+                step += 1;
+                continue; // eager re-poll before the next delivery
+            }
+
+            // Phase 3: nothing pending and nobody pollable — close the
+            // stage, or report the deadlock.
+            if need.iter().any(|&w| w) {
+                return Err(Violation::Deadlock {
+                    waiting: (0..n).filter(|&i| need[i]).collect(),
+                    parked_done: (0..n).filter(|&i| done[i].is_some()).collect(),
+                });
+            }
+            let name = match consensus_stage(&done) {
+                Ok(name) => name,
+                Err(e) => {
+                    return Err(Violation::StageError {
+                        detail: e.to_string(),
+                    })
+                }
+            };
+            if let Err(e) = acc.end_stage(name) {
+                return Err(Violation::StageError {
+                    detail: format!("stage '{name}': {e}"),
+                });
+            }
+            // Boundary state hash: order-insensitive within the stage
+            // (commutative add over per-delivery mixes), chained across
+            // stages.
+            let from = self.record.boundaries.last().map_or(0, |b| b.step);
+            let mut stage_hash = 0u64;
+            for d in &self.record.trace[from..] {
+                stage_hash = stage_hash.wrapping_add(mix3(d.src as u64, d.dst as u64, d.digest));
+            }
+            chain_hash = mix3(chain_hash, fnv1a(name.as_bytes()), stage_hash);
+            self.record.boundaries.push(StageBoundary {
+                step,
+                name,
+                state_hash: chain_hash,
+            });
+            if self.record.boundaries.len() > MAX_STAGES {
+                return Err(Violation::StageError {
+                    detail: format!("stage budget ({MAX_STAGES}) exceeded — livelock?"),
+                });
+            }
+            for (i, slot) in done.iter_mut().enumerate() {
+                if slot.take().is_some() {
+                    if let Err(e) = machines[i].stage_closed(name) {
+                        return Err(Violation::MachineError {
+                            rank: i,
+                            detail: format!("stage_closed('{name}'): {e}"),
+                        });
+                    }
+                }
+            }
+        }
+
+        let outputs = outs
+            .into_iter()
+            .enumerate()
+            .map(|(r, o)| match o {
+                Some(t) => t,
+                None => unreachable!("rank {r} counted finished without an output"),
+            })
+            .collect();
+        Ok(DriveOutcome {
+            outputs,
+            report: acc.take_report(),
+        })
+    }
+}
+
+impl Driver for ScheduleDriver {
+    fn endpoints(&self) -> usize {
+        self.net.endpoints
+    }
+
+    /// The [`Driver`]-trait view: run under the recorded schedule and
+    /// fold any violation into a [`WireError`] (the rich record stays
+    /// readable via [`record`](ScheduleDriver::record)).
+    fn drive<'a>(
+        &mut self,
+        machines: Vec<Box<dyn Protocol + 'a>>,
+        scratch: &mut SyncScratch,
+    ) -> Result<DriveOutcome, WireError> {
+        self.run_checked(machines, scratch).map_err(|v| {
+            WireError::Malformed(match v.kind() {
+                "deadlock" => "model check: deadlock",
+                "sent-to-finished" => "model check: frame sent to a finished machine",
+                "completed-with-pending" => "model check: completed with pending frames",
+                "stage-error" => "model check: stage accounting violation",
+                "bad-schedule" => "model check: schedule does not fit this run",
+                _ => "model check: invariant violation",
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used, clippy::cast_possible_truncation)]
+mod tests {
+    use super::*;
+    use crate::cluster::LinkKind;
+    use crate::wire::protocol::Inbox;
+
+    /// Star toy protocol: every rank pushes its tensor to every other
+    /// rank in stage "x", waits for n−1 frames, sums ascending, then
+    /// completes after closure — enough fan-in to create real choice
+    /// points at n ≥ 3.
+    struct Star {
+        rank: usize,
+        n: usize,
+        sent: usize,
+        inbox: Inbox,
+        parked: bool,
+        closed: bool,
+        out: Option<CooTensor>,
+    }
+
+    fn star_machines(n: usize) -> Vec<Box<dyn Protocol>> {
+        (0..n)
+            .map(|rank| {
+                Box::new(Star {
+                    rank,
+                    n,
+                    sent: 0,
+                    inbox: Inbox::new(n),
+                    parked: false,
+                    closed: false,
+                    out: None,
+                }) as Box<dyn Protocol>
+            })
+            .collect()
+    }
+
+    impl Protocol for Star {
+        fn rank(&self) -> usize {
+            self.rank
+        }
+
+        fn poll(&mut self, _scratch: &mut SyncScratch) -> Result<Event, WireError> {
+            let peers: Vec<usize> = (0..self.n).filter(|&p| p != self.rank).collect();
+            if self.sent < peers.len() {
+                let dst = peers[self.sent];
+                self.sent += 1;
+                let t =
+                    CooTensor::from_sorted(8, vec![self.rank as u32], vec![self.rank as f32 + 1.0]);
+                return Ok(Event::Send {
+                    dst,
+                    msg: Message::PushCoo {
+                        from: self.rank as u32,
+                        tensor: t,
+                    },
+                });
+            }
+            if self.inbox.len() < self.n - 1 {
+                let src = (0..self.n)
+                    .find(|&w| w != self.rank && self.inbox.from_src(w) == 0)
+                    .unwrap();
+                return Ok(Event::NeedFrame { src });
+            }
+            if !self.parked {
+                self.parked = true;
+                return Ok(Event::StageDone { name: "x" });
+            }
+            assert!(self.closed, "polled past StageDone before closure");
+            let mut parts: Vec<CooTensor> = self
+                .inbox
+                .drain_ascending()
+                .into_iter()
+                .map(|(_, m)| match m {
+                    Message::PushCoo { tensor, .. } => tensor,
+                    other => panic!("unexpected {other:?}"),
+                })
+                .collect();
+            parts.push(CooTensor::from_sorted(
+                8,
+                vec![self.rank as u32],
+                vec![self.rank as f32 + 1.0],
+            ));
+            let views: Vec<_> = parts.iter().map(|t| t.as_slice()).collect();
+            self.out = Some(CooTensor::merge_all_slices(&views));
+            Ok(Event::Complete(self.out.take().unwrap()))
+        }
+
+        fn deliver(&mut self, src: usize, msg: Message) -> Result<(), WireError> {
+            self.inbox.push(src, msg);
+            Ok(())
+        }
+
+        fn stage_closed(&mut self, name: &str) -> Result<(), WireError> {
+            assert_eq!(name, "x");
+            self.closed = true;
+            Ok(())
+        }
+    }
+
+    fn net(n: usize) -> Network {
+        Network::new(n, LinkKind::Tcp25)
+    }
+
+    #[test]
+    fn canonical_run_completes_and_records_choices() {
+        let mut d = ScheduleDriver::new(net(3));
+        let out = d
+            .run_checked(star_machines(3), &mut SyncScratch::new())
+            .expect("clean protocol");
+        assert_eq!(out.outputs.len(), 3);
+        assert_eq!(out.outputs[0], out.outputs[1]);
+        let rec = d.record();
+        assert_eq!(rec.trace.len(), 6, "3 ranks × 2 frames each");
+        // Each destination has 2 competing sources → one choice point
+        // per destination.
+        assert_eq!(rec.choices.len(), 3);
+        assert_eq!(rec.boundaries.len(), 1);
+        assert_eq!(rec.boundaries[0].name, "x");
+        assert_eq!(rec.boundaries[0].step, 6);
+        // Report carries the stage with conserved bytes.
+        let st = &out.report.stages[0];
+        let sent: u64 = st.sent.iter().sum();
+        let recv: u64 = st.recv.iter().sum();
+        assert_eq!(sent, recv);
+        assert_eq!(sent, rec.trace.iter().map(|t| t.bytes).sum::<u64>());
+    }
+
+    #[test]
+    fn alternative_prefix_replays_and_boundary_hash_is_order_insensitive() {
+        let mut canon = ScheduleDriver::new(net(3));
+        let canon_out = canon
+            .run_checked(star_machines(3), &mut SyncScratch::new())
+            .unwrap();
+        let canon_rec = canon.record().clone();
+        // Flip the first choice point: deliver the alternative source's
+        // frame first.
+        let cp = &canon_rec.choices[0];
+        let mut prefix: Vec<(usize, usize)> = canon_rec.schedule()[..cp.step].to_vec();
+        prefix.push((cp.alternatives[0], cp.dst));
+        let mut alt = ScheduleDriver::with_prefix(net(3), prefix);
+        let alt_out = alt
+            .run_checked(star_machines(3), &mut SyncScratch::new())
+            .unwrap();
+        let alt_rec = alt.record();
+        assert_ne!(
+            canon_rec.schedule(),
+            alt_rec.schedule(),
+            "the flipped prefix must actually change the order"
+        );
+        assert_eq!(canon_out.outputs, alt_out.outputs, "order must not matter");
+        assert_eq!(
+            canon_rec.boundaries[0].state_hash, alt_rec.boundaries[0].state_hash,
+            "same delivered multiset → same boundary hash"
+        );
+        // Choice points inside the prescribed prefix are not re-recorded.
+        assert!(alt_rec.choices.iter().all(|c| c.step >= cp.step));
+    }
+
+    #[test]
+    fn bad_schedule_is_reported_not_panicked() {
+        let mut d = ScheduleDriver::with_prefix(net(3), vec![(2, 2)]);
+        let err = d
+            .run_checked(star_machines(3), &mut SyncScratch::new())
+            .unwrap_err();
+        assert_eq!(err.kind(), "bad-schedule");
+    }
+
+    /// A rank that waits forever on a frame rank 0 never sends.
+    struct Stuck {
+        rank: usize,
+    }
+
+    impl Protocol for Stuck {
+        fn rank(&self) -> usize {
+            self.rank
+        }
+        fn poll(&mut self, _s: &mut SyncScratch) -> Result<Event, WireError> {
+            if self.rank == 0 {
+                Ok(Event::StageDone { name: "never" })
+            } else {
+                Ok(Event::NeedFrame { src: 0 })
+            }
+        }
+        fn deliver(&mut self, _src: usize, _msg: Message) -> Result<(), WireError> {
+            Ok(())
+        }
+        fn stage_closed(&mut self, _name: &str) -> Result<(), WireError> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn mixed_park_with_nothing_pending_is_a_deadlock() {
+        let mut d = ScheduleDriver::new(net(2));
+        let machines: Vec<Box<dyn Protocol>> = vec![
+            Box::new(Stuck { rank: 0 }),
+            Box::new(Stuck { rank: 1 }),
+        ];
+        let err = d
+            .run_checked(machines, &mut SyncScratch::new())
+            .unwrap_err();
+        match err {
+            Violation::Deadlock {
+                waiting,
+                parked_done,
+            } => {
+                assert_eq!(waiting, vec![1]);
+                assert_eq!(parked_done, vec![0]);
+            }
+            other => panic!("expected deadlock, got {other}"),
+        }
+    }
+
+    #[test]
+    fn driver_trait_view_maps_violations_to_wire_errors() {
+        let mut d = ScheduleDriver::new(net(2));
+        let machines: Vec<Box<dyn Protocol>> = vec![
+            Box::new(Stuck { rank: 0 }),
+            Box::new(Stuck { rank: 1 }),
+        ];
+        let err = d
+            .drive(machines, &mut SyncScratch::new())
+            .expect_err("deadlock folds into a WireError");
+        assert!(matches!(err, WireError::Malformed(m) if m.contains("deadlock")));
+        // The rich record survives the trait boundary.
+        assert!(d.record().trace.is_empty());
+    }
+
+    #[test]
+    fn schedule_string_round_shape() {
+        assert_eq!(schedule_string(&[(0, 1), (2, 1)]), "0>1,2>1");
+        assert_eq!(schedule_string(&[]), "");
+    }
+}

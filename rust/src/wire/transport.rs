@@ -435,6 +435,7 @@ impl Transport for ChannelTransport {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used, clippy::cast_possible_truncation)]
 mod tests {
     use super::*;
     use crate::cluster::LinkKind;

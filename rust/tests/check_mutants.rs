@@ -1,0 +1,303 @@
+//! Mutation adequacy for `zen check`: seeded protocol bugs the checker
+//! MUST flag. Each mutant is a small all-to-all exchange scheme with
+//! one deliberate fault injected at rank 0 — a dropped frame, a
+//! duplicated frame, a premature stage park, a misaddressed frame — in
+//! two receive styles (counted `NeedFrame` vs aggregate-on-close). A
+//! checker that misses any of these is not checking anything; every
+//! test also replays the minimized counterexample schedule and demands
+//! the same violation kind, so the `--replay` path is exercised on real
+//! counterexamples, not just clean runs.
+
+use zen::check::{check_scheme, gen_inputs, replay_schedule, DEFAULT_MAX_RUNS};
+use zen::schemes::{
+    AggPattern, BalancePattern, CommPattern, PartitionPattern, SchemeDims, SyncScheme,
+    SyncScratch,
+};
+use zen::tensor::CooTensor;
+use zen::wire::{Event, Inbox, Message, Protocol, WireError};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Fault {
+    /// Control: a correct protocol.
+    None,
+    /// Rank 0 never sends its frame to the last peer.
+    DropLastSend,
+    /// Rank 0 sends its frame to the first peer twice.
+    DuplicateSend,
+    /// Rank 0 sends only one frame and parks on the stage boundary
+    /// without waiting for its own inbound frames.
+    PrematureDone,
+    /// Rank 0 misaddresses the first peer's frame to the second peer.
+    WrongDest,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Style {
+    /// Receivers count inbound frames (`NeedFrame` until n−1 arrived)
+    /// before parking — missing frames become deadlocks.
+    Counted,
+    /// Receivers park immediately and aggregate whatever the closed
+    /// stage delivered — missing/extra frames become wrong sums.
+    Closed,
+}
+
+/// The (deliberately buggy) scheme under check: one "exchange" stage in
+/// which every rank pushes its tensor to every other rank, then every
+/// rank completes with the merge of its own tensor and its inbox.
+struct MutantScheme {
+    style: Style,
+    fault: Fault,
+}
+
+impl MutantScheme {
+    fn new(style: Style, fault: Fault) -> Self {
+        MutantScheme { style, fault }
+    }
+}
+
+/// Rank 0's send list under each fault; other ranks send to every peer
+/// in ascending order.
+fn send_targets(rank: usize, n: usize, fault: Fault) -> Vec<usize> {
+    let peers: Vec<usize> = (0..n).filter(|&p| p != rank).collect();
+    if rank != 0 || fault == Fault::None {
+        return peers;
+    }
+    match fault {
+        Fault::None => peers,
+        Fault::DropLastSend => peers[..peers.len() - 1].to_vec(),
+        Fault::DuplicateSend => {
+            let mut t = peers.clone();
+            t.push(peers[0]);
+            t
+        }
+        Fault::PrematureDone => peers[..1].to_vec(),
+        Fault::WrongDest => peers
+            .iter()
+            .map(|&p| if p == peers[0] { peers[1] } else { p })
+            .collect(),
+    }
+}
+
+impl SyncScheme for MutantScheme {
+    fn name(&self) -> &'static str {
+        "mutant"
+    }
+
+    fn dims(&self) -> SchemeDims {
+        SchemeDims {
+            communication: CommPattern::PointToPoint,
+            aggregation: AggPattern::OneShot,
+            partition: PartitionPattern::Centralization,
+            balance: BalancePattern::NotApplicable,
+            format: "COO",
+        }
+    }
+
+    fn protocols<'a>(&'a self, inputs: &'a [CooTensor]) -> Vec<Box<dyn Protocol + 'a>> {
+        let n = inputs.len();
+        (0..n)
+            .map(|rank| {
+                Box::new(MutantMachine {
+                    rank,
+                    n,
+                    // Rank 0 under PrematureDone parks without counting
+                    // its inbound frames even in Counted style.
+                    counts: self.style == Style::Counted
+                        && !(rank == 0 && self.fault == Fault::PrematureDone),
+                    input: inputs[rank].clone(),
+                    targets: send_targets(rank, n, self.fault),
+                    cursor: 0,
+                    inbox: Inbox::new(n),
+                    parked: false,
+                    out: None,
+                }) as Box<dyn Protocol + 'a>
+            })
+            .collect()
+    }
+}
+
+struct MutantMachine {
+    rank: usize,
+    n: usize,
+    counts: bool,
+    input: CooTensor,
+    targets: Vec<usize>,
+    cursor: usize,
+    inbox: Inbox,
+    parked: bool,
+    out: Option<CooTensor>,
+}
+
+impl Protocol for MutantMachine {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn poll(&mut self, _scratch: &mut SyncScratch) -> Result<Event, WireError> {
+        if let Some(t) = self.out.take() {
+            return Ok(Event::Complete(t));
+        }
+        if self.cursor < self.targets.len() {
+            let dst = self.targets[self.cursor];
+            self.cursor += 1;
+            return Ok(Event::Send {
+                dst,
+                msg: Message::PushCoo {
+                    from: u32::try_from(self.rank).unwrap(),
+                    tensor: self.input.clone(),
+                },
+            });
+        }
+        if self.counts && !self.parked && self.inbox.len() < self.n - 1 {
+            let src = (0..self.n)
+                .find(|&p| p != self.rank && self.inbox.from_src(p) == 0)
+                .expect("fewer than n−1 frames yet every peer delivered");
+            return Ok(Event::NeedFrame { src });
+        }
+        self.parked = true;
+        Ok(Event::StageDone { name: "exchange" })
+    }
+
+    fn deliver(&mut self, src: usize, msg: Message) -> Result<(), WireError> {
+        self.inbox.push(src, msg);
+        Ok(())
+    }
+
+    fn stage_closed(&mut self, name: &str) -> Result<(), WireError> {
+        assert_eq!(name, "exchange");
+        let mut shards = vec![self.input.clone()];
+        for (_, msg) in self.inbox.drain_ascending() {
+            match msg {
+                Message::PushCoo { tensor, .. } => shards.push(tensor),
+                other => panic!("mutant exchange got {other:?}"),
+            }
+        }
+        self.out = Some(CooTensor::merge_all(&shards));
+        Ok(())
+    }
+}
+
+fn inputs(n: usize) -> Vec<CooTensor> {
+    gen_inputs(11, n, 48, 5, 3)
+}
+
+/// Check a mutant at n = 3, assert the violation kind is one of
+/// `expected`, then replay the minimized schedule and demand the same
+/// kind again — the counterexample must be self-contained.
+fn assert_caught(style: Style, fault: Fault, expected: &[&str]) {
+    let ins = inputs(3);
+    let scheme = MutantScheme::new(style, fault);
+    let report = check_scheme(&scheme, &ins, true, DEFAULT_MAX_RUNS);
+    let failure = report.failure.unwrap_or_else(|| {
+        panic!("{style:?}+{fault:?}: checker missed the seeded mutant")
+    });
+    let kind = failure.violation.kind();
+    assert!(
+        expected.contains(&kind),
+        "{style:?}+{fault:?}: caught '{kind}', expected one of {expected:?}"
+    );
+    // The minimized schedule must reproduce the same violation kind
+    // under replay — output-level kinds are re-detected against the
+    // canonical digest / oracle, executor-level kinds directly.
+    let expect_digest = match kind {
+        "output-divergence" => report.output_digest,
+        _ => None,
+    };
+    let (violation, _record) =
+        replay_schedule(&scheme, &ins, true, expect_digest, &failure.schedule);
+    let replayed = violation.unwrap_or_else(|| {
+        panic!("{style:?}+{fault:?}: minimized schedule '{}' replayed clean", failure.replay_arg())
+    });
+    assert_eq!(
+        replayed.kind(),
+        kind,
+        "{style:?}+{fault:?}: replay of '{}' changed kind",
+        failure.replay_arg()
+    );
+}
+
+/// The control runs must be clean in both styles, or every catch above
+/// is meaningless.
+#[test]
+fn control_mutant_is_clean_in_both_styles() {
+    let ins = inputs(3);
+    for style in [Style::Counted, Style::Closed] {
+        let scheme = MutantScheme::new(style, Fault::None);
+        let report = check_scheme(&scheme, &ins, true, DEFAULT_MAX_RUNS);
+        assert!(
+            report.ok(),
+            "{style:?} control flagged: {:?}",
+            report.failure
+        );
+        assert!(!report.stats.truncated, "control must be exhaustive");
+        assert!(
+            report.stats.runs > 1,
+            "all-to-all fan-in must branch (got {} runs)",
+            report.stats.runs
+        );
+    }
+}
+
+#[test]
+fn counted_drop_last_send_deadlocks() {
+    assert_caught(Style::Counted, Fault::DropLastSend, &["deadlock"]);
+}
+
+#[test]
+fn counted_premature_done_deadlocks() {
+    assert_caught(Style::Counted, Fault::PrematureDone, &["deadlock"]);
+}
+
+#[test]
+fn counted_wrong_dest_deadlocks() {
+    assert_caught(Style::Counted, Fault::WrongDest, &["deadlock"]);
+}
+
+#[test]
+fn counted_duplicate_send_breaks_the_sum() {
+    // The duplicated frame inflates rank 1's aggregate; depending on
+    // how early the count trips, the canonical order itself may fail
+    // the oracle or two orders may diverge.
+    assert_caught(
+        Style::Counted,
+        Fault::DuplicateSend,
+        &["oracle-failure", "output-divergence", "completed-with-pending"],
+    );
+}
+
+#[test]
+fn closed_drop_last_send_fails_oracle() {
+    assert_caught(Style::Closed, Fault::DropLastSend, &["oracle-failure"]);
+}
+
+#[test]
+fn closed_duplicate_send_fails_oracle() {
+    assert_caught(Style::Closed, Fault::DuplicateSend, &["oracle-failure"]);
+}
+
+#[test]
+fn closed_premature_done_fails_oracle() {
+    assert_caught(Style::Closed, Fault::PrematureDone, &["oracle-failure"]);
+}
+
+#[test]
+fn closed_wrong_dest_fails_oracle() {
+    assert_caught(Style::Closed, Fault::WrongDest, &["oracle-failure"]);
+}
+
+#[test]
+fn minimized_schedules_are_prefixes() {
+    // Minimization scans prefixes from the front, so the schedule it
+    // returns is never longer than a full trace of the run — and for
+    // the deadlock mutants, where the canonical order itself fails, it
+    // is empty (the strongest possible counterexample).
+    let ins = inputs(3);
+    let scheme = MutantScheme::new(Style::Counted, Fault::DropLastSend);
+    let report = check_scheme(&scheme, &ins, true, DEFAULT_MAX_RUNS);
+    let failure = report.failure.expect("mutant must be caught");
+    assert!(
+        failure.schedule.is_empty(),
+        "canonical order already deadlocks; got '{}'",
+        failure.replay_arg()
+    );
+}

@@ -1,0 +1,103 @@
+//! `zen check` coverage across the real schemes: every entry in
+//! [`zen::check::CHECK_SCHEMES`] must survive exhaustive delivery-order
+//! exploration at n ∈ {2, 3} — the CI gate in test form — plus a
+//! bounded smoke at n = 4 where exhaustion is no longer affordable.
+
+use zen::check::{check_scheme, gen_inputs, replay_schedule, CHECK_SCHEMES, DEFAULT_MAX_RUNS};
+use zen::schemes::by_name;
+use zen::tensor::CooTensor;
+
+const SEED: u64 = 1;
+const EXPECTED_NNZ: usize = 16;
+
+fn inputs(n: usize) -> Vec<CooTensor> {
+    gen_inputs(11, n, 48, 5, 3)
+}
+
+#[test]
+fn every_check_scheme_is_clean_under_exhaustive_exploration() {
+    for n in [2usize, 3] {
+        let ins = inputs(n);
+        for (name, lossless) in CHECK_SCHEMES {
+            let scheme = by_name(name, n, SEED, EXPECTED_NNZ)
+                .unwrap_or_else(|| panic!("CHECK_SCHEMES entry '{name}' must construct"));
+            let r = check_scheme(scheme.as_ref(), &ins, lossless, DEFAULT_MAX_RUNS);
+            assert!(
+                r.ok(),
+                "{name} @ n={n}: {} (replay '{}')",
+                r.failure.as_ref().map_or_else(String::new, |f| f.violation.to_string()),
+                r.failure.as_ref().map_or_else(String::new, |f| f.replay_arg()),
+            );
+            assert!(
+                !r.stats.truncated,
+                "{name} @ n={n}: exploration must be exhaustive within {DEFAULT_MAX_RUNS} runs \
+                 (stopped at {})",
+                r.stats.runs
+            );
+            assert!(r.stats.runs >= 1);
+            assert!(
+                r.output_digest.is_some(),
+                "{name} @ n={n}: a clean check always has a canonical digest"
+            );
+        }
+    }
+}
+
+#[test]
+fn fan_in_schemes_actually_branch() {
+    // The gate is only meaningful if exploration visits more than the
+    // canonical order for schemes with multi-source fan-in.
+    let ins = inputs(3);
+    for name in ["sparseps", "agsparse", "zen"] {
+        let scheme = by_name(name, 3, SEED, EXPECTED_NNZ).expect("constructs");
+        let r = check_scheme(scheme.as_ref(), &ins, true, DEFAULT_MAX_RUNS);
+        assert!(r.ok(), "{name}: {:?}", r.failure);
+        assert!(
+            r.stats.runs > 1 && r.stats.choice_points > 0,
+            "{name}: expected delivery branches, got {} runs / {} choice points",
+            r.stats.runs,
+            r.stats.choice_points
+        );
+    }
+}
+
+#[test]
+fn reports_are_deterministic_across_invocations() {
+    let ins = inputs(3);
+    for name in ["zen", "oktopk"] {
+        let scheme = by_name(name, 3, SEED, EXPECTED_NNZ).expect("constructs");
+        let a = check_scheme(scheme.as_ref(), &ins, true, DEFAULT_MAX_RUNS);
+        let b = check_scheme(scheme.as_ref(), &ins, true, DEFAULT_MAX_RUNS);
+        assert_eq!(a.stats, b.stats, "{name}: exploration must be deterministic");
+        assert_eq!(a.output_digest, b.output_digest, "{name}");
+    }
+}
+
+#[test]
+fn canonical_replay_matches_the_reference_digest() {
+    // The empty schedule replays the canonical order; under the digest
+    // the explorer recorded it must come back violation-free for every
+    // scheme — the `--replay` round-trip users see.
+    let ins = inputs(2);
+    for (name, lossless) in CHECK_SCHEMES {
+        let scheme = by_name(name, 2, SEED, EXPECTED_NNZ).expect("constructs");
+        let r = check_scheme(scheme.as_ref(), &ins, lossless, DEFAULT_MAX_RUNS);
+        assert!(r.ok(), "{name}: {:?}", r.failure);
+        let (v, record) =
+            replay_schedule(scheme.as_ref(), &ins, lossless, r.output_digest, &[]);
+        assert!(v.is_none(), "{name}: canonical replay flagged {v:?}");
+        assert!(!record.trace.is_empty(), "{name}: a sync must deliver frames");
+    }
+}
+
+#[test]
+fn bounded_exploration_at_n4_stays_clean() {
+    // n = 4 state spaces outgrow the exhaustive budget; a truncated
+    // sweep is still a valid (bounded) check and must not misreport a
+    // violation on a correct scheme.
+    let ins = inputs(4);
+    let scheme = by_name("zen", 4, SEED, EXPECTED_NNZ).expect("constructs");
+    let r = check_scheme(scheme.as_ref(), &ins, true, 50);
+    assert!(r.ok(), "{:?}", r.failure);
+    assert!(r.stats.runs <= 50);
+}

@@ -8,11 +8,12 @@
 //! charging any bytes.
 
 use zen::cluster::{LinkKind, Network};
+use zen::tensor::CooTensor;
 use zen::wire::codec::{
     blocks_frame_counts, coo_frame_counts, dense_chunk_frame_counts, hash_bitmap_frame_counts,
-    validate_frame_counts,
+    validate_frame_counts, Decode, Encode,
 };
-use zen::wire::{ChannelTransport, FrameRef, SimTransport, Transport, WireError};
+use zen::wire::{ChannelTransport, FrameRef, Message, SimTransport, Transport, WireError};
 
 const U32_MAX: u64 = u32::MAX as u64;
 
@@ -130,4 +131,102 @@ fn transports_validate_before_charging() {
     ));
     ch.end_stage("clean").expect("nothing in flight");
     assert_eq!(ch.take_report().stages[0].total_bytes(), 0);
+}
+
+// --- Decode-side boundaries: the `try_from` paths that replaced the
+// old `as usize` casts must reject forged length fields with a typed
+// error, never size a buffer from them. Frames are forged by encoding a
+// valid message and overwriting one header field in place (the frame
+// layout is header(8) = magic(2) version(1) kind(1) body_len(4), then
+// the per-kind metadata documented on each variant).
+
+fn encode_msg(m: &Message) -> Vec<u8> {
+    let mut buf = Vec::new();
+    m.encode(&mut buf);
+    buf
+}
+
+#[test]
+fn decode_rejects_coo_index_beyond_forged_dense_len() {
+    // Shrink the declared dense range under the encoded indices: the
+    // range check must fire instead of trusting the forged length.
+    let t = CooTensor::from_sorted(100, vec![5, 50], vec![1.0, 2.0]);
+    let mut buf = encode_msg(&Message::PushCoo { from: 0, tensor: t });
+    buf[12..20].copy_from_slice(&6u64.to_le_bytes()); // dense_len after header + from
+    assert!(matches!(
+        Message::decode(&buf),
+        Err(WireError::Malformed("index out of range"))
+    ));
+}
+
+#[test]
+fn decode_rejects_unsorted_coo_indices() {
+    let t = CooTensor::from_sorted(100, vec![5, 50], vec![1.0, 2.0]);
+    let mut buf = encode_msg(&Message::PushCoo { from: 0, tensor: t });
+    // indices start after header + from(4) + dense_len(8) + nnz(4)
+    buf[24..28].copy_from_slice(&50u32.to_le_bytes());
+    buf[28..32].copy_from_slice(&5u32.to_le_bytes());
+    assert!(matches!(
+        Message::decode(&buf),
+        Err(WireError::Malformed("indices not strictly ascending"))
+    ));
+}
+
+#[test]
+fn decode_rejects_implausible_bitmap_bits() {
+    let mut payload = zen::hashing::HashBitmapPayload::default();
+    payload.bitmap.reset(64);
+    payload.bitmap.set(3);
+    let msg = Message::PullHashBitmap {
+        server: 0,
+        bitmap: payload.bitmap.clone(),
+        values: vec![1.0],
+    };
+    let mut buf = encode_msg(&msg);
+    // bits u64 after header + server(4): claim > 2^40 bits
+    buf[12..20].copy_from_slice(&((1u64 << 40) + 1).to_le_bytes());
+    assert!(matches!(
+        Message::decode(&buf),
+        Err(WireError::Malformed("bitmap length implausible"))
+    ));
+}
+
+#[test]
+fn decode_rejects_forged_block_geometry() {
+    let msg = Message::Blocks {
+        from: 0,
+        dense_len: 256,
+        block_len: 4,
+        block_ids: vec![0, 1],
+        values: vec![0.0; 8],
+    };
+    // block_len u32 sits after header + from(4) + dense_len(8).
+    let mut zero_len = encode_msg(&msg);
+    zero_len[20..24].copy_from_slice(&0u32.to_le_bytes());
+    assert!(matches!(
+        Message::decode(&zero_len),
+        Err(WireError::Malformed("zero block length"))
+    ));
+    // Both u32 size fields in range, but their product overflows the
+    // value-count bound: must be rejected before any allocation.
+    let mut huge = encode_msg(&msg);
+    huge[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
+    huge[24..28].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(matches!(
+        Message::decode(&huge),
+        Err(WireError::Malformed("implausible block payload"))
+    ));
+}
+
+#[test]
+fn decode_rejects_truncated_counts() {
+    // nnz forged above the actual payload: the reader must report the
+    // shortfall, not read past the buffer.
+    let t = CooTensor::from_sorted(100, vec![5, 50], vec![1.0, 2.0]);
+    let mut buf = encode_msg(&Message::PushCoo { from: 0, tensor: t });
+    buf[20..24].copy_from_slice(&1_000u32.to_le_bytes()); // nnz field
+    assert!(matches!(
+        Message::decode(&buf),
+        Err(WireError::Truncated { .. })
+    ));
 }
